@@ -1,0 +1,47 @@
+//! Bench: the CNNergy analytical model (paper Alg. 1 + §IV-C scheduler).
+//!
+//! These run offline in NeuPart, but as an open-sourced simulator CNNergy's
+//! own cost matters for design-space sweeps (thousands of evaluations).
+
+use neupart::bench::Bencher;
+use neupart::cnn::{ConvShape, Network};
+use neupart::cnnergy::{schedule, CnnErgy, HwConfig};
+
+fn main() {
+    let mut b = Bencher::default();
+    let hw = HwConfig::eyeriss_8bit();
+
+    // The scheduling mapper on representative layer shapes.
+    for (name, shape) in [
+        ("alexnet_c1", ConvShape::conv(227, 227, 11, 3, 96, 4)),
+        ("alexnet_c3", ConvShape::conv(15, 15, 3, 256, 384, 1)),
+        ("vgg_c4_2", ConvShape::conv(30, 30, 3, 512, 512, 1)),
+        ("squeeze_fs9_1x1", ConvShape::conv(14, 14, 1, 512, 64, 1)),
+        ("fc6", ConvShape::fc(6, 6, 256, 4096)),
+    ] {
+        b.bench(&format!("schedule/{name}"), || schedule(&shape, &hw));
+    }
+
+    // Whole-network energy evaluation (the design-space inner loop).
+    let model = CnnErgy::inference_8bit();
+    for net in Network::paper_networks() {
+        b.bench(&format!("network_energy/{}", net.name), || {
+            model.total_energy_pj(&net)
+        });
+    }
+
+    // A full GLB design sweep (paper Fig. 14(c)) as one unit.
+    let net = Network::by_name("alexnet").unwrap();
+    b.bench("glb_sweep_10pts/alexnet", || {
+        let mut acc = 0.0;
+        for kb in [8usize, 16, 32, 48, 64, 88, 108, 128, 256, 512] {
+            acc += CnnErgy::inference_8bit()
+                .with_glb_size(kb * 1024)
+                .total_energy_pj(&net);
+        }
+        acc
+    });
+
+    b.write_csv(std::path::Path::new("results/bench_cnnergy.csv"))
+        .expect("csv");
+}

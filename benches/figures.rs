@@ -1,0 +1,25 @@
+//! Bench: regeneration cost of every paper table/figure — the harness a
+//! user runs after modifying the model. Each experiment is timed once
+//! (they are deterministic); the cheap analytic ones are also iterated.
+
+use std::path::Path;
+use std::time::Instant;
+
+use neupart::bench::Bencher;
+use neupart::experiments;
+
+fn main() {
+    let out = Path::new("results/bench_figures_out");
+    println!("one-shot regeneration wall times:");
+    for id in experiments::ALL {
+        let t0 = Instant::now();
+        experiments::run(id, out).expect(id);
+        println!("  {id:<8} {:>9.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+    }
+
+    let mut b = Bencher::quick();
+    for id in ["fig2", "fig8b", "fig11", "fig14b", "fig14c"] {
+        b.bench(&format!("regen/{id}"), || experiments::run(id, out).unwrap());
+    }
+    b.write_csv(Path::new("results/bench_figures.csv")).expect("csv");
+}

@@ -1,0 +1,40 @@
+//! Bench: the runtime partition decision (paper Alg. 2).
+//!
+//! The paper's claim: Alg. 2 is "computationally very cheap … the overhead
+//! of running it is virtually zero" — O(|L|) flops. Target: well under a
+//! microsecond per decision for every network.
+
+use neupart::bench::Bencher;
+use neupart::channel::TransmitEnv;
+use neupart::cnn::Network;
+use neupart::cnnergy::CnnErgy;
+use neupart::partition::Partitioner;
+
+fn main() {
+    let mut b = Bencher::default();
+    let model = CnnErgy::inference_8bit();
+    let env = TransmitEnv::paper_default();
+
+    for net in Network::paper_networks() {
+        let p = Partitioner::new(&net, &model);
+        let mut sp = 0.40;
+        b.bench(&format!("alg2_decide/{}", net.name), || {
+            sp = if sp > 0.9 { 0.40 } else { sp + 0.001 };
+            p.decide(sp, &env)
+        });
+    }
+
+    // Offline precomputation (done once per network/model pair).
+    let net = Network::by_name("alexnet").unwrap();
+    b.bench("partitioner_build/alexnet", || Partitioner::new(&net, &model));
+
+    // Decision + savings accounting together.
+    let p = Partitioner::new(&net, &model);
+    b.bench("alg2_decide+savings/alexnet", || {
+        let d = p.decide(0.608, &env);
+        (d.savings_vs_fcc(), d.savings_vs_fisc())
+    });
+
+    b.write_csv(std::path::Path::new("results/bench_partitioner.csv"))
+        .expect("csv");
+}

@@ -1,0 +1,64 @@
+//! Bench: the RLC activation codec — the client's on-request-path hot loop
+//! (every partitioned inference encodes an activation tensor before the
+//! radio) — plus the per-request JPEG Sparsity-In probe.
+//! Target: codec is memory-bandwidth-bound (>100 Melem/s encode).
+
+use neupart::bench::Bencher;
+use neupart::compress::jpeg::compress_rgb;
+use neupart::compress::rlc;
+use neupart::corpus::Corpus;
+use neupart::util::rng::Rng;
+
+fn sparse_data(n: usize, sparsity: f64, seed: u64) -> Vec<u16> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            if rng.next_f64() < sparsity {
+                0
+            } else {
+                rng.range_u64(1, 255) as u16
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bencher::default();
+
+    // AlexNet P2-sized activation (43k elements) at paper-typical sparsity.
+    for sp in [0.5, 0.8] {
+        let data = sparse_data(43_264, sp, 42);
+        let n = data.len() as u64;
+        b.bench_elems(&format!("rlc_encode/43k_sp{sp}"), n, || {
+            rlc::encode(&data, 8)
+        });
+        let enc = rlc::encode(&data, 8);
+        b.bench_elems(&format!("rlc_decode/43k_sp{sp}"), n, || {
+            rlc::decode(&enc, 8)
+        });
+    }
+
+    // Large tensor (VGG C1 output scale, 3.2M elements).
+    let big = sparse_data(3_211_264, 0.6, 7);
+    b.bench_elems("rlc_encode/3.2M_sp0.6", big.len() as u64, || {
+        rlc::encode(&big, 8)
+    });
+
+    // Quantization (f32 -> u8 codes) ahead of the codec.
+    let floats: Vec<f32> = sparse_data(43_264, 0.6, 9)
+        .iter()
+        .map(|&v| v as f32 / 255.0)
+        .collect();
+    b.bench_elems("quantize/43k", floats.len() as u64, || {
+        rlc::quantize(&floats, 8)
+    });
+
+    // The JPEG Sparsity-In probe (per-request runtime cost, Alg. 2 line 1).
+    let img = Corpus::imagenet_like(5).image(0);
+    b.bench_elems("jpeg_probe/64x64_rgb", (img.w * img.h * 3) as u64, || {
+        compress_rgb(&img.pixels, img.w, img.h, 90)
+    });
+
+    b.write_csv(std::path::Path::new("results/bench_rlc.csv"))
+        .expect("csv");
+}

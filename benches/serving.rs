@@ -1,0 +1,64 @@
+//! Bench: end-to-end serving through the coordinator over real PJRT
+//! executables (requires `make artifacts`). This is the paper's system in
+//! steady state — reported as requests/s for the three policies.
+//!
+//! Skips gracefully (exit 0) when artifacts are missing so `cargo bench`
+//! stays green on a fresh checkout.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use neupart::channel::TransmitEnv;
+use neupart::coordinator::{Coordinator, CoordinatorConfig, InferenceRequest};
+use neupart::corpus::Corpus;
+
+fn requests(n: usize) -> Vec<InferenceRequest> {
+    Corpus::new(32, 32, 11)
+        .iter(n)
+        .enumerate()
+        .map(|(i, img)| InferenceRequest {
+            id: i as u64,
+            tensor: img.to_f32_nhwc(),
+            pixels: img.pixels.clone(),
+            width: img.w,
+            height: img.h,
+        })
+        .collect()
+}
+
+fn main() {
+    if !PathBuf::from("artifacts/manifest.json").exists() {
+        println!("serving bench skipped: run `make artifacts` first");
+        return;
+    }
+    let n = 64;
+    println!("serving bench: tiny_alexnet, {n} requests/policy, warm pools\n");
+    for (label, force) in [("fcc", Some(0)), ("fisc", Some(11)), ("neupart", None)] {
+        let cfg = CoordinatorConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            network: "tiny_alexnet".into(),
+            env: TransmitEnv::with_effective_rate(120.0e6, 0.78),
+            jpeg_quality: 90,
+            cloud_pool: 2,
+            workers: 4,
+            jitter: 0.0,
+            time_scale: 0.0,
+            force_split: force,
+            warm_splits: (0..=11).collect(),
+            seed: 3,
+        };
+        let coord = Coordinator::new(cfg).expect("coordinator");
+        // One throwaway batch to settle caches, then the measured batch.
+        coord.serve(requests(8)).expect("warmup serve");
+        let t0 = Instant::now();
+        coord.serve(requests(n)).expect("serve");
+        let dt = t0.elapsed().as_secs_f64();
+        let m = coord.metrics.snapshot();
+        println!(
+            "serve/{label:<8} {:>8.1} req/s   mean latency {:>8.3} ms   mean E_cost {:.4} mJ",
+            n as f64 / dt,
+            m.mean_latency().as_secs_f64() * 1e3,
+            m.mean_e_cost_j() * 1e3
+        );
+    }
+}

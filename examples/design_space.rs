@@ -1,0 +1,70 @@
+//! Design-space exploration with CNNergy (paper §VIII-B): sweep accelerator
+//! parameters — GLB size, PE-array shape, RF sizes, bit width — and report
+//! total AlexNet inference energy for each point. This is the "energy model
+//! as a design tool" use case the paper open-sourced CNNergy for.
+//!
+//! Run: `cargo run --release --example design_space`
+
+use neupart::cnn::alexnet;
+use neupart::cnnergy::{CnnErgy, HwConfig, TechParams};
+
+fn total_mj(model: &CnnErgy) -> f64 {
+    model.total_energy_pj(&alexnet()) * 1e-9
+}
+
+fn main() {
+    let net = alexnet();
+    println!("design-space exploration on {} (total inference energy)\n", net.name);
+
+    // 1. GLB size (paper Fig. 14(c)).
+    println!("GLB size sweep:");
+    for kb in [8usize, 16, 32, 64, 88, 108, 128, 256] {
+        let m = CnnErgy::inference_8bit().with_glb_size(kb * 1024);
+        println!("  {kb:>4} kB          -> {:.3} mJ", total_mj(&m));
+    }
+
+    // 2. PE-array shape at constant PE count (168 PEs).
+    println!("\nPE-array shape sweep (168 PEs):");
+    for (j, k) in [(6, 28), (12, 14), (14, 12), (24, 7), (28, 6)] {
+        let mut hw = HwConfig::eyeriss_8bit();
+        hw.j = j;
+        hw.k = k;
+        let model = CnnErgy {
+            hw,
+            ..CnnErgy::inference_8bit()
+        };
+        println!("  {j:>2} x {k:<2}          -> {:.3} mJ", total_mj(&model));
+    }
+
+    // 3. Ifmap RF size (drives z_i, the channels per pass).
+    println!("\nifmap RF size sweep:");
+    for i_s in [6usize, 12, 24, 48, 96] {
+        let mut hw = HwConfig::eyeriss_8bit();
+        hw.i_s = i_s * 2; // 8-bit packing
+        let model = CnnErgy {
+            hw,
+            ..CnnErgy::inference_8bit()
+        };
+        println!("  I_s = {i_s:>3} words  -> {:.3} mJ", total_mj(&model));
+    }
+
+    // 4. Arithmetic bit width (quadratic multiply / linear memory scaling).
+    println!("\nbit-width sweep:");
+    for bits in [4u32, 8, 12, 16] {
+        let mut hw = HwConfig::eyeriss();
+        hw.b_w = bits;
+        let scale = 16 / bits as usize;
+        hw.f_s *= scale.max(1);
+        hw.i_s *= scale.max(1);
+        hw.p_s *= scale.max(1);
+        let model = CnnErgy {
+            hw,
+            tech: TechParams::at_bits(bits),
+            glb_energy: TechParams::at_bits(bits).e_glb,
+            ..CnnErgy::inference_8bit()
+        };
+        println!("  {bits:>2}-bit          -> {:.3} mJ", total_mj(&model));
+    }
+
+    println!("\n(each point re-runs the automated scheduler of paper §IV-C)");
+}

@@ -1,0 +1,59 @@
+//! CNNergy as a design tool: per-component energy breakdowns and the
+//! customized energy access the paper highlights (§I-B) — data-access
+//! energy per memory level, MAC energy, control split — plus a GLB
+//! design-space sweep (paper Fig. 14(c)).
+//!
+//! Run: `cargo run --release --example energy_breakdown [network]`
+
+use neupart::cnn::Network;
+use neupart::cnnergy::CnnErgy;
+
+fn main() {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "squeezenet".into());
+    let net = Network::by_name(&name).unwrap_or_else(|| {
+        eprintln!("unknown network {name}");
+        std::process::exit(1);
+    });
+    let model = CnnErgy::inference_8bit();
+    let breakdowns = model.network_breakdowns(&net);
+
+    println!("{} — component breakdown (µJ, 8-bit):", net.name);
+    println!(
+        "{:<7} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9}",
+        "layer", "MAC", "RF", "GLB", "DRAM", "clock", "other"
+    );
+    let mut totals = [0.0f64; 6];
+    for (layer, e) in net.layers.iter().zip(&breakdowns) {
+        let row = [e.comp, e.rf + e.inter_pe, e.glb, e.dram, e.cntrl_clk, e.cntrl_other];
+        for (t, v) in totals.iter_mut().zip(row) {
+            *t += v;
+        }
+        println!(
+            "{:<7} {:>9.2} {:>9.2} {:>9.2} {:>9.2} {:>9.2} {:>9.2}",
+            layer.name,
+            row[0] * 1e-6,
+            row[1] * 1e-6,
+            row[2] * 1e-6,
+            row[3] * 1e-6,
+            row[4] * 1e-6,
+            row[5] * 1e-6
+        );
+    }
+    let grand: f64 = totals.iter().sum();
+    println!(
+        "\nshares: MAC {:.1}%  RF {:.1}%  GLB {:.1}%  DRAM {:.1}%  clock {:.1}%  other {:.1}%",
+        totals[0] / grand * 100.0,
+        totals[1] / grand * 100.0,
+        totals[2] / grand * 100.0,
+        totals[3] / grand * 100.0,
+        totals[4] / grand * 100.0,
+        totals[5] / grand * 100.0
+    );
+
+    // Design-space exploration: how does total energy move with GLB size?
+    println!("\nGLB design sweep (paper Fig. 14(c)):");
+    for kb in [8usize, 16, 32, 64, 88, 108, 128, 256, 512] {
+        let m = CnnErgy::inference_8bit().with_glb_size(kb * 1024);
+        println!("  GLB {kb:>4} kB -> {:.3} mJ", m.total_energy_pj(&net) * 1e-9);
+    }
+}

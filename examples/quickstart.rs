@@ -1,0 +1,60 @@
+//! Quickstart: the NeuPart public API in ~40 lines.
+//!
+//! Builds the CNNergy model, asks for AlexNet's per-layer energy, and makes
+//! a runtime partition decision for a concrete communication environment —
+//! the library's two core calls.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use neupart::channel::TransmitEnv;
+use neupart::cnn::Network;
+use neupart::cnnergy::CnnErgy;
+use neupart::partition::Partitioner;
+
+fn main() {
+    // 1. An analytical energy model for an Eyeriss-class accelerator at the
+    //    paper's 8-bit inference operating point (§VIII).
+    let model = CnnErgy::inference_8bit();
+
+    // 2. A network topology (AlexNet; also squeezenet / googlenet / vgg16).
+    let net = Network::by_name("alexnet").unwrap();
+
+    // 3. Per-layer cumulative client energy E_L (paper eq. 2).
+    let cumulative = model.cumulative_energy_pj(&net);
+    println!("E_L (cumulative client energy):");
+    for (layer, e) in net.layers.iter().zip(&cumulative) {
+        println!("  up to {:<4} {:>8.3} mJ", layer.name, e * 1e-9);
+    }
+
+    // 4. The runtime partitioner (Alg. 2): precomputes everything offline…
+    let partitioner = Partitioner::new(&net, &model);
+
+    // 5. …then decides per image, given the probed JPEG sparsity and the
+    //    current communication environment.
+    let env = TransmitEnv {
+        bit_rate_bps: 88.0e6, // B
+        ecc_percent: 10.0,    // k  -> B_e = 80 Mbps
+        p_tx_w: 0.78,         // LG Nexus 4 WLAN (Table IV)
+    };
+    let decision = partitioner.decide(0.608, &env); // median Sparsity-In
+
+    let optimal = if decision.l_opt == 0 {
+        "In (fully cloud)"
+    } else if decision.l_opt == net.num_layers() {
+        "output (fully in situ)"
+    } else {
+        net.layers[decision.l_opt - 1].name
+    };
+    println!("\noptimal partition: {optimal}");
+    println!(
+        "E_cost {:.3} mJ = client {:.3} mJ + radio {:.3} mJ",
+        decision.costs_j[decision.l_opt] * 1e3,
+        decision.client_energy_j * 1e3,
+        decision.transmit_energy_j * 1e3
+    );
+    println!(
+        "saves {:.1}% vs fully-cloud and {:.1}% vs fully-on-device",
+        decision.savings_vs_fcc() * 100.0,
+        decision.savings_vs_fisc() * 100.0
+    );
+}

@@ -1,0 +1,5 @@
+"""Build-time compile package: L1 Pallas kernels, L2 JAX models, AOT lowering.
+
+Nothing in this package runs on the request path; ``make artifacts`` invokes
+``compile.aot`` once to emit HLO text + manifest into ``artifacts/``.
+"""

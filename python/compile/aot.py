@@ -1,0 +1,122 @@
+"""AOT lowering: JAX models -> HLO text artifacts + manifest for the Rust runtime.
+
+For every network and every partition candidate ``L`` this emits:
+
+* ``<net>_prefix_<L>.hlo.txt`` — layers ``1..L`` (client side), ``L >= 1``;
+  ``prefix_<|L|>`` is the full in-situ (FISC) executable.
+* ``<net>_suffix_<L>.hlo.txt`` — layers ``L+1..end`` (cloud side), ``L >= 0``;
+  ``suffix_0`` is the full cloud (FCC) executable.
+* ``manifest.json`` — shapes, layer metadata, artifact paths; the single
+  source of truth the Rust runtime loads (``rust/src/runtime/manifest.rs``).
+
+The interchange format is HLO *text*, not serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
+the text parser reassigns ids (see /opt/xla-example/README.md). Lowering goes
+through ``mlir_module_to_xla_computation(..., return_tuple=True)``, so every
+artifact returns a 1-tuple and the Rust side unwraps with ``to_tuple1``.
+
+Run once via ``make artifacts``; never on the request path.
+"""
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import NETWORKS, Network
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax ``Lowered`` to XLA HLO text (the Rust-loadable format).
+
+    ``print_large_constants=True`` is essential: the default HLO printer
+    elides big literals as ``constant({...})``, which the XLA text parser
+    silently reads back as *zeros* — wiping the embedded model weights.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # jax's HLO printer emits metadata attributes (source_end_line, ...)
+    # that the xla_extension 0.5.1 text parser rejects — strip them.
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def lower_fn(fn, in_shape) -> str:
+    spec = jax.ShapeDtypeStruct(tuple(in_shape), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def emit_network(net: Network, out_dir: pathlib.Path) -> dict:
+    """Lower all prefix/suffix executables for one network; return manifest entry."""
+    shapes = net.layer_shapes()
+    n_layers = len(net.layers)
+
+    entry = {
+        "input_shape": list(net.input_shape),
+        "dtype": "f32",
+        "layers": [
+            {
+                "name": layer.name,
+                "kind": layer.kind,
+                "out_shape": list(shapes[i]),
+                "macs": layer.macs,
+                "params": layer.params,
+            }
+            for i, layer in enumerate(net.layers)
+        ],
+        "artifacts": {"prefix": {}, "suffix": {}},
+    }
+
+    for split in range(1, n_layers + 1):
+        name = f"{net.name}_prefix_{split:02d}.hlo.txt"
+        text = lower_fn(net.prefix_fn(split), net.input_shape)
+        (out_dir / name).write_text(text)
+        entry["artifacts"]["prefix"][str(split)] = name
+        print(f"  wrote {name} ({len(text)} chars)")
+
+    for split in range(0, n_layers):
+        name = f"{net.name}_suffix_{split:02d}.hlo.txt"
+        in_shape = net.input_shape if split == 0 else shapes[split - 1]
+        text = lower_fn(net.suffix_fn(split), in_shape)
+        (out_dir / name).write_text(text)
+        entry["artifacts"]["suffix"][str(split)] = name
+        print(f"  wrote {name} ({len(text)} chars)")
+
+    return entry
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="artifact directory")
+    parser.add_argument(
+        "--nets",
+        default=",".join(NETWORKS),
+        help="comma-separated network names to lower",
+    )
+    args = parser.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    manifest = {"format": 1, "networks": {}}
+    for name in args.nets.split(","):
+        print(f"lowering {name} ...")
+        net = NETWORKS[name]()
+        manifest["networks"][name] = emit_network(net, out_dir)
+
+    text = json.dumps(manifest, indent=1, sort_keys=True)
+    (out_dir / "manifest.json").write_text(text)
+    digest = hashlib.sha256(text.encode()).hexdigest()[:12]
+    print(f"wrote manifest.json (sha256 {digest})")
+
+
+if __name__ == "__main__":
+    main()

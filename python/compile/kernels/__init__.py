@@ -1,0 +1,12 @@
+"""L1: Pallas kernels for the CNN compute hot-spots (conv + FC matmul).
+
+All kernels run under ``interpret=True`` so the lowered HLO is executable on
+the CPU PJRT client used by the Rust runtime (see DESIGN.md §4).
+"""
+
+from .conv2d import conv2d
+from .linear import linear
+from .pooling import global_avg_pool, maxpool2d
+from . import ref
+
+__all__ = ["conv2d", "linear", "maxpool2d", "global_avg_pool", "ref"]

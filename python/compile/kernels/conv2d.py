@@ -1,0 +1,136 @@
+"""L1 Pallas kernel: tiled 2-D convolution (+ bias + optional ReLU).
+
+The convolution is expressed the way the paper's Eyeriss mapping is expressed,
+translated to the TPU memory model (DESIGN.md §4 "Hardware adaptation"):
+
+* the grid is ``(N, F/f_b, C/c_b)`` — the last grid dimension walks the input
+  channels exactly like the paper's Z-direction passes (§IV-A, Fig. 5), with
+  the output block revisited and *accumulated* across those passes (the
+  irreducible-psum traffic of the paper);
+* ``f_b`` (filters per pass) plays the role of the paper's ``f_i`` scheduling
+  parameter, ``c_b`` plays ``z_i``;
+* within a pass the work is an unrolled loop over the R*S filter taps, each
+  tap contributing a ``(E*G, c_b) @ (c_b, f_b)`` contraction — an MXU-shaped
+  ``dot_general`` over the channel dimension, rather than a GPU-style im2col
+  scatter/gather.
+
+The kernel assumes the input is already spatially padded (padding is applied
+by the L2 model with ``jnp.pad``), so block index maps stay affine.
+
+Run under ``interpret=True`` always: the CPU PJRT plugin cannot execute
+Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is <= ``cap`` (>= 1)."""
+    for d in range(min(n, cap), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, stride, apply_relu, nc_blocks):
+    """One (image, filter-block, channel-block) pass of the convolution.
+
+    ``o_ref`` is revisited across the channel-block grid dimension; psums are
+    accumulated in place (the paper's GLB-resident irreducible psums).
+    """
+    c_idx = pl.program_id(2)
+
+    x = x_ref[...]  # (1, Hp, Wp, c_b), pre-padded
+    w = w_ref[...]  # (R, S, c_b, f_b)
+    r_taps, s_taps = w.shape[0], w.shape[1]
+    e_out, g_out = o_ref.shape[1], o_ref.shape[2]
+    c_b = x.shape[3]
+
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    # Unrolled loop over the R*S filter taps: each tap is a strided spatial
+    # slice of the ifmap contracted against one (c_b, f_b) weight slab.
+    for r in range(r_taps):
+        for s in range(s_taps):
+            patch = jax.lax.slice(
+                x,
+                (0, r, s, 0),
+                (1, r + (e_out - 1) * stride + 1, s + (g_out - 1) * stride + 1, c_b),
+                (1, stride, stride, 1),
+            )  # (1, E, G, c_b)
+            tap = jax.lax.dot_general(
+                patch.astype(jnp.float32),
+                w[r, s].astype(jnp.float32),
+                dimension_numbers=(((3,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )  # (1, E, G, f_b) — MXU-shaped contraction over channels
+            acc = acc + tap
+
+    @pl.when(c_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += acc.astype(o_ref.dtype)
+
+    @pl.when(c_idx == nc_blocks - 1)
+    def _finalize():
+        out = o_ref[...] + b_ref[...].astype(o_ref.dtype)
+        if apply_relu:
+            out = jnp.maximum(out, jnp.zeros_like(out))
+        o_ref[...] = out
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("stride", "apply_relu", "f_block", "c_block"),
+)
+def conv2d(x, w, b, *, stride=1, apply_relu=True, f_block=None, c_block=None):
+    """Pallas conv2d over NHWC input / RSCF weights.
+
+    Args:
+      x: ``(N, Hp, Wp, C)`` input, already spatially padded.
+      w: ``(R, S, C, F)`` filters.
+      b: ``(F,)`` bias.
+      stride: convolution stride ``U`` (same in both spatial dims).
+      apply_relu: fuse the ReLU nonlinearity into the final channel pass.
+      f_block / c_block: override the ``f_i`` / ``z_i`` scheduling parameters
+        (must divide F / C); defaults follow the paper's priority rule of
+        maximizing channels per pass within the block budget.
+
+    Returns:
+      ``(N, E, G, F)`` ofmap with ``E = (Hp-R)/U + 1``, ``G = (Wp-S)/U + 1``.
+    """
+    n, hp, wp, c = x.shape
+    r, s, wc, f = w.shape
+    if wc != c:
+        raise ValueError(f"channel mismatch: ifmap C={c}, filter C={wc}")
+    if (hp - r) % stride or (wp - s) % stride:
+        raise ValueError("padded input is not stride-aligned with the filter")
+    e = (hp - r) // stride + 1
+    g = (wp - s) // stride + 1
+
+    # Paper priority rule (i): process the maximum possible channels per pass.
+    c_b = c_block if c_block is not None else _largest_divisor_leq(c, 64)
+    f_b = f_block if f_block is not None else _largest_divisor_leq(f, 32)
+    if c % c_b or f % f_b:
+        raise ValueError("f_block/c_block must divide F/C")
+    nc_blocks = c // c_b
+
+    kernel = functools.partial(
+        _conv_kernel, stride=stride, apply_relu=apply_relu, nc_blocks=nc_blocks
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(n, f // f_b, nc_blocks),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, c_b), lambda ni, fi, ci: (ni, 0, 0, ci)),
+            pl.BlockSpec((r, s, c_b, f_b), lambda ni, fi, ci: (0, 0, ci, fi)),
+            pl.BlockSpec((f_b,), lambda ni, fi, ci: (fi,)),
+        ],
+        out_specs=pl.BlockSpec((1, e, g, f_b), lambda ni, fi, ci: (ni, 0, 0, fi)),
+        out_shape=jax.ShapeDtypeStruct((n, e, g, f), x.dtype),
+        interpret=True,
+    )(x, w, b)

@@ -1,0 +1,80 @@
+"""L1 Pallas kernel: blocked matmul for the fully connected layers.
+
+FC layers are the paper's other MAC-dominated layer kind (§III-A). The kernel
+tiles the ``(N, K) @ (K, M)`` product over ``(K/k_b, M/m_b)`` blocks, keeping
+the K-walk as the innermost (accumulating) grid dimension, mirroring the
+psum-reduction-first scheduling rule of the paper (§IV-C rule (i)).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .conv2d import _largest_divisor_leq
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref, *, apply_relu, nk_blocks):
+    k_idx = pl.program_id(1)
+
+    acc = jax.lax.dot_general(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += acc.astype(o_ref.dtype)
+
+    @pl.when(k_idx == nk_blocks - 1)
+    def _finalize():
+        out = o_ref[...] + b_ref[...].astype(o_ref.dtype)
+        if apply_relu:
+            out = jnp.maximum(out, jnp.zeros_like(out))
+        o_ref[...] = out
+
+
+@functools.partial(
+    jax.jit, static_argnames=("apply_relu", "k_block", "m_block")
+)
+def linear(x, w, b, *, apply_relu=True, k_block=None, m_block=None):
+    """Pallas fully connected layer: ``relu?(x @ w + b)``.
+
+    Args:
+      x: ``(N, K)`` activations.
+      w: ``(K, M)`` weights.
+      b: ``(M,)`` bias.
+      apply_relu: fuse ReLU into the final K pass.
+      k_block / m_block: tile-size overrides (must divide K / M).
+    """
+    n, k = x.shape
+    wk, m = w.shape
+    if wk != k:
+        raise ValueError(f"inner-dim mismatch: x K={k}, w K={wk}")
+
+    k_b = k_block if k_block is not None else _largest_divisor_leq(k, 128)
+    m_b = m_block if m_block is not None else _largest_divisor_leq(m, 128)
+    if k % k_b or m % m_b:
+        raise ValueError("k_block/m_block must divide K/M")
+    nk_blocks = k // k_b
+
+    kernel = functools.partial(
+        _linear_kernel, apply_relu=apply_relu, nk_blocks=nk_blocks
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(m // m_b, nk_blocks),
+        in_specs=[
+            pl.BlockSpec((n, k_b), lambda mi, ki: (0, ki)),
+            pl.BlockSpec((k_b, m_b), lambda mi, ki: (ki, mi)),
+            pl.BlockSpec((m_b,), lambda mi, ki: (mi,)),
+        ],
+        out_specs=pl.BlockSpec((n, m_b), lambda mi, ki: (0, mi)),
+        out_shape=jax.ShapeDtypeStruct((n, m), x.dtype),
+        interpret=True,
+    )(x, w, b)

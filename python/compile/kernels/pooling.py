@@ -1,0 +1,92 @@
+"""L1 Pallas kernels: max pooling and global average pooling.
+
+Pool layers are partition candidates in the paper (P*/GAP in Figs. 2/11),
+so the executable networks run them as Pallas kernels too — keeping the
+whole request-path compute inside L1 kernels lowered into the same HLO.
+
+Max pooling reshapes the VMEM-resident block to expose the window axes and
+reduces them (a relayout + vector max on TPU, no gather); GAP is a plain
+spatial mean. Channel-blocked grids keep VMEM bounded for wide layers.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .conv2d import _largest_divisor_leq
+
+
+def _maxpool_kernel(x_ref, o_ref, *, window, stride):
+    x = x_ref[...]  # (1, H, W, c_b)
+    _, h, w, c = x.shape
+    e = (h - window) // stride + 1
+    g = (w - window) // stride + 1
+    if stride == window:
+        # Non-overlapping windows: reshape exposes (window, window) axes.
+        x = x[:, : e * window, : g * window, :]
+        x = x.reshape(1, e, window, g, window, c)
+        o_ref[...] = x.max(axis=(2, 4))
+    else:
+        # Overlapping windows: max over shifted strided slices.
+        acc = None
+        for dy in range(window):
+            for dx in range(window):
+                sl = jax.lax.slice(
+                    x,
+                    (0, dy, dx, 0),
+                    (1, dy + (e - 1) * stride + 1, dx + (g - 1) * stride + 1, c),
+                    (1, stride, stride, 1),
+                )
+                acc = sl if acc is None else jnp.maximum(acc, sl)
+        o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("window", "stride", "c_block"))
+def maxpool2d(x, *, window=2, stride=2, c_block=None):
+    """Pallas max pooling over NHWC (VALID padding).
+
+    Args:
+      x: ``(N, H, W, C)`` input.
+      window / stride: square pooling window and stride.
+      c_block: channel block override (must divide C).
+    """
+    n, h, w, c = x.shape
+    e = (h - window) // stride + 1
+    g = (w - window) // stride + 1
+    c_b = c_block if c_block is not None else _largest_divisor_leq(c, 64)
+    if c % c_b:
+        raise ValueError("c_block must divide C")
+
+    kernel = functools.partial(_maxpool_kernel, window=window, stride=stride)
+    return pl.pallas_call(
+        kernel,
+        grid=(n, c // c_b),
+        in_specs=[pl.BlockSpec((1, h, w, c_b), lambda ni, ci: (ni, 0, 0, ci))],
+        out_specs=pl.BlockSpec((1, e, g, c_b), lambda ni, ci: (ni, 0, 0, ci)),
+        out_shape=jax.ShapeDtypeStruct((n, e, g, c), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def _gap_kernel(x_ref, o_ref):
+    x = x_ref[...]  # (1, H, W, c_b)
+    o_ref[...] = jnp.mean(x.astype(jnp.float32), axis=(1, 2)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("c_block",))
+def global_avg_pool(x, *, c_block=None):
+    """Pallas global average pooling: ``(N, H, W, C) -> (N, C)``."""
+    n, h, w, c = x.shape
+    c_b = c_block if c_block is not None else _largest_divisor_leq(c, 128)
+    if c % c_b:
+        raise ValueError("c_block must divide C")
+    return pl.pallas_call(
+        _gap_kernel,
+        grid=(n, c // c_b),
+        in_specs=[pl.BlockSpec((1, h, w, c_b), lambda ni, ci: (ni, 0, 0, ci))],
+        out_specs=pl.BlockSpec((1, c_b), lambda ni, ci: (ni, ci)),
+        out_shape=jax.ShapeDtypeStruct((n, c), x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: every Pallas kernel must match its
+oracle to float tolerance (pytest + Hypothesis sweeps in python/tests/).
+They use only stock jax.lax/jnp primitives, no Pallas.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_ref(x, w, b, *, stride=1, apply_relu=True):
+    """Reference conv2d over NHWC input / RSCF weights (input pre-padded)."""
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    out = out + b.astype(jnp.float32)
+    if apply_relu:
+        out = jnp.maximum(out, 0.0)
+    return out.astype(x.dtype)
+
+
+def linear_ref(x, w, b, *, apply_relu=True):
+    """Reference fully connected layer."""
+    out = x.astype(jnp.float32) @ w.astype(jnp.float32) + b.astype(jnp.float32)
+    if apply_relu:
+        out = jnp.maximum(out, 0.0)
+    return out.astype(x.dtype)
+
+
+def maxpool2d_ref(x, *, window=2, stride=2):
+    """Reference max pooling over NHWC."""
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf if jnp.issubdtype(x.dtype, jnp.floating) else jnp.iinfo(x.dtype).min,
+        jax.lax.max,
+        window_dimensions=(1, window, window, 1),
+        window_strides=(1, stride, stride, 1),
+        padding="VALID",
+    )

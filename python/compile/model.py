@@ -1,0 +1,231 @@
+"""L2: JAX CNN models built on the L1 Pallas kernels.
+
+Defines the two *executable* networks of the repo — ``tiny_alexnet`` and
+``tiny_squeezenet`` — miniaturized (32x32 input) versions of the paper's
+AlexNet and SqueezeNet-v1.1 topologies. The full-size networks are modeled
+*analytically* on the Rust side (``rust/src/cnn``); these Tiny variants are
+what the serving coordinator actually executes through PJRT, so that the
+client-prefix / cloud-suffix code path is exercised with real numerics.
+
+Weights are deterministic (seeded He init) and are embedded in the lowered
+HLO as constants, so the Rust runtime needs no separate weight files: each
+``prefix_L`` artifact maps ``image -> activation_L`` and each ``suffix_L``
+maps ``activation_L -> logits``.
+
+Layer naming mirrors the paper's figures: ``C*`` conv, ``P*`` pool, ``FC*``
+fully connected, ``Fs*``/``Fe*`` squeeze/expand layers of a fire module.
+"""
+
+import dataclasses
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import conv2d, global_avg_pool, linear, maxpool2d
+
+
+@dataclasses.dataclass(frozen=True)
+class Layer:
+    """One partition-candidate layer: a name, a paper 'kind', and its fn."""
+
+    name: str
+    kind: str  # "conv" | "pool" | "fc" | "squeeze" | "expand" | "gap"
+    fn: Callable  # activation -> activation
+    macs: int  # multiply-accumulates in this layer (for the delay model)
+    params: int  # number of weights+biases (embedded as HLO constants)
+
+
+def _he(rng: np.random.Generator, shape, fan_in: int) -> np.ndarray:
+    return (rng.standard_normal(shape) * np.sqrt(2.0 / fan_in)).astype(np.float32)
+
+
+def _conv_layer(
+    name: str,
+    rng: np.random.Generator,
+    r: int,
+    s: int,
+    c: int,
+    f: int,
+    *,
+    stride: int = 1,
+    pad: int = 0,
+    relu: bool = True,
+    out_hw: Tuple[int, int],
+    kind: str = "conv",
+) -> Layer:
+    """Conv layer closing over He-initialized constant weights."""
+    w = _he(rng, (r, s, c, f), r * s * c)
+    b = np.zeros((f,), np.float32)
+
+    def fn(x, _w=w, _b=b, _stride=stride, _pad=pad, _relu=relu):
+        if _pad:
+            x = jnp.pad(x, ((0, 0), (_pad, _pad), (_pad, _pad), (0, 0)))
+        return conv2d(x, _w, _b, stride=_stride, apply_relu=_relu)
+
+    e, g = out_hw
+    return Layer(name, kind, fn, macs=r * s * c * e * g * f, params=w.size + b.size)
+
+
+def _pool_layer(name: str, window: int = 2, stride: int = 2) -> Layer:
+    def fn(x, _w=window, _s=stride):
+        return maxpool2d(x, window=_w, stride=_s)
+
+    return Layer(name, "pool", fn, macs=0, params=0)
+
+
+def _fc_layer(
+    name: str,
+    rng: np.random.Generator,
+    k: int,
+    m: int,
+    *,
+    relu: bool = True,
+    flatten: bool = False,
+) -> Layer:
+    w = _he(rng, (k, m), k)
+    b = np.zeros((m,), np.float32)
+
+    def fn(x, _w=w, _b=b, _relu=relu, _flatten=flatten):
+        if _flatten:
+            x = x.reshape((x.shape[0], -1))
+        return linear(x, _w, _b, apply_relu=_relu)
+
+    return Layer(name, "fc", fn, macs=k * m, params=w.size + b.size)
+
+
+def _expand_layer(
+    name: str,
+    rng: np.random.Generator,
+    c: int,
+    e1: int,
+    e3: int,
+    hw: Tuple[int, int],
+) -> Layer:
+    """Fire-module expand: concat(1x1 conv, 3x3 conv) over the squeeze output."""
+    w1 = _he(rng, (1, 1, c, e1), c)
+    b1 = np.zeros((e1,), np.float32)
+    w3 = _he(rng, (3, 3, c, e3), 9 * c)
+    b3 = np.zeros((e3,), np.float32)
+
+    def fn(x, _w1=w1, _b1=b1, _w3=w3, _b3=b3):
+        o1 = conv2d(x, _w1, _b1, stride=1, apply_relu=True)
+        xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+        o3 = conv2d(xp, _w3, _b3, stride=1, apply_relu=True)
+        return jnp.concatenate([o1, o3], axis=-1)
+
+    h, w = hw
+    macs = c * h * w * e1 + 9 * c * h * w * e3
+    return Layer(
+        name, "expand", fn, macs=macs, params=w1.size + b1.size + w3.size + b3.size
+    )
+
+
+def _gap_layer(name: str) -> Layer:
+    def fn(x):
+        return global_avg_pool(x)
+
+    return Layer(name, "gap", fn, macs=0, params=0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Network:
+    """A partitionable CNN: an ordered list of layers over a fixed input."""
+
+    name: str
+    input_shape: Tuple[int, int, int, int]
+    layers: List[Layer]
+
+    # -- execution ---------------------------------------------------------
+    def forward(self, x):
+        for layer in self.layers:
+            x = layer.fn(x)
+        return x
+
+    def prefix_fn(self, split: int) -> Callable:
+        """Client side: layers 1..split (1-indexed, inclusive)."""
+        if not 1 <= split <= len(self.layers):
+            raise ValueError(f"split {split} out of range")
+
+        def fn(x):
+            for layer in self.layers[:split]:
+                x = layer.fn(x)
+            return (x,)
+
+        return fn
+
+    def suffix_fn(self, split: int) -> Callable:
+        """Cloud side: layers split+1..end. ``split=0`` is the full network."""
+        if not 0 <= split < len(self.layers):
+            raise ValueError(f"split {split} out of range")
+
+        def fn(x):
+            for layer in self.layers[split:]:
+                x = layer.fn(x)
+            return (x,)
+
+        return fn
+
+    # -- shape metadata ----------------------------------------------------
+    def layer_shapes(self) -> List[Tuple[int, ...]]:
+        """Output shape of each layer, derived by abstract evaluation."""
+        shapes = []
+        spec = jax.ShapeDtypeStruct(self.input_shape, jnp.float32)
+        for i in range(1, len(self.layers) + 1):
+            out = jax.eval_shape(self.prefix_fn(i), spec)[0]
+            shapes.append(tuple(out.shape))
+        return shapes
+
+
+def tiny_alexnet(seed: int = 2020) -> Network:
+    """AlexNet-shaped 11-layer network for 32x32x3 inputs.
+
+    Mirrors the paper's AlexNet partition candidates
+    (C1 P1 C2 P2 C3 C4 C5 P3 FC6 FC7 FC8) at 1/7 spatial scale.
+    """
+    rng = np.random.default_rng(seed)
+    layers = [
+        _conv_layer("C1", rng, 5, 5, 3, 16, pad=2, out_hw=(32, 32)),
+        _pool_layer("P1"),
+        _conv_layer("C2", rng, 5, 5, 16, 32, pad=2, out_hw=(16, 16)),
+        _pool_layer("P2"),
+        _conv_layer("C3", rng, 3, 3, 32, 64, pad=1, out_hw=(8, 8)),
+        _conv_layer("C4", rng, 3, 3, 64, 64, pad=1, out_hw=(8, 8)),
+        _conv_layer("C5", rng, 3, 3, 64, 32, pad=1, out_hw=(8, 8)),
+        _pool_layer("P3"),
+        _fc_layer("FC6", rng, 4 * 4 * 32, 96, flatten=True),
+        _fc_layer("FC7", rng, 96, 48),
+        _fc_layer("FC8", rng, 48, 10, relu=False),
+    ]
+    return Network("tiny_alexnet", (1, 32, 32, 3), layers)
+
+
+def tiny_squeezenet(seed: int = 1611) -> Network:
+    """SqueezeNet-v1.1-shaped 12-layer network for 32x32x3 inputs.
+
+    Fire modules appear as squeeze (Fs*) / expand (Fe*) layer pairs, matching
+    the paper's SqueezeNet partition-candidate naming (Fig. 11b).
+    """
+    rng = np.random.default_rng(seed)
+    layers = [
+        _conv_layer("C1", rng, 3, 3, 3, 16, pad=1, out_hw=(32, 32)),
+        _pool_layer("P1"),
+        _conv_layer("Fs2", rng, 1, 1, 16, 8, out_hw=(16, 16), kind="squeeze"),
+        _expand_layer("Fe2", rng, 8, 16, 16, (16, 16)),
+        _pool_layer("P3"),
+        _conv_layer("Fs3", rng, 1, 1, 32, 16, out_hw=(8, 8), kind="squeeze"),
+        _expand_layer("Fe3", rng, 16, 32, 32, (8, 8)),
+        _pool_layer("P5"),
+        _conv_layer("Fs4", rng, 1, 1, 64, 16, out_hw=(4, 4), kind="squeeze"),
+        _expand_layer("Fe4", rng, 16, 32, 32, (4, 4)),
+        _conv_layer("C10", rng, 1, 1, 64, 10, out_hw=(4, 4)),
+        _gap_layer("GAP"),
+    ]
+    return Network("tiny_squeezenet", (1, 32, 32, 3), layers)
+
+
+NETWORKS: Dict[str, Callable[[], Network]] = {
+    "tiny_alexnet": tiny_alexnet,
+    "tiny_squeezenet": tiny_squeezenet,
+}

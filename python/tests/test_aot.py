@@ -1,0 +1,65 @@
+"""AOT pipeline: lowering produces loadable HLO text and a consistent manifest.
+
+Uses a single small prefix per network to keep lowering time bounded; the
+full artifact set is exercised by `make artifacts` + the Rust integration
+tests (rust/tests/runtime_integration.rs).
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import emit_network, lower_fn
+from compile.model import NETWORKS
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.mark.parametrize("name", sorted(NETWORKS))
+def test_lower_prefix_is_hlo_text(name):
+    net = NETWORKS[name]()
+    text = lower_fn(net.prefix_fn(1), net.input_shape)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # return_tuple=True: the computation root must be a tuple type.
+    assert "->(" in text.replace(" ", "").splitlines()[0]
+
+
+def test_lowered_hlo_embeds_weights():
+    """Weights ride along as constants — no runtime weight files needed."""
+    net = NETWORKS["tiny_alexnet"]()
+    text = lower_fn(net.prefix_fn(1), net.input_shape)
+    assert "constant" in text
+    # Regression: the default HLO printer elides large literals as
+    # "constant({...})", which the XLA text parser reads back as ZEROS.
+    # aot.to_hlo_text must print them in full.
+    assert "constant({...})" not in text
+    assert "{...}" not in text
+
+
+def test_emit_network_manifest(tmp_path):
+    net = NETWORKS["tiny_squeezenet"]()
+    entry = emit_network(net, tmp_path)
+    n = len(net.layers)
+    assert len(entry["artifacts"]["prefix"]) == n
+    assert len(entry["artifacts"]["suffix"]) == n
+    assert len(entry["layers"]) == n
+    for rec in entry["layers"]:
+        assert len(rec["out_shape"]) in (2, 4)
+    # every referenced artifact exists and is HLO text
+    for kind in ("prefix", "suffix"):
+        for fname in entry["artifacts"][kind].values():
+            assert (tmp_path / fname).read_text().startswith("HloModule")
+    # manifest round-trips through json
+    json.loads(json.dumps(entry))
+
+
+def test_manifest_shapes_match_eval(tmp_path):
+    net = NETWORKS["tiny_squeezenet"]()
+    entry = emit_network(net, tmp_path)
+    shapes = net.layer_shapes()
+    got = [tuple(rec["out_shape"]) for rec in entry["layers"]]
+    assert got == shapes

@@ -1,0 +1,170 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+This is the core correctness signal for the compiled artifacts: everything
+the Rust runtime executes is built from these kernels. Hypothesis sweeps the
+shape/stride/dtype space; fixed cases pin the exact configurations the Tiny*
+networks use.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d, linear
+from compile.kernels.ref import conv2d_ref, linear_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(rng, shape, dtype):
+    x = rng.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x, dtype=dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# conv2d
+# ---------------------------------------------------------------------------
+
+conv_cases = st.tuples(
+    st.integers(1, 2),  # N
+    st.integers(1, 3),  # extra spatial room
+    st.integers(1, 3),
+    st.sampled_from([1, 3, 4, 8]),  # C
+    st.sampled_from([1, 2, 4, 16]),  # F
+    st.sampled_from([1, 3, 5]),  # R=S
+    st.sampled_from([1, 2]),  # stride
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(conv_cases, st.booleans())
+def test_conv2d_matches_ref(case, apply_relu):
+    n, eh, ew, c, f, r, u = case
+    # Build a stride-aligned padded input: Hp = (E-1)*U + R.
+    e, g = eh + 1, ew + 1
+    hp, wp = (e - 1) * u + r, (g - 1) * u + r
+    rng = np.random.default_rng(hash(case) % 2**32)
+    x = _rand(rng, (n, hp, wp, c), jnp.float32)
+    w = _rand(rng, (r, r, c, f), jnp.float32)
+    b = _rand(rng, (f,), jnp.float32)
+
+    got = conv2d(x, w, b, stride=u, apply_relu=apply_relu)
+    want = conv2d_ref(x, w, b, stride=u, apply_relu=apply_relu)
+    assert got.shape == (n, e, g, f)
+    np.testing.assert_allclose(got, want, **_tol(jnp.float32))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_conv2d_dtypes(dtype):
+    rng = np.random.default_rng(7)
+    x = _rand(rng, (1, 10, 10, 8), dtype)
+    w = _rand(rng, (3, 3, 8, 16), dtype)
+    b = _rand(rng, (16,), dtype)
+    got = conv2d(x, w, b, stride=1)
+    want = conv2d_ref(x, w, b, stride=1)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize(
+    "c,f,cb,fb",
+    [(8, 16, 2, 4), (8, 16, 8, 16), (6, 9, 3, 3), (4, 4, 1, 1)],
+)
+def test_conv2d_block_overrides(c, f, cb, fb):
+    """Accumulation across channel blocks must be exact regardless of tiling."""
+    rng = np.random.default_rng(11)
+    x = _rand(rng, (1, 7, 7, c), jnp.float32)
+    w = _rand(rng, (3, 3, c, f), jnp.float32)
+    b = _rand(rng, (f,), jnp.float32)
+    got = conv2d(x, w, b, c_block=cb, f_block=fb)
+    want = conv2d_ref(x, w, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_conv2d_rejects_bad_blocks():
+    rng = np.random.default_rng(3)
+    x = _rand(rng, (1, 5, 5, 6), jnp.float32)
+    w = _rand(rng, (3, 3, 6, 4), jnp.float32)
+    b = _rand(rng, (4,), jnp.float32)
+    with pytest.raises(ValueError):
+        conv2d(x, w, b, c_block=5)
+
+
+def test_conv2d_rejects_channel_mismatch():
+    rng = np.random.default_rng(4)
+    x = _rand(rng, (1, 5, 5, 6), jnp.float32)
+    w = _rand(rng, (3, 3, 4, 4), jnp.float32)
+    b = _rand(rng, (4,), jnp.float32)
+    with pytest.raises(ValueError):
+        conv2d(x, w, b)
+
+
+def test_conv2d_rejects_misaligned_stride():
+    rng = np.random.default_rng(5)
+    x = _rand(rng, (1, 6, 6, 3), jnp.float32)  # (6-3) % 2 != 0
+    w = _rand(rng, (3, 3, 3, 4), jnp.float32)
+    b = _rand(rng, (4,), jnp.float32)
+    with pytest.raises(ValueError):
+        conv2d(x, w, b, stride=2)
+
+
+def test_conv2d_relu_clamps_negative():
+    """With a large negative bias everything must clamp to exactly zero."""
+    rng = np.random.default_rng(6)
+    x = _rand(rng, (1, 5, 5, 3), jnp.float32)
+    w = _rand(rng, (3, 3, 3, 4), jnp.float32)
+    b = jnp.full((4,), -1e6, jnp.float32)
+    got = conv2d(x, w, b, apply_relu=True)
+    assert np.all(np.asarray(got) == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# linear
+# ---------------------------------------------------------------------------
+
+linear_cases = st.tuples(
+    st.integers(1, 4),  # N
+    st.sampled_from([1, 3, 16, 48, 96, 512]),  # K
+    st.sampled_from([1, 10, 48, 96]),  # M
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(linear_cases, st.booleans())
+def test_linear_matches_ref(case, apply_relu):
+    n, k, m = case
+    rng = np.random.default_rng(hash(case) % 2**32)
+    x = _rand(rng, (n, k), jnp.float32)
+    w = _rand(rng, (k, m), jnp.float32)
+    b = _rand(rng, (m,), jnp.float32)
+    got = linear(x, w, b, apply_relu=apply_relu)
+    want = linear_ref(x, w, b, apply_relu=apply_relu)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("kb,mb", [(1, 1), (4, 2), (8, 8), (2, 8)])
+def test_linear_block_overrides(kb, mb):
+    rng = np.random.default_rng(13)
+    x = _rand(rng, (2, 8), jnp.float32)
+    w = _rand(rng, (8, 8), jnp.float32)
+    b = _rand(rng, (8,), jnp.float32)
+    got = linear(x, w, b, k_block=kb, m_block=mb)
+    want = linear_ref(x, w, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_linear_rejects_mismatch():
+    rng = np.random.default_rng(14)
+    x = _rand(rng, (2, 8), jnp.float32)
+    w = _rand(rng, (9, 8), jnp.float32)
+    b = _rand(rng, (8,), jnp.float32)
+    with pytest.raises(ValueError):
+        linear(x, w, b)

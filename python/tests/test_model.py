@@ -1,0 +1,99 @@
+"""L2 correctness: network structure, prefix/suffix composition, sparsity.
+
+The key invariant for the partitioner is that for every split L,
+``suffix_L(prefix_L(x)) == forward(x)`` — the client/cloud decomposition is
+lossless. Also checks the ReLU-sparsity property Fig. 10 of the paper relies
+on (intermediate activations are substantially sparse, with low variance).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import NETWORKS
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module", params=sorted(NETWORKS))
+def net(request):
+    return NETWORKS[request.param]()
+
+
+def _image(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.random(shape, dtype=np.float32))
+
+
+def test_forward_shape(net):
+    x = _image(net.input_shape)
+    out = net.forward(x)
+    assert out.shape == (net.input_shape[0], 10)
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+def test_layer_shapes_monotone_volume(net):
+    """Data volume never grows after a pool layer (dimensionality reduction)."""
+    shapes = net.layer_shapes()
+    assert len(shapes) == len(net.layers)
+    for i, layer in enumerate(net.layers):
+        if layer.kind == "pool" and i > 0:
+            assert np.prod(shapes[i]) < np.prod(shapes[i - 1])
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_prefix_suffix_compose(net, seed):
+    x = _image(net.input_shape, seed)
+    full = np.asarray(net.forward(x))
+    for split in range(1, len(net.layers)):
+        act = net.prefix_fn(split)(x)[0]
+        out = np.asarray(net.suffix_fn(split)(act)[0])
+        np.testing.assert_allclose(out, full, rtol=1e-5, atol=1e-5)
+
+
+def test_suffix_zero_is_full_network(net):
+    x = _image(net.input_shape, 2)
+    np.testing.assert_allclose(
+        np.asarray(net.suffix_fn(0)(x)[0]),
+        np.asarray(net.forward(x)),
+        rtol=1e-6,
+        atol=1e-6,
+    )
+
+
+def test_intermediate_sparsity(net):
+    """ReLU layers produce substantially sparse activations (paper Fig. 10)."""
+    sparsities = []
+    for seed in range(4):
+        x = _image(net.input_shape, seed)
+        per_layer = []
+        for split, layer in enumerate(net.layers, start=1):
+            if layer.kind in ("conv", "squeeze", "expand"):
+                act = np.asarray(net.prefix_fn(split)(x)[0])
+                per_layer.append(float(np.mean(act == 0.0)))
+        sparsities.append(per_layer)
+    arr = np.array(sparsities)  # (images, relu-layers)
+    mu, sigma = arr.mean(axis=0), arr.std(axis=0)
+    # He-init ReLU nets: ~half the activations are clamped; per-image
+    # variation is small relative to the mean (the paper's key observation).
+    assert np.all(mu > 0.2)
+    assert np.all(sigma < mu)
+
+
+def test_macs_and_params_positive(net):
+    for layer in net.layers:
+        if layer.kind in ("conv", "fc", "squeeze", "expand"):
+            assert layer.macs > 0
+            assert layer.params > 0
+        else:
+            assert layer.macs == 0
+
+
+def test_prefix_split_bounds(net):
+    with pytest.raises(ValueError):
+        net.prefix_fn(0)
+    with pytest.raises(ValueError):
+        net.prefix_fn(len(net.layers) + 1)
+    with pytest.raises(ValueError):
+        net.suffix_fn(len(net.layers))

@@ -1,0 +1,228 @@
+//! In-tree micro-benchmark harness — the offline substitute for criterion
+//! (DESIGN.md §"Offline substitutions").
+//!
+//! Each `benches/*.rs` is a `harness = false` binary that calls
+//! [`Bencher::bench`] per measurement: auto-calibrated iteration counts,
+//! warmup, mean/σ/min reporting, and optional throughput annotation.
+//! Results print one criterion-style line per benchmark and can be dumped
+//! as CSV for EXPERIMENTS.md §Perf.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// One benchmark's summary statistics (nanoseconds per iteration).
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+    pub iters: u64,
+    pub samples: usize,
+    /// Optional elements-per-iteration for throughput reporting.
+    pub elems: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn throughput_per_s(&self) -> Option<f64> {
+        self.elems.map(|e| e as f64 / (self.mean_ns * 1e-9))
+    }
+
+    pub fn print(&self) {
+        let tp = match self.throughput_per_s() {
+            Some(t) if t >= 1e9 => format!("  thrpt: {:.3} Gelem/s", t / 1e9),
+            Some(t) if t >= 1e6 => format!("  thrpt: {:.3} Melem/s", t / 1e6),
+            Some(t) => format!("  thrpt: {:.1} elem/s", t),
+            None => String::new(),
+        };
+        println!(
+            "{:<44} time: [{} ± {} (min {})]{}",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.std_ns),
+            fmt_ns(self.min_ns),
+            tp
+        );
+    }
+
+    pub fn csv_row(&self) -> String {
+        format!(
+            "{},{:.1},{:.1},{:.1},{},{}",
+            self.name,
+            self.mean_ns,
+            self.std_ns,
+            self.min_ns,
+            self.iters,
+            self.elems.unwrap_or(0)
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} µs", ns / 1e3)
+    } else {
+        format!("{:.1} ns", ns)
+    }
+}
+
+/// Benchmark runner with a wall-clock budget per measurement.
+pub struct Bencher {
+    /// Target time per sample batch.
+    pub sample_target: Duration,
+    /// Number of sample batches.
+    pub samples: usize,
+    /// Warmup time.
+    pub warmup: Duration,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            sample_target: Duration::from_millis(50),
+            samples: 10,
+            warmup: Duration::from_millis(100),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick mode for CI/tests (shorter budgets).
+    pub fn quick() -> Self {
+        Bencher {
+            sample_target: Duration::from_millis(10),
+            samples: 5,
+            warmup: Duration::from_millis(20),
+            results: Vec::new(),
+        }
+    }
+
+    /// Measure `f`, auto-calibrating the per-sample iteration count.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        self.bench_with_elems(name, None, &mut f)
+    }
+
+    /// Measure with a throughput annotation (`elems` processed per call).
+    pub fn bench_elems<T>(
+        &mut self,
+        name: &str,
+        elems: u64,
+        mut f: impl FnMut() -> T,
+    ) -> &BenchResult {
+        self.bench_with_elems(name, Some(elems), &mut f)
+    }
+
+    fn bench_with_elems<T>(
+        &mut self,
+        name: &str,
+        elems: Option<u64>,
+        f: &mut dyn FnMut() -> T,
+    ) -> &BenchResult {
+        // Warmup + calibration: find iters so one sample ≈ sample_target.
+        let warm_start = Instant::now();
+        let mut one = Duration::ZERO;
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.warmup || warm_iters == 0 {
+            let t = Instant::now();
+            black_box(f());
+            one = t.elapsed();
+            warm_iters += 1;
+        }
+        let iters = ((self.sample_target.as_nanos() as f64
+            / one.as_nanos().max(1) as f64)
+            .ceil() as u64)
+            .clamp(1, 1_000_000_000);
+
+        let mut sample_ns = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                black_box(f());
+            }
+            sample_ns.push(t.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        let mean = sample_ns.iter().sum::<f64>() / sample_ns.len() as f64;
+        let var = sample_ns
+            .iter()
+            .map(|x| (x - mean) * (x - mean))
+            .sum::<f64>()
+            / sample_ns.len() as f64;
+        let min = sample_ns.iter().cloned().fold(f64::INFINITY, f64::min);
+
+        let result = BenchResult {
+            name: name.to_string(),
+            mean_ns: mean,
+            std_ns: var.sqrt(),
+            min_ns: min,
+            iters,
+            samples: self.samples,
+            elems,
+        };
+        result.print();
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Write all results as CSV (header + rows).
+    pub fn write_csv(&self, path: &std::path::Path) -> std::io::Result<()> {
+        let mut out = String::from("name,mean_ns,std_ns,min_ns,iters,elems\n");
+        for r in &self.results {
+            out.push_str(&r.csv_row());
+            out.push('\n');
+        }
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher {
+            sample_target: Duration::from_micros(200),
+            samples: 3,
+            warmup: Duration::from_micros(100),
+            results: Vec::new(),
+        };
+        let r = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.min_ns <= r.mean_ns);
+        assert_eq!(b.results.len(), 1);
+    }
+
+    #[test]
+    fn throughput_annotation() {
+        let mut b = Bencher::quick();
+        let data = vec![1u64; 1024];
+        let r = b.bench_elems("sum1k", 1024, || data.iter().sum::<u64>());
+        assert!(r.throughput_per_s().unwrap() > 1e6);
+    }
+
+    #[test]
+    fn csv_output() {
+        let mut b = Bencher::quick();
+        b.bench("x", || 1 + 1);
+        let path = std::env::temp_dir().join("neupart_bench_test/out.csv");
+        b.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("name,"));
+        assert!(text.contains("x,"));
+    }
+}

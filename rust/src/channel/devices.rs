@@ -1,0 +1,49 @@
+//! Measured smartphone uplink transmit power (paper Table IV, from
+//! [35]–[37]). The paper's evaluations use LG Nexus 4 WLAN (0.78 W),
+//! Samsung Galaxy Note 3 WLAN (1.28 W) and BlackBerry Z10 WLAN (1.14 W)
+//! as representative operating points.
+
+/// One row of Table IV: average uplink power in watts per radio.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DevicePower {
+    pub platform: &'static str,
+    pub wlan_w: Option<f64>,
+    pub g3_w: Option<f64>,
+    pub lte_w: Option<f64>,
+}
+
+/// Paper Table IV, verbatim.
+pub const DEVICE_POWER_TABLE: [DevicePower; 6] = [
+    DevicePower { platform: "Google Nexus One", wlan_w: None, g3_w: Some(0.45), lte_w: None },
+    DevicePower { platform: "LG Nexus 4", wlan_w: Some(0.78), g3_w: Some(0.71), lte_w: None },
+    DevicePower { platform: "Samsung Galaxy S3", wlan_w: Some(0.85), g3_w: Some(1.13), lte_w: Some(1.13) },
+    DevicePower { platform: "BlackBerry Z10", wlan_w: Some(1.14), g3_w: Some(1.03), lte_w: Some(1.22) },
+    DevicePower { platform: "Samsung Galaxy Note 3", wlan_w: Some(1.28), g3_w: Some(0.75), lte_w: Some(2.3) },
+    DevicePower { platform: "Nokia N900", wlan_w: Some(1.1), g3_w: Some(1.0), lte_w: None },
+];
+
+/// Look up a device row by (case-insensitive) platform substring.
+pub fn device(name: &str) -> Option<&'static DevicePower> {
+    let lower = name.to_lowercase();
+    DEVICE_POWER_TABLE
+        .iter()
+        .find(|d| d.platform.to_lowercase().contains(&lower))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_operating_points_present() {
+        assert_eq!(device("Nexus 4").unwrap().wlan_w, Some(0.78));
+        assert_eq!(device("Note 3").unwrap().wlan_w, Some(1.28));
+        assert_eq!(device("Z10").unwrap().wlan_w, Some(1.14));
+        assert_eq!(device("Note 3").unwrap().lte_w, Some(2.3));
+    }
+
+    #[test]
+    fn unknown_device_is_none() {
+        assert!(device("iPhone 47").is_none());
+    }
+}

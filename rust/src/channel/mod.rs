@@ -1,0 +1,11 @@
+//! Wireless-channel substrate: transmission energy/time models (paper §VI-A)
+//! and the smartphone uplink power survey (paper Table IV), plus a
+//! simulated channel the serving coordinator sends activations through.
+
+pub mod devices;
+pub mod simulator;
+pub mod transmission;
+
+pub use devices::{DevicePower, DEVICE_POWER_TABLE};
+pub use simulator::{Channel, ChannelConfig};
+pub use transmission::{effective_bit_rate, transmission_energy_j, transmission_time_s, TransmitEnv};

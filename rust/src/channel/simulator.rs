@@ -1,0 +1,155 @@
+//! Simulated uplink channel for the serving coordinator.
+//!
+//! The analytical models (§VI-A) predict energy/time; this simulator makes
+//! the serving loop actually *wait* those times and accrue those joules, so
+//! end-to-end runs report the same quantities the model predicts — plus
+//! optional bandwidth jitter to exercise the flat-valley robustness the
+//! paper analyzes in Fig. 14(b).
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::transmission::TransmitEnv;
+use crate::util::rng::Rng;
+
+/// Channel behavior knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ChannelConfig {
+    pub env: TransmitEnv,
+    /// Multiplicative bandwidth jitter amplitude (0 = deterministic;
+    /// 0.2 = ±20% uniform per transfer).
+    pub jitter: f64,
+    /// Scale factor applied to simulated airtime before sleeping (0 disables
+    /// real sleeps so tests/benches run instantly; 1 = real time).
+    pub time_scale: f64,
+}
+
+impl ChannelConfig {
+    pub fn ideal(env: TransmitEnv) -> Self {
+        ChannelConfig {
+            env,
+            jitter: 0.0,
+            time_scale: 0.0,
+        }
+    }
+}
+
+/// Cumulative channel statistics.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ChannelStats {
+    pub transfers: u64,
+    pub payload_bits: u64,
+    pub energy_j: f64,
+    pub airtime_s: f64,
+}
+
+/// A thread-safe simulated uplink.
+pub struct Channel {
+    config: ChannelConfig,
+    state: Mutex<(Rng, ChannelStats)>,
+}
+
+impl Channel {
+    pub fn new(config: ChannelConfig, seed: u64) -> Self {
+        Channel {
+            config,
+            state: Mutex::new((Rng::new(seed), ChannelStats::default())),
+        }
+    }
+
+    /// Transmit a payload: returns (energy J, airtime s) and sleeps the
+    /// scaled airtime to model occupancy.
+    pub fn send(&self, payload_bits: u64) -> (f64, f64) {
+        let (energy, airtime) = {
+            let mut guard = self.state.lock().unwrap();
+            let (ref mut rng, ref mut stats) = *guard;
+            let jitter = if self.config.jitter > 0.0 {
+                1.0 + self.config.jitter * (2.0 * rng.next_f64() - 1.0)
+            } else {
+                1.0
+            };
+            let b_e = self.config.env.effective_bit_rate() * jitter;
+            let airtime = payload_bits as f64 / b_e;
+            let energy = self.config.env.p_tx_w * airtime;
+            stats.transfers += 1;
+            stats.payload_bits += payload_bits;
+            stats.energy_j += energy;
+            stats.airtime_s += airtime;
+            (energy, airtime)
+        };
+        if self.config.time_scale > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(airtime * self.config.time_scale));
+        }
+        (energy, airtime)
+    }
+
+    pub fn stats(&self) -> ChannelStats {
+        self.state.lock().unwrap().1
+    }
+
+    pub fn config(&self) -> &ChannelConfig {
+        &self.config
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env() -> TransmitEnv {
+        TransmitEnv::with_effective_rate(100.0e6, 1.0)
+    }
+
+    #[test]
+    fn deterministic_channel_matches_model() {
+        let ch = Channel::new(ChannelConfig::ideal(env()), 1);
+        let (e, t) = ch.send(1_000_000);
+        assert!((t - 0.01).abs() < 1e-12);
+        assert!((e - 0.01).abs() < 1e-12);
+        let stats = ch.stats();
+        assert_eq!(stats.transfers, 1);
+        assert_eq!(stats.payload_bits, 1_000_000);
+    }
+
+    #[test]
+    fn jitter_bounded() {
+        let mut cfg = ChannelConfig::ideal(env());
+        cfg.jitter = 0.2;
+        let ch = Channel::new(cfg, 7);
+        for _ in 0..200 {
+            let (_, t) = ch.send(1_000_000);
+            // B_e in [80, 120] Mbps -> t in [1/120, 1/80] * 1e6 us.
+            assert!((0.00833..0.0126).contains(&t), "t {t}");
+        }
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let ch = Channel::new(ChannelConfig::ideal(env()), 3);
+        for _ in 0..10 {
+            ch.send(100);
+        }
+        let s = ch.stats();
+        assert_eq!(s.transfers, 10);
+        assert_eq!(s.payload_bits, 1000);
+        assert!(s.energy_j > 0.0);
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let ch = std::sync::Arc::new(Channel::new(ChannelConfig::ideal(env()), 5));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let c = ch.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..25 {
+                    c.send(8);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(ch.stats().transfers, 100);
+    }
+}

@@ -1,0 +1,101 @@
+//! Transmission energy and time (paper §VI-A, eqs. 27–28).
+//!
+//! `E_Trans = P_Tx · D_RLC / B_e` with `B_e = B / (1 + k/100)`: constant
+//! transmit power over the transfer, ECC overhead `k`% shaving the
+//! effective bit rate.
+
+/// The runtime communication environment (user-specified in Alg. 2).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TransmitEnv {
+    /// Available transmission bit rate `B`, bits/s.
+    pub bit_rate_bps: f64,
+    /// ECC overhead `k`, percent of payload.
+    pub ecc_percent: f64,
+    /// Transmit power `P_Tx`, watts (from Table IV).
+    pub p_tx_w: f64,
+}
+
+impl TransmitEnv {
+    /// Paper's headline operating point: 80 Mbps, LG Nexus 4 WLAN, 10% ECC.
+    pub fn paper_default() -> Self {
+        TransmitEnv {
+            bit_rate_bps: 80.0e6,
+            ecc_percent: 10.0,
+            p_tx_w: 0.78,
+        }
+    }
+
+    /// Effective bit rate `B_e` (eq. 28).
+    pub fn effective_bit_rate(&self) -> f64 {
+        effective_bit_rate(self.bit_rate_bps, self.ecc_percent)
+    }
+
+    /// With the *effective* rate pinned directly (the paper sweeps `B_e`).
+    pub fn with_effective_rate(b_e: f64, p_tx_w: f64) -> Self {
+        TransmitEnv {
+            bit_rate_bps: b_e,
+            ecc_percent: 0.0,
+            p_tx_w,
+        }
+    }
+
+    /// `E_Trans` for a payload, joules (eq. 27).
+    pub fn energy_j(&self, d_rlc_bits: f64) -> f64 {
+        transmission_energy_j(self.p_tx_w, d_rlc_bits, self.effective_bit_rate())
+    }
+
+    /// `t_Trans` for a payload, seconds.
+    pub fn time_s(&self, d_rlc_bits: f64) -> f64 {
+        transmission_time_s(d_rlc_bits, self.effective_bit_rate())
+    }
+}
+
+/// Eq. 28: `B_e = B / (1 + k/100)`.
+pub fn effective_bit_rate(b_bps: f64, ecc_percent: f64) -> f64 {
+    b_bps / (1.0 + ecc_percent / 100.0)
+}
+
+/// Eq. 27: `E_Trans = P_Tx · D_RLC / B_e`, joules.
+pub fn transmission_energy_j(p_tx_w: f64, d_rlc_bits: f64, b_e_bps: f64) -> f64 {
+    p_tx_w * d_rlc_bits / b_e_bps
+}
+
+/// `t_Trans = D_RLC / B_e`, seconds.
+pub fn transmission_time_s(d_rlc_bits: f64, b_e_bps: f64) -> f64 {
+    d_rlc_bits / b_e_bps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ecc_shaves_rate() {
+        // 10% ECC on 88 Mbps leaves 80 Mbps effective.
+        assert!((effective_bit_rate(88.0e6, 10.0) - 80.0e6).abs() < 1.0);
+        assert_eq!(effective_bit_rate(100.0e6, 0.0), 100.0e6);
+    }
+
+    #[test]
+    fn energy_formula() {
+        // 1 Mbit at 100 Mbps and 1 W -> 10 ms -> 10 mJ.
+        let e = transmission_energy_j(1.0, 1.0e6, 100.0e6);
+        assert!((e - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn env_helpers_consistent() {
+        let env = TransmitEnv::paper_default();
+        let d = 500_000.0;
+        assert!((env.energy_j(d) - env.p_tx_w * env.time_s(d)).abs() < 1e-15);
+        let be = env.effective_bit_rate();
+        assert!((be - 80.0e6 / 1.1).abs() < 1.0);
+    }
+
+    #[test]
+    fn higher_power_costs_more() {
+        let lo = TransmitEnv::with_effective_rate(80e6, 0.78);
+        let hi = TransmitEnv::with_effective_rate(80e6, 1.28);
+        assert!(hi.energy_j(1e6) > lo.energy_j(1e6));
+    }
+}

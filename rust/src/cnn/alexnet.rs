@@ -1,0 +1,87 @@
+//! AlexNet topology (Krizhevsky et al. [6]), Eyeriss single-chip convention:
+//! 227×227×3 input, grouped C2/C4/C5 (paper §V validates CNNergy on these
+//! shapes against Eyeriss silicon).
+//!
+//! Sparsity fixtures are the digitized per-layer averages of paper Fig. 10
+//! (σ an order of magnitude below μ — the paper's key runtime observation);
+//! see DESIGN.md §5 "Substitutions".
+
+use super::{ConvShape, Layer, LayerKind, Network};
+
+fn layer(
+    name: &'static str,
+    kind: LayerKind,
+    convs: Vec<ConvShape>,
+    out: (usize, usize, usize),
+    mu: f64,
+    sigma: f64,
+) -> Layer {
+    Layer {
+        name,
+        kind,
+        convs,
+        out,
+        sparsity_mu: mu,
+        sparsity_sigma: sigma,
+    }
+}
+
+/// The 12-partition-candidate AlexNet of the paper's evaluation
+/// (In → C1 P1 C2 P2 C3 C4 C5 P3 FC6 FC7 FC8, Fig. 2 / Fig. 11(a)).
+pub fn alexnet() -> Network {
+    use LayerKind::*;
+    let layers = vec![
+        layer("C1", Conv, vec![ConvShape::conv(227, 227, 11, 3, 96, 4)], (55, 55, 96), 0.55, 0.040),
+        layer("P1", Pool, vec![], (27, 27, 96), 0.42, 0.045),
+        layer("C2", Conv, vec![ConvShape::grouped(31, 31, 5, 48, 256, 1, 2)], (27, 27, 256), 0.62, 0.040),
+        layer("P2", Pool, vec![], (13, 13, 256), 0.50, 0.045),
+        layer("C3", Conv, vec![ConvShape::conv(15, 15, 3, 256, 384, 1)], (13, 13, 384), 0.68, 0.040),
+        layer("C4", Conv, vec![ConvShape::grouped(15, 15, 3, 192, 384, 1, 2)], (13, 13, 384), 0.66, 0.042),
+        layer("C5", Conv, vec![ConvShape::grouped(15, 15, 3, 192, 256, 1, 2)], (13, 13, 256), 0.74, 0.045),
+        layer("P3", Pool, vec![], (6, 6, 256), 0.63, 0.050),
+        layer("FC6", Fc, vec![ConvShape::fc(6, 6, 256, 4096)], (1, 1, 4096), 0.90, 0.020),
+        layer("FC7", Fc, vec![ConvShape::fc(1, 1, 4096, 4096)], (1, 1, 4096), 0.87, 0.025),
+        // FC8 has no ReLU: class scores are mostly nonzero.
+        layer("FC8", Fc, vec![ConvShape::fc(1, 1, 4096, 1000)], (1, 1, 1000), 0.30, 0.050),
+    ];
+    Network {
+        name: "alexnet",
+        input: (227, 227, 3),
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_mac_counts_match_literature() {
+        // Published AlexNet per-layer MAC counts (Eyeriss convention).
+        let net = alexnet();
+        let macs: Vec<u64> = net.layers.iter().map(|l| l.macs()).collect();
+        assert_eq!(macs[0], 105_415_200); // C1
+        assert_eq!(macs[2], 223_948_800); // C2
+        assert_eq!(macs[4], 149_520_384); // C3
+        assert_eq!(macs[5], 112_140_288); // C4
+        assert_eq!(macs[6], 74_760_192); // C5
+        assert_eq!(macs[8], 37_748_736); // FC6
+        assert_eq!(macs[9], 16_777_216); // FC7
+        assert_eq!(macs[10], 4_096_000); // FC8
+        // Total ≈ 724M MACs.
+        let total = net.total_macs();
+        assert!((720e6..730e6).contains(&(total as f64)), "total {total}");
+    }
+
+    #[test]
+    fn twelve_partition_candidates() {
+        assert_eq!(alexnet().num_layers(), 11); // + the In layer = 12 choices
+    }
+
+    #[test]
+    fn output_volumes() {
+        let net = alexnet();
+        assert_eq!(net.layers[net.layer_index("P2").unwrap()].out_elems(), 13 * 13 * 256);
+        assert_eq!(net.layers[net.layer_index("FC8").unwrap()].out_elems(), 1000);
+    }
+}

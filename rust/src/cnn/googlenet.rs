@@ -1,0 +1,151 @@
+//! GoogleNet-v1 topology (Szegedy et al. [18]), 224×224×3 input.
+//!
+//! Each inception module is one partition candidate (`I3a` … `I5b`) whose
+//! [`Layer::convs`] carry all six constituent convolutions (1×1, 3×3-reduce,
+//! 3×3, 5×5-reduce, 5×5, pool-proj). 17 partition candidates total.
+//!
+//! Note the C1 ifmap is encoded as 229×229 (pad 3 on 224, last row/col
+//! dropped) so the stride-2 7×7 output is exactly 112 — the Caffe
+//! floor-mode convention.
+
+use super::{ConvShape, Layer, LayerKind, Network};
+
+/// Inception module over an `hw`×`hw`×`c_in` ifmap.
+///
+/// `(n1, r3, n3, r5, n5, pp)` follow the GoogleNet paper's table: #1×1,
+/// #3×3-reduce, #3×3, #5×5-reduce, #5×5, pool-proj.
+#[allow(clippy::too_many_arguments)]
+fn inception(
+    name: &'static str,
+    hw: usize,
+    c_in: usize,
+    n1: usize,
+    r3: usize,
+    n3: usize,
+    r5: usize,
+    n5: usize,
+    pp: usize,
+    mu: f64,
+) -> Layer {
+    let convs = vec![
+        ConvShape::conv(hw, hw, 1, c_in, n1, 1),     // 1x1
+        ConvShape::conv(hw, hw, 1, c_in, r3, 1),     // 3x3 reduce
+        ConvShape::conv(hw + 2, hw + 2, 3, r3, n3, 1), // 3x3
+        ConvShape::conv(hw, hw, 1, c_in, r5, 1),     // 5x5 reduce
+        ConvShape::conv(hw + 4, hw + 4, 5, r5, n5, 1), // 5x5
+        ConvShape::conv(hw, hw, 1, c_in, pp, 1),     // pool proj (after 3x3/s1 maxpool)
+    ];
+    Layer {
+        name,
+        kind: LayerKind::Inception,
+        convs,
+        out: (hw, hw, n1 + n3 + n5 + pp),
+        sparsity_mu: mu,
+        sparsity_sigma: mu / 14.0,
+    }
+}
+
+fn pool(name: &'static str, out: (usize, usize, usize), mu: f64) -> Layer {
+    Layer {
+        name,
+        kind: LayerKind::Pool,
+        convs: vec![],
+        out,
+        sparsity_mu: mu,
+        sparsity_sigma: mu / 12.0,
+    }
+}
+
+/// The 17-partition-candidate GoogleNet-v1 of the paper's evaluation.
+pub fn googlenet() -> Network {
+    let layers = vec![
+        Layer {
+            name: "C1",
+            kind: LayerKind::Conv,
+            convs: vec![ConvShape::conv(229, 229, 7, 3, 64, 2)],
+            out: (112, 112, 64),
+            sparsity_mu: 0.45,
+            sparsity_sigma: 0.040,
+        },
+        pool("P1", (56, 56, 64), 0.38),
+        // conv2: 1x1 reduce (64) then 3x3 (192) — one partition candidate.
+        Layer {
+            name: "C2",
+            kind: LayerKind::Conv,
+            convs: vec![
+                ConvShape::conv(56, 56, 1, 64, 64, 1),
+                ConvShape::conv(58, 58, 3, 64, 192, 1),
+            ],
+            out: (56, 56, 192),
+            sparsity_mu: 0.58,
+            sparsity_sigma: 0.042,
+        },
+        pool("P2", (28, 28, 192), 0.48),
+        inception("I3a", 28, 192, 64, 96, 128, 16, 32, 32, 0.60),
+        inception("I3b", 28, 256, 128, 128, 192, 32, 96, 64, 0.63),
+        pool("P3", (14, 14, 480), 0.55),
+        inception("I4a", 14, 480, 192, 96, 208, 16, 48, 64, 0.65),
+        inception("I4b", 14, 512, 160, 112, 224, 24, 64, 64, 0.66),
+        inception("I4c", 14, 512, 128, 128, 256, 24, 64, 64, 0.68),
+        inception("I4d", 14, 512, 112, 144, 288, 32, 64, 64, 0.70),
+        inception("I4e", 14, 528, 256, 160, 320, 32, 128, 128, 0.72),
+        pool("P4", (7, 7, 832), 0.65),
+        inception("I5a", 7, 832, 256, 160, 320, 32, 128, 128, 0.74),
+        inception("I5b", 7, 832, 384, 192, 384, 48, 128, 128, 0.76),
+        Layer {
+            name: "GAP",
+            kind: LayerKind::Gap,
+            convs: vec![],
+            out: (1, 1, 1024),
+            sparsity_mu: 0.55,
+            sparsity_sigma: 0.050,
+        },
+        Layer {
+            name: "FC",
+            kind: LayerKind::Fc,
+            convs: vec![ConvShape::fc(1, 1, 1024, 1000)],
+            out: (1, 1, 1000),
+            sparsity_mu: 0.30,
+            sparsity_sigma: 0.050,
+        },
+    ];
+    Network {
+        name: "googlenet_v1",
+        input: (224, 224, 3),
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seventeen_partition_candidates() {
+        assert_eq!(googlenet().num_layers(), 17);
+    }
+
+    #[test]
+    fn total_macs_near_published() {
+        // GoogleNet-v1 is ~1.43G MACs at 224x224.
+        let total = googlenet().total_macs() as f64;
+        assert!((1.3e9..1.7e9).contains(&total), "total {total}");
+    }
+
+    #[test]
+    fn inception_output_depths() {
+        let net = googlenet();
+        for (name, depth) in [
+            ("I3a", 256),
+            ("I3b", 480),
+            ("I4a", 512),
+            ("I4d", 528),
+            ("I4e", 832),
+            ("I5b", 1024),
+        ] {
+            let l = &net.layers[net.layer_index(name).unwrap()];
+            assert_eq!(l.out.2, depth, "{name}");
+            assert_eq!(l.convs.len(), 6, "{name}");
+        }
+    }
+}

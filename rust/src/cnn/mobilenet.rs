@@ -1,0 +1,154 @@
+//! MobileNet-v1 topology (Howard et al., 2017), 224×224×3 input, α = 1.
+//!
+//! Not part of the paper's evaluation — included to demonstrate CNNergy's
+//! claim of generality over "a vast range of CNN topologies" (§I-B):
+//! depthwise convolutions are the extreme grouped case (`groups = C`,
+//! one channel per filter), which stresses the scheduler's exception rules
+//! (`C < z_i` with C = 1 on every depthwise layer).
+//!
+//! Each depthwise-separable block contributes two partition candidates
+//! (`Dw*` then `Pw*`), matching how the paper splits fire modules.
+
+use super::{ConvShape, Layer, LayerKind, Network};
+
+/// Depthwise 3×3 layer over `hw`×`hw`×`c` (stride 1 or 2, pad 1).
+fn dw(name: &'static str, hw_in: usize, c: usize, stride: usize, mu: f64) -> Layer {
+    let out_hw = if stride == 1 { hw_in } else { hw_in / 2 };
+    // Padded height chosen so (H - 3) is stride-aligned with the output.
+    let h = (out_hw - 1) * stride + 3;
+    Layer {
+        name,
+        kind: LayerKind::Conv,
+        convs: vec![ConvShape::grouped(h, h, 3, 1, c, stride, c)],
+        out: (out_hw, out_hw, c),
+        sparsity_mu: mu,
+        sparsity_sigma: mu / 14.0,
+    }
+}
+
+/// Pointwise 1×1 layer.
+fn pw(name: &'static str, hw: usize, c: usize, f: usize, mu: f64) -> Layer {
+    Layer {
+        name,
+        kind: LayerKind::Conv,
+        convs: vec![ConvShape::conv(hw, hw, 1, c, f, 1)],
+        out: (hw, hw, f),
+        sparsity_mu: mu,
+        sparsity_sigma: mu / 14.0,
+    }
+}
+
+/// The 29-partition-candidate MobileNet-v1.
+pub fn mobilenet_v1() -> Network {
+    let layers = vec![
+        Layer {
+            name: "C1",
+            kind: LayerKind::Conv,
+            convs: vec![ConvShape::conv(225, 225, 3, 3, 32, 2)],
+            out: (112, 112, 32),
+            sparsity_mu: 0.45,
+            sparsity_sigma: 0.040,
+        },
+        dw("Dw1", 112, 32, 1, 0.48),
+        pw("Pw1", 112, 32, 64, 0.52),
+        dw("Dw2", 112, 64, 2, 0.50),
+        pw("Pw2", 56, 64, 128, 0.55),
+        dw("Dw3", 56, 128, 1, 0.52),
+        pw("Pw3", 56, 128, 128, 0.58),
+        dw("Dw4", 56, 128, 2, 0.54),
+        pw("Pw4", 28, 128, 256, 0.60),
+        dw("Dw5", 28, 256, 1, 0.56),
+        pw("Pw5", 28, 256, 256, 0.62),
+        dw("Dw6", 28, 256, 2, 0.58),
+        pw("Pw6", 14, 256, 512, 0.64),
+        dw("Dw7", 14, 512, 1, 0.60),
+        pw("Pw7", 14, 512, 512, 0.66),
+        dw("Dw8", 14, 512, 1, 0.60),
+        pw("Pw8", 14, 512, 512, 0.67),
+        dw("Dw9", 14, 512, 1, 0.61),
+        pw("Pw9", 14, 512, 512, 0.68),
+        dw("Dw10", 14, 512, 1, 0.61),
+        pw("Pw10", 14, 512, 512, 0.69),
+        dw("Dw11", 14, 512, 1, 0.62),
+        pw("Pw11", 14, 512, 512, 0.70),
+        dw("Dw12", 14, 512, 2, 0.64),
+        pw("Pw12", 7, 512, 1024, 0.72),
+        dw("Dw13", 7, 1024, 1, 0.66),
+        pw("Pw13", 7, 1024, 1024, 0.74),
+        Layer {
+            name: "GAP",
+            kind: LayerKind::Gap,
+            convs: vec![],
+            out: (1, 1, 1024),
+            sparsity_mu: 0.55,
+            sparsity_sigma: 0.050,
+        },
+        Layer {
+            name: "FC",
+            kind: LayerKind::Fc,
+            convs: vec![ConvShape::fc(1, 1, 1024, 1000)],
+            out: (1, 1, 1000),
+            sparsity_mu: 0.30,
+            sparsity_sigma: 0.050,
+        },
+    ];
+    Network {
+        name: "mobilenet_v1",
+        input: (224, 224, 3),
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::TransmitEnv;
+    use crate::cnnergy::{schedule, CnnErgy, HwConfig};
+    use crate::partition::algorithm2::paper_partitioner;
+
+    #[test]
+    fn consistent_and_right_size() {
+        let net = mobilenet_v1();
+        net.check_consistency().unwrap();
+        assert_eq!(net.num_layers(), 29);
+        // MobileNet-v1 is ~569M MACs at 224x224.
+        let total = net.total_macs() as f64;
+        assert!((520e6..620e6).contains(&total), "total {total}");
+    }
+
+    #[test]
+    fn depthwise_layers_schedule_validly() {
+        // groups = C means each filter sees ONE channel — the C < z_i
+        // exception fires on every depthwise layer; invariants must hold.
+        let hw = HwConfig::eyeriss_8bit();
+        let net = mobilenet_v1();
+        for layer in net.layers.iter().filter(|l| l.name.starts_with("Dw")) {
+            let shape = &layer.convs[0];
+            assert_eq!(shape.c, 1);
+            assert_eq!(shape.groups, shape.f);
+            let sch = schedule(shape, &hw);
+            assert_eq!(sch.z_i, 1); // can't exceed C = 1
+            assert!(sch.f_i >= 1 && sch.f_i <= shape.f.min(hw.p_s));
+        }
+    }
+
+    #[test]
+    fn cheaper_than_alexnet_per_inference() {
+        // MobileNet's raison d'être on the client.
+        let model = CnnErgy::inference_8bit();
+        let mb = model.total_energy_pj(&mobilenet_v1());
+        let alex = model.total_energy_pj(&crate::cnn::alexnet());
+        assert!(mb < alex, "mobilenet {mb:.3e} vs alexnet {alex:.3e}");
+    }
+
+    #[test]
+    fn partitioner_handles_29_layers() {
+        let net = mobilenet_v1();
+        let p = paper_partitioner(&net);
+        let env = TransmitEnv::with_effective_rate(80e6, 0.78);
+        let d = p.decide(0.608, &env);
+        assert_eq!(d.costs_j.len(), 30);
+        // An efficient mobile CNN should never be FCC-optimal at Q2/80Mbps.
+        assert_ne!(d.l_opt, 0);
+    }
+}

@@ -1,0 +1,323 @@
+//! CNN topology substrate (paper §III, Table I).
+//!
+//! Encodes the full per-layer shape tables for the four networks the paper
+//! evaluates — AlexNet, SqueezeNet-v1.1, VGG-16, GoogleNet-v1 — plus the two
+//! Tiny* executable variants that mirror `python/compile/model.py`. Each
+//! [`Layer`] carries the [`ConvShape`]s of its constituent convolutions
+//! (composite layers — fire-expand, inception — carry several), its output
+//! volume, and the layer-output sparsity statistics used by the partitioner
+//! (paper Fig. 10; see `cnnergy::sparsity` for provenance).
+
+mod alexnet;
+mod googlenet;
+mod mobilenet;
+mod squeezenet;
+mod tiny;
+mod vgg16;
+
+pub use alexnet::alexnet;
+pub use googlenet::googlenet;
+pub use mobilenet::mobilenet_v1;
+pub use squeezenet::squeezenet_v11;
+pub use tiny::{tiny_alexnet, tiny_squeezenet};
+pub use vgg16::vgg16;
+
+/// Shape parameters of one convolution (paper Table I).
+///
+/// Fully connected layers are expressed in the standard way as convolutions
+/// with `E = G = 1` (`H = R`, `W = S`). For grouped convolutions (AlexNet
+/// C2/C4/C5), `c` is the number of channels *seen by one filter* and
+/// `groups` is the group count, so `c * groups` is the total ifmap depth.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvShape {
+    /// Filter height / width.
+    pub r: usize,
+    pub s: usize,
+    /// Padded ifmap height / width.
+    pub h: usize,
+    pub w: usize,
+    /// Ofmap height / width.
+    pub e: usize,
+    pub g: usize,
+    /// Ifmap channels per filter (per group).
+    pub c: usize,
+    /// Total number of 3-D filters in the layer (across all groups).
+    pub f: usize,
+    /// Convolution stride.
+    pub u: usize,
+    /// Group count (1 for ordinary convolutions).
+    pub groups: usize,
+}
+
+impl ConvShape {
+    /// Plain (ungrouped) convolution with square filters over a padded ifmap.
+    pub fn conv(h: usize, w: usize, r: usize, c: usize, f: usize, u: usize) -> Self {
+        Self::grouped(h, w, r, c, f, u, 1)
+    }
+
+    /// Grouped convolution; `c` is channels per group.
+    pub fn grouped(h: usize, w: usize, r: usize, c: usize, f: usize, u: usize, groups: usize) -> Self {
+        assert!(h >= r && w >= r, "ifmap smaller than filter: {h}x{w} vs {r}");
+        assert_eq!((h - r) % u, 0, "H not stride-aligned");
+        assert_eq!((w - r) % u, 0, "W not stride-aligned");
+        Self {
+            r,
+            s: r,
+            h,
+            w,
+            e: (h - r) / u + 1,
+            g: (w - r) / u + 1,
+            c,
+            f,
+            u,
+            groups,
+        }
+    }
+
+    /// Fully connected layer viewed as a conv (`E = G = 1`).
+    pub fn fc(k_h: usize, k_w: usize, c: usize, f: usize) -> Self {
+        Self {
+            r: k_h,
+            s: k_w,
+            h: k_h,
+            w: k_w,
+            e: 1,
+            g: 1,
+            c,
+            f,
+            u: 1,
+            groups: 1,
+        }
+    }
+
+    /// Multiply-accumulate count: `R·S·C·E·G·F` (paper eq. (19) body),
+    /// with `C` the per-group channel depth, so grouping is respected.
+    pub fn macs(&self) -> u64 {
+        (self.r * self.s * self.c) as u64 * (self.e * self.g * self.f) as u64
+    }
+
+    /// Elements in the full (padded) ifmap volume, all groups.
+    pub fn ifmap_elems(&self) -> u64 {
+        (self.h * self.w * self.c * self.groups) as u64
+    }
+
+    /// Elements in the ofmap volume.
+    pub fn ofmap_elems(&self) -> u64 {
+        (self.e * self.g * self.f) as u64
+    }
+
+    /// Filter weights in the layer (per-group channel depth × all filters).
+    pub fn filter_elems(&self) -> u64 {
+        (self.r * self.s * self.c * self.f) as u64
+    }
+}
+
+/// Kind of a partition-candidate layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    Fc,
+    Pool,
+    /// Fire-module squeeze (1×1 conv) — SqueezeNet.
+    Squeeze,
+    /// Fire-module expand (1×1 ∥ 3×3 concat) — SqueezeNet.
+    Expand,
+    /// Inception module (6 parallel convs + pool-proj) — GoogleNet.
+    Inception,
+    /// Global average pool.
+    Gap,
+}
+
+impl LayerKind {
+    /// Does this layer end in a ReLU (and therefore produce sparse output)?
+    pub fn has_relu(&self) -> bool {
+        matches!(
+            self,
+            LayerKind::Conv | LayerKind::Fc | LayerKind::Squeeze | LayerKind::Expand | LayerKind::Inception
+        )
+    }
+}
+
+/// One partition-candidate layer of a network.
+#[derive(Clone, Debug)]
+pub struct Layer {
+    /// Paper-style name: `C1`, `P2`, `FC6`, `Fs4`, `Fe4`, `I3a`, `GAP`…
+    pub name: &'static str,
+    pub kind: LayerKind,
+    /// Constituent convolutions (empty for pool/gap layers).
+    pub convs: Vec<ConvShape>,
+    /// Output volume `(E, G, M)`; FC layers use `(1, 1, M)`.
+    pub out: (usize, usize, usize),
+    /// Mean output sparsity over the image corpus (paper Fig. 10).
+    pub sparsity_mu: f64,
+    /// Standard deviation of output sparsity.
+    pub sparsity_sigma: f64,
+}
+
+impl Layer {
+    pub fn out_elems(&self) -> u64 {
+        (self.out.0 * self.out.1 * self.out.2) as u64
+    }
+
+    pub fn macs(&self) -> u64 {
+        self.convs.iter().map(ConvShape::macs).sum()
+    }
+
+    /// Raw (uncompressed) output bits at bit-width `bw`.
+    pub fn raw_out_bits(&self, bw: u32) -> u64 {
+        self.out_elems() * bw as u64
+    }
+}
+
+/// A full CNN topology: ordered partition-candidate layers over an input.
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub name: &'static str,
+    /// Unpadded input `(H, W, C)`.
+    pub input: (usize, usize, usize),
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Raw input-image bits at bit-width `bw` (the FCC upload, pre-JPEG).
+    pub fn input_raw_bits(&self, bw: u32) -> u64 {
+        (self.input.0 * self.input.1 * self.input.2) as u64 * bw as u64
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(Layer::macs).sum()
+    }
+
+    /// Index of a layer by paper name.
+    pub fn layer_index(&self, name: &str) -> Option<usize> {
+        self.layers.iter().position(|l| l.name == name)
+    }
+
+    /// All four full-size networks of the paper's evaluation.
+    pub fn paper_networks() -> Vec<Network> {
+        vec![alexnet(), squeezenet_v11(), googlenet(), vgg16()]
+    }
+
+    /// Look a network up by name (full-size and Tiny variants).
+    pub fn by_name(name: &str) -> Option<Network> {
+        match name {
+            "alexnet" => Some(alexnet()),
+            "squeezenet" | "squeezenet_v11" => Some(squeezenet_v11()),
+            "googlenet" | "googlenet_v1" => Some(googlenet()),
+            "vgg16" => Some(vgg16()),
+            "mobilenet" | "mobilenet_v1" => Some(mobilenet_v1()),
+            "tiny_alexnet" => Some(tiny_alexnet()),
+            "tiny_squeezenet" => Some(tiny_squeezenet()),
+            _ => None,
+        }
+    }
+
+    /// Structural sanity check: every layer's ifmap depth is consistent
+    /// with the previous layer's output depth (used by tests).
+    pub fn check_consistency(&self) -> Result<(), String> {
+        let mut prev_depth = self.input.2;
+        let mut prev_hw = (self.input.0, self.input.1);
+        for layer in &self.layers {
+            match layer.kind {
+                LayerKind::Conv | LayerKind::Fc | LayerKind::Squeeze => {
+                    let cs = layer.convs[0];
+                    let total_c = cs.c * cs.groups;
+                    if layer.kind == LayerKind::Fc {
+                        let expect = prev_hw.0 * prev_hw.1 * prev_depth;
+                        let got = cs.r * cs.s * cs.c;
+                        if expect != got {
+                            return Err(format!(
+                                "{}/{}: fc fan-in {} != prev volume {}",
+                                self.name, layer.name, got, expect
+                            ));
+                        }
+                    } else if total_c != prev_depth {
+                        return Err(format!(
+                            "{}/{}: ifmap depth {} != prev {}",
+                            self.name, layer.name, total_c, prev_depth
+                        ));
+                    }
+                }
+                LayerKind::Expand | LayerKind::Inception => {
+                    // First conv of the module must consume the previous depth.
+                    let heads: Vec<&ConvShape> = layer
+                        .convs
+                        .iter()
+                        .filter(|cs| cs.c * cs.groups == prev_depth)
+                        .collect();
+                    if heads.is_empty() {
+                        return Err(format!(
+                            "{}/{}: no branch consumes prev depth {}",
+                            self.name, layer.name, prev_depth
+                        ));
+                    }
+                }
+                LayerKind::Pool | LayerKind::Gap => {
+                    if layer.out.2 != prev_depth {
+                        return Err(format!(
+                            "{}/{}: pool changed depth {} -> {}",
+                            self.name, layer.name, prev_depth, layer.out.2
+                        ));
+                    }
+                }
+            }
+            prev_depth = layer.out.2;
+            prev_hw = (layer.out.0, layer.out.1);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shape_derives_output() {
+        let cs = ConvShape::conv(227, 227, 11, 3, 96, 4);
+        assert_eq!((cs.e, cs.g), (55, 55));
+        assert_eq!(cs.macs(), 105_415_200); // AlexNet C1
+    }
+
+    #[test]
+    fn grouped_macs_respect_groups() {
+        // AlexNet C2: 27x27 ifmap padded to 31, 5x5, 96 channels in 2 groups.
+        let cs = ConvShape::grouped(31, 31, 5, 48, 256, 1, 2);
+        assert_eq!((cs.e, cs.g), (27, 27));
+        assert_eq!(cs.macs(), 223_948_800);
+        assert_eq!(cs.ifmap_elems(), 31 * 31 * 96);
+    }
+
+    #[test]
+    fn fc_shape() {
+        let cs = ConvShape::fc(6, 6, 256, 4096);
+        assert_eq!((cs.e, cs.g), (1, 1));
+        assert_eq!(cs.macs(), 37_748_736);
+    }
+
+    #[test]
+    fn all_networks_consistent() {
+        for net in Network::paper_networks() {
+            net.check_consistency().unwrap();
+        }
+        tiny_alexnet().check_consistency().unwrap();
+        tiny_squeezenet().check_consistency().unwrap();
+    }
+
+    #[test]
+    fn layer_lookup() {
+        let net = alexnet();
+        assert_eq!(net.layer_index("P2"), Some(3));
+        assert_eq!(net.layer_index("nope"), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "stride-aligned")]
+    fn misaligned_stride_panics() {
+        ConvShape::conv(10, 10, 3, 3, 4, 2); // (10-3) % 2 != 0
+    }
+}

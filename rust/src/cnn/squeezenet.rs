@@ -1,0 +1,123 @@
+//! SqueezeNet-v1.1 topology (Iandola et al. [16]), 227×227×3 input.
+//!
+//! Fire modules appear as squeeze (`Fs*`) / expand (`Fe*`) partition-layer
+//! pairs, matching the paper's Fig. 11(b) naming, for 22 partition
+//! candidates total. Pools use ceil-mode output sizes (Caffe convention).
+
+use super::{ConvShape, Layer, LayerKind, Network};
+
+fn squeeze(name: &'static str, hw: usize, c: usize, f: usize, mu: f64) -> Layer {
+    Layer {
+        name,
+        kind: LayerKind::Squeeze,
+        convs: vec![ConvShape::conv(hw, hw, 1, c, f, 1)],
+        out: (hw, hw, f),
+        sparsity_mu: mu,
+        sparsity_sigma: mu / 14.0,
+    }
+}
+
+/// Expand layer: 1×1 (e1 filters) ∥ 3×3-pad-1 (e3 filters), concatenated.
+fn expand(name: &'static str, hw: usize, c: usize, e1: usize, e3: usize, mu: f64) -> Layer {
+    Layer {
+        name,
+        kind: LayerKind::Expand,
+        convs: vec![
+            ConvShape::conv(hw, hw, 1, c, e1, 1),
+            ConvShape::conv(hw + 2, hw + 2, 3, c, e3, 1),
+        ],
+        out: (hw, hw, e1 + e3),
+        sparsity_mu: mu,
+        sparsity_sigma: mu / 14.0,
+    }
+}
+
+fn pool(name: &'static str, out: (usize, usize, usize), mu: f64) -> Layer {
+    Layer {
+        name,
+        kind: LayerKind::Pool,
+        convs: vec![],
+        out,
+        sparsity_mu: mu,
+        sparsity_sigma: mu / 12.0,
+    }
+}
+
+/// The 22-partition-candidate SqueezeNet-v1.1 of the paper (Fig. 11(b)).
+pub fn squeezenet_v11() -> Network {
+    let layers = vec![
+        Layer {
+            name: "C1",
+            kind: LayerKind::Conv,
+            convs: vec![ConvShape::conv(227, 227, 3, 3, 64, 2)],
+            out: (113, 113, 64),
+            sparsity_mu: 0.50,
+            sparsity_sigma: 0.040,
+        },
+        pool("P1", (56, 56, 64), 0.38),
+        squeeze("Fs2", 56, 64, 16, 0.55),
+        expand("Fe2", 56, 16, 64, 64, 0.62),
+        squeeze("Fs3", 56, 128, 16, 0.58),
+        expand("Fe3", 56, 16, 64, 64, 0.66),
+        pool("P3", (28, 28, 128), 0.55),
+        squeeze("Fs4", 28, 128, 32, 0.60),
+        expand("Fe4", 28, 32, 128, 128, 0.68),
+        squeeze("Fs5", 28, 256, 32, 0.62),
+        expand("Fe5", 28, 32, 128, 128, 0.71),
+        pool("P5", (14, 14, 256), 0.60),
+        squeeze("Fs6", 14, 256, 48, 0.64),
+        expand("Fe6", 14, 48, 192, 192, 0.73),
+        squeeze("Fs7", 14, 384, 48, 0.66),
+        expand("Fe7", 14, 48, 192, 192, 0.76),
+        squeeze("Fs8", 14, 384, 64, 0.68),
+        expand("Fe8", 14, 64, 256, 256, 0.79),
+        squeeze("Fs9", 14, 512, 64, 0.70),
+        expand("Fe9", 14, 64, 256, 256, 0.82),
+        Layer {
+            name: "C10",
+            kind: LayerKind::Conv,
+            convs: vec![ConvShape::conv(14, 14, 1, 512, 1000, 1)],
+            out: (14, 14, 1000),
+            sparsity_mu: 0.85,
+            sparsity_sigma: 0.030,
+        },
+        Layer {
+            name: "GAP",
+            kind: LayerKind::Gap,
+            convs: vec![],
+            out: (1, 1, 1000),
+            sparsity_mu: 0.45,
+            sparsity_sigma: 0.060,
+        },
+    ];
+    Network {
+        name: "squeezenet_v11",
+        input: (227, 227, 3),
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn twenty_two_partition_candidates() {
+        assert_eq!(squeezenet_v11().num_layers(), 22);
+    }
+
+    #[test]
+    fn total_macs_near_published() {
+        // SqueezeNet-v1.1 is ~350-390M MACs at 227x227 (0.72 GFLOPs / 2).
+        let total = squeezenet_v11().total_macs() as f64;
+        assert!((250e6..450e6).contains(&total), "total {total}");
+    }
+
+    #[test]
+    fn expand_concat_depth() {
+        let net = squeezenet_v11();
+        let fe9 = &net.layers[net.layer_index("Fe9").unwrap()];
+        assert_eq!(fe9.out.2, 512);
+        assert_eq!(fe9.convs.len(), 2);
+    }
+}

@@ -1,0 +1,133 @@
+//! Tiny executable network variants — the analytical mirror of
+//! `python/compile/model.py`.
+//!
+//! These shapes must stay in lockstep with the Python definitions: the
+//! integration test `rust/tests/runtime_integration.rs` cross-checks them
+//! against `artifacts/manifest.json`. Sparsity defaults are the He-init
+//! values observed from real executions (≈0.5 post-ReLU); the serving
+//! coordinator replaces them with measured per-layer statistics at startup
+//! when artifacts are available.
+
+use super::{ConvShape, Layer, LayerKind, Network};
+
+fn l(
+    name: &'static str,
+    kind: LayerKind,
+    convs: Vec<ConvShape>,
+    out: (usize, usize, usize),
+    mu: f64,
+) -> Layer {
+    Layer {
+        name,
+        kind,
+        convs,
+        out,
+        sparsity_mu: mu,
+        sparsity_sigma: mu / 10.0,
+    }
+}
+
+/// 11-layer AlexNet-shaped network for 32×32×3 inputs (see model.py).
+pub fn tiny_alexnet() -> Network {
+    use LayerKind::*;
+    let layers = vec![
+        l("C1", Conv, vec![ConvShape::conv(36, 36, 5, 3, 16, 1)], (32, 32, 16), 0.50),
+        l("P1", Pool, vec![], (16, 16, 16), 0.40),
+        l("C2", Conv, vec![ConvShape::conv(20, 20, 5, 16, 32, 1)], (16, 16, 32), 0.55),
+        l("P2", Pool, vec![], (8, 8, 32), 0.45),
+        l("C3", Conv, vec![ConvShape::conv(10, 10, 3, 32, 64, 1)], (8, 8, 64), 0.58),
+        l("C4", Conv, vec![ConvShape::conv(10, 10, 3, 64, 64, 1)], (8, 8, 64), 0.60),
+        l("C5", Conv, vec![ConvShape::conv(10, 10, 3, 64, 32, 1)], (8, 8, 32), 0.62),
+        l("P3", Pool, vec![], (4, 4, 32), 0.50),
+        l("FC6", Fc, vec![ConvShape::fc(4, 4, 32, 96)], (1, 1, 96), 0.60),
+        l("FC7", Fc, vec![ConvShape::fc(1, 1, 96, 48)], (1, 1, 48), 0.60),
+        l("FC8", Fc, vec![ConvShape::fc(1, 1, 48, 10)], (1, 1, 10), 0.10),
+    ];
+    Network {
+        name: "tiny_alexnet",
+        input: (32, 32, 3),
+        layers,
+    }
+}
+
+/// 12-layer SqueezeNet-shaped network for 32×32×3 inputs (see model.py).
+pub fn tiny_squeezenet() -> Network {
+    use LayerKind::*;
+    let layers = vec![
+        l("C1", Conv, vec![ConvShape::conv(34, 34, 3, 3, 16, 1)], (32, 32, 16), 0.50),
+        l("P1", Pool, vec![], (16, 16, 16), 0.40),
+        l("Fs2", Squeeze, vec![ConvShape::conv(16, 16, 1, 16, 8, 1)], (16, 16, 8), 0.52),
+        l(
+            "Fe2",
+            Expand,
+            vec![
+                ConvShape::conv(16, 16, 1, 8, 16, 1),
+                ConvShape::conv(18, 18, 3, 8, 16, 1),
+            ],
+            (16, 16, 32),
+            0.55,
+        ),
+        l("P3", Pool, vec![], (8, 8, 32), 0.45),
+        l("Fs3", Squeeze, vec![ConvShape::conv(8, 8, 1, 32, 16, 1)], (8, 8, 16), 0.55),
+        l(
+            "Fe3",
+            Expand,
+            vec![
+                ConvShape::conv(8, 8, 1, 16, 32, 1),
+                ConvShape::conv(10, 10, 3, 16, 32, 1),
+            ],
+            (8, 8, 64),
+            0.58,
+        ),
+        l("P5", Pool, vec![], (4, 4, 64), 0.48),
+        l("Fs4", Squeeze, vec![ConvShape::conv(4, 4, 1, 64, 16, 1)], (4, 4, 16), 0.58),
+        l(
+            "Fe4",
+            Expand,
+            vec![
+                ConvShape::conv(4, 4, 1, 16, 32, 1),
+                ConvShape::conv(6, 6, 3, 16, 32, 1),
+            ],
+            (4, 4, 64),
+            0.60,
+        ),
+        l("C10", Conv, vec![ConvShape::conv(4, 4, 1, 64, 10, 1)], (4, 4, 10), 0.55),
+        l("GAP", Gap, vec![], (1, 1, 10), 0.10),
+    ];
+    Network {
+        name: "tiny_squeezenet",
+        input: (32, 32, 3),
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_alexnet_layer_names_match_python() {
+        let names: Vec<_> = tiny_alexnet().layers.iter().map(|l| l.name).collect();
+        assert_eq!(
+            names,
+            ["C1", "P1", "C2", "P2", "C3", "C4", "C5", "P3", "FC6", "FC7", "FC8"]
+        );
+    }
+
+    #[test]
+    fn tiny_squeezenet_layer_names_match_python() {
+        let names: Vec<_> = tiny_squeezenet().layers.iter().map(|l| l.name).collect();
+        assert_eq!(
+            names,
+            ["C1", "P1", "Fs2", "Fe2", "P3", "Fs3", "Fe3", "P5", "Fs4", "Fe4", "C10", "GAP"]
+        );
+    }
+
+    #[test]
+    fn tiny_alexnet_macs_match_python_model() {
+        // Same formulas as model.py's Layer.macs.
+        let net = tiny_alexnet();
+        assert_eq!(net.layers[0].macs(), 5 * 5 * 3 * 32 * 32 * 16);
+        assert_eq!(net.layers[8].macs(), 512 * 96);
+    }
+}

@@ -1,0 +1,98 @@
+//! VGG-16 topology (Simonyan & Zisserman [17]), 224×224×3 input.
+//!
+//! 21 partition candidates: 13 convs, 5 pools, 3 FC layers. The paper finds
+//! VGG-16 is FCC-optimal (high compute cost + large deep-layer volumes) —
+//! reproducing that negative result requires the full table.
+
+use super::{ConvShape, Layer, LayerKind, Network};
+
+fn conv(name: &'static str, hw: usize, c: usize, f: usize, mu: f64) -> Layer {
+    Layer {
+        name,
+        kind: LayerKind::Conv,
+        convs: vec![ConvShape::conv(hw + 2, hw + 2, 3, c, f, 1)],
+        out: (hw, hw, f),
+        sparsity_mu: mu,
+        sparsity_sigma: mu / 15.0,
+    }
+}
+
+fn pool(name: &'static str, out: (usize, usize, usize), mu: f64) -> Layer {
+    Layer {
+        name,
+        kind: LayerKind::Pool,
+        convs: vec![],
+        out,
+        sparsity_mu: mu,
+        sparsity_sigma: mu / 12.0,
+    }
+}
+
+fn fc(name: &'static str, cs: ConvShape, m: usize, mu: f64, sigma: f64) -> Layer {
+    Layer {
+        name,
+        kind: LayerKind::Fc,
+        convs: vec![cs],
+        out: (1, 1, m),
+        sparsity_mu: mu,
+        sparsity_sigma: sigma,
+    }
+}
+
+/// The 21-partition-candidate VGG-16 of the paper's evaluation.
+pub fn vgg16() -> Network {
+    let layers = vec![
+        conv("C1_1", 224, 3, 64, 0.45),
+        conv("C1_2", 224, 64, 64, 0.55),
+        pool("P1", (112, 112, 64), 0.45),
+        conv("C2_1", 112, 64, 128, 0.55),
+        conv("C2_2", 112, 128, 128, 0.62),
+        pool("P2", (56, 56, 128), 0.52),
+        conv("C3_1", 56, 128, 256, 0.60),
+        conv("C3_2", 56, 256, 256, 0.66),
+        conv("C3_3", 56, 256, 256, 0.70),
+        pool("P3", (28, 28, 256), 0.58),
+        conv("C4_1", 28, 256, 512, 0.66),
+        conv("C4_2", 28, 512, 512, 0.72),
+        conv("C4_3", 28, 512, 512, 0.76),
+        pool("P4", (14, 14, 512), 0.65),
+        conv("C5_1", 14, 512, 512, 0.74),
+        conv("C5_2", 14, 512, 512, 0.78),
+        conv("C5_3", 14, 512, 512, 0.81),
+        pool("P5", (7, 7, 512), 0.70),
+        fc("FC6", ConvShape::fc(7, 7, 512, 4096), 4096, 0.92, 0.020),
+        fc("FC7", ConvShape::fc(1, 1, 4096, 4096), 4096, 0.89, 0.025),
+        fc("FC8", ConvShape::fc(1, 1, 4096, 1000), 1000, 0.30, 0.050),
+    ];
+    Network {
+        name: "vgg16",
+        input: (224, 224, 3),
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn twenty_one_partition_candidates() {
+        assert_eq!(vgg16().num_layers(), 21);
+    }
+
+    #[test]
+    fn total_macs_near_published() {
+        // VGG-16 is ~15.5G MACs (30.9 GFLOPs / 2) at 224x224.
+        let total = vgg16().total_macs() as f64;
+        assert!((15.0e9..16.0e9).contains(&total), "total {total}");
+    }
+
+    #[test]
+    fn deep_layer_volume_is_large() {
+        // The property that makes VGG-16 FCC-optimal in the paper: even deep
+        // layers carry large data volumes relative to the compressed input.
+        let net = vgg16();
+        let p4 = &net.layers[net.layer_index("P4").unwrap()];
+        assert!(p4.out_elems() > 100_000);
+    }
+}

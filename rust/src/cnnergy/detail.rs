@@ -1,0 +1,336 @@
+//! Customized energy access (paper §I-B): CNNergy "provides a breakdown of
+//! the total energy into specific components, such as data access energy
+//! from different memory levels, data access energy associated with each
+//! CNN data type from each level of memory, MAC computation energy".
+//!
+//! [`DetailedBreakdown`] is that matrix: (memory level × data type) plus
+//! the compute/control scalars, for one conv or a whole layer/network.
+
+use super::clock::{clock_power, ClockParams};
+use super::scheduling::{schedule, HwConfig, Schedule};
+use super::tech::TechParams;
+use crate::cnn::{ConvShape, Layer, LayerKind, Network};
+use crate::compress::rlc::rlc_delta;
+use crate::util::ceil_div;
+
+/// Memory levels of the accelerator hierarchy (paper §III-B).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemLevel {
+    Dram,
+    Glb,
+    InterPe,
+    Rf,
+}
+
+/// CNN data types (paper §III-A).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DataKind {
+    Ifmap,
+    Filter,
+    Psum,
+    Ofmap,
+}
+
+pub const MEM_LEVELS: [MemLevel; 4] =
+    [MemLevel::Dram, MemLevel::Glb, MemLevel::InterPe, MemLevel::Rf];
+pub const DATA_KINDS: [DataKind; 4] =
+    [DataKind::Ifmap, DataKind::Filter, DataKind::Psum, DataKind::Ofmap];
+
+/// Energy matrix over (level, kind), in pJ, plus compute/control scalars.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DetailedBreakdown {
+    /// `access[level][kind]` in pJ, indices following the const arrays.
+    pub access: [[f64; 4]; 4],
+    pub comp: f64,
+    pub cntrl: f64,
+}
+
+impl DetailedBreakdown {
+    pub fn get(&self, level: MemLevel, kind: DataKind) -> f64 {
+        self.access[level_idx(level)][kind_idx(kind)]
+    }
+
+    fn add_at(&mut self, level: MemLevel, kind: DataKind, pj: f64) {
+        self.access[level_idx(level)][kind_idx(kind)] += pj;
+    }
+
+    /// Total data-access energy at one level (pJ).
+    pub fn level_total(&self, level: MemLevel) -> f64 {
+        self.access[level_idx(level)].iter().sum()
+    }
+
+    /// Total data-access energy for one data type (pJ).
+    pub fn kind_total(&self, kind: DataKind) -> f64 {
+        self.access.iter().map(|row| row[kind_idx(kind)]).sum()
+    }
+
+    /// Grand total (pJ) — matches `EnergyBreakdown::total` to rounding.
+    pub fn total(&self) -> f64 {
+        self.access.iter().flatten().sum::<f64>() + self.comp + self.cntrl
+    }
+
+    pub fn merge(&mut self, other: &DetailedBreakdown) {
+        for (a, b) in self.access.iter_mut().flatten().zip(other.access.iter().flatten()) {
+            *a += b;
+        }
+        self.comp += other.comp;
+        self.cntrl += other.cntrl;
+    }
+
+    /// Render as the paper-style table (values in µJ).
+    pub fn table(&self) -> String {
+        let mut s = String::from(
+            "level     ifmap    filter     psum     ofmap    (µJ)\n",
+        );
+        for level in MEM_LEVELS {
+            s.push_str(&format!("{:<8}", format!("{level:?}")));
+            for kind in DATA_KINDS {
+                s.push_str(&format!(" {:>8.2}", self.get(level, kind) * 1e-6));
+            }
+            s.push('\n');
+        }
+        s.push_str(&format!(
+            "MAC {:>8.2} µJ   control {:>8.2} µJ   total {:>8.2} µJ\n",
+            self.comp * 1e-6,
+            self.cntrl * 1e-6,
+            self.total() * 1e-6
+        ));
+        s
+    }
+}
+
+fn level_idx(l: MemLevel) -> usize {
+    match l {
+        MemLevel::Dram => 0,
+        MemLevel::Glb => 1,
+        MemLevel::InterPe => 2,
+        MemLevel::Rf => 3,
+    }
+}
+
+fn kind_idx(k: DataKind) -> usize {
+    match k {
+        DataKind::Ifmap => 0,
+        DataKind::Filter => 1,
+        DataKind::Psum => 2,
+        DataKind::Ofmap => 3,
+    }
+}
+
+/// Detailed per-datatype energy of one conv (same accounting as
+/// `energy::conv_energy_with`, split by (level, kind)).
+#[allow(clippy::too_many_arguments)]
+pub fn conv_detail(
+    shape: &ConvShape,
+    sch: &Schedule,
+    hw: &HwConfig,
+    tech: &TechParams,
+    clock: &ClockParams,
+    sparsity_in: f64,
+    sparsity_out: f64,
+    first_layer: bool,
+) -> DetailedBreakdown {
+    let delta = rlc_delta(hw.b_w);
+    let nz_in = 1.0 - sparsity_in;
+    let rlc_in = if first_layer { 1.0 } else { nz_in * (1.0 + delta) };
+    let rlc_out = (1.0 - sparsity_out) * (1.0 + delta);
+
+    let n = sch.n as f64;
+    let i_pass = n * (sch.x_i * sch.y_i * sch.z_i) as f64;
+    let p_pass = n * (sch.x_o * sch.y_o) as f64 * sch.f_i as f64;
+    let f_pass = (sch.f_i * shape.r * shape.s * sch.z_i) as f64;
+    let macs_pass = p_pass * (shape.r * shape.s * sch.z_i) as f64;
+
+    let passes_y = sch.passes_y() as f64;
+    let passes_z = sch.passes_z(shape.c) as f64;
+    let iters = (ceil_div(shape.g as u64, sch.x_o as u64)
+        * ceil_div(shape.e as u64, sch.yy_o as u64)
+        * ceil_div(shape.f as u64, sch.f_i as u64)) as f64;
+    let rep = passes_z * iters / n; // per-image inner repetitions
+
+    let mut d = DetailedBreakdown::default();
+    use DataKind::*;
+    use MemLevel::*;
+
+    // DRAM: ifmap reads (RLC unless first layer), filter loads, ofmap write.
+    d.add_at(Dram, Ifmap, tech.e_dram * i_pass * rlc_in * passes_y * rep);
+    d.add_at(Dram, Filter, tech.e_dram * f_pass * rep);
+    let ofmap_region = n * (sch.x_o * sch.yy_o * sch.f_i) as f64;
+    d.add_at(Dram, Ofmap, tech.e_dram * ofmap_region * rlc_out * iters / n);
+
+    // GLB: ifmap staging + psum read/write.
+    d.add_at(Glb, Ifmap, tech.e_glb * i_pass * passes_y * rep);
+    d.add_at(Glb, Psum, tech.e_glb * 2.0 * p_pass * passes_y * rep);
+
+    // Inter-PE: psum accumulation across the R rows of a set.
+    d.add_at(
+        InterPe,
+        Psum,
+        tech.e_inter_pe * p_pass * (shape.r.saturating_sub(1)) as f64 * passes_y * rep,
+    );
+
+    // RF: per-MAC operand traffic — 1 ifmap read always; filter read and
+    // psum read+write only for nonzero ifmap values (zero-skipping).
+    let rf = tech.e_rf * macs_pass * passes_y * rep;
+    d.add_at(Rf, Ifmap, rf);
+    d.add_at(Rf, Filter, rf * nz_in);
+    d.add_at(Rf, Psum, rf * 2.0 * nz_in);
+
+    // Compute + control (same as the scalar model).
+    let macs = shape.macs() as f64;
+    d.comp = macs * nz_in * tech.e_mac;
+    let latency_s = macs / hw.throughput_macs;
+    let cntrl_clk = clock_power(clock, hw) * latency_s * 1e12;
+    let on_chip = d.level_total(Glb) + d.level_total(InterPe) + d.level_total(Rf);
+    d.cntrl = cntrl_clk + clock.other_cntrl_frac * (d.comp + on_chip + cntrl_clk);
+    d
+}
+
+/// Detailed breakdown of one partition-candidate layer.
+pub fn layer_detail(
+    layer: &Layer,
+    prev_out_elems: u64,
+    sparsity_in: f64,
+    first_conv: bool,
+    hw: &HwConfig,
+    tech: &TechParams,
+    clock: &ClockParams,
+) -> DetailedBreakdown {
+    match layer.kind {
+        LayerKind::Pool | LayerKind::Gap => {
+            let delta = rlc_delta(hw.b_w);
+            let (i, o) = (prev_out_elems as f64, layer.out_elems() as f64);
+            let mut d = DetailedBreakdown::default();
+            d.add_at(
+                MemLevel::Dram,
+                DataKind::Ifmap,
+                tech.e_dram * i * (1.0 - sparsity_in) * (1.0 + delta),
+            );
+            d.add_at(
+                MemLevel::Dram,
+                DataKind::Ofmap,
+                tech.e_dram * o * (1.0 - layer.sparsity_mu) * (1.0 + delta),
+            );
+            d.add_at(MemLevel::Glb, DataKind::Ifmap, tech.e_glb * i);
+            d.add_at(MemLevel::Glb, DataKind::Ofmap, tech.e_glb * o);
+            d.add_at(MemLevel::Rf, DataKind::Ifmap, tech.e_rf * i);
+            d.comp = i * tech.e_mac * 0.1;
+            let latency_s = i / hw.throughput_macs;
+            let cntrl_clk = clock_power(clock, hw) * latency_s * 1e12;
+            let on_chip = d.level_total(MemLevel::Glb) + d.level_total(MemLevel::Rf);
+            d.cntrl = cntrl_clk + clock.other_cntrl_frac * (d.comp + on_chip + cntrl_clk);
+            d
+        }
+        _ => {
+            let mut sum = DetailedBreakdown::default();
+            for shape in &layer.convs {
+                let sch = schedule(shape, hw);
+                sum.merge(&conv_detail(
+                    shape,
+                    &sch,
+                    hw,
+                    tech,
+                    clock,
+                    sparsity_in,
+                    layer.sparsity_mu,
+                    first_conv,
+                ));
+            }
+            sum
+        }
+    }
+}
+
+/// Whole-network detailed breakdown (per layer).
+pub fn network_detail(
+    net: &Network,
+    hw: &HwConfig,
+    tech: &TechParams,
+    clock: &ClockParams,
+) -> Vec<DetailedBreakdown> {
+    let mut out = Vec::with_capacity(net.layers.len());
+    let mut sparsity_in = 0.0;
+    let mut prev = (net.input.0 * net.input.1 * net.input.2) as u64;
+    let mut first = true;
+    for layer in &net.layers {
+        out.push(layer_detail(layer, prev, sparsity_in, first, hw, tech, clock));
+        if !layer.convs.is_empty() {
+            first = false;
+        }
+        sparsity_in = layer.sparsity_mu;
+        prev = layer.out_elems();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::alexnet;
+    use crate::cnnergy::CnnErgy;
+
+    fn detail_sum(model: &CnnErgy) -> (f64, f64) {
+        let net = alexnet();
+        let details = network_detail(&net, &model.hw, &model.tech, &model.clock);
+        let detailed: f64 = details.iter().map(|d| d.total()).sum();
+        let scalar: f64 = model
+            .network_breakdowns(&net)
+            .iter()
+            .map(|b| b.total())
+            .sum();
+        (detailed, scalar)
+    }
+
+    #[test]
+    fn detail_matches_scalar_model() {
+        // The (level x kind) matrix must sum to the scalar EnergyBreakdown
+        // — it is the same accounting, just split.
+        for model in [CnnErgy::inference_8bit(), CnnErgy::eyeriss_16bit()] {
+            let (detailed, scalar) = detail_sum(&model);
+            let rel = (detailed - scalar).abs() / scalar;
+            assert!(rel < 1e-9, "detail {detailed:.6e} vs scalar {scalar:.6e}");
+        }
+    }
+
+    #[test]
+    fn dram_dominates_memory_energy() {
+        // Eyeriss's published hierarchy: DRAM is by far the costliest level.
+        let model = CnnErgy::inference_8bit();
+        let net = alexnet();
+        let mut total = DetailedBreakdown::default();
+        for d in network_detail(&net, &model.hw, &model.tech, &model.clock) {
+            total.merge(&d);
+        }
+        assert!(total.level_total(MemLevel::Dram) > total.level_total(MemLevel::Glb));
+        // Filters touch DRAM (weight loads) but never the GLB in this
+        // dataflow (they live in the PE filter RFs).
+        assert!(total.get(MemLevel::Dram, DataKind::Filter) > 0.0);
+        assert_eq!(total.get(MemLevel::Glb, DataKind::Filter), 0.0);
+        // Psums never touch DRAM (reduced on-chip before writeback).
+        assert_eq!(total.get(MemLevel::Dram, DataKind::Psum), 0.0);
+    }
+
+    #[test]
+    fn fc_layers_are_filter_dram_bound() {
+        // The paper's AlexNet story: FC weight loads dominate deep-layer
+        // energy once batching amortization runs out.
+        let model = CnnErgy::inference_8bit();
+        let net = alexnet();
+        let details = network_detail(&net, &model.hw, &model.tech, &model.clock);
+        let fc6 = &details[net.layer_index("FC6").unwrap()];
+        assert!(
+            fc6.get(MemLevel::Dram, DataKind::Filter) > 0.5 * fc6.total(),
+            "FC6 filter-DRAM share: {:.2}",
+            fc6.get(MemLevel::Dram, DataKind::Filter) / fc6.total()
+        );
+    }
+
+    #[test]
+    fn table_renders() {
+        let model = CnnErgy::inference_8bit();
+        let net = alexnet();
+        let d = &network_detail(&net, &model.hw, &model.tech, &model.clock)[0];
+        let t = d.table();
+        assert!(t.contains("Dram") && t.contains("total"));
+    }
+}

@@ -1,0 +1,353 @@
+//! Per-layer energy computation (paper §IV-D, Algorithm 1).
+//!
+//! Consumes the scheduling parameters from [`super::scheduling`], the layer
+//! shape (Table I) and the technology parameters (Table III) and produces an
+//! [`EnergyBreakdown`]: MAC energy (eq. 19), hierarchical data-access energy
+//! (eqs. 13–18), and control energy (eq. 20, via [`super::clock`]).
+//!
+//! Sparsity handling (§IV-D-2): all DRAM traffic except the first layer's
+//! ifmap is run-length-compressed, and for zero-valued ifmap elements the
+//! MAC plus the associated filter/psum RF accesses are skipped.
+
+use super::clock::{clock_power, ClockParams};
+use super::scheduling::{schedule, HwConfig, Schedule};
+use super::tech::TechParams;
+use crate::cnn::{ConvShape, Layer, LayerKind};
+use crate::compress::rlc::rlc_delta;
+use crate::util::ceil_div;
+
+/// Energy components of one layer, in picojoules (latency in seconds).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    /// MAC computation energy (eq. 19).
+    pub comp: f64,
+    /// RF-level data access (part of eq. 16).
+    pub rf: f64,
+    /// Inter-PE psum accumulation transfers.
+    pub inter_pe: f64,
+    /// GLB SRAM access.
+    pub glb: f64,
+    /// Off-chip DRAM access.
+    pub dram: f64,
+    /// Clock-network energy (eq. 20, first term).
+    pub cntrl_clk: f64,
+    /// Other control energy (eq. 20, `E_other-Cntrl`).
+    pub cntrl_other: f64,
+    /// Processing latency, seconds (`#MACs / Throughput`).
+    pub latency_s: f64,
+}
+
+impl EnergyBreakdown {
+    /// On-chip data-access energy (eq. 4, first term).
+    pub fn on_chip_data(&self) -> f64 {
+        self.rf + self.inter_pe + self.glb
+    }
+
+    /// Total data-access energy (eq. 4).
+    pub fn data(&self) -> f64 {
+        self.on_chip_data() + self.dram
+    }
+
+    /// Control energy (eq. 20).
+    pub fn cntrl(&self) -> f64 {
+        self.cntrl_clk + self.cntrl_other
+    }
+
+    /// `E_Layer` (eq. 3), pJ.
+    pub fn total(&self) -> f64 {
+        self.comp + self.data() + self.cntrl()
+    }
+
+    /// `E_Layer` without control — the quantity EyTool reports (paper §V).
+    pub fn total_no_cntrl(&self) -> f64 {
+        self.comp + self.data()
+    }
+
+    fn add(&mut self, other: &EnergyBreakdown) {
+        self.comp += other.comp;
+        self.rf += other.rf;
+        self.inter_pe += other.inter_pe;
+        self.glb += other.glb;
+        self.dram += other.dram;
+        self.cntrl_clk += other.cntrl_clk;
+        self.cntrl_other += other.cntrl_other;
+        self.latency_s += other.latency_s;
+    }
+}
+
+/// Inputs describing the data statistics around one conv.
+#[derive(Clone, Copy, Debug)]
+pub struct ConvContext {
+    /// Sparsity (zero fraction) of the ifmap feeding this conv.
+    pub sparsity_in: f64,
+    /// Sparsity of the ofmap it produces (for the RLC DRAM write).
+    pub sparsity_out: f64,
+    /// First Conv layer of the network: its ifmap (the decoded image) is
+    /// read from DRAM uncompressed (paper §IV-D-2).
+    pub first_layer: bool,
+}
+
+/// Energy of a single convolution, per image (Algorithm 1).
+///
+/// `glb_energy` permits a CACTI-rescaled GLB access cost for design-space
+/// exploration (Fig. 14(c)); pass `tech.e_glb` for the paper's default.
+pub fn conv_energy_with(
+    shape: &ConvShape,
+    sch: &Schedule,
+    hw: &HwConfig,
+    tech: &TechParams,
+    clock: &ClockParams,
+    ctx: &ConvContext,
+    glb_energy: f64,
+) -> EnergyBreakdown {
+    let delta = rlc_delta(hw.b_w);
+    let nz_in = 1.0 - ctx.sparsity_in;
+    let rlc_in = if ctx.first_layer {
+        1.0
+    } else {
+        nz_in * (1.0 + delta)
+    };
+    let rlc_out = (1.0 - ctx.sparsity_out) * (1.0 + delta);
+
+    let n = sch.n as f64;
+    // Lines 3-5: per-pass data volumes (eqs. 13-15), elements.
+    let i_pass = n * (sch.x_i * sch.y_i * sch.z_i) as f64;
+    let p_pass = n * (sch.x_o * sch.y_o) as f64 * sch.f_i as f64;
+    let f_pass = (sch.f_i * shape.r * shape.s * sch.z_i) as f64;
+
+    // MACs in one pass, and the RF traffic they imply. Each MAC touches 4
+    // RF operands (ifmap read, filter read, psum read+write); for zero
+    // ifmap values the MAC and the filter/psum accesses are skipped, the
+    // ifmap read itself still happens (it is what detects the zero).
+    let macs_pass = p_pass * (shape.r * shape.s * sch.z_i) as f64;
+    let rf_mac = macs_pass * (1.0 + 3.0 * nz_in);
+
+    // Line 6: pass counts.
+    let passes_y = sch.passes_y() as f64;
+    let passes_z = sch.passes_z(shape.c) as f64;
+
+    // Line 7 (eq. 16): energy to process X_i x Y_i x z_i over f_i filters,
+    // N images, split by memory level.
+    let dram_if = tech.e_dram * i_pass * rlc_in * passes_y + tech.e_dram * f_pass;
+    let glb_e = (glb_energy * i_pass + glb_energy * 2.0 * p_pass) * passes_y;
+    let rf_e = tech.e_rf * rf_mac * passes_y;
+    // Psum accumulation across the R PEs of a set rides the inter-PE links.
+    let ipe_e = tech.e_inter_pe * p_pass * (shape.r.saturating_sub(1)) as f64 * passes_y;
+
+    // Line 8 (eq. 17): cover all C channels, then write the ofmap region.
+    let ofmap_region = n * (sch.x_o * sch.yy_o * sch.f_i) as f64;
+    let dram_of = tech.e_dram * ofmap_region * rlc_out;
+
+    // Line 9 (eq. 18): iterate over the whole ofmap volume.
+    let iters = (ceil_div(shape.g as u64, sch.x_o as u64)
+        * ceil_div(shape.e as u64, sch.yy_o as u64)
+        * ceil_div(shape.f as u64, sch.f_i as u64)) as f64;
+
+    // Totals for N images; normalize to per-image at the end.
+    let dram = (dram_if * passes_z + dram_of) * iters / n;
+    let glb = glb_e * passes_z * iters / n;
+    let rf = rf_e * passes_z * iters / n;
+    let inter_pe = ipe_e * passes_z * iters / n;
+
+    // Line 10 (eq. 19): MAC energy over the layer, zero-skipped.
+    let macs = shape.macs() as f64;
+    let comp = macs * nz_in * tech.e_mac;
+
+    // Line 11 (eq. 20): control. Cycles are not skipped on zeros (zero
+    // gating saves switching, not time), so latency uses raw MACs.
+    let latency_s = macs / hw.throughput_macs;
+    let p_clk = clock_power(clock, hw);
+    let cntrl_clk = p_clk * latency_s * 1e12; // W·s -> pJ
+    let on_chip = rf + inter_pe + glb;
+    let cntrl_other = clock.other_cntrl_frac * (comp + on_chip + cntrl_clk);
+
+    EnergyBreakdown {
+        comp,
+        rf,
+        inter_pe,
+        glb,
+        dram,
+        cntrl_clk,
+        cntrl_other,
+        latency_s,
+    }
+}
+
+/// Energy of a pool / global-average-pool layer.
+///
+/// The paper's model focuses on Conv/FC layers; pooling contributes data
+/// movement (RLC DRAM read/write + GLB staging) and one comparison/add per
+/// input element, at ~1/10 the MAC cost. Documented in DESIGN.md §5.
+pub fn pool_energy(
+    in_elems: u64,
+    out_elems: u64,
+    hw: &HwConfig,
+    tech: &TechParams,
+    clock: &ClockParams,
+    sparsity_in: f64,
+    sparsity_out: f64,
+) -> EnergyBreakdown {
+    let delta = rlc_delta(hw.b_w);
+    let rlc_in = (1.0 - sparsity_in) * (1.0 + delta);
+    let rlc_out = (1.0 - sparsity_out) * (1.0 + delta);
+    let (i, o) = (in_elems as f64, out_elems as f64);
+
+    let dram = tech.e_dram * (i * rlc_in + o * rlc_out);
+    let glb = tech.e_glb * (i + o);
+    let rf = tech.e_rf * i;
+    let comp = i * tech.e_mac * 0.1;
+    let latency_s = i / hw.throughput_macs;
+    let cntrl_clk = clock_power(clock, hw) * latency_s * 1e12;
+    let cntrl_other = clock.other_cntrl_frac * (comp + rf + glb + cntrl_clk);
+
+    EnergyBreakdown {
+        comp,
+        rf,
+        inter_pe: 0.0,
+        glb,
+        dram,
+        cntrl_clk,
+        cntrl_other,
+        latency_s,
+    }
+}
+
+/// Energy of one full partition-candidate layer (all constituent convs).
+///
+/// `sparsity_in` is the sparsity of the layer's input activations (the
+/// previous layer's output sparsity; 0 for the decoded input image).
+pub fn layer_energy(
+    layer: &Layer,
+    prev_out_elems: u64,
+    sparsity_in: f64,
+    first_conv: bool,
+    hw: &HwConfig,
+    tech: &TechParams,
+    clock: &ClockParams,
+    glb_energy: f64,
+) -> EnergyBreakdown {
+    match layer.kind {
+        LayerKind::Pool | LayerKind::Gap => pool_energy(
+            prev_out_elems,
+            layer.out_elems(),
+            hw,
+            tech,
+            clock,
+            sparsity_in,
+            layer.sparsity_mu,
+        ),
+        _ => {
+            let mut sum = EnergyBreakdown::default();
+            for shape in &layer.convs {
+                let sch = schedule(shape, hw);
+                let ctx = ConvContext {
+                    sparsity_in,
+                    sparsity_out: layer.sparsity_mu,
+                    first_layer: first_conv,
+                };
+                let e = conv_energy_with(shape, &sch, hw, tech, clock, &ctx, glb_energy);
+                sum.add(&e);
+            }
+            sum
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::{alexnet, ConvShape};
+
+    fn setup() -> (HwConfig, TechParams, ClockParams) {
+        let hw = HwConfig::eyeriss();
+        let tech = TechParams::eyeriss_65nm_16bit();
+        let clock = ClockParams::eyeriss(&hw);
+        (hw, tech, clock)
+    }
+
+    fn conv_e(shape: &ConvShape, sp_in: f64, first: bool) -> EnergyBreakdown {
+        let (hw, tech, clock) = setup();
+        let sch = schedule(shape, &hw);
+        let ctx = ConvContext {
+            sparsity_in: sp_in,
+            sparsity_out: 0.5,
+            first_layer: first,
+        };
+        conv_energy_with(shape, &sch, &hw, &tech, &clock, &ctx, tech.e_glb)
+    }
+
+    #[test]
+    fn alexnet_c1_magnitude() {
+        // AlexNet C1 at 16 bits: Eyeriss-scale energies are O(mJ)-ish for
+        // the whole net; a single conv layer must land in 0.1-10 mJ.
+        let e = conv_e(&ConvShape::conv(227, 227, 11, 3, 96, 4), 0.0, true);
+        let mj = e.total() * 1e-9; // pJ -> mJ
+        assert!((0.05..10.0).contains(&mj), "C1 total {mj} mJ");
+        // MAC energy alone: 105.4M x 0.95*1.78 pJ ≈ 0.18 mJ.
+        assert!((e.comp * 1e-9 - 0.178).abs() < 0.02, "comp {} mJ", e.comp * 1e-9);
+    }
+
+    #[test]
+    fn sparsity_reduces_energy() {
+        let shape = ConvShape::conv(15, 15, 3, 256, 384, 1);
+        let dense = conv_e(&shape, 0.0, false);
+        let sparse = conv_e(&shape, 0.7, false);
+        assert!(sparse.total() < dense.total());
+        assert!(sparse.comp < dense.comp * 0.35);
+        assert!(sparse.dram < dense.dram); // RLC ifmap reads shrink
+    }
+
+    #[test]
+    fn first_layer_ifmap_uncompressed() {
+        let shape = ConvShape::conv(227, 227, 11, 3, 96, 4);
+        let first = conv_e(&shape, 0.0, true);
+        let not_first = conv_e(&shape, 0.0, false);
+        // With sparsity 0, RLC *adds* delta overhead, so first-layer
+        // (uncompressed) DRAM ifmap traffic is lower.
+        assert!(first.dram < not_first.dram);
+    }
+
+    #[test]
+    fn control_share_matches_eyeriss_band() {
+        // Paper: clock is ~33-45% of accelerator (non-DRAM) power. Check the
+        // AlexNet conv layers as a whole.
+        let (hw, tech, clock) = setup();
+        let net = alexnet();
+        let mut cntrl = 0.0;
+        let mut chip = 0.0;
+        let mut sp_in = 0.0;
+        let mut first = true;
+        let mut prev = (net.input.0 * net.input.1 * net.input.2) as u64;
+        for layer in net.layers.iter().filter(|l| l.kind == LayerKind::Conv) {
+            let e = layer_energy(layer, prev, sp_in, first, &hw, &tech, &clock, tech.e_glb);
+            cntrl += e.cntrl();
+            chip += e.total() - e.dram; // chip power excludes DRAM
+            sp_in = layer.sparsity_mu;
+            first = false;
+            prev = layer.out_elems();
+        }
+        let share = cntrl / chip;
+        assert!(
+            (0.25..0.55).contains(&share),
+            "control share {share} out of band"
+        );
+    }
+
+    #[test]
+    fn pool_energy_small_but_positive() {
+        let (hw, tech, clock) = setup();
+        let e = pool_energy(55 * 55 * 96, 27 * 27 * 96, &hw, &tech, &clock, 0.5, 0.4);
+        assert!(e.total() > 0.0);
+        // A pool layer must be far cheaper than the conv that feeds it.
+        let c1 = conv_e(&ConvShape::conv(227, 227, 11, 3, 96, 4), 0.0, true);
+        assert!(e.total() < c1.total() * 0.5);
+    }
+
+    #[test]
+    fn breakdown_components_sum() {
+        let e = conv_e(&ConvShape::conv(31, 31, 5, 48, 256, 1), 0.4, false);
+        let total = e.comp + e.rf + e.inter_pe + e.glb + e.dram + e.cntrl_clk + e.cntrl_other;
+        assert!((total - e.total()).abs() < total * 1e-12);
+        assert!(e.total_no_cntrl() < e.total());
+    }
+}

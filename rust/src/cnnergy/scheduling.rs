@@ -1,0 +1,314 @@
+//! Automated computation-scheduling mapper (paper §IV-C, Fig. 7).
+//!
+//! Given a CNN layer shape (Table I) and the accelerator hardware parameters
+//! (Table II), derive the computation-scheduling parameters that CNNergy's
+//! energy algorithm consumes: how many filters (`f_i`) and ifmap channels
+//! (`z_i`) are processed per pass, the per-pass spatial window
+//! (`x_i`/`y_i` → `x_o`/`y_o`), the pre-writeback window (`yy_o` ≙ paper
+//! `Y_o`, `x_o` columns × `yy_o` rows of ofmap), and the batch factor `N`.
+//!
+//! Priority rules (paper §IV-C): (i) maximize ifmap channels per pass so
+//! psums reduce as early as possible; (ii) prefer filter reuse / psum
+//! reduction over ifmap reuse — which pins the X→Y→Z pass order of Fig. 5.
+
+use crate::cnn::ConvShape;
+use crate::util::ceil_div;
+
+/// Accelerator hardware parameters (paper Table II, bottom half).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HwConfig {
+    /// PE array rows (J) and columns (K).
+    pub j: usize,
+    pub k: usize,
+    /// Per-PE register-file capacities, in elements: filter / ifmap / psum.
+    pub f_s: usize,
+    pub i_s: usize,
+    pub p_s: usize,
+    /// Global buffer size in bytes.
+    pub glb_bytes: usize,
+    /// Data element width in bits.
+    pub b_w: u32,
+    /// Effective client MAC throughput (MACs/s) — used for latency (eq. 20)
+    /// and the delay model (§VI-B).
+    pub throughput_macs: f64,
+    /// Clock period in seconds.
+    pub t_clk: f64,
+    /// Maximum images batched together (caps eq. 11's `N`): the number of
+    /// frames actually processed jointly — 4 for Eyeriss's AlexNet runs.
+    pub batch: usize,
+}
+
+impl HwConfig {
+    /// The Eyeriss configuration the paper validates against (§III-B, §V):
+    /// 12×14 PEs; RFs of 224 (filter), 12 (ifmap), 24 (psum) 16-bit words;
+    /// 108 kB GLB; 200 MHz. Throughput from [23]: AlexNet conv layers at
+    /// 34.7 fps ≙ ~23 G MACs/s effective.
+    pub fn eyeriss() -> Self {
+        HwConfig {
+            j: 12,
+            k: 14,
+            f_s: 224,
+            i_s: 12,
+            p_s: 24,
+            glb_bytes: 108 * 1024,
+            b_w: 16,
+            throughput_macs: 23.1e9,
+            t_clk: 1.0 / 200.0e6,
+            batch: 4,
+        }
+    }
+
+    /// Eyeriss-shaped accelerator running the paper's 8-bit inference
+    /// (§VIII): same physical RF/GLB bytes, twice the elements per RF and
+    /// two 8-bit MACs per PE per cycle (state-of-the-art 8-bit datapaths
+    /// [1], [34] dual-issue narrow MACs).
+    pub fn eyeriss_8bit() -> Self {
+        let mut hw = Self::eyeriss();
+        hw.b_w = 8;
+        hw.f_s *= 2;
+        hw.i_s *= 2;
+        hw.p_s *= 2;
+        hw.throughput_macs *= 2.0;
+        hw
+    }
+
+    /// Bytes per data element.
+    pub fn elem_bytes(&self) -> f64 {
+        self.b_w as f64 / 8.0
+    }
+}
+
+/// Computation-scheduling parameters (paper Table II, top half).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Schedule {
+    /// #filters processed in a pass (paper `f_i`).
+    pub f_i: usize,
+    /// #ifmap/filter channels processed in a pass (paper `z_i`).
+    pub z_i: usize,
+    /// Ifmap rows per pass (paper `y_i`) and resulting ofmap rows (`y_o`).
+    pub y_i: usize,
+    pub y_o: usize,
+    /// Ifmap width per pass (paper `X_i`) and resulting ofmap width (`X_o`).
+    pub x_i: usize,
+    pub x_o: usize,
+    /// Ifmap/ofmap height processed before a DRAM writeback
+    /// (paper `Y_i`/`Y_o`; renamed to avoid clashing with `y_i`/`y_o`).
+    pub yy_i: usize,
+    pub yy_o: usize,
+    /// #images batched in the GLB (paper `N`).
+    pub n: usize,
+    /// #sets per pass (eq. 5) and #channels per set.
+    pub s_pass: usize,
+    pub c_set: usize,
+}
+
+impl Schedule {
+    /// GLB bytes held by one image's pass-ifmap (paper eq. 9).
+    pub fn ifmap_bytes(&self, hw: &HwConfig) -> f64 {
+        hw.elem_bytes() * (self.x_i * self.y_i * self.z_i) as f64
+    }
+
+    /// GLB bytes held by one image's irreducible psums (paper eq. 10).
+    pub fn psum_bytes(&self, hw: &HwConfig) -> f64 {
+        hw.elem_bytes() * (self.x_o * self.yy_o * self.f_i) as f64
+    }
+
+    /// Passes along Y before a writeback (paper `Y_o / y_o`).
+    pub fn passes_y(&self) -> u64 {
+        ceil_div(self.yy_o as u64, self.y_o as u64)
+    }
+
+    /// Passes along Z to cover all channels (paper `C / z_i`).
+    pub fn passes_z(&self, c: usize) -> u64 {
+        ceil_div(c as u64, self.z_i as u64)
+    }
+}
+
+/// Derive the scheduling parameters for one conv/FC shape (paper Fig. 7).
+pub fn schedule(shape: &ConvShape, hw: &HwConfig) -> Schedule {
+    let (r, s, u) = (shape.r, shape.s, shape.u);
+    let (c, f) = (shape.c, shape.f);
+    let (e, g_w) = (shape.e, shape.g);
+
+    // -- Step 1: y_o / y_i (eq. 6). A set spans R rows; y_o is bounded by
+    // the PE-array columns K.
+    let y_o = e.min(hw.k).max(1);
+    let y_i = (y_o - 1) * u + r;
+
+    // -- Step 2: z_i and f_i (eqs. 5, 7, 8).
+    let s_pass = (hw.j / r.min(hw.j)).max(1);
+    let c_set = (hw.i_s / s).max(1);
+    let mut z_i = (c_set * s_pass).min(c);
+    let mut f_i = (hw.f_s / hw.i_s).max(1);
+
+    // Exception rule: 1x1 filters (GoogleNet inception / SqueezeNet fire
+    // reduce layers) use a reduced z_i and correspondingly increased f_i —
+    // with R=S=1 a "row" is a single element, so filling the array with
+    // channels starves filter reuse (paper §IV-C-4, third bullet).
+    if r == 1 && s == 1 {
+        z_i = ceil_div(z_i as u64, 4) as usize;
+        f_i *= 4;
+    }
+
+    // Exception rule: C < z_i — process all channels, use the slack for
+    // more filters (paper §IV-C-4, second bullet).
+    if c < z_i {
+        let slack = (z_i / c).max(1);
+        z_i = c;
+        f_i *= slack;
+    }
+
+    // Exceptions F < f_i and P_s < f_i: reduce f_i.
+    f_i = f_i.min(f).min(hw.p_s).max(1);
+
+    // -- Step 3: X_i / Y_o / N under the GLB capacity (eqs. 9-12).
+    // Start from the full ifmap width and full ofmap height, shrinking the
+    // pre-writeback window until |ifmap| + |psum| fits (paper: "X_i and Y_o
+    // are reduced until the data fits into the GLB and N >= 1").
+    let mut x_o = g_w;
+    let mut yy_o = e;
+    let fits = |x_o: usize, yy_o: usize, f_i: usize| -> bool {
+        let x_i = (x_o - 1) * u + s;
+        let ifmap = hw.elem_bytes() * (x_i * y_i * z_i) as f64;
+        let psum = hw.elem_bytes() * (x_o * yy_o * f_i) as f64;
+        ifmap + psum <= hw.glb_bytes as f64
+    };
+    while !fits(x_o, yy_o, f_i) {
+        if yy_o > y_o {
+            // Shrink the pre-writeback height one pass-row at a time.
+            yy_o = yy_o.saturating_sub(y_o).max(y_o);
+        } else if x_o > 1 {
+            x_o = ceil_div(x_o as u64, 2) as usize;
+        } else if f_i > 1 {
+            // Exception rule Y_o < y_o (paper §IV-C-4, first bullet): never
+            // idle PE columns; shed filters instead.
+            f_i -= 1;
+        } else {
+            // Degenerate hardware (e.g. GLB smaller than one PE column's
+            // working set): proceed with the minimal schedule.
+            break;
+        }
+    }
+    let x_i = (x_o - 1) * u + s;
+    let yy_i = (yy_o - 1) * u + r;
+
+    let ifmap = hw.elem_bytes() * (x_i * y_i * z_i) as f64;
+    let psum = hw.elem_bytes() * (x_o * yy_o * f_i) as f64;
+    // Eq. 11, capped at the number of frames actually processed together.
+    let n = ((hw.glb_bytes as f64 / (ifmap + psum)) as usize)
+        .clamp(1, hw.batch.max(1));
+
+    Schedule {
+        f_i,
+        z_i,
+        y_i,
+        y_o,
+        x_i,
+        x_o,
+        yy_i,
+        yy_o,
+        n,
+        s_pass,
+        c_set,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::Network;
+
+    fn check_invariants(shape: &ConvShape, hw: &HwConfig, sch: &Schedule) {
+        // PE-array and RF bounds.
+        assert!(sch.y_o >= 1 && sch.y_o <= hw.k.min(shape.e), "y_o {sch:?}");
+        assert_eq!(sch.y_i, (sch.y_o - 1) * shape.u + shape.r);
+        assert!(sch.z_i >= 1 && sch.z_i <= shape.c, "z_i {sch:?}");
+        assert!(sch.f_i >= 1 && sch.f_i <= shape.f.min(hw.p_s), "f_i {sch:?}");
+        // Spatial windows within the layer.
+        assert!(sch.x_o >= 1 && sch.x_o <= shape.g);
+        assert!(sch.yy_o >= sch.y_o && sch.yy_o <= shape.e);
+        // GLB capacity (eq. 11) — allow the degenerate single-column escape.
+        if sch.x_o > 1 || sch.f_i > 1 || sch.yy_o > sch.y_o {
+            assert!(
+                sch.ifmap_bytes(hw) + sch.psum_bytes(hw) <= hw.glb_bytes as f64,
+                "GLB overflow: {sch:?}"
+            );
+        }
+        assert!(sch.n >= 1);
+    }
+
+    #[test]
+    fn alexnet_c1_schedule() {
+        let hw = HwConfig::eyeriss();
+        let shape = ConvShape::conv(227, 227, 11, 3, 96, 4);
+        let sch = schedule(&shape, &hw);
+        check_invariants(&shape, &hw, &sch);
+        // R=S=11 leaves room for only one filter row per ifmap RF (I_s=12),
+        // so a single channel is processed per pass (eq. 7).
+        assert_eq!(sch.z_i, 1);
+        assert_eq!(sch.s_pass, 1);
+        // y_o limited by PE columns.
+        assert_eq!(sch.y_o, 14);
+    }
+
+    #[test]
+    fn alexnet_fc6_schedule() {
+        let hw = HwConfig::eyeriss();
+        let shape = ConvShape::fc(6, 6, 256, 4096);
+        let sch = schedule(&shape, &hw);
+        check_invariants(&shape, &hw, &sch);
+        assert_eq!(sch.y_o, 1); // E = 1
+        assert_eq!(sch.x_o, 1);
+    }
+
+    #[test]
+    fn one_by_one_exception_raises_filters() {
+        let hw = HwConfig::eyeriss();
+        let sq = ConvShape::conv(56, 56, 1, 128, 16, 1); // SqueezeNet Fs3
+        let sch = schedule(&sq, &hw);
+        check_invariants(&sq, &hw, &sch);
+        // All 16 filters fit in one pass thanks to the 1x1 exception.
+        assert_eq!(sch.f_i, 16);
+    }
+
+    #[test]
+    fn all_paper_layers_satisfy_invariants() {
+        for hw in [HwConfig::eyeriss(), HwConfig::eyeriss_8bit()] {
+            for net in Network::paper_networks() {
+                for layer in &net.layers {
+                    for shape in &layer.convs {
+                        let sch = schedule(shape, &hw);
+                        check_invariants(shape, &hw, &sch);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_glb_still_produces_valid_schedule() {
+        // Failure injection: a GLB far too small for even one pass must not
+        // loop forever or panic; it degrades to the minimal schedule.
+        let mut hw = HwConfig::eyeriss();
+        hw.glb_bytes = 64;
+        let shape = ConvShape::conv(227, 227, 11, 3, 96, 4);
+        let sch = schedule(&shape, &hw);
+        assert!(sch.x_o >= 1 && sch.f_i >= 1 && sch.n >= 1);
+    }
+
+    #[test]
+    fn bigger_glb_never_shrinks_batching() {
+        let shape = ConvShape::conv(31, 31, 5, 48, 256, 1);
+        let small = {
+            let mut hw = HwConfig::eyeriss();
+            hw.glb_bytes = 32 * 1024;
+            schedule(&shape, &hw).n
+        };
+        let big = {
+            let mut hw = HwConfig::eyeriss();
+            hw.glb_bytes = 256 * 1024;
+            schedule(&shape, &hw).n
+        };
+        assert!(big >= small);
+    }
+}

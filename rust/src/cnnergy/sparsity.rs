@@ -1,0 +1,85 @@
+//! Sparsity statistics and RLC-compressed data volumes (paper §VI-A, §VII).
+//!
+//! The paper's key runtime observation (Fig. 10): for every intermediate
+//! layer, output sparsity is a property of the *network*, not the input
+//! image (σ an order of magnitude below μ), so per-layer `D_RLC` can be
+//! precomputed offline. Only the input layer's `Sparsity-In` (the JPEG
+//! coefficient sparsity) must be probed at runtime.
+
+use crate::cnn::Network;
+use crate::compress::rlc::rlc_delta;
+
+/// RLC-encoded bit volume (paper eq. 29).
+///
+/// `d_raw` is the raw output bit count (including zeros), `sparsity` the
+/// zero fraction, `delta` the per-bit RLC overhead on nonzero data.
+pub fn d_rlc_bits(d_raw: u64, sparsity: f64, delta: f64) -> f64 {
+    d_raw as f64 * (1.0 - sparsity) * (1.0 + delta)
+}
+
+/// Per-layer transmit volumes `D_RLC[1..=|L|]` in bits, at bit width `bw`,
+/// using the network's precomputed mean sparsities (Alg. 2 precomputation).
+pub fn layer_d_rlc_bits(net: &Network, bw: u32) -> Vec<f64> {
+    let delta = rlc_delta(bw);
+    net.layers
+        .iter()
+        .map(|l| d_rlc_bits(l.raw_out_bits(bw), l.sparsity_mu, delta))
+        .collect()
+}
+
+/// Input-layer transmit volume (Alg. 2 line 2): the JPEG-compressed image,
+/// modeled via eq. 29 with the runtime-probed `Sparsity-In`.
+pub fn input_d_rlc_bits(net: &Network, bw: u32, sparsity_in: f64) -> f64 {
+    d_rlc_bits(net.input_raw_bits(bw), sparsity_in, rlc_delta(bw))
+}
+
+/// Per-layer sparsity means and standard deviations (Fig. 10 series).
+pub fn sparsity_profile(net: &Network) -> Vec<(&'static str, f64, f64)> {
+    net.layers
+        .iter()
+        .map(|l| (l.name, l.sparsity_mu, l.sparsity_sigma))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::{alexnet, squeezenet_v11};
+
+    #[test]
+    fn d_rlc_formula() {
+        // 1000 bits, 80% sparse, delta 0.6 -> 1000*0.2*1.6 = 320 bits.
+        assert!((d_rlc_bits(1000, 0.8, 0.6) - 320.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn alexnet_volumes_shrink_deep_in_network() {
+        // Fig. 2(b): transmit volume at P3/FC layers is orders of magnitude
+        // below the input volume.
+        let net = alexnet();
+        let d = layer_d_rlc_bits(&net, 8);
+        let input = input_d_rlc_bits(&net, 8, 0.608); // median Sparsity-In
+        let fc8 = d[net.layer_index("FC8").unwrap()];
+        assert!(fc8 < input / 50.0);
+        // P2 transmit volume below the JPEG input (what makes P2 optimal).
+        let p2 = d[net.layer_index("P2").unwrap()];
+        assert!(p2 < input);
+    }
+
+    #[test]
+    fn sigma_an_order_below_mu() {
+        for net in [alexnet(), squeezenet_v11()] {
+            for (name, mu, sigma) in sparsity_profile(&net) {
+                assert!(sigma < mu / 2.0, "{}/{name}: σ {sigma} vs μ {mu}", net.name);
+            }
+        }
+    }
+
+    #[test]
+    fn higher_sparsity_in_cheapens_input_upload() {
+        let net = alexnet();
+        let lo = input_d_rlc_bits(&net, 8, 0.52);
+        let hi = input_d_rlc_bits(&net, 8, 0.69);
+        assert!(hi < lo);
+    }
+}

@@ -1,0 +1,145 @@
+//! Technology parameters (paper Table III) and bit-width scaling (§V, §VIII).
+//!
+//! The 16-bit MAC energy comes from 45 nm data (Horowitz [29]); memory access
+//! energies from the 65 nm Eyeriss characterization [28]. For comparison with
+//! 65 nm silicon the 45 nm MAC energy is scaled by
+//! `s = (65/45) · (V_DD,65 / V_DD,45)²` (paper §V). For the paper's 8-bit
+//! evaluation (§VIII) multiplication energy scales quadratically with bit
+//! width and addition/memory access linearly.
+
+/// Energies in picojoules per operation/element-access.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TechParams {
+    /// Bit width each parameter set is quoted at.
+    pub bits: u32,
+    /// Energy per MAC (multiply + accumulate), pJ.
+    pub e_mac: f64,
+    /// Register-file access within a PE, pJ/element.
+    pub e_rf: f64,
+    /// Inter-PE transfer, pJ/element.
+    pub e_inter_pe: f64,
+    /// Global buffer (GLB) SRAM access, pJ/element.
+    pub e_glb: f64,
+    /// Off-chip DRAM access, pJ/element.
+    pub e_dram: f64,
+}
+
+/// 65 nm supply voltage (Eyeriss).
+pub const VDD_65: f64 = 1.0;
+/// 45 nm supply voltage (Horowitz reference point).
+pub const VDD_45: f64 = 0.9;
+
+/// The 45→65 nm scaling factor `s` of paper §V.
+pub fn scale_45_to_65() -> f64 {
+    (65.0 / 45.0) * (VDD_65 / VDD_45).powi(2)
+}
+
+/// 16-bit multiply share of the 0.95 pJ MAC (Horowitz-style split:
+/// multiplication dominates; the accumulate add is ~0.05 pJ).
+const E_MULT_16: f64 = 0.90;
+const E_ADD_16: f64 = 0.05;
+
+impl TechParams {
+    /// Paper Table III, as printed: 16-bit, MAC at 45 nm, memory at 65 nm.
+    pub fn table_iii_16bit() -> Self {
+        TechParams {
+            bits: 16,
+            e_mac: 0.95,
+            e_rf: 1.69,
+            e_inter_pe: 3.39,
+            e_glb: 10.17,
+            e_dram: 338.82,
+        }
+    }
+
+    /// Table III with the MAC scaled to 65 nm by `s` — the parameter set used
+    /// when validating against Eyeriss silicon (paper §V, Fig. 9).
+    pub fn eyeriss_65nm_16bit() -> Self {
+        let mut p = Self::table_iii_16bit();
+        p.e_mac *= scale_45_to_65();
+        p
+    }
+
+    /// The paper's 8-bit evaluation parameters (§VIII): multiplication scaled
+    /// quadratically, addition and memory access linearly.
+    pub fn inference_8bit() -> Self {
+        let base = Self::table_iii_16bit();
+        TechParams {
+            bits: 8,
+            e_mac: E_MULT_16 / 4.0 + E_ADD_16 / 2.0,
+            e_rf: base.e_rf / 2.0,
+            e_inter_pe: base.e_inter_pe / 2.0,
+            e_glb: base.e_glb / 2.0,
+            e_dram: base.e_dram / 2.0,
+        }
+    }
+
+    /// Rescale to an arbitrary bit width from the 16-bit reference
+    /// (quadratic multiply, linear add/memory) — used for design-space
+    /// exploration beyond the paper's two operating points.
+    pub fn at_bits(bits: u32) -> Self {
+        let base = Self::table_iii_16bit();
+        let lin = bits as f64 / 16.0;
+        TechParams {
+            bits,
+            e_mac: E_MULT_16 * lin * lin + E_ADD_16 * lin,
+            e_rf: base.e_rf * lin,
+            e_inter_pe: base.e_inter_pe * lin,
+            e_glb: base.e_glb * lin,
+            e_dram: base.e_dram * lin,
+        }
+    }
+
+    /// GLB access energy rescaled for a non-default buffer size, CACTI-style:
+    /// SRAM access energy grows roughly with the square root of capacity
+    /// (paper Fig. 14(c) extracts the trend from CACTI [39]).
+    pub fn glb_energy_at_size(&self, glb_bytes: usize, ref_bytes: usize) -> f64 {
+        self.e_glb * (glb_bytes as f64 / ref_bytes as f64).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_iii_as_printed() {
+        let p = TechParams::table_iii_16bit();
+        assert_eq!(p.e_mac, 0.95);
+        assert_eq!(p.e_rf, 1.69);
+        assert_eq!(p.e_inter_pe, 3.39);
+        assert_eq!(p.e_glb, 10.17);
+        assert_eq!(p.e_dram, 338.82);
+        // Eyeriss's published DRAM:RF cost ratio of ~200x.
+        assert!((p.e_dram / p.e_rf - 200.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn scaling_factor() {
+        // s = (65/45) * (1.0/0.9)^2 ≈ 1.783
+        assert!((scale_45_to_65() - 1.7833).abs() < 1e-3);
+        let p = TechParams::eyeriss_65nm_16bit();
+        assert!((p.e_mac - 0.95 * 1.7833).abs() < 1e-3);
+    }
+
+    #[test]
+    fn eight_bit_scaling() {
+        let p = TechParams::inference_8bit();
+        // quadratic multiply: 0.90/4 + linear add: 0.05/2.
+        assert!((p.e_mac - 0.25).abs() < 1e-9);
+        assert!((p.e_dram - 169.41).abs() < 1e-9);
+        assert!((p.e_glb - 5.085).abs() < 1e-9);
+        // 16-bit reconstruction through at_bits is the identity.
+        let q = TechParams::at_bits(16);
+        assert!((q.e_mac - 0.95).abs() < 1e-9);
+        assert!((q.e_rf - 1.69).abs() < 1e-9);
+    }
+
+    #[test]
+    fn glb_size_scaling_monotone() {
+        let p = TechParams::table_iii_16bit();
+        let small = p.glb_energy_at_size(32 * 1024, 108 * 1024);
+        let big = p.glb_energy_at_size(512 * 1024, 108 * 1024);
+        assert!(small < p.e_glb && p.e_glb < big);
+    }
+}

@@ -1,0 +1,174 @@
+//! Validation fixtures and reference models (paper §V, Fig. 9).
+//!
+//! The paper validates CNNergy against three references:
+//!
+//! * **EyMap** — the Eyeriss energy model evaluated with the *ad hoc*,
+//!   hand-tuned per-layer mapping parameters published in [23] (AlexNet
+//!   Conv1–5 only). Here: CNNergy's energy algorithm driven by those fixed
+//!   `(f_i, z_i)` choices instead of our automated mapper.
+//! * **EyTool** — the MIT energy-estimation web tool, which excludes
+//!   `E_Cntrl`; approximated by [`EnergyBreakdown::total_no_cntrl`].
+//! * **EyChip** — 65 nm silicon: 278 mW at 34.7 fps on the AlexNet conv
+//!   layers [23] ≈ 8.0 mJ/image chip energy (excludes DRAM).
+//!
+//! The published mapping parameters are digitized fixtures (DESIGN.md §5);
+//! tolerances are correspondingly loose.
+
+use super::energy::{conv_energy_with, ConvContext, EnergyBreakdown};
+use super::scheduling::{schedule, HwConfig, Schedule};
+use super::{ClockParams, CnnErgy};
+use crate::cnn::{alexnet, Network};
+
+/// Eyeriss measured chip power (W) and frame rate (fps) on AlexNet conv
+/// layers [23] — the EyChip anchor.
+pub const EYERISS_CHIP_POWER_W: f64 = 0.278;
+pub const EYERISS_CHIP_FPS: f64 = 34.7;
+
+/// EyChip per-image conv energy in pJ (excludes DRAM).
+pub fn eychip_alexnet_conv_pj() -> f64 {
+    EYERISS_CHIP_POWER_W / EYERISS_CHIP_FPS * 1e12
+}
+
+/// Published ad-hoc mapping (f_i, z_i) for AlexNet Conv1–5, adapted from
+/// the row-stationary mappings of [23]: 16 ofmap channels per pass, channel
+/// depth bounded by the RF budget.
+pub const EYMAP_ALEXNET: [(&str, usize, usize); 5] = [
+    ("C1", 16, 3),
+    ("C2", 16, 16),
+    ("C3", 16, 32),
+    ("C4", 16, 32),
+    ("C5", 16, 32),
+];
+
+/// Derive a schedule but pin `(f_i, z_i)` to the published mapping, then
+/// re-fit the GLB window exactly as the automated mapper does.
+pub fn schedule_with_mapping(
+    shape: &crate::cnn::ConvShape,
+    hw: &HwConfig,
+    f_i: usize,
+    z_i: usize,
+) -> Schedule {
+    let mut sch = schedule(shape, hw);
+    sch.f_i = f_i.min(shape.f).min(hw.p_s);
+    sch.z_i = z_i.min(shape.c);
+    // Re-fit the pre-writeback window under the pinned parameters.
+    let fits = |sch: &Schedule| sch.ifmap_bytes(hw) + sch.psum_bytes(hw) <= hw.glb_bytes as f64;
+    while !fits(&sch) && sch.yy_o > sch.y_o {
+        sch.yy_o = (sch.yy_o - sch.y_o).max(sch.y_o);
+    }
+    while !fits(&sch) && sch.x_o > 1 {
+        sch.x_o = (sch.x_o + 1) / 2;
+        sch.x_i = (sch.x_o - 1) * shape.u + shape.s;
+    }
+    let ifmap = sch.ifmap_bytes(hw);
+    let psum = sch.psum_bytes(hw);
+    sch.n = ((hw.glb_bytes as f64 / (ifmap + psum)) as usize).clamp(1, hw.batch.max(1));
+    sch
+}
+
+/// EyMap per-layer energies for the AlexNet conv layers (paper Fig. 9(a,b)).
+pub fn eymap_alexnet_conv_energies(model: &CnnErgy) -> Vec<(&'static str, EnergyBreakdown)> {
+    let net = alexnet();
+    let clock = ClockParams::eyeriss(&model.hw);
+    let mut out = Vec::new();
+    let mut sparsity_in = 0.0;
+    let mut first = true;
+    for layer in &net.layers {
+        if let Some(&(_, f_i, z_i)) = EYMAP_ALEXNET.iter().find(|(n, _, _)| *n == layer.name) {
+            let shape = &layer.convs[0];
+            let sch = schedule_with_mapping(shape, &model.hw, f_i, z_i);
+            let ctx = ConvContext {
+                sparsity_in,
+                sparsity_out: layer.sparsity_mu,
+                first_layer: first,
+            };
+            let e = conv_energy_with(
+                shape,
+                &sch,
+                &model.hw,
+                &model.tech,
+                &clock,
+                &ctx,
+                model.glb_energy,
+            );
+            out.push((layer.name, e));
+            first = false;
+        }
+        if !layer.convs.is_empty() {
+            first = false;
+        }
+        sparsity_in = layer.sparsity_mu;
+    }
+    out
+}
+
+/// CNNergy per-conv-layer energies for a network (our automated mapping).
+pub fn cnnergy_conv_energies(
+    model: &CnnErgy,
+    net: &Network,
+) -> Vec<(&'static str, EnergyBreakdown)> {
+    model
+        .network_breakdowns(net)
+        .into_iter()
+        .zip(&net.layers)
+        .filter(|(_, l)| !l.convs.is_empty())
+        .map(|(e, l)| (l.name, e))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cnnergy_matches_eymap_per_layer() {
+        // Paper §IX: the automated mapper "matches the performance of the
+        // layer-wise ad hoc scheduling approach of prior work [23]".
+        let model = CnnErgy::eyeriss_16bit();
+        let ours = cnnergy_conv_energies(&model, &alexnet());
+        let eymap = eymap_alexnet_conv_energies(&model);
+        for (name, f_i, _) in EYMAP_ALEXNET {
+            let a = ours.iter().find(|(n, _)| *n == name).unwrap().1.total();
+            let b = eymap.iter().find(|(n, _)| *n == name).unwrap().1.total();
+            let ratio = a / b;
+            assert!(
+                (0.5..2.0).contains(&ratio),
+                "{name}: CNNergy {a:.3e} vs EyMap {b:.3e} (f_i={f_i})"
+            );
+        }
+    }
+
+    #[test]
+    fn automated_mapping_never_much_worse_than_adhoc() {
+        // The automated mapper should find schedules at least as
+        // energy-efficient as the fixed ad-hoc ones, within modeling noise.
+        let model = CnnErgy::eyeriss_16bit();
+        let ours: f64 = cnnergy_conv_energies(&model, &alexnet())
+            .iter()
+            .take(5)
+            .map(|(_, e)| e.total())
+            .sum();
+        let adhoc: f64 = eymap_alexnet_conv_energies(&model)
+            .iter()
+            .map(|(_, e)| e.total())
+            .sum();
+        assert!(ours < adhoc * 1.5, "ours {ours:.3e} vs adhoc {adhoc:.3e}");
+    }
+
+    #[test]
+    fn chip_energy_within_2x_of_eychip() {
+        // EyChip excludes DRAM; compare the conv layers' non-DRAM energy.
+        let model = CnnErgy::eyeriss_16bit();
+        let chip: f64 = cnnergy_conv_energies(&model, &alexnet())
+            .iter()
+            .filter(|(n, _)| n.starts_with('C'))
+            .map(|(_, e)| e.total() - e.dram)
+            .sum();
+        let anchor = eychip_alexnet_conv_pj();
+        let ratio = chip / anchor;
+        assert!(
+            (0.4..2.5).contains(&ratio),
+            "chip {chip:.3e} pJ vs EyChip {anchor:.3e} pJ (ratio {ratio:.2})"
+        );
+    }
+}

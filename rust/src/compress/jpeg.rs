@@ -1,0 +1,240 @@
+//! JPEG-like DCT compressor — the runtime `Sparsity-In` probe (paper §VII).
+//!
+//! The paper JPEG-compresses the camera image (quality Q=90) before an FCC
+//! upload and observes that the *sparsity of the quantized DCT coefficients*
+//! (`Sparsity-In`) varies widely across images (Fig. 12), making the FCC
+//! cost image-dependent. This module implements the same mechanism: 8×8
+//! blocks → 2-D DCT → quality-scaled quantization (libjpeg convention) →
+//! coefficient sparsity + an entropy-coded size estimate.
+//!
+//! It is not a bit-exact JFIF codec (no Huffman tables / markers); what the
+//! partitioner consumes is `Sparsity-In` and the compressed bit count, both
+//! of which this pipeline reproduces mechanistically (DESIGN.md §5).
+
+use std::f64::consts::PI;
+
+/// The standard JPEG luminance quantization table (Annex K).
+#[rustfmt::skip]
+pub const LUMA_QTABLE: [u16; 64] = [
+    16, 11, 10, 16, 24, 40, 51, 61,
+    12, 12, 14, 19, 26, 58, 60, 55,
+    14, 13, 16, 24, 40, 57, 69, 56,
+    14, 17, 22, 29, 51, 87, 80, 62,
+    18, 22, 37, 56, 68,109,103, 77,
+    24, 35, 55, 64, 81,104,113, 92,
+    49, 64, 78, 87,103,121,120,101,
+    72, 92, 95, 98,112,100,103, 99,
+];
+
+/// Scale the base table for a quality factor (libjpeg convention).
+pub fn scaled_qtable(quality: u8) -> [u16; 64] {
+    let q = quality.clamp(1, 100) as i32;
+    let scale = if q < 50 { 5000 / q } else { 200 - 2 * q };
+    let mut out = [0u16; 64];
+    for (o, &base) in out.iter_mut().zip(LUMA_QTABLE.iter()) {
+        let v = (base as i32 * scale + 50) / 100;
+        *o = v.clamp(1, 255) as u16;
+    }
+    out
+}
+
+/// Basis table `COS[u][x] = c(u)/2 · cos((2x+1)uπ/16)` for the 1-D DCT-II.
+fn dct_basis() -> &'static [[f64; 8]; 8] {
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<[[f64; 8]; 8]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [[0.0; 8]; 8];
+        for (u, row) in t.iter_mut().enumerate() {
+            let cu = if u == 0 { 1.0 / 2f64.sqrt() } else { 1.0 };
+            for (x, v) in row.iter_mut().enumerate() {
+                *v = 0.5 * cu * ((2 * x + 1) as f64 * u as f64 * PI / 16.0).cos();
+            }
+        }
+        t
+    })
+}
+
+/// 8×8 2-D DCT-II (the JPEG forward transform), separable row/column form
+/// (2·8³ multiplies instead of the naive 8⁴ — §Perf: ~5× on the probe).
+pub fn dct8x8(block: &[f64; 64]) -> [f64; 64] {
+    let basis = dct_basis();
+    // Rows: tmp[y][u] = Σ_x block[y][x]·COS[u][x]
+    let mut tmp = [0.0f64; 64];
+    for y in 0..8 {
+        let row = &block[y * 8..y * 8 + 8];
+        for u in 0..8 {
+            let b = &basis[u];
+            tmp[y * 8 + u] = row[0] * b[0]
+                + row[1] * b[1]
+                + row[2] * b[2]
+                + row[3] * b[3]
+                + row[4] * b[4]
+                + row[5] * b[5]
+                + row[6] * b[6]
+                + row[7] * b[7];
+        }
+    }
+    // Columns: out[v][u] = Σ_y tmp[y][u]·COS[v][y]
+    let mut out = [0.0f64; 64];
+    for v in 0..8 {
+        let b = &basis[v];
+        for u in 0..8 {
+            out[v * 8 + u] = tmp[u] * b[0]
+                + tmp[8 + u] * b[1]
+                + tmp[16 + u] * b[2]
+                + tmp[24 + u] * b[3]
+                + tmp[32 + u] * b[4]
+                + tmp[40 + u] * b[5]
+                + tmp[48 + u] * b[6]
+                + tmp[56 + u] * b[7];
+        }
+    }
+    out
+}
+
+/// Result of compressing one image plane.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct JpegStats {
+    /// Fraction of quantized DCT coefficients that are zero — the paper's
+    /// `Sparsity-In`.
+    pub sparsity: f64,
+    /// Estimated compressed size in bits (category-coded coefficients +
+    /// run-length tokens, Huffman-approximated).
+    pub bits: u64,
+    /// Total coefficients (= pixels) processed.
+    pub coeffs: u64,
+}
+
+/// Bits to entropy-code a nonzero coefficient of magnitude `m`:
+/// JPEG codes (run, size) tokens (~4 bits Huffman-average) plus `size`
+/// magnitude bits.
+fn coeff_bits(m: i32) -> u64 {
+    let size = 32 - (m.unsigned_abs()).leading_zeros() as u64; // bit length
+    4 + size
+}
+
+/// Compress a grayscale plane (`w`×`h`, row-major, values in [0,255]).
+pub fn compress_plane(pixels: &[f64], w: usize, h: usize, quality: u8) -> JpegStats {
+    assert_eq!(pixels.len(), w * h);
+    let qt = scaled_qtable(quality);
+    let mut zeros = 0u64;
+    let mut total = 0u64;
+    let mut bits = 0u64;
+
+    let bw = w / 8;
+    let bh = h / 8;
+    let mut block = [0.0f64; 64];
+    for by in 0..bh {
+        for bx in 0..bw {
+            for y in 0..8 {
+                for x in 0..8 {
+                    block[y * 8 + x] = pixels[(by * 8 + y) * w + bx * 8 + x] - 128.0;
+                }
+            }
+            let coeffs = dct8x8(&block);
+            for (i, &c) in coeffs.iter().enumerate() {
+                let q = (c / qt[i] as f64).round() as i32;
+                total += 1;
+                if q == 0 {
+                    zeros += 1;
+                } else {
+                    bits += coeff_bits(q);
+                }
+            }
+            // Per-block overhead: DC prediction + end-of-block token.
+            bits += 6;
+        }
+    }
+    JpegStats {
+        sparsity: zeros as f64 / total.max(1) as f64,
+        bits,
+        coeffs: total,
+    }
+}
+
+/// Compress an interleaved RGB image: per-channel planes (the paper's 8-bit
+/// three-channel input), summing sizes and averaging sparsity.
+pub fn compress_rgb(pixels: &[f64], w: usize, h: usize, quality: u8) -> JpegStats {
+    assert_eq!(pixels.len(), w * h * 3);
+    let mut agg = JpegStats::default();
+    let mut plane = vec![0.0; w * h];
+    for ch in 0..3 {
+        for i in 0..w * h {
+            plane[i] = pixels[i * 3 + ch];
+        }
+        let s = compress_plane(&plane, w, h, quality);
+        agg.bits += s.bits;
+        agg.coeffs += s.coeffs;
+        agg.sparsity += s.sparsity;
+    }
+    agg.sparsity /= 3.0;
+    agg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat_image(w: usize, h: usize, value: f64) -> Vec<f64> {
+        vec![value; w * h]
+    }
+
+    fn noisy_image(w: usize, h: usize, seed: u64) -> Vec<f64> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        (0..w * h).map(|_| rng.next_f64() * 255.0).collect()
+    }
+
+    #[test]
+    fn dct_of_constant_block_is_dc_only() {
+        let block = [100.0; 64];
+        let c = dct8x8(&block);
+        assert!((c[0] - 800.0).abs() < 1e-6); // 8 * 100
+        for &v in &c[1..] {
+            assert!(v.abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn qtable_scaling() {
+        let q90 = scaled_qtable(90);
+        let q50 = scaled_qtable(50);
+        // Higher quality -> smaller divisors -> less quantization.
+        assert!(q90[0] < q50[0]);
+        assert_eq!(q90[0], (16 * 20 + 50) / 100); // libjpeg formula at Q=90
+        assert!(scaled_qtable(1).iter().all(|&v| v >= 1));
+    }
+
+    #[test]
+    fn flat_images_are_very_sparse() {
+        let img = flat_image(64, 64, 128.0);
+        let s = compress_plane(&img, 64, 64, 90);
+        assert!(s.sparsity > 0.97, "sparsity {}", s.sparsity);
+    }
+
+    #[test]
+    fn noise_is_much_less_sparse_than_flat() {
+        let noisy = compress_plane(&noisy_image(64, 64, 5), 64, 64, 90);
+        let flat = compress_plane(&flat_image(64, 64, 77.0), 64, 64, 90);
+        assert!(noisy.sparsity < flat.sparsity - 0.2);
+        assert!(noisy.bits > flat.bits);
+    }
+
+    #[test]
+    fn lower_quality_increases_sparsity() {
+        let img = noisy_image(64, 64, 9);
+        let q90 = compress_plane(&img, 64, 64, 90);
+        let q30 = compress_plane(&img, 64, 64, 30);
+        assert!(q30.sparsity > q90.sparsity);
+        assert!(q30.bits < q90.bits);
+    }
+
+    #[test]
+    fn rgb_aggregates_three_planes() {
+        let w = 16;
+        let rgb: Vec<f64> = (0..w * w * 3).map(|i| (i % 256) as f64).collect();
+        let s = compress_rgb(&rgb, w, w, 90);
+        assert_eq!(s.coeffs, (w * w * 3) as u64);
+        assert!(s.bits > 0);
+        assert!((0.0..=1.0).contains(&s.sparsity));
+    }
+}

@@ -1,0 +1,6 @@
+//! Compression substrates: the RLC activation codec (paper §VI-A) and the
+//! JPEG-like input-image compressor used for the runtime `Sparsity-In`
+//! probe (paper §VII, Fig. 12).
+
+pub mod jpeg;
+pub mod rlc;

@@ -1,0 +1,311 @@
+//! Run-length compression codec for sparse activations (paper §VI-A, [23]).
+//!
+//! Eyeriss-style RLC: the stream is a sequence of `(run, value)` pairs,
+//! where `run` counts zeros before the next nonzero `value`. Runs longer
+//! than the field allows emit a zero-valued literal and continue. The run
+//! field is 4 bits for 8-bit data and 5 bits for 16-bit data, matching the
+//! paper's average per-nonzero-bit overheads δ of 3/5 and 1/3.
+//!
+//! This is a *real* codec (encode + decode round-trips exactly); the
+//! serving coordinator uses it to ship client activations, and the paper's
+//! analytical size formula (eq. 29) is cross-checked against the measured
+//! encoded size in tests.
+
+/// Average RLC overhead per nonzero data bit (paper §VI-A): δ such that
+/// encoding each nonzero element's bit costs `(1 + δ)` bits.
+pub fn rlc_delta(bw: u32) -> f64 {
+    match bw {
+        8 => 3.0 / 5.0,
+        16 => 1.0 / 3.0,
+        // General rule: run field of ~bw/2 bits plus packing slack.
+        _ => (bw as f64 / 2.0) / bw as f64 + 0.1,
+    }
+}
+
+/// Run-field width in bits for a given data width.
+pub fn run_bits(bw: u32) -> u32 {
+    match bw {
+        8 => 4,
+        16 => 5,
+        _ => (bw / 2).max(2),
+    }
+}
+
+/// A bit-packed RLC stream.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RlcStream {
+    /// Packed bits, LSB-first within each byte.
+    pub bits: Vec<u8>,
+    /// Number of valid bits in `bits`.
+    pub bit_len: usize,
+    /// Number of source elements (needed to terminate decode).
+    pub n_elems: usize,
+}
+
+impl RlcStream {
+    pub fn len_bits(&self) -> usize {
+        self.bit_len
+    }
+}
+
+/// LSB-first bit writer with a 64-bit staging word: whole tokens are OR'd
+/// in and complete bytes drained, instead of a per-bit loop (§Perf: this
+/// took encode from ~56 to several hundred Melem/s).
+struct BitWriter {
+    bytes: Vec<u8>,
+    bit_len: usize,
+    acc: u64,
+    acc_bits: u32,
+}
+
+impl BitWriter {
+    fn new() -> Self {
+        Self {
+            bytes: Vec::new(),
+            bit_len: 0,
+            acc: 0,
+            acc_bits: 0,
+        }
+    }
+
+    #[inline]
+    fn push(&mut self, value: u32, width: u32) {
+        debug_assert!(width <= 32 && (width == 32 || value < (1 << width)));
+        self.acc |= (value as u64) << self.acc_bits;
+        self.acc_bits += width;
+        self.bit_len += width as usize;
+        while self.acc_bits >= 8 {
+            self.bytes.push(self.acc as u8);
+            self.acc >>= 8;
+            self.acc_bits -= 8;
+        }
+    }
+
+    fn finish(mut self) -> (Vec<u8>, usize) {
+        if self.acc_bits > 0 {
+            self.bytes.push(self.acc as u8);
+        }
+        (self.bytes, self.bit_len)
+    }
+}
+
+/// Matching LSB-first reader: refills a 64-bit window byte-wise and slices
+/// whole tokens out of it.
+struct BitReader<'a> {
+    bytes: &'a [u8],
+    next_byte: usize,
+    acc: u64,
+    acc_bits: u32,
+}
+
+impl<'a> BitReader<'a> {
+    fn new(bytes: &'a [u8]) -> Self {
+        Self {
+            bytes,
+            next_byte: 0,
+            acc: 0,
+            acc_bits: 0,
+        }
+    }
+
+    #[inline]
+    fn read(&mut self, width: u32) -> u32 {
+        while self.acc_bits < width {
+            let b = self.bytes.get(self.next_byte).copied().unwrap_or(0);
+            self.acc |= (b as u64) << self.acc_bits;
+            self.next_byte += 1;
+            self.acc_bits += 8;
+        }
+        let v = (self.acc & ((1u64 << width) - 1)) as u32;
+        self.acc >>= width;
+        self.acc_bits -= width;
+        v
+    }
+}
+
+/// Encode quantized activations (`bw` ≤ 16 bits per element).
+pub fn encode(data: &[u16], bw: u32) -> RlcStream {
+    assert!(bw <= 16 && bw >= 2);
+    let rb = run_bits(bw);
+    let max_run = (1u32 << rb) - 1;
+    let mut w = BitWriter::new();
+    let mut run = 0u32;
+    for &v in data {
+        if v == 0 {
+            if run == max_run {
+                // Saturated run: emit (max_run, literal 0) and restart.
+                w.push(max_run, rb);
+                w.push(0, bw);
+                run = 0;
+            } else {
+                run += 1;
+            }
+        } else {
+            w.push(run, rb);
+            w.push(v as u32, bw);
+            run = 0;
+        }
+    }
+    if run > 0 {
+        // Trailing zeros: emit a final (run-1, literal 0) marker.
+        w.push(run - 1, rb);
+        w.push(0, bw);
+    }
+    let (bits, bit_len) = w.finish();
+    RlcStream {
+        bits,
+        bit_len,
+        n_elems: data.len(),
+    }
+}
+
+/// Decode an RLC stream back to the original elements.
+pub fn decode(stream: &RlcStream, bw: u32) -> Vec<u16> {
+    let rb = run_bits(bw);
+    let mut r = BitReader::new(&stream.bits);
+    let mut consumed = 0usize;
+    let mut out = Vec::with_capacity(stream.n_elems);
+    while out.len() < stream.n_elems && consumed + (rb + bw) as usize <= stream.bit_len {
+        consumed += (rb + bw) as usize;
+        let run = r.read(rb);
+        let val = r.read(bw);
+        let zeros = (run as usize).min(stream.n_elems - out.len());
+        out.resize(out.len() + zeros, 0);
+        if out.len() < stream.n_elems {
+            out.push(val as u16);
+        }
+    }
+    // Any remaining elements are trailing zeros.
+    while out.len() < stream.n_elems {
+        out.push(0);
+    }
+    out
+}
+
+/// Quantize f32 activations to unsigned `bw`-bit codes (linear, max-scaled)
+/// — how the serving coordinator prepares activations for the RLC codec.
+/// Zero stays exactly zero so ReLU sparsity is preserved.
+pub fn quantize(data: &[f32], bw: u32) -> (Vec<u16>, f32) {
+    let max = data.iter().cloned().fold(0.0f32, |a, b| a.max(b.abs()));
+    if max == 0.0 {
+        return (vec![0; data.len()], 1.0);
+    }
+    let levels = ((1u32 << bw) - 1) as f32;
+    let scale = max / levels;
+    let inv = levels / max; // hoist the divide out of the hot loop (§Perf)
+    let q = data
+        .iter()
+        // x.abs()*inv is in [0, levels]; +0.5-truncate rounds without the
+        // slow round() libcall (§Perf).
+        .map(|&x| ((x.abs() * inv + 0.5) as u16).min(levels as u16))
+        .collect();
+    (q, scale)
+}
+
+/// Measured sparsity of a quantized buffer.
+pub fn sparsity(data: &[u16]) -> f64 {
+    if data.is_empty() {
+        return 0.0;
+    }
+    data.iter().filter(|&&v| v == 0).count() as f64 / data.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_sparse(rng: &mut Rng, n: usize, sparsity: f64, bw: u32) -> Vec<u16> {
+        let max = (1u32 << bw) - 1;
+        (0..n)
+            .map(|_| {
+                if rng.next_f64() < sparsity {
+                    0
+                } else {
+                    rng.range_u64(1, max as u64) as u16
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn round_trip_exact() {
+        let mut rng = Rng::new(1);
+        for bw in [8u32, 16] {
+            for sp in [0.0, 0.3, 0.8, 0.95, 1.0] {
+                let data = random_sparse(&mut rng, 4096, sp, bw);
+                let enc = encode(&data, bw);
+                assert_eq!(decode(&enc, bw), data, "bw={bw} sp={sp}");
+            }
+        }
+    }
+
+    #[test]
+    fn round_trip_edge_cases() {
+        for bw in [8u32, 16] {
+            for data in [
+                vec![],
+                vec![0u16; 100],
+                vec![1u16; 100],
+                vec![0, 0, 0, 5],
+                vec![5, 0, 0, 0],
+            ] {
+                let enc = encode(&data, bw);
+                assert_eq!(decode(&enc, bw), data);
+            }
+        }
+    }
+
+    #[test]
+    fn long_runs_saturate_correctly() {
+        // Runs longer than the 4-bit field (15) force zero literals.
+        let mut data = vec![0u16; 100];
+        data.push(7);
+        let enc = encode(&data, 8);
+        assert_eq!(decode(&enc, 8), data);
+    }
+
+    #[test]
+    fn encoded_size_tracks_eq_29() {
+        // The paper's analytical size (eq. 29) must approximate the real
+        // encoded size for representative sparsity levels.
+        let mut rng = Rng::new(2);
+        for sp in [0.6, 0.75, 0.9] {
+            let n = 100_000;
+            let data = random_sparse(&mut rng, n, sp, 8);
+            let measured = encode(&data, 8).len_bits() as f64;
+            let actual_sp = sparsity(&data);
+            let analytical = (n as f64 * 8.0) * (1.0 - actual_sp) * (1.0 + rlc_delta(8));
+            let ratio = measured / analytical;
+            assert!(
+                (0.7..1.3).contains(&ratio),
+                "sp={sp}: measured {measured} vs eq29 {analytical} (ratio {ratio:.3})"
+            );
+        }
+    }
+
+    #[test]
+    fn sparser_data_compresses_smaller() {
+        let mut rng = Rng::new(3);
+        let dense = encode(&random_sparse(&mut rng, 10_000, 0.2, 8), 8).len_bits();
+        let sparse = encode(&random_sparse(&mut rng, 10_000, 0.9, 8), 8).len_bits();
+        assert!(sparse < dense / 2);
+    }
+
+    #[test]
+    fn quantize_preserves_zeros() {
+        let data = vec![0.0f32, 0.5, 0.0, 1.0, 0.25];
+        let (q, _scale) = quantize(&data, 8);
+        assert_eq!(q[0], 0);
+        assert_eq!(q[2], 0);
+        assert_eq!(q[3], 255);
+        assert!((sparsity(&q) - 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantize_all_zero() {
+        let (q, scale) = quantize(&[0.0f32; 16], 8);
+        assert!(q.iter().all(|&v| v == 0));
+        assert_eq!(scale, 1.0);
+    }
+}

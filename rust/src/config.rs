@@ -1,0 +1,213 @@
+//! Runtime configuration: a small `key = value` config file format plus CLI
+//! override parsing (offline substitute for clap + a TOML crate).
+//!
+//! Recognized keys mirror the paper's user-specified runtime parameters
+//! (§VII: bit rate `B`, ECC `k`, transmit power `P_Tx`) plus the serving
+//! stack's knobs. Unknown keys are rejected so typos fail loudly.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::channel::TransmitEnv;
+
+/// Full serving/experiment configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Config {
+    /// Network to serve/analyze (`tiny_alexnet`, `alexnet`, …).
+    pub network: String,
+    /// Available bit rate `B`, bits/s.
+    pub bit_rate_bps: f64,
+    /// ECC overhead `k`, percent.
+    pub ecc_percent: f64,
+    /// Transmit power `P_Tx`, watts.
+    pub p_tx_w: f64,
+    /// JPEG quality for the input probe.
+    pub jpeg_quality: u8,
+    /// Artifact directory (PJRT executables + manifest).
+    pub artifacts_dir: String,
+    /// Number of requests for serving runs.
+    pub requests: usize,
+    /// Number of worker threads in the coordinator.
+    pub workers: usize,
+    /// Channel bandwidth jitter (fraction).
+    pub jitter: f64,
+    /// Wall-clock scale for simulated airtime (0 = don't sleep).
+    pub time_scale: f64,
+    /// RNG seed for corpus/channel.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            network: "tiny_alexnet".to_string(),
+            bit_rate_bps: 80.0e6,
+            ecc_percent: 10.0,
+            p_tx_w: 0.78,
+            jpeg_quality: 90,
+            artifacts_dir: "artifacts".to_string(),
+            requests: 32,
+            workers: 2,
+            jitter: 0.0,
+            time_scale: 0.0,
+            seed: 42,
+        }
+    }
+}
+
+impl Config {
+    /// The communication environment this config describes.
+    pub fn transmit_env(&self) -> TransmitEnv {
+        TransmitEnv {
+            bit_rate_bps: self.bit_rate_bps,
+            ecc_percent: self.ecc_percent,
+            p_tx_w: self.p_tx_w,
+        }
+    }
+
+    /// Apply one `key=value` assignment.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let v = value.trim();
+        match key.trim() {
+            "network" => self.network = v.to_string(),
+            "bit_rate_mbps" => self.bit_rate_bps = parse_f64(key, v)? * 1e6,
+            "bit_rate_bps" => self.bit_rate_bps = parse_f64(key, v)?,
+            "ecc_percent" => self.ecc_percent = parse_f64(key, v)?,
+            "p_tx_w" => self.p_tx_w = parse_f64(key, v)?,
+            "jpeg_quality" => self.jpeg_quality = v.parse().context("jpeg_quality")?,
+            "artifacts_dir" => self.artifacts_dir = v.to_string(),
+            "requests" => self.requests = v.parse().context("requests")?,
+            "workers" => self.workers = v.parse().context("workers")?,
+            "jitter" => self.jitter = parse_f64(key, v)?,
+            "time_scale" => self.time_scale = parse_f64(key, v)?,
+            "seed" => self.seed = v.parse().context("seed")?,
+            other => bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Load from a `key = value` file (‘#’ comments, blank lines ok).
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let mut cfg = Config::default();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("{}:{}: expected key=value", path.display(), lineno + 1))?;
+            cfg.set(k, v)
+                .with_context(|| format!("{}:{}", path.display(), lineno + 1))?;
+        }
+        Ok(cfg)
+    }
+
+    /// Apply `--key value` / `--key=value` style CLI overrides; returns
+    /// non-option positional arguments.
+    pub fn apply_cli(&mut self, args: &[String]) -> Result<Vec<String>> {
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    self.set(k, v)?;
+                } else {
+                    let v = args
+                        .get(i + 1)
+                        .with_context(|| format!("--{stripped} needs a value"))?;
+                    self.set(stripped, v)?;
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(positional)
+    }
+
+    /// Dump as a sorted `key = value` listing.
+    pub fn to_display(&self) -> String {
+        let mut map = BTreeMap::new();
+        map.insert("network", self.network.clone());
+        map.insert("bit_rate_mbps", format!("{}", self.bit_rate_bps / 1e6));
+        map.insert("ecc_percent", format!("{}", self.ecc_percent));
+        map.insert("p_tx_w", format!("{}", self.p_tx_w));
+        map.insert("jpeg_quality", format!("{}", self.jpeg_quality));
+        map.insert("artifacts_dir", self.artifacts_dir.clone());
+        map.insert("requests", format!("{}", self.requests));
+        map.insert("workers", format!("{}", self.workers));
+        map.insert("jitter", format!("{}", self.jitter));
+        map.insert("time_scale", format!("{}", self.time_scale));
+        map.insert("seed", format!("{}", self.seed));
+        map.iter()
+            .map(|(k, v)| format!("{k} = {v}"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+fn parse_f64(key: &str, v: &str) -> Result<f64> {
+    v.parse::<f64>().with_context(|| format!("{key}: bad number '{v}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_operating_point() {
+        let c = Config::default();
+        assert_eq!(c.bit_rate_bps, 80.0e6);
+        assert_eq!(c.p_tx_w, 0.78);
+        assert_eq!(c.jpeg_quality, 90);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut c = Config::default();
+        let rest = c
+            .apply_cli(&[
+                "--bit_rate_mbps=100".into(),
+                "--p_tx_w".into(),
+                "1.14".into(),
+                "serve".into(),
+            ])
+            .unwrap();
+        assert_eq!(c.bit_rate_bps, 100.0e6);
+        assert_eq!(c.p_tx_w, 1.14);
+        assert_eq!(rest, vec!["serve".to_string()]);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = Config::default();
+        assert!(c.set("bitrate", "5").is_err());
+        assert!(c.apply_cli(&["--nope=1".into()]).is_err());
+    }
+
+    #[test]
+    fn file_round_trip(){
+        let dir = std::env::temp_dir().join("neupart_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("test.cfg");
+        std::fs::write(&path, "# comment\nnetwork = alexnet\nbit_rate_mbps = 40 # inline\n\nworkers=4\n").unwrap();
+        let c = Config::from_file(&path).unwrap();
+        assert_eq!(c.network, "alexnet");
+        assert_eq!(c.bit_rate_bps, 40.0e6);
+        assert_eq!(c.workers, 4);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let mut c = Config::default();
+        assert!(c.apply_cli(&["--requests".into()]).is_err());
+        assert!(c.set("requests", "many").is_err());
+    }
+}

@@ -1,0 +1,289 @@
+//! Bounded admission queue with backpressure and deadline shedding.
+//!
+//! The serving coordinator's front door: producers `submit` requests into a
+//! bounded queue; workers `take` them. When the queue is full the submitter
+//! either blocks (backpressure) or, if the request carries a deadline that
+//! has already expired, the request is shed and counted. This is the
+//! standard serving-system admission pattern (vLLM-style), sized so the
+//! client executor (a single device) is never buried.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// A queued item with admission metadata.
+#[derive(Debug)]
+struct Entry<T> {
+    item: T,
+    enqueued: Instant,
+    deadline: Option<Instant>,
+}
+
+/// Queue statistics.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BatcherStats {
+    pub submitted: u64,
+    pub taken: u64,
+    pub shed_expired: u64,
+    pub rejected_full: u64,
+    /// Max queue depth observed.
+    pub high_water: usize,
+}
+
+struct State<T> {
+    queue: VecDeque<Entry<T>>,
+    stats: BatcherStats,
+    closed: bool,
+}
+
+/// Bounded MPMC admission queue.
+pub struct Batcher<T> {
+    state: Mutex<State<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+/// Outcome of a non-blocking submit.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Submit {
+    Accepted,
+    /// Queue full (try_submit only).
+    Rejected,
+    /// Deadline already expired at admission.
+    Shed,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1);
+        Batcher {
+            state: Mutex::new(State {
+                queue: VecDeque::with_capacity(capacity),
+                stats: BatcherStats::default(),
+                closed: false,
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Blocking submit: waits for space (backpressure). Returns `Shed` if
+    /// the deadline expired while waiting, `Rejected` if the queue closed.
+    pub fn submit(&self, item: T, deadline: Option<Instant>) -> Submit {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if s.closed {
+                return Submit::Rejected;
+            }
+            if let Some(d) = deadline {
+                if Instant::now() >= d {
+                    s.stats.shed_expired += 1;
+                    return Submit::Shed;
+                }
+            }
+            if s.queue.len() < self.capacity {
+                break;
+            }
+            s = match deadline {
+                Some(d) => {
+                    let now = Instant::now();
+                    let (guard, timeout) = self
+                        .not_full
+                        .wait_timeout(s, d.saturating_duration_since(now))
+                        .unwrap();
+                    if timeout.timed_out() {
+                        let mut guard = guard;
+                        guard.stats.shed_expired += 1;
+                        return Submit::Shed;
+                    }
+                    guard
+                }
+                None => self.not_full.wait(s).unwrap(),
+            };
+        }
+        s.queue.push_back(Entry {
+            item,
+            enqueued: Instant::now(),
+            deadline,
+        });
+        s.stats.submitted += 1;
+        s.stats.high_water = s.stats.high_water.max(s.queue.len());
+        self.not_empty.notify_one();
+        Submit::Accepted
+    }
+
+    /// Non-blocking submit: `Rejected` when full.
+    pub fn try_submit(&self, item: T, deadline: Option<Instant>) -> Submit {
+        let mut s = self.state.lock().unwrap();
+        if s.closed || s.queue.len() >= self.capacity {
+            s.stats.rejected_full += 1;
+            return Submit::Rejected;
+        }
+        if let Some(d) = deadline {
+            if Instant::now() >= d {
+                s.stats.shed_expired += 1;
+                return Submit::Shed;
+            }
+        }
+        s.queue.push_back(Entry {
+            item,
+            enqueued: Instant::now(),
+            deadline,
+        });
+        s.stats.submitted += 1;
+        s.stats.high_water = s.stats.high_water.max(s.queue.len());
+        self.not_empty.notify_one();
+        Submit::Accepted
+    }
+
+    /// Blocking take; skips (and counts) entries whose deadline expired in
+    /// the queue. Returns `None` once closed and drained.
+    pub fn take(&self) -> Option<(T, Duration)> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            while let Some(entry) = s.queue.pop_front() {
+                self.not_full.notify_one();
+                if let Some(d) = entry.deadline {
+                    if Instant::now() >= d {
+                        s.stats.shed_expired += 1;
+                        continue; // shed in-queue expiry
+                    }
+                }
+                s.stats.taken += 1;
+                let wait = entry.enqueued.elapsed();
+                return Some((entry.item, wait));
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.not_empty.wait(s).unwrap();
+        }
+    }
+
+    /// Close the queue: producers get `Rejected`, consumers drain then stop.
+    pub fn close(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn stats(&self) -> BatcherStats {
+        self.state.lock().unwrap().stats
+    }
+
+    pub fn depth(&self) -> usize {
+        self.state.lock().unwrap().queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order_and_stats() {
+        let b = Batcher::new(8);
+        for i in 0..5 {
+            assert_eq!(b.submit(i, None), Submit::Accepted);
+        }
+        for i in 0..5 {
+            assert_eq!(b.take().unwrap().0, i);
+        }
+        let s = b.stats();
+        assert_eq!(s.submitted, 5);
+        assert_eq!(s.taken, 5);
+        assert_eq!(s.high_water, 5);
+    }
+
+    #[test]
+    fn try_submit_rejects_when_full() {
+        let b = Batcher::new(2);
+        assert_eq!(b.try_submit(1, None), Submit::Accepted);
+        assert_eq!(b.try_submit(2, None), Submit::Accepted);
+        assert_eq!(b.try_submit(3, None), Submit::Rejected);
+        assert_eq!(b.stats().rejected_full, 1);
+    }
+
+    #[test]
+    fn expired_deadline_is_shed_at_admission() {
+        let b = Batcher::new(2);
+        let past = Instant::now() - Duration::from_millis(1);
+        assert_eq!(b.submit(1, Some(past)), Submit::Shed);
+        assert_eq!(b.stats().shed_expired, 1);
+    }
+
+    #[test]
+    fn in_queue_expiry_is_shed_at_take() {
+        let b = Batcher::new(4);
+        let soon = Instant::now() + Duration::from_millis(5);
+        b.submit(1, Some(soon));
+        b.submit(2, None);
+        std::thread::sleep(Duration::from_millis(10));
+        // 1 expired in queue; take returns 2.
+        assert_eq!(b.take().unwrap().0, 2);
+        assert_eq!(b.stats().shed_expired, 1);
+    }
+
+    #[test]
+    fn backpressure_blocks_then_releases() {
+        let b = Arc::new(Batcher::new(1));
+        b.submit(0, None);
+        let b2 = b.clone();
+        let producer = std::thread::spawn(move || b2.submit(1, None));
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(b.depth(), 1); // producer blocked
+        assert_eq!(b.take().unwrap().0, 0);
+        assert_eq!(producer.join().unwrap(), Submit::Accepted);
+        assert_eq!(b.take().unwrap().0, 1);
+    }
+
+    #[test]
+    fn close_unblocks_everyone() {
+        let b = Arc::new(Batcher::<u32>::new(4));
+        let b2 = b.clone();
+        let consumer = std::thread::spawn(move || b2.take());
+        std::thread::sleep(Duration::from_millis(10));
+        b.close();
+        assert_eq!(consumer.join().unwrap(), None);
+        assert_eq!(b.submit(9, None), Submit::Rejected);
+    }
+
+    #[test]
+    fn multi_producer_multi_consumer() {
+        let b = Arc::new(Batcher::new(16));
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let b = b.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50 {
+                    b.submit(t * 1000 + i, None);
+                }
+            }));
+        }
+        let mut consumers = Vec::new();
+        for _ in 0..3 {
+            let b = b.clone();
+            consumers.push(std::thread::spawn(move || {
+                let mut n = 0;
+                while b.take().is_some() {
+                    n += 1;
+                }
+                n
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        while b.depth() > 0 {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        b.close();
+        let total: usize = consumers.into_iter().map(|c| c.join().unwrap()).sum();
+        assert_eq!(total, 200);
+        assert_eq!(b.stats().taken, 200);
+    }
+}

@@ -1,0 +1,199 @@
+//! Device executor threads.
+//!
+//! A [`DeviceExecutor`] is a thread that owns one PJRT client and a lazy
+//! cache of compiled prefix/suffix executables for a network (PJRT handles
+//! are `Rc`-based, so they cannot cross threads). Work arrives over an mpsc
+//! channel; each job carries its own oneshot-style reply sender.
+//!
+//! The *client* device is a single executor (a phone has one accelerator);
+//! the *cloud* is a pool of executors behind one shared job queue.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::NetworkRuntime;
+
+/// A unit of work for a device.
+pub enum Job {
+    /// Run layers `1..=split` on an image.
+    Prefix {
+        split: usize,
+        data: Vec<f32>,
+        reply: Sender<Result<Vec<f32>>>,
+    },
+    /// Run layers `split+1..` on an activation.
+    Suffix {
+        split: usize,
+        data: Vec<f32>,
+        reply: Sender<Result<Vec<f32>>>,
+    },
+    /// Precompile executables for the given splits.
+    WarmUp {
+        splits: Vec<usize>,
+        reply: Sender<Result<()>>,
+    },
+    Shutdown,
+}
+
+/// Handle for submitting jobs to one device (cheaply cloneable).
+#[derive(Clone)]
+pub struct ExecutorHandle {
+    tx: Sender<Job>,
+    label: &'static str,
+}
+
+impl ExecutorHandle {
+    fn call(&self, make: impl FnOnce(Sender<Result<Vec<f32>>>) -> Job) -> Result<Vec<f32>> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(make(reply_tx))
+            .map_err(|_| anyhow!("{} executor is gone", self.label))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("{} executor dropped reply", self.label))?
+    }
+
+    /// Run a client prefix; blocks until the device finishes.
+    pub fn run_prefix(&self, split: usize, data: Vec<f32>) -> Result<Vec<f32>> {
+        self.call(|reply| Job::Prefix { split, data, reply })
+    }
+
+    /// Run a cloud suffix; blocks until the device finishes.
+    pub fn run_suffix(&self, split: usize, data: Vec<f32>) -> Result<Vec<f32>> {
+        self.call(|reply| Job::Suffix { split, data, reply })
+    }
+
+    /// Precompile the executables for the given split points.
+    pub fn warm_up(&self, splits: Vec<usize>) -> Result<()> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(Job::WarmUp {
+                splits,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("{} executor is gone", self.label))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("{} executor dropped reply", self.label))?
+    }
+}
+
+/// One or more executor threads bound to a network's artifacts.
+pub struct DeviceExecutor {
+    tx: Sender<Job>,
+    threads: Vec<JoinHandle<()>>,
+    label: &'static str,
+}
+
+impl DeviceExecutor {
+    /// Spawn `pool` threads, each with its own PJRT client, all draining one
+    /// shared job queue. Each thread precompiles `warm_splits` before taking
+    /// work (a `warm_up` job through the queue would only reach one thread).
+    pub fn spawn(
+        label: &'static str,
+        artifacts_dir: PathBuf,
+        network: String,
+        pool: usize,
+        warm_splits: Vec<usize>,
+    ) -> Result<Self> {
+        assert!(pool >= 1);
+        let (tx, rx) = channel::<Job>();
+        let shared_rx = Arc::new(Mutex::new(rx));
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let mut threads = Vec::with_capacity(pool);
+        for i in 0..pool {
+            let rx = shared_rx.clone();
+            let dir = artifacts_dir.clone();
+            let net = network.clone();
+            let warm = warm_splits.clone();
+            let ready = ready_tx.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("{label}-exec-{i}"))
+                    .spawn(move || executor_loop(rx, &dir, &net, &warm, ready))
+                    .context("spawning executor thread")?,
+            );
+        }
+        drop(ready_tx);
+        // Block until every thread has loaded + warmed (or failed): jobs
+        // submitted after spawn() hit steady-state executables.
+        for _ in 0..pool {
+            ready_rx
+                .recv()
+                .map_err(|_| anyhow!("{label}: executor died during init"))?
+                .with_context(|| format!("{label}: executor init"))?;
+        }
+        Ok(DeviceExecutor { tx, threads, label })
+    }
+
+    pub fn handle(&self) -> ExecutorHandle {
+        ExecutorHandle {
+            tx: self.tx.clone(),
+            label: self.label,
+        }
+    }
+
+    /// Stop all threads (idempotent; also triggered by drop).
+    pub fn shutdown(&mut self) {
+        for _ in 0..self.threads.len() {
+            let _ = self.tx.send(Job::Shutdown);
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for DeviceExecutor {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn executor_loop(
+    rx: Arc<Mutex<Receiver<Job>>>,
+    dir: &std::path::Path,
+    network: &str,
+    warm_splits: &[usize],
+    ready: Sender<Result<()>>,
+) {
+    // Each thread owns its own PJRT client + executable cache.
+    let runtime = match NetworkRuntime::load(dir, network) {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let warmed = runtime.warm_up(warm_splits);
+    let failed = warmed.is_err();
+    let _ = ready.send(warmed);
+    if failed {
+        return;
+    }
+    loop {
+        let job = {
+            let guard = rx.lock().unwrap();
+            match guard.recv() {
+                Ok(j) => j,
+                Err(_) => return, // all senders gone
+            }
+        };
+        match job {
+            Job::Prefix { split, data, reply } => {
+                let _ = reply.send(runtime.run_prefix(split, &data));
+            }
+            Job::Suffix { split, data, reply } => {
+                let _ = reply.send(runtime.run_suffix(split, &data));
+            }
+            Job::WarmUp { splits, reply } => {
+                let _ = reply.send(runtime.warm_up(&splits));
+            }
+            Job::Shutdown => return,
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! Serving metrics: per-request accounting aggregated across workers.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::request::InferenceResponse;
+
+/// Aggregated serving statistics.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    /// Chosen-split histogram.
+    pub split_counts: BTreeMap<usize, u64>,
+    /// Modeled energy totals, joules.
+    pub client_energy_j: f64,
+    pub transmit_energy_j: f64,
+    /// Measured RLC bits shipped.
+    pub transmit_bits: u64,
+    /// Wall-clock latency stats.
+    pub total_latency: Duration,
+    pub max_latency: Duration,
+    /// Stage totals.
+    pub decide: Duration,
+    pub client: Duration,
+    pub channel: Duration,
+    pub cloud: Duration,
+}
+
+impl MetricsSnapshot {
+    pub fn mean_latency(&self) -> Duration {
+        if self.requests == 0 {
+            Duration::ZERO
+        } else {
+            self.total_latency / self.requests as u32
+        }
+    }
+
+    pub fn mean_e_cost_j(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            (self.client_energy_j + self.transmit_energy_j) / self.requests as f64
+        }
+    }
+
+    /// Human-readable report block.
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("requests          : {}\n", self.requests));
+        s.push_str(&format!(
+            "mean E_cost       : {:.4} mJ (client {:.4} + radio {:.4})\n",
+            self.mean_e_cost_j() * 1e3,
+            self.client_energy_j / self.requests.max(1) as f64 * 1e3,
+            self.transmit_energy_j / self.requests.max(1) as f64 * 1e3,
+        ));
+        s.push_str(&format!(
+            "mean latency      : {:.3} ms (max {:.3} ms)\n",
+            self.mean_latency().as_secs_f64() * 1e3,
+            self.max_latency.as_secs_f64() * 1e3
+        ));
+        s.push_str(&format!(
+            "stage means       : decide {:.1} µs | client {:.2} ms | channel {:.2} ms | cloud {:.2} ms\n",
+            self.decide.as_secs_f64() / self.requests.max(1) as f64 * 1e6,
+            self.client.as_secs_f64() / self.requests.max(1) as f64 * 1e3,
+            self.channel.as_secs_f64() / self.requests.max(1) as f64 * 1e3,
+            self.cloud.as_secs_f64() / self.requests.max(1) as f64 * 1e3,
+        ));
+        s.push_str(&format!(
+            "transmit          : {} bits total ({:.1} kbit/request)\n",
+            self.transmit_bits,
+            self.transmit_bits as f64 / self.requests.max(1) as f64 / 1e3
+        ));
+        s.push_str("split histogram   :");
+        for (split, count) in &self.split_counts {
+            s.push_str(&format!(" {split}:{count}"));
+        }
+        s.push('\n');
+        s
+    }
+}
+
+/// Thread-safe metrics collector.
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<MetricsSnapshot>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, resp: &InferenceResponse) {
+        let mut m = self.inner.lock().unwrap();
+        m.requests += 1;
+        *m.split_counts.entry(resp.split).or_insert(0) += 1;
+        m.client_energy_j += resp.client_energy_j;
+        m.transmit_energy_j += resp.transmit_energy_j;
+        m.transmit_bits += resp.transmit_bits;
+        m.total_latency += resp.t_total;
+        m.max_latency = m.max_latency.max(resp.t_total);
+        m.decide += resp.t_decide;
+        m.client += resp.t_client;
+        m.channel += resp.t_channel;
+        m.cloud += resp.t_cloud;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        self.inner.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::ExecutionSite;
+
+    fn resp(split: usize, e: f64) -> InferenceResponse {
+        InferenceResponse {
+            id: 0,
+            logits: vec![1.0],
+            split,
+            site: ExecutionSite::Partitioned,
+            sparsity_in: 0.5,
+            transmit_bits: 1000,
+            client_energy_j: e,
+            transmit_energy_j: e / 2.0,
+            t_decide: Duration::from_micros(2),
+            t_client: Duration::from_millis(1),
+            t_channel: Duration::from_millis(2),
+            t_cloud: Duration::from_millis(3),
+            t_total: Duration::from_millis(6),
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let m = Metrics::new();
+        m.record(&resp(2, 1e-3));
+        m.record(&resp(2, 3e-3));
+        m.record(&resp(0, 2e-3));
+        let s = m.snapshot();
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.split_counts[&2], 2);
+        assert_eq!(s.split_counts[&0], 1);
+        assert!((s.mean_e_cost_j() - (6e-3 * 1.5 / 3.0)).abs() < 1e-12);
+        assert_eq!(s.transmit_bits, 3000);
+        assert_eq!(s.mean_latency(), Duration::from_millis(6));
+        assert!(s.report().contains("requests"));
+    }
+
+    #[test]
+    fn empty_snapshot_safe() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.mean_latency(), Duration::ZERO);
+        assert_eq!(s.mean_e_cost_j(), 0.0);
+        assert!(!s.report().is_empty());
+    }
+}

@@ -1,0 +1,30 @@
+//! The NeuPart serving coordinator (paper §VII applied as a system).
+//!
+//! A working client/cloud serving stack over real PJRT executables:
+//!
+//! ```text
+//!  requests ──► queue ──► worker pool ──┬─ probe Sparsity-In (JPEG DCT)
+//!                                       ├─ Alg. 2 partition decision
+//!                                       ├─ client executor (PJRT, 1 thread
+//!                                       │    = the one mobile accelerator)
+//!                                       ├─ quantize + RLC encode
+//!                                       ├─ channel simulator (energy/time)
+//!                                       └─ cloud executor pool (PJRT)
+//! ```
+//!
+//! PJRT handles are thread-local (`Rc`), so each executor thread owns its
+//! own client + compiled-executable cache; workers talk to them over mpsc
+//! channels. The offline build has no tokio: the event loop is std threads
+//! + channels (DESIGN.md §"Offline substitutions").
+
+pub mod batcher;
+pub mod executor;
+pub mod metrics;
+pub mod request;
+pub mod server;
+
+pub use batcher::{Batcher, BatcherStats, Submit};
+pub use executor::{DeviceExecutor, ExecutorHandle};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use request::{InferenceRequest, InferenceResponse};
+pub use server::{Coordinator, CoordinatorConfig};

@@ -1,0 +1,95 @@
+//! Request/response types flowing through the coordinator.
+
+use std::time::Duration;
+
+/// One inference request: a camera image.
+#[derive(Clone, Debug)]
+pub struct InferenceRequest {
+    pub id: u64,
+    /// Normalized input tensor (NHWC, f32) for the network.
+    pub tensor: Vec<f32>,
+    /// Raw RGB pixels (`[0,255]`, interleaved) for the JPEG sparsity probe.
+    pub pixels: Vec<f64>,
+    pub width: usize,
+    pub height: usize,
+}
+
+/// Where each piece of the computation ran.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecutionSite {
+    /// Fully cloud (FCC): JPEG upload, all layers remote.
+    Cloud,
+    /// Fully in situ (FISC): all layers on the client.
+    Client,
+    /// Split at an intermediate layer.
+    Partitioned,
+}
+
+/// One served inference with its accounting.
+#[derive(Clone, Debug)]
+pub struct InferenceResponse {
+    pub id: u64,
+    /// Final logits.
+    pub logits: Vec<f32>,
+    /// Chosen split (0 = FCC … |L| = FISC).
+    pub split: usize,
+    pub site: ExecutionSite,
+    /// Runtime-probed input sparsity.
+    pub sparsity_in: f64,
+    /// Bits actually shipped over the channel (measured RLC size).
+    pub transmit_bits: u64,
+    /// Modeled client compute energy, joules (CNNergy).
+    pub client_energy_j: f64,
+    /// Modeled transmission energy, joules.
+    pub transmit_energy_j: f64,
+    /// Wall-clock spent in each stage.
+    pub t_decide: Duration,
+    pub t_client: Duration,
+    pub t_channel: Duration,
+    pub t_cloud: Duration,
+    pub t_total: Duration,
+}
+
+impl InferenceResponse {
+    /// Total modeled client-side energy (compute + radio), joules — the
+    /// quantity NeuPart minimizes (eq. 1).
+    pub fn e_cost_j(&self) -> f64 {
+        self.client_energy_j + self.transmit_energy_j
+    }
+
+    /// Predicted class (argmax of logits).
+    pub fn top1(&self) -> usize {
+        self.logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top1_is_argmax() {
+        let resp = InferenceResponse {
+            id: 1,
+            logits: vec![0.1, 2.0, -1.0, 1.9],
+            split: 2,
+            site: ExecutionSite::Partitioned,
+            sparsity_in: 0.6,
+            transmit_bits: 100,
+            client_energy_j: 1e-3,
+            transmit_energy_j: 2e-3,
+            t_decide: Duration::ZERO,
+            t_client: Duration::ZERO,
+            t_channel: Duration::ZERO,
+            t_cloud: Duration::ZERO,
+            t_total: Duration::ZERO,
+        };
+        assert_eq!(resp.top1(), 1);
+        assert!((resp.e_cost_j() - 3e-3).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,275 @@
+//! The coordinator proper: request queue, worker pool, per-request
+//! partition decision and client→channel→cloud execution.
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::batcher::{Batcher, Submit};
+
+use crate::channel::{Channel, ChannelConfig, TransmitEnv};
+use crate::cnn::Network;
+use crate::cnnergy::CnnErgy;
+use crate::compress::jpeg::compress_rgb;
+use crate::compress::rlc;
+use crate::config::Config;
+use crate::partition::{Partitioner, FISC_OUTPUT_BITS};
+
+use super::executor::{DeviceExecutor, ExecutorHandle};
+use super::metrics::Metrics;
+use super::request::{ExecutionSite, InferenceRequest, InferenceResponse};
+
+/// Coordinator construction parameters.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub artifacts_dir: PathBuf,
+    pub network: String,
+    pub env: TransmitEnv,
+    pub jpeg_quality: u8,
+    /// Cloud executor pool size (the client device is always 1 thread).
+    pub cloud_pool: usize,
+    /// Worker threads pulling from the request queue.
+    pub workers: usize,
+    pub jitter: f64,
+    pub time_scale: f64,
+    /// Pin every request to a fixed split (ablation: 0 = FCC, |L| = FISC).
+    pub force_split: Option<usize>,
+    /// Split points each executor thread precompiles at startup.
+    pub warm_splits: Vec<usize>,
+    pub seed: u64,
+}
+
+impl CoordinatorConfig {
+    pub fn from_config(cfg: &Config) -> Self {
+        CoordinatorConfig {
+            artifacts_dir: PathBuf::from(&cfg.artifacts_dir),
+            network: cfg.network.clone(),
+            env: cfg.transmit_env(),
+            jpeg_quality: cfg.jpeg_quality,
+            cloud_pool: 2,
+            workers: cfg.workers,
+            jitter: cfg.jitter,
+            time_scale: cfg.time_scale,
+            force_split: None,
+            warm_splits: Vec::new(),
+            seed: cfg.seed,
+        }
+    }
+}
+
+/// The serving coordinator (see module docs of [`crate::coordinator`]).
+pub struct Coordinator {
+    config: CoordinatorConfig,
+    partitioner: Partitioner,
+    net: Network,
+    client: DeviceExecutor,
+    cloud: DeviceExecutor,
+    channel: Arc<Channel>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Coordinator {
+    /// Build the serving stack: analytic models + executor threads.
+    pub fn new(config: CoordinatorConfig) -> Result<Self> {
+        let net = Network::by_name(&config.network)
+            .ok_or_else(|| anyhow!("unknown network '{}'", config.network))?;
+        let model = CnnErgy::inference_8bit();
+        let partitioner = Partitioner::new(&net, &model);
+        let client = DeviceExecutor::spawn(
+            "client",
+            config.artifacts_dir.clone(),
+            config.network.clone(),
+            1,
+            config.warm_splits.clone(),
+        )
+        .context("spawning client executor")?;
+        let cloud = DeviceExecutor::spawn(
+            "cloud",
+            config.artifacts_dir.clone(),
+            config.network.clone(),
+            config.cloud_pool.max(1),
+            config.warm_splits.clone(),
+        )
+        .context("spawning cloud executor pool")?;
+        let channel = Arc::new(Channel::new(
+            ChannelConfig {
+                env: config.env,
+                jitter: config.jitter,
+                time_scale: config.time_scale,
+            },
+            config.seed,
+        ));
+        Ok(Coordinator {
+            config,
+            partitioner,
+            net,
+            client,
+            cloud,
+            channel,
+            metrics: Arc::new(Metrics::new()),
+        })
+    }
+
+    pub fn partitioner(&self) -> &Partitioner {
+        &self.partitioner
+    }
+
+    pub fn network(&self) -> &Network {
+        &self.net
+    }
+
+    /// Precompile the hot split points so serving latency is steady-state.
+    pub fn warm_up(&self, splits: &[usize]) -> Result<()> {
+        self.client.handle().warm_up(splits.to_vec())?;
+        self.cloud.handle().warm_up(splits.to_vec())?;
+        Ok(())
+    }
+
+    /// Serve one request synchronously (the worker body).
+    pub fn process(
+        &self,
+        req: &InferenceRequest,
+        client: &ExecutorHandle,
+        cloud: &ExecutorHandle,
+    ) -> Result<InferenceResponse> {
+        let t_start = Instant::now();
+        let n_layers = self.partitioner.num_layers();
+
+        // 1. Probe the JPEG-compressed input (Alg. 2 line 1): yields both
+        //    Sparsity-In and the *measured* compressed size.
+        let probe = compress_rgb(&req.pixels, req.width, req.height, self.config.jpeg_quality);
+
+        // 2. Runtime partition decision (Alg. 2 lines 2-7), with the input
+        //    layer's D_RLC taken from the measured probe size.
+        let decision = self
+            .partitioner
+            .decide_with_input_bits(probe.bits as f64, &self.config.env);
+        let split = self.config.force_split.unwrap_or(decision.l_opt);
+        let t_decide = t_start.elapsed();
+
+        // 3. Client prefix execution (layers 1..=split) on the device.
+        let t_client_start = Instant::now();
+        let activation = if split > 0 {
+            client.run_prefix(split, req.tensor.clone())?
+        } else {
+            Vec::new()
+        };
+        let t_client = t_client_start.elapsed();
+
+        // 4. Ship data over the (simulated) uplink.
+        let t_chan_start = Instant::now();
+        let (transmit_bits, transmit_energy_j, quantized) = if split == 0 {
+            // FCC: upload the JPEG-compressed image.
+            let bits = probe.bits;
+            let (e, _) = self.channel.send(bits);
+            (bits, e, None)
+        } else if split < n_layers {
+            // Partitioned: quantize + RLC-encode the activation for real.
+            let (q, scale) = rlc::quantize(&activation, 8);
+            let enc = rlc::encode(&q, 8);
+            let bits = enc.len_bits() as u64;
+            let (e, _) = self.channel.send(bits);
+            (bits, e, Some((enc, scale)))
+        } else {
+            // FISC: only the class index comes back.
+            let (e, _) = self.channel.send(FISC_OUTPUT_BITS as u64);
+            (FISC_OUTPUT_BITS as u64, e, None)
+        };
+        let t_channel = t_chan_start.elapsed();
+
+        // 5. Cloud suffix execution (layers split+1..).
+        let t_cloud_start = Instant::now();
+        let logits = if split == 0 {
+            cloud.run_suffix(0, req.tensor.clone())?
+        } else if split < n_layers {
+            let (enc, scale) = quantized.unwrap();
+            // The cloud decodes the RLC stream and dequantizes.
+            let q = rlc::decode(&enc, 8);
+            let dequant: Vec<f32> = q.iter().map(|&v| v as f32 * scale).collect();
+            cloud.run_suffix(split, dequant)?
+        } else {
+            activation
+        };
+        let t_cloud = t_cloud_start.elapsed();
+
+        let site = if split == 0 {
+            ExecutionSite::Cloud
+        } else if split == n_layers {
+            ExecutionSite::Client
+        } else {
+            ExecutionSite::Partitioned
+        };
+        Ok(InferenceResponse {
+            id: req.id,
+            logits,
+            split,
+            site,
+            sparsity_in: probe.sparsity,
+            transmit_bits,
+            client_energy_j: self.partitioner.client_energy_j(split),
+            transmit_energy_j,
+            t_decide,
+            t_client,
+            t_channel,
+            t_cloud,
+            t_total: t_start.elapsed(),
+        })
+    }
+
+    /// Serve a batch of requests through the admission queue + worker pool;
+    /// responses are returned in request order and recorded in
+    /// [`Self::metrics`].
+    pub fn serve(&self, requests: Vec<InferenceRequest>) -> Result<Vec<InferenceResponse>> {
+        let n = requests.len();
+        let id_base = requests.first().map(|r| r.id).unwrap_or(0);
+        // Admission queue sized to keep a bounded backlog ahead of the
+        // single client device (backpressure on the producer side).
+        let batcher: Arc<Batcher<InferenceRequest>> =
+            Arc::new(Batcher::new((2 * self.config.workers).max(4)));
+        let results: Arc<Mutex<Vec<Option<InferenceResponse>>>> =
+            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+
+        std::thread::scope(|scope| -> Result<()> {
+            let mut handles = Vec::new();
+            for _ in 0..self.config.workers.max(1) {
+                let batcher = batcher.clone();
+                let results = results.clone();
+                let client = self.client.handle();
+                let cloud = self.cloud.handle();
+                handles.push(scope.spawn(move || -> Result<()> {
+                    while let Some((req, _queued_for)) = batcher.take() {
+                        let idx = (req.id - id_base) as usize;
+                        let resp = self.process(&req, &client, &cloud)?;
+                        self.metrics.record(&resp);
+                        results.lock().unwrap()[idx] = Some(resp);
+                    }
+                    Ok(())
+                }));
+            }
+            // Producer: push everything through the bounded queue, then
+            // close it so workers drain and exit.
+            for req in requests {
+                if batcher.submit(req, None) != Submit::Accepted {
+                    batcher.close();
+                    return Err(anyhow!("admission queue closed early"));
+                }
+            }
+            batcher.close();
+            for h in handles {
+                h.join().map_err(|_| anyhow!("worker panicked"))??;
+            }
+            Ok(())
+        })?;
+
+        let collected: Vec<InferenceResponse> = Arc::try_unwrap(results)
+            .map_err(|_| anyhow!("results still shared"))?
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.ok_or_else(|| anyhow!("missing response")))
+            .collect::<Result<_>>()?;
+        Ok(collected)
+    }
+}

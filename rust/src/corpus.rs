@@ -1,0 +1,173 @@
+//! Synthetic image corpus — the offline substitute for the paper's ~10,000
+//! ImageNet validation images (DESIGN.md §5).
+//!
+//! Images are procedural mixtures of natural-image ingredients — smooth
+//! low-frequency gradients, sinusoidal textures, hard-edged rectangles and
+//! broadband noise — with a per-image `texture` weight drawn from a wide
+//! distribution. Smooth images quantize to sparse DCT coefficient sets
+//! (high `Sparsity-In`), textured ones don't: exactly the mechanism that
+//! spreads Fig. 12. All generation is deterministic in the image index.
+
+use crate::util::rng::Rng;
+
+/// A synthetic RGB image, `w`×`h`, interleaved RGB, values in `[0, 255]`.
+#[derive(Clone, Debug)]
+pub struct Image {
+    pub w: usize,
+    pub h: usize,
+    pub pixels: Vec<f64>,
+    /// The texture weight used to generate it (diagnostic).
+    pub texture: f64,
+}
+
+impl Image {
+    /// As normalized `[0,1]` f32s in NHWC order for the Tiny* networks.
+    pub fn to_f32_nhwc(&self) -> Vec<f32> {
+        self.pixels.iter().map(|&p| (p / 255.0) as f32).collect()
+    }
+}
+
+/// Deterministic corpus generator.
+pub struct Corpus {
+    pub w: usize,
+    pub h: usize,
+    seed: u64,
+}
+
+impl Corpus {
+    pub fn new(w: usize, h: usize, seed: u64) -> Self {
+        assert!(w % 8 == 0 && h % 8 == 0, "JPEG blocks need multiples of 8");
+        Self { w, h, seed }
+    }
+
+    /// The corpus used by the paper-scale experiments (Figs. 10, 12, 13).
+    pub fn imagenet_like(seed: u64) -> Self {
+        Self::new(64, 64, seed)
+    }
+
+    /// Generate image `index`. Same `(seed, index)` → identical image.
+    pub fn image(&self, index: usize) -> Image {
+        let mut rng = Rng::new(self.seed ^ (index as u64).wrapping_mul(0x9E37_79B9));
+        let (w, h) = (self.w, self.h);
+
+        // Texture weight: cubing a uniform skews the corpus toward smooth,
+        // JPEG-friendly images (as natural photos are), while the tail
+        // keeps heavily textured ones — spanning the Fig. 12 spread.
+        let texture = 0.02 + 0.98 * rng.next_f64().powi(3);
+
+        // Base: 2-D gradient + up to 3 low-frequency sinusoids.
+        let gx = rng.next_f64() * 2.0 - 1.0;
+        let gy = rng.next_f64() * 2.0 - 1.0;
+        let n_waves = rng.range_usize(1, 3);
+        let waves: Vec<(f64, f64, f64, f64)> = (0..n_waves)
+            .map(|_| {
+                (
+                    rng.next_f64() * 4.0 * std::f64::consts::PI / w as f64,
+                    rng.next_f64() * 4.0 * std::f64::consts::PI / h as f64,
+                    rng.next_f64() * 2.0 * std::f64::consts::PI,
+                    20.0 + rng.next_f64() * 40.0,
+                )
+            })
+            .collect();
+
+        // A few hard-edged rectangles (object-like structure).
+        let n_rects = rng.range_usize(0, 3);
+        let rects: Vec<(usize, usize, usize, usize, f64)> = (0..n_rects)
+            .map(|_| {
+                let x0 = rng.range_usize(0, w - 2);
+                let y0 = rng.range_usize(0, h - 2);
+                let rw = rng.range_usize(1, w - x0 - 1);
+                let rh = rng.range_usize(1, h - y0 - 1);
+                (x0, y0, rw, rh, rng.next_f64() * 120.0 - 60.0)
+            })
+            .collect();
+
+        let base_lum = 60.0 + rng.next_f64() * 120.0;
+        let chroma = [rng.next_f64() * 0.4 + 0.8, 1.0, rng.next_f64() * 0.4 + 0.8];
+
+        let mut pixels = vec![0.0; w * h * 3];
+        for y in 0..h {
+            for x in 0..w {
+                let mut v = base_lum + gx * x as f64 + gy * y as f64;
+                for &(fx, fy, ph, amp) in &waves {
+                    v += amp * (fx * x as f64 + fy * y as f64 + ph).sin();
+                }
+                for &(x0, y0, rw, rh, dv) in &rects {
+                    if x >= x0 && x < x0 + rw && y >= y0 && y < y0 + rh {
+                        v += dv;
+                    }
+                }
+                // Broadband noise scaled by the texture weight.
+                v += texture * 30.0 * rng.next_gaussian();
+                for ch in 0..3 {
+                    let p = (v * chroma[ch]).clamp(0.0, 255.0);
+                    pixels[(y * w + x) * 3 + ch] = p;
+                }
+            }
+        }
+        Image {
+            w,
+            h,
+            pixels,
+            texture,
+        }
+    }
+
+    /// Iterate the first `n` images.
+    pub fn iter(&self, n: usize) -> impl Iterator<Item = Image> + '_ {
+        (0..n).map(move |i| self.image(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::jpeg::compress_rgb;
+    use crate::util::stats::{mean, quantile, std_dev};
+
+    #[test]
+    fn deterministic_generation() {
+        let c = Corpus::imagenet_like(7);
+        let a = c.image(13);
+        let b = c.image(13);
+        assert_eq!(a.pixels, b.pixels);
+        assert_ne!(a.pixels, c.image(14).pixels);
+    }
+
+    #[test]
+    fn pixels_in_range() {
+        let c = Corpus::imagenet_like(1);
+        for img in c.iter(5) {
+            assert!(img.pixels.iter().all(|&p| (0.0..=255.0).contains(&p)));
+            assert_eq!(img.pixels.len(), 64 * 64 * 3);
+        }
+    }
+
+    #[test]
+    fn sparsity_in_spreads_like_fig12() {
+        // Fig. 12/13: Sparsity-In quartiles near 52% / 61% / 69%. Our corpus
+        // must produce a wide unimodal spread in that neighborhood.
+        let c = Corpus::imagenet_like(42);
+        let sps: Vec<f64> = c
+            .iter(120)
+            .map(|img| compress_rgb(&img.pixels, img.w, img.h, 90).sparsity)
+            .collect();
+        let (q1, q2, q3) = (
+            quantile(&sps, 0.25),
+            quantile(&sps, 0.5),
+            quantile(&sps, 0.75),
+        );
+        assert!(q3 - q1 > 0.05, "IQR too narrow: {q1:.3}..{q3:.3}");
+        assert!((0.35..0.90).contains(&q2), "median {q2:.3} out of band");
+        assert!(std_dev(&sps) > 0.04, "spread {} too small", std_dev(&sps));
+        assert!(mean(&sps) > 0.3);
+    }
+
+    #[test]
+    fn f32_conversion_normalized() {
+        let c = Corpus::new(32, 32, 3);
+        let v = c.image(0).to_f32_nhwc();
+        assert_eq!(v.len(), 32 * 32 * 3);
+        assert!(v.iter().all(|&x| (0.0..=1.0).contains(&x)));
+    }
+}

@@ -1,0 +1,32 @@
+//! CSV output helper for the experiment generators.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Write `header` + `rows` to `dir/name.csv` (creating `dir`).
+pub fn write_csv(dir: &Path, name: &str, header: &str, rows: &[String]) -> Result<()> {
+    std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+    let path = dir.join(format!("{name}.csv"));
+    let mut out = String::with_capacity(rows.len() * 32 + header.len() + 1);
+    out.push_str(header);
+    out.push('\n');
+    for r in rows {
+        out.push_str(r);
+        out.push('\n');
+    }
+    std::fs::write(&path, out).with_context(|| format!("writing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_file() {
+        let dir = std::env::temp_dir().join("neupart_csv_test");
+        write_csv(&dir, "t", "a,b", &["1,2".into(), "3,4".into()]).unwrap();
+        let text = std::fs::read_to_string(dir.join("t.csv")).unwrap();
+        assert_eq!(text, "a,b\n1,2\n3,4\n");
+    }
+}

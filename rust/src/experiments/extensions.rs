@@ -1,0 +1,113 @@
+//! Extension experiments beyond the paper's figures:
+//!
+//! * `qsweep` — JPEG quality factor exploration: the paper fixes Q=90
+//!   ("a lower Q provides greater compression but … accuracy degradation");
+//!   this sweep quantifies the Sparsity-In / upload-size tradeoff behind
+//!   that choice.
+//! * `slo` — latency-constrained partitioning (partition::constrained):
+//!   energy at the optimal split as the inference-delay SLO tightens.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::channel::TransmitEnv;
+use crate::cnn::alexnet;
+use crate::cnnergy::CnnErgy;
+use crate::compress::jpeg::compress_rgb;
+use crate::corpus::Corpus;
+use crate::partition::algorithm2::paper_partitioner;
+use crate::partition::{decide_with_slo, DelayModel};
+use crate::util::stats::mean;
+
+use super::csvout::write_csv;
+use super::fig11::MEDIAN_SPARSITY_IN;
+
+pub fn run_qsweep(out_dir: &Path) -> Result<String> {
+    let corpus = Corpus::imagenet_like(7);
+    let images: Vec<_> = corpus.iter(40).collect();
+    let mut rows = Vec::new();
+    let mut report = String::from(
+        "JPEG quality sweep (40 corpus images):\nQ    mean_sparsity_in  mean_kbit  fcc_energy_mJ@80Mbps/0.78W\n",
+    );
+    for q in [30u8, 50, 70, 80, 90, 95] {
+        let stats: Vec<_> = images
+            .iter()
+            .map(|img| compress_rgb(&img.pixels, img.w, img.h, q))
+            .collect();
+        let sp = mean(&stats.iter().map(|s| s.sparsity).collect::<Vec<_>>());
+        let bits = mean(&stats.iter().map(|s| s.bits as f64).collect::<Vec<_>>());
+        let env = TransmitEnv::with_effective_rate(80e6, 0.78);
+        let e_fcc = env.energy_j(bits) * 1e3;
+        rows.push(format!("{q},{sp:.4},{:.2},{e_fcc:.4}", bits / 1e3));
+        report.push_str(&format!(
+            "{q:<4} {:>15.1}% {:>10.1} {:>12.4}\n",
+            sp * 100.0,
+            bits / 1e3,
+            e_fcc
+        ));
+    }
+    report.push_str("(paper fixes Q=90: below that, accuracy degrades; above, uploads grow)\n");
+    write_csv(out_dir, "ext_jpeg_quality_sweep", "q,sparsity_in,kbit,fcc_mJ", &rows)?;
+    Ok(report)
+}
+
+pub fn run_slo(out_dir: &Path) -> Result<String> {
+    let net = alexnet();
+    let model = CnnErgy::inference_8bit();
+    let p = paper_partitioner(&net);
+    let dm = DelayModel::new(&net, &model);
+    let env = TransmitEnv::with_effective_rate(80e6, 0.78);
+
+    let mut rows = Vec::new();
+    let mut report = String::from(
+        "latency-constrained partitioning (AlexNet @ 80 Mbps / 0.78 W, Q2):\nSLO_ms   split   t_delay_ms   E_cost_mJ   feasible\n",
+    );
+    for slo_ms in [1.0f64, 5.0, 10.0, 15.0, 20.0, 30.0, 50.0, 100.0, 1000.0] {
+        let d = decide_with_slo(&p, &dm, MEDIAN_SPARSITY_IN, &env, slo_ms / 1e3);
+        let name = if d.inner.l_opt == 0 {
+            "In".to_string()
+        } else if d.inner.l_opt == net.num_layers() {
+            "out".to_string()
+        } else {
+            net.layers[d.inner.l_opt - 1].name.to_string()
+        };
+        rows.push(format!(
+            "{slo_ms},{name},{:.3},{:.4},{}",
+            d.t_delay_s * 1e3,
+            d.inner.costs_j[d.inner.l_opt] * 1e3,
+            d.feasible
+        ));
+        report.push_str(&format!(
+            "{slo_ms:>6.0} {name:>7} {:>12.2} {:>11.4} {:>10}\n",
+            d.t_delay_s * 1e3,
+            d.inner.costs_j[d.inner.l_opt] * 1e3,
+            d.feasible
+        ));
+    }
+    report.push_str("(tight SLOs force cloud offload; loose SLOs recover the energy optimum)\n");
+    write_csv(out_dir, "ext_slo_sweep", "slo_ms,split,t_delay_ms,e_cost_mJ,feasible", &rows)?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qsweep_monotone_tradeoffs() {
+        let corpus = Corpus::imagenet_like(7);
+        let img = corpus.image(0);
+        let lo = compress_rgb(&img.pixels, img.w, img.h, 30);
+        let hi = compress_rgb(&img.pixels, img.w, img.h, 95);
+        assert!(lo.sparsity > hi.sparsity);
+        assert!(lo.bits < hi.bits);
+    }
+
+    #[test]
+    fn both_generators_run() {
+        let dir = std::env::temp_dir().join("neupart_ext");
+        assert!(run_qsweep(&dir).unwrap().contains("Q"));
+        assert!(run_slo(&dir).unwrap().contains("SLO"));
+    }
+}

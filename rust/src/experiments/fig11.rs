@@ -1,0 +1,90 @@
+//! Fig. 11: per-layer energy cost `E_Cost` for (a) AlexNet and
+//! (b) SqueezeNet-v1.1 at `B_e` = 100 Mbps, `P_Tx` = 1.14 W (BlackBerry
+//! Z10). The paper finds P2 optimal for AlexNet (39.65% vs FCC, 22.7% vs
+//! FISC) and Fs6 for SqueezeNet (66.9% / 25.8%).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::channel::TransmitEnv;
+use crate::cnn::{alexnet, squeezenet_v11, Network};
+use crate::partition::algorithm2::paper_partitioner;
+
+use super::csvout::write_csv;
+
+/// Median Sparsity-In (Fig. 12's Q2 = 60.80%).
+pub const MEDIAN_SPARSITY_IN: f64 = 0.6080;
+
+fn panel(net: &Network, out_dir: &Path, file: &str) -> Result<String> {
+    let env = TransmitEnv::with_effective_rate(100.0e6, 1.14);
+    let p = paper_partitioner(net);
+    let d = p.decide(MEDIAN_SPARSITY_IN, &env);
+
+    let mut rows = Vec::new();
+    let mut report = format!("{} @ 100 Mbps, 1.14 W:\nlayer  E_cost_mJ\n", net.name);
+    for (split, cost) in d.costs_j.iter().enumerate() {
+        let name = if split == 0 {
+            "In"
+        } else {
+            net.layers[split - 1].name
+        };
+        let marker = if split == d.l_opt { "  <-- optimal" } else { "" };
+        rows.push(format!("{name},{:.4}", cost * 1e3));
+        report.push_str(&format!("{name:<6} {:>9.4}{marker}\n", cost * 1e3));
+    }
+    report.push_str(&format!(
+        "savings: {:.1}% vs FCC, {:.1}% vs FISC\n",
+        d.savings_vs_fcc() * 100.0,
+        d.savings_vs_fisc() * 100.0
+    ));
+    write_csv(out_dir, file, "layer,e_cost_mJ", &rows)?;
+    Ok(report)
+}
+
+pub fn run(out_dir: &Path) -> Result<String> {
+    let a = panel(&alexnet(), out_dir, "fig11a_alexnet_ecost")?;
+    let b = panel(&squeezenet_v11(), out_dir, "fig11b_squeezenet_ecost")?;
+    Ok(format!("{a}\n{b}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::TransmitEnv;
+    use crate::partition::FCC;
+
+    #[test]
+    fn intermediate_optimum_for_both_networks() {
+        let env = TransmitEnv::with_effective_rate(100.0e6, 1.14);
+        for net in [alexnet(), squeezenet_v11()] {
+            let p = paper_partitioner(&net);
+            let d = p.decide(MEDIAN_SPARSITY_IN, &env);
+            assert!(
+                d.l_opt > FCC && d.l_opt < p.num_layers(),
+                "{}: l_opt {}",
+                net.name,
+                d.l_opt
+            );
+        }
+    }
+
+    #[test]
+    fn squeezenet_optimal_at_a_fire_squeeze_layer() {
+        // Paper: Fs6 optimal — squeeze outputs are the skinny waists.
+        let net = squeezenet_v11();
+        let p = paper_partitioner(&net);
+        let env = TransmitEnv::with_effective_rate(100.0e6, 1.14);
+        let d = p.decide(MEDIAN_SPARSITY_IN, &env);
+        let name = net.layers[d.l_opt - 1].name;
+        assert!(name.starts_with("Fs") || name.starts_with('P'), "opt {name}");
+    }
+
+    #[test]
+    fn report_includes_both_panels() {
+        let dir = std::env::temp_dir().join("neupart_fig11");
+        let r = run(&dir).unwrap();
+        assert!(r.contains("alexnet") && r.contains("squeezenet"));
+        assert!(r.contains("optimal"));
+    }
+}

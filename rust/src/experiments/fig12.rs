@@ -1,0 +1,84 @@
+//! Fig. 12: distribution of `Sparsity-In` (JPEG-Q90 coefficient sparsity)
+//! over the image corpus, with the quartile boundaries Q1/Q2/Q3 that
+//! Fig. 13 and Table V condition on.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::compress::jpeg::compress_rgb;
+use crate::corpus::Corpus;
+use crate::util::stats::{histogram, quantile};
+
+use super::csvout::write_csv;
+
+pub const DEFAULT_IMAGES: usize = 600;
+
+/// The corpus Sparsity-In samples (deterministic).
+pub fn sparsity_in_samples(n: usize) -> Vec<f64> {
+    let corpus = Corpus::imagenet_like(2020);
+    corpus
+        .iter(n)
+        .map(|img| compress_rgb(&img.pixels, img.w, img.h, 90).sparsity)
+        .collect()
+}
+
+/// The corpus quartiles (Q1, Q2, Q3) used across Figs. 12/13 and Table V.
+pub fn quartiles(n: usize) -> (f64, f64, f64) {
+    let sps = sparsity_in_samples(n);
+    (
+        quantile(&sps, 0.25),
+        quantile(&sps, 0.50),
+        quantile(&sps, 0.75),
+    )
+}
+
+pub fn run(out_dir: &Path, n: usize) -> Result<String> {
+    let sps = sparsity_in_samples(n);
+    let bins = 24;
+    let (lo, hi) = (0.2, 1.0);
+    let hist = histogram(&sps, lo, hi, bins);
+    let (q1, q2, q3) = (
+        quantile(&sps, 0.25),
+        quantile(&sps, 0.50),
+        quantile(&sps, 0.75),
+    );
+
+    let mut rows = Vec::new();
+    let mut report = format!("Sparsity-In over {n} corpus images:\n");
+    let width = (hi - lo) / bins as f64;
+    let max = *hist.iter().max().unwrap_or(&1) as f64;
+    for (i, &count) in hist.iter().enumerate() {
+        let center = lo + (i as f64 + 0.5) * width;
+        rows.push(format!("{center:.3},{count}"));
+        let bar = "#".repeat((count as f64 / max * 40.0).round() as usize);
+        report.push_str(&format!("{center:>6.3} {count:>5} {bar}\n"));
+    }
+    report.push_str(&format!(
+        "\nQ1 = {:.2}%  Q2 = {:.2}%  Q3 = {:.2}%  (paper: 51.99 / 60.80 / 69.09)\n",
+        q1 * 100.0,
+        q2 * 100.0,
+        q3 * 100.0
+    ));
+    write_csv(out_dir, "fig12_sparsity_in_hist", "sparsity_in,count", &rows)?;
+    write_csv(
+        out_dir,
+        "fig12_quartiles",
+        "q1,q2,q3",
+        &[format!("{q1:.4},{q2:.4},{q3:.4}")],
+    )?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quartiles_spread_and_ordered() {
+        let (q1, q2, q3) = quartiles(80);
+        assert!(q1 < q2 && q2 < q3);
+        assert!(q3 - q1 > 0.04, "IQR {:.3} too narrow", q3 - q1);
+        assert!((0.3..0.95).contains(&q2));
+    }
+}

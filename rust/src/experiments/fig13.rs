@@ -1,0 +1,118 @@
+//! Fig. 13: AlexNet energy savings at the optimal partition vs FCC and
+//! FISC, swept over the effective bit rate `B_e`, for `P_Tx` ∈ {0.78 W,
+//! 1.28 W} and images at the Sparsity-In quartiles Q1/Q2/Q3.
+//!
+//! A 0% savings vs FCC [FISC] marks the region where the In [output] layer
+//! is itself optimal — the paper's "wide space" claim is that between those
+//! regions an intermediate layer wins with substantial savings.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::channel::TransmitEnv;
+use crate::cnn::alexnet;
+use crate::partition::algorithm2::paper_partitioner;
+
+use super::csvout::write_csv;
+
+/// Paper's quartile Sparsity-In values (Fig. 13 captions).
+pub const PAPER_QUARTILES: [(&str, f64); 3] =
+    [("Q1", 0.5199), ("Q2", 0.6080), ("Q3", 0.6909)];
+
+pub const P_TX_SWEEP: [f64; 2] = [0.78, 1.28];
+
+/// B_e sweep in Mbps.
+pub fn be_sweep_mbps() -> Vec<f64> {
+    let mut v = Vec::new();
+    let mut b = 5.0;
+    while b <= 300.0 {
+        v.push(b);
+        b += 5.0;
+    }
+    v
+}
+
+pub fn run(out_dir: &Path) -> Result<String> {
+    let net = alexnet();
+    let p = paper_partitioner(&net);
+    let mut rows = Vec::new();
+    let mut report =
+        String::from("AlexNet savings at optimal partition (columns: savings_vs_FCC% / savings_vs_FISC%)\n");
+
+    for (qname, sp) in PAPER_QUARTILES {
+        report.push_str(&format!("\nSparsity-In {qname} = {:.2}%\n", sp * 100.0));
+        report.push_str("  Be_Mbps   P_Tx=0.78W          P_Tx=1.28W\n");
+        for be in be_sweep_mbps() {
+            let mut cols = Vec::new();
+            for p_tx in P_TX_SWEEP {
+                let env = TransmitEnv::with_effective_rate(be * 1e6, p_tx);
+                let d = p.decide(sp, &env);
+                let fcc = d.savings_vs_fcc() * 100.0;
+                let fisc = d.savings_vs_fisc() * 100.0;
+                rows.push(format!("{qname},{be},{p_tx},{fcc:.2},{fisc:.2},{}", d.l_opt));
+                cols.push(format!("{fcc:>6.1} / {fisc:>5.1}"));
+            }
+            if (be as u64) % 20 == 0 || be <= 20.0 {
+                report.push_str(&format!("  {be:>7.0}   {}   {}\n", cols[0], cols[1]));
+            }
+        }
+    }
+    write_csv(
+        out_dir,
+        "fig13_alexnet_savings",
+        "quartile,be_mbps,p_tx_w,savings_vs_fcc_pct,savings_vs_fisc_pct,l_opt",
+        &rows,
+    )?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::FCC;
+
+    #[test]
+    fn wide_intermediate_region_exists_at_q1() {
+        // Paper: "for a wide range of communication environments, the
+        // optimal layer is an intermediate layer".
+        let p = paper_partitioner(&alexnet());
+        let mut intermediate = 0;
+        for be in be_sweep_mbps() {
+            let env = TransmitEnv::with_effective_rate(be * 1e6, 0.78);
+            let d = p.decide(0.5199, &env);
+            if d.l_opt != FCC && d.l_opt != p.num_layers() {
+                intermediate += 1;
+            }
+        }
+        assert!(intermediate > 10, "only {intermediate} intermediate points");
+    }
+
+    #[test]
+    fn higher_ptx_shifts_crossover_right() {
+        // Paper: with higher P_Tx the savings region exhibits a right shift
+        // (FCC becomes competitive only at higher bit rates).
+        let p = paper_partitioner(&alexnet());
+        let first_fcc = |p_tx: f64| -> f64 {
+            for be in be_sweep_mbps() {
+                let env = TransmitEnv::with_effective_rate(be * 1e6, p_tx);
+                if p.decide(0.6909, &env).l_opt == FCC {
+                    return be;
+                }
+            }
+            f64::INFINITY
+        };
+        assert!(first_fcc(1.28) >= first_fcc(0.78));
+    }
+
+    #[test]
+    fn savings_vs_fisc_independent_of_sparsity_in() {
+        let p = paper_partitioner(&alexnet());
+        let env = TransmitEnv::with_effective_rate(80e6, 0.78);
+        let a = p.decide(0.52, &env);
+        let b = p.decide(0.69, &env);
+        if a.l_opt == b.l_opt && a.l_opt != FCC {
+            assert!((a.savings_vs_fisc() - b.savings_vs_fisc()).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! Fig. 14: (a) inference delay of energy-optimal partitioning vs FCC/FISC;
+//! (b) `E_Cost` vs `B_e` when pinned at P1/P2/P3 (the flat-valley
+//! robustness analysis); (c) design-space exploration — total AlexNet
+//! energy vs GLB size.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::channel::TransmitEnv;
+use crate::cnn::alexnet;
+use crate::cnnergy::CnnErgy;
+use crate::partition::algorithm2::paper_partitioner;
+use crate::partition::DelayModel;
+
+use super::csvout::write_csv;
+use super::fig11::MEDIAN_SPARSITY_IN;
+
+pub fn run_a(out_dir: &Path) -> Result<String> {
+    let net = alexnet();
+    let model = CnnErgy::inference_8bit();
+    let p = paper_partitioner(&net);
+    let dm = DelayModel::new(&net, &model);
+
+    let mut rows = Vec::new();
+    let mut report =
+        String::from("AlexNet inference delay at Q2 (ms):\nBe_Mbps   optimal      FCC     FISC  l_opt\n");
+    let mut be = 10.0;
+    while be <= 300.0 {
+        let env = TransmitEnv::with_effective_rate(be * 1e6, 0.78);
+        let d = p.decide(MEDIAN_SPARSITY_IN, &env);
+        let t_opt = dm.t_delay_s(d.l_opt, d.transmit_bits, &env) * 1e3;
+        let t_fcc = dm.fcc_delay_s(p.transmit_bits(0, MEDIAN_SPARSITY_IN), &env) * 1e3;
+        let t_fisc = dm.fisc_delay_s(&env) * 1e3;
+        rows.push(format!("{be},{t_opt:.3},{t_fcc:.3},{t_fisc:.3},{}", d.l_opt));
+        if (be as u64) % 20 == 0 || be <= 20.0 {
+            report.push_str(&format!(
+                "{be:>7.0} {t_opt:>9.2} {t_fcc:>8.2} {t_fisc:>8.2}  {}\n",
+                if d.l_opt == 0 {
+                    "In".to_string()
+                } else if d.l_opt == net.layers.len() {
+                    "out".to_string()
+                } else {
+                    net.layers[d.l_opt - 1].name.to_string()
+                }
+            ));
+        }
+        be += 10.0;
+    }
+    write_csv(
+        out_dir,
+        "fig14a_delay",
+        "be_mbps,t_optimal_ms,t_fcc_ms,t_fisc_ms,l_opt",
+        &rows,
+    )?;
+    Ok(report)
+}
+
+pub fn run_b(out_dir: &Path) -> Result<String> {
+    let net = alexnet();
+    let p = paper_partitioner(&net);
+    let pools: Vec<(usize, &str)> = ["P1", "P2", "P3"]
+        .iter()
+        .map(|n| (net.layer_index(n).unwrap() + 1, *n))
+        .collect();
+
+    let mut rows = Vec::new();
+    let mut report = String::from(
+        "AlexNet E_Cost (mJ) pinned at pooling layers, Q2, P_Tx = 0.78 W:\nBe_Mbps       P1       P2       P3\n",
+    );
+    let mut crossovers = Vec::new();
+    let mut prev_best: Option<&str> = None;
+    let mut be = 5.0;
+    while be <= 250.0 {
+        let env = TransmitEnv::with_effective_rate(be * 1e6, 0.78);
+        let d = p.decide(MEDIAN_SPARSITY_IN, &env);
+        let costs: Vec<f64> = pools
+            .iter()
+            .map(|&(split, _)| d.costs_j[split] * 1e3)
+            .collect();
+        let best = pools[costs
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0]
+            .1;
+        if prev_best.is_some() && prev_best != Some(best) {
+            crossovers.push((be, prev_best.unwrap(), best));
+        }
+        prev_best = Some(best);
+        rows.push(format!("{be},{:.4},{:.4},{:.4},{best}", costs[0], costs[1], costs[2]));
+        if (be as u64) % 20 == 0 || be <= 15.0 {
+            report.push_str(&format!(
+                "{be:>7.0} {:>8.3} {:>8.3} {:>8.3}  best={best}\n",
+                costs[0], costs[1], costs[2]
+            ));
+        }
+        be += 1.0;
+    }
+    for (be, from, to) in &crossovers {
+        report.push_str(&format!("crossover at {be:.0} Mbps: {from} -> {to}\n"));
+    }
+    report.push_str("(paper: P3 optimal 17-48 Mbps, P2 49-135, P1 136-164; valley is flat)\n");
+    write_csv(out_dir, "fig14b_pinned_pools", "be_mbps,p1_mJ,p2_mJ,p3_mJ,best", &rows)?;
+    Ok(report)
+}
+
+pub fn run_c(out_dir: &Path) -> Result<String> {
+    let net = alexnet();
+    let mut rows = Vec::new();
+    let mut report = String::from("AlexNet total energy vs GLB size (8-bit):\nGLB_kB  total_mJ\n");
+    let mut best = (0usize, f64::INFINITY);
+    let sizes_kb: Vec<usize> = (3..=9).map(|p| 1usize << p).chain([88, 96, 192]).collect();
+    let mut sizes = sizes_kb.clone();
+    sizes.sort_unstable();
+    for kb in sizes {
+        let model = CnnErgy::inference_8bit().with_glb_size(kb * 1024);
+        let total = model.total_energy_pj(&net) * 1e-9;
+        if total < best.1 {
+            best = (kb, total);
+        }
+        rows.push(format!("{kb},{total:.4}"));
+        report.push_str(&format!("{kb:>6} {total:>9.3}\n"));
+    }
+    report.push_str(&format!(
+        "\nminimum at {} kB (paper: 88 kB; 32 kB within ~2% of optimum)\n",
+        best.0
+    ));
+    write_csv(out_dir, "fig14c_glb_sweep", "glb_kB,total_mJ", &rows)?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig14b_crossover_order_p3_p2_p1() {
+        // As B_e grows, the optimum among {P1,P2,P3} walks backward
+        // (deeper -> shallower): P3 wins at low rates, P1 at high rates.
+        let net = alexnet();
+        let p = paper_partitioner(&net);
+        let best_at = |be: f64| {
+            let env = TransmitEnv::with_effective_rate(be * 1e6, 0.78);
+            let d = p.decide(MEDIAN_SPARSITY_IN, &env);
+            ["P1", "P2", "P3"]
+                .iter()
+                .map(|n| (*n, d.costs_j[net.layer_index(n).unwrap() + 1]))
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap()
+                .0
+        };
+        assert_eq!(best_at(5.0), "P3");
+        assert_eq!(best_at(1000.0), "P1");
+    }
+
+    #[test]
+    fn fig14b_valley_is_flat_at_crossover() {
+        // Paper: switching P2->P1 near the crossover changes energy
+        // negligibly (the robustness argument for bandwidth variation).
+        let net = alexnet();
+        let p = paper_partitioner(&net);
+        // Find the P2->P1 crossover.
+        let idx_p1 = net.layer_index("P1").unwrap() + 1;
+        let idx_p2 = net.layer_index("P2").unwrap() + 1;
+        let mut be = 5.0;
+        while be < 2000.0 {
+            let env = TransmitEnv::with_effective_rate(be * 1e6, 0.78);
+            let d = p.decide(MEDIAN_SPARSITY_IN, &env);
+            if d.costs_j[idx_p1] <= d.costs_j[idx_p2] {
+                let gap = (d.costs_j[idx_p1] - d.costs_j[idx_p2]).abs()
+                    / d.costs_j[idx_p2];
+                assert!(gap < 0.02, "valley not flat at {be} Mbps: {gap:.4}");
+                return;
+            }
+            be += 5.0;
+        }
+        panic!("no P2->P1 crossover found");
+    }
+
+    #[test]
+    fn fig14c_minimum_is_interior() {
+        // Paper Fig. 14(c): energy is high for tiny GLBs, dips, then grows
+        // again with GLB access cost — an interior minimum.
+        let net = alexnet();
+        let at = |kb: usize| {
+            CnnErgy::inference_8bit()
+                .with_glb_size(kb * 1024)
+                .total_energy_pj(&net)
+        };
+        let small = at(8);
+        let mid = at(96);
+        let large = at(2048);
+        assert!(mid < small, "mid {mid:.3e} vs small {small:.3e}");
+        assert!(mid < large, "mid {mid:.3e} vs large {large:.3e}");
+    }
+}

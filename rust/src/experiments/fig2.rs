@@ -1,0 +1,59 @@
+//! Fig. 2: (a) cumulative computation energy up to each AlexNet layer;
+//! (b) compressed output bits to transmit at each layer.
+//!
+//! The tension between the two monotone curves is the whole paper: energy
+//! grows with depth while transmit volume shrinks, so `E_Cost` bottoms out
+//! at an intermediate layer.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::cnn::alexnet;
+use crate::cnnergy::sparsity::{input_d_rlc_bits, layer_d_rlc_bits};
+use crate::cnnergy::CnnErgy;
+
+use super::csvout::write_csv;
+
+pub fn run(out_dir: &Path) -> Result<String> {
+    let net = alexnet();
+    let model = CnnErgy::inference_8bit();
+    let cum = model.cumulative_energy_pj(&net);
+    let d_rlc = layer_d_rlc_bits(&net, model.hw.b_w);
+    let d_in = input_d_rlc_bits(&net, model.hw.b_w, 0.608); // median image
+
+    let mut rows = vec![format!("In,0.0,{:.0}", d_in)];
+    let mut report = String::from("layer  cum_energy_mJ  transmit_kbit\n");
+    report.push_str(&format!("{:<6} {:>13.4} {:>14.1}\n", "In", 0.0, d_in / 1e3));
+    for ((layer, e), d) in net.layers.iter().zip(&cum).zip(&d_rlc) {
+        rows.push(format!("{},{:.6},{:.0}", layer.name, e * 1e-9, d));
+        report.push_str(&format!(
+            "{:<6} {:>13.4} {:>14.1}\n",
+            layer.name,
+            e * 1e-9,
+            d / 1e3
+        ));
+    }
+    write_csv(out_dir, "fig2_alexnet_cumulative", "layer,cum_energy_mJ,transmit_bits", &rows)?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_shapes_hold() {
+        // (a) cumulative energy monotone increasing; (b) transmit volume at
+        // the deep layers orders of magnitude below the input.
+        let dir = std::env::temp_dir().join("neupart_fig2");
+        let report = run(&dir).unwrap();
+        assert!(report.contains("FC8"));
+        let net = alexnet();
+        let model = CnnErgy::inference_8bit();
+        let cum = model.cumulative_energy_pj(&net);
+        assert!(cum.windows(2).all(|w| w[1] > w[0]));
+        let d = layer_d_rlc_bits(&net, 8);
+        assert!(d.last().unwrap() < &(d[0] / 20.0));
+    }
+}

@@ -1,0 +1,45 @@
+//! Fig. 8(b): percent clock slew vs load capacitance per buffer stage —
+//! the design rule that sizes/places the H-tree clock buffers (≤10% slew
+//! at 37 fF).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::cnnergy::clock::{slew_percent, ClockParams};
+use crate::cnnergy::HwConfig;
+
+use super::csvout::write_csv;
+
+pub fn run(out_dir: &Path) -> Result<String> {
+    let hw = HwConfig::eyeriss();
+    let p = ClockParams::eyeriss(&hw);
+    let mut rows = Vec::new();
+    let mut report = String::from("load_fF  slew_percent\n");
+    let mut load = 2.0;
+    while load <= 60.0 {
+        let s = slew_percent(&p, &hw, load);
+        rows.push(format!("{load:.1},{s:.3}"));
+        report.push_str(&format!("{load:>7.1} {s:>13.2}\n"));
+        load += 2.0;
+    }
+    write_csv(out_dir, "fig8b_slew_vs_load", "load_fF,slew_percent", &rows)?;
+    report.push_str(&format!(
+        "\nmax load for 10% slew: {:.0} fF (paper: 37 fF)\n",
+        10.0 / slew_percent(&p, &hw, 1.0)
+    ));
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ten_percent_crossing_near_37ff() {
+        let hw = HwConfig::eyeriss();
+        let p = ClockParams::eyeriss(&hw);
+        let max_load = 10.0 / slew_percent(&p, &hw, 1.0);
+        assert!((30.0..45.0).contains(&max_load), "crossing at {max_load} fF");
+    }
+}

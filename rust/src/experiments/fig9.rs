@@ -1,0 +1,139 @@
+//! Fig. 9: validation of CNNergy (paper §V).
+//!
+//! (a) AlexNet without `E_Cntrl`: CNNergy vs EyMap (the ad-hoc published
+//!     mapping) — the EyTool quantity.
+//! (b) AlexNet Conv layers including `E_Cntrl`, against the EyChip silicon
+//!     anchor (278 mW / 34.7 fps, excludes DRAM).
+//! (c) GoogleNet-v1: CNNergy with and without `E_Cntrl`.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::cnn::{alexnet, googlenet};
+use crate::cnnergy::validate::{
+    cnnergy_conv_energies, eychip_alexnet_conv_pj, eymap_alexnet_conv_energies,
+};
+use crate::cnnergy::CnnErgy;
+
+use super::csvout::write_csv;
+
+pub fn run_a(out_dir: &Path) -> Result<String> {
+    let model = CnnErgy::eyeriss_16bit();
+    let ours = cnnergy_conv_energies(&model, &alexnet());
+    let eymap = eymap_alexnet_conv_energies(&model);
+
+    let mut rows = Vec::new();
+    let mut report = String::from("layer  CNNergy_mJ  EyMap_mJ   (no E_Cntrl, 16-bit)\n");
+    for (name, e) in &ours {
+        let ey = eymap
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, e)| e.total_no_cntrl() * 1e-9);
+        rows.push(format!(
+            "{},{:.4},{}",
+            name,
+            e.total_no_cntrl() * 1e-9,
+            ey.map(|v| format!("{v:.4}")).unwrap_or_default()
+        ));
+        report.push_str(&format!(
+            "{:<6} {:>10.4} {:>9}\n",
+            name,
+            e.total_no_cntrl() * 1e-9,
+            ey.map(|v| format!("{v:.4}")).unwrap_or_else(|| "-".into())
+        ));
+    }
+    write_csv(out_dir, "fig9a_alexnet_validation", "layer,cnnergy_mJ,eymap_mJ", &rows)?;
+    Ok(report)
+}
+
+pub fn run_b(out_dir: &Path) -> Result<String> {
+    let model = CnnErgy::eyeriss_16bit();
+    let ours = cnnergy_conv_energies(&model, &alexnet());
+    let eymap = eymap_alexnet_conv_energies(&model);
+
+    let mut rows = Vec::new();
+    let mut report =
+        String::from("layer  CNNergy_mJ  EyMap_mJ   (with E_Cntrl, chip-only = no DRAM)\n");
+    let mut ours_chip_total = 0.0;
+    for (name, e) in ours.iter().filter(|(n, _)| n.starts_with('C')) {
+        let chip = (e.total() - e.dram) * 1e-9;
+        ours_chip_total += chip;
+        let ey = eymap
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, e)| (e.total() - e.dram) * 1e-9);
+        rows.push(format!(
+            "{},{:.4},{}",
+            name,
+            chip,
+            ey.map(|v| format!("{v:.4}")).unwrap_or_default()
+        ));
+        report.push_str(&format!(
+            "{:<6} {:>10.4} {:>9}\n",
+            name,
+            chip,
+            ey.map(|v| format!("{v:.4}")).unwrap_or_else(|| "-".into())
+        ));
+    }
+    let anchor = eychip_alexnet_conv_pj() * 1e-9;
+    report.push_str(&format!(
+        "\nConv total (chip): CNNergy {ours_chip_total:.2} mJ vs EyChip {anchor:.2} mJ (ratio {:.2})\n",
+        ours_chip_total / anchor
+    ));
+    rows.push(format!("EyChip_total,{anchor:.4},"));
+    write_csv(out_dir, "fig9b_alexnet_cntrl_validation", "layer,cnnergy_mJ,eymap_mJ", &rows)?;
+    Ok(report)
+}
+
+pub fn run_c(out_dir: &Path) -> Result<String> {
+    let model = CnnErgy::eyeriss_16bit();
+    let net = googlenet();
+    let breakdowns = model.network_breakdowns(&net);
+
+    let mut rows = Vec::new();
+    let mut report = String::from("layer  no_cntrl_mJ  with_cntrl_mJ   (GoogleNet-v1, 16-bit)\n");
+    for (layer, e) in net.layers.iter().zip(&breakdowns) {
+        rows.push(format!(
+            "{},{:.4},{:.4}",
+            layer.name,
+            e.total_no_cntrl() * 1e-9,
+            e.total() * 1e-9
+        ));
+        report.push_str(&format!(
+            "{:<6} {:>11.4} {:>13.4}\n",
+            layer.name,
+            e.total_no_cntrl() * 1e-9,
+            e.total() * 1e-9
+        ));
+    }
+    let no_c: f64 = breakdowns.iter().map(|e| e.total_no_cntrl()).sum::<f64>() * 1e-9;
+    let with_c: f64 = breakdowns.iter().map(|e| e.total()).sum::<f64>() * 1e-9;
+    report.push_str(&format!(
+        "\ntotals: {no_c:.2} mJ (EyTool-comparable) / {with_c:.2} mJ with E_Cntrl\n"
+    ));
+    write_csv(out_dir, "fig9c_googlenet_validation", "layer,no_cntrl_mJ,with_cntrl_mJ", &rows)?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_three_panels_run() {
+        let dir = std::env::temp_dir().join("neupart_fig9");
+        assert!(run_a(&dir).unwrap().contains("C1"));
+        assert!(run_b(&dir).unwrap().contains("EyChip"));
+        assert!(run_c(&dir).unwrap().contains("I5b"));
+    }
+
+    #[test]
+    fn cntrl_inclusion_increases_energy() {
+        // "the energy is higher when E_Cntrl is included" (paper §V).
+        let model = CnnErgy::eyeriss_16bit();
+        for (_, e) in cnnergy_conv_energies(&model, &googlenet()) {
+            assert!(e.total() > e.total_no_cntrl());
+        }
+    }
+}

@@ -1,0 +1,82 @@
+//! Experiment harness: one generator per table/figure of the paper's
+//! evaluation (see DESIGN.md §3 for the experiment index).
+//!
+//! Every generator prints the paper's rows/series to stdout and writes a
+//! CSV under the output directory, so `neupart experiments --all` (or
+//! `make figures`) regenerates the full evaluation.
+
+pub mod ablations;
+pub mod csvout;
+pub mod extensions;
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+pub mod fig14;
+pub mod fig2;
+pub mod fig8b;
+pub mod fig9;
+pub mod table5;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+/// All experiment ids: the paper's figures/tables in paper order, then the
+/// repo's extension studies (ablations, JPEG-quality sweep, SLO sweep).
+pub const ALL: &[&str] = &[
+    "fig2", "fig8b", "fig9a", "fig9b", "fig9c", "fig10", "fig11", "fig12", "fig13", "fig14a",
+    "fig14b", "fig14c", "table5", "ablations", "qsweep", "slo",
+];
+
+/// Run one experiment by id, writing CSVs under `out_dir`.
+pub fn run(id: &str, out_dir: &Path) -> Result<String> {
+    match id {
+        "fig2" => fig2::run(out_dir),
+        "fig8b" => fig8b::run(out_dir),
+        "fig9a" => fig9::run_a(out_dir),
+        "fig9b" => fig9::run_b(out_dir),
+        "fig9c" => fig9::run_c(out_dir),
+        "fig10" => fig10::run(out_dir),
+        "fig11" => fig11::run(out_dir),
+        "fig12" => fig12::run(out_dir, fig12::DEFAULT_IMAGES),
+        "fig13" => fig13::run(out_dir),
+        "fig14a" => fig14::run_a(out_dir),
+        "fig14b" => fig14::run_b(out_dir),
+        "fig14c" => fig14::run_c(out_dir),
+        "table5" => table5::run(out_dir),
+        "ablations" => ablations::run(out_dir),
+        "qsweep" => extensions::run_qsweep(out_dir),
+        "slo" => extensions::run_slo(out_dir),
+        other => anyhow::bail!("unknown experiment '{other}' (try one of {ALL:?})"),
+    }
+}
+
+/// Run every experiment.
+pub fn run_all(out_dir: &Path) -> Result<()> {
+    for id in ALL {
+        println!("\n=== {id} ===");
+        let report = run(id, out_dir)?;
+        println!("{report}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_experiment_rejected() {
+        assert!(run("fig99", Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn all_ids_resolve() {
+        // Smoke: the cheap analytic experiments run end to end.
+        let dir = std::env::temp_dir().join("neupart_exp_smoke");
+        for id in ["fig2", "fig8b", "fig11", "fig14b", "fig14c"] {
+            run(id, &dir).unwrap_or_else(|e| panic!("{id}: {e:#}"));
+        }
+    }
+}

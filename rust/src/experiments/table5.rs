@@ -1,0 +1,136 @@
+//! Table V: average percent energy savings at the optimal layer, per
+//! Sparsity-In quartile, for AlexNet, SqueezeNet-v1.1 and GoogleNet-v1
+//! (`B_e` = 80 Mbps; `P_Tx` = 0.78 W for AlexNet/SqueezeNet, 1.28 W for
+//! GoogleNet — the paper's Table V operating points).
+//!
+//! Paper reference rows:
+//!   AlexNet    52.4 / 40.1 / 25.7 /  4.1  | 27.3
+//!   SqueezeNet 73.4 / 66.5 / 58.4 / 38.4  | 28.8
+//!   GoogleNet  21.4 /  3.5 /  0.0 /  0.0  | 10.6
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::channel::TransmitEnv;
+use crate::cnn::{alexnet, googlenet, squeezenet_v11, Network};
+use crate::partition::algorithm2::paper_partitioner;
+use crate::util::stats::quantile;
+
+use super::csvout::write_csv;
+use super::fig12::sparsity_in_samples;
+
+/// Average savings over the images inside each quartile band.
+pub fn quartile_savings(
+    net: &Network,
+    p_tx: f64,
+    samples: &[f64],
+) -> ([f64; 4], f64) {
+    let p = paper_partitioner(net);
+    let env = TransmitEnv::with_effective_rate(80.0e6, p_tx);
+    let (q1, q2, q3) = (
+        quantile(samples, 0.25),
+        quantile(samples, 0.50),
+        quantile(samples, 0.75),
+    );
+    let mut sums = [0.0f64; 4];
+    let mut counts = [0usize; 4];
+    let mut fisc_saving = 0.0;
+    for &sp in samples {
+        let band = if sp < q1 {
+            0
+        } else if sp < q2 {
+            1
+        } else if sp < q3 {
+            2
+        } else {
+            3
+        };
+        let d = p.decide(sp, &env);
+        sums[band] += d.savings_vs_fcc().max(0.0) * 100.0;
+        counts[band] += 1;
+        // Savings vs FISC is Sparsity-In independent (same for all images
+        // with the same l_opt); track the overall mean.
+        fisc_saving += d.savings_vs_fisc().max(0.0) * 100.0;
+    }
+    let mut avg = [0.0f64; 4];
+    for i in 0..4 {
+        avg[i] = if counts[i] > 0 {
+            sums[i] / counts[i] as f64
+        } else {
+            0.0
+        };
+    }
+    (avg, fisc_saving / samples.len() as f64)
+}
+
+pub fn run(out_dir: &Path) -> Result<String> {
+    let samples = sparsity_in_samples(300);
+    let nets: [(Network, f64); 3] = [
+        (alexnet(), 0.78),
+        (squeezenet_v11(), 0.78),
+        (googlenet(), 1.28),
+    ];
+
+    let mut rows = Vec::new();
+    let mut report = String::from(
+        "Table V: average % savings at optimal layer (B_e = 80 Mbps)\n\
+         network          P_Tx     Q-I    Q-II   Q-III    Q-IV | vs FISC\n",
+    );
+    for (net, p_tx) in nets {
+        let (q, fisc) = quartile_savings(&net, p_tx, &samples);
+        rows.push(format!(
+            "{},{p_tx},{:.1},{:.1},{:.1},{:.1},{:.1}",
+            net.name, q[0], q[1], q[2], q[3], fisc
+        ));
+        report.push_str(&format!(
+            "{:<16} {p_tx:>4.2}W {:>7.1} {:>7.1} {:>7.1} {:>7.1} | {:>6.1}\n",
+            net.name, q[0], q[1], q[2], q[3], fisc
+        ));
+    }
+    report.push_str(
+        "\npaper:   alexnet 52.4/40.1/25.7/ 4.1|27.3  squeezenet 73.4/66.5/58.4/38.4|28.8  googlenet 21.4/3.5/0.0/0.0|10.6\n",
+    );
+    write_csv(
+        out_dir,
+        "table5_savings",
+        "network,p_tx_w,q1_pct,q2_pct,q3_pct,q4_pct,vs_fisc_pct",
+        &rows,
+    )?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn savings_decrease_across_quartiles() {
+        // Higher Sparsity-In makes FCC cheaper, so savings vs FCC shrink
+        // monotonically from Q-I to Q-IV (the paper's shading pattern).
+        let samples = sparsity_in_samples(120);
+        for (net, p_tx) in [(alexnet(), 0.78), (squeezenet_v11(), 0.78)] {
+            let (q, fisc) = quartile_savings(&net, p_tx, &samples);
+            assert!(q[0] >= q[1] && q[1] >= q[2] && q[2] >= q[3], "{:?}", q);
+            assert!(fisc > 0.0, "{}: no FISC savings", net.name);
+        }
+    }
+
+    #[test]
+    fn squeezenet_dominates_alexnet_everywhere() {
+        let samples = sparsity_in_samples(120);
+        let (a, _) = quartile_savings(&alexnet(), 0.78, &samples);
+        let (s, _) = quartile_savings(&squeezenet_v11(), 0.78, &samples);
+        for i in 0..4 {
+            assert!(s[i] >= a[i], "quartile {i}: {} < {}", s[i], a[i]);
+        }
+    }
+
+    #[test]
+    fn googlenet_mostly_zero_in_upper_quartiles() {
+        // Paper row: GoogleNet 0.0 at Q-III/Q-IV (FCC optimal there).
+        let samples = sparsity_in_samples(120);
+        let (g, _) = quartile_savings(&googlenet(), 1.28, &samples);
+        assert!(g[3] < g[0] + 1e-9, "{:?}", g);
+    }
+}

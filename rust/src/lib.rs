@@ -1,0 +1,38 @@
+//! # NeuPart — energy-optimal CNN partitioning between mobile client and cloud
+//!
+//! Reproduction of *NeuPart: Using Analytical Models to Drive Energy-Efficient
+//! Partitioning of CNN Computations on Cloud-Connected Mobile Clients*
+//! (Manasi, Snigdha, Sapatnekar — IEEE TVLSI 2020).
+//!
+//! The crate has two halves:
+//!
+//! * **CNNergy** (paper §IV) — an analytical energy model for Eyeriss-class
+//!   ASIC CNN accelerators: an automated computation-scheduling mapper
+//!   ([`cnnergy::scheduling`]), the data-access/MAC energy algorithm
+//!   ([`cnnergy::energy`], paper Alg. 1) and a control/clock energy model
+//!   ([`cnnergy::clock`]).
+//! * **The runtime partitioner + serving stack** (paper §VI–§VIII) — the
+//!   transmission/delay models ([`channel`], [`partition::delay`]), the
+//!   runtime partition decision ([`partition`], paper Alg. 2), and a working
+//!   client/cloud serving coordinator ([`coordinator`]) that executes real
+//!   AOT-compiled XLA artifacts through PJRT ([`runtime`]).
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index; [`experiments`] regenerates every table and figure of the paper.
+
+pub mod bench;
+pub mod channel;
+pub mod cnn;
+pub mod cnnergy;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod corpus;
+pub mod experiments;
+pub mod partition;
+pub mod runtime;
+pub mod util;
+
+pub use cnn::{ConvShape, Layer, LayerKind, Network};
+pub use cnnergy::{CnnErgy, EnergyBreakdown, HwConfig, TechParams};
+pub use partition::{PartitionDecision, Partitioner};

@@ -1,0 +1,265 @@
+//! `neupart` — CLI for the NeuPart client/cloud CNN partitioning stack.
+//!
+//! Subcommands:
+//!   energy      per-layer CNNergy breakdown for a network
+//!   partition   runtime partition decision (Alg. 2) for a given environment
+//!   serve       run the client/cloud serving coordinator over a corpus
+//!   experiments regenerate the paper's tables and figures
+//!   validate    CNNergy validation vs EyMap/EyChip (paper §V)
+//!   devices     print the Table-IV smartphone power survey
+//!
+//! Options use `--key value` / `--key=value` and mirror `Config` keys, e.g.
+//! `neupart partition --network alexnet --bit_rate_mbps 80 --p_tx_w 0.78`.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use neupart::channel::DEVICE_POWER_TABLE;
+use neupart::cnn::Network;
+use neupart::cnnergy::CnnErgy;
+use neupart::config::Config;
+use neupart::coordinator::InferenceRequest;
+use neupart::coordinator::{Coordinator, CoordinatorConfig};
+use neupart::corpus::Corpus;
+use neupart::experiments;
+use neupart::partition::Partitioner;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "usage: neupart <energy|detail|partition|serve|sparsity|experiments|validate|devices> [--key value]...
+  common keys: --network NAME --bit_rate_mbps B --ecc_percent K --p_tx_w P
+               --artifacts_dir DIR --requests N --workers N --seed N
+  experiments: --fig <id>|--all  --out DIR
+  partition:   --sparsity_in X (default: probe median 0.608)";
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+
+    // Extract experiment-specific flags before Config sees them.
+    let mut fig: Option<String> = None;
+    let mut all = false;
+    let mut out_dir = "results".to_string();
+    let mut sparsity_in: Option<f64> = None;
+    let mut rest = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--fig" => {
+                fig = Some(args.get(i + 1).ok_or_else(|| anyhow!("--fig needs id"))?.clone());
+                i += 1;
+            }
+            "--all" => all = true,
+            "--out" => {
+                out_dir = args.get(i + 1).ok_or_else(|| anyhow!("--out needs dir"))?.clone();
+                i += 1;
+            }
+            "--sparsity_in" => {
+                sparsity_in = Some(
+                    args.get(i + 1)
+                        .ok_or_else(|| anyhow!("--sparsity_in needs value"))?
+                        .parse()
+                        .context("--sparsity_in")?,
+                );
+                i += 1;
+            }
+            a => rest.push(a.to_string()),
+        }
+        i += 1;
+    }
+
+    let mut cfg = Config::default();
+    let positional = cfg.apply_cli(&rest)?;
+    let cmd = positional.first().map(String::as_str).unwrap_or("help");
+
+    match cmd {
+        "energy" => cmd_energy(&cfg),
+        "detail" => cmd_detail(&cfg),
+        "partition" => cmd_partition(&cfg, sparsity_in.unwrap_or(0.608)),
+        "serve" => cmd_serve(&cfg),
+        "sparsity" => cmd_sparsity(&cfg),
+        "experiments" => {
+            let out = Path::new(&out_dir);
+            if all || fig.is_none() {
+                experiments::run_all(out)?;
+            } else {
+                let report = experiments::run(&fig.unwrap(), out)?;
+                println!("{report}");
+            }
+            println!("CSVs written under {out_dir}/");
+            Ok(())
+        }
+        "validate" => {
+            let out = Path::new(&out_dir);
+            for id in ["fig9a", "fig9b", "fig9c"] {
+                println!("=== {id} ===\n{}", experiments::run(id, out)?);
+            }
+            Ok(())
+        }
+        "devices" => {
+            println!("{:<26} {:>7} {:>7} {:>7}", "platform", "WLAN", "3G", "4G-LTE");
+            for d in DEVICE_POWER_TABLE {
+                let f = |x: Option<f64>| x.map(|v| format!("{v:.2}W")).unwrap_or_else(|| "-".into());
+                println!(
+                    "{:<26} {:>7} {:>7} {:>7}",
+                    d.platform,
+                    f(d.wlan_w),
+                    f(d.g3_w),
+                    f(d.lte_w)
+                );
+            }
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn net_for(cfg: &Config) -> Result<Network> {
+    Network::by_name(&cfg.network)
+        .ok_or_else(|| anyhow!("unknown network '{}' (alexnet, squeezenet, googlenet, vgg16, mobilenet, tiny_alexnet, tiny_squeezenet)", cfg.network))
+}
+
+fn cmd_energy(cfg: &Config) -> Result<()> {
+    let net = net_for(cfg)?;
+    let model = CnnErgy::inference_8bit();
+    let breakdowns = model.network_breakdowns(&net);
+    println!(
+        "{} — CNNergy per-layer breakdown (8-bit inference), energies in µJ",
+        net.name
+    );
+    println!(
+        "{:<7} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9} {:>10}",
+        "layer", "comp", "RF", "GLB", "DRAM", "cntrl", "total", "cum_total"
+    );
+    let mut cum = 0.0;
+    for (layer, e) in net.layers.iter().zip(&breakdowns) {
+        cum += e.total();
+        println!(
+            "{:<7} {:>9.2} {:>9.2} {:>9.2} {:>9.2} {:>9.2} {:>9.2} {:>10.2}",
+            layer.name,
+            e.comp * 1e-6,
+            (e.rf + e.inter_pe) * 1e-6,
+            e.glb * 1e-6,
+            e.dram * 1e-6,
+            e.cntrl() * 1e-6,
+            e.total() * 1e-6,
+            cum * 1e-6
+        );
+    }
+    println!(
+        "\nFISC total: {:.3} mJ; latency {:.1} ms",
+        cum * 1e-9,
+        breakdowns.iter().map(|b| b.latency_s).sum::<f64>() * 1e3
+    );
+    Ok(())
+}
+
+/// Per-datatype, per-memory-level energy matrices (paper §I-B "customized
+/// energy access").
+fn cmd_detail(cfg: &Config) -> Result<()> {
+    let net = net_for(cfg)?;
+    let model = CnnErgy::inference_8bit();
+    let details = model.network_detail(&net);
+    let mut total = neupart::cnnergy::detail::DetailedBreakdown::default();
+    for (layer, d) in net.layers.iter().zip(&details) {
+        println!("--- {} ---\n{}", layer.name, d.table());
+        total.merge(d);
+    }
+    println!("=== {} total ===\n{}", net.name, total.table());
+    Ok(())
+}
+
+/// Measure per-layer activation sparsity of a Tiny* network by executing
+/// the real PJRT prefixes over the corpus (live Fig.-10 check).
+fn cmd_sparsity(cfg: &Config) -> Result<()> {
+    let stats = neupart::experiments::fig10::measure_tiny(
+        std::path::Path::new(&cfg.artifacts_dir),
+        &cfg.network,
+        cfg.requests.min(16),
+    )?;
+    println!("{} measured output sparsity over {} images:", cfg.network, cfg.requests.min(16));
+    println!("{:<8} {:>7} {:>8}", "layer", "mu", "sigma");
+    for (name, mu, sigma) in stats {
+        println!("{name:<8} {mu:>7.3} {sigma:>8.4}");
+    }
+    Ok(())
+}
+
+fn cmd_partition(cfg: &Config, sparsity_in: f64) -> Result<()> {
+    let net = net_for(cfg)?;
+    let p = Partitioner::new(&net, &CnnErgy::inference_8bit());
+    let env = cfg.transmit_env();
+    let d = p.decide(sparsity_in, &env);
+    println!(
+        "{} @ B={} Mbps (Be={:.1}), P_Tx={} W, Sparsity-In={:.1}%",
+        net.name,
+        cfg.bit_rate_bps / 1e6,
+        env.effective_bit_rate() / 1e6,
+        env.p_tx_w,
+        sparsity_in * 100.0
+    );
+    println!("{:<7} {:>11}", "split", "E_cost_mJ");
+    for (split, cost) in d.costs_j.iter().enumerate() {
+        let name = if split == 0 {
+            "In"
+        } else {
+            net.layers[split - 1].name
+        };
+        println!(
+            "{:<7} {:>11.4} {}",
+            name,
+            cost * 1e3,
+            if split == d.l_opt { "<== L_opt" } else { "" }
+        );
+    }
+    println!(
+        "\nL_opt saves {:.1}% vs FCC and {:.1}% vs FISC (transmits {:.1} kbit)",
+        d.savings_vs_fcc() * 100.0,
+        d.savings_vs_fisc() * 100.0,
+        d.transmit_bits / 1e3
+    );
+    Ok(())
+}
+
+fn cmd_serve(cfg: &Config) -> Result<()> {
+    let coord = Coordinator::new(CoordinatorConfig::from_config(cfg))?;
+    println!("serving {} requests on {} ...", cfg.requests, cfg.network);
+
+    let corpus = Corpus::new(32, 32, cfg.seed);
+    let requests: Vec<InferenceRequest> = corpus
+        .iter(cfg.requests)
+        .enumerate()
+        .map(|(i, img)| InferenceRequest {
+            id: i as u64,
+            tensor: img.to_f32_nhwc(),
+            pixels: img.pixels.clone(),
+            width: img.w,
+            height: img.h,
+        })
+        .collect();
+
+    let t0 = std::time::Instant::now();
+    let responses = coord.serve(requests)?;
+    let wall = t0.elapsed();
+
+    println!("{}", coord.metrics.snapshot().report());
+    println!(
+        "wall time {:.2} s -> {:.1} req/s",
+        wall.as_secs_f64(),
+        responses.len() as f64 / wall.as_secs_f64()
+    );
+    Ok(())
+}

@@ -1,0 +1,277 @@
+//! Algorithm 2: runtime optimal partitioning.
+//!
+//! All network-dependent quantities — the cumulative energy vector `E`
+//! (CNNergy, eq. 2) and the per-layer RLC volumes `D_RLC` (eq. 29 with the
+//! Fig.-10 mean sparsities) — are precomputed offline when the
+//! [`Partitioner`] is built. At runtime, per image, only the input layer's
+//! `D_RLC` is updated from the probed `Sparsity-In`, `E_Cost` is evaluated
+//! for all `|L|+1` candidates and the argmin is returned: `O(|L|)` work,
+//! a few dozen flops for real CNNs ("virtually zero" overhead, §VII).
+
+use crate::channel::TransmitEnv;
+use crate::cnn::Network;
+use crate::cnnergy::sparsity::layer_d_rlc_bits;
+use crate::cnnergy::CnnErgy;
+
+/// Partition index meaning "transmit the JPEG input; all layers in cloud".
+pub const FCC: usize = 0;
+
+/// Bits to return the inference result (the identified class) — ~5 orders
+/// below any activation volume; included for completeness (paper §VII).
+pub const FISC_OUTPUT_BITS: f64 = 32.0;
+
+/// The runtime partitioner with all offline precomputation done.
+#[derive(Clone, Debug)]
+pub struct Partitioner {
+    /// `E[l]` = client energy in joules for computing layers `1..=l+1`.
+    cumulative_energy_j: Vec<f64>,
+    /// `D_RLC[l]` = transmit bits when splitting after layer `l+1`.
+    d_rlc_bits: Vec<f64>,
+    /// Raw input bits (for the runtime Sparsity-In update, Alg. 2 line 2).
+    input_raw_bits: u64,
+    bw: u32,
+    num_layers: usize,
+}
+
+/// The outcome of one runtime partition decision.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PartitionDecision {
+    /// Optimal split: 0 = FCC, `|L|` = FISC, else after layer `l_opt`.
+    pub l_opt: usize,
+    /// `E_Cost` per candidate split `0..=|L|`, joules.
+    pub costs_j: Vec<f64>,
+    /// Client compute energy at the optimum, joules.
+    pub client_energy_j: f64,
+    /// Transmission energy at the optimum, joules.
+    pub transmit_energy_j: f64,
+    /// Transmit volume at the optimum, bits.
+    pub transmit_bits: f64,
+}
+
+impl PartitionDecision {
+    /// Energy saved at the optimum relative to fully-cloud computation.
+    pub fn savings_vs_fcc(&self) -> f64 {
+        1.0 - self.costs_j[self.l_opt] / self.costs_j[FCC]
+    }
+
+    /// Energy saved at the optimum relative to fully-in-situ computation.
+    pub fn savings_vs_fisc(&self) -> f64 {
+        1.0 - self.costs_j[self.l_opt] / self.costs_j[self.costs_j.len() - 1]
+    }
+}
+
+impl Partitioner {
+    /// Offline precomputation: bind a network to an energy model.
+    pub fn new(net: &Network, model: &CnnErgy) -> Self {
+        let bw = model.hw.b_w;
+        let cumulative_energy_j = model
+            .cumulative_energy_pj(net)
+            .into_iter()
+            .map(|pj| pj * 1e-12)
+            .collect();
+        Partitioner {
+            cumulative_energy_j,
+            d_rlc_bits: layer_d_rlc_bits(net, bw),
+            input_raw_bits: net.input_raw_bits(bw),
+            bw,
+            num_layers: net.num_layers(),
+        }
+    }
+
+    /// Build from externally supplied vectors (e.g. measured sparsities for
+    /// the Tiny* networks, or profiling-based energy tables).
+    pub fn from_parts(cumulative_energy_j: Vec<f64>, d_rlc_bits: Vec<f64>, input_raw_bits: u64, bw: u32) -> Self {
+        assert_eq!(cumulative_energy_j.len(), d_rlc_bits.len());
+        let num_layers = d_rlc_bits.len();
+        Partitioner {
+            cumulative_energy_j,
+            d_rlc_bits,
+            input_raw_bits,
+            bw,
+            num_layers,
+        }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.num_layers
+    }
+
+    /// Per-candidate transmit volume in bits given the runtime Sparsity-In.
+    pub fn transmit_bits(&self, split: usize, sparsity_in: f64) -> f64 {
+        if split == FCC {
+            crate::cnnergy::sparsity::d_rlc_bits(
+                self.input_raw_bits,
+                sparsity_in,
+                crate::compress::rlc::rlc_delta(self.bw),
+            )
+        } else if split == self.num_layers {
+            FISC_OUTPUT_BITS
+        } else {
+            self.d_rlc_bits[split - 1]
+        }
+    }
+
+    /// Client compute energy for a candidate split, joules.
+    pub fn client_energy_j(&self, split: usize) -> f64 {
+        if split == FCC {
+            0.0
+        } else {
+            self.cumulative_energy_j[split - 1]
+        }
+    }
+
+    /// Algorithm 2: evaluate all candidates, return the argmin. The input
+    /// layer's volume is estimated from `sparsity_in` via eq. 29.
+    pub fn decide(&self, sparsity_in: f64, env: &TransmitEnv) -> PartitionDecision {
+        let input_bits = self.transmit_bits(FCC, sparsity_in);
+        self.decide_with_input_bits(input_bits, env)
+    }
+
+    /// Algorithm 2 with the input layer's `D_RLC` supplied directly — the
+    /// serving coordinator passes the *measured* JPEG size from the probe
+    /// (strictly more accurate than the eq.-29 estimate; same algorithm).
+    pub fn decide_with_input_bits(
+        &self,
+        input_bits: f64,
+        env: &TransmitEnv,
+    ) -> PartitionDecision {
+        let b_e = env.effective_bit_rate();
+        let mut costs_j = Vec::with_capacity(self.num_layers + 1);
+        let mut l_opt = 0;
+        let mut best = f64::INFINITY;
+        for split in 0..=self.num_layers {
+            let bits = if split == FCC {
+                input_bits
+            } else if split == self.num_layers {
+                FISC_OUTPUT_BITS
+            } else {
+                self.d_rlc_bits[split - 1]
+            };
+            let cost = self.client_energy_j(split) + env.p_tx_w * bits / b_e;
+            if cost < best {
+                best = cost;
+                l_opt = split;
+            }
+            costs_j.push(cost);
+        }
+        let transmit_bits = if l_opt == FCC {
+            input_bits
+        } else if l_opt == self.num_layers {
+            FISC_OUTPUT_BITS
+        } else {
+            self.d_rlc_bits[l_opt - 1]
+        };
+        PartitionDecision {
+            l_opt,
+            client_energy_j: self.client_energy_j(l_opt),
+            transmit_energy_j: best - self.client_energy_j(l_opt),
+            transmit_bits,
+            costs_j,
+        }
+    }
+}
+
+/// Convenience: build the partitioner for a named full-size network on the
+/// paper's 8-bit inference model.
+pub fn paper_partitioner(net: &Network) -> Partitioner {
+    Partitioner::new(net, &CnnErgy::inference_8bit())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::{alexnet, googlenet, squeezenet_v11, vgg16};
+
+    fn env(b_e_mbps: f64, p_tx: f64) -> TransmitEnv {
+        TransmitEnv::with_effective_rate(b_e_mbps * 1e6, p_tx)
+    }
+
+    #[test]
+    fn alexnet_intermediate_optimum_at_paper_point() {
+        // Fig. 11(a): at B_e=100 Mbps, P_Tx=1.14 W (BlackBerry Z10) the
+        // optimum for AlexNet is an intermediate layer (the paper finds P2).
+        let net = alexnet();
+        let p = paper_partitioner(&net);
+        let d = p.decide(0.608, &env(100.0, 1.14));
+        assert!(d.l_opt > FCC && d.l_opt < p.num_layers(), "l_opt {}", d.l_opt);
+        // Intermediate optimum must beat both extremes.
+        assert!(d.savings_vs_fcc() > 0.0);
+        assert!(d.savings_vs_fisc() > 0.0);
+        // The winning layer is one of the early pools (paper: P2).
+        let name = net.layers[d.l_opt - 1].name;
+        assert!(
+            ["P1", "P2", "P3", "C2", "C5"].contains(&name),
+            "unexpected optimum {name}"
+        );
+    }
+
+    #[test]
+    fn squeezenet_saves_more_than_alexnet() {
+        // Table V: SqueezeNet's savings vs FCC dominate AlexNet's.
+        let e = env(80.0, 0.78);
+        let a = paper_partitioner(&alexnet()).decide(0.52, &e);
+        let s = paper_partitioner(&squeezenet_v11()).decide(0.52, &e);
+        assert!(s.savings_vs_fcc() > a.savings_vs_fcc());
+    }
+
+    #[test]
+    fn vgg_is_cloud_optimal() {
+        // Paper §VIII-A: "For VGG-16, the optimal solution is FCC".
+        let p = paper_partitioner(&vgg16());
+        for sp in [0.52, 0.608, 0.69] {
+            let d = p.decide(sp, &env(80.0, 0.78));
+            assert_eq!(d.l_opt, FCC, "VGG should be FCC at sparsity {sp}");
+        }
+    }
+
+    #[test]
+    fn googlenet_rarely_intermediate() {
+        // Paper: GoogleNet is mostly FCC- or FISC-optimal; for poorly
+        // compressing images (low Sparsity-In) an intermediate point can win.
+        let p = paper_partitioner(&googlenet());
+        let d_high = p.decide(0.80, &env(80.0, 1.28));
+        assert_eq!(d_high.l_opt, FCC);
+    }
+
+    #[test]
+    fn argmin_matches_brute_force() {
+        let p = paper_partitioner(&alexnet());
+        for sp in [0.3, 0.52, 0.608, 0.69, 0.9] {
+            for be in [5.0, 20.0, 80.0, 200.0] {
+                let e = env(be, 0.78);
+                let d = p.decide(sp, &e);
+                let brute = d
+                    .costs_j
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                assert_eq!(d.l_opt, brute);
+                assert_eq!(d.costs_j.len(), p.num_layers() + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn low_bitrate_pushes_to_fisc_high_to_fcc() {
+        // Limits: at vanishing bandwidth transmission is prohibitive -> FISC;
+        // at huge bandwidth transmission is free -> FCC.
+        let p = paper_partitioner(&alexnet());
+        let slow = p.decide(0.608, &env(0.01, 0.78));
+        assert_eq!(slow.l_opt, p.num_layers());
+        let fast = p.decide(0.608, &env(100_000.0, 0.78));
+        assert_eq!(fast.l_opt, FCC);
+    }
+
+    #[test]
+    fn higher_sparsity_in_favors_fcc() {
+        let p = paper_partitioner(&alexnet());
+        let e = env(80.0, 0.78);
+        let lo = p.decide(0.40, &e);
+        let hi = p.decide(0.95, &e);
+        assert!(hi.costs_j[FCC] < lo.costs_j[FCC]);
+        // Costs at non-FCC candidates are unaffected by Sparsity-In.
+        assert_eq!(lo.costs_j[3], hi.costs_j[3]);
+    }
+}

@@ -1,0 +1,158 @@
+//! Latency-constrained partitioning — the natural extension the paper's
+//! §VI-B delay model enables: *minimize client energy subject to an
+//! inference-latency SLO*, `argmin_L E_Cost(L) s.t. t_delay(L) ≤ SLO`.
+//!
+//! The paper targets the energy-first regime ("somewhat slower processing
+//! times are acceptable") but computes `t_delay` for evaluation (Fig.
+//! 14(a)); this module closes the loop for deployments that do carry a
+//! deadline. Falls back to the delay-minimal split when no candidate meets
+//! the SLO (best-effort).
+
+use crate::channel::TransmitEnv;
+
+use super::algorithm2::{PartitionDecision, Partitioner};
+use super::delay::DelayModel;
+use super::FISC_OUTPUT_BITS;
+
+/// Outcome of a constrained decision.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConstrainedDecision {
+    pub inner: PartitionDecision,
+    /// Predicted `t_delay` at the chosen split, seconds.
+    pub t_delay_s: f64,
+    /// Whether the SLO was satisfiable at all.
+    pub feasible: bool,
+    /// Per-candidate predicted delay (same indexing as `inner.costs_j`).
+    pub delays_s: Vec<f64>,
+}
+
+/// Energy-optimal split under a latency SLO.
+pub fn decide_with_slo(
+    partitioner: &Partitioner,
+    delay: &DelayModel,
+    sparsity_in: f64,
+    env: &TransmitEnv,
+    slo_s: f64,
+) -> ConstrainedDecision {
+    let unconstrained = partitioner.decide(sparsity_in, env);
+    let n = partitioner.num_layers();
+
+    let bits_at = |split: usize| -> f64 {
+        if split == n {
+            FISC_OUTPUT_BITS
+        } else {
+            partitioner.transmit_bits(split, sparsity_in)
+        }
+    };
+    let delays_s: Vec<f64> = (0..=n)
+        .map(|split| delay.t_delay_s(split, bits_at(split), env))
+        .collect();
+
+    // Feasible set under the SLO; among it, minimize energy.
+    let mut best: Option<usize> = None;
+    for split in 0..=n {
+        if delays_s[split] <= slo_s {
+            let better = match best {
+                None => true,
+                Some(b) => unconstrained.costs_j[split] < unconstrained.costs_j[b],
+            };
+            if better {
+                best = Some(split);
+            }
+        }
+    }
+    let feasible = best.is_some();
+    // Best effort when infeasible: the delay-minimal split.
+    let chosen = best.unwrap_or_else(|| {
+        delays_s
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0
+    });
+
+    let mut inner = unconstrained;
+    if chosen != inner.l_opt {
+        inner = PartitionDecision {
+            l_opt: chosen,
+            client_energy_j: partitioner.client_energy_j(chosen),
+            transmit_energy_j: inner.costs_j[chosen] - partitioner.client_energy_j(chosen),
+            transmit_bits: bits_at(chosen),
+            costs_j: inner.costs_j,
+        };
+    }
+    ConstrainedDecision {
+        t_delay_s: delays_s[chosen],
+        feasible,
+        delays_s,
+        inner,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::alexnet;
+    use crate::cnnergy::CnnErgy;
+    use crate::partition::algorithm2::paper_partitioner;
+
+    fn setup() -> (Partitioner, DelayModel) {
+        let net = alexnet();
+        let model = CnnErgy::inference_8bit();
+        (paper_partitioner(&net), DelayModel::new(&net, &model))
+    }
+
+    #[test]
+    fn loose_slo_recovers_unconstrained_optimum() {
+        let (p, dm) = setup();
+        let env = TransmitEnv::with_effective_rate(80e6, 0.78);
+        let d = decide_with_slo(&p, &dm, 0.608, &env, 10.0);
+        assert!(d.feasible);
+        assert_eq!(d.inner.l_opt, p.decide(0.608, &env).l_opt);
+    }
+
+    #[test]
+    fn tight_slo_forces_shallower_split() {
+        // FISC on the client takes ~tens of ms; a tight SLO pushes the
+        // decision toward cloud offload (shallower split, less client time).
+        let (p, dm) = setup();
+        let env = TransmitEnv::with_effective_rate(200e6, 0.78);
+        let loose = decide_with_slo(&p, &dm, 0.608, &env, 10.0);
+        let tight = decide_with_slo(&p, &dm, 0.608, &env, 0.015);
+        assert!(tight.inner.l_opt <= loose.inner.l_opt);
+        if tight.feasible {
+            assert!(tight.t_delay_s <= 0.015 + 1e-12);
+        }
+        // Energy never improves under a binding constraint.
+        assert!(
+            tight.inner.costs_j[tight.inner.l_opt]
+                >= loose.inner.costs_j[loose.inner.l_opt] - 1e-15
+        );
+    }
+
+    #[test]
+    fn impossible_slo_reports_infeasible_best_effort() {
+        let (p, dm) = setup();
+        let env = TransmitEnv::with_effective_rate(1e6, 0.78); // 1 Mbps
+        let d = decide_with_slo(&p, &dm, 0.608, &env, 1e-6);
+        assert!(!d.feasible);
+        // Best effort = delay-minimal candidate.
+        let min_delay = d
+            .delays_s
+            .iter()
+            .cloned()
+            .fold(f64::INFINITY, f64::min);
+        assert!((d.t_delay_s - min_delay).abs() < 1e-15);
+    }
+
+    #[test]
+    fn delays_match_delay_model() {
+        let (p, dm) = setup();
+        let env = TransmitEnv::with_effective_rate(80e6, 0.78);
+        let d = decide_with_slo(&p, &dm, 0.608, &env, 1.0);
+        assert_eq!(d.delays_s.len(), p.num_layers() + 1);
+        let fisc = dm.fisc_delay_s(&env);
+        assert!((d.delays_s[p.num_layers()] - fisc).abs() < 1e-12);
+    }
+}

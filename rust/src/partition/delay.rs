@@ -1,0 +1,112 @@
+//! Inference-delay model (paper §VI-B, eq. 30).
+//!
+//! `t_delay = Σ_{i≤L} t_client(i) + t_Trans + Σ_{i>L} t_cloud(i)`, with
+//! per-layer latencies `#MACs / Throughput` on each platform. The paper's
+//! cloud is a Google TPU at 92 TeraOps/s (§VIII-A).
+
+use crate::channel::TransmitEnv;
+use crate::cnn::Network;
+use crate::cnnergy::CnnErgy;
+
+use super::Partitioner;
+
+/// TPU v1 peak, ops/s (92 TeraOps/s; 1 MAC = 2 ops).
+pub const TPU_OPS_PER_S: f64 = 92.0e12;
+
+/// Delay model bound to one network / client / cloud triple.
+#[derive(Clone, Debug)]
+pub struct DelayModel {
+    /// Per-layer client latency, seconds.
+    client_s: Vec<f64>,
+    /// Per-layer cloud latency, seconds.
+    cloud_s: Vec<f64>,
+}
+
+impl DelayModel {
+    pub fn new(net: &Network, model: &CnnErgy) -> Self {
+        let client_s = model.layer_latencies_s(net);
+        let cloud_s = net
+            .layers
+            .iter()
+            .map(|l| 2.0 * l.macs() as f64 / TPU_OPS_PER_S)
+            .collect();
+        DelayModel { client_s, cloud_s }
+    }
+
+    /// `t_delay` for a split (0 = FCC … `|L|` = FISC), given the transmit
+    /// volume the partitioner computed for that split.
+    pub fn t_delay_s(&self, split: usize, transmit_bits: f64, env: &TransmitEnv) -> f64 {
+        let client: f64 = self.client_s[..split].iter().sum();
+        let cloud: f64 = self.cloud_s[split..].iter().sum();
+        client + env.time_s(transmit_bits) + cloud
+    }
+
+    /// Delay at the energy-optimal split for one image.
+    pub fn delay_at_decision(
+        &self,
+        partitioner: &Partitioner,
+        sparsity_in: f64,
+        env: &TransmitEnv,
+    ) -> f64 {
+        let d = partitioner.decide(sparsity_in, env);
+        self.t_delay_s(d.l_opt, d.transmit_bits, env)
+    }
+
+    /// FCC delay (upload JPEG, all layers in cloud).
+    pub fn fcc_delay_s(&self, input_bits: f64, env: &TransmitEnv) -> f64 {
+        self.t_delay_s(0, input_bits, env)
+    }
+
+    /// FISC delay (all layers on client; result return is negligible but
+    /// included).
+    pub fn fisc_delay_s(&self, env: &TransmitEnv) -> f64 {
+        self.t_delay_s(self.client_s.len(), super::FISC_OUTPUT_BITS, env)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::alexnet;
+    use crate::partition::algorithm2::paper_partitioner;
+
+    fn setup() -> (DelayModel, Partitioner) {
+        let net = alexnet();
+        let model = CnnErgy::inference_8bit();
+        (DelayModel::new(&net, &model), paper_partitioner(&net))
+    }
+
+    #[test]
+    fn cloud_is_much_faster_than_client() {
+        let (dm, _) = setup();
+        let client: f64 = dm.client_s.iter().sum();
+        let cloud: f64 = dm.cloud_s.iter().sum();
+        assert!(cloud < client / 100.0, "client {client}, cloud {cloud}");
+    }
+
+    #[test]
+    fn fisc_delay_constant_fcc_improves_with_rate() {
+        let (dm, p) = setup();
+        let input_bits = p.transmit_bits(0, 0.608);
+        let env_slow = TransmitEnv::with_effective_rate(10e6, 0.78);
+        let env_fast = TransmitEnv::with_effective_rate(200e6, 0.78);
+        let fcc_slow = dm.fcc_delay_s(input_bits, &env_slow);
+        let fcc_fast = dm.fcc_delay_s(input_bits, &env_fast);
+        assert!(fcc_fast < fcc_slow);
+        let fisc_slow = dm.fisc_delay_s(&env_slow);
+        let fisc_fast = dm.fisc_delay_s(&env_fast);
+        assert!((fisc_slow - fisc_fast).abs() / fisc_slow < 1e-3);
+    }
+
+    #[test]
+    fn optimal_partition_delay_between_extremes_at_moderate_rate() {
+        // Fig. 14(a): the energy-optimal intermediate partition's delay
+        // tracks between/below the extremes for most of the B_e range.
+        let (dm, p) = setup();
+        let env = TransmitEnv::with_effective_rate(80e6, 0.78);
+        let d = p.decide(0.608, &env);
+        let t_opt = dm.t_delay_s(d.l_opt, d.transmit_bits, &env);
+        let t_fisc = dm.fisc_delay_s(&env);
+        assert!(t_opt <= t_fisc * 1.05, "opt {t_opt} vs fisc {t_fisc}");
+    }
+}

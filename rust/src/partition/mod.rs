@@ -1,0 +1,10 @@
+//! Runtime client/cloud partitioning (paper §VII, Algorithm 2) and the
+//! inference-delay model (paper §VI-B, eq. 30).
+
+pub mod algorithm2;
+pub mod constrained;
+pub mod delay;
+
+pub use algorithm2::{PartitionDecision, Partitioner, FCC, FISC_OUTPUT_BITS};
+pub use constrained::{decide_with_slo, ConstrainedDecision};
+pub use delay::DelayModel;

@@ -1,0 +1,279 @@
+//! Artifact manifest: the single source of truth emitted by
+//! `python/compile/aot.py` describing every AOT-lowered executable.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// One layer's metadata as recorded at lowering time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ManifestLayer {
+    pub name: String,
+    pub kind: String,
+    pub out_shape: Vec<usize>,
+    pub macs: u64,
+    pub params: u64,
+}
+
+impl ManifestLayer {
+    pub fn out_elems(&self) -> usize {
+        self.out_shape.iter().product()
+    }
+}
+
+/// One network's artifact set.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ManifestNetwork {
+    pub input_shape: Vec<usize>,
+    pub dtype: String,
+    pub layers: Vec<ManifestLayer>,
+    /// `split -> artifact file` for client prefixes (split ≥ 1).
+    pub prefix: BTreeMap<usize, String>,
+    /// `split -> artifact file` for cloud suffixes (split ≥ 0).
+    pub suffix: BTreeMap<usize, String>,
+}
+
+impl ManifestNetwork {
+    pub fn input_elems(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Activation element count at a split point (0 = the input image).
+    pub fn split_elems(&self, split: usize) -> usize {
+        if split == 0 {
+            self.input_elems()
+        } else {
+            self.layers[split - 1].out_elems()
+        }
+    }
+}
+
+/// The parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub networks: BTreeMap<String, ManifestNetwork>,
+}
+
+fn shape_of(v: &Value) -> Result<Vec<usize>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("shape is not an array"))?
+        .iter()
+        .map(|x| {
+            x.as_u64()
+                .map(|u| u as usize)
+                .ok_or_else(|| anyhow!("shape element not a number"))
+        })
+        .collect()
+}
+
+fn artifact_map(v: &Value) -> Result<BTreeMap<usize, String>> {
+    let obj = v.as_obj().ok_or_else(|| anyhow!("artifacts not an object"))?;
+    let mut out = BTreeMap::new();
+    for (k, val) in obj {
+        let split: usize = k.parse().with_context(|| format!("bad split key {k}"))?;
+        let file = val
+            .as_str()
+            .ok_or_else(|| anyhow!("artifact path not a string"))?;
+        out.insert(split, file.to_string());
+    }
+    Ok(out)
+}
+
+impl Manifest {
+    /// Load and validate `manifest.json` from an artifact directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let root = json::parse(&text).context("parsing manifest.json")?;
+
+        let format = root.get("format").and_then(Value::as_u64).unwrap_or(0);
+        if format != 1 {
+            bail!("unsupported manifest format {format}");
+        }
+
+        let mut networks = BTreeMap::new();
+        let nets = root
+            .get("networks")
+            .and_then(Value::as_obj)
+            .ok_or_else(|| anyhow!("manifest has no networks object"))?;
+        for (name, net) in nets {
+            let layers = net
+                .get("layers")
+                .and_then(Value::as_arr)
+                .ok_or_else(|| anyhow!("{name}: no layers"))?
+                .iter()
+                .map(|l| {
+                    Ok(ManifestLayer {
+                        name: l
+                            .get("name")
+                            .and_then(Value::as_str)
+                            .ok_or_else(|| anyhow!("layer without name"))?
+                            .to_string(),
+                        kind: l
+                            .get("kind")
+                            .and_then(Value::as_str)
+                            .unwrap_or("unknown")
+                            .to_string(),
+                        out_shape: shape_of(
+                            l.get("out_shape").ok_or_else(|| anyhow!("no out_shape"))?,
+                        )?,
+                        macs: l.get("macs").and_then(Value::as_u64).unwrap_or(0),
+                        params: l.get("params").and_then(Value::as_u64).unwrap_or(0),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()
+                .with_context(|| format!("network {name}"))?;
+
+            let artifacts = net
+                .get("artifacts")
+                .ok_or_else(|| anyhow!("{name}: no artifacts"))?;
+            let entry = ManifestNetwork {
+                input_shape: shape_of(
+                    net.get("input_shape")
+                        .ok_or_else(|| anyhow!("{name}: no input_shape"))?,
+                )?,
+                dtype: net
+                    .get("dtype")
+                    .and_then(Value::as_str)
+                    .unwrap_or("f32")
+                    .to_string(),
+                layers,
+                prefix: artifact_map(
+                    artifacts
+                        .get("prefix")
+                        .ok_or_else(|| anyhow!("{name}: no prefix artifacts"))?,
+                )?,
+                suffix: artifact_map(
+                    artifacts
+                        .get("suffix")
+                        .ok_or_else(|| anyhow!("{name}: no suffix artifacts"))?,
+                )?,
+            };
+            entry_sanity(name, &entry)?;
+            networks.insert(name.clone(), entry);
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            networks,
+        })
+    }
+
+    pub fn network(&self, name: &str) -> Result<&ManifestNetwork> {
+        self.networks
+            .get(name)
+            .ok_or_else(|| anyhow!("network '{name}' not in manifest"))
+    }
+
+    /// Absolute path of one artifact file.
+    pub fn artifact_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+fn entry_sanity(name: &str, net: &ManifestNetwork) -> Result<()> {
+    let n = net.layers.len();
+    if n == 0 {
+        bail!("{name}: empty layer list");
+    }
+    for split in 1..=n {
+        if !net.prefix.contains_key(&split) {
+            bail!("{name}: missing prefix artifact for split {split}");
+        }
+    }
+    for split in 0..n {
+        if !net.suffix.contains_key(&split) {
+            bail!("{name}: missing suffix artifact for split {split}");
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    const GOOD: &str = r#"{
+      "format": 1,
+      "networks": {
+        "net": {
+          "input_shape": [1, 4, 4, 3],
+          "dtype": "f32",
+          "layers": [
+            {"name": "C1", "kind": "conv", "out_shape": [1, 4, 4, 8], "macs": 3456, "params": 224},
+            {"name": "FC", "kind": "fc", "out_shape": [1, 10], "macs": 1280, "params": 1290}
+          ],
+          "artifacts": {
+            "prefix": {"1": "net_prefix_01.hlo.txt", "2": "net_prefix_02.hlo.txt"},
+            "suffix": {"0": "net_suffix_00.hlo.txt", "1": "net_suffix_01.hlo.txt"}
+          }
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_good_manifest() {
+        let dir = std::env::temp_dir().join("neupart_manifest_good");
+        write_manifest(&dir, GOOD);
+        let m = Manifest::load(&dir).unwrap();
+        let net = m.network("net").unwrap();
+        assert_eq!(net.num_layers(), 2);
+        assert_eq!(net.input_elems(), 48);
+        assert_eq!(net.split_elems(0), 48);
+        assert_eq!(net.split_elems(1), 128);
+        assert_eq!(net.split_elems(2), 10);
+        assert_eq!(net.layers[0].macs, 3456);
+        assert!(m.artifact_path("x.hlo.txt").ends_with("x.hlo.txt"));
+        assert!(m.network("other").is_err());
+    }
+
+    #[test]
+    fn rejects_missing_artifacts() {
+        let dir = std::env::temp_dir().join("neupart_manifest_bad");
+        write_manifest(
+            &dir,
+            &GOOD.replace(r#""2": "net_prefix_02.hlo.txt""#, r#""3": "x.hlo.txt""#),
+        );
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let dir = std::env::temp_dir().join("neupart_manifest_fmt");
+        write_manifest(&dir, &GOOD.replace("\"format\": 1", "\"format\": 9"));
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn real_manifest_matches_rust_topologies() {
+        // Cross-check against the actual artifacts when they exist.
+        let dir = Path::new("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(dir).unwrap();
+        for name in ["tiny_alexnet", "tiny_squeezenet"] {
+            let net = m.network(name).unwrap();
+            let rust_net = crate::cnn::Network::by_name(name).unwrap();
+            assert_eq!(net.num_layers(), rust_net.num_layers(), "{name}");
+            for (ml, rl) in net.layers.iter().zip(&rust_net.layers) {
+                assert_eq!(ml.name, rl.name, "{name}");
+                assert_eq!(ml.out_elems() as u64, rl.out_elems(), "{name}/{}", ml.name);
+                assert_eq!(ml.macs, rl.macs(), "{name}/{} macs", ml.name);
+            }
+        }
+    }
+}

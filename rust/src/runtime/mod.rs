@@ -1,0 +1,17 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! This is the only place the `xla` crate is touched. Python is never on
+//! the request path: `make artifacts` ran `python/compile/aot.py` once, and
+//! everything here consumes its outputs (`artifacts/*.hlo.txt` +
+//! `manifest.json`).
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`), so executables are owned by the
+//! thread that compiled them; the coordinator gives each logical device
+//! (client accelerator, cloud accelerator) its own executor thread
+//! (see [`crate::coordinator`]).
+
+pub mod manifest;
+pub mod pjrt;
+
+pub use manifest::{Manifest, ManifestLayer, ManifestNetwork};
+pub use pjrt::{Executable, NetworkRuntime, Runtime};

@@ -1,0 +1,177 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` → `execute`. All
+//! artifacts were lowered with `return_tuple=True`, so results unwrap with
+//! `to_tuple1`.
+//!
+//! None of these types are `Send`: keep a [`Runtime`] (and everything
+//! compiled from it) on the thread that created it.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::{Manifest, ManifestNetwork};
+
+/// A PJRT device handle (CPU plugin).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it for this device.
+    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe })
+    }
+}
+
+/// One compiled model variant (a prefix or suffix executable).
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute on a single f32 tensor, returning the flat f32 output.
+    ///
+    /// `shape` is the logical input shape (e.g. `[1, 32, 32, 3]`).
+    pub fn run_f32(&self, input: &[f32], shape: &[usize]) -> Result<Vec<f32>> {
+        let elems: usize = shape.iter().product();
+        if elems != input.len() {
+            return Err(anyhow!(
+                "input has {} elements but shape {:?} wants {}",
+                input.len(),
+                shape,
+                elems
+            ));
+        }
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input)
+            .reshape(&dims)
+            .context("reshaping input literal")?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .context("executing")?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().context("unwrapping result tuple")?;
+        out.to_vec::<f32>().context("reading result as f32")
+    }
+}
+
+/// All executables of one network, compiled lazily and cached per thread.
+pub struct NetworkRuntime {
+    pub name: String,
+    pub spec: ManifestNetwork,
+    manifest: Manifest,
+    runtime: Rc<Runtime>,
+    prefixes: RefCell<HashMap<usize, Rc<Executable>>>,
+    suffixes: RefCell<HashMap<usize, Rc<Executable>>>,
+}
+
+impl NetworkRuntime {
+    /// Load the manifest and bind a network to a fresh CPU device.
+    pub fn load(artifacts_dir: &Path, network: &str) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let spec = manifest.network(network)?.clone();
+        Ok(NetworkRuntime {
+            name: network.to_string(),
+            spec,
+            manifest,
+            runtime: Rc::new(Runtime::cpu()?),
+            prefixes: RefCell::new(HashMap::new()),
+            suffixes: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.spec.num_layers()
+    }
+
+    fn compile(&self, file: &str) -> Result<Executable> {
+        self.runtime.load_hlo(&self.manifest.artifact_path(file))
+    }
+
+    /// The client-side executable for layers `1..=split` (compiled once).
+    pub fn prefix(&self, split: usize) -> Result<Rc<Executable>> {
+        if let Some(e) = self.prefixes.borrow().get(&split) {
+            return Ok(e.clone());
+        }
+        let file = self
+            .spec
+            .prefix
+            .get(&split)
+            .ok_or_else(|| anyhow!("{}: no prefix for split {split}", self.name))?
+            .clone();
+        let exe = Rc::new(self.compile(&file)?);
+        self.prefixes.borrow_mut().insert(split, exe.clone());
+        Ok(exe)
+    }
+
+    /// The cloud-side executable for layers `split+1..` (compiled once).
+    pub fn suffix(&self, split: usize) -> Result<Rc<Executable>> {
+        if let Some(e) = self.suffixes.borrow().get(&split) {
+            return Ok(e.clone());
+        }
+        let file = self
+            .spec
+            .suffix
+            .get(&split)
+            .ok_or_else(|| anyhow!("{}: no suffix for split {split}", self.name))?
+            .clone();
+        let exe = Rc::new(self.compile(&file)?);
+        self.suffixes.borrow_mut().insert(split, exe.clone());
+        Ok(exe)
+    }
+
+    /// Run layers `1..=split` on an input image.
+    pub fn run_prefix(&self, split: usize, image: &[f32]) -> Result<Vec<f32>> {
+        self.prefix(split)?
+            .run_f32(image, &self.spec.input_shape.clone())
+    }
+
+    /// Run layers `split+1..` on an activation (or the image for split 0).
+    pub fn run_suffix(&self, split: usize, activation: &[f32]) -> Result<Vec<f32>> {
+        let shape = if split == 0 {
+            self.spec.input_shape.clone()
+        } else {
+            self.spec.layers[split - 1].out_shape.clone()
+        };
+        self.suffix(split)?.run_f32(activation, &shape)
+    }
+
+    /// Precompile a set of split points (startup warm-up).
+    pub fn warm_up(&self, splits: &[usize]) -> Result<()> {
+        for &s in splits {
+            if s >= 1 {
+                self.prefix(s)?;
+            }
+            if s < self.num_layers() {
+                self.suffix(s)?;
+            }
+        }
+        Ok(())
+    }
+}

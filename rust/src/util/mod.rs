@@ -1,0 +1,25 @@
+//! Small self-contained utilities (offline build: no external crates).
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+/// Ceiling division for positive integers.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::ceil_div;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(10, 5), 2);
+        assert_eq!(ceil_div(11, 5), 3);
+        assert_eq!(ceil_div(1, 5), 1);
+        assert_eq!(ceil_div(0, 5), 0);
+    }
+}

@@ -1,0 +1,214 @@
+//! Randomized property tests (in-tree substitute for proptest — the
+//! offline build has no external crates; see DESIGN.md §"Offline
+//! substitutions"). Each property runs a few hundred seeded random cases
+//! and reports the failing case on assertion failure.
+
+use neupart::channel::TransmitEnv;
+use neupart::cnn::ConvShape;
+use neupart::cnnergy::{schedule, HwConfig};
+use neupart::compress::rlc;
+use neupart::partition::Partitioner;
+use neupart::util::json;
+use neupart::util::rng::Rng;
+
+const CASES: usize = 300;
+
+/// Random-but-valid conv shape.
+fn random_shape(rng: &mut Rng) -> ConvShape {
+    let r = *rng.choose(&[1usize, 3, 5, 7, 11]);
+    let u = *rng.choose(&[1usize, 1, 1, 2, 4]);
+    let e = rng.range_usize(1, 64);
+    let h = (e - 1) * u + r;
+    let c = rng.range_usize(1, 512);
+    let f = rng.range_usize(1, 512);
+    ConvShape::conv(h, h, r, c, f, u)
+}
+
+fn random_hw(rng: &mut Rng) -> HwConfig {
+    let mut hw = HwConfig::eyeriss();
+    hw.j = rng.range_usize(4, 32);
+    hw.k = rng.range_usize(4, 32);
+    hw.i_s = rng.range_usize(4, 48);
+    hw.f_s = rng.range_usize(hw.i_s, 512);
+    hw.p_s = rng.range_usize(4, 64);
+    hw.glb_bytes = rng.range_usize(4, 512) * 1024;
+    hw.batch = rng.range_usize(1, 8);
+    hw
+}
+
+#[test]
+fn prop_schedule_invariants() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for case in 0..CASES {
+        let shape = random_shape(&mut rng);
+        let hw = random_hw(&mut rng);
+        let sch = schedule(&shape, &hw);
+        let ctx = format!("case {case}: {shape:?} {hw:?} -> {sch:?}");
+
+        assert!(sch.z_i >= 1 && sch.z_i <= shape.c, "z_i: {ctx}");
+        assert!(
+            sch.f_i >= 1 && sch.f_i <= shape.f.min(hw.p_s),
+            "f_i: {ctx}"
+        );
+        assert!(sch.y_o >= 1 && sch.y_o <= hw.k.min(shape.e), "y_o: {ctx}");
+        assert_eq!(sch.y_i, (sch.y_o - 1) * shape.u + shape.r, "y_i: {ctx}");
+        assert!(sch.x_o >= 1 && sch.x_o <= shape.g, "x_o: {ctx}");
+        assert_eq!(sch.x_i, (sch.x_o - 1) * shape.u + shape.s, "x_i: {ctx}");
+        assert!(sch.yy_o >= sch.y_o && sch.yy_o <= shape.e, "yy_o: {ctx}");
+        assert!(sch.n >= 1 && sch.n <= hw.batch, "n: {ctx}");
+        // GLB capacity must hold whenever the mapper had room to shrink.
+        if sch.x_o > 1 || sch.f_i > 1 || sch.yy_o > sch.y_o {
+            assert!(
+                sch.ifmap_bytes(&hw) + sch.psum_bytes(&hw) <= hw.glb_bytes as f64,
+                "GLB: {ctx}"
+            );
+        }
+        // The pass structure must cover the whole ofmap volume.
+        let covered = sch.passes_z(shape.c) as usize * sch.z_i;
+        assert!(covered >= shape.c, "z coverage: {ctx}");
+    }
+}
+
+#[test]
+fn prop_rlc_round_trip() {
+    let mut rng = Rng::new(0xBEEF);
+    for case in 0..CASES {
+        let bw = *rng.choose(&[4u32, 8, 12, 16]);
+        let n = rng.range_usize(0, 5000);
+        let sparsity = rng.next_f64();
+        let max = (1u64 << bw) - 1;
+        let data: Vec<u16> = (0..n)
+            .map(|_| {
+                if rng.next_f64() < sparsity {
+                    0
+                } else {
+                    rng.range_u64(1, max) as u16
+                }
+            })
+            .collect();
+        let enc = rlc::encode(&data, bw);
+        let dec = rlc::decode(&enc, bw);
+        assert_eq!(dec, data, "case {case}: bw={bw} n={n} sp={sparsity:.2}");
+        // Encoded size is positive iff there is data.
+        assert_eq!(enc.len_bits() == 0, n == 0, "case {case}");
+    }
+}
+
+#[test]
+fn prop_partitioner_argmin_matches_brute_force() {
+    let mut rng = Rng::new(0xF00D);
+    for case in 0..CASES {
+        let n_layers = rng.range_usize(1, 30);
+        // Random monotone cumulative energy and random transmit volumes.
+        let mut cum = Vec::with_capacity(n_layers);
+        let mut acc = 0.0;
+        for _ in 0..n_layers {
+            acc += rng.next_f64() * 1e-3;
+            cum.push(acc);
+        }
+        let d_rlc: Vec<f64> = (0..n_layers)
+            .map(|_| rng.next_f64() * 1e6 + 1.0)
+            .collect();
+        let p = Partitioner::from_parts(cum, d_rlc, 1_000_000, 8);
+        let env = TransmitEnv::with_effective_rate(
+            rng.next_f64() * 200e6 + 1e6,
+            rng.next_f64() * 2.0 + 0.1,
+        );
+        let sp = rng.next_f64();
+        let d = p.decide(sp, &env);
+
+        assert_eq!(d.costs_j.len(), n_layers + 1, "case {case}");
+        let brute = d
+            .costs_j
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(d.l_opt, brute, "case {case}");
+        // The cost at the optimum decomposes into its parts.
+        assert!(
+            (d.costs_j[d.l_opt] - d.client_energy_j - d.transmit_energy_j).abs() < 1e-12,
+            "case {case}"
+        );
+        // Savings are well-defined percentages.
+        assert!(d.savings_vs_fcc() <= 1.0 && d.savings_vs_fisc() <= 1.0);
+    }
+}
+
+#[test]
+fn prop_partition_decision_monotone_in_bitrate() {
+    // As B_e grows, the optimal split should move (weakly) toward shallower
+    // layers: transmission gets cheaper, so offloading earlier pays off.
+    let mut rng = Rng::new(0xABBA);
+    for case in 0..60 {
+        let n_layers = rng.range_usize(2, 20);
+        let mut cum = Vec::new();
+        let mut acc = 0.0;
+        for _ in 0..n_layers {
+            acc += rng.next_f64() * 1e-3 + 1e-5;
+            cum.push(acc);
+        }
+        // Volumes shrinking with depth (the CNN-typical case).
+        let mut d_rlc = Vec::new();
+        let mut v = 1e6;
+        for _ in 0..n_layers {
+            v *= 0.5 + rng.next_f64() * 0.45;
+            d_rlc.push(v);
+        }
+        let p = Partitioner::from_parts(cum, d_rlc, 2_000_000, 8);
+        let mut prev_opt = usize::MAX;
+        for be in [1.0, 5.0, 25.0, 125.0, 625.0] {
+            let env = TransmitEnv::with_effective_rate(be * 1e6, 0.78);
+            let opt = p.decide(0.6, &env).l_opt;
+            if prev_opt != usize::MAX {
+                assert!(
+                    opt <= prev_opt,
+                    "case {case}: opt went deeper ({prev_opt} -> {opt}) as Be rose to {be}"
+                );
+            }
+            prev_opt = opt;
+        }
+    }
+}
+
+#[test]
+fn prop_json_round_trip() {
+    let mut rng = Rng::new(0xD1CE);
+    for _ in 0..CASES {
+        let v = random_json(&mut rng, 0);
+        let text = json::to_string(&v);
+        let back = json::parse(&text).expect("round trip parse");
+        assert_eq!(back, v, "text: {text}");
+    }
+}
+
+fn random_json(rng: &mut Rng, depth: usize) -> json::Value {
+    use json::Value;
+    let choice = if depth > 3 {
+        rng.range_usize(0, 3)
+    } else {
+        rng.range_usize(0, 5)
+    };
+    match choice {
+        0 => Value::Null,
+        1 => Value::Bool(rng.next_f64() < 0.5),
+        2 => Value::Num((rng.next_f64() * 2e6).round() - 1e6),
+        3 => {
+            let n = rng.range_usize(0, 12);
+            Value::Str((0..n).map(|_| *rng.choose(&['a', 'b', '"', '\\', 'ß', '\n'])).collect())
+        }
+        4 => {
+            let n = rng.range_usize(0, 5);
+            Value::Arr((0..n).map(|_| random_json(rng, depth + 1)).collect())
+        }
+        _ => {
+            let n = rng.range_usize(0, 5);
+            Value::Obj(
+                (0..n)
+                    .map(|i| (format!("k{i}"), random_json(rng, depth + 1)))
+                    .collect(),
+            )
+        }
+    }
+}

@@ -1,0 +1,110 @@
+//! Integration: the PJRT runtime over the real AOT artifacts.
+//!
+//! Requires `make artifacts`; every test skips silently when artifacts are
+//! absent so a fresh checkout stays green, and the full pipeline is
+//! exercised by `make test`.
+
+use std::path::Path;
+
+use neupart::corpus::Corpus;
+use neupart::runtime::NetworkRuntime;
+
+fn artifacts() -> Option<&'static Path> {
+    let dir = Path::new("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn image(seed: u64) -> Vec<f32> {
+    Corpus::new(32, 32, seed).image(0).to_f32_nhwc()
+}
+
+#[test]
+fn prefix_suffix_composition_equals_full_network() {
+    let Some(dir) = artifacts() else { return };
+    for name in ["tiny_alexnet", "tiny_squeezenet"] {
+        let rt = NetworkRuntime::load(dir, name).unwrap();
+        let img = image(1);
+        let full = rt.run_suffix(0, &img).unwrap();
+        assert_eq!(full.len(), 10, "{name}: logits length");
+        // Every split must compose losslessly (f32 exactness modulo
+        // XLA re-association: allow tiny tolerance).
+        for split in 1..rt.num_layers() {
+            let act = rt.run_prefix(split, &img).unwrap();
+            assert_eq!(
+                act.len(),
+                rt.spec.layers[split - 1].out_elems(),
+                "{name} split {split}: activation shape"
+            );
+            let out = rt.run_suffix(split, &act).unwrap();
+            for (a, b) in out.iter().zip(&full) {
+                assert!(
+                    (a - b).abs() < 1e-4 + 1e-3 * b.abs(),
+                    "{name} split {split}: {a} vs {b}"
+                );
+            }
+        }
+        // The full prefix is the whole network too.
+        let logits = rt.run_prefix(rt.num_layers(), &img).unwrap();
+        for (a, b) in logits.iter().zip(&full) {
+            assert!((a - b).abs() < 1e-4, "{name} FISC: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn relu_layers_produce_sparse_nonneg_activations() {
+    let Some(dir) = artifacts() else { return };
+    let rt = NetworkRuntime::load(dir, "tiny_alexnet").unwrap();
+    let img = image(2);
+    // C1 output (split 1): post-ReLU, should be nonnegative and sparse.
+    let act = rt.run_prefix(1, &img).unwrap();
+    assert!(act.iter().all(|&v| v >= 0.0));
+    let sparsity = act.iter().filter(|&&v| v == 0.0).count() as f64 / act.len() as f64;
+    assert!(
+        (0.15..0.95).contains(&sparsity),
+        "C1 sparsity {sparsity} outside ReLU-plausible band"
+    );
+}
+
+#[test]
+fn measured_sparsity_matches_fig10_property() {
+    // The paper's Fig. 10 observation on *live* executions: per-layer
+    // sparsity has σ ≪ μ across images.
+    let Some(dir) = artifacts() else { return };
+    let stats =
+        neupart::experiments::fig10::measure_tiny(dir, "tiny_squeezenet", 6).unwrap();
+    for (name, mu, sigma) in &stats {
+        if name.starts_with("Fs") || name.starts_with("Fe") || name.starts_with('C') {
+            assert!(*mu > 0.05, "{name}: mu {mu}");
+            assert!(sigma < mu, "{name}: sigma {sigma} vs mu {mu}");
+        }
+    }
+}
+
+#[test]
+fn deterministic_execution() {
+    let Some(dir) = artifacts() else { return };
+    let rt = NetworkRuntime::load(dir, "tiny_alexnet").unwrap();
+    let img = image(3);
+    let a = rt.run_suffix(0, &img).unwrap();
+    let b = rt.run_suffix(0, &img).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn bad_input_shape_is_an_error_not_a_crash() {
+    let Some(dir) = artifacts() else { return };
+    let rt = NetworkRuntime::load(dir, "tiny_alexnet").unwrap();
+    assert!(rt.run_suffix(0, &[0.0f32; 7]).is_err());
+}
+
+#[test]
+fn unknown_network_rejected() {
+    let Some(dir) = artifacts() else { return };
+    assert!(NetworkRuntime::load(dir, "resnet152").is_err());
+}
+
+#[test]
+fn missing_artifact_dir_rejected() {
+    assert!(NetworkRuntime::load(Path::new("/nonexistent/artifacts"), "tiny_alexnet").is_err());
+}

@@ -1,0 +1,144 @@
+//! Integration: the full serving coordinator (client executor → RLC →
+//! channel → cloud executor) over real artifacts, plus failure injection.
+//! Skips when artifacts are absent.
+
+use std::path::{Path, PathBuf};
+
+use neupart::channel::TransmitEnv;
+use neupart::coordinator::{Coordinator, CoordinatorConfig, InferenceRequest};
+use neupart::corpus::Corpus;
+
+fn have_artifacts() -> bool {
+    Path::new("artifacts/manifest.json").exists()
+}
+
+fn config(network: &str, force: Option<usize>) -> CoordinatorConfig {
+    CoordinatorConfig {
+        artifacts_dir: PathBuf::from("artifacts"),
+        network: network.to_string(),
+        env: TransmitEnv::with_effective_rate(130.0e6, 0.78),
+        jpeg_quality: 90,
+        cloud_pool: 1,
+        workers: 2,
+        jitter: 0.0,
+        time_scale: 0.0,
+        force_split: force,
+        warm_splits: Vec::new(),
+        seed: 5,
+    }
+}
+
+fn requests(n: usize) -> Vec<InferenceRequest> {
+    Corpus::new(32, 32, 17)
+        .iter(n)
+        .enumerate()
+        .map(|(i, img)| InferenceRequest {
+            id: i as u64,
+            tensor: img.to_f32_nhwc(),
+            pixels: img.pixels.clone(),
+            width: img.w,
+            height: img.h,
+        })
+        .collect()
+}
+
+#[test]
+fn serve_roundtrip_and_metrics_consistency() {
+    if !have_artifacts() {
+        return;
+    }
+    let coord = Coordinator::new(config("tiny_alexnet", None)).unwrap();
+    let n = 6;
+    let responses = coord.serve(requests(n)).unwrap();
+    assert_eq!(responses.len(), n);
+    for (i, r) in responses.iter().enumerate() {
+        assert_eq!(r.id, i as u64, "responses in request order");
+        assert_eq!(r.logits.len(), 10);
+        assert!(r.logits.iter().all(|v| v.is_finite()));
+        assert!(r.split <= 11);
+        assert!((0.0..=1.0).contains(&r.sparsity_in));
+        assert!(r.e_cost_j() > 0.0);
+    }
+    let m = coord.metrics.snapshot();
+    assert_eq!(m.requests, n as u64);
+    assert_eq!(m.split_counts.values().sum::<u64>(), n as u64);
+    let bits: u64 = responses.iter().map(|r| r.transmit_bits).sum();
+    assert_eq!(m.transmit_bits, bits);
+}
+
+#[test]
+fn partitioned_inference_agrees_with_cloud() {
+    if !have_artifacts() {
+        return;
+    }
+    let n = 5;
+    // Cloud-only reference.
+    let fcc = Coordinator::new(config("tiny_alexnet", Some(0)))
+        .unwrap()
+        .serve(requests(n))
+        .unwrap();
+    // Forced mid-network split: exercises quantize -> RLC -> dequantize.
+    let mid = Coordinator::new(config("tiny_alexnet", Some(5)))
+        .unwrap()
+        .serve(requests(n))
+        .unwrap();
+    let agree = fcc
+        .iter()
+        .zip(&mid)
+        .filter(|(a, b)| a.top1() == b.top1())
+        .count();
+    assert!(agree >= n - 1, "only {agree}/{n} top-1 agreement");
+    // 8-bit quantization error stays small in L2.
+    for (a, b) in fcc.iter().zip(&mid) {
+        let ref_norm: f32 = a.logits.iter().map(|v| v * v).sum::<f32>().sqrt();
+        let err: f32 = a
+            .logits
+            .iter()
+            .zip(&b.logits)
+            .map(|(x, y)| (x - y) * (x - y))
+            .sum::<f32>()
+            .sqrt();
+        assert!(err < 0.25 * ref_norm.max(1e-3), "err {err} vs norm {ref_norm}");
+    }
+}
+
+#[test]
+fn forced_fisc_never_touches_channel_payloads() {
+    if !have_artifacts() {
+        return;
+    }
+    let coord = Coordinator::new(config("tiny_alexnet", Some(11))).unwrap();
+    let responses = coord.serve(requests(3)).unwrap();
+    for r in responses {
+        assert_eq!(r.split, 11);
+        assert!(r.transmit_bits <= 64, "FISC shipped {} bits", r.transmit_bits);
+        assert!(r.client_energy_j > 0.0);
+    }
+}
+
+#[test]
+fn channel_jitter_does_not_break_serving() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = config("tiny_squeezenet", None);
+    cfg.jitter = 0.3;
+    let coord = Coordinator::new(cfg).unwrap();
+    let responses = coord.serve(requests(4)).unwrap();
+    assert_eq!(responses.len(), 4);
+}
+
+#[test]
+fn unknown_network_fails_fast() {
+    if !have_artifacts() {
+        return;
+    }
+    assert!(Coordinator::new(config("not_a_net", None)).is_err());
+}
+
+#[test]
+fn missing_artifacts_fail_fast() {
+    let mut cfg = config("tiny_alexnet", None);
+    cfg.artifacts_dir = PathBuf::from("/nonexistent");
+    assert!(Coordinator::new(cfg).is_err());
+}
