@@ -45,6 +45,7 @@ fn main() {
             time_scale: 0.0,
             force_split: force,
             warm_splits: (0..=11).collect(),
+            batch_max: 8,
             seed: 3,
         };
         let coord = Coordinator::new(cfg).expect("coordinator");

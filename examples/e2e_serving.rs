@@ -48,6 +48,7 @@ fn config(force_split: Option<usize>, be_mbps: f64) -> CoordinatorConfig {
         time_scale: 0.0,
         force_split,
         warm_splits,
+        batch_max: 8,
         seed: 7,
     }
 }

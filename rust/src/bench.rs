@@ -56,6 +56,25 @@ impl BenchResult {
             self.elems.unwrap_or(0)
         )
     }
+
+    /// Machine-readable form (for the BENCH_*.json perf-trajectory files).
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::Value;
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("name".to_string(), Value::Str(self.name.clone()));
+        obj.insert("mean_ns".to_string(), Value::Num(self.mean_ns));
+        obj.insert("std_ns".to_string(), Value::Num(self.std_ns));
+        obj.insert("min_ns".to_string(), Value::Num(self.min_ns));
+        obj.insert("iters".to_string(), Value::Num(self.iters as f64));
+        obj.insert("samples".to_string(), Value::Num(self.samples as f64));
+        if let Some(e) = self.elems {
+            obj.insert("elems".to_string(), Value::Num(e as f64));
+        }
+        if let Some(t) = self.throughput_per_s() {
+            obj.insert("throughput_per_s".to_string(), Value::Num(t));
+        }
+        Value::Obj(obj)
+    }
 }
 
 fn fmt_ns(ns: f64) -> String {
@@ -100,6 +119,16 @@ impl Bencher {
             samples: 5,
             warmup: Duration::from_millis(20),
             results: Vec::new(),
+        }
+    }
+
+    /// Default budgets, or [`Bencher::quick`] when `NEUPART_BENCH_SMOKE`
+    /// is set (CI smoke runs).
+    pub fn from_env() -> Self {
+        if std::env::var_os("NEUPART_BENCH_SMOKE").is_some() {
+            Self::quick()
+        } else {
+            Self::default()
         }
     }
 
@@ -181,6 +210,30 @@ impl Bencher {
         }
         std::fs::write(path, out)
     }
+
+    /// All results as a JSON array.
+    pub fn results_json(&self) -> crate::util::json::Value {
+        crate::util::json::Value::Arr(self.results.iter().map(BenchResult::to_json).collect())
+    }
+
+    /// Write a JSON document (`{"results": [...], ...extra}`) so per-PR
+    /// perf trajectories are machine-readable (BENCH_*.json convention).
+    pub fn write_json(
+        &self,
+        path: &std::path::Path,
+        extra: Vec<(String, crate::util::json::Value)>,
+    ) -> std::io::Result<()> {
+        use crate::util::json::Value;
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("results".to_string(), self.results_json());
+        for (k, v) in extra {
+            obj.insert(k, v);
+        }
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, crate::util::json::to_string(&Value::Obj(obj)))
+    }
 }
 
 #[cfg(test)]
@@ -224,5 +277,25 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.starts_with("name,"));
         assert!(text.contains("x,"));
+    }
+
+    #[test]
+    fn json_output_parses_back() {
+        use crate::util::json::{self, Value};
+        let mut b = Bencher::quick();
+        b.bench_elems("y", 64, || 2 + 2);
+        let path = std::env::temp_dir().join("neupart_bench_test/out.json");
+        b.write_json(
+            &path,
+            vec![("note".to_string(), Value::Str("smoke".to_string()))],
+        )
+        .unwrap();
+        let doc = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("note").and_then(Value::as_str), Some("smoke"));
+        let results = doc.get("results").and_then(Value::as_arr).unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("name").and_then(Value::as_str), Some("y"));
+        assert!(results[0].get("mean_ns").and_then(Value::as_f64).unwrap() > 0.0);
+        assert!(results[0].get("throughput_per_s").is_some());
     }
 }

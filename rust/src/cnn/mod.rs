@@ -28,7 +28,7 @@ pub use vgg16::vgg16;
 /// with `E = G = 1` (`H = R`, `W = S`). For grouped convolutions (AlexNet
 /// C2/C4/C5), `c` is the number of channels *seen by one filter* and
 /// `groups` is the group count, so `c * groups` is the total ifmap depth.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct ConvShape {
     /// Filter height / width.
     pub r: usize,

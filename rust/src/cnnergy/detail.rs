@@ -7,7 +7,7 @@
 //! the compute/control scalars, for one conv or a whole layer/network.
 
 use super::clock::{clock_power, ClockParams};
-use super::scheduling::{schedule, HwConfig, Schedule};
+use super::scheduling::{schedule_cached, HwConfig, Schedule};
 use super::tech::TechParams;
 use crate::cnn::{ConvShape, Layer, LayerKind, Network};
 use crate::compress::rlc::rlc_delta;
@@ -224,7 +224,7 @@ pub fn layer_detail(
         _ => {
             let mut sum = DetailedBreakdown::default();
             for shape in &layer.convs {
-                let sch = schedule(shape, hw);
+                let sch = schedule_cached(shape, hw);
                 sum.merge(&conv_detail(
                     shape,
                     &sch,

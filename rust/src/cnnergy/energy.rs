@@ -10,7 +10,7 @@
 //! MAC plus the associated filter/psum RF accesses are skipped.
 
 use super::clock::{clock_power, ClockParams};
-use super::scheduling::{schedule, HwConfig, Schedule};
+use super::scheduling::{schedule_cached, HwConfig, Schedule};
 use super::tech::TechParams;
 use crate::cnn::{ConvShape, Layer, LayerKind};
 use crate::compress::rlc::rlc_delta;
@@ -239,7 +239,10 @@ pub fn layer_energy(
         _ => {
             let mut sum = EnergyBreakdown::default();
             for shape in &layer.convs {
-                let sch = schedule(shape, hw);
+                // Memoized mapper: identical conv shapes recur within and
+                // across networks, and partitioner builds / figure sweeps
+                // re-evaluate whole networks constantly.
+                let sch = schedule_cached(shape, hw);
                 let ctx = ConvContext {
                     sparsity_in,
                     sparsity_out: layer.sparsity_mu,
@@ -257,6 +260,7 @@ pub fn layer_energy(
 mod tests {
     use super::*;
     use crate::cnn::{alexnet, ConvShape};
+    use crate::cnnergy::scheduling::schedule;
 
     fn setup() -> (HwConfig, TechParams, ClockParams) {
         let hw = HwConfig::eyeriss();

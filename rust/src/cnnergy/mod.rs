@@ -4,6 +4,12 @@
 //! ([`HwConfig`]) + technology point ([`TechParams`]) and query per-layer
 //! [`EnergyBreakdown`]s, cumulative client energy `E_L` (eq. 2) and
 //! latencies for any [`crate::cnn::Network`].
+//!
+//! The §IV-C scheduling mapper is memoized through a per-thread
+//! [`ScheduleCache`] (see [`schedule_cached`]): identical conv shapes recur
+//! within networks (fire/inception modules, VGG blocks) and across the
+//! partitioner builds and figure sweeps, so repeated energy evaluations
+//! stop re-deriving the mapper.
 
 pub mod clock;
 pub mod detail;
@@ -15,7 +21,9 @@ pub mod validate;
 
 pub use clock::ClockParams;
 pub use energy::{layer_energy, EnergyBreakdown};
-pub use scheduling::{schedule, HwConfig, Schedule};
+pub use scheduling::{
+    schedule, schedule_cached, with_global_schedule_cache, HwConfig, Schedule, ScheduleCache,
+};
 pub use tech::TechParams;
 
 use crate::cnn::Network;
@@ -199,5 +207,20 @@ mod tests {
         for lat in model.layer_latencies_s(&alexnet()) {
             assert!(lat > 0.0);
         }
+    }
+
+    #[test]
+    fn repeated_evaluations_hit_the_schedule_cache() {
+        let model = CnnErgy::inference_8bit();
+        let net = alexnet();
+        let first = model.total_energy_pj(&net);
+        let hits_before = with_global_schedule_cache(|c| c.hits());
+        let misses_before = with_global_schedule_cache(|c| c.misses());
+        // Re-evaluating the same network derives zero new schedules and the
+        // energy is bit-identical (memoization must not change results).
+        let second = model.total_energy_pj(&net);
+        assert_eq!(first, second);
+        assert_eq!(with_global_schedule_cache(|c| c.misses()), misses_before);
+        assert!(with_global_schedule_cache(|c| c.hits()) > hits_before);
     }
 }

@@ -11,6 +11,9 @@
 //! psums reduce as early as possible; (ii) prefer filter reuse / psum
 //! reduction over ifmap reuse — which pins the X→Y→Z pass order of Fig. 5.
 
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+
 use crate::cnn::ConvShape;
 use crate::util::ceil_div;
 
@@ -213,6 +216,113 @@ pub fn schedule(shape: &ConvShape, hw: &HwConfig) -> Schedule {
     }
 }
 
+/// Cache key: the layer shape plus the `HwConfig` fields the mapper
+/// actually reads. Throughput and clock period only affect latency/energy,
+/// never the schedule, so two models differing only there share entries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct ScheduleKey {
+    shape: ConvShape,
+    j: usize,
+    k: usize,
+    f_s: usize,
+    i_s: usize,
+    p_s: usize,
+    glb_bytes: usize,
+    b_w: u32,
+    batch: usize,
+}
+
+impl ScheduleKey {
+    fn new(shape: &ConvShape, hw: &HwConfig) -> Self {
+        ScheduleKey {
+            shape: *shape,
+            j: hw.j,
+            k: hw.k,
+            f_s: hw.f_s,
+            i_s: hw.i_s,
+            p_s: hw.p_s,
+            glb_bytes: hw.glb_bytes,
+            b_w: hw.b_w,
+            batch: hw.batch,
+        }
+    }
+}
+
+/// Memoizes [`schedule`] results per (shape, hardware) pair.
+///
+/// Identical conv shapes recur heavily both *within* a network (SqueezeNet
+/// fire modules, GoogleNet inception branches, VGG's repeated 3×3 blocks)
+/// and *across* partitioner builds in the figure sweeps, which used to
+/// re-run the §IV-C mapper for every layer of every sweep point. Interior
+/// mutability keeps the call sites `&self`; the cache is not `Sync`, so
+/// each thread (worker, executor) owns its own — see [`schedule_cached`]
+/// for the thread-local default instance.
+#[derive(Debug, Default)]
+pub struct ScheduleCache {
+    map: RefCell<HashMap<ScheduleKey, Schedule>>,
+    hits: Cell<u64>,
+    misses: Cell<u64>,
+}
+
+impl ScheduleCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Cached equivalent of [`schedule`] (bit-identical results).
+    pub fn schedule(&self, shape: &ConvShape, hw: &HwConfig) -> Schedule {
+        let key = ScheduleKey::new(shape, hw);
+        if let Some(s) = self.map.borrow().get(&key) {
+            self.hits.set(self.hits.get() + 1);
+            return *s;
+        }
+        let s = schedule(shape, hw);
+        self.map.borrow_mut().insert(key, s);
+        self.misses.set(self.misses.get() + 1);
+        s
+    }
+
+    /// Distinct (shape, hardware) pairs currently memoized.
+    pub fn len(&self) -> usize {
+        self.map.borrow().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.get()
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.get()
+    }
+
+    /// Drop all entries and reset the hit/miss counters.
+    pub fn clear(&self) {
+        self.map.borrow_mut().clear();
+        self.hits.set(0);
+        self.misses.set(0);
+    }
+}
+
+thread_local! {
+    static GLOBAL_SCHEDULE_CACHE: ScheduleCache = ScheduleCache::new();
+}
+
+/// Thread-local memoized [`schedule`] — the default entry point for every
+/// energy evaluation ([`crate::cnnergy::CnnErgy::network_breakdowns`], the
+/// detailed matrices, partitioner builds and the experiment sweeps).
+pub fn schedule_cached(shape: &ConvShape, hw: &HwConfig) -> Schedule {
+    GLOBAL_SCHEDULE_CACHE.with(|c| c.schedule(shape, hw))
+}
+
+/// Observe the calling thread's global schedule cache (tests, metrics).
+pub fn with_global_schedule_cache<R>(f: impl FnOnce(&ScheduleCache) -> R) -> R {
+    GLOBAL_SCHEDULE_CACHE.with(f)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -294,6 +404,72 @@ mod tests {
         let shape = ConvShape::conv(227, 227, 11, 3, 96, 4);
         let sch = schedule(&shape, &hw);
         assert!(sch.x_o >= 1 && sch.f_i >= 1 && sch.n >= 1);
+    }
+
+    #[test]
+    fn cache_returns_identical_schedules_and_counts_hits() {
+        let cache = ScheduleCache::new();
+        let hw8 = HwConfig::eyeriss_8bit();
+        let hw16 = HwConfig::eyeriss();
+        let mut evals = 0u64;
+        for net in Network::paper_networks() {
+            for layer in &net.layers {
+                for shape in &layer.convs {
+                    assert_eq!(cache.schedule(shape, &hw8), schedule(shape, &hw8));
+                    assert_eq!(cache.schedule(shape, &hw16), schedule(shape, &hw16));
+                    evals += 2;
+                }
+            }
+        }
+        let first_misses = cache.misses();
+        assert!(first_misses >= 1);
+        // Identical shapes recur across layers (fire modules, VGG blocks):
+        // the cache must be strictly smaller than the evaluation count.
+        assert!(
+            first_misses < evals,
+            "no shape reuse? {first_misses} misses over {evals} evals"
+        );
+        // Second sweep is pure hits: every (shape, hw) pair is memoized.
+        let hits_before = cache.hits();
+        for net in Network::paper_networks() {
+            for layer in &net.layers {
+                for shape in &layer.convs {
+                    cache.schedule(shape, &hw8);
+                }
+            }
+        }
+        assert_eq!(cache.misses(), first_misses, "no new misses on re-sweep");
+        assert!(cache.hits() > hits_before);
+        assert_eq!(cache.len() as u64, first_misses);
+        cache.clear();
+        assert!(cache.is_empty());
+        assert_eq!(cache.hits() + cache.misses(), 0);
+    }
+
+    #[test]
+    fn cache_distinguishes_hardware_points() {
+        // Fig. 14(c)-style GLB sweeps must not alias cache entries.
+        let cache = ScheduleCache::new();
+        let shape = ConvShape::conv(31, 31, 5, 48, 256, 1);
+        let mut small = HwConfig::eyeriss();
+        small.glb_bytes = 16 * 1024;
+        let big = HwConfig::eyeriss();
+        assert_eq!(cache.schedule(&shape, &small), schedule(&shape, &small));
+        assert_eq!(cache.schedule(&shape, &big), schedule(&shape, &big));
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn thread_local_cached_entry_point_matches_pure_mapper() {
+        let hw = HwConfig::eyeriss_8bit();
+        let shape = ConvShape::conv(56, 56, 1, 128, 16, 1);
+        assert_eq!(schedule_cached(&shape, &hw), schedule(&shape, &hw));
+        let (hits, len) = with_global_schedule_cache(|c| {
+            c.schedule(&shape, &hw);
+            (c.hits(), c.len())
+        });
+        assert!(hits >= 1);
+        assert!(len >= 1);
     }
 
     #[test]

@@ -162,6 +162,43 @@ impl<T> Batcher<T> {
         }
     }
 
+    /// Blocking batch take: waits until at least one admissible entry is
+    /// available, then drains up to `max` entries without further blocking.
+    /// Expired entries are shed exactly as in [`Batcher::take`]. Returns
+    /// `None` once closed and drained. The serving workers use this to
+    /// amortize the per-channel-state partition decision over whole
+    /// batches (`Partitioner::decide_batch`).
+    pub fn take_batch(&self, max: usize) -> Option<Vec<(T, Duration)>> {
+        assert!(max >= 1);
+        let mut s = self.state.lock().unwrap();
+        loop {
+            let mut batch = Vec::new();
+            while batch.len() < max {
+                match s.queue.pop_front() {
+                    Some(entry) => {
+                        self.not_full.notify_one();
+                        if let Some(d) = entry.deadline {
+                            if Instant::now() >= d {
+                                s.stats.shed_expired += 1;
+                                continue; // shed in-queue expiry
+                            }
+                        }
+                        s.stats.taken += 1;
+                        batch.push((entry.item, entry.enqueued.elapsed()));
+                    }
+                    None => break,
+                }
+            }
+            if !batch.is_empty() {
+                return Some(batch);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.not_empty.wait(s).unwrap();
+        }
+    }
+
     /// Close the queue: producers get `Rejected`, consumers drain then stop.
     pub fn close(&self) {
         let mut s = self.state.lock().unwrap();
@@ -239,6 +276,34 @@ mod tests {
         assert_eq!(b.take().unwrap().0, 0);
         assert_eq!(producer.join().unwrap(), Submit::Accepted);
         assert_eq!(b.take().unwrap().0, 1);
+    }
+
+    #[test]
+    fn take_batch_drains_up_to_max_in_order() {
+        let b = Batcher::new(16);
+        for i in 0..5 {
+            b.submit(i, None);
+        }
+        let first = b.take_batch(3).unwrap();
+        assert_eq!(first.iter().map(|(v, _)| *v).collect::<Vec<_>>(), vec![0, 1, 2]);
+        let rest = b.take_batch(8).unwrap();
+        assert_eq!(rest.iter().map(|(v, _)| *v).collect::<Vec<_>>(), vec![3, 4]);
+        assert_eq!(b.stats().taken, 5);
+        b.close();
+        assert_eq!(b.take_batch(4), None);
+    }
+
+    #[test]
+    fn take_batch_sheds_expired_entries() {
+        let b = Batcher::new(8);
+        let soon = Instant::now() + Duration::from_millis(5);
+        b.submit(1, Some(soon));
+        b.submit(2, None);
+        b.submit(3, None);
+        std::thread::sleep(Duration::from_millis(10));
+        let batch = b.take_batch(8).unwrap();
+        assert_eq!(batch.iter().map(|(v, _)| *v).collect::<Vec<_>>(), vec![2, 3]);
+        assert_eq!(b.stats().shed_expired, 1);
     }
 
     #[test]

@@ -15,7 +15,7 @@ use crate::cnnergy::CnnErgy;
 use crate::compress::jpeg::compress_rgb;
 use crate::compress::rlc;
 use crate::config::Config;
-use crate::partition::{Partitioner, FISC_OUTPUT_BITS};
+use crate::partition::{Partitioner, SplitChoice, FISC_OUTPUT_BITS};
 
 use super::executor::{DeviceExecutor, ExecutorHandle};
 use super::metrics::Metrics;
@@ -38,6 +38,10 @@ pub struct CoordinatorConfig {
     pub force_split: Option<usize>,
     /// Split points each executor thread precompiles at startup.
     pub warm_splits: Vec<usize>,
+    /// Max requests a worker drains from the admission queue per batch; the
+    /// partition decision is made once per batch (`decide_batch`), so the
+    /// envelope lookup amortizes to ~O(1) per request.
+    pub batch_max: usize,
     pub seed: u64,
 }
 
@@ -54,6 +58,7 @@ impl CoordinatorConfig {
             time_scale: cfg.time_scale,
             force_split: None,
             warm_splits: Vec::new(),
+            batch_max: 8,
             seed: cfg.seed,
         }
     }
@@ -127,7 +132,7 @@ impl Coordinator {
         Ok(())
     }
 
-    /// Serve one request synchronously (the worker body).
+    /// Serve one request synchronously.
     pub fn process(
         &self,
         req: &InferenceRequest,
@@ -135,19 +140,87 @@ impl Coordinator {
         cloud: &ExecutorHandle,
     ) -> Result<InferenceResponse> {
         let t_start = Instant::now();
-        let n_layers = self.partitioner.num_layers();
 
         // 1. Probe the JPEG-compressed input (Alg. 2 line 1): yields both
         //    Sparsity-In and the *measured* compressed size.
         let probe = compress_rgb(&req.pixels, req.width, req.height, self.config.jpeg_quality);
 
-        // 2. Runtime partition decision (Alg. 2 lines 2-7), with the input
-        //    layer's D_RLC taken from the measured probe size.
-        let decision = self
+        // 2. Runtime partition decision: the O(1) envelope path, with the
+        //    input layer's D_RLC taken from the measured probe size.
+        let choice = self
             .partitioner
-            .decide_with_input_bits(probe.bits as f64, &self.config.env);
-        let split = self.config.force_split.unwrap_or(decision.l_opt);
+            .decide_split(probe.bits as f64, &self.config.env);
         let t_decide = t_start.elapsed();
+
+        self.execute(
+            req,
+            &choice,
+            probe.bits,
+            probe.sparsity,
+            t_start,
+            t_decide,
+            client,
+            cloud,
+        )
+    }
+
+    /// Serve a batch of requests taken together from the admission queue:
+    /// probe every input, make ONE batched partition decision (the envelope
+    /// candidates for the shared channel state are evaluated once and
+    /// reused across the batch), then execute each request.
+    pub fn process_batch(
+        &self,
+        reqs: &[InferenceRequest],
+        client: &ExecutorHandle,
+        cloud: &ExecutorHandle,
+    ) -> Result<Vec<InferenceResponse>> {
+        let t_start = Instant::now();
+        let probes: Vec<_> = reqs
+            .iter()
+            .map(|r| compress_rgb(&r.pixels, r.width, r.height, self.config.jpeg_quality))
+            .collect();
+        let input_bits: Vec<f64> = probes.iter().map(|p| p.bits as f64).collect();
+        let t_decide_start = Instant::now();
+        let mut choices = Vec::with_capacity(reqs.len());
+        self.partitioner
+            .decide_batch(&input_bits, &self.config.env, &mut choices);
+        // The whole batch shares one decision pass; attribute the per-batch
+        // cost evenly so per-request accounting stays meaningful.
+        let t_decide = t_decide_start.elapsed() / reqs.len().max(1) as u32;
+
+        reqs.iter()
+            .zip(&probes)
+            .zip(&choices)
+            .map(|((req, probe), choice)| {
+                self.execute(
+                    req,
+                    choice,
+                    probe.bits,
+                    probe.sparsity,
+                    t_start,
+                    t_decide,
+                    client,
+                    cloud,
+                )
+            })
+            .collect()
+    }
+
+    /// Execute one decided request: client prefix → channel → cloud suffix.
+    #[allow(clippy::too_many_arguments)]
+    fn execute(
+        &self,
+        req: &InferenceRequest,
+        choice: &SplitChoice,
+        probe_bits: u64,
+        sparsity_in: f64,
+        t_start: Instant,
+        t_decide: std::time::Duration,
+        client: &ExecutorHandle,
+        cloud: &ExecutorHandle,
+    ) -> Result<InferenceResponse> {
+        let n_layers = self.partitioner.num_layers();
+        let split = self.config.force_split.unwrap_or(choice.l_opt);
 
         // 3. Client prefix execution (layers 1..=split) on the device.
         let t_client_start = Instant::now();
@@ -162,9 +235,8 @@ impl Coordinator {
         let t_chan_start = Instant::now();
         let (transmit_bits, transmit_energy_j, quantized) = if split == 0 {
             // FCC: upload the JPEG-compressed image.
-            let bits = probe.bits;
-            let (e, _) = self.channel.send(bits);
-            (bits, e, None)
+            let (e, _) = self.channel.send(probe_bits);
+            (probe_bits, e, None)
         } else if split < n_layers {
             // Partitioned: quantize + RLC-encode the activation for real.
             let (q, scale) = rlc::quantize(&activation, 8);
@@ -206,7 +278,7 @@ impl Coordinator {
             logits,
             split,
             site,
-            sparsity_in: probe.sparsity,
+            sparsity_in,
             transmit_bits,
             client_energy_j: self.partitioner.client_energy_j(split),
             transmit_energy_j,
@@ -233,17 +305,23 @@ impl Coordinator {
 
         std::thread::scope(|scope| -> Result<()> {
             let mut handles = Vec::new();
+            let batch_max = self.config.batch_max.max(1);
             for _ in 0..self.config.workers.max(1) {
                 let batcher = batcher.clone();
                 let results = results.clone();
                 let client = self.client.handle();
                 let cloud = self.cloud.handle();
                 handles.push(scope.spawn(move || -> Result<()> {
-                    while let Some((req, _queued_for)) = batcher.take() {
-                        let idx = (req.id - id_base) as usize;
-                        let resp = self.process(&req, &client, &cloud)?;
-                        self.metrics.record(&resp);
-                        results.lock().unwrap()[idx] = Some(resp);
+                    // Drain whole batches so the partition decision is made
+                    // once per (batch, channel state), not once per request.
+                    while let Some(batch) = batcher.take_batch(batch_max) {
+                        let reqs: Vec<InferenceRequest> =
+                            batch.into_iter().map(|(req, _queued_for)| req).collect();
+                        for resp in self.process_batch(&reqs, &client, &cloud)? {
+                            let idx = (resp.id - id_base) as usize;
+                            self.metrics.record(&resp);
+                            results.lock().unwrap()[idx] = Some(resp);
+                        }
                     }
                     Ok(())
                 }));

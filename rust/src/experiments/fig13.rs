@@ -47,7 +47,9 @@ pub fn run(out_dir: &Path) -> Result<String> {
             let mut cols = Vec::new();
             for p_tx in P_TX_SWEEP {
                 let env = TransmitEnv::with_effective_rate(be * 1e6, p_tx);
-                let d = p.decide(sp, &env);
+                // Envelope fast path: the grid sweep needs only the argmin
+                // and the two savings references, not the cost vector.
+                let d = p.decide_fast(sp, &env);
                 let fcc = d.savings_vs_fcc() * 100.0;
                 let fisc = d.savings_vs_fisc() * 100.0;
                 rows.push(format!("{qname},{be},{p_tx},{fcc:.2},{fisc:.2},{}", d.l_opt));

@@ -36,7 +36,10 @@ pub fn quartile_savings(
     let mut sums = [0.0f64; 4];
     let mut counts = [0usize; 4];
     let mut fisc_saving = 0.0;
-    for &sp in samples {
+    // One batched decision for the whole corpus: the channel state is
+    // shared, so the envelope candidates are evaluated exactly once.
+    let decisions = p.decide_batch_sparsity(samples, &env);
+    for (&sp, d) in samples.iter().zip(&decisions) {
         let band = if sp < q1 {
             0
         } else if sp < q2 {
@@ -46,7 +49,6 @@ pub fn quartile_savings(
         } else {
             3
         };
-        let d = p.decide(sp, &env);
         sums[band] += d.savings_vs_fcc().max(0.0) * 100.0;
         counts[band] += 1;
         // Savings vs FISC is Sparsity-In independent (same for all images

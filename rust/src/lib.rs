@@ -17,6 +17,25 @@
 //!   client/cloud serving coordinator ([`coordinator`]) that executes real
 //!   AOT-compiled XLA artifacts through PJRT ([`runtime`]).
 //!
+//! ## The runtime decision engine
+//!
+//! Two precomputation layers make the per-request work effectively O(1):
+//!
+//! * **Lower-envelope partitioning** ([`partition::envelope`]): every fixed
+//!   split's cost `E[l] + γ·bits[l]` is a line in the channel parameter
+//!   `γ = P_Tx / B_e`, so the [`Partitioner`] precomputes the convex lower
+//!   envelope and a sorted γ-breakpoint table at build time. A decision
+//!   ([`Partitioner::decide_split`]) is then a binary search over 2–5
+//!   segments plus one comparison against the runtime FCC line;
+//!   [`Partitioner::decide_batch`] amortizes even that across a request
+//!   batch or an experiment grid. The envelope paths are property-tested to
+//!   match the reference linear scan ([`Partitioner::decide`]) bit-for-bit,
+//!   ties included.
+//! * **Schedule memoization** ([`cnnergy::ScheduleCache`]): the §IV-C
+//!   mapper's result depends only on (conv shape, accelerator geometry), so
+//!   a per-thread cache ([`cnnergy::schedule_cached`]) eliminates repeated
+//!   mapper derivations across layers, partitioner builds and figure sweeps.
+//!
 //! See `DESIGN.md` for the full system inventory and the per-experiment
 //! index; [`experiments`] regenerates every table and figure of the paper.
 
@@ -34,5 +53,5 @@ pub mod runtime;
 pub mod util;
 
 pub use cnn::{ConvShape, Layer, LayerKind, Network};
-pub use cnnergy::{CnnErgy, EnergyBreakdown, HwConfig, TechParams};
-pub use partition::{PartitionDecision, Partitioner};
+pub use cnnergy::{CnnErgy, EnergyBreakdown, HwConfig, ScheduleCache, TechParams};
+pub use partition::{PartitionDecision, Partitioner, SplitChoice};

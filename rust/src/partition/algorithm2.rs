@@ -1,17 +1,34 @@
 //! Algorithm 2: runtime optimal partitioning.
 //!
 //! All network-dependent quantities — the cumulative energy vector `E`
-//! (CNNergy, eq. 2) and the per-layer RLC volumes `D_RLC` (eq. 29 with the
-//! Fig.-10 mean sparsities) — are precomputed offline when the
-//! [`Partitioner`] is built. At runtime, per image, only the input layer's
-//! `D_RLC` is updated from the probed `Sparsity-In`, `E_Cost` is evaluated
-//! for all `|L|+1` candidates and the argmin is returned: `O(|L|)` work,
-//! a few dozen flops for real CNNs ("virtually zero" overhead, §VII).
+//! (CNNergy, eq. 2), the per-layer RLC volumes `D_RLC` (eq. 29 with the
+//! Fig.-10 mean sparsities) and, new in the lower-envelope engine, the
+//! convex lower envelope of the candidate cost lines over the channel
+//! parameter `γ = P_Tx / B_e` — are precomputed offline when the
+//! [`Partitioner`] is built.
+//!
+//! Runtime paths, fastest first:
+//!
+//! * [`Partitioner::decide_batch`] — one envelope lookup per *channel
+//!   state*, amortized over a whole batch of probed inputs: ~O(1)/request.
+//! * [`Partitioner::decide_split`] / [`Partitioner::decide_fast`] — one
+//!   decision: binary search over the γ-breakpoint table (2–5 segments for
+//!   real CNNs) plus one comparison against the runtime FCC line; no
+//!   allocation, no O(|L|) scan.
+//! * [`Partitioner::decide_into`] — the full per-candidate cost vector
+//!   (for reporting/figures), written into a caller-owned reusable buffer.
+//! * [`Partitioner::decide`] / [`Partitioner::decide_with_input_bits`] —
+//!   the original O(|L|) linear scan returning [`PartitionDecision`],
+//!   kept as the reference ("brute force") semantics; the envelope paths
+//!   match its argmin bit-for-bit (property-tested), including ties,
+//!   which both resolve toward the smallest split index.
 
 use crate::channel::TransmitEnv;
 use crate::cnn::Network;
 use crate::cnnergy::sparsity::layer_d_rlc_bits;
 use crate::cnnergy::CnnErgy;
+
+use super::envelope::{CostLine, Envelope};
 
 /// Partition index meaning "transmit the JPEG input; all layers in cloud".
 pub const FCC: usize = 0;
@@ -31,9 +48,12 @@ pub struct Partitioner {
     input_raw_bits: u64,
     bw: u32,
     num_layers: usize,
+    /// Lower envelope of the fixed candidate lines (splits `1..=|L|`).
+    envelope: Envelope,
 }
 
-/// The outcome of one runtime partition decision.
+/// The outcome of one runtime partition decision (reporting form, carries
+/// the full per-candidate cost vector).
 #[derive(Clone, Debug, PartialEq)]
 pub struct PartitionDecision {
     /// Optimal split: 0 = FCC, `|L|` = FISC, else after layer `l_opt`.
@@ -48,15 +68,58 @@ pub struct PartitionDecision {
     pub transmit_bits: f64,
 }
 
+/// Division-robust savings ratio: `1 - cost/reference`, with 0.0 instead of
+/// the NaN a zero (or 0/0, ∞/∞) reference would otherwise produce.
+fn savings_ratio(cost: f64, reference: f64) -> f64 {
+    let s = 1.0 - cost / reference;
+    if s.is_nan() {
+        0.0
+    } else {
+        s
+    }
+}
+
 impl PartitionDecision {
     /// Energy saved at the optimum relative to fully-cloud computation.
     pub fn savings_vs_fcc(&self) -> f64 {
-        1.0 - self.costs_j[self.l_opt] / self.costs_j[FCC]
+        savings_ratio(self.costs_j[self.l_opt], self.costs_j[FCC])
     }
 
     /// Energy saved at the optimum relative to fully-in-situ computation.
     pub fn savings_vs_fisc(&self) -> f64 {
-        1.0 - self.costs_j[self.l_opt] / self.costs_j[self.costs_j.len() - 1]
+        savings_ratio(self.costs_j[self.l_opt], self.costs_j[self.costs_j.len() - 1])
+    }
+}
+
+/// The outcome of one envelope-path decision: everything the serving hot
+/// path and the figure sweeps need, with no per-candidate vector.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SplitChoice {
+    /// Optimal split: 0 = FCC, `|L|` = FISC, else after layer `l_opt`.
+    pub l_opt: usize,
+    /// `E_Cost` at the optimum, joules.
+    pub cost_j: f64,
+    /// `E_Cost` at the FCC candidate (the savings reference), joules.
+    pub fcc_cost_j: f64,
+    /// `E_Cost` at the FISC candidate, joules.
+    pub fisc_cost_j: f64,
+    /// Client compute energy at the optimum, joules.
+    pub client_energy_j: f64,
+    /// Transmission energy at the optimum, joules.
+    pub transmit_energy_j: f64,
+    /// Transmit volume at the optimum, bits.
+    pub transmit_bits: f64,
+}
+
+impl SplitChoice {
+    /// Energy saved at the optimum relative to fully-cloud computation.
+    pub fn savings_vs_fcc(&self) -> f64 {
+        savings_ratio(self.cost_j, self.fcc_cost_j)
+    }
+
+    /// Energy saved at the optimum relative to fully-in-situ computation.
+    pub fn savings_vs_fisc(&self) -> f64 {
+        savings_ratio(self.cost_j, self.fisc_cost_j)
     }
 }
 
@@ -69,31 +132,54 @@ impl Partitioner {
             .into_iter()
             .map(|pj| pj * 1e-12)
             .collect();
-        Partitioner {
+        Self::from_parts(
             cumulative_energy_j,
-            d_rlc_bits: layer_d_rlc_bits(net, bw),
-            input_raw_bits: net.input_raw_bits(bw),
+            layer_d_rlc_bits(net, bw),
+            net.input_raw_bits(bw),
             bw,
-            num_layers: net.num_layers(),
-        }
+        )
     }
 
     /// Build from externally supplied vectors (e.g. measured sparsities for
     /// the Tiny* networks, or profiling-based energy tables).
-    pub fn from_parts(cumulative_energy_j: Vec<f64>, d_rlc_bits: Vec<f64>, input_raw_bits: u64, bw: u32) -> Self {
+    pub fn from_parts(
+        cumulative_energy_j: Vec<f64>,
+        d_rlc_bits: Vec<f64>,
+        input_raw_bits: u64,
+        bw: u32,
+    ) -> Self {
         assert_eq!(cumulative_energy_j.len(), d_rlc_bits.len());
         let num_layers = d_rlc_bits.len();
+        // Candidate lines for the fixed splits 1..=|L| (split 0's slope is
+        // the runtime-probed input volume and is compared at decision time).
+        let lines: Vec<CostLine> = (1..=num_layers)
+            .map(|split| CostLine {
+                split,
+                bits: if split == num_layers {
+                    FISC_OUTPUT_BITS
+                } else {
+                    d_rlc_bits[split - 1]
+                },
+                energy_j: cumulative_energy_j[split - 1],
+            })
+            .collect();
         Partitioner {
             cumulative_energy_j,
             d_rlc_bits,
             input_raw_bits,
             bw,
             num_layers,
+            envelope: Envelope::build(&lines),
         }
     }
 
     pub fn num_layers(&self) -> usize {
         self.num_layers
+    }
+
+    /// The precomputed lower envelope over the fixed candidates.
+    pub fn envelope(&self) -> &Envelope {
+        &self.envelope
     }
 
     /// Per-candidate transmit volume in bits given the runtime Sparsity-In.
@@ -111,6 +197,17 @@ impl Partitioner {
         }
     }
 
+    /// Transmit volume when the input layer's `D_RLC` is known directly.
+    fn bits_with_input(&self, split: usize, input_bits: f64) -> f64 {
+        if split == FCC {
+            input_bits
+        } else if split == self.num_layers {
+            FISC_OUTPUT_BITS
+        } else {
+            self.d_rlc_bits[split - 1]
+        }
+    }
+
     /// Client compute energy for a candidate split, joules.
     pub fn client_energy_j(&self, split: usize) -> f64 {
         if split == FCC {
@@ -120,8 +217,17 @@ impl Partitioner {
         }
     }
 
-    /// Algorithm 2: evaluate all candidates, return the argmin. The input
-    /// layer's volume is estimated from `sparsity_in` via eq. 29.
+    /// `E_Cost` of one candidate — the exact expression the linear scan
+    /// evaluates; the envelope paths reuse it so argmins agree bit-for-bit.
+    #[inline]
+    fn cost_at(&self, split: usize, input_bits: f64, env: &TransmitEnv, b_e: f64) -> f64 {
+        self.client_energy_j(split)
+            + env.p_tx_w * self.bits_with_input(split, input_bits) / b_e
+    }
+
+    /// Algorithm 2 (reference form): evaluate all candidates, return the
+    /// argmin with the full cost vector. The input layer's volume is
+    /// estimated from `sparsity_in` via eq. 29.
     pub fn decide(&self, sparsity_in: f64, env: &TransmitEnv) -> PartitionDecision {
         let input_bits = self.transmit_bits(FCC, sparsity_in);
         self.decide_with_input_bits(input_bits, env)
@@ -135,39 +241,253 @@ impl Partitioner {
         input_bits: f64,
         env: &TransmitEnv,
     ) -> PartitionDecision {
-        let b_e = env.effective_bit_rate();
         let mut costs_j = Vec::with_capacity(self.num_layers + 1);
+        let choice = self.decide_into(input_bits, env, &mut costs_j);
+        PartitionDecision {
+            l_opt: choice.l_opt,
+            client_energy_j: choice.client_energy_j,
+            transmit_energy_j: choice.transmit_energy_j,
+            transmit_bits: choice.transmit_bits,
+            costs_j,
+        }
+    }
+
+    /// Linear-scan decision writing the per-candidate costs into a
+    /// caller-owned buffer (cleared, then filled; capacity is reused across
+    /// calls, so sweep loops run allocation-free).
+    pub fn decide_into(
+        &self,
+        input_bits: f64,
+        env: &TransmitEnv,
+        costs_j: &mut Vec<f64>,
+    ) -> SplitChoice {
+        costs_j.clear();
+        let b_e = env.effective_bit_rate();
+        if !(b_e > 0.0) {
+            // Degenerate channel (B_e ≤ 0 or NaN): transmission is
+            // impossible, so FISC is the only executable policy. Report
+            // every transmitting candidate at +∞ rather than letting a
+            // division produce NaNs that pin the argmin at split 0.
+            costs_j.extend(std::iter::repeat(f64::INFINITY).take(self.num_layers));
+            let fisc = self.client_energy_j(self.num_layers);
+            costs_j.push(fisc);
+            return self.degenerate_choice();
+        }
         let mut l_opt = 0;
         let mut best = f64::INFINITY;
         for split in 0..=self.num_layers {
-            let bits = if split == FCC {
-                input_bits
-            } else if split == self.num_layers {
-                FISC_OUTPUT_BITS
-            } else {
-                self.d_rlc_bits[split - 1]
-            };
-            let cost = self.client_energy_j(split) + env.p_tx_w * bits / b_e;
+            let cost = self.cost_at(split, input_bits, env, b_e);
             if cost < best {
                 best = cost;
                 l_opt = split;
             }
             costs_j.push(cost);
         }
-        let transmit_bits = if l_opt == FCC {
-            input_bits
-        } else if l_opt == self.num_layers {
-            FISC_OUTPUT_BITS
-        } else {
-            self.d_rlc_bits[l_opt - 1]
-        };
-        PartitionDecision {
+        let client_energy_j = self.client_energy_j(l_opt);
+        SplitChoice {
             l_opt,
-            client_energy_j: self.client_energy_j(l_opt),
-            transmit_energy_j: best - self.client_energy_j(l_opt),
-            transmit_bits,
-            costs_j,
+            cost_j: best,
+            fcc_cost_j: costs_j[FCC],
+            fisc_cost_j: costs_j[self.num_layers],
+            client_energy_j,
+            transmit_energy_j: best - client_energy_j,
+            transmit_bits: self.bits_with_input(l_opt, input_bits),
         }
+    }
+
+    /// The no-channel fallback choice: FISC at its compute-only cost.
+    fn degenerate_choice(&self) -> SplitChoice {
+        let fisc = self.client_energy_j(self.num_layers);
+        SplitChoice {
+            l_opt: self.num_layers,
+            cost_j: fisc,
+            fcc_cost_j: f64::INFINITY,
+            fisc_cost_j: fisc,
+            client_energy_j: fisc,
+            transmit_energy_j: 0.0,
+            transmit_bits: FISC_OUTPUT_BITS,
+        }
+    }
+
+    /// First-minimum envelope candidate at γ: the winners of the segment
+    /// containing γ and its neighbors, re-evaluated with the scan's exact
+    /// cost expression in ascending split order with a strict `<` — the
+    /// scan's own fold, so ties resolve to the smallest split and NaN/∞
+    /// costs are skipped exactly as the scan skips them.
+    fn envelope_winner(&self, gamma: f64, env: &TransmitEnv, b_e: f64) -> (usize, f64) {
+        let mut cand = [usize::MAX; 3];
+        for (slot, line) in cand.iter_mut().zip(self.envelope.candidates(gamma)) {
+            *slot = line.split;
+        }
+        cand.sort_unstable();
+        let mut win = self.num_layers;
+        let mut cost = f64::INFINITY;
+        let mut prev = usize::MAX;
+        for &split in &cand {
+            if split == usize::MAX || split == prev {
+                continue;
+            }
+            prev = split;
+            // Candidates are all ≥ 1, so the input volume is irrelevant.
+            let c = self.cost_at(split, 0.0, env, b_e);
+            if c < cost {
+                cost = c;
+                win = split;
+            }
+        }
+        (win, cost)
+    }
+
+    /// Envelope decision: O(log L) breakpoint lookup, no allocation. The
+    /// argmin matches [`Partitioner::decide_with_input_bits`] bit-for-bit.
+    pub fn decide_split(&self, input_bits: f64, env: &TransmitEnv) -> SplitChoice {
+        let b_e = env.effective_bit_rate();
+        if !(b_e > 0.0) {
+            return self.degenerate_choice();
+        }
+        let gamma = env.p_tx_w / b_e;
+        if !(gamma > 0.0) || self.envelope.num_segments() == 0 {
+            // γ = 0 (free transmission), γ < 0 or NaN (nonsensical power),
+            // or an empty envelope (zero layers / non-finite tables): the
+            // envelope sweep assumed γ > 0 and finite lines, so fall back
+            // to the full scan.
+            return self.scan_choice(input_bits, env, b_e);
+        }
+        let fcc_cost = self.cost_at(FCC, input_bits, env, b_e);
+        let (env_split, env_cost) = self.envelope_winner(gamma, env, b_e);
+        // The scan's fold over [FCC, candidates...]: seed at +∞, strict `<`
+        // replacements — so a NaN FCC cost is skipped (never chosen) rather
+        // than poisoning the comparison, exactly like the scan.
+        let mut l_opt = FCC;
+        let mut best = f64::INFINITY;
+        if fcc_cost < best {
+            best = fcc_cost;
+        }
+        if env_cost < best {
+            best = env_cost;
+            l_opt = env_split;
+        }
+        let client_energy_j = self.client_energy_j(l_opt);
+        SplitChoice {
+            l_opt,
+            cost_j: best,
+            fcc_cost_j: fcc_cost,
+            fisc_cost_j: self.cost_at(self.num_layers, input_bits, env, b_e),
+            client_energy_j,
+            transmit_energy_j: best - client_energy_j,
+            transmit_bits: self.bits_with_input(l_opt, input_bits),
+        }
+    }
+
+    /// Envelope decision from the runtime-probed Sparsity-In (eq. 29).
+    pub fn decide_fast(&self, sparsity_in: f64, env: &TransmitEnv) -> SplitChoice {
+        self.decide_split(self.transmit_bits(FCC, sparsity_in), env)
+    }
+
+    /// Full scan without a cost buffer (fallback for degenerate γ).
+    fn scan_choice(&self, input_bits: f64, env: &TransmitEnv, b_e: f64) -> SplitChoice {
+        let mut l_opt = 0;
+        let mut best = f64::INFINITY;
+        for split in 0..=self.num_layers {
+            let cost = self.cost_at(split, input_bits, env, b_e);
+            if cost < best {
+                best = cost;
+                l_opt = split;
+            }
+        }
+        let client_energy_j = self.client_energy_j(l_opt);
+        SplitChoice {
+            l_opt,
+            cost_j: best,
+            fcc_cost_j: self.cost_at(FCC, input_bits, env, b_e),
+            fisc_cost_j: self.cost_at(self.num_layers, input_bits, env, b_e),
+            client_energy_j,
+            transmit_energy_j: best - client_energy_j,
+            transmit_bits: self.bits_with_input(l_opt, input_bits),
+        }
+    }
+
+    /// Batched decisions for one shared channel state: the γ lookup and the
+    /// envelope candidates' costs are computed **once** and reused across
+    /// the whole batch; each request then costs two flops and a compare.
+    /// This is the serving coordinator's per-batch path and the experiment
+    /// sweeps' per-grid-point path. `out` is cleared and refilled
+    /// (capacity reuse keeps the loop allocation-free).
+    pub fn decide_batch(
+        &self,
+        input_bits: &[f64],
+        env: &TransmitEnv,
+        out: &mut Vec<SplitChoice>,
+    ) {
+        out.clear();
+        out.reserve(input_bits.len());
+        let b_e = env.effective_bit_rate();
+        if !(b_e > 0.0) {
+            let choice = self.degenerate_choice();
+            out.extend(input_bits.iter().map(|_| choice));
+            return;
+        }
+        let gamma = env.p_tx_w / b_e;
+        if !(gamma > 0.0) || self.envelope.num_segments() == 0 {
+            out.extend(
+                input_bits
+                    .iter()
+                    .map(|&bits| self.scan_choice(bits, env, b_e)),
+            );
+            return;
+        }
+        // Fixed-candidate winner for this channel state, evaluated once and
+        // reused across the whole batch.
+        let (env_split, env_cost) = self.envelope_winner(gamma, env, b_e);
+        let env_client = self.client_energy_j(env_split);
+        let env_bits = self.bits_with_input(env_split, 0.0);
+        let fisc_cost = self.cost_at(self.num_layers, 0.0, env, b_e);
+        for &bits in input_bits {
+            // Per request: the scan's fold over [FCC, fixed winner] — seed
+            // at +∞ with strict `<`, so the FCC line takes the request only
+            // with a finite cost and wins ties exactly like the scan.
+            let fcc_cost = self.cost_at(FCC, bits, env, b_e);
+            let mut best = f64::INFINITY;
+            if fcc_cost < best {
+                best = fcc_cost;
+            }
+            out.push(if env_cost < best {
+                SplitChoice {
+                    l_opt: env_split,
+                    cost_j: env_cost,
+                    fcc_cost_j: fcc_cost,
+                    fisc_cost_j: fisc_cost,
+                    client_energy_j: env_client,
+                    transmit_energy_j: env_cost - env_client,
+                    transmit_bits: env_bits,
+                }
+            } else {
+                SplitChoice {
+                    l_opt: FCC,
+                    cost_j: best,
+                    fcc_cost_j: fcc_cost,
+                    fisc_cost_j: fisc_cost,
+                    client_energy_j: 0.0,
+                    transmit_energy_j: best,
+                    transmit_bits: bits,
+                }
+            });
+        }
+    }
+
+    /// [`Partitioner::decide_batch`] over probed Sparsity-In values.
+    pub fn decide_batch_sparsity(
+        &self,
+        sparsity_in: &[f64],
+        env: &TransmitEnv,
+    ) -> Vec<SplitChoice> {
+        let bits: Vec<f64> = sparsity_in
+            .iter()
+            .map(|&sp| self.transmit_bits(FCC, sp))
+            .collect();
+        let mut out = Vec::with_capacity(bits.len());
+        self.decide_batch(&bits, env, &mut out);
+        out
     }
 }
 
@@ -273,5 +593,131 @@ mod tests {
         assert!(hi.costs_j[FCC] < lo.costs_j[FCC]);
         // Costs at non-FCC candidates are unaffected by Sparsity-In.
         assert_eq!(lo.costs_j[3], hi.costs_j[3]);
+    }
+
+    // ---- lower-envelope engine ----
+
+    #[test]
+    fn envelope_has_few_segments_for_paper_networks() {
+        // The paper's claim made structural: only a handful of splits are
+        // ever optimal across ALL channel states.
+        for net in crate::cnn::Network::paper_networks() {
+            let p = paper_partitioner(&net);
+            let segs = p.envelope().num_segments();
+            assert!(
+                segs >= 1 && segs <= p.num_layers(),
+                "{}: {} envelope segments",
+                net.name,
+                segs
+            );
+            // The whole point of the engine: the per-request search space
+            // collapses to far fewer candidates than the layer count.
+            assert!(
+                segs < p.num_layers() / 2 + 2,
+                "{}: envelope did not compress ({segs} of {} layers)",
+                net.name,
+                p.num_layers()
+            );
+            // Breakpoints sorted ascending.
+            let bp = p.envelope().breakpoints();
+            assert!(bp.windows(2).all(|w| w[0] <= w[1]), "{}: {bp:?}", net.name);
+        }
+    }
+
+    #[test]
+    fn fast_paths_match_scan_on_paper_grid() {
+        for net in crate::cnn::Network::paper_networks() {
+            let p = paper_partitioner(&net);
+            for sp in [0.30, 0.52, 0.608, 0.69, 0.95] {
+                for be in [0.01, 1.0, 5.0, 20.0, 80.0, 200.0, 3000.0, 1e6] {
+                    for p_tx in [0.25, 0.78, 1.28, 2.5] {
+                        let e = env(be, p_tx);
+                        let scan = p.decide(sp, &e);
+                        let fast = p.decide_fast(sp, &e);
+                        assert_eq!(
+                            fast.l_opt, scan.l_opt,
+                            "{} sp={sp} be={be} ptx={p_tx}",
+                            net.name
+                        );
+                        assert_eq!(fast.cost_j, scan.costs_j[scan.l_opt]);
+                        assert_eq!(fast.fcc_cost_j, scan.costs_j[FCC]);
+                        assert_eq!(fast.savings_vs_fcc(), scan.savings_vs_fcc());
+                        assert_eq!(fast.savings_vs_fisc(), scan.savings_vs_fisc());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decide_batch_matches_singles() {
+        let p = paper_partitioner(&alexnet());
+        let e = env(80.0, 0.78);
+        let sps: Vec<f64> = (0..64).map(|i| 0.30 + 0.01 * i as f64).collect();
+        let batch = p.decide_batch_sparsity(&sps, &e);
+        assert_eq!(batch.len(), sps.len());
+        for (&sp, b) in sps.iter().zip(&batch) {
+            let single = p.decide(sp, &e);
+            assert_eq!(b.l_opt, single.l_opt, "sp={sp}");
+            assert_eq!(b.cost_j, single.costs_j[single.l_opt]);
+        }
+    }
+
+    #[test]
+    fn decide_into_reuses_buffer() {
+        let p = paper_partitioner(&alexnet());
+        let e = env(80.0, 0.78);
+        let mut buf = Vec::new();
+        let a = p.decide_into(p.transmit_bits(FCC, 0.608), &e, &mut buf);
+        assert_eq!(buf.len(), p.num_layers() + 1);
+        let cap = buf.capacity();
+        let b = p.decide_into(p.transmit_bits(FCC, 0.52), &e, &mut buf);
+        assert_eq!(buf.capacity(), cap, "buffer must be reused");
+        assert_eq!(a.l_opt, p.decide(0.608, &e).l_opt);
+        assert_eq!(b.l_opt, p.decide(0.52, &e).l_opt);
+    }
+
+    #[test]
+    fn degenerate_channel_falls_back_to_fisc_without_nans() {
+        let p = paper_partitioner(&alexnet());
+        for b_e in [0.0, -5.0, f64::NAN] {
+            let e = TransmitEnv::with_effective_rate(b_e, 0.78);
+            let d = p.decide(0.608, &e);
+            assert_eq!(d.l_opt, p.num_layers(), "b_e={b_e}");
+            assert!(d.costs_j[d.l_opt].is_finite());
+            assert!(!d.savings_vs_fcc().is_nan());
+            assert!(!d.savings_vs_fisc().is_nan());
+            let fast = p.decide_split(1e6, &e);
+            assert_eq!(fast.l_opt, p.num_layers());
+            assert!(fast.cost_j.is_finite());
+            assert_eq!(fast.transmit_energy_j, 0.0);
+        }
+    }
+
+    #[test]
+    fn zero_reference_cost_yields_zero_savings() {
+        // input_bits = 0 makes the FCC cost exactly 0 — the savings ratio
+        // used to be NaN (0/0); the guard pins it to 0.0.
+        let p = paper_partitioner(&alexnet());
+        let e = env(80.0, 0.78);
+        let d = p.decide_with_input_bits(0.0, &e);
+        assert_eq!(d.l_opt, FCC);
+        assert_eq!(d.costs_j[FCC], 0.0);
+        assert_eq!(d.savings_vs_fcc(), 0.0);
+        let fast = p.decide_split(0.0, &e);
+        assert_eq!(fast.l_opt, FCC);
+        assert_eq!(fast.savings_vs_fcc(), 0.0);
+    }
+
+    #[test]
+    fn zero_gamma_free_transmission_is_fcc() {
+        // P_Tx = 0 makes every transmission free: γ = 0 exercises the scan
+        // fallback inside decide_split.
+        let p = paper_partitioner(&alexnet());
+        let e = env(80.0, 0.0);
+        let scan = p.decide(0.608, &e);
+        let fast = p.decide_fast(0.608, &e);
+        assert_eq!(scan.l_opt, FCC);
+        assert_eq!(fast.l_opt, FCC);
     }
 }

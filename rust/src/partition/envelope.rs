@@ -1,0 +1,304 @@
+//! Lower-envelope precomputation for the runtime partition decision.
+//!
+//! Every fixed partition candidate `l ∈ 1..=|L|` has cost
+//! `E_Cost(l) = E[l] + γ·bits[l]` with `γ = P_Tx / B_e` — a *line* in the
+//! single channel-state parameter γ. The runtime argmin over those
+//! candidates is therefore the lower envelope of a fixed family of lines,
+//! computable once when the [`crate::partition::Partitioner`] is built.
+//! A decision for *any* channel state then collapses to locating γ in a
+//! sorted breakpoint table (real CNNs produce 2–5 segments) plus one
+//! comparison against the runtime-dependent FCC line, whose slope is the
+//! probed input volume. This is how the paper's "virtually zero" overhead
+//! claim (§VII) is made literal: O(log L) — effectively O(1) — per request
+//! instead of an O(|L|) scan with a fresh cost vector.
+//!
+//! Exactness contract: the envelope is a *pruning* device, never the final
+//! arbiter. Decision code re-evaluates the (at most four) surviving
+//! candidates with the identical floating-point cost expression the linear
+//! scan uses, in ascending split order with a strict `<`, so the chosen
+//! split matches the scan argmin bit-for-bit — including ties, which both
+//! paths resolve toward the smallest split index.
+
+/// One candidate cost line `cost(γ) = energy_j + γ·bits`, tagged with the
+/// split index it represents.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostLine {
+    /// Partition candidate (1 ..= |L|; the FCC line 0 is runtime-dependent
+    /// and compared separately at decision time).
+    pub split: usize,
+    /// Slope: transmit volume in bits at this split.
+    pub bits: f64,
+    /// Intercept: cumulative client energy in joules at this split.
+    pub energy_j: f64,
+}
+
+impl CostLine {
+    /// Line evaluation in line arithmetic. Decision code deliberately does
+    /// NOT use this: candidates are re-evaluated with the scan's exact cost
+    /// expression so argmins match bit-for-bit.
+    pub fn cost(&self, gamma: f64) -> f64 {
+        self.energy_j + gamma * self.bits
+    }
+}
+
+/// The precomputed lower envelope of the candidate cost lines over γ ≥ 0.
+///
+/// `segments[i]` is the winning line for γ in `[breakpoints[i-1],
+/// breakpoints[i])`, with the implicit boundaries `breakpoints[-1] = 0` and
+/// `breakpoints[len] = +∞`. Slopes decrease strictly along `segments`.
+#[derive(Clone, Debug, Default)]
+pub struct Envelope {
+    breakpoints: Vec<f64>,
+    segments: Vec<CostLine>,
+}
+
+impl Envelope {
+    /// Build the lower envelope of `lines` by a Jarvis-style sweep from
+    /// γ = 0⁺ upward. O(n²) worst case — done once per partitioner build
+    /// over at most a few dozen lines, so robustness beats asymptotics.
+    pub fn build(lines: &[CostLine]) -> Self {
+        // Non-finite lines (NaN/±∞ from measured tables fed through
+        // `Partitioner::from_parts`) can never be a scan argmin — NaN costs
+        // fail every `<` and ∞ loses to any finite line — so drop them here
+        // instead of panicking in the sort. An all-non-finite family yields
+        // an empty envelope, which decision code treats as "fall back to
+        // the scan".
+        let mut sorted: Vec<CostLine> = lines
+            .iter()
+            .copied()
+            .filter(|l| l.bits.is_finite() && l.energy_j.is_finite())
+            .collect();
+        if sorted.is_empty() {
+            return Envelope::default();
+        }
+        // Dedupe by slope: for equal `bits` only the lowest-energy line can
+        // ever be minimal (for full (bits, energy) ties keep the smallest
+        // split, matching the scan's first-argmin rule).
+        sorted.sort_by(|a, b| {
+            a.bits
+                .partial_cmp(&b.bits)
+                .expect("finite bits")
+                .then(a.energy_j.partial_cmp(&b.energy_j).expect("finite energy"))
+                .then(a.split.cmp(&b.split))
+        });
+        sorted.dedup_by(|next, kept| next.bits == kept.bits);
+
+        // Winner as γ → 0⁺: minimal intercept; among equal intercepts the
+        // smaller slope stays minimal immediately to the right of zero.
+        let mut cur = *sorted
+            .iter()
+            .min_by(|a, b| {
+                a.energy_j
+                    .partial_cmp(&b.energy_j)
+                    .expect("finite energy")
+                    .then(a.bits.partial_cmp(&b.bits).expect("finite bits"))
+                    .then(a.split.cmp(&b.split))
+            })
+            .expect("non-empty");
+        let mut segments = vec![cur];
+        let mut breakpoints = Vec::new();
+        let mut gamma = 0.0_f64;
+        loop {
+            // Earliest upcoming crossing against a strictly shallower line;
+            // among concurrent crossings the shallowest line dominates
+            // beyond the crossing point, so it is the next segment.
+            let mut next: Option<(f64, CostLine)> = None;
+            for line in &sorted {
+                if line.bits >= cur.bits {
+                    continue;
+                }
+                let cross =
+                    ((line.energy_j - cur.energy_j) / (cur.bits - line.bits)).max(gamma);
+                let better = match next {
+                    None => true,
+                    Some((g, n)) => cross < g || (cross == g && line.bits < n.bits),
+                };
+                if better {
+                    next = Some((cross, *line));
+                }
+            }
+            match next {
+                Some((g, line)) => {
+                    breakpoints.push(g);
+                    segments.push(line);
+                    cur = line;
+                    gamma = g;
+                }
+                None => break,
+            }
+        }
+        Envelope {
+            breakpoints,
+            segments,
+        }
+    }
+
+    /// Number of envelope segments (0 only for an empty build).
+    pub fn num_segments(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// The sorted γ breakpoints between segments.
+    pub fn breakpoints(&self) -> &[f64] {
+        &self.breakpoints
+    }
+
+    /// The winning line per segment, in γ order.
+    pub fn segments(&self) -> &[CostLine] {
+        &self.segments
+    }
+
+    /// Index of the segment whose γ-interval contains `gamma`
+    /// (binary search over the breakpoint table).
+    pub fn segment_index(&self, gamma: f64) -> usize {
+        self.breakpoints.partition_point(|&b| b <= gamma)
+    }
+
+    /// The envelope-minimal line at `gamma`. Exact in line arithmetic;
+    /// decision code should prefer [`Envelope::candidates`] and re-evaluate.
+    pub fn winner(&self, gamma: f64) -> CostLine {
+        self.segments[self.segment_index(gamma)]
+    }
+
+    /// Winners of the segment containing γ and of its two neighbors — a
+    /// candidate set that provably contains the scan argmin (restricted to
+    /// splits ≥ 1) and absorbs floating-point wobble at breakpoints.
+    /// Empty iff the envelope is empty.
+    pub fn candidates(&self, gamma: f64) -> &[CostLine] {
+        if self.segments.is_empty() {
+            return &self.segments;
+        }
+        let i = self.segment_index(gamma);
+        let lo = i.saturating_sub(1);
+        let hi = (i + 1).min(self.segments.len() - 1);
+        &self.segments[lo..=hi]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn line(split: usize, bits: f64, energy_j: f64) -> CostLine {
+        CostLine {
+            split,
+            bits,
+            energy_j,
+        }
+    }
+
+    /// Reference: brute-force minimum over the lines at a given γ,
+    /// first-index tie-breaking like the linear scan.
+    fn brute(lines: &[CostLine], gamma: f64) -> usize {
+        let mut by_split: Vec<CostLine> = lines.to_vec();
+        by_split.sort_by_key(|l| l.split);
+        let mut best = f64::INFINITY;
+        let mut win = by_split[0].split;
+        for l in &by_split {
+            let c = l.cost(gamma);
+            if c < best {
+                best = c;
+                win = l.split;
+            }
+        }
+        win
+    }
+
+    #[test]
+    fn single_line_has_one_segment() {
+        let e = Envelope::build(&[line(1, 10.0, 1.0)]);
+        assert_eq!(e.num_segments(), 1);
+        assert!(e.breakpoints().is_empty());
+        assert_eq!(e.winner(0.0).split, 1);
+        assert_eq!(e.winner(1e300).split, 1);
+    }
+
+    #[test]
+    fn empty_build_is_harmless() {
+        let e = Envelope::build(&[]);
+        assert_eq!(e.num_segments(), 0);
+        assert!(e.candidates(1.0).is_empty());
+    }
+
+    #[test]
+    fn classic_three_line_envelope() {
+        // Cheap-energy/steep, middle, and flat/expensive lines: all three
+        // win somewhere, in slope-descending order.
+        let lines = [line(1, 100.0, 0.0), line(2, 10.0, 50.0), line(3, 1.0, 200.0)];
+        let e = Envelope::build(&lines);
+        assert_eq!(e.num_segments(), 3);
+        let splits: Vec<usize> = e.segments().iter().map(|l| l.split).collect();
+        assert_eq!(splits, vec![1, 2, 3]);
+        // Crossings: 1-2 at 50/90, 2-3 at 150/9.
+        let bp = e.breakpoints();
+        assert!((bp[0] - 50.0 / 90.0).abs() < 1e-12);
+        assert!((bp[1] - 150.0 / 9.0).abs() < 1e-12);
+        for gamma in [0.0, 0.1, 0.6, 5.0, 20.0, 1e6] {
+            assert_eq!(e.winner(gamma).split, brute(&lines, gamma), "γ={gamma}");
+        }
+    }
+
+    #[test]
+    fn dominated_line_never_appears() {
+        // Line 2 has both higher energy and higher bits than line 1.
+        let lines = [line(1, 10.0, 1.0), line(2, 20.0, 2.0), line(3, 1.0, 5.0)];
+        let e = Envelope::build(&lines);
+        assert!(e.segments().iter().all(|l| l.split != 2));
+    }
+
+    #[test]
+    fn duplicate_lines_keep_smallest_split() {
+        let lines = [line(4, 10.0, 1.0), line(2, 10.0, 1.0), line(7, 1.0, 9.0)];
+        let e = Envelope::build(&lines);
+        assert_eq!(e.segments()[0].split, 2);
+    }
+
+    #[test]
+    fn concurrent_crossing_skips_tangent_line() {
+        // Three lines through the common point (γ=1, cost=10): the middle
+        // slope never wins a segment.
+        let lines = [line(1, 8.0, 2.0), line(2, 5.0, 5.0), line(3, 2.0, 8.0)];
+        let e = Envelope::build(&lines);
+        let splits: Vec<usize> = e.segments().iter().map(|l| l.split).collect();
+        assert_eq!(splits, vec![1, 3]);
+        assert_eq!(e.breakpoints().len(), 1);
+        assert!((e.breakpoints()[0] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn candidates_cover_breakpoint_neighbors() {
+        let lines = [line(1, 100.0, 0.0), line(2, 10.0, 50.0), line(3, 1.0, 200.0)];
+        let e = Envelope::build(&lines);
+        let bp = e.breakpoints()[0];
+        let cands: Vec<usize> = e.candidates(bp).iter().map(|l| l.split).collect();
+        assert!(cands.contains(&1) && cands.contains(&2));
+    }
+
+    #[test]
+    fn randomized_envelope_matches_brute_force() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xE57);
+        for case in 0..200 {
+            let n = rng.range_usize(1, 24);
+            let lines: Vec<CostLine> = (0..n)
+                .map(|i| line(i + 1, rng.next_f64() * 1e6, rng.next_f64() * 1e-2))
+                .collect();
+            let e = Envelope::build(&lines);
+            for _ in 0..16 {
+                // Log-uniform γ over many decades plus the extremes.
+                let gamma = 10f64.powf(rng.next_f64() * 24.0 - 12.0);
+                let win = e.winner(gamma);
+                let brute_win = brute(&lines, gamma);
+                // Equal cost (within line arithmetic) is acceptable; the
+                // argmin index must agree whenever the minimum is unique.
+                let lb = lines.iter().find(|l| l.split == brute_win).unwrap();
+                let tol = 1e-9 * lb.cost(gamma).abs() + 1e-300;
+                assert!(
+                    win.split == brute_win || win.cost(gamma) <= lb.cost(gamma) + tol,
+                    "case {case}: γ={gamma} envelope {} vs brute {brute_win}",
+                    win.split
+                );
+            }
+        }
+    }
+}

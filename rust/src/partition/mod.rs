@@ -1,10 +1,13 @@
-//! Runtime client/cloud partitioning (paper §VII, Algorithm 2) and the
+//! Runtime client/cloud partitioning (paper §VII, Algorithm 2), the
+//! lower-envelope decision engine that makes it O(1) per request, and the
 //! inference-delay model (paper §VI-B, eq. 30).
 
 pub mod algorithm2;
 pub mod constrained;
 pub mod delay;
+pub mod envelope;
 
-pub use algorithm2::{PartitionDecision, Partitioner, FCC, FISC_OUTPUT_BITS};
+pub use algorithm2::{PartitionDecision, Partitioner, SplitChoice, FCC, FISC_OUTPUT_BITS};
 pub use constrained::{decide_with_slo, ConstrainedDecision};
 pub use delay::DelayModel;
+pub use envelope::{CostLine, Envelope};

@@ -12,6 +12,7 @@
 
 pub mod manifest;
 pub mod pjrt;
+pub mod xla_shim;
 
 pub use manifest::{Manifest, ManifestLayer, ManifestNetwork};
 pub use pjrt::{Executable, NetworkRuntime, Runtime};

@@ -7,6 +7,10 @@
 //!
 //! None of these types are `Send`: keep a [`Runtime`] (and everything
 //! compiled from it) on the thread that created it.
+//!
+//! The offline build links [`super::xla_shim`] instead of the real `xla`
+//! crate (same API slice, fails at client construction); swap the `use`
+//! below to restore the real backend.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -16,6 +20,7 @@ use std::rc::Rc;
 use anyhow::{anyhow, Context, Result};
 
 use super::manifest::{Manifest, ManifestNetwork};
+use super::xla_shim as xla;
 
 /// A PJRT device handle (CPU plugin).
 pub struct Runtime {

@@ -172,6 +172,136 @@ fn prop_partition_decision_monotone_in_bitrate() {
     }
 }
 
+/// Random synthetic partitioner: monotone cumulative energy, positive
+/// transmit volumes (CNN-like or adversarially shuffled).
+fn random_partitioner(rng: &mut Rng) -> Partitioner {
+    let n_layers = rng.range_usize(1, 30);
+    let mut cum = Vec::with_capacity(n_layers);
+    let mut acc = 0.0;
+    for _ in 0..n_layers {
+        acc += rng.next_f64() * 1e-3 + 1e-9;
+        cum.push(acc);
+    }
+    let d_rlc: Vec<f64> = (0..n_layers)
+        .map(|_| rng.next_f64() * 1e6 + 1.0)
+        .collect();
+    Partitioner::from_parts(cum, d_rlc, 1_000_000, 8)
+}
+
+#[test]
+fn prop_envelope_decide_matches_scan_argmin() {
+    // The tentpole invariant: the envelope paths (decide_fast /
+    // decide_split / decide_batch) must reproduce the brute-force linear
+    // scan argmin EXACTLY over a randomized (network, sparsity_in, B_e,
+    // P_Tx) grid — same split, bit-identical cost.
+    let mut rng = Rng::new(0x5EED);
+    for case in 0..CASES {
+        let p = random_partitioner(&mut rng);
+        let mut sps = Vec::new();
+        for probe in 0..6 {
+            // Log-uniform B_e over ~12 decades hits the extreme-γ corners
+            // (everything-FISC and everything-FCC) as well as the
+            // crossover region.
+            let be = 10f64.powf(rng.next_f64() * 12.0 - 3.0);
+            let p_tx = rng.next_f64() * 2.5 + 0.05;
+            let env = TransmitEnv::with_effective_rate(be, p_tx);
+            let sp = rng.next_f64();
+            sps.push(sp);
+            let scan = p.decide(sp, &env); // reference linear scan
+            let fast = p.decide_fast(sp, &env); // envelope path
+            assert_eq!(
+                fast.l_opt, scan.l_opt,
+                "case {case}/{probe}: be={be} p_tx={p_tx} sp={sp}"
+            );
+            assert_eq!(
+                fast.cost_j, scan.costs_j[scan.l_opt],
+                "case {case}/{probe}: cost mismatch"
+            );
+            assert_eq!(fast.fcc_cost_j, scan.costs_j[0]);
+            assert_eq!(
+                fast.fisc_cost_j,
+                scan.costs_j[scan.costs_j.len() - 1]
+            );
+        }
+        // Batched decisions (one shared env) agree element-wise.
+        let be = 10f64.powf(rng.next_f64() * 8.0 - 1.0);
+        let env = TransmitEnv::with_effective_rate(be, rng.next_f64() * 2.0 + 0.1);
+        let batch = p.decide_batch_sparsity(&sps, &env);
+        assert_eq!(batch.len(), sps.len(), "case {case}");
+        for (&sp, choice) in sps.iter().zip(&batch) {
+            let scan = p.decide(sp, &env);
+            assert_eq!(choice.l_opt, scan.l_opt, "case {case}: batch sp={sp}");
+            assert_eq!(choice.cost_j, scan.costs_j[scan.l_opt]);
+        }
+    }
+}
+
+#[test]
+fn prop_envelope_matches_scan_at_exact_breakpoints_and_ties() {
+    // Tie cases: query γ EXACTLY at every envelope breakpoint (P_Tx = γ·B_e
+    // with B_e = 1, so γ is reproduced bit-for-bit), where two candidate
+    // lines cost the same and the scan's first-argmin rule must win; plus
+    // duplicated candidate lines, which must resolve to the smallest split.
+    let mut rng = Rng::new(0x71E5);
+    for case in 0..120 {
+        let p = random_partitioner(&mut rng);
+        for (i, &gamma) in p.envelope().breakpoints().iter().enumerate() {
+            for sp in [0.0, 0.5, 0.999] {
+                let env = TransmitEnv::with_effective_rate(1.0, gamma);
+                let scan = p.decide(sp, &env);
+                let fast = p.decide_fast(sp, &env);
+                assert_eq!(
+                    fast.l_opt, scan.l_opt,
+                    "case {case}: breakpoint {i} γ={gamma} sp={sp}"
+                );
+                assert_eq!(fast.cost_j, scan.costs_j[scan.l_opt]);
+            }
+        }
+    }
+    // Duplicate lines: splits 1 and 2 identical, 3 cheap-to-send; the
+    // envelope must tie-break toward split 1 exactly like the scan.
+    let p = Partitioner::from_parts(
+        vec![1e-3, 1e-3, 5e-3],
+        vec![8e5, 8e5, 10.0],
+        1_000_000,
+        8,
+    );
+    for be in [1e3, 1e6, 1e9, 1e12] {
+        let env = TransmitEnv::with_effective_rate(be, 0.78);
+        for sp in [0.1, 0.608, 0.95] {
+            let scan = p.decide(sp, &env);
+            let fast = p.decide_fast(sp, &env);
+            assert_eq!(fast.l_opt, scan.l_opt, "dup lines: be={be} sp={sp}");
+        }
+    }
+}
+
+#[test]
+fn prop_degenerate_channel_is_guarded() {
+    // B_e ≤ 0 used to divide by zero (NaN costs, argmin stuck at FCC);
+    // the guard must route every path to FISC with finite, NaN-free
+    // accounting.
+    let mut rng = Rng::new(0xDEAD);
+    for case in 0..60 {
+        let p = random_partitioner(&mut rng);
+        let n = p.num_layers();
+        for be in [0.0, -1.0, f64::NAN] {
+            let env = TransmitEnv::with_effective_rate(be, 0.78);
+            let scan = p.decide(rng.next_f64(), &env);
+            assert_eq!(scan.l_opt, n, "case {case}: be={be}");
+            assert!(scan.costs_j[n].is_finite());
+            assert!(!scan.savings_vs_fcc().is_nan());
+            assert!(!scan.savings_vs_fisc().is_nan());
+            let fast = p.decide_split(rng.next_f64() * 1e6, &env);
+            assert_eq!(fast.l_opt, n);
+            assert!(fast.cost_j.is_finite());
+            assert!(!fast.savings_vs_fcc().is_nan());
+            let batch = p.decide_batch_sparsity(&[0.2, 0.8], &env);
+            assert!(batch.iter().all(|c| c.l_opt == n && c.cost_j.is_finite()));
+        }
+    }
+}
+
 #[test]
 fn prop_json_round_trip() {
     let mut rng = Rng::new(0xD1CE);

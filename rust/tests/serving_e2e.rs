@@ -24,6 +24,7 @@ fn config(network: &str, force: Option<usize>) -> CoordinatorConfig {
         time_scale: 0.0,
         force_split: force,
         warm_splits: Vec::new(),
+        batch_max: 3,
         seed: 5,
     }
 }
