@@ -18,10 +18,15 @@ use neupart::bench::Bencher;
 use neupart::channel::TransmitEnv;
 use neupart::cnn::Network;
 use neupart::cnnergy::CnnErgy;
-use neupart::partition::{Partitioner, FCC};
+use neupart::partition::{decide_with_slo_scan, DelayModel, Partitioner, SloPartitioner, FCC};
 use neupart::util::json::Value;
 
 const BATCH: usize = 1024;
+
+/// SLO cycle for the constrained benches: loose (unconstrained optimum
+/// feasible — the O(log L) hot path), binding (frontier walk), and
+/// infeasible (delay-envelope fallback).
+const SLO_CYCLE_S: [f64; 3] = [0.5, 0.012, 1e-6];
 
 fn main() {
     let mut b = Bencher::from_env();
@@ -79,6 +84,29 @@ fn main() {
             .mean_ns
             / BATCH as f64;
 
+        // Constrained (SLO) path: the O(|L|) delay scan (fresh delay + cost
+        // vectors per call) against the envelope-backed SloPartitioner.
+        let dm = DelayModel::new(&net, &model);
+        let slo_p = SloPartitioner::new(p.clone(), dm.clone());
+        let mut sp_s = 0.40;
+        let mut slo_i = 0;
+        let slo_scan_ns = b
+            .bench(&format!("slo_scan/{}", net.name), || {
+                sp_s = if sp_s > 0.9 { 0.40 } else { sp_s + 0.001 };
+                slo_i = (slo_i + 1) % SLO_CYCLE_S.len();
+                decide_with_slo_scan(&p, &dm, sp_s, &env, SLO_CYCLE_S[slo_i])
+            })
+            .mean_ns;
+        let mut sp_f = 0.40;
+        let mut slo_j = 0;
+        let slo_envelope_ns = b
+            .bench(&format!("slo_envelope/{}", net.name), || {
+                sp_f = if sp_f > 0.9 { 0.40 } else { sp_f + 0.001 };
+                slo_j = (slo_j + 1) % SLO_CYCLE_S.len();
+                slo_p.decide_with_slo(sp_f, &env, SLO_CYCLE_S[slo_j])
+            })
+            .mean_ns;
+
         let mut row = BTreeMap::new();
         row.insert("layers".to_string(), Value::Num(p.num_layers() as f64));
         row.insert(
@@ -109,15 +137,28 @@ fn main() {
             "speedup_batch_vs_scan".to_string(),
             Value::Num(scan_ns / batch_ns),
         );
+        row.insert("slo_scan_ns".to_string(), Value::Num(slo_scan_ns));
+        row.insert("slo_envelope_ns".to_string(), Value::Num(slo_envelope_ns));
+        row.insert(
+            "slo_frontier_len".to_string(),
+            Value::Num(slo_p.frontier_len() as f64),
+        );
+        row.insert(
+            "speedup_slo_envelope_vs_scan".to_string(),
+            Value::Num(slo_scan_ns / slo_envelope_ns),
+        );
         summary.insert(net.name.to_string(), Value::Obj(row));
         println!(
-            "  {}: scan {:.0} ns -> envelope {:.0} ns ({:.1}x), batch {:.1} ns/dec ({:.1}x)",
+            "  {}: scan {:.0} ns -> envelope {:.0} ns ({:.1}x), batch {:.1} ns/dec ({:.1}x), slo {:.0} -> {:.0} ns ({:.1}x)",
             net.name,
             scan_ns,
             envelope_ns,
             scan_ns / envelope_ns,
             batch_ns,
-            scan_ns / batch_ns
+            scan_ns / batch_ns,
+            slo_scan_ns,
+            slo_envelope_ns,
+            slo_scan_ns / slo_envelope_ns
         );
     }
 

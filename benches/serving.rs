@@ -22,6 +22,7 @@ fn requests(n: usize) -> Vec<InferenceRequest> {
             pixels: img.pixels.clone(),
             width: img.w,
             height: img.h,
+            env: None,
         })
         .collect()
 }
@@ -46,6 +47,7 @@ fn main() {
             force_split: force,
             warm_splits: (0..=11).collect(),
             batch_max: 8,
+            gamma_coherent: true,
             seed: 3,
         };
         let coord = Coordinator::new(cfg).expect("coordinator");

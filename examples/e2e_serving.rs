@@ -28,6 +28,7 @@ fn requests(n: usize, seed: u64) -> Vec<InferenceRequest> {
             pixels: img.pixels.clone(),
             width: img.w,
             height: img.h,
+            env: None,
         })
         .collect()
 }
@@ -49,6 +50,7 @@ fn config(force_split: Option<usize>, be_mbps: f64) -> CoordinatorConfig {
         force_split,
         warm_splits,
         batch_max: 8,
+        gamma_coherent: true,
         seed: 7,
     }
 }

@@ -7,5 +7,7 @@ pub mod simulator;
 pub mod transmission;
 
 pub use devices::{DevicePower, DEVICE_POWER_TABLE};
-pub use simulator::{Channel, ChannelConfig};
+pub use simulator::{
+    jittered_rate_bps, Channel, ChannelConfig, ChannelStats, MAX_JITTER, MIN_EFFECTIVE_RATE_BPS,
+};
 pub use transmission::{effective_bit_rate, transmission_energy_j, transmission_time_s, TransmitEnv};

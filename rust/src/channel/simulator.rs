@@ -9,15 +9,59 @@
 use std::sync::Mutex;
 use std::time::Duration;
 
+use anyhow::{bail, Result};
+
 use super::transmission::TransmitEnv;
 use crate::util::rng::Rng;
+
+/// Largest jitter amplitude the simulator accepts. Amplitudes ≥ 1 would let
+/// the multiplicative factor `1 + jitter·U(-1,1)` reach zero or below,
+/// producing infinite/negative airtime and energy that silently corrupt
+/// [`ChannelStats`]; [`Channel::new`] clamps here.
+pub const MAX_JITTER: f64 = 0.95;
+
+/// Positive floor on the jittered effective bit rate when the *configured*
+/// rate is itself degenerate (zero, negative, or NaN — envs the partitioner
+/// resolves to FISC, which still ships its 32-bit result through the
+/// simulator). Keeps every transfer's airtime and energy finite.
+pub const MIN_EFFECTIVE_RATE_BPS: f64 = 1.0e3;
+
+/// Floor on the jittered rate relative to a valid configured rate. With
+/// jitter clamped to [`MAX_JITTER`] the multiplicative factor never drops
+/// below 0.05, so this 1% floor cannot bind for sane configs — it only
+/// guards arithmetic edge cases without distorting legitimately slow
+/// channels (a configured 500 bps link stays 500 bps).
+const MIN_RATE_FRACTION: f64 = 0.01;
+
+/// One sample of the clamped multiplicative jitter model: the rate scale
+/// factor `1 + jitter·(2u−1)` with `u = unit_sample ∈ [0,1)`, floored so
+/// the result is always positive and finite. Shared by [`Channel::send`]
+/// and the coordinator's admission-time channel-state sampling, so the γ
+/// used for bucketing and the rate the simulator charges come from the
+/// same model.
+pub fn jittered_rate_bps(rate_bps: f64, jitter: f64, unit_sample: f64) -> f64 {
+    let jitter = if jitter.is_nan() {
+        0.0
+    } else {
+        jitter.clamp(0.0, MAX_JITTER)
+    };
+    let factor = 1.0 + jitter * (2.0 * unit_sample - 1.0);
+    let floor = if rate_bps > 0.0 && rate_bps.is_finite() {
+        rate_bps * MIN_RATE_FRACTION
+    } else {
+        MIN_EFFECTIVE_RATE_BPS
+    };
+    // f64::max returns the non-NaN operand, so a NaN product also lands on
+    // the floor.
+    (rate_bps * factor).max(floor)
+}
 
 /// Channel behavior knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct ChannelConfig {
     pub env: TransmitEnv,
     /// Multiplicative bandwidth jitter amplitude (0 = deterministic;
-    /// 0.2 = ±20% uniform per transfer).
+    /// 0.2 = ±20% uniform per transfer). Clamped to `[0, MAX_JITTER]`.
     pub jitter: f64,
     /// Scale factor applied to simulated airtime before sleeping (0 disables
     /// real sleeps so tests/benches run instantly; 1 = real time).
@@ -31,6 +75,45 @@ impl ChannelConfig {
             jitter: 0.0,
             time_scale: 0.0,
         }
+    }
+
+    /// Reject configurations a user-facing builder should never accept:
+    /// non-finite or non-positive bit rate, jitter outside `[0, MAX_JITTER]`
+    /// (≥ 1 would make the jittered rate hit zero or negative), negative or
+    /// non-finite time scale.
+    pub fn validate(&self) -> Result<()> {
+        let rate = self.env.effective_bit_rate();
+        if !(rate > 0.0 && rate.is_finite()) {
+            bail!("effective bit rate must be positive and finite, got {rate}");
+        }
+        if !(0.0..=MAX_JITTER).contains(&self.jitter) {
+            bail!(
+                "jitter must be in [0, {MAX_JITTER}], got {} (≥ 1 makes the \
+                 jittered rate non-positive)",
+                self.jitter
+            );
+        }
+        if !(self.time_scale >= 0.0 && self.time_scale.is_finite()) {
+            bail!("time_scale must be finite and ≥ 0, got {}", self.time_scale);
+        }
+        Ok(())
+    }
+
+    /// Clamp out-of-range knobs to safe values (NaN jitter → 0; jitter into
+    /// `[0, MAX_JITTER]`; NaN/negative time scale → 0). The env rate is
+    /// left as configured — [`Channel::send`] floors the *jittered* rate.
+    pub fn sanitized(mut self) -> Self {
+        self.jitter = if self.jitter.is_nan() {
+            0.0
+        } else {
+            self.jitter.clamp(0.0, MAX_JITTER)
+        };
+        self.time_scale = if self.time_scale.is_nan() || self.time_scale < 0.0 {
+            0.0
+        } else {
+            self.time_scale
+        };
+        self
     }
 }
 
@@ -50,25 +133,36 @@ pub struct Channel {
 }
 
 impl Channel {
+    /// Build a channel; the config is sanitized (see
+    /// [`ChannelConfig::sanitized`]) so a stored channel can never produce
+    /// non-finite airtime or energy.
     pub fn new(config: ChannelConfig, seed: u64) -> Self {
         Channel {
-            config,
+            config: config.sanitized(),
             state: Mutex::new((Rng::new(seed), ChannelStats::default())),
         }
     }
 
     /// Transmit a payload: returns (energy J, airtime s) and sleeps the
-    /// scaled airtime to model occupancy.
+    /// scaled airtime to model occupancy. The jittered effective rate goes
+    /// through [`jittered_rate_bps`], so stats stay finite even on
+    /// degenerate envs (zero/negative/NaN rate saturates at
+    /// [`MIN_EFFECTIVE_RATE_BPS`]) while valid slow channels keep their
+    /// configured rate.
     pub fn send(&self, payload_bits: u64) -> (f64, f64) {
         let (energy, airtime) = {
             let mut guard = self.state.lock().unwrap();
             let (ref mut rng, ref mut stats) = *guard;
-            let jitter = if self.config.jitter > 0.0 {
-                1.0 + self.config.jitter * (2.0 * rng.next_f64() - 1.0)
+            let u = if self.config.jitter > 0.0 {
+                rng.next_f64()
             } else {
-                1.0
+                0.5 // factor 1.0: deterministic, no RNG draw consumed
             };
-            let b_e = self.config.env.effective_bit_rate() * jitter;
+            let b_e = jittered_rate_bps(
+                self.config.env.effective_bit_rate(),
+                self.config.jitter,
+                u,
+            );
             let airtime = payload_bits as f64 / b_e;
             let energy = self.config.env.p_tx_w * airtime;
             stats.transfers += 1;
@@ -133,6 +227,103 @@ mod tests {
         assert_eq!(s.transfers, 10);
         assert_eq!(s.payload_bits, 1000);
         assert!(s.energy_j > 0.0);
+    }
+
+    #[test]
+    fn jitter_at_or_above_one_is_clamped_and_stays_finite() {
+        // Regression: jitter ≥ 1.0 used to let the multiplicative factor
+        // hit 0 or go negative, producing ∞/negative airtime and energy
+        // that silently corrupted ChannelStats.
+        for j in [1.0, 1.5, 10.0, f64::NAN] {
+            let mut cfg = ChannelConfig::ideal(env());
+            cfg.jitter = j;
+            let ch = Channel::new(cfg, 11);
+            assert!(ch.config().jitter <= MAX_JITTER, "jitter {j}");
+            assert!(ch.config().jitter >= 0.0, "jitter {j}");
+            for _ in 0..200 {
+                let (e, t) = ch.send(1_000_000);
+                assert!(t.is_finite() && t > 0.0, "jitter {j}: airtime {t}");
+                assert!(e.is_finite() && e >= 0.0, "jitter {j}: energy {e}");
+            }
+            let s = ch.stats();
+            assert!(s.energy_j.is_finite() && s.airtime_s.is_finite());
+        }
+    }
+
+    #[test]
+    fn degenerate_rate_saturates_at_floor() {
+        for rate in [0.0, -5.0e6, f64::NAN] {
+            let ch = Channel::new(
+                ChannelConfig::ideal(TransmitEnv::with_effective_rate(rate, 1.0)),
+                3,
+            );
+            let (e, t) = ch.send(1_000);
+            // 1 kbit at the 1 kbps floor: 1 s of airtime, finite energy.
+            assert!((t - 1_000.0 / MIN_EFFECTIVE_RATE_BPS).abs() < 1e-9, "rate {rate}");
+            assert!(e.is_finite(), "rate {rate}");
+        }
+    }
+
+    #[test]
+    fn valid_sub_kilobit_rate_is_not_floored() {
+        // The absolute floor applies only to degenerate configured rates;
+        // a legitimately slow 500 bps link keeps its true airtime/energy.
+        let ch = Channel::new(
+            ChannelConfig::ideal(TransmitEnv::with_effective_rate(500.0, 0.78)),
+            9,
+        );
+        let (e, t) = ch.send(1_000);
+        assert!((t - 2.0).abs() < 1e-12, "airtime {t}");
+        assert!((e - 0.78 * 2.0).abs() < 1e-12, "energy {e}");
+    }
+
+    #[test]
+    fn jittered_rate_model_is_shared_and_floored() {
+        // Valid rate: relative floor never binds under clamped jitter.
+        let r = jittered_rate_bps(1e6, 0.95, 0.0); // worst case: factor 0.05
+        assert!((r - 1e6 * 0.05).abs() < 1.0, "rate {r}");
+        // Degenerate rates land on the absolute floor for any sample.
+        for rate in [0.0, -3.0e6, f64::NAN] {
+            assert_eq!(jittered_rate_bps(rate, 0.5, 0.3), MIN_EFFECTIVE_RATE_BPS);
+        }
+        // NaN / out-of-range jitter is clamped, not propagated.
+        assert!(jittered_rate_bps(1e6, f64::NAN, 0.9).is_finite());
+        assert!(jittered_rate_bps(1e6, 50.0, 0.0) > 0.0);
+    }
+
+    #[test]
+    fn validate_accepts_sane_rejects_degenerate() {
+        let mut cfg = ChannelConfig::ideal(env());
+        cfg.jitter = 0.3;
+        cfg.time_scale = 1.0;
+        assert!(cfg.validate().is_ok());
+        cfg.jitter = 1.0;
+        assert!(cfg.validate().is_err());
+        cfg.jitter = -0.1;
+        assert!(cfg.validate().is_err());
+        cfg.jitter = 0.0;
+        cfg.time_scale = -1.0;
+        assert!(cfg.validate().is_err());
+        cfg.time_scale = 0.0;
+        cfg.env = TransmitEnv::with_effective_rate(0.0, 1.0);
+        assert!(cfg.validate().is_err());
+        cfg.env = TransmitEnv::with_effective_rate(f64::NAN, 1.0);
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn sanitized_clamps_without_touching_sane_values() {
+        let mut cfg = ChannelConfig::ideal(env());
+        cfg.jitter = 0.2;
+        cfg.time_scale = 0.5;
+        let s = cfg.sanitized();
+        assert_eq!(s.jitter, 0.2);
+        assert_eq!(s.time_scale, 0.5);
+        cfg.jitter = 2.0;
+        cfg.time_scale = f64::NAN;
+        let s = cfg.sanitized();
+        assert_eq!(s.jitter, MAX_JITTER);
+        assert_eq!(s.time_scale, 0.0);
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Bounded admission queue with backpressure and deadline shedding.
+//! Bounded admission queue with backpressure, deadline shedding and
+//! channel-state (γ) bucketing.
 //!
 //! The serving coordinator's front door: producers `submit` requests into a
 //! bounded queue; workers `take` them. When the queue is full the submitter
@@ -6,6 +7,18 @@
 //! has already expired, the request is shed and counted. This is the
 //! standard serving-system admission pattern (vLLM-style), sized so the
 //! client executor (a single device) is never buried.
+//!
+//! ## γ-bucketing
+//!
+//! A batcher built with [`Batcher::with_buckets`] keeps one FIFO lane per
+//! bucket — the coordinator maps each request's channel state to the
+//! envelope segment containing its `γ = P_Tx/B_e` — and
+//! [`Batcher::take_batch_bucketed`] drains a whole batch from a *single*
+//! bucket, so every batch a worker sees is envelope-coherent even under
+//! per-request channel jitter. Buckets are served oldest-head-first
+//! (global FIFO across lanes, admission-sequence ordered), which keeps
+//! single-bucket behavior identical to the plain queue and prevents a busy
+//! segment from starving a quiet one. Capacity is shared across buckets.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -16,32 +29,61 @@ use std::time::{Duration, Instant};
 struct Entry<T> {
     item: T,
     enqueued: Instant,
+    /// Admission sequence number — total order across buckets.
+    seq: u64,
     deadline: Option<Instant>,
 }
 
-/// Queue statistics.
+/// Queue statistics (aggregate across buckets).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct BatcherStats {
     pub submitted: u64,
     pub taken: u64,
     pub shed_expired: u64,
     pub rejected_full: u64,
-    /// Max queue depth observed.
+    /// Max total queue depth observed.
+    pub high_water: usize,
+}
+
+/// Per-bucket statistics.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BucketStats {
+    pub submitted: u64,
+    pub taken: u64,
+    pub shed_expired: u64,
+    /// Max depth this bucket observed.
     pub high_water: usize,
 }
 
 struct State<T> {
-    queue: VecDeque<Entry<T>>,
+    queues: Vec<VecDeque<Entry<T>>>,
+    /// Total entries across buckets.
+    len: usize,
+    next_seq: u64,
     stats: BatcherStats,
+    bucket_stats: Vec<BucketStats>,
     closed: bool,
 }
 
-/// Bounded MPMC admission queue.
+impl<T> State<T> {
+    /// Bucket whose head entry was admitted first (global FIFO order).
+    fn oldest_bucket(&self) -> Option<usize> {
+        self.queues
+            .iter()
+            .enumerate()
+            .filter_map(|(i, q)| q.front().map(|e| (e.seq, i)))
+            .min()
+            .map(|(_, i)| i)
+    }
+}
+
+/// Bounded MPMC admission queue, optionally bucketed.
 pub struct Batcher<T> {
     state: Mutex<State<T>>,
     not_full: Condvar,
     not_empty: Condvar,
     capacity: usize,
+    buckets: usize,
 }
 
 /// Outcome of a non-blocking submit.
@@ -55,23 +97,50 @@ pub enum Submit {
 }
 
 impl<T> Batcher<T> {
+    /// Single-bucket queue — the plain admission queue.
     pub fn new(capacity: usize) -> Self {
+        Self::with_buckets(capacity, 1)
+    }
+
+    /// Queue with `buckets` FIFO lanes sharing `capacity` slots.
+    pub fn with_buckets(capacity: usize, buckets: usize) -> Self {
         assert!(capacity >= 1);
+        assert!(buckets >= 1);
         Batcher {
             state: Mutex::new(State {
-                queue: VecDeque::with_capacity(capacity),
+                queues: (0..buckets).map(|_| VecDeque::new()).collect(),
+                len: 0,
+                next_seq: 0,
                 stats: BatcherStats::default(),
+                bucket_stats: vec![BucketStats::default(); buckets],
                 closed: false,
             }),
             not_full: Condvar::new(),
             not_empty: Condvar::new(),
             capacity,
+            buckets,
         }
     }
 
-    /// Blocking submit: waits for space (backpressure). Returns `Shed` if
-    /// the deadline expired while waiting, `Rejected` if the queue closed.
+    /// Number of buckets.
+    pub fn buckets(&self) -> usize {
+        self.buckets
+    }
+
+    fn clamp_bucket(&self, bucket: usize) -> usize {
+        bucket.min(self.buckets - 1)
+    }
+
+    /// Blocking submit into bucket 0: waits for space (backpressure).
+    /// Returns `Shed` if the deadline expired while waiting, `Rejected` if
+    /// the queue closed.
     pub fn submit(&self, item: T, deadline: Option<Instant>) -> Submit {
+        self.submit_to(0, item, deadline)
+    }
+
+    /// Blocking submit into a specific bucket (clamped to the valid range).
+    pub fn submit_to(&self, bucket: usize, item: T, deadline: Option<Instant>) -> Submit {
+        let bucket = self.clamp_bucket(bucket);
         let mut s = self.state.lock().unwrap();
         loop {
             if s.closed {
@@ -80,10 +149,11 @@ impl<T> Batcher<T> {
             if let Some(d) = deadline {
                 if Instant::now() >= d {
                     s.stats.shed_expired += 1;
+                    s.bucket_stats[bucket].shed_expired += 1;
                     return Submit::Shed;
                 }
             }
-            if s.queue.len() < self.capacity {
+            if s.len < self.capacity {
                 break;
             }
             s = match deadline {
@@ -96,6 +166,7 @@ impl<T> Batcher<T> {
                     if timeout.timed_out() {
                         let mut guard = guard;
                         guard.stats.shed_expired += 1;
+                        guard.bucket_stats[bucket].shed_expired += 1;
                         return Submit::Shed;
                     }
                     guard
@@ -103,39 +174,71 @@ impl<T> Batcher<T> {
                 None => self.not_full.wait(s).unwrap(),
             };
         }
-        s.queue.push_back(Entry {
-            item,
-            enqueued: Instant::now(),
-            deadline,
-        });
-        s.stats.submitted += 1;
-        s.stats.high_water = s.stats.high_water.max(s.queue.len());
-        self.not_empty.notify_one();
+        self.push(&mut s, bucket, item, deadline);
         Submit::Accepted
     }
 
-    /// Non-blocking submit: `Rejected` when full.
+    /// Non-blocking submit into bucket 0: `Rejected` when full.
     pub fn try_submit(&self, item: T, deadline: Option<Instant>) -> Submit {
+        self.try_submit_to(0, item, deadline)
+    }
+
+    /// Non-blocking submit into a specific bucket (clamped).
+    pub fn try_submit_to(&self, bucket: usize, item: T, deadline: Option<Instant>) -> Submit {
+        let bucket = self.clamp_bucket(bucket);
         let mut s = self.state.lock().unwrap();
-        if s.closed || s.queue.len() >= self.capacity {
+        if s.closed || s.len >= self.capacity {
             s.stats.rejected_full += 1;
             return Submit::Rejected;
         }
         if let Some(d) = deadline {
             if Instant::now() >= d {
                 s.stats.shed_expired += 1;
+                s.bucket_stats[bucket].shed_expired += 1;
                 return Submit::Shed;
             }
         }
-        s.queue.push_back(Entry {
+        self.push(&mut s, bucket, item, deadline);
+        Submit::Accepted
+    }
+
+    fn push(&self, s: &mut State<T>, bucket: usize, item: T, deadline: Option<Instant>) {
+        let seq = s.next_seq;
+        s.next_seq += 1;
+        s.queues[bucket].push_back(Entry {
             item,
             enqueued: Instant::now(),
+            seq,
             deadline,
         });
+        s.len += 1;
         s.stats.submitted += 1;
-        s.stats.high_water = s.stats.high_water.max(s.queue.len());
+        s.stats.high_water = s.stats.high_water.max(s.len);
+        s.bucket_stats[bucket].submitted += 1;
+        let depth = s.queues[bucket].len();
+        s.bucket_stats[bucket].high_water = s.bucket_stats[bucket].high_water.max(depth);
         self.not_empty.notify_one();
-        Submit::Accepted
+    }
+
+    /// Pop the globally-oldest entry, shedding expired ones. Must be called
+    /// with the lock held; returns `None` when every bucket is empty.
+    fn pop_oldest(&self, s: &mut State<T>) -> Option<(T, Duration)> {
+        while let Some(bucket) = s.oldest_bucket() {
+            let entry = s.queues[bucket].pop_front().expect("non-empty head");
+            s.len -= 1;
+            self.not_full.notify_one();
+            if let Some(d) = entry.deadline {
+                if Instant::now() >= d {
+                    s.stats.shed_expired += 1;
+                    s.bucket_stats[bucket].shed_expired += 1;
+                    continue; // shed in-queue expiry
+                }
+            }
+            s.stats.taken += 1;
+            s.bucket_stats[bucket].taken += 1;
+            return Some((entry.item, entry.enqueued.elapsed()));
+        }
+        None
     }
 
     /// Blocking take; skips (and counts) entries whose deadline expired in
@@ -143,17 +246,8 @@ impl<T> Batcher<T> {
     pub fn take(&self) -> Option<(T, Duration)> {
         let mut s = self.state.lock().unwrap();
         loop {
-            while let Some(entry) = s.queue.pop_front() {
-                self.not_full.notify_one();
-                if let Some(d) = entry.deadline {
-                    if Instant::now() >= d {
-                        s.stats.shed_expired += 1;
-                        continue; // shed in-queue expiry
-                    }
-                }
-                s.stats.taken += 1;
-                let wait = entry.enqueued.elapsed();
-                return Some((entry.item, wait));
+            if let Some(out) = self.pop_oldest(&mut s) {
+                return Some(out);
             }
             if s.closed {
                 return None;
@@ -165,32 +259,45 @@ impl<T> Batcher<T> {
     /// Blocking batch take: waits until at least one admissible entry is
     /// available, then drains up to `max` entries without further blocking.
     /// Expired entries are shed exactly as in [`Batcher::take`]. Returns
-    /// `None` once closed and drained. The serving workers use this to
-    /// amortize the per-channel-state partition decision over whole
-    /// batches (`Partitioner::decide_batch`).
+    /// `None` once closed and drained.
     pub fn take_batch(&self, max: usize) -> Option<Vec<(T, Duration)>> {
+        self.take_batch_bucketed(max).map(|(_, batch)| batch)
+    }
+
+    /// [`Batcher::take_batch`] that also reports which bucket the batch was
+    /// drained from. The whole batch comes from ONE bucket — the one whose
+    /// head entry is globally oldest — so a γ-bucketed coordinator gets
+    /// envelope-coherent batches; the serving workers amortize the
+    /// per-channel-state partition decision across each one.
+    pub fn take_batch_bucketed(&self, max: usize) -> Option<(usize, Vec<(T, Duration)>)> {
         assert!(max >= 1);
         let mut s = self.state.lock().unwrap();
         loop {
-            let mut batch = Vec::new();
-            while batch.len() < max {
-                match s.queue.pop_front() {
-                    Some(entry) => {
-                        self.not_full.notify_one();
-                        if let Some(d) = entry.deadline {
-                            if Instant::now() >= d {
-                                s.stats.shed_expired += 1;
-                                continue; // shed in-queue expiry
+            while let Some(bucket) = s.oldest_bucket() {
+                let mut batch = Vec::new();
+                while batch.len() < max {
+                    match s.queues[bucket].pop_front() {
+                        Some(entry) => {
+                            s.len -= 1;
+                            self.not_full.notify_one();
+                            if let Some(d) = entry.deadline {
+                                if Instant::now() >= d {
+                                    s.stats.shed_expired += 1;
+                                    s.bucket_stats[bucket].shed_expired += 1;
+                                    continue; // shed in-queue expiry
+                                }
                             }
+                            s.stats.taken += 1;
+                            s.bucket_stats[bucket].taken += 1;
+                            batch.push((entry.item, entry.enqueued.elapsed()));
                         }
-                        s.stats.taken += 1;
-                        batch.push((entry.item, entry.enqueued.elapsed()));
+                        None => break,
                     }
-                    None => break,
                 }
-            }
-            if !batch.is_empty() {
-                return Some(batch);
+                if !batch.is_empty() {
+                    return Some((bucket, batch));
+                }
+                // Every entry in that bucket had expired — try the next.
             }
             if s.closed {
                 return None;
@@ -211,8 +318,20 @@ impl<T> Batcher<T> {
         self.state.lock().unwrap().stats
     }
 
+    /// Per-bucket statistics, indexed by bucket.
+    pub fn bucket_stats(&self) -> Vec<BucketStats> {
+        self.state.lock().unwrap().bucket_stats.clone()
+    }
+
+    /// Total queued entries across buckets.
     pub fn depth(&self) -> usize {
-        self.state.lock().unwrap().queue.len()
+        self.state.lock().unwrap().len
+    }
+
+    /// Queued entries per bucket.
+    pub fn bucket_depths(&self) -> Vec<usize> {
+        let s = self.state.lock().unwrap();
+        s.queues.iter().map(|q| q.len()).collect()
     }
 }
 
@@ -350,5 +469,76 @@ mod tests {
         let total: usize = consumers.into_iter().map(|c| c.join().unwrap()).sum();
         assert_eq!(total, 200);
         assert_eq!(b.stats().taken, 200);
+    }
+
+    // ---- γ-bucketed lanes ----
+
+    #[test]
+    fn bucketed_batches_are_single_bucket_and_fifo_across_lanes() {
+        let b = Batcher::with_buckets(16, 3);
+        b.submit_to(1, 10, None);
+        b.submit_to(0, 20, None);
+        b.submit_to(1, 11, None);
+        b.submit_to(2, 30, None);
+        b.submit_to(1, 12, None);
+        // Oldest head is in bucket 1; the whole batch comes from it.
+        let (bucket, batch) = b.take_batch_bucketed(8).unwrap();
+        assert_eq!(bucket, 1);
+        assert_eq!(batch.iter().map(|(v, _)| *v).collect::<Vec<_>>(), vec![10, 11, 12]);
+        // Next oldest head: bucket 0, then bucket 2.
+        let (bucket, batch) = b.take_batch_bucketed(8).unwrap();
+        assert_eq!((bucket, batch[0].0), (0, 20));
+        let (bucket, batch) = b.take_batch_bucketed(8).unwrap();
+        assert_eq!((bucket, batch[0].0), (2, 30));
+        let s = b.bucket_stats();
+        assert_eq!(s[1].submitted, 3);
+        assert_eq!(s[1].taken, 3);
+        assert_eq!(s[0].taken, 1);
+        assert_eq!(s[2].taken, 1);
+    }
+
+    #[test]
+    fn take_interleaves_buckets_in_admission_order() {
+        let b = Batcher::with_buckets(8, 2);
+        b.submit_to(0, 1, None);
+        b.submit_to(1, 2, None);
+        b.submit_to(0, 3, None);
+        for want in [1, 2, 3] {
+            assert_eq!(b.take().unwrap().0, want);
+        }
+    }
+
+    #[test]
+    fn bucket_index_clamps_and_depths_track() {
+        let b = Batcher::with_buckets(8, 2);
+        assert_eq!(b.buckets(), 2);
+        b.submit_to(usize::MAX, 7, None); // clamped to last bucket
+        assert_eq!(b.bucket_depths(), vec![0, 1]);
+        assert_eq!(b.depth(), 1);
+        let (bucket, batch) = b.take_batch_bucketed(4).unwrap();
+        assert_eq!(bucket, 1);
+        assert_eq!(batch[0].0, 7);
+    }
+
+    #[test]
+    fn capacity_is_shared_across_buckets() {
+        let b = Batcher::with_buckets(2, 4);
+        assert_eq!(b.try_submit_to(0, 1, None), Submit::Accepted);
+        assert_eq!(b.try_submit_to(3, 2, None), Submit::Accepted);
+        assert_eq!(b.try_submit_to(1, 3, None), Submit::Rejected);
+    }
+
+    #[test]
+    fn expired_bucket_falls_through_to_next() {
+        let b = Batcher::with_buckets(8, 2);
+        let soon = Instant::now() + Duration::from_millis(5);
+        b.submit_to(0, 1, Some(soon));
+        b.submit_to(1, 2, None);
+        std::thread::sleep(Duration::from_millis(10));
+        // Bucket 0's only entry expired; the batch comes from bucket 1.
+        let (bucket, batch) = b.take_batch_bucketed(4).unwrap();
+        assert_eq!(bucket, 1);
+        assert_eq!(batch[0].0, 2);
+        assert_eq!(b.stats().shed_expired, 1);
     }
 }

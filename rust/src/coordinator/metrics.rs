@@ -1,4 +1,5 @@
-//! Serving metrics: per-request accounting aggregated across workers.
+//! Serving metrics: per-request accounting aggregated across workers, plus
+//! γ-segment and admission-batch statistics for the bucketed front door.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -12,6 +13,16 @@ pub struct MetricsSnapshot {
     pub requests: u64,
     /// Chosen-split histogram.
     pub split_counts: BTreeMap<usize, u64>,
+    /// γ-envelope-segment histogram (requests decided inside each segment;
+    /// degenerate channel states are not counted here).
+    pub segment_counts: BTreeMap<usize, u64>,
+    /// Admission batches drained from the bucketed queue.
+    pub batches: u64,
+    /// Requests served through those batches (mean batch size =
+    /// `batch_requests / batches`).
+    pub batch_requests: u64,
+    /// Per-admission-lane batch counts (lane → batches drained from it).
+    pub lane_batches: BTreeMap<usize, u64>,
     /// Modeled energy totals, joules.
     pub client_energy_j: f64,
     pub transmit_energy_j: f64,
@@ -41,6 +52,15 @@ impl MetricsSnapshot {
             0.0
         } else {
             (self.client_energy_j + self.transmit_energy_j) / self.requests as f64
+        }
+    }
+
+    /// Mean requests per drained admission batch (0 when nothing batched).
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batch_requests as f64 / self.batches as f64
         }
     }
 
@@ -76,6 +96,20 @@ impl MetricsSnapshot {
             s.push_str(&format!(" {split}:{count}"));
         }
         s.push('\n');
+        if !self.segment_counts.is_empty() {
+            s.push_str("γ-segment counts  :");
+            for (seg, count) in &self.segment_counts {
+                s.push_str(&format!(" {seg}:{count}"));
+            }
+            s.push('\n');
+        }
+        if self.batches > 0 {
+            s.push_str(&format!(
+                "admission batches : {} (mean size {:.2})\n",
+                self.batches,
+                self.mean_batch_size()
+            ));
+        }
         s
     }
 }
@@ -95,6 +129,9 @@ impl Metrics {
         let mut m = self.inner.lock().unwrap();
         m.requests += 1;
         *m.split_counts.entry(resp.split).or_insert(0) += 1;
+        if let Some(seg) = resp.gamma_segment {
+            *m.segment_counts.entry(seg).or_insert(0) += 1;
+        }
         m.client_energy_j += resp.client_energy_j;
         m.transmit_energy_j += resp.transmit_energy_j;
         m.transmit_bits += resp.transmit_bits;
@@ -104,6 +141,14 @@ impl Metrics {
         m.client += resp.t_client;
         m.channel += resp.t_channel;
         m.cloud += resp.t_cloud;
+    }
+
+    /// Record one admission batch drained from lane `bucket`.
+    pub fn record_batch(&self, bucket: usize, size: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.batches += 1;
+        m.batch_requests += size as u64;
+        *m.lane_batches.entry(bucket).or_insert(0) += 1;
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -126,6 +171,7 @@ mod tests {
             transmit_bits: 1000,
             client_energy_j: e,
             transmit_energy_j: e / 2.0,
+            gamma_segment: Some(1),
             t_decide: Duration::from_micros(2),
             t_client: Duration::from_millis(1),
             t_channel: Duration::from_millis(2),
@@ -144,6 +190,7 @@ mod tests {
         assert_eq!(s.requests, 3);
         assert_eq!(s.split_counts[&2], 2);
         assert_eq!(s.split_counts[&0], 1);
+        assert_eq!(s.segment_counts[&1], 3);
         assert!((s.mean_e_cost_j() - (6e-3 * 1.5 / 3.0)).abs() < 1e-12);
         assert_eq!(s.transmit_bits, 3000);
         assert_eq!(s.mean_latency(), Duration::from_millis(6));
@@ -151,10 +198,26 @@ mod tests {
     }
 
     #[test]
+    fn batch_accounting() {
+        let m = Metrics::new();
+        m.record_batch(0, 3);
+        m.record_batch(2, 5);
+        m.record_batch(0, 4);
+        let s = m.snapshot();
+        assert_eq!(s.batches, 3);
+        assert_eq!(s.batch_requests, 12);
+        assert!((s.mean_batch_size() - 4.0).abs() < 1e-12);
+        assert_eq!(s.lane_batches[&0], 2);
+        assert_eq!(s.lane_batches[&2], 1);
+        assert!(s.report().contains("admission batches"));
+    }
+
+    #[test]
     fn empty_snapshot_safe() {
         let s = Metrics::new().snapshot();
         assert_eq!(s.mean_latency(), Duration::ZERO);
         assert_eq!(s.mean_e_cost_j(), 0.0);
+        assert_eq!(s.mean_batch_size(), 0.0);
         assert!(!s.report().is_empty());
     }
 }

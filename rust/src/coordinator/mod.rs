@@ -16,6 +16,35 @@
 //! own client + compiled-executable cache; workers talk to them over mpsc
 //! channels. The offline build has no tokio: the event loop is std threads
 //! + channels (DESIGN.md §"Offline substitutions").
+//!
+//! ## γ-coherent admission (channel-state quantization)
+//!
+//! Under per-request channel jitter, naive batching mixes requests whose
+//! `γ = P_Tx/B_e` fall in different envelope segments, so a shared
+//! per-batch decision would be wrong for some members. The front door
+//! instead *quantizes* channel state at admission:
+//!
+//! * each request's effective env (client-reported via
+//!   [`InferenceRequest::env`], or the configured env with one seeded
+//!   admission-time jitter sample) is mapped to the envelope segment
+//!   containing its γ;
+//! * the admission queue keeps one FIFO lane per segment plus an overflow
+//!   lane for degenerate channel states ([`Batcher::with_buckets`]), and
+//!   workers drain whole single-lane batches
+//!   ([`Batcher::take_batch_bucketed`]);
+//! * every request in a batch then shares its envelope segment, so the
+//!   decision skips the breakpoint search
+//!   (`Partitioner::decide_in_segment`) while remaining bit-for-bit equal
+//!   to the per-request path — property- and e2e-tested.
+//!
+//! Knobs: [`CoordinatorConfig::gamma_coherent`] toggles the bucketing
+//! (off = one lane, the pre-quantization behavior);
+//! [`CoordinatorConfig::batch_max`] bounds batch size;
+//! [`CoordinatorConfig::jitter`] drives both the admission-time env
+//! sampling and the channel simulator. Per-lane queue stats are exposed
+//! via [`Batcher::bucket_stats`], per-segment serving counts via
+//! [`MetricsSnapshot::segment_counts`] and
+//! [`MetricsSnapshot::lane_batches`].
 
 pub mod batcher;
 pub mod executor;
@@ -23,7 +52,7 @@ pub mod metrics;
 pub mod request;
 pub mod server;
 
-pub use batcher::{Batcher, BatcherStats, Submit};
+pub use batcher::{Batcher, BatcherStats, BucketStats, Submit};
 pub use executor::{DeviceExecutor, ExecutorHandle};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use request::{InferenceRequest, InferenceResponse};

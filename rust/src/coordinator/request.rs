@@ -2,6 +2,8 @@
 
 use std::time::Duration;
 
+use crate::channel::TransmitEnv;
+
 /// One inference request: a camera image.
 #[derive(Clone, Debug)]
 pub struct InferenceRequest {
@@ -12,6 +14,12 @@ pub struct InferenceRequest {
     pub pixels: Vec<f64>,
     pub width: usize,
     pub height: usize,
+    /// Client-reported channel state at admission (`None` = use the
+    /// coordinator's configured env, jittered per request when the
+    /// coordinator's jitter knob is on). Drives the γ-bucketed admission
+    /// path: requests are grouped by the envelope segment containing their
+    /// γ = P_Tx/B_e.
+    pub env: Option<TransmitEnv>,
 }
 
 /// Where each piece of the computation ran.
@@ -42,6 +50,9 @@ pub struct InferenceResponse {
     pub client_energy_j: f64,
     /// Modeled transmission energy, joules.
     pub transmit_energy_j: f64,
+    /// Envelope segment of the request's γ at decision time (`None` when
+    /// the channel was degenerate or γ-bucketing did not apply).
+    pub gamma_segment: Option<usize>,
     /// Wall-clock spent in each stage.
     pub t_decide: Duration,
     pub t_client: Duration,
@@ -83,6 +94,7 @@ mod tests {
             transmit_bits: 100,
             client_energy_j: 1e-3,
             transmit_energy_j: 2e-3,
+            gamma_segment: None,
             t_decide: Duration::ZERO,
             t_client: Duration::ZERO,
             t_channel: Duration::ZERO,

@@ -1,5 +1,18 @@
 //! The coordinator proper: request queue, worker pool, per-request
 //! partition decision and client→channel→cloud execution.
+//!
+//! ## γ-coherent admission
+//!
+//! With [`CoordinatorConfig::gamma_coherent`] on (the default), the front
+//! door quantizes each request's channel state to the envelope segment
+//! containing its `γ = P_Tx/B_e` and queues it in that segment's lane
+//! ([`Batcher::with_buckets`]); workers then drain single-segment batches,
+//! so every request in a batch shares the same envelope winner even when
+//! per-request jitter spreads their γ values ([`Partitioner::decide_in_segment`]
+//! skips the breakpoint search but re-evaluates exactly, so the chosen
+//! splits match per-request `decide_split` bit-for-bit). Requests in
+//! degenerate channel states (B_e ≤ 0, γ ≤ 0) fall into a dedicated
+//! overflow lane and take the guarded scan path.
 
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
@@ -9,13 +22,14 @@ use anyhow::{anyhow, Context, Result};
 
 use super::batcher::{Batcher, Submit};
 
-use crate::channel::{Channel, ChannelConfig, TransmitEnv};
+use crate::channel::{jittered_rate_bps, Channel, ChannelConfig, TransmitEnv};
 use crate::cnn::Network;
 use crate::cnnergy::CnnErgy;
 use crate::compress::jpeg::compress_rgb;
 use crate::compress::rlc;
 use crate::config::Config;
 use crate::partition::{Partitioner, SplitChoice, FISC_OUTPUT_BITS};
+use crate::util::rng::Rng;
 
 use super::executor::{DeviceExecutor, ExecutorHandle};
 use super::metrics::Metrics;
@@ -39,9 +53,12 @@ pub struct CoordinatorConfig {
     /// Split points each executor thread precompiles at startup.
     pub warm_splits: Vec<usize>,
     /// Max requests a worker drains from the admission queue per batch; the
-    /// partition decision is made once per batch (`decide_batch`), so the
-    /// envelope lookup amortizes to ~O(1) per request.
+    /// per-channel-state decision work amortizes across each batch.
     pub batch_max: usize,
+    /// Bucket the admission queue by the envelope segment of each
+    /// request's γ, so batches stay envelope-coherent under per-request
+    /// channel jitter (module docs). Off = one FIFO lane, as before.
+    pub gamma_coherent: bool,
     pub seed: u64,
 }
 
@@ -59,6 +76,7 @@ impl CoordinatorConfig {
             force_split: None,
             warm_splits: Vec::new(),
             batch_max: 8,
+            gamma_coherent: true,
             seed: cfg.seed,
         }
     }
@@ -98,14 +116,15 @@ impl Coordinator {
             config.warm_splits.clone(),
         )
         .context("spawning cloud executor pool")?;
-        let channel = Arc::new(Channel::new(
-            ChannelConfig {
-                env: config.env,
-                jitter: config.jitter,
-                time_scale: config.time_scale,
-            },
-            config.seed,
-        ));
+        let channel_config = ChannelConfig {
+            env: config.env,
+            jitter: config.jitter,
+            time_scale: config.time_scale,
+        };
+        channel_config
+            .validate()
+            .context("invalid channel configuration")?;
+        let channel = Arc::new(Channel::new(channel_config, config.seed));
         Ok(Coordinator {
             config,
             partitioner,
@@ -125,6 +144,63 @@ impl Coordinator {
         &self.net
     }
 
+    /// Number of admission lanes: one per envelope segment plus an
+    /// overflow lane for degenerate channel states — or a single lane when
+    /// γ-bucketing is off.
+    pub fn admission_buckets(&self) -> usize {
+        if self.config.gamma_coherent {
+            self.partitioner.envelope().num_segments().max(1) + 1
+        } else {
+            1
+        }
+    }
+
+    /// Envelope segment containing this env's γ, `None` for degenerate
+    /// channel states (B_e ≤ 0, γ ≤ 0, empty envelope) that must take the
+    /// guarded scan path.
+    fn gamma_segment(&self, env: &TransmitEnv) -> Option<usize> {
+        let b_e = env.effective_bit_rate();
+        if !(b_e > 0.0) {
+            return None;
+        }
+        let gamma = env.p_tx_w / b_e;
+        if !(gamma > 0.0) || self.partitioner.envelope().num_segments() == 0 {
+            return None;
+        }
+        Some(self.partitioner.envelope().segment_index(gamma))
+    }
+
+    /// Admission lane for a request env under the current bucketing mode.
+    fn bucket_for(&self, env: &TransmitEnv) -> usize {
+        if !self.config.gamma_coherent {
+            return 0;
+        }
+        match self.gamma_segment(env) {
+            Some(seg) => seg,
+            // Overflow lane (the last one).
+            None => self.admission_buckets() - 1,
+        }
+    }
+
+    /// The effective channel state a request is admitted with: its own
+    /// reported env if present, else the configured env with one
+    /// admission-time sample of [`jittered_rate_bps`] — the same clamped,
+    /// floored multiplicative model [`Channel::send`] charges, so the γ
+    /// used for bucketing tracks the rates the simulator actually uses.
+    fn admission_env(&self, req: &InferenceRequest, rng: &mut Rng) -> TransmitEnv {
+        if let Some(env) = req.env {
+            return env;
+        }
+        if self.config.jitter > 0.0 {
+            let mut env = self.config.env;
+            env.bit_rate_bps =
+                jittered_rate_bps(env.bit_rate_bps, self.config.jitter, rng.next_f64());
+            env
+        } else {
+            self.config.env
+        }
+    }
+
     /// Precompile the hot split points so serving latency is steady-state.
     pub fn warm_up(&self, splits: &[usize]) -> Result<()> {
         self.client.handle().warm_up(splits.to_vec())?;
@@ -132,7 +208,7 @@ impl Coordinator {
         Ok(())
     }
 
-    /// Serve one request synchronously.
+    /// Serve one request synchronously at the configured channel state.
     pub fn process(
         &self,
         req: &InferenceRequest,
@@ -147,9 +223,8 @@ impl Coordinator {
 
         // 2. Runtime partition decision: the O(1) envelope path, with the
         //    input layer's D_RLC taken from the measured probe size.
-        let choice = self
-            .partitioner
-            .decide_split(probe.bits as f64, &self.config.env);
+        let env = req.env.unwrap_or(self.config.env);
+        let choice = self.partitioner.decide_split(probe.bits as f64, &env);
         let t_decide = t_start.elapsed();
 
         self.execute(
@@ -157,6 +232,7 @@ impl Coordinator {
             &choice,
             probe.bits,
             probe.sparsity,
+            self.gamma_segment(&env),
             t_start,
             t_decide,
             client,
@@ -164,9 +240,9 @@ impl Coordinator {
         )
     }
 
-    /// Serve a batch of requests taken together from the admission queue:
-    /// probe every input, make ONE batched partition decision (the envelope
-    /// candidates for the shared channel state are evaluated once and
+    /// Serve a batch of requests taken together from the admission queue at
+    /// one shared channel state: probe every input, make ONE batched
+    /// partition decision (the envelope candidates are evaluated once and
     /// reused across the batch), then execute each request.
     pub fn process_batch(
         &self,
@@ -187,6 +263,7 @@ impl Coordinator {
         // The whole batch shares one decision pass; attribute the per-batch
         // cost evenly so per-request accounting stays meaningful.
         let t_decide = t_decide_start.elapsed() / reqs.len().max(1) as u32;
+        let segment = self.gamma_segment(&self.config.env);
 
         reqs.iter()
             .zip(&probes)
@@ -197,6 +274,49 @@ impl Coordinator {
                     choice,
                     probe.bits,
                     probe.sparsity,
+                    segment,
+                    t_start,
+                    t_decide,
+                    client,
+                    cloud,
+                )
+            })
+            .collect()
+    }
+
+    /// Serve one γ-coherent admission batch: every request carries its own
+    /// channel state, but all states share one envelope segment, so each
+    /// decision skips the breakpoint search while staying bit-for-bit
+    /// equal to the per-request path.
+    fn process_admitted_batch(
+        &self,
+        bucket: usize,
+        items: &[(InferenceRequest, TransmitEnv)],
+        client: &ExecutorHandle,
+        cloud: &ExecutorHandle,
+    ) -> Result<Vec<InferenceResponse>> {
+        let t_start = Instant::now();
+        items
+            .iter()
+            .map(|(req, env)| {
+                let t_decide_start = Instant::now();
+                let probe =
+                    compress_rgb(&req.pixels, req.width, req.height, self.config.jpeg_quality);
+                let segment = self.gamma_segment(env);
+                let choice = match segment {
+                    Some(seg) if self.config.gamma_coherent => {
+                        debug_assert_eq!(seg, bucket, "request served outside its γ lane");
+                        self.partitioner.decide_in_segment(seg, probe.bits as f64, env)
+                    }
+                    _ => self.partitioner.decide_split(probe.bits as f64, env),
+                };
+                let t_decide = t_decide_start.elapsed();
+                self.execute(
+                    req,
+                    &choice,
+                    probe.bits,
+                    probe.sparsity,
+                    segment,
                     t_start,
                     t_decide,
                     client,
@@ -214,6 +334,7 @@ impl Coordinator {
         choice: &SplitChoice,
         probe_bits: u64,
         sparsity_in: f64,
+        gamma_segment: Option<usize>,
         t_start: Instant,
         t_decide: std::time::Duration,
         client: &ExecutorHandle,
@@ -282,6 +403,7 @@ impl Coordinator {
             transmit_bits,
             client_energy_j: self.partitioner.client_energy_j(split),
             transmit_energy_j,
+            gamma_segment,
             t_decide,
             t_client,
             t_channel,
@@ -292,14 +414,18 @@ impl Coordinator {
 
     /// Serve a batch of requests through the admission queue + worker pool;
     /// responses are returned in request order and recorded in
-    /// [`Self::metrics`].
+    /// [`Self::metrics`]. Per-request channel states are assigned at
+    /// admission (deterministically, from the configured seed) and each
+    /// request is queued in its γ-segment's lane; workers drain
+    /// single-segment batches.
     pub fn serve(&self, requests: Vec<InferenceRequest>) -> Result<Vec<InferenceResponse>> {
         let n = requests.len();
         let id_base = requests.first().map(|r| r.id).unwrap_or(0);
         // Admission queue sized to keep a bounded backlog ahead of the
         // single client device (backpressure on the producer side).
-        let batcher: Arc<Batcher<InferenceRequest>> =
-            Arc::new(Batcher::new((2 * self.config.workers).max(4)));
+        let batcher: Arc<Batcher<(InferenceRequest, TransmitEnv)>> = Arc::new(
+            Batcher::with_buckets((2 * self.config.workers).max(4), self.admission_buckets()),
+        );
         let results: Arc<Mutex<Vec<Option<InferenceResponse>>>> =
             Arc::new(Mutex::new((0..n).map(|_| None).collect()));
 
@@ -312,12 +438,15 @@ impl Coordinator {
                 let client = self.client.handle();
                 let cloud = self.cloud.handle();
                 handles.push(scope.spawn(move || -> Result<()> {
-                    // Drain whole batches so the partition decision is made
-                    // once per (batch, channel state), not once per request.
-                    while let Some(batch) = batcher.take_batch(batch_max) {
-                        let reqs: Vec<InferenceRequest> =
-                            batch.into_iter().map(|(req, _queued_for)| req).collect();
-                        for resp in self.process_batch(&reqs, &client, &cloud)? {
+                    // Drain whole single-lane batches so each batch shares
+                    // one envelope segment (γ-coherence under jitter).
+                    while let Some((bucket, batch)) = batcher.take_batch_bucketed(batch_max) {
+                        let items: Vec<(InferenceRequest, TransmitEnv)> =
+                            batch.into_iter().map(|(item, _queued_for)| item).collect();
+                        self.metrics.record_batch(bucket, items.len());
+                        for resp in
+                            self.process_admitted_batch(bucket, &items, &client, &cloud)?
+                        {
                             let idx = (resp.id - id_base) as usize;
                             self.metrics.record(&resp);
                             results.lock().unwrap()[idx] = Some(resp);
@@ -326,10 +455,14 @@ impl Coordinator {
                     Ok(())
                 }));
             }
-            // Producer: push everything through the bounded queue, then
-            // close it so workers drain and exit.
+            // Producer: assign each request its admission-time channel
+            // state, route it to its γ lane, then close so workers drain
+            // and exit.
+            let mut jitter_rng = Rng::new(self.config.seed ^ 0xADB5_17E2_D188_FE01);
             for req in requests {
-                if batcher.submit(req, None) != Submit::Accepted {
+                let env = self.admission_env(&req, &mut jitter_rng);
+                let bucket = self.bucket_for(&env);
+                if batcher.submit_to(bucket, (req, env), None) != Submit::Accepted {
                     batcher.close();
                     return Err(anyhow!("admission queue closed early"));
                 }

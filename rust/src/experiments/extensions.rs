@@ -17,7 +17,7 @@ use crate::cnnergy::CnnErgy;
 use crate::compress::jpeg::compress_rgb;
 use crate::corpus::Corpus;
 use crate::partition::algorithm2::paper_partitioner;
-use crate::partition::{decide_with_slo, DelayModel};
+use crate::partition::{DelayModel, SloPartitioner};
 use crate::util::stats::mean;
 
 use super::csvout::write_csv;
@@ -55,8 +55,7 @@ pub fn run_qsweep(out_dir: &Path) -> Result<String> {
 pub fn run_slo(out_dir: &Path) -> Result<String> {
     let net = alexnet();
     let model = CnnErgy::inference_8bit();
-    let p = paper_partitioner(&net);
-    let dm = DelayModel::new(&net, &model);
+    let slo_p = SloPartitioner::new(paper_partitioner(&net), DelayModel::new(&net, &model));
     let env = TransmitEnv::with_effective_rate(80e6, 0.78);
 
     let mut rows = Vec::new();
@@ -64,24 +63,24 @@ pub fn run_slo(out_dir: &Path) -> Result<String> {
         "latency-constrained partitioning (AlexNet @ 80 Mbps / 0.78 W, Q2):\nSLO_ms   split   t_delay_ms   E_cost_mJ   feasible\n",
     );
     for slo_ms in [1.0f64, 5.0, 10.0, 15.0, 20.0, 30.0, 50.0, 100.0, 1000.0] {
-        let d = decide_with_slo(&p, &dm, MEDIAN_SPARSITY_IN, &env, slo_ms / 1e3);
-        let name = if d.inner.l_opt == 0 {
+        let d = slo_p.decide_with_slo(MEDIAN_SPARSITY_IN, &env, slo_ms / 1e3);
+        let name = if d.choice.l_opt == 0 {
             "In".to_string()
-        } else if d.inner.l_opt == net.num_layers() {
+        } else if d.choice.l_opt == net.num_layers() {
             "out".to_string()
         } else {
-            net.layers[d.inner.l_opt - 1].name.to_string()
+            net.layers[d.choice.l_opt - 1].name.to_string()
         };
         rows.push(format!(
             "{slo_ms},{name},{:.3},{:.4},{}",
             d.t_delay_s * 1e3,
-            d.inner.costs_j[d.inner.l_opt] * 1e3,
+            d.choice.cost_j * 1e3,
             d.feasible
         ));
         report.push_str(&format!(
             "{slo_ms:>6.0} {name:>7} {:>12.2} {:>11.4} {:>10}\n",
             d.t_delay_s * 1e3,
-            d.inner.costs_j[d.inner.l_opt] * 1e3,
+            d.choice.cost_j * 1e3,
             d.feasible
         ));
     }

@@ -11,20 +11,27 @@ use crate::channel::TransmitEnv;
 use crate::cnn::alexnet;
 use crate::cnnergy::CnnErgy;
 use crate::partition::algorithm2::paper_partitioner;
-use crate::partition::DelayModel;
+use crate::partition::{DelayModel, SloPartitioner};
 
 use super::csvout::write_csv;
 use super::fig11::MEDIAN_SPARSITY_IN;
+
+/// SLO used for the constrained column of Fig. 14(a): tight enough to bind
+/// at low bit rates, loose enough to recover the energy optimum at high
+/// ones — the regime the flat-valley analysis cares about.
+const FIG14A_SLO_S: f64 = 0.015;
 
 pub fn run_a(out_dir: &Path) -> Result<String> {
     let net = alexnet();
     let model = CnnErgy::inference_8bit();
     let p = paper_partitioner(&net);
     let dm = DelayModel::new(&net, &model);
+    let slo_p = SloPartitioner::new(p.clone(), dm.clone());
 
     let mut rows = Vec::new();
-    let mut report =
-        String::from("AlexNet inference delay at Q2 (ms):\nBe_Mbps   optimal      FCC     FISC  l_opt\n");
+    let mut report = String::from(
+        "AlexNet inference delay at Q2 (ms):\nBe_Mbps   optimal      FCC     FISC  l_opt  | SLO 15ms: split feas\n",
+    );
     let mut be = 10.0;
     while be <= 300.0 {
         let env = TransmitEnv::with_effective_rate(be * 1e6, 0.78);
@@ -32,17 +39,28 @@ pub fn run_a(out_dir: &Path) -> Result<String> {
         let t_opt = dm.t_delay_s(d.l_opt, d.transmit_bits, &env) * 1e3;
         let t_fcc = dm.fcc_delay_s(p.transmit_bits(0, MEDIAN_SPARSITY_IN), &env) * 1e3;
         let t_fisc = dm.fisc_delay_s(&env) * 1e3;
-        rows.push(format!("{be},{t_opt:.3},{t_fcc:.3},{t_fisc:.3},{}", d.l_opt));
+        // The latency-constrained decision over the same sweep: the
+        // envelope-backed SLO path (O(log L)), not the delay scan.
+        let slo = slo_p.decide_with_slo(MEDIAN_SPARSITY_IN, &env, FIG14A_SLO_S);
+        rows.push(format!(
+            "{be},{t_opt:.3},{t_fcc:.3},{t_fisc:.3},{},{},{},{:.3}",
+            d.l_opt,
+            slo.choice.l_opt,
+            slo.feasible,
+            slo.t_delay_s * 1e3
+        ));
         if (be as u64) % 20 == 0 || be <= 20.0 {
             report.push_str(&format!(
-                "{be:>7.0} {t_opt:>9.2} {t_fcc:>8.2} {t_fisc:>8.2}  {}\n",
+                "{be:>7.0} {t_opt:>9.2} {t_fcc:>8.2} {t_fisc:>8.2}  {:>5}  | {:>11} {}\n",
                 if d.l_opt == 0 {
                     "In".to_string()
                 } else if d.l_opt == net.layers.len() {
                     "out".to_string()
                 } else {
                     net.layers[d.l_opt - 1].name.to_string()
-                }
+                },
+                slo.choice.l_opt,
+                slo.feasible
             ));
         }
         be += 10.0;
@@ -50,7 +68,7 @@ pub fn run_a(out_dir: &Path) -> Result<String> {
     write_csv(
         out_dir,
         "fig14a_delay",
-        "be_mbps,t_optimal_ms,t_fcc_ms,t_fisc_ms,l_opt",
+        "be_mbps,t_optimal_ms,t_fcc_ms,t_fisc_ms,l_opt,l_slo15,slo15_feasible,t_slo15_ms",
         &rows,
     )?;
     Ok(report)
@@ -177,6 +195,26 @@ mod tests {
             be += 5.0;
         }
         panic!("no P2->P1 crossover found");
+    }
+
+    #[test]
+    fn fig14a_slo_column_recovers_optimum_when_loose() {
+        // At high B_e the 15 ms SLO stops binding: the constrained split
+        // equals the unconstrained optimum; at very low B_e it binds or is
+        // infeasible, and the scan agrees with the envelope path.
+        let net = alexnet();
+        let p = paper_partitioner(&net);
+        let dm = DelayModel::new(&net, &CnnErgy::inference_8bit());
+        let slo_p = SloPartitioner::new(p.clone(), dm);
+        let fast_env = TransmitEnv::with_effective_rate(300e6, 0.78);
+        let loose = slo_p.decide_with_slo(MEDIAN_SPARSITY_IN, &fast_env, 10.0);
+        assert!(loose.feasible && !loose.binding);
+        assert_eq!(loose.choice.l_opt, p.decide(MEDIAN_SPARSITY_IN, &fast_env).l_opt);
+        let slow_env = TransmitEnv::with_effective_rate(1e6, 0.78);
+        let tight = slo_p.decide_with_slo(MEDIAN_SPARSITY_IN, &slow_env, FIG14A_SLO_S);
+        let scan = slo_p.decide_with_slo_full(MEDIAN_SPARSITY_IN, &slow_env, FIG14A_SLO_S);
+        assert_eq!(tight.choice.l_opt, scan.inner.l_opt);
+        assert_eq!(tight.feasible, scan.feasible);
     }
 
     #[test]

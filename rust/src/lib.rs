@@ -30,7 +30,10 @@
 //!   [`Partitioner::decide_batch`] amortizes even that across a request
 //!   batch or an experiment grid. The envelope paths are property-tested to
 //!   match the reference linear scan ([`Partitioner::decide`]) bit-for-bit,
-//!   ties included.
+//!   ties included. The same machinery covers the latency-SLO-constrained
+//!   decision ([`partition::SloPartitioner`]: delay is a line in
+//!   `β = 1/B_e`) and the serving front door's channel-state quantization
+//!   (γ-bucketed admission, [`coordinator`] module docs).
 //! * **Schedule memoization** ([`cnnergy::ScheduleCache`]): the §IV-C
 //!   mapper's result depends only on (conv shape, accelerator geometry), so
 //!   a per-thread cache ([`cnnergy::schedule_cached`]) eliminates repeated

@@ -248,6 +248,7 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
             pixels: img.pixels.clone(),
             width: img.w,
             height: img.h,
+            env: None,
         })
         .collect();
 

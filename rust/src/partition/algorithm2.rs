@@ -225,6 +225,34 @@ impl Partitioner {
             + env.p_tx_w * self.bits_with_input(split, input_bits) / b_e
     }
 
+    /// Public form of the scan's exact per-candidate cost expression — the
+    /// SLO-constrained path evaluates feasible candidates through this so
+    /// its argmin stays bit-for-bit comparable with the scan's. Degenerate
+    /// channels (`B_e ≤ 0`/NaN) produce non-finite costs; callers that can
+    /// see such inputs must guard first (as every `decide*` path does).
+    pub fn candidate_cost_j(&self, split: usize, input_bits: f64, env: &TransmitEnv) -> f64 {
+        self.cost_at(split, input_bits, env, env.effective_bit_rate())
+    }
+
+    /// Transmission energy of one candidate, from the partitioner's own
+    /// transmit model (`P_Tx · bits / B_e` — the same expression
+    /// [`Partitioner::candidate_cost_j`] adds to the client energy, so
+    /// `client_energy_j(l) + transmit_energy_j(l, ..) == candidate cost`
+    /// exactly, with no subtraction-reconstruction drift). On a degenerate
+    /// channel the only executable candidate is FISC: 0 J for it, +∞ for
+    /// every transmitting split.
+    pub fn transmit_energy_j(&self, split: usize, input_bits: f64, env: &TransmitEnv) -> f64 {
+        let b_e = env.effective_bit_rate();
+        if !(b_e > 0.0) {
+            return if split == self.num_layers {
+                0.0
+            } else {
+                f64::INFINITY
+            };
+        }
+        env.p_tx_w * self.bits_with_input(split, input_bits) / b_e
+    }
+
     /// Algorithm 2 (reference form): evaluate all candidates, return the
     /// argmin with the full cost vector. The input layer's volume is
     /// estimated from `sparsity_in` via eq. 29.
@@ -290,7 +318,10 @@ impl Partitioner {
             fcc_cost_j: costs_j[FCC],
             fisc_cost_j: costs_j[self.num_layers],
             client_energy_j,
-            transmit_energy_j: best - client_energy_j,
+            // From the transmit model, not `best - client`: subtraction
+            // drifts by an ulp, this decomposes `best` exactly (the cost
+            // expression is `client + p_tx·bits/b_e`).
+            transmit_energy_j: env.p_tx_w * self.bits_with_input(l_opt, input_bits) / b_e,
             transmit_bits: self.bits_with_input(l_opt, input_bits),
         }
     }
@@ -309,14 +340,13 @@ impl Partitioner {
         }
     }
 
-    /// First-minimum envelope candidate at γ: the winners of the segment
-    /// containing γ and its neighbors, re-evaluated with the scan's exact
-    /// cost expression in ascending split order with a strict `<` — the
-    /// scan's own fold, so ties resolve to the smallest split and NaN/∞
-    /// costs are skipped exactly as the scan skips them.
-    fn envelope_winner(&self, gamma: f64, env: &TransmitEnv, b_e: f64) -> (usize, f64) {
+    /// First-minimum candidate among `cands`: re-evaluated with the scan's
+    /// exact cost expression in ascending split order with a strict `<` —
+    /// the scan's own fold, so ties resolve to the smallest split and
+    /// NaN/∞ costs are skipped exactly as the scan skips them.
+    fn winner_from(&self, cands: &[CostLine], env: &TransmitEnv, b_e: f64) -> (usize, f64) {
         let mut cand = [usize::MAX; 3];
-        for (slot, line) in cand.iter_mut().zip(self.envelope.candidates(gamma)) {
+        for (slot, line) in cand.iter_mut().zip(cands) {
             *slot = line.split;
         }
         cand.sort_unstable();
@@ -338,6 +368,46 @@ impl Partitioner {
         (win, cost)
     }
 
+    /// First-minimum envelope candidate at γ (segment winners of the
+    /// segment containing γ plus its neighbors).
+    fn envelope_winner(&self, gamma: f64, env: &TransmitEnv, b_e: f64) -> (usize, f64) {
+        self.winner_from(self.envelope.candidates(gamma), env, b_e)
+    }
+
+    /// Assemble the decision from the FCC cost and the fixed-candidate
+    /// winner: the scan's fold over [FCC, winner] — seed at +∞, strict `<`
+    /// replacements — so a NaN FCC cost is skipped (never chosen) rather
+    /// than poisoning the comparison, exactly like the scan.
+    fn choice_from_winner(
+        &self,
+        fcc_cost: f64,
+        env_split: usize,
+        env_cost: f64,
+        input_bits: f64,
+        env: &TransmitEnv,
+        b_e: f64,
+    ) -> SplitChoice {
+        let mut l_opt = FCC;
+        let mut best = f64::INFINITY;
+        if fcc_cost < best {
+            best = fcc_cost;
+        }
+        if env_cost < best {
+            best = env_cost;
+            l_opt = env_split;
+        }
+        let client_energy_j = self.client_energy_j(l_opt);
+        SplitChoice {
+            l_opt,
+            cost_j: best,
+            fcc_cost_j: fcc_cost,
+            fisc_cost_j: self.cost_at(self.num_layers, input_bits, env, b_e),
+            client_energy_j,
+            transmit_energy_j: env.p_tx_w * self.bits_with_input(l_opt, input_bits) / b_e,
+            transmit_bits: self.bits_with_input(l_opt, input_bits),
+        }
+    }
+
     /// Envelope decision: O(log L) breakpoint lookup, no allocation. The
     /// argmin matches [`Partitioner::decide_with_input_bits`] bit-for-bit.
     pub fn decide_split(&self, input_bits: f64, env: &TransmitEnv) -> SplitChoice {
@@ -355,28 +425,40 @@ impl Partitioner {
         }
         let fcc_cost = self.cost_at(FCC, input_bits, env, b_e);
         let (env_split, env_cost) = self.envelope_winner(gamma, env, b_e);
-        // The scan's fold over [FCC, candidates...]: seed at +∞, strict `<`
-        // replacements — so a NaN FCC cost is skipped (never chosen) rather
-        // than poisoning the comparison, exactly like the scan.
-        let mut l_opt = FCC;
-        let mut best = f64::INFINITY;
-        if fcc_cost < best {
-            best = fcc_cost;
+        self.choice_from_winner(fcc_cost, env_split, env_cost, input_bits, env, b_e)
+    }
+
+    /// [`Partitioner::decide_split`] with the envelope segment already
+    /// known — the γ-bucketed admission path computes
+    /// `envelope().segment_index(γ)` once at the front door, groups
+    /// same-segment requests, and each member's decision then skips the
+    /// breakpoint search entirely. Exactly equivalent to `decide_split`
+    /// (property-tested) whenever `segment` is the segment containing this
+    /// request's γ; degenerate channels and γ ≤ 0 take the same guarded
+    /// fallbacks as `decide_split`, ignoring `segment`.
+    pub fn decide_in_segment(
+        &self,
+        segment: usize,
+        input_bits: f64,
+        env: &TransmitEnv,
+    ) -> SplitChoice {
+        let b_e = env.effective_bit_rate();
+        if !(b_e > 0.0) {
+            return self.degenerate_choice();
         }
-        if env_cost < best {
-            best = env_cost;
-            l_opt = env_split;
+        let gamma = env.p_tx_w / b_e;
+        if !(gamma > 0.0) || self.envelope.num_segments() == 0 {
+            return self.scan_choice(input_bits, env, b_e);
         }
-        let client_energy_j = self.client_energy_j(l_opt);
-        SplitChoice {
-            l_opt,
-            cost_j: best,
-            fcc_cost_j: fcc_cost,
-            fisc_cost_j: self.cost_at(self.num_layers, input_bits, env, b_e),
-            client_energy_j,
-            transmit_energy_j: best - client_energy_j,
-            transmit_bits: self.bits_with_input(l_opt, input_bits),
-        }
+        debug_assert_eq!(
+            segment,
+            self.envelope.segment_index(gamma),
+            "request γ drifted out of its admission segment"
+        );
+        let fcc_cost = self.cost_at(FCC, input_bits, env, b_e);
+        let (env_split, env_cost) =
+            self.winner_from(self.envelope.candidates_for_segment(segment), env, b_e);
+        self.choice_from_winner(fcc_cost, env_split, env_cost, input_bits, env, b_e)
     }
 
     /// Envelope decision from the runtime-probed Sparsity-In (eq. 29).
@@ -402,7 +484,7 @@ impl Partitioner {
             fcc_cost_j: self.cost_at(FCC, input_bits, env, b_e),
             fisc_cost_j: self.cost_at(self.num_layers, input_bits, env, b_e),
             client_energy_j,
-            transmit_energy_j: best - client_energy_j,
+            transmit_energy_j: env.p_tx_w * self.bits_with_input(l_opt, input_bits) / b_e,
             transmit_bits: self.bits_with_input(l_opt, input_bits),
         }
     }
@@ -441,6 +523,7 @@ impl Partitioner {
         let (env_split, env_cost) = self.envelope_winner(gamma, env, b_e);
         let env_client = self.client_energy_j(env_split);
         let env_bits = self.bits_with_input(env_split, 0.0);
+        let env_transmit = env.p_tx_w * env_bits / b_e;
         let fisc_cost = self.cost_at(self.num_layers, 0.0, env, b_e);
         for &bits in input_bits {
             // Per request: the scan's fold over [FCC, fixed winner] — seed
@@ -458,7 +541,7 @@ impl Partitioner {
                     fcc_cost_j: fcc_cost,
                     fisc_cost_j: fisc_cost,
                     client_energy_j: env_client,
-                    transmit_energy_j: env_cost - env_client,
+                    transmit_energy_j: env_transmit,
                     transmit_bits: env_bits,
                 }
             } else {
@@ -707,6 +790,48 @@ mod tests {
         let fast = p.decide_split(0.0, &e);
         assert_eq!(fast.l_opt, FCC);
         assert_eq!(fast.savings_vs_fcc(), 0.0);
+    }
+
+    #[test]
+    fn decide_in_segment_matches_decide_split() {
+        let p = paper_partitioner(&alexnet());
+        for be in [0.01, 1.0, 20.0, 80.0, 1e4, 1e7] {
+            for p_tx in [0.0, 0.25, 0.78, 2.5] {
+                let e = env(be, p_tx);
+                let bits = p.transmit_bits(FCC, 0.608);
+                let b_e = e.effective_bit_rate();
+                let seg = if b_e > 0.0 && e.p_tx_w / b_e > 0.0 {
+                    p.envelope().segment_index(e.p_tx_w / b_e)
+                } else {
+                    0
+                };
+                assert_eq!(
+                    p.decide_in_segment(seg, bits, &e),
+                    p.decide_split(bits, &e),
+                    "be={be} p_tx={p_tx}"
+                );
+            }
+        }
+        // Degenerate channel ignores the segment and resolves to FISC.
+        let e = TransmitEnv::with_effective_rate(0.0, 0.78);
+        assert_eq!(p.decide_in_segment(7, 1e6, &e).l_opt, p.num_layers());
+    }
+
+    #[test]
+    fn transmit_energy_decomposes_candidate_cost_exactly() {
+        let p = paper_partitioner(&alexnet());
+        let e = env(80.0, 0.78);
+        let bits = p.transmit_bits(FCC, 0.608);
+        let d = p.decide(0.608, &e);
+        for split in 0..=p.num_layers() {
+            let sum = p.client_energy_j(split) + p.transmit_energy_j(split, bits, &e);
+            assert_eq!(sum, p.candidate_cost_j(split, bits, &e), "split {split}");
+            assert_eq!(sum, d.costs_j[split], "split {split} vs scan vector");
+        }
+        // Degenerate channel: FISC transmits nothing, everything else ∞.
+        let dead = TransmitEnv::with_effective_rate(-1.0, 0.78);
+        assert_eq!(p.transmit_energy_j(p.num_layers(), bits, &dead), 0.0);
+        assert_eq!(p.transmit_energy_j(0, bits, &dead), f64::INFINITY);
     }
 
     #[test]

@@ -7,14 +7,51 @@
 //! 14(a)); this module closes the loop for deployments that do carry a
 //! deadline. Falls back to the delay-minimal split when no candidate meets
 //! the SLO (best-effort).
+//!
+//! ## The envelope-backed fast path
+//!
+//! At a fixed effective rate `B_e`, `t_delay(l) = base_s(l) + bits(l)/B_e`
+//! is affine in the payload volume — a line in `β = 1/B_e`, exactly as each
+//! candidate's energy cost is a line in `γ = P_Tx/B_e` (JointDNN makes the
+//! same observation: the latency- and energy-constrained problems share
+//! one affine structure). [`SloPartitioner`] therefore precomputes, once
+//! per (network, device, cloud) binding:
+//!
+//! * the **delay lower envelope** over β — which fixed split is
+//!   delay-minimal for every channel rate, powering an O(log L) best-effort
+//!   fallback with no per-request delay vector and no `partial_cmp`
+//!   unwraps;
+//! * the **constrained frontier** — the fixed splits not weakly dominated
+//!   in (energy, bits, base-delay) by an earlier split. A dominated split
+//!   can never be the scan's first minimum over any SLO-feasible set (its
+//!   dominator is feasible whenever it is, costs no more under IEEE-
+//!   monotone arithmetic, and is visited earlier), so the binding-SLO walk
+//!   skips it.
+//!
+//! A request then resolves as: unconstrained envelope decision (O(log L))
+//! + one O(1) delay check when the SLO is loose — the common case; a
+//! frontier walk when the SLO binds; a delay-envelope lookup when it is
+//! infeasible. Every candidate the fast path touches is re-evaluated with
+//! the reference scan's exact floating-point expressions
+//! ([`Partitioner::candidate_cost_j`], [`DelayModel::t_delay_s`]), so the
+//! decision matches [`decide_with_slo_scan`] bit-for-bit — property-tested
+//! across random SLOs, γ sweeps, breakpoint ties and infeasible cases.
+//!
+//! Degenerate channels (`B_e ≤ 0` or NaN, e.g. a jittered env collapsing
+//! to zero rate) resolve to FISC with finite costs on both paths — the
+//! same guard `Partitioner::decide` received — instead of panicking on
+//! non-finite delays.
 
 use crate::channel::TransmitEnv;
 
-use super::algorithm2::{PartitionDecision, Partitioner};
+use super::algorithm2::{PartitionDecision, Partitioner, SplitChoice, FCC};
 use super::delay::DelayModel;
+use super::envelope::{CostLine, Envelope};
 use super::FISC_OUTPUT_BITS;
 
-/// Outcome of a constrained decision.
+/// Outcome of a constrained decision (reporting form, carries the full
+/// per-candidate delay vector — use [`SloPartitioner::decide_with_slo`]
+/// on the serving path).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ConstrainedDecision {
     pub inner: PartitionDecision,
@@ -26,17 +63,310 @@ pub struct ConstrainedDecision {
     pub delays_s: Vec<f64>,
 }
 
-/// Energy-optimal split under a latency SLO.
-pub fn decide_with_slo(
+/// Outcome of one envelope-path constrained decision: everything the
+/// serving hot path needs, no per-candidate vectors, `Copy`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ConstrainedChoice {
+    /// The chosen split with its energy accounting.
+    pub choice: SplitChoice,
+    /// Predicted `t_delay` at the chosen split, seconds.
+    pub t_delay_s: f64,
+    /// Whether the SLO was satisfiable at all.
+    pub feasible: bool,
+    /// Whether the SLO moved the decision off the unconstrained energy
+    /// optimum (true also for infeasible best-effort outcomes).
+    pub binding: bool,
+}
+
+/// The SLO-aware partitioner: a [`Partitioner`] and a [`DelayModel`] plus
+/// the precomputed delay envelope and constrained frontier (module docs).
+#[derive(Clone, Debug)]
+pub struct SloPartitioner {
+    partitioner: Partitioner,
+    delay: DelayModel,
+    /// Lower envelope of the fixed splits' delay lines over `β = 1/B_e`.
+    delay_env: Envelope,
+    /// Fixed transmit volume per split (`fixed_bits[l-1]` for split `l`).
+    fixed_bits: Vec<f64>,
+    /// Splits `1..=|L|` surviving the (energy, bits, base)-dominance prune,
+    /// ascending.
+    frontier: Vec<usize>,
+}
+
+impl SloPartitioner {
+    /// Bind a partitioner to a delay model and run the offline
+    /// precomputation. Both must describe the same network.
+    pub fn new(partitioner: Partitioner, delay: DelayModel) -> Self {
+        assert_eq!(
+            partitioner.num_layers(),
+            delay.num_layers(),
+            "partitioner and delay model describe different networks"
+        );
+        let n = partitioner.num_layers();
+        // Fixed transmit volumes: splits ≥ 1 never depend on the probe.
+        let fixed_bits: Vec<f64> = (1..=n)
+            .map(|split| partitioner.transmit_bits(split, 0.0))
+            .collect();
+        let delay_lines: Vec<CostLine> = (1..=n)
+            .map(|split| CostLine {
+                split,
+                bits: fixed_bits[split - 1],
+                energy_j: delay.base_delay_s(split),
+            })
+            .collect();
+        let delay_env = Envelope::build(&delay_lines);
+        // Constrained frontier: drop split l when an EARLIER split weakly
+        // dominates it in (energy, bits, base). The dominator is feasible
+        // whenever l is, its cost is ≤ l's at every γ (IEEE + and × are
+        // monotone), and the scan's strict-< fold visits it first — so l
+        // can never be the first minimum over any feasible set. Pruning
+        // only on earlier dominators keeps exact tie semantics.
+        let frontier: Vec<usize> = (1..=n)
+            .filter(|&l| {
+                let (e_l, b_l, t_l) = (
+                    partitioner.client_energy_j(l),
+                    fixed_bits[l - 1],
+                    delay.base_delay_s(l),
+                );
+                !(1..l).any(|k| {
+                    partitioner.client_energy_j(k) <= e_l
+                        && fixed_bits[k - 1] <= b_l
+                        && delay.base_delay_s(k) <= t_l
+                })
+            })
+            .collect();
+        SloPartitioner {
+            partitioner,
+            delay,
+            delay_env,
+            fixed_bits,
+            frontier,
+        }
+    }
+
+    pub fn partitioner(&self) -> &Partitioner {
+        &self.partitioner
+    }
+
+    pub fn delay_model(&self) -> &DelayModel {
+        &self.delay
+    }
+
+    /// The precomputed delay envelope over `β = 1/B_e`.
+    pub fn delay_envelope(&self) -> &Envelope {
+        &self.delay_env
+    }
+
+    /// Number of splits surviving the dominance prune.
+    pub fn frontier_len(&self) -> usize {
+        self.frontier.len()
+    }
+
+    /// Energy-optimal split under a latency SLO, from the runtime-probed
+    /// Sparsity-In (eq. 29).
+    pub fn decide_with_slo(
+        &self,
+        sparsity_in: f64,
+        env: &TransmitEnv,
+        slo_s: f64,
+    ) -> ConstrainedChoice {
+        self.decide_with_slo_bits(self.partitioner.transmit_bits(FCC, sparsity_in), env, slo_s)
+    }
+
+    /// Energy-optimal split under a latency SLO with the input layer's
+    /// `D_RLC` supplied directly (the serving coordinator passes the
+    /// measured JPEG probe size).
+    pub fn decide_with_slo_bits(
+        &self,
+        input_bits: f64,
+        env: &TransmitEnv,
+        slo_s: f64,
+    ) -> ConstrainedChoice {
+        let p = &self.partitioner;
+        let n = p.num_layers();
+        let b_e = env.effective_bit_rate();
+        if !(b_e > 0.0) {
+            // Degenerate channel: transmission impossible, FISC is the only
+            // executable policy and its delay is the client compute time.
+            let choice = p.decide_split(input_bits, env);
+            let t = self.delay.client_prefix_s(n);
+            let feasible = t <= slo_s;
+            return ConstrainedChoice {
+                choice,
+                t_delay_s: t,
+                feasible,
+                // Matches the documented semantics: infeasible best-effort
+                // outcomes count as binding even though the split is
+                // unchanged.
+                binding: !feasible,
+            };
+        }
+
+        // Common case: the unconstrained optimum already meets the SLO —
+        // O(log L) decision plus one O(1) delay lookup. When it is the
+        // global first-argmin and feasible, it is also the feasible-set
+        // first-argmin, so this matches the scan exactly.
+        let unc = p.decide_split(input_bits, env);
+        let t_unc = self.delay.t_delay_s(unc.l_opt, unc.transmit_bits, env);
+        if t_unc <= slo_s {
+            return ConstrainedChoice {
+                choice: unc,
+                t_delay_s: t_unc,
+                feasible: true,
+                binding: false,
+            };
+        }
+
+        // The SLO binds: first-minimum cost over the feasible candidates,
+        // visiting FCC then the frontier in ascending split order with the
+        // scan's exact cost/delay expressions and strict `<` fold.
+        let fcc_delay = self.delay.t_delay_s(FCC, input_bits, env);
+        let mut best = usize::MAX;
+        let mut best_cost = f64::INFINITY;
+        let mut best_delay = f64::NAN;
+        if fcc_delay <= slo_s {
+            let c = p.candidate_cost_j(FCC, input_bits, env);
+            if c < best_cost {
+                best = FCC;
+                best_cost = c;
+                best_delay = fcc_delay;
+            }
+        }
+        for &split in &self.frontier {
+            let t = self.delay.t_delay_s(split, self.fixed_bits[split - 1], env);
+            if t <= slo_s {
+                let c = p.candidate_cost_j(split, input_bits, env);
+                if c < best_cost {
+                    best = split;
+                    best_cost = c;
+                    best_delay = t;
+                }
+            }
+        }
+        if best != usize::MAX {
+            return ConstrainedChoice {
+                choice: self.split_choice(best, best_cost, input_bits, env),
+                t_delay_s: best_delay,
+                feasible: true,
+                binding: true,
+            };
+        }
+
+        // Infeasible: best effort = the first delay-minimal candidate.
+        // FCC seeds the fold (index 0 first, so exact ties resolve toward
+        // it like the scan); the delay envelope prunes the fixed splits to
+        // the segment containing β plus neighbors.
+        let (win, t_win) = self.min_delay_split(fcc_delay, env, b_e);
+        let cost = p.candidate_cost_j(win, input_bits, env);
+        ConstrainedChoice {
+            choice: self.split_choice(win, cost, input_bits, env),
+            t_delay_s: t_win,
+            feasible: false,
+            binding: true,
+        }
+    }
+
+    /// First delay-minimal split: the scan's strict-`<` fold seeded with
+    /// FCC, restricted to the delay envelope's candidate neighborhood
+    /// (which provably contains the fixed-split delay argmin), re-evaluated
+    /// with the exact [`DelayModel::t_delay_s`] expression in ascending
+    /// split order. NaN delays never replace the seed — no panics.
+    fn min_delay_split(&self, fcc_delay: f64, env: &TransmitEnv, b_e: f64) -> (usize, f64) {
+        let beta = 1.0 / b_e;
+        let mut cand = [usize::MAX; 3];
+        for (slot, line) in cand.iter_mut().zip(self.delay_env.candidates(beta)) {
+            *slot = line.split;
+        }
+        cand.sort_unstable();
+        let mut win = FCC;
+        let mut t_win = fcc_delay;
+        let mut prev = usize::MAX;
+        for &split in &cand {
+            if split == usize::MAX || split == prev {
+                continue;
+            }
+            prev = split;
+            let t = self.delay.t_delay_s(split, self.fixed_bits[split - 1], env);
+            if t < t_win {
+                t_win = t;
+                win = split;
+            }
+        }
+        (win, t_win)
+    }
+
+    /// Assemble the [`SplitChoice`] for an SLO-overridden split, with the
+    /// transmit energy taken from the partitioner's own transmit model
+    /// (never reconstructed by subtraction).
+    fn split_choice(
+        &self,
+        split: usize,
+        cost_j: f64,
+        input_bits: f64,
+        env: &TransmitEnv,
+    ) -> SplitChoice {
+        let p = &self.partitioner;
+        let transmit_bits = if split == FCC {
+            input_bits
+        } else {
+            p.transmit_bits(split, 0.0)
+        };
+        SplitChoice {
+            l_opt: split,
+            cost_j,
+            fcc_cost_j: p.candidate_cost_j(FCC, input_bits, env),
+            fisc_cost_j: p.candidate_cost_j(p.num_layers(), input_bits, env),
+            client_energy_j: p.client_energy_j(split),
+            transmit_energy_j: p.transmit_energy_j(split, input_bits, env),
+            transmit_bits,
+        }
+    }
+
+    /// Reporting form: full per-candidate delay vector via the reference
+    /// scan. O(|L|) — figures and offline analysis only.
+    pub fn decide_with_slo_full(
+        &self,
+        sparsity_in: f64,
+        env: &TransmitEnv,
+        slo_s: f64,
+    ) -> ConstrainedDecision {
+        decide_with_slo_scan(&self.partitioner, &self.delay, sparsity_in, env, slo_s)
+    }
+}
+
+/// Energy-optimal split under a latency SLO — the O(|L|) reference scan.
+///
+/// This is the semantics the envelope path must reproduce bit-for-bit
+/// (property-tested); serving should use [`SloPartitioner::decide_with_slo`]
+/// instead. Degenerate channels resolve to FISC with finite costs, and the
+/// best-effort fallback is a NaN-tolerant strict-`<` fold (the old
+/// `partial_cmp(..).unwrap()` panicked on non-finite delays).
+pub fn decide_with_slo_scan(
     partitioner: &Partitioner,
     delay: &DelayModel,
     sparsity_in: f64,
     env: &TransmitEnv,
     slo_s: f64,
 ) -> ConstrainedDecision {
-    let unconstrained = partitioner.decide(sparsity_in, env);
     let n = partitioner.num_layers();
+    let b_e = env.effective_bit_rate();
 
+    if !(b_e > 0.0) {
+        // Degenerate channel (B_e ≤ 0 or NaN): every transmitting split is
+        // impossible (+∞ delay), FISC runs locally in its compute time.
+        let unconstrained = partitioner.decide(sparsity_in, env); // FISC, finite
+        let mut delays_s = vec![f64::INFINITY; n + 1];
+        let fisc_t = delay.client_prefix_s(n);
+        delays_s[n] = fisc_t;
+        return ConstrainedDecision {
+            t_delay_s: fisc_t,
+            feasible: fisc_t <= slo_s,
+            delays_s,
+            inner: unconstrained,
+        };
+    }
+
+    let unconstrained = partitioner.decide(sparsity_in, env);
     let bits_at = |split: usize| -> f64 {
         if split == n {
             FISC_OUTPUT_BITS
@@ -48,7 +378,7 @@ pub fn decide_with_slo(
         .map(|split| delay.t_delay_s(split, bits_at(split), env))
         .collect();
 
-    // Feasible set under the SLO; among it, minimize energy.
+    // Feasible set under the SLO; among it, minimize energy (first-min).
     let mut best: Option<usize> = None;
     for split in 0..=n {
         if delays_s[split] <= slo_s {
@@ -62,14 +392,18 @@ pub fn decide_with_slo(
         }
     }
     let feasible = best.is_some();
-    // Best effort when infeasible: the delay-minimal split.
+    // Best effort when infeasible: the first delay-minimal split
+    // (NaN-tolerant fold; NaN entries never replace the running minimum).
     let chosen = best.unwrap_or_else(|| {
-        delays_s
-            .iter()
-            .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap()
-            .0
+        let mut win = 0;
+        let mut t_win = delays_s[0];
+        for (i, &t) in delays_s.iter().enumerate().skip(1) {
+            if t < t_win {
+                win = i;
+                t_win = t;
+            }
+        }
+        win
     });
 
     let mut inner = unconstrained;
@@ -77,7 +411,10 @@ pub fn decide_with_slo(
         inner = PartitionDecision {
             l_opt: chosen,
             client_energy_j: partitioner.client_energy_j(chosen),
-            transmit_energy_j: inner.costs_j[chosen] - partitioner.client_energy_j(chosen),
+            // From the partitioner's own transmit model: subtracting the
+            // client energy from the cached total drifts under rounding
+            // and can go -0.0; this decomposes costs_j[chosen] exactly.
+            transmit_energy_j: partitioner.transmit_energy_j(chosen, bits_at(FCC), env),
             transmit_bits: bits_at(chosen),
             costs_j: inner.costs_j,
         };
@@ -103,13 +440,21 @@ mod tests {
         (paper_partitioner(&net), DelayModel::new(&net, &model))
     }
 
+    fn slo_setup() -> SloPartitioner {
+        let (p, dm) = setup();
+        SloPartitioner::new(p, dm)
+    }
+
     #[test]
     fn loose_slo_recovers_unconstrained_optimum() {
         let (p, dm) = setup();
         let env = TransmitEnv::with_effective_rate(80e6, 0.78);
-        let d = decide_with_slo(&p, &dm, 0.608, &env, 10.0);
+        let d = decide_with_slo_scan(&p, &dm, 0.608, &env, 10.0);
         assert!(d.feasible);
         assert_eq!(d.inner.l_opt, p.decide(0.608, &env).l_opt);
+        let fast = slo_setup().decide_with_slo(0.608, &env, 10.0);
+        assert_eq!(fast.choice.l_opt, d.inner.l_opt);
+        assert!(!fast.binding);
     }
 
     #[test]
@@ -118,8 +463,8 @@ mod tests {
         // decision toward cloud offload (shallower split, less client time).
         let (p, dm) = setup();
         let env = TransmitEnv::with_effective_rate(200e6, 0.78);
-        let loose = decide_with_slo(&p, &dm, 0.608, &env, 10.0);
-        let tight = decide_with_slo(&p, &dm, 0.608, &env, 0.015);
+        let loose = decide_with_slo_scan(&p, &dm, 0.608, &env, 10.0);
+        let tight = decide_with_slo_scan(&p, &dm, 0.608, &env, 0.015);
         assert!(tight.inner.l_opt <= loose.inner.l_opt);
         if tight.feasible {
             assert!(tight.t_delay_s <= 0.015 + 1e-12);
@@ -135,14 +480,10 @@ mod tests {
     fn impossible_slo_reports_infeasible_best_effort() {
         let (p, dm) = setup();
         let env = TransmitEnv::with_effective_rate(1e6, 0.78); // 1 Mbps
-        let d = decide_with_slo(&p, &dm, 0.608, &env, 1e-6);
+        let d = decide_with_slo_scan(&p, &dm, 0.608, &env, 1e-6);
         assert!(!d.feasible);
         // Best effort = delay-minimal candidate.
-        let min_delay = d
-            .delays_s
-            .iter()
-            .cloned()
-            .fold(f64::INFINITY, f64::min);
+        let min_delay = d.delays_s.iter().cloned().fold(f64::INFINITY, f64::min);
         assert!((d.t_delay_s - min_delay).abs() < 1e-15);
     }
 
@@ -150,9 +491,91 @@ mod tests {
     fn delays_match_delay_model() {
         let (p, dm) = setup();
         let env = TransmitEnv::with_effective_rate(80e6, 0.78);
-        let d = decide_with_slo(&p, &dm, 0.608, &env, 1.0);
+        let d = decide_with_slo_scan(&p, &dm, 0.608, &env, 1.0);
         assert_eq!(d.delays_s.len(), p.num_layers() + 1);
         let fisc = dm.fisc_delay_s(&env);
         assert!((d.delays_s[p.num_layers()] - fisc).abs() < 1e-12);
+    }
+
+    #[test]
+    fn envelope_path_matches_scan_over_grid() {
+        let slo_p = slo_setup();
+        for be in [0.5, 5.0, 40.0, 130.0, 1000.0] {
+            for slo_ms in [0.001, 1.0, 8.0, 15.0, 40.0, 200.0] {
+                let env = TransmitEnv::with_effective_rate(be * 1e6, 0.78);
+                let scan = slo_p.decide_with_slo_full(0.608, &env, slo_ms / 1e3);
+                let fast = slo_p.decide_with_slo(0.608, &env, slo_ms / 1e3);
+                assert_eq!(
+                    fast.choice.l_opt, scan.inner.l_opt,
+                    "be={be} slo={slo_ms}ms"
+                );
+                assert_eq!(fast.choice.cost_j, scan.inner.costs_j[scan.inner.l_opt]);
+                assert_eq!(fast.t_delay_s, scan.t_delay_s, "be={be} slo={slo_ms}ms");
+                assert_eq!(fast.feasible, scan.feasible);
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_channel_never_panics_resolves_to_fisc() {
+        // Regression: the old best-effort fallback unwrapped partial_cmp
+        // over non-finite delays and panicked when B_e ≤ 0 or NaN.
+        let (p, dm) = setup();
+        let n = p.num_layers();
+        let slo_p = slo_setup();
+        for b_e in [0.0, -5.0, f64::NAN] {
+            let env = TransmitEnv::with_effective_rate(b_e, 0.78);
+            let d = decide_with_slo_scan(&p, &dm, 0.608, &env, 1e-6);
+            assert_eq!(d.inner.l_opt, n, "b_e={b_e}");
+            assert!(d.inner.costs_j[n].is_finite());
+            assert!(d.t_delay_s.is_finite());
+            assert_eq!(d.inner.transmit_energy_j, 0.0);
+            let fast = slo_p.decide_with_slo(0.608, &env, 1e-6);
+            assert_eq!(fast.choice.l_opt, n);
+            assert!(fast.choice.cost_j.is_finite());
+            assert_eq!(fast.t_delay_s, d.t_delay_s);
+            assert_eq!(fast.feasible, d.feasible);
+            // A loose SLO is feasible through FISC alone.
+            let loose = slo_p.decide_with_slo(0.608, &env, 1e9);
+            assert!(loose.feasible);
+        }
+    }
+
+    #[test]
+    fn transmit_energy_decomposes_exactly_in_override_path() {
+        // The SLO override used to reconstruct transmit energy as
+        // `costs_j[l] - client`, which drifts under rounding; it now comes
+        // from the transmit model, so the decomposition is exact.
+        let (p, dm) = setup();
+        // The paper's 80 Mbps operating point: AlexNet's unconstrained
+        // optimum is an intermediate split (Table V).
+        let env = TransmitEnv::with_effective_rate(80e6, 0.78);
+        let unc = p.decide(0.608, &env);
+        // An SLO only the FCC upload can meet: forces the override path.
+        let slo = dm.fcc_delay_s(p.transmit_bits(FCC, 0.608), &env);
+        let tight = decide_with_slo_scan(&p, &dm, 0.608, &env, slo);
+        assert!(tight.feasible);
+        assert_ne!(tight.inner.l_opt, unc.l_opt, "override path not engaged");
+        let l = tight.inner.l_opt;
+        assert_eq!(
+            tight.inner.client_energy_j + tight.inner.transmit_energy_j,
+            tight.inner.costs_j[l]
+        );
+        assert!(!tight.inner.transmit_energy_j.is_sign_negative());
+        // The envelope path decomposes exactly too.
+        let fast = slo_setup().decide_with_slo(0.608, &env, slo);
+        assert_eq!(fast.choice.l_opt, l);
+        assert_eq!(
+            fast.choice.client_energy_j + fast.choice.transmit_energy_j,
+            fast.choice.cost_j
+        );
+    }
+
+    #[test]
+    fn frontier_prunes_nothing_essential() {
+        let slo_p = slo_setup();
+        assert!(slo_p.frontier_len() >= 1);
+        assert!(slo_p.frontier_len() <= slo_p.partitioner().num_layers());
+        assert!(slo_p.delay_envelope().num_segments() >= 1);
     }
 }

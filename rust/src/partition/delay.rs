@@ -3,6 +3,13 @@
 //! `t_delay = Σ_{i≤L} t_client(i) + t_Trans + Σ_{i>L} t_cloud(i)`, with
 //! per-layer latencies `#MACs / Throughput` on each platform. The paper's
 //! cloud is a Google TPU at 92 TeraOps/s (§VIII-A).
+//!
+//! The per-split compute terms are independent of the channel state, so the
+//! model precomputes the prefix/suffix sums at build time and a
+//! [`DelayModel::t_delay_s`] query is O(1): two table reads plus the
+//! transmission time. The precomputed sums reproduce the left-to-right
+//! fold a naive per-query summation would perform, so delay values are
+//! bit-identical to the pre-table implementation.
 
 use crate::channel::TransmitEnv;
 use crate::cnn::Network;
@@ -20,6 +27,10 @@ pub struct DelayModel {
     client_s: Vec<f64>,
     /// Per-layer cloud latency, seconds.
     cloud_s: Vec<f64>,
+    /// `client_prefix_s[l]` = Σ client_s[..l] (left fold), seconds.
+    client_prefix_s: Vec<f64>,
+    /// `cloud_suffix_s[l]` = Σ cloud_s[l..] (left fold), seconds.
+    cloud_suffix_s: Vec<f64>,
 }
 
 impl DelayModel {
@@ -30,15 +41,61 @@ impl DelayModel {
             .iter()
             .map(|l| 2.0 * l.macs() as f64 / TPU_OPS_PER_S)
             .collect();
-        DelayModel { client_s, cloud_s }
+        Self::from_parts(client_s, cloud_s)
+    }
+
+    /// Build from externally supplied per-layer latencies (profiled tables,
+    /// or synthetic models in property tests). Both vectors must have one
+    /// entry per layer.
+    pub fn from_parts(client_s: Vec<f64>, cloud_s: Vec<f64>) -> Self {
+        assert_eq!(client_s.len(), cloud_s.len());
+        let n = client_s.len();
+        // Each prefix/suffix is its own left-to-right fold so every stored
+        // sum is bit-identical to the per-query summation it replaces
+        // (floating-point addition is not associative; a running
+        // accumulator would associate suffix sums differently). O(n²) once.
+        let client_prefix_s: Vec<f64> = (0..=n)
+            .map(|l| client_s[..l].iter().sum::<f64>())
+            .collect();
+        let cloud_suffix_s: Vec<f64> = (0..=n)
+            .map(|l| cloud_s[l..].iter().sum::<f64>())
+            .collect();
+        DelayModel {
+            client_s,
+            cloud_s,
+            client_prefix_s,
+            cloud_suffix_s,
+        }
+    }
+
+    /// Number of layers in the bound network.
+    pub fn num_layers(&self) -> usize {
+        self.client_s.len()
+    }
+
+    /// Client compute time for layers `1..=split`, seconds.
+    pub fn client_prefix_s(&self, split: usize) -> f64 {
+        self.client_prefix_s[split]
+    }
+
+    /// Cloud compute time for layers `split+1..`, seconds.
+    pub fn cloud_suffix_s(&self, split: usize) -> f64 {
+        self.cloud_suffix_s[split]
+    }
+
+    /// The channel-independent part of `t_delay` at a split: client prefix
+    /// plus cloud suffix. This is the intercept of the split's delay line
+    /// `t_delay(β) = base + bits·β` over `β = 1/B_e` — the delay-envelope
+    /// analog of a cost line's energy intercept. Used for envelope pruning
+    /// only; decision code re-evaluates with [`DelayModel::t_delay_s`].
+    pub fn base_delay_s(&self, split: usize) -> f64 {
+        self.client_prefix_s[split] + self.cloud_suffix_s[split]
     }
 
     /// `t_delay` for a split (0 = FCC … `|L|` = FISC), given the transmit
-    /// volume the partitioner computed for that split.
+    /// volume the partitioner computed for that split. O(1).
     pub fn t_delay_s(&self, split: usize, transmit_bits: f64, env: &TransmitEnv) -> f64 {
-        let client: f64 = self.client_s[..split].iter().sum();
-        let cloud: f64 = self.cloud_s[split..].iter().sum();
-        client + env.time_s(transmit_bits) + cloud
+        self.client_prefix_s[split] + env.time_s(transmit_bits) + self.cloud_suffix_s[split]
     }
 
     /// Delay at the energy-optimal split for one image.
@@ -108,5 +165,36 @@ mod tests {
         let t_opt = dm.t_delay_s(d.l_opt, d.transmit_bits, &env);
         let t_fisc = dm.fisc_delay_s(&env);
         assert!(t_opt <= t_fisc * 1.05, "opt {t_opt} vs fisc {t_fisc}");
+    }
+
+    #[test]
+    fn precomputed_sums_match_naive_folds() {
+        // The tables must reproduce the per-query left folds bit-for-bit:
+        // `t_delay_s` values feed exact argmin comparisons downstream.
+        let (dm, p) = setup();
+        let env = TransmitEnv::with_effective_rate(80e6, 0.78);
+        for split in 0..=dm.num_layers() {
+            let client: f64 = dm.client_s[..split].iter().sum();
+            let cloud: f64 = dm.cloud_s[split..].iter().sum();
+            assert_eq!(dm.client_prefix_s(split), client, "split {split}");
+            assert_eq!(dm.cloud_suffix_s(split), cloud, "split {split}");
+            let bits = if split == p.num_layers() {
+                crate::partition::FISC_OUTPUT_BITS
+            } else {
+                p.transmit_bits(split, 0.608)
+            };
+            let naive = client + env.time_s(bits) + cloud;
+            assert_eq!(dm.t_delay_s(split, bits, &env), naive, "split {split}");
+        }
+    }
+
+    #[test]
+    fn from_parts_base_delay_covers_both_sides() {
+        let dm = DelayModel::from_parts(vec![1.0, 2.0, 4.0], vec![0.5, 0.25, 0.125]);
+        assert_eq!(dm.num_layers(), 3);
+        assert_eq!(dm.base_delay_s(0), 0.0 + (0.5 + 0.25 + 0.125));
+        assert_eq!(dm.base_delay_s(3), 1.0 + 2.0 + 4.0);
+        // Interior split: prefix of client + suffix of cloud.
+        assert_eq!(dm.base_delay_s(1), 1.0 + (0.25 + 0.125));
     }
 }

@@ -18,6 +18,13 @@
 //! scan uses, in ascending split order with a strict `<`, so the chosen
 //! split matches the scan argmin bit-for-bit — including ties, which both
 //! paths resolve toward the smallest split index.
+//!
+//! The machinery is generic over what the line family measures: the same
+//! [`Envelope`] also precomputes the *delay* envelope used by the
+//! SLO-constrained path ([`crate::partition::SloPartitioner`]), where each
+//! split's `t_delay(β) = base_s + bits·β` is a line in `β = 1/B_e` (delay
+//! is affine in payload bits at fixed rate, §VI-B). There `energy_j` holds
+//! the channel-independent compute time in seconds; nothing else changes.
 
 /// One candidate cost line `cost(γ) = energy_j + γ·bits`, tagged with the
 /// split index it represents.
@@ -165,10 +172,20 @@ impl Envelope {
     /// splits ≥ 1) and absorbs floating-point wobble at breakpoints.
     /// Empty iff the envelope is empty.
     pub fn candidates(&self, gamma: f64) -> &[CostLine] {
+        self.candidates_for_segment(self.segment_index(gamma))
+    }
+
+    /// [`Envelope::candidates`] keyed by a segment index instead of γ — the
+    /// γ-bucketed admission path computes the segment once per request at
+    /// the front door and reuses it at decision time, skipping the
+    /// breakpoint search. `segment` is clamped to the valid range; for any
+    /// γ inside the segment this returns exactly the slice
+    /// `candidates(γ)` would. Empty iff the envelope is empty.
+    pub fn candidates_for_segment(&self, segment: usize) -> &[CostLine] {
         if self.segments.is_empty() {
             return &self.segments;
         }
-        let i = self.segment_index(gamma);
+        let i = segment.min(self.segments.len() - 1);
         let lo = i.saturating_sub(1);
         let hi = (i + 1).min(self.segments.len() - 1);
         &self.segments[lo..=hi]
@@ -272,6 +289,22 @@ mod tests {
         let bp = e.breakpoints()[0];
         let cands: Vec<usize> = e.candidates(bp).iter().map(|l| l.split).collect();
         assert!(cands.contains(&1) && cands.contains(&2));
+    }
+
+    #[test]
+    fn candidates_by_segment_match_candidates_by_gamma() {
+        let lines = [line(1, 100.0, 0.0), line(2, 10.0, 50.0), line(3, 1.0, 200.0)];
+        let e = Envelope::build(&lines);
+        for gamma in [0.0, 0.1, 0.6, 5.0, 20.0, 1e6] {
+            let seg = e.segment_index(gamma);
+            assert_eq!(e.candidates_for_segment(seg), e.candidates(gamma), "γ={gamma}");
+        }
+        // Out-of-range segment indices clamp instead of panicking.
+        assert_eq!(
+            e.candidates_for_segment(usize::MAX),
+            e.candidates(f64::INFINITY)
+        );
+        assert!(Envelope::default().candidates_for_segment(3).is_empty());
     }
 
     #[test]

@@ -1,6 +1,8 @@
 //! Runtime client/cloud partitioning (paper §VII, Algorithm 2), the
-//! lower-envelope decision engine that makes it O(1) per request, and the
-//! inference-delay model (paper §VI-B, eq. 30).
+//! lower-envelope decision engine that makes it O(1) per request — for the
+//! unconstrained energy objective and, via [`SloPartitioner`], the
+//! latency-SLO-constrained variant — and the inference-delay model
+//! (paper §VI-B, eq. 30).
 
 pub mod algorithm2;
 pub mod constrained;
@@ -8,6 +10,8 @@ pub mod delay;
 pub mod envelope;
 
 pub use algorithm2::{PartitionDecision, Partitioner, SplitChoice, FCC, FISC_OUTPUT_BITS};
-pub use constrained::{decide_with_slo, ConstrainedDecision};
+pub use constrained::{
+    decide_with_slo_scan, ConstrainedChoice, ConstrainedDecision, SloPartitioner,
+};
 pub use delay::DelayModel;
 pub use envelope::{CostLine, Envelope};

@@ -7,7 +7,7 @@ use neupart::channel::TransmitEnv;
 use neupart::cnn::ConvShape;
 use neupart::cnnergy::{schedule, HwConfig};
 use neupart::compress::rlc;
-use neupart::partition::Partitioner;
+use neupart::partition::{decide_with_slo_scan, DelayModel, Partitioner, SloPartitioner};
 use neupart::util::json;
 use neupart::util::rng::Rng;
 
@@ -298,6 +298,177 @@ fn prop_degenerate_channel_is_guarded() {
             assert!(!fast.savings_vs_fcc().is_nan());
             let batch = p.decide_batch_sparsity(&[0.2, 0.8], &env);
             assert!(batch.iter().all(|c| c.l_opt == n && c.cost_j.is_finite()));
+        }
+    }
+}
+
+/// Random synthetic delay model sized to a partitioner: client latencies
+/// dominate cloud ones (the paper's regime), all strictly positive.
+fn random_delay_model(rng: &mut Rng, n_layers: usize) -> DelayModel {
+    let client: Vec<f64> = (0..n_layers)
+        .map(|_| rng.next_f64() * 1e-2 + 1e-6)
+        .collect();
+    let cloud: Vec<f64> = (0..n_layers)
+        .map(|_| rng.next_f64() * 1e-4 + 1e-8)
+        .collect();
+    DelayModel::from_parts(client, cloud)
+}
+
+/// Compare the envelope-backed constrained decision against the reference
+/// scan on one query — every shared field bit-for-bit.
+fn assert_constrained_match(
+    slo_p: &SloPartitioner,
+    p: &Partitioner,
+    dm: &DelayModel,
+    sp: f64,
+    env: &TransmitEnv,
+    slo: f64,
+    ctx: &str,
+) {
+    let scan = decide_with_slo_scan(p, dm, sp, env, slo);
+    let fast = slo_p.decide_with_slo(sp, env, slo);
+    assert_eq!(fast.choice.l_opt, scan.inner.l_opt, "l_opt: {ctx}");
+    assert_eq!(
+        fast.choice.cost_j, scan.inner.costs_j[scan.inner.l_opt],
+        "cost: {ctx}"
+    );
+    assert_eq!(
+        fast.t_delay_s.to_bits(),
+        scan.t_delay_s.to_bits(),
+        "t_delay ({} vs {}): {ctx}",
+        fast.t_delay_s,
+        scan.t_delay_s
+    );
+    assert_eq!(fast.feasible, scan.feasible, "feasible: {ctx}");
+    // The fast path's decomposition is exact by construction.
+    assert_eq!(
+        fast.choice.client_energy_j + fast.choice.transmit_energy_j,
+        fast.choice.cost_j,
+        "decomposition: {ctx}"
+    );
+}
+
+#[test]
+fn prop_constrained_envelope_matches_scan() {
+    // The PR-2 tentpole invariant: SloPartitioner::decide_with_slo (the
+    // envelope-backed path) must reproduce the O(|L|) reference scan
+    // bit-for-bit across random SLOs (log-uniform, zero, infinite, and
+    // exact delay ties), γ sweeps over ~12 decades, and degenerate
+    // channels — splits, costs, delays and feasibility all identical.
+    let mut rng = Rng::new(0x510C);
+    for case in 0..CASES {
+        let p = random_partitioner(&mut rng);
+        let dm = random_delay_model(&mut rng, p.num_layers());
+        let slo_p = SloPartitioner::new(p.clone(), dm.clone());
+        for probe in 0..8 {
+            let be = 10f64.powf(rng.next_f64() * 12.0 - 3.0);
+            let p_tx = rng.next_f64() * 2.5 + 0.05;
+            let env = TransmitEnv::with_effective_rate(be, p_tx);
+            let sp = rng.next_f64();
+            let slo = match probe % 4 {
+                0 => 10f64.powf(rng.next_f64() * 8.0 - 6.0),
+                1 => 0.0,
+                2 => f64::INFINITY,
+                _ => {
+                    // Exact tie: the SLO equals one candidate's delay, so
+                    // that candidate is feasible by `<=` — the boundary the
+                    // strict/loose inequality mix-ups would break.
+                    let all = decide_with_slo_scan(&p, &dm, sp, &env, f64::INFINITY);
+                    let k = rng.range_usize(0, all.delays_s.len() - 1);
+                    all.delays_s[k]
+                }
+            };
+            let ctx = format!("case {case}/{probe}: be={be} p_tx={p_tx} sp={sp} slo={slo}");
+            assert_constrained_match(&slo_p, &p, &dm, sp, &env, slo, &ctx);
+        }
+        // Degenerate channels: no panics, FISC, finite accounting.
+        for be in [0.0, -1.0, f64::NAN] {
+            let env = TransmitEnv::with_effective_rate(be, 0.78);
+            let slo = rng.next_f64();
+            let ctx = format!("case {case}: degenerate be={be} slo={slo}");
+            assert_constrained_match(&slo_p, &p, &dm, 0.5, &env, slo, &ctx);
+            let fast = slo_p.decide_with_slo(0.5, &env, slo);
+            assert_eq!(fast.choice.l_opt, p.num_layers(), "{ctx}");
+            assert!(fast.choice.cost_j.is_finite(), "{ctx}");
+            assert!(fast.t_delay_s.is_finite(), "{ctx}");
+        }
+    }
+}
+
+#[test]
+fn prop_constrained_matches_scan_at_energy_breakpoints() {
+    // Query γ EXACTLY at every energy-envelope breakpoint (B_e = 1 so
+    // P_Tx reproduces γ bit-for-bit) under a spread of SLOs: the cost tie
+    // between two candidate lines and the SLO feasibility cut interact at
+    // these points, and the scan's first-argmin rule must still win.
+    let mut rng = Rng::new(0x7175);
+    for case in 0..100 {
+        let p = random_partitioner(&mut rng);
+        let dm = random_delay_model(&mut rng, p.num_layers());
+        let slo_p = SloPartitioner::new(p.clone(), dm.clone());
+        let breakpoints: Vec<f64> = p.envelope().breakpoints().to_vec();
+        for (i, gamma) in breakpoints.into_iter().enumerate() {
+            let env = TransmitEnv::with_effective_rate(1.0, gamma);
+            for slo in [0.0, 1e-2, 1e3, f64::INFINITY] {
+                let ctx = format!("case {case}: breakpoint {i} γ={gamma} slo={slo}");
+                assert_constrained_match(&slo_p, &p, &dm, 0.6, &env, slo, &ctx);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_transmit_energy_decomposes_costs_exactly() {
+    // `client_energy_j(l) + transmit_energy_j(l, ..)` must equal the scan's
+    // costs_j[l] for EVERY split — exactly, not within tolerance: both
+    // paths evaluate the identical floating-point expression.
+    let mut rng = Rng::new(0xDEC0);
+    for case in 0..CASES {
+        let p = random_partitioner(&mut rng);
+        let env = TransmitEnv::with_effective_rate(
+            10f64.powf(rng.next_f64() * 10.0 - 2.0),
+            rng.next_f64() * 2.0 + 0.05,
+        );
+        let sp = rng.next_f64();
+        let d = p.decide(sp, &env);
+        let input_bits = p.transmit_bits(0, sp);
+        for split in 0..=p.num_layers() {
+            let sum = p.client_energy_j(split) + p.transmit_energy_j(split, input_bits, &env);
+            assert_eq!(sum, d.costs_j[split], "case {case} split {split}");
+            assert_eq!(
+                sum,
+                p.candidate_cost_j(split, input_bits, &env),
+                "case {case} split {split}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_segment_decision_matches_per_request() {
+    // γ-coherent admission invariant: once a request's γ is mapped to its
+    // envelope segment at the front door, deciding inside that segment
+    // must equal the per-request breakpoint-search path bit-for-bit, for
+    // any jittered env whose γ stays in the segment (it does by
+    // construction — both sides compute γ from the same env).
+    let mut rng = Rng::new(0x6A33);
+    for case in 0..CASES {
+        let p = random_partitioner(&mut rng);
+        let base = 10f64.powf(rng.next_f64() * 8.0 - 1.0);
+        let p_tx = rng.next_f64() * 2.0 + 0.1;
+        for probe in 0..8 {
+            // Clamped multiplicative jitter, like the coordinator's
+            // admission-time sampling.
+            let factor = (1.0 + 0.95 * (2.0 * rng.next_f64() - 1.0)).max(0.05);
+            let env = TransmitEnv::with_effective_rate(base * factor, p_tx);
+            let gamma = env.p_tx_w / env.effective_bit_rate();
+            let seg = p.envelope().segment_index(gamma);
+            let bits = p.transmit_bits(0, rng.next_f64());
+            assert_eq!(
+                p.decide_in_segment(seg, bits, &env),
+                p.decide_split(bits, &env),
+                "case {case}/{probe}: γ={gamma}"
+            );
         }
     }
 }

@@ -25,6 +25,7 @@ fn config(network: &str, force: Option<usize>) -> CoordinatorConfig {
         force_split: force,
         warm_splits: Vec::new(),
         batch_max: 3,
+        gamma_coherent: true,
         seed: 5,
     }
 }
@@ -39,6 +40,7 @@ fn requests(n: usize) -> Vec<InferenceRequest> {
             pixels: img.pixels.clone(),
             width: img.w,
             height: img.h,
+            env: None,
         })
         .collect()
 }
@@ -127,6 +129,55 @@ fn channel_jitter_does_not_break_serving() {
     let coord = Coordinator::new(cfg).unwrap();
     let responses = coord.serve(requests(4)).unwrap();
     assert_eq!(responses.len(), 4);
+}
+
+#[test]
+fn gamma_bucketed_batches_match_per_request_decisions() {
+    if !have_artifacts() {
+        return;
+    }
+    // Under per-request channel jitter, γ-coherent admission must choose
+    // exactly the splits the unbucketed per-request path chooses: the
+    // admission env sampling is seeded, so two runs over the same workload
+    // differ only in bucketing.
+    let n = 10;
+    let mut bucketed_cfg = config("tiny_alexnet", None);
+    bucketed_cfg.jitter = 0.4;
+    bucketed_cfg.gamma_coherent = true;
+    let bucketed = Coordinator::new(bucketed_cfg).unwrap();
+    let with_buckets = bucketed.serve(requests(n)).unwrap();
+
+    let mut flat_cfg = config("tiny_alexnet", None);
+    flat_cfg.jitter = 0.4;
+    flat_cfg.gamma_coherent = false;
+    let flat = Coordinator::new(flat_cfg).unwrap();
+    let without_buckets = flat.serve(requests(n)).unwrap();
+
+    for (a, b) in with_buckets.iter().zip(&without_buckets) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.split, b.split, "request {}", a.id);
+    }
+    // The bucketed run recorded segment and batch accounting.
+    let m = bucketed.metrics.snapshot();
+    assert_eq!(m.requests, n as u64);
+    assert!(m.batches >= 1);
+    assert_eq!(m.batch_requests, n as u64);
+    assert_eq!(m.segment_counts.values().sum::<u64>(), n as u64);
+}
+
+#[test]
+fn explicit_request_env_steers_the_decision() {
+    if !have_artifacts() {
+        return;
+    }
+    // A request reporting a dead-slow channel must stay on the client
+    // (FISC) regardless of the coordinator's configured env.
+    let coord = Coordinator::new(config("tiny_alexnet", None)).unwrap();
+    let mut reqs = requests(2);
+    reqs[1].env = Some(TransmitEnv::with_effective_rate(10.0, 0.78)); // 10 bps
+    let responses = coord.serve(reqs).unwrap();
+    let n_layers = coord.partitioner().num_layers();
+    assert_eq!(responses[1].split, n_layers, "dead channel must pin FISC");
 }
 
 #[test]
