@@ -12,13 +12,20 @@
 //!
 //! Set `NEUPART_BENCH_SMOKE=1` for the CI smoke run (shorter budgets).
 
+// The legacy decide_* entry points are benchmarked on purpose: they are
+// the baselines the policy-trait path is compared against.
+#![allow(deprecated)]
+
 use std::collections::BTreeMap;
 
 use neupart::bench::Bencher;
 use neupart::channel::TransmitEnv;
 use neupart::cnn::Network;
 use neupart::cnnergy::CnnErgy;
-use neupart::partition::{decide_with_slo_scan, DelayModel, Partitioner, SloPartitioner, FCC};
+use neupart::partition::{
+    decide_with_slo_scan, device_class, DecisionContext, DelayModel, EnergyPolicy, EnvelopeTable,
+    PartitionPolicy, Partitioner, PolicyRegistry, SloPartitioner, FCC,
+};
 use neupart::util::json::Value;
 
 const BATCH: usize = 1024;
@@ -64,6 +71,18 @@ fn main() {
             .bench(&format!("alg2_envelope/{}", net.name), || {
                 sp_e = if sp_e > 0.9 { 0.40 } else { sp_e + 0.001 };
                 p.decide_fast(sp_e, &env)
+            })
+            .mean_ns;
+
+        // The unified decision surface: EnergyPolicy::decide through the
+        // PartitionPolicy trait (what the serving coordinator calls).
+        let policy = EnergyPolicy::new(p.clone());
+        let mut sp_p = 0.40;
+        let policy_ns = b
+            .bench(&format!("policy_decide/{}", net.name), || {
+                sp_p = if sp_p > 0.9 { 0.40 } else { sp_p + 0.001 };
+                let ctx = DecisionContext::from_sparsity(policy.partitioner(), sp_p, env);
+                policy.decide(&ctx)
             })
             .mean_ns;
 
@@ -116,6 +135,7 @@ fn main() {
         row.insert("scan_ns".to_string(), Value::Num(scan_ns));
         row.insert("scan_into_ns".to_string(), Value::Num(into_ns));
         row.insert("envelope_ns".to_string(), Value::Num(envelope_ns));
+        row.insert("policy_ns".to_string(), Value::Num(policy_ns));
         row.insert("batch_ns_per_decision".to_string(), Value::Num(batch_ns));
         row.insert(
             "scan_decisions_per_s".to_string(),
@@ -174,6 +194,22 @@ fn main() {
         (d.savings_vs_fcc(), d.savings_vs_fisc())
     });
 
+    // Fleet registry: the per-connection hot path is one read-locked map
+    // lookup returning a shared entry; the serialized per-device envelope
+    // table is the artifact a coordinator ships to clients.
+    let registry = PolicyRegistry::new();
+    let entry = registry.get_or_build("alexnet", &env).expect("registry entry");
+    let device = device_class(env.p_tx_w);
+    let registry_lookup_ns = b
+        .bench("registry_lookup/alexnet", || {
+            registry.get("alexnet", &device).expect("registered")
+        })
+        .mean_ns;
+    let table =
+        EnvelopeTable::from_partitioner("alexnet", &device, env.p_tx_w, entry.partitioner());
+    let table_bytes = table.table_bytes();
+    println!("  registry: lookup {registry_lookup_ns:.0} ns, envelope table {table_bytes} bytes");
+
     b.write_csv(std::path::Path::new("results/bench_partitioner.csv"))
         .expect("csv");
     b.write_json(
@@ -181,6 +217,8 @@ fn main() {
         vec![
             ("partition".to_string(), Value::Obj(summary)),
             ("batch_size".to_string(), Value::Num(BATCH as f64)),
+            ("registry_lookup_ns".to_string(), Value::Num(registry_lookup_ns)),
+            ("table_bytes".to_string(), Value::Num(table_bytes as f64)),
         ],
     )
     .expect("json");

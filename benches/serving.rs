@@ -23,6 +23,7 @@ fn requests(n: usize) -> Vec<InferenceRequest> {
             width: img.w,
             height: img.h,
             env: None,
+            deadline_s: None,
         })
         .collect()
 }
@@ -48,6 +49,7 @@ fn main() {
             warm_splits: (0..=11).collect(),
             batch_max: 8,
             gamma_coherent: true,
+            shed_infeasible: true,
             seed: 3,
         };
         let coord = Coordinator::new(cfg).expect("coordinator");

@@ -29,6 +29,7 @@ fn requests(n: usize, seed: u64) -> Vec<InferenceRequest> {
             width: img.w,
             height: img.h,
             env: None,
+            deadline_s: None,
         })
         .collect()
 }
@@ -51,6 +52,7 @@ fn config(force_split: Option<usize>, be_mbps: f64) -> CoordinatorConfig {
         warm_splits,
         batch_max: 8,
         gamma_coherent: true,
+        shed_infeasible: true,
         seed: 7,
     }
 }

@@ -14,7 +14,7 @@ use neupart::cnn::Network;
 use neupart::cnnergy::CnnErgy;
 use neupart::compress::jpeg::compress_rgb;
 use neupart::corpus::Corpus;
-use neupart::partition::Partitioner;
+use neupart::partition::{DecisionContext, EnergyPolicy, PartitionPolicy, Partitioner};
 use neupart::util::rng::Rng;
 
 /// A phone battery in joules (≈ 3000 mAh at 3.8 V ≈ 41 kJ; we track the
@@ -24,7 +24,7 @@ const BATTERY_J: f64 = 41_000.0;
 fn main() {
     let net = Network::by_name("squeezenet").unwrap(); // mobile-class CNN
     let model = CnnErgy::inference_8bit();
-    let partitioner = Partitioner::new(&net, &model);
+    let policy = EnergyPolicy::new(Partitioner::new(&net, &model));
     let corpus = Corpus::imagenet_like(99);
     let mut rng = Rng::new(2026);
 
@@ -44,10 +44,11 @@ fn main() {
         let img = corpus.image(i);
         let probe = compress_rgb(&img.pixels, img.w, img.h, 90);
 
-        let d = partitioner.decide(probe.sparsity, &env);
-        e_neupart += d.costs_j[d.l_opt];
-        e_fcc += d.costs_j[0];
-        e_fisc += d.costs_j[d.costs_j.len() - 1];
+        let ctx = DecisionContext::from_sparsity(policy.partitioner(), probe.sparsity, env);
+        let d = policy.decide(&ctx);
+        e_neupart += d.cost_j;
+        e_fcc += d.fcc_cost_j;
+        e_fisc += d.fisc_cost_j;
         let name = if d.l_opt == 0 {
             "In".to_string()
         } else {

@@ -9,7 +9,7 @@
 use neupart::channel::TransmitEnv;
 use neupart::cnn::Network;
 use neupart::cnnergy::CnnErgy;
-use neupart::partition::Partitioner;
+use neupart::partition::{DecisionContext, EnergyPolicy, PartitionPolicy, Partitioner};
 
 fn main() {
     // 1. An analytical energy model for an Eyeriss-class accelerator at the
@@ -26,8 +26,9 @@ fn main() {
         println!("  up to {:<4} {:>8.3} mJ", layer.name, e * 1e-9);
     }
 
-    // 4. The runtime partitioner (Alg. 2): precomputes everything offline…
-    let partitioner = Partitioner::new(&net, &model);
+    // 4. The decision policy (Alg. 2): the partitioner precomputes
+    //    everything offline, the policy is the decision surface…
+    let policy = EnergyPolicy::new(Partitioner::new(&net, &model));
 
     // 5. …then decides per image, given the probed JPEG sparsity and the
     //    current communication environment.
@@ -36,7 +37,10 @@ fn main() {
         ecc_percent: 10.0,    // k  -> B_e = 80 Mbps
         p_tx_w: 0.78,         // LG Nexus 4 WLAN (Table IV)
     };
-    let decision = partitioner.decide(0.608, &env); // median Sparsity-In
+    // Median Sparsity-In; the hot-path `decide` carries the full energy
+    // accounting (use `decide_detailed` for the per-candidate vector).
+    let ctx = DecisionContext::from_sparsity(policy.partitioner(), 0.608, env);
+    let decision = policy.decide(&ctx);
 
     let optimal = if decision.l_opt == 0 {
         "In (fully cloud)"
@@ -48,7 +52,7 @@ fn main() {
     println!("\noptimal partition: {optimal}");
     println!(
         "E_cost {:.3} mJ = client {:.3} mJ + radio {:.3} mJ",
-        decision.costs_j[decision.l_opt] * 1e3,
+        decision.cost_j * 1e3,
         decision.client_energy_j * 1e3,
         decision.transmit_energy_j * 1e3
     );

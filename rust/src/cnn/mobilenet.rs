@@ -100,6 +100,7 @@ pub fn mobilenet_v1() -> Network {
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::channel::TransmitEnv;

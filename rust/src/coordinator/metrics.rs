@@ -23,6 +23,10 @@ pub struct MetricsSnapshot {
     pub batch_requests: u64,
     /// Per-admission-lane batch counts (lane → batches drained from it).
     pub lane_batches: BTreeMap<usize, u64>,
+    /// Requests shed at admission because their deadline was provably
+    /// infeasible at the admission-time channel state (the delay-envelope
+    /// lower bound already exceeded the deadline).
+    pub shed_infeasible: u64,
     /// Modeled energy totals, joules.
     pub client_energy_j: f64,
     pub transmit_energy_j: f64,
@@ -110,6 +114,9 @@ impl MetricsSnapshot {
                 self.mean_batch_size()
             ));
         }
+        if self.shed_infeasible > 0 {
+            s.push_str(&format!("shed (infeasible) : {}\n", self.shed_infeasible));
+        }
         s
     }
 }
@@ -149,6 +156,12 @@ impl Metrics {
         m.batches += 1;
         m.batch_requests += size as u64;
         *m.lane_batches.entry(bucket).or_insert(0) += 1;
+    }
+
+    /// Record one request shed at admission for a provably infeasible
+    /// deadline.
+    pub fn record_shed(&self) {
+        self.inner.lock().unwrap().shed_infeasible += 1;
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -210,6 +223,18 @@ mod tests {
         assert_eq!(s.lane_batches[&0], 2);
         assert_eq!(s.lane_batches[&2], 1);
         assert!(s.report().contains("admission batches"));
+    }
+
+    #[test]
+    fn shed_accounting() {
+        let m = Metrics::new();
+        m.record_shed();
+        m.record_shed();
+        let s = m.snapshot();
+        assert_eq!(s.shed_infeasible, 2);
+        assert!(s.report().contains("shed (infeasible) : 2"));
+        // Shed requests are not served requests.
+        assert_eq!(s.requests, 0);
     }
 
     #[test]

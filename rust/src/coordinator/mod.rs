@@ -5,12 +5,20 @@
 //! ```text
 //!  requests ──► queue ──► worker pool ──┬─ probe Sparsity-In (JPEG DCT)
 //!                                       ├─ Alg. 2 partition decision
+//!                                       │    (PartitionPolicy trait)
 //!                                       ├─ client executor (PJRT, 1 thread
 //!                                       │    = the one mobile accelerator)
 //!                                       ├─ quantize + RLC encode
 //!                                       ├─ channel simulator (energy/time)
 //!                                       └─ cloud executor pool (PJRT)
 //! ```
+//!
+//! Every partition decision routes through the
+//! [`crate::partition::PartitionPolicy`] trait: the coordinator holds an
+//! [`crate::partition::EnergyPolicy`] over an engine obtained from a
+//! [`crate::partition::PolicyRegistry`] (pass a shared registry via
+//! [`Coordinator::with_registry`] to reuse one envelope table across
+//! every connection of a (network, device P_Tx class)).
 //!
 //! PJRT handles are thread-local (`Rc`), so each executor thread owns its
 //! own client + compiled-executable cache; workers talk to them over mpsc
@@ -33,18 +41,22 @@
 //!   workers drain whole single-lane batches
 //!   ([`Batcher::take_batch_bucketed`]);
 //! * every request in a batch then shares its envelope segment, so the
-//!   decision skips the breakpoint search
-//!   (`Partitioner::decide_in_segment`) while remaining bit-for-bit equal
-//!   to the per-request path — property- and e2e-tested.
+//!   decision skips the breakpoint search (a segment-pinned
+//!   `DecisionContext`) while remaining bit-for-bit equal to the
+//!   per-request path — property- and e2e-tested.
 //!
 //! Knobs: [`CoordinatorConfig::gamma_coherent`] toggles the bucketing
 //! (off = one lane, the pre-quantization behavior);
 //! [`CoordinatorConfig::batch_max`] bounds batch size;
 //! [`CoordinatorConfig::jitter`] drives both the admission-time env
-//! sampling and the channel simulator. Per-lane queue stats are exposed
-//! via [`Batcher::bucket_stats`], per-segment serving counts via
-//! [`MetricsSnapshot::segment_counts`] and
-//! [`MetricsSnapshot::lane_batches`].
+//! sampling and the channel simulator;
+//! [`CoordinatorConfig::shed_infeasible`] toggles SLO-aware admission
+//! shedding (requests carrying an [`InferenceRequest::deadline_s`] that
+//! the delay-envelope lower bound proves unmeetable are dropped before
+//! any compute, counted in [`MetricsSnapshot::shed_infeasible`]).
+//! Per-lane queue stats are exposed via [`Batcher::bucket_stats`],
+//! per-segment serving counts via [`MetricsSnapshot::segment_counts`]
+//! and [`MetricsSnapshot::lane_batches`].
 
 pub mod batcher;
 pub mod executor;

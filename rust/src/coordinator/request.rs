@@ -20,6 +20,12 @@ pub struct InferenceRequest {
     /// path: requests are grouped by the envelope segment containing their
     /// γ = P_Tx/B_e.
     pub env: Option<TransmitEnv>,
+    /// End-to-end inference deadline in seconds (`None` = best effort).
+    /// At admission the coordinator compares the delay-envelope lower
+    /// bound at the request's channel state against this deadline and
+    /// sheds provably infeasible requests before any compute is spent
+    /// (`MetricsSnapshot::shed_infeasible`).
+    pub deadline_s: Option<f64>,
 }
 
 /// Where each piece of the computation ran.

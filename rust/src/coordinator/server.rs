@@ -1,6 +1,10 @@
 //! The coordinator proper: request queue, worker pool, per-request
 //! partition decision and client→channel→cloud execution.
 //!
+//! Every decision routes through the [`PartitionPolicy`] trait
+//! ([`EnergyPolicy`] over an engine shared via [`PolicyRegistry`]) — the
+//! coordinator never calls the legacy `decide_*` methods.
+//!
 //! ## γ-coherent admission
 //!
 //! With [`CoordinatorConfig::gamma_coherent`] on (the default), the front
@@ -8,11 +12,22 @@
 //! containing its `γ = P_Tx/B_e` and queues it in that segment's lane
 //! ([`Batcher::with_buckets`]); workers then drain single-segment batches,
 //! so every request in a batch shares the same envelope winner even when
-//! per-request jitter spreads their γ values ([`Partitioner::decide_in_segment`]
-//! skips the breakpoint search but re-evaluates exactly, so the chosen
-//! splits match per-request `decide_split` bit-for-bit). Requests in
-//! degenerate channel states (B_e ≤ 0, γ ≤ 0) fall into a dedicated
-//! overflow lane and take the guarded scan path.
+//! per-request jitter spreads their γ values (a segment-pinned
+//! [`DecisionContext`] skips the breakpoint search but re-evaluates
+//! exactly, so the chosen splits match the per-request path bit-for-bit).
+//! Requests in degenerate channel states (B_e ≤ 0, γ ≤ 0) fall into a
+//! dedicated overflow lane and take the guarded scan path.
+//!
+//! ## SLO-aware shedding
+//!
+//! A request carrying a deadline ([`InferenceRequest::deadline_s`]) is
+//! checked at admission against the delay-envelope lower bound at its
+//! admission-time channel state
+//! ([`SloPartitioner::min_delay_lower_bound_s`]): when even the fastest
+//! conceivable candidate provably misses the deadline, the request is
+//! shed before any probe/compute is spent and counted in
+//! [`crate::coordinator::MetricsSnapshot::shed_infeasible`]. Toggle with
+//! [`CoordinatorConfig::shed_infeasible`].
 
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
@@ -28,7 +43,10 @@ use crate::cnnergy::CnnErgy;
 use crate::compress::jpeg::compress_rgb;
 use crate::compress::rlc;
 use crate::config::Config;
-use crate::partition::{Partitioner, SplitChoice, FISC_OUTPUT_BITS};
+use crate::partition::{
+    Decision, DecisionContext, DelayModel, EnergyPolicy, PartitionPolicy, Partitioner,
+    PolicyRegistry, SloPartitioner, FISC_OUTPUT_BITS,
+};
 use crate::util::rng::Rng;
 
 use super::executor::{DeviceExecutor, ExecutorHandle};
@@ -59,6 +77,10 @@ pub struct CoordinatorConfig {
     /// request's γ, so batches stay envelope-coherent under per-request
     /// channel jitter (module docs). Off = one FIFO lane, as before.
     pub gamma_coherent: bool,
+    /// Shed requests whose deadline is provably infeasible at their
+    /// admission-time channel state (module docs). Only requests that
+    /// carry a deadline are ever shed.
+    pub shed_infeasible: bool,
     pub seed: u64,
 }
 
@@ -77,6 +99,7 @@ impl CoordinatorConfig {
             warm_splits: Vec::new(),
             batch_max: 8,
             gamma_coherent: true,
+            shed_infeasible: true,
             seed: cfg.seed,
         }
     }
@@ -85,7 +108,13 @@ impl CoordinatorConfig {
 /// The serving coordinator (see module docs of [`crate::coordinator`]).
 pub struct Coordinator {
     config: CoordinatorConfig,
-    partitioner: Partitioner,
+    /// Shared decision engine (from the registry entry for this
+    /// (network, device P_Tx class)).
+    partitioner: Arc<Partitioner>,
+    /// The decision surface every request routes through.
+    policy: EnergyPolicy,
+    /// Delay-envelope machinery for admission-time SLO shedding.
+    slo: SloPartitioner,
     net: Network,
     client: DeviceExecutor,
     cloud: DeviceExecutor,
@@ -94,12 +123,26 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Build the serving stack: analytic models + executor threads.
+    /// Build the serving stack with a private policy registry.
     pub fn new(config: CoordinatorConfig) -> Result<Self> {
+        Self::with_registry(config, &PolicyRegistry::new())
+    }
+
+    /// Build the serving stack: analytic models + executor threads, with
+    /// the decision engine taken from (or built into) `registry` — a
+    /// fleet coordinator passes one shared registry so every connection
+    /// of the same (network, device P_Tx class) reuses one envelope
+    /// table.
+    pub fn with_registry(config: CoordinatorConfig, registry: &PolicyRegistry) -> Result<Self> {
         let net = Network::by_name(&config.network)
             .ok_or_else(|| anyhow!("unknown network '{}'", config.network))?;
         let model = CnnErgy::inference_8bit();
-        let partitioner = Partitioner::new(&net, &model);
+        let entry = registry
+            .get_or_build(&config.network, &config.env)
+            .context("building policy registry entry")?;
+        let partitioner = entry.partitioner().clone();
+        let policy = entry.policy();
+        let slo = SloPartitioner::from_shared(partitioner.clone(), DelayModel::new(&net, &model));
         let client = DeviceExecutor::spawn(
             "client",
             config.artifacts_dir.clone(),
@@ -128,6 +171,8 @@ impl Coordinator {
         Ok(Coordinator {
             config,
             partitioner,
+            policy,
+            slo,
             net,
             client,
             cloud,
@@ -138,6 +183,11 @@ impl Coordinator {
 
     pub fn partitioner(&self) -> &Partitioner {
         &self.partitioner
+    }
+
+    /// The decision policy every request routes through.
+    pub fn policy(&self) -> &EnergyPolicy {
+        &self.policy
     }
 
     pub fn network(&self) -> &Network {
@@ -221,15 +271,17 @@ impl Coordinator {
         //    Sparsity-In and the *measured* compressed size.
         let probe = compress_rgb(&req.pixels, req.width, req.height, self.config.jpeg_quality);
 
-        // 2. Runtime partition decision: the O(1) envelope path, with the
-        //    input layer's D_RLC taken from the measured probe size.
+        // 2. Runtime partition decision: the policy's O(1) envelope path,
+        //    with the input layer's D_RLC taken from the measured probe
+        //    size.
         let env = req.env.unwrap_or(self.config.env);
-        let choice = self.partitioner.decide_split(probe.bits as f64, &env);
+        let ctx = DecisionContext::from_input_bits(probe.bits as f64, env);
+        let decision = self.policy.decide(&ctx);
         let t_decide = t_start.elapsed();
 
         self.execute(
             req,
-            &choice,
+            &decision,
             probe.bits,
             probe.sparsity,
             self.gamma_segment(&env),
@@ -257,9 +309,9 @@ impl Coordinator {
             .collect();
         let input_bits: Vec<f64> = probes.iter().map(|p| p.bits as f64).collect();
         let t_decide_start = Instant::now();
-        let mut choices = Vec::with_capacity(reqs.len());
-        self.partitioner
-            .decide_batch(&input_bits, &self.config.env, &mut choices);
+        let mut decisions = Vec::with_capacity(reqs.len());
+        let ctx = DecisionContext::from_input_bits(0.0, self.config.env);
+        self.policy.decide_batch(&input_bits, &ctx, &mut decisions);
         // The whole batch shares one decision pass; attribute the per-batch
         // cost evenly so per-request accounting stays meaningful.
         let t_decide = t_decide_start.elapsed() / reqs.len().max(1) as u32;
@@ -267,11 +319,11 @@ impl Coordinator {
 
         reqs.iter()
             .zip(&probes)
-            .zip(&choices)
-            .map(|((req, probe), choice)| {
+            .zip(&decisions)
+            .map(|((req, probe), decision)| {
                 self.execute(
                     req,
-                    choice,
+                    decision,
                     probe.bits,
                     probe.sparsity,
                     segment,
@@ -303,17 +355,16 @@ impl Coordinator {
                 let probe =
                     compress_rgb(&req.pixels, req.width, req.height, self.config.jpeg_quality);
                 let segment = self.gamma_segment(env);
-                let choice = match segment {
-                    Some(seg) if self.config.gamma_coherent => {
-                        debug_assert_eq!(seg, bucket, "request served outside its γ lane");
-                        self.partitioner.decide_in_segment(seg, probe.bits as f64, env)
-                    }
-                    _ => self.partitioner.decide_split(probe.bits as f64, env),
-                };
+                let mut ctx = DecisionContext::from_input_bits(probe.bits as f64, *env);
+                if let (true, Some(seg)) = (self.config.gamma_coherent, segment) {
+                    debug_assert_eq!(seg, bucket, "request served outside its γ lane");
+                    ctx = ctx.with_segment(seg);
+                }
+                let decision = self.policy.decide(&ctx);
                 let t_decide = t_decide_start.elapsed();
                 self.execute(
                     req,
-                    &choice,
+                    &decision,
                     probe.bits,
                     probe.sparsity,
                     segment,
@@ -331,7 +382,7 @@ impl Coordinator {
     fn execute(
         &self,
         req: &InferenceRequest,
-        choice: &SplitChoice,
+        decision: &Decision,
         probe_bits: u64,
         sparsity_in: f64,
         gamma_segment: Option<usize>,
@@ -341,7 +392,7 @@ impl Coordinator {
         cloud: &ExecutorHandle,
     ) -> Result<InferenceResponse> {
         let n_layers = self.partitioner.num_layers();
-        let split = self.config.force_split.unwrap_or(choice.l_opt);
+        let split = self.config.force_split.unwrap_or(decision.l_opt);
 
         // 3. Client prefix execution (layers 1..=split) on the device.
         let t_client_start = Instant::now();
@@ -417,10 +468,13 @@ impl Coordinator {
     /// [`Self::metrics`]. Per-request channel states are assigned at
     /// admission (deterministically, from the configured seed) and each
     /// request is queued in its γ-segment's lane; workers drain
-    /// single-segment batches.
+    /// single-segment batches. Requests whose deadline is provably
+    /// infeasible at their admission-time channel state are shed (module
+    /// docs) and omitted from the returned responses.
     pub fn serve(&self, requests: Vec<InferenceRequest>) -> Result<Vec<InferenceResponse>> {
         let n = requests.len();
         let id_base = requests.first().map(|r| r.id).unwrap_or(0);
+        let mut shed = 0usize;
         // Admission queue sized to keep a bounded backlog ahead of the
         // single client device (backpressure on the producer side).
         let batcher: Arc<Batcher<(InferenceRequest, TransmitEnv)>> = Arc::new(
@@ -456,11 +510,20 @@ impl Coordinator {
                 }));
             }
             // Producer: assign each request its admission-time channel
-            // state, route it to its γ lane, then close so workers drain
-            // and exit.
+            // state, shed provably infeasible deadlines, route the rest to
+            // their γ lanes, then close so workers drain and exit.
             let mut jitter_rng = Rng::new(self.config.seed ^ 0xADB5_17E2_D188_FE01);
             for req in requests {
                 let env = self.admission_env(&req, &mut jitter_rng);
+                if self.config.shed_infeasible {
+                    if let Some(deadline) = req.deadline_s {
+                        if self.slo.min_delay_lower_bound_s(&env) > deadline {
+                            self.metrics.record_shed();
+                            shed += 1;
+                            continue;
+                        }
+                    }
+                }
                 let bucket = self.bucket_for(&env);
                 if batcher.submit_to(bucket, (req, env), None) != Submit::Accepted {
                     batcher.close();
@@ -479,8 +542,14 @@ impl Coordinator {
             .into_inner()
             .unwrap()
             .into_iter()
-            .map(|r| r.ok_or_else(|| anyhow!("missing response")))
-            .collect::<Result<_>>()?;
+            .flatten()
+            .collect();
+        if collected.len() + shed != n {
+            return Err(anyhow!(
+                "missing responses: served {} + shed {shed} of {n}",
+                collected.len()
+            ));
+        }
         Ok(collected)
     }
 }

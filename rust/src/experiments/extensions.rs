@@ -17,7 +17,9 @@ use crate::cnnergy::CnnErgy;
 use crate::compress::jpeg::compress_rgb;
 use crate::corpus::Corpus;
 use crate::partition::algorithm2::paper_partitioner;
-use crate::partition::{DelayModel, SloPartitioner};
+use crate::partition::{
+    DecisionContext, DelayModel, PartitionPolicy, SloPartitioner, SloPolicy,
+};
 use crate::util::stats::mean;
 
 use super::csvout::write_csv;
@@ -55,32 +57,35 @@ pub fn run_qsweep(out_dir: &Path) -> Result<String> {
 pub fn run_slo(out_dir: &Path) -> Result<String> {
     let net = alexnet();
     let model = CnnErgy::inference_8bit();
-    let slo_p = SloPartitioner::new(paper_partitioner(&net), DelayModel::new(&net, &model));
+    let policy = SloPolicy::new(SloPartitioner::new(
+        paper_partitioner(&net),
+        DelayModel::new(&net, &model),
+    ));
     let env = TransmitEnv::with_effective_rate(80e6, 0.78);
+    let ctx = DecisionContext::from_sparsity(policy.partitioner(), MEDIAN_SPARSITY_IN, env);
 
     let mut rows = Vec::new();
     let mut report = String::from(
         "latency-constrained partitioning (AlexNet @ 80 Mbps / 0.78 W, Q2):\nSLO_ms   split   t_delay_ms   E_cost_mJ   feasible\n",
     );
     for slo_ms in [1.0f64, 5.0, 10.0, 15.0, 20.0, 30.0, 50.0, 100.0, 1000.0] {
-        let d = slo_p.decide_with_slo(MEDIAN_SPARSITY_IN, &env, slo_ms / 1e3);
-        let name = if d.choice.l_opt == 0 {
+        let d = policy.decide(&ctx.with_slo(slo_ms / 1e3));
+        let name = if d.l_opt == 0 {
             "In".to_string()
-        } else if d.choice.l_opt == net.num_layers() {
+        } else if d.l_opt == net.num_layers() {
             "out".to_string()
         } else {
-            net.layers[d.choice.l_opt - 1].name.to_string()
+            net.layers[d.l_opt - 1].name.to_string()
         };
+        let t_delay_ms = d.t_delay_s.unwrap_or(f64::NAN) * 1e3;
         rows.push(format!(
-            "{slo_ms},{name},{:.3},{:.4},{}",
-            d.t_delay_s * 1e3,
-            d.choice.cost_j * 1e3,
+            "{slo_ms},{name},{t_delay_ms:.3},{:.4},{}",
+            d.cost_j * 1e3,
             d.feasible
         ));
         report.push_str(&format!(
-            "{slo_ms:>6.0} {name:>7} {:>12.2} {:>11.4} {:>10}\n",
-            d.t_delay_s * 1e3,
-            d.choice.cost_j * 1e3,
+            "{slo_ms:>6.0} {name:>7} {t_delay_ms:>12.2} {:>11.4} {:>10}\n",
+            d.cost_j * 1e3,
             d.feasible
         ));
     }

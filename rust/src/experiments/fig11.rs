@@ -10,6 +10,7 @@ use anyhow::Result;
 use crate::channel::TransmitEnv;
 use crate::cnn::{alexnet, squeezenet_v11, Network};
 use crate::partition::algorithm2::paper_partitioner;
+use crate::partition::{DecisionContext, EnergyPolicy, PartitionPolicy};
 
 use super::csvout::write_csv;
 
@@ -18,8 +19,9 @@ pub const MEDIAN_SPARSITY_IN: f64 = 0.6080;
 
 fn panel(net: &Network, out_dir: &Path, file: &str) -> Result<String> {
     let env = TransmitEnv::with_effective_rate(100.0e6, 1.14);
-    let p = paper_partitioner(net);
-    let d = p.decide(MEDIAN_SPARSITY_IN, &env);
+    let policy = EnergyPolicy::new(paper_partitioner(net));
+    let ctx = DecisionContext::from_sparsity(policy.partitioner(), MEDIAN_SPARSITY_IN, env);
+    let d = policy.decide_detailed(&ctx);
 
     let mut rows = Vec::new();
     let mut report = format!("{} @ 100 Mbps, 1.14 W:\nlayer  E_cost_mJ\n", net.name);
@@ -49,6 +51,7 @@ pub fn run(out_dir: &Path) -> Result<String> {
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::channel::TransmitEnv;

@@ -13,6 +13,7 @@ use anyhow::Result;
 use crate::channel::TransmitEnv;
 use crate::cnn::alexnet;
 use crate::partition::algorithm2::paper_partitioner;
+use crate::partition::{DecisionContext, EnergyPolicy, PartitionPolicy, SparsityEnvelopePolicy};
 
 use super::csvout::write_csv;
 
@@ -35,7 +36,7 @@ pub fn be_sweep_mbps() -> Vec<f64> {
 
 pub fn run(out_dir: &Path) -> Result<String> {
     let net = alexnet();
-    let p = paper_partitioner(&net);
+    let policy = EnergyPolicy::new(paper_partitioner(&net));
     let mut rows = Vec::new();
     let mut report =
         String::from("AlexNet savings at optimal partition (columns: savings_vs_FCC% / savings_vs_FISC%)\n");
@@ -49,7 +50,8 @@ pub fn run(out_dir: &Path) -> Result<String> {
                 let env = TransmitEnv::with_effective_rate(be * 1e6, p_tx);
                 // Envelope fast path: the grid sweep needs only the argmin
                 // and the two savings references, not the cost vector.
-                let d = p.decide_fast(sp, &env);
+                let ctx = DecisionContext::from_sparsity(policy.partitioner(), sp, env);
+                let d = policy.decide(&ctx);
                 let fcc = d.savings_vs_fcc() * 100.0;
                 let fisc = d.savings_vs_fisc() * 100.0;
                 rows.push(format!("{qname},{be},{p_tx},{fcc:.2},{fisc:.2},{}", d.l_opt));
@@ -66,10 +68,40 @@ pub fn run(out_dir: &Path) -> Result<String> {
         "quartile,be_mbps,p_tx_w,savings_vs_fcc_pct,savings_vs_fisc_pct,l_opt",
         &rows,
     )?;
+
+    // Closed-form switchover thresholds (the 0%-savings-vs-FCC frontier):
+    // at each (B_e, P_Tx) the sparsity envelope gives the Sparsity-In
+    // above which FCC is optimal, without sweeping the probe axis.
+    let mut xrows = Vec::new();
+    report.push_str("\nFCC switchover Sparsity-In s* (FCC optimal for Sparsity-In >= s*):\n");
+    report.push_str("  Be_Mbps   P_Tx=0.78W   P_Tx=1.28W\n");
+    for be in [20.0, 40.0, 80.0, 160.0, 300.0] {
+        let mut cols = Vec::new();
+        for p_tx in P_TX_SWEEP {
+            let env = TransmitEnv::with_effective_rate(be * 1e6, p_tx);
+            let sparsity_env = SparsityEnvelopePolicy::new(policy.partitioner().clone(), env);
+            let s_star = sparsity_env.crossover_sparsity().unwrap_or(f64::NAN);
+            xrows.push(format!("{be},{p_tx},{s_star:.4}"));
+            cols.push(if (0.0..=1.0).contains(&s_star) {
+                format!("{:>9.1}%", s_star * 100.0)
+            } else {
+                // Outside the probe range: FCC never/always optimal here.
+                format!("{:>10}", if s_star < 0.0 { "always" } else { "never" })
+            });
+        }
+        report.push_str(&format!("  {be:>7.0} {} {}\n", cols[0], cols[1]));
+    }
+    write_csv(
+        out_dir,
+        "fig13_fcc_crossovers",
+        "be_mbps,p_tx_w,crossover_sparsity",
+        &xrows,
+    )?;
     Ok(report)
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::partition::FCC;

@@ -11,7 +11,9 @@ use crate::channel::TransmitEnv;
 use crate::cnn::alexnet;
 use crate::cnnergy::CnnErgy;
 use crate::partition::algorithm2::paper_partitioner;
-use crate::partition::{DelayModel, SloPartitioner};
+use crate::partition::{
+    DecisionContext, DelayModel, EnergyPolicy, PartitionPolicy, SloPartitioner, SloPolicy,
+};
 
 use super::csvout::write_csv;
 use super::fig11::MEDIAN_SPARSITY_IN;
@@ -26,7 +28,8 @@ pub fn run_a(out_dir: &Path) -> Result<String> {
     let model = CnnErgy::inference_8bit();
     let p = paper_partitioner(&net);
     let dm = DelayModel::new(&net, &model);
-    let slo_p = SloPartitioner::new(p.clone(), dm.clone());
+    let energy = EnergyPolicy::new(p.clone());
+    let slo_policy = SloPolicy::new(SloPartitioner::new(p.clone(), dm.clone()));
 
     let mut rows = Vec::new();
     let mut report = String::from(
@@ -35,19 +38,20 @@ pub fn run_a(out_dir: &Path) -> Result<String> {
     let mut be = 10.0;
     while be <= 300.0 {
         let env = TransmitEnv::with_effective_rate(be * 1e6, 0.78);
-        let d = p.decide(MEDIAN_SPARSITY_IN, &env);
+        let ctx = DecisionContext::from_sparsity(&p, MEDIAN_SPARSITY_IN, env);
+        let d = energy.decide(&ctx);
         let t_opt = dm.t_delay_s(d.l_opt, d.transmit_bits, &env) * 1e3;
         let t_fcc = dm.fcc_delay_s(p.transmit_bits(0, MEDIAN_SPARSITY_IN), &env) * 1e3;
         let t_fisc = dm.fisc_delay_s(&env) * 1e3;
         // The latency-constrained decision over the same sweep: the
         // envelope-backed SLO path (O(log L)), not the delay scan.
-        let slo = slo_p.decide_with_slo(MEDIAN_SPARSITY_IN, &env, FIG14A_SLO_S);
+        let slo = slo_policy.decide(&ctx.with_slo(FIG14A_SLO_S));
         rows.push(format!(
             "{be},{t_opt:.3},{t_fcc:.3},{t_fisc:.3},{},{},{},{:.3}",
             d.l_opt,
-            slo.choice.l_opt,
+            slo.l_opt,
             slo.feasible,
-            slo.t_delay_s * 1e3
+            slo.t_delay_s.unwrap_or(f64::NAN) * 1e3
         ));
         if (be as u64) % 20 == 0 || be <= 20.0 {
             report.push_str(&format!(
@@ -59,7 +63,7 @@ pub fn run_a(out_dir: &Path) -> Result<String> {
                 } else {
                     net.layers[d.l_opt - 1].name.to_string()
                 },
-                slo.choice.l_opt,
+                slo.l_opt,
                 slo.feasible
             ));
         }
@@ -76,7 +80,7 @@ pub fn run_a(out_dir: &Path) -> Result<String> {
 
 pub fn run_b(out_dir: &Path) -> Result<String> {
     let net = alexnet();
-    let p = paper_partitioner(&net);
+    let policy = EnergyPolicy::new(paper_partitioner(&net));
     let pools: Vec<(usize, &str)> = ["P1", "P2", "P3"]
         .iter()
         .map(|n| (net.layer_index(n).unwrap() + 1, *n))
@@ -91,7 +95,8 @@ pub fn run_b(out_dir: &Path) -> Result<String> {
     let mut be = 5.0;
     while be <= 250.0 {
         let env = TransmitEnv::with_effective_rate(be * 1e6, 0.78);
-        let d = p.decide(MEDIAN_SPARSITY_IN, &env);
+        let ctx = DecisionContext::from_sparsity(policy.partitioner(), MEDIAN_SPARSITY_IN, env);
+        let d = policy.decide_detailed(&ctx);
         let costs: Vec<f64> = pools
             .iter()
             .map(|&(split, _)| d.costs_j[split] * 1e3)
@@ -150,6 +155,7 @@ pub fn run_c(out_dir: &Path) -> Result<String> {
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
 

@@ -15,6 +15,7 @@ use anyhow::Result;
 use crate::channel::TransmitEnv;
 use crate::cnn::{alexnet, googlenet, squeezenet_v11, Network};
 use crate::partition::algorithm2::paper_partitioner;
+use crate::partition::{DecisionContext, EnergyPolicy, PartitionPolicy};
 use crate::util::stats::quantile;
 
 use super::csvout::write_csv;
@@ -26,7 +27,7 @@ pub fn quartile_savings(
     p_tx: f64,
     samples: &[f64],
 ) -> ([f64; 4], f64) {
-    let p = paper_partitioner(net);
+    let policy = EnergyPolicy::new(paper_partitioner(net));
     let env = TransmitEnv::with_effective_rate(80.0e6, p_tx);
     let (q1, q2, q3) = (
         quantile(samples, 0.25),
@@ -38,7 +39,13 @@ pub fn quartile_savings(
     let mut fisc_saving = 0.0;
     // One batched decision for the whole corpus: the channel state is
     // shared, so the envelope candidates are evaluated exactly once.
-    let decisions = p.decide_batch_sparsity(samples, &env);
+    let bits: Vec<f64> = samples
+        .iter()
+        .map(|&sp| policy.partitioner().input_bits_from_sparsity(sp))
+        .collect();
+    let ctx = DecisionContext::from_input_bits(0.0, env);
+    let mut decisions = Vec::with_capacity(bits.len());
+    policy.decide_batch(&bits, &ctx, &mut decisions);
     for (&sp, d) in samples.iter().zip(&decisions) {
         let band = if sp < q1 {
             0

@@ -19,21 +19,39 @@
 //!
 //! ## The runtime decision engine
 //!
-//! Two precomputation layers make the per-request work effectively O(1):
+//! The decision surface is one trait: [`partition::PartitionPolicy`].
+//! Build a [`partition::DecisionContext`] (channel state + probed input
+//! volume, optionally a latency SLO and a precomputed γ-segment), call
+//! `decide`, get a unified [`partition::Decision`]. Three policies cover
+//! the paper's objectives — [`partition::EnergyPolicy`] (unconstrained,
+//! the serving default), [`partition::SloPolicy`] (latency-SLO
+//! constrained) and [`partition::SparsityEnvelopePolicy`] (probe-side
+//! envelope with closed-form Fig.-13 crossovers) — all bit-for-bit equal
+//! to the reference O(|L|) scan (property-tested; the historical
+//! `decide_*` methods survive as deprecated wrappers, see the
+//! [`partition`] module docs for the migration table).
+//!
+//! Three precomputation layers make the per-request work effectively O(1):
 //!
 //! * **Lower-envelope partitioning** ([`partition::envelope`]): every fixed
 //!   split's cost `E[l] + γ·bits[l]` is a line in the channel parameter
 //!   `γ = P_Tx / B_e`, so the [`Partitioner`] precomputes the convex lower
-//!   envelope and a sorted γ-breakpoint table at build time. A decision
-//!   ([`Partitioner::decide_split`]) is then a binary search over 2–5
-//!   segments plus one comparison against the runtime FCC line;
-//!   [`Partitioner::decide_batch`] amortizes even that across a request
-//!   batch or an experiment grid. The envelope paths are property-tested to
-//!   match the reference linear scan ([`Partitioner::decide`]) bit-for-bit,
-//!   ties included. The same machinery covers the latency-SLO-constrained
-//!   decision ([`partition::SloPartitioner`]: delay is a line in
-//!   `β = 1/B_e`) and the serving front door's channel-state quantization
-//!   (γ-bucketed admission, [`coordinator`] module docs).
+//!   envelope and a sorted γ-breakpoint table at build time. A decision is
+//!   then a binary search over 2–5 segments plus one comparison against
+//!   the runtime FCC line; `EnergyPolicy::decide_batch` amortizes even
+//!   that across a request batch or an experiment grid. The same
+//!   machinery covers the SLO-constrained decision
+//!   ([`partition::SloPartitioner`]: delay is a line in `β = 1/B_e`), the
+//!   probe axis ([`partition::SparsityEnvelopePolicy`]: FCC cost is
+//!   linear in `1 − Sparsity-In` at fixed γ) and the serving front door's
+//!   channel-state quantization (γ-bucketed admission plus delay-bound
+//!   SLO shedding, [`coordinator`] module docs).
+//! * **Per-device envelope tables** ([`partition::registry`]): the
+//!   decision tables are extracted into a compact JSON-round-trippable
+//!   [`partition::EnvelopeTable`] keyed by (network, device P_Tx class)
+//!   — Table IV's fleet — and shared across connections through
+//!   [`partition::PolicyRegistry`]; the round trip is bit-exact, so a
+//!   shipped table makes fully client-side decisions.
 //! * **Schedule memoization** ([`cnnergy::ScheduleCache`]): the §IV-C
 //!   mapper's result depends only on (conv shape, accelerator geometry), so
 //!   a per-thread cache ([`cnnergy::schedule_cached`]) eliminates repeated
@@ -57,4 +75,7 @@ pub mod util;
 
 pub use cnn::{ConvShape, Layer, LayerKind, Network};
 pub use cnnergy::{CnnErgy, EnergyBreakdown, HwConfig, ScheduleCache, TechParams};
-pub use partition::{PartitionDecision, Partitioner, SplitChoice};
+pub use partition::{
+    Decision, DecisionContext, EnergyPolicy, EnvelopeTable, PartitionDecision, PartitionPolicy,
+    Partitioner, PolicyRegistry, SloPolicy, SparsityEnvelopePolicy, SplitChoice,
+};

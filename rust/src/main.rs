@@ -23,7 +23,7 @@ use neupart::coordinator::InferenceRequest;
 use neupart::coordinator::{Coordinator, CoordinatorConfig};
 use neupart::corpus::Corpus;
 use neupart::experiments;
-use neupart::partition::Partitioner;
+use neupart::partition::{DecisionContext, PartitionPolicy, PolicyRegistry};
 
 fn main() {
     if let Err(e) = run() {
@@ -200,9 +200,14 @@ fn cmd_sparsity(cfg: &Config) -> Result<()> {
 
 fn cmd_partition(cfg: &Config, sparsity_in: f64) -> Result<()> {
     let net = net_for(cfg)?;
-    let p = Partitioner::new(&net, &CnnErgy::inference_8bit());
     let env = cfg.transmit_env();
-    let d = p.decide(sparsity_in, &env);
+    // The CLI routes through the same registry + policy surface the
+    // serving coordinator uses.
+    let registry = PolicyRegistry::new();
+    let entry = registry.get_or_build(&cfg.network, &env)?;
+    let policy = entry.policy();
+    let ctx = DecisionContext::from_sparsity(entry.partitioner(), sparsity_in, env);
+    let d = policy.decide_detailed(&ctx);
     println!(
         "{} @ B={} Mbps (Be={:.1}), P_Tx={} W, Sparsity-In={:.1}%",
         net.name,
@@ -249,6 +254,7 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
             width: img.w,
             height: img.h,
             env: None,
+            deadline_s: None,
         })
         .collect();
 

@@ -42,6 +42,8 @@
 //! same guard `Partitioner::decide` received — instead of panicking on
 //! non-finite delays.
 
+use std::sync::Arc;
+
 use crate::channel::TransmitEnv;
 
 use super::algorithm2::{PartitionDecision, Partitioner, SplitChoice, FCC};
@@ -50,8 +52,8 @@ use super::envelope::{CostLine, Envelope};
 use super::FISC_OUTPUT_BITS;
 
 /// Outcome of a constrained decision (reporting form, carries the full
-/// per-candidate delay vector — use [`SloPartitioner::decide_with_slo`]
-/// on the serving path).
+/// per-candidate delay vector — use
+/// [`crate::partition::policy::SloPolicy`] on the serving path).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ConstrainedDecision {
     pub inner: PartitionDecision,
@@ -82,7 +84,9 @@ pub struct ConstrainedChoice {
 /// the precomputed delay envelope and constrained frontier (module docs).
 #[derive(Clone, Debug)]
 pub struct SloPartitioner {
-    partitioner: Partitioner,
+    /// Shared decision engine (`Arc` so registry/fleet setups reuse one
+    /// built engine across the energy and SLO surfaces).
+    partitioner: Arc<Partitioner>,
     delay: DelayModel,
     /// Lower envelope of the fixed splits' delay lines over `β = 1/B_e`.
     delay_env: Envelope,
@@ -97,6 +101,12 @@ impl SloPartitioner {
     /// Bind a partitioner to a delay model and run the offline
     /// precomputation. Both must describe the same network.
     pub fn new(partitioner: Partitioner, delay: DelayModel) -> Self {
+        Self::from_shared(Arc::new(partitioner), delay)
+    }
+
+    /// [`SloPartitioner::new`] over an already-shared engine (the
+    /// registry/fleet path — no deep copy of the decision tables).
+    pub fn from_shared(partitioner: Arc<Partitioner>, delay: DelayModel) -> Self {
         assert_eq!(
             partitioner.num_layers(),
             delay.num_layers(),
@@ -164,19 +174,46 @@ impl SloPartitioner {
 
     /// Energy-optimal split under a latency SLO, from the runtime-probed
     /// Sparsity-In (eq. 29).
+    #[deprecated(
+        note = "route decisions through `partition::policy` (`SloPolicy` + \
+                `DecisionContext::from_sparsity(..).with_slo(..)`); see the \
+                `partition` module docs migration table"
+    )]
     pub fn decide_with_slo(
         &self,
         sparsity_in: f64,
         env: &TransmitEnv,
         slo_s: f64,
     ) -> ConstrainedChoice {
-        self.decide_with_slo_bits(self.partitioner.transmit_bits(FCC, sparsity_in), env, slo_s)
+        self.choose_with_slo(
+            self.partitioner.input_bits_from_sparsity(sparsity_in),
+            env,
+            slo_s,
+        )
     }
 
     /// Energy-optimal split under a latency SLO with the input layer's
-    /// `D_RLC` supplied directly (the serving coordinator passes the
-    /// measured JPEG probe size).
+    /// `D_RLC` supplied directly.
+    #[deprecated(
+        note = "route decisions through `partition::policy` (`SloPolicy` + \
+                `DecisionContext::from_input_bits(..).with_slo(..)`); see the \
+                `partition` module docs migration table"
+    )]
     pub fn decide_with_slo_bits(
+        &self,
+        input_bits: f64,
+        env: &TransmitEnv,
+        slo_s: f64,
+    ) -> ConstrainedChoice {
+        self.choose_with_slo(input_bits, env, slo_s)
+    }
+
+    /// Constrained-decision core (module docs): unconstrained envelope
+    /// decision + one O(1) delay check when the SLO is loose, a frontier
+    /// walk when it binds, a delay-envelope lookup when infeasible. The
+    /// serving coordinator passes the measured JPEG probe size as
+    /// `input_bits`.
+    pub(crate) fn choose_with_slo(
         &self,
         input_bits: f64,
         env: &TransmitEnv,
@@ -188,7 +225,7 @@ impl SloPartitioner {
         if !(b_e > 0.0) {
             // Degenerate channel: transmission impossible, FISC is the only
             // executable policy and its delay is the client compute time.
-            let choice = p.decide_split(input_bits, env);
+            let choice = p.choose_split(input_bits, env);
             let t = self.delay.client_prefix_s(n);
             let feasible = t <= slo_s;
             return ConstrainedChoice {
@@ -206,7 +243,7 @@ impl SloPartitioner {
         // O(log L) decision plus one O(1) delay lookup. When it is the
         // global first-argmin and feasible, it is also the feasible-set
         // first-argmin, so this matches the scan exactly.
-        let unc = p.decide_split(input_bits, env);
+        let unc = p.choose_split(input_bits, env);
         let t_unc = self.delay.t_delay_s(unc.l_opt, unc.transmit_bits, env);
         if t_unc <= slo_s {
             return ConstrainedChoice {
@@ -324,6 +361,11 @@ impl SloPartitioner {
 
     /// Reporting form: full per-candidate delay vector via the reference
     /// scan. O(|L|) — figures and offline analysis only.
+    #[deprecated(
+        note = "route decisions through `partition::policy` \
+                (`SloPolicy::decide_detailed`); see the `partition` module docs \
+                migration table"
+    )]
     pub fn decide_with_slo_full(
         &self,
         sparsity_in: f64,
@@ -332,13 +374,32 @@ impl SloPartitioner {
     ) -> ConstrainedDecision {
         decide_with_slo_scan(&self.partitioner, &self.delay, sparsity_in, env, slo_s)
     }
+
+    /// A provable lower bound on the achievable `t_delay` at a channel
+    /// state, before any probe: the delay-envelope lookup over the fixed
+    /// splits folded (scan order, strict `<`) with the FCC delay at a
+    /// zero-byte upload. Every real candidate's delay is ≥ this bound, so
+    /// a deadline below it is infeasible *no matter what the probe
+    /// measures* — the admission-time shedding test the serving
+    /// coordinator runs ([`crate::coordinator`]). O(log L), no allocation.
+    pub fn min_delay_lower_bound_s(&self, env: &TransmitEnv) -> f64 {
+        let b_e = env.effective_bit_rate();
+        if !(b_e > 0.0) {
+            // Degenerate channel: FISC is the only executable candidate.
+            return self.delay.client_prefix_s(self.partitioner.num_layers());
+        }
+        let fcc_floor = self.delay.t_delay_s(FCC, 0.0, env);
+        let (_, t) = self.min_delay_split(fcc_floor, env, b_e);
+        t
+    }
 }
 
 /// Energy-optimal split under a latency SLO — the O(|L|) reference scan.
 ///
 /// This is the semantics the envelope path must reproduce bit-for-bit
-/// (property-tested); serving should use [`SloPartitioner::decide_with_slo`]
-/// instead. Degenerate channels resolve to FISC with finite costs, and the
+/// (property-tested); serving should use
+/// [`crate::partition::policy::SloPolicy`] instead. Degenerate channels
+/// resolve to FISC with finite costs, and the
 /// best-effort fallback is a NaN-tolerant strict-`<` fold (the old
 /// `partial_cmp(..).unwrap()` panicked on non-finite delays).
 pub fn decide_with_slo_scan(
@@ -354,7 +415,7 @@ pub fn decide_with_slo_scan(
     if !(b_e > 0.0) {
         // Degenerate channel (B_e ≤ 0 or NaN): every transmitting split is
         // impossible (+∞ delay), FISC runs locally in its compute time.
-        let unconstrained = partitioner.decide(sparsity_in, env); // FISC, finite
+        let unconstrained = partitioner.reference_decision(sparsity_in, env); // FISC, finite
         let mut delays_s = vec![f64::INFINITY; n + 1];
         let fisc_t = delay.client_prefix_s(n);
         delays_s[n] = fisc_t;
@@ -366,7 +427,7 @@ pub fn decide_with_slo_scan(
         };
     }
 
-    let unconstrained = partitioner.decide(sparsity_in, env);
+    let unconstrained = partitioner.reference_decision(sparsity_in, env);
     let bits_at = |split: usize| -> f64 {
         if split == n {
             FISC_OUTPUT_BITS
@@ -428,6 +489,10 @@ pub fn decide_with_slo_scan(
 }
 
 #[cfg(test)]
+// The legacy entry points stay under test on purpose: these are the
+// bit-for-bit proofs that the deprecated wrappers and the policy-trait
+// path agree.
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::cnn::alexnet;
@@ -569,6 +634,30 @@ mod tests {
             fast.choice.client_energy_j + fast.choice.transmit_energy_j,
             fast.choice.cost_j
         );
+    }
+
+    #[test]
+    fn min_delay_lower_bound_is_a_true_lower_bound() {
+        let slo_p = slo_setup();
+        for be in [0.5, 5.0, 80.0, 1000.0] {
+            let env = TransmitEnv::with_effective_rate(be * 1e6, 0.78);
+            let lb = slo_p.min_delay_lower_bound_s(&env);
+            let scan = decide_with_slo_scan(
+                slo_p.partitioner(),
+                slo_p.delay_model(),
+                0.608,
+                &env,
+                f64::INFINITY,
+            );
+            let min_actual = scan.delays_s.iter().cloned().fold(f64::INFINITY, f64::min);
+            assert!(lb <= min_actual, "be={be}: lb {lb} vs min {min_actual}");
+            assert!(lb > 0.0, "be={be}");
+        }
+        // Degenerate channel: the bound is the FISC compute time.
+        let dead = TransmitEnv::with_effective_rate(0.0, 0.78);
+        let lb = slo_p.min_delay_lower_bound_s(&dead);
+        let n = slo_p.partitioner().num_layers();
+        assert_eq!(lb, slo_p.delay_model().client_prefix_s(n));
     }
 
     #[test]

@@ -105,7 +105,7 @@ impl DelayModel {
         sparsity_in: f64,
         env: &TransmitEnv,
     ) -> f64 {
-        let d = partitioner.decide(sparsity_in, env);
+        let d = partitioner.choose_split(partitioner.input_bits_from_sparsity(sparsity_in), env);
         self.t_delay_s(d.l_opt, d.transmit_bits, env)
     }
 
@@ -122,6 +122,7 @@ impl DelayModel {
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::cnn::alexnet;

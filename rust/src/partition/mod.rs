@@ -1,17 +1,67 @@
-//! Runtime client/cloud partitioning (paper §VII, Algorithm 2), the
-//! lower-envelope decision engine that makes it O(1) per request — for the
-//! unconstrained energy objective and, via [`SloPartitioner`], the
-//! latency-SLO-constrained variant — and the inference-delay model
-//! (paper §VI-B, eq. 30).
+//! Runtime client/cloud partitioning (paper §VII, Algorithm 2).
+//!
+//! The decision surface is the [`PartitionPolicy`] trait ([`policy`]):
+//! build a [`DecisionContext`] (channel state + probed input volume,
+//! optionally an SLO and a precomputed γ-segment), call
+//! [`PartitionPolicy::decide`], get a unified [`Decision`]. Three
+//! implementations cover the paper's objectives:
+//!
+//! * [`EnergyPolicy`] — unconstrained energy optimum over the precomputed
+//!   γ-envelope ([`envelope`], O(log L) per decision, O(1)/request
+//!   batched);
+//! * [`SloPolicy`] — latency-SLO-constrained optimum ([`constrained`]:
+//!   delay envelope over `β = 1/B_e` + dominance-pruned frontier);
+//! * [`SparsityEnvelopePolicy`] — second 1-D envelope over
+//!   `1 − Sparsity-In` at a fixed channel state, with closed-form Fig.-13
+//!   crossover thresholds.
+//!
+//! Fleet scale: [`registry`] extracts the per-(network, device P_Tx
+//! class) decision tables into a JSON-round-trippable [`EnvelopeTable`]
+//! artifact and shares built engines across connections through
+//! [`PolicyRegistry`] — small enough to ship to clients for fully
+//! client-side decisions.
+//!
+//! ## Migrating off the deprecated `decide_*` methods
+//!
+//! The historical per-optimization entry points survive as thin
+//! deprecated wrappers, property-tested bit-for-bit against the trait
+//! path (`rust/tests/prop_invariants.rs`):
+//!
+//! | deprecated | replacement |
+//! |---|---|
+//! | `Partitioner::decide(sp, env)` | `EnergyPolicy::decide_detailed(&DecisionContext::from_sparsity(p, sp, env))` |
+//! | `Partitioner::decide_with_input_bits(bits, env)` | `EnergyPolicy::decide_detailed(&DecisionContext::from_input_bits(bits, env))` |
+//! | `Partitioner::decide_into(bits, env, &mut buf)` | `EnergyPolicy::decide_detailed` (the `Decision` owns its cost vector) |
+//! | `Partitioner::decide_split(bits, env)` | `EnergyPolicy::decide(&DecisionContext::from_input_bits(bits, env))` |
+//! | `Partitioner::decide_fast(sp, env)` | `EnergyPolicy::decide(&DecisionContext::from_sparsity(p, sp, env))` |
+//! | `Partitioner::decide_in_segment(seg, bits, env)` | `EnergyPolicy::decide(&ctx.with_segment(seg))` |
+//! | `Partitioner::decide_batch(bits, env, &mut out)` | `EnergyPolicy::decide_batch(bits, &ctx, &mut out)` |
+//! | `Partitioner::decide_batch_sparsity(sps, env)` | `EnergyPolicy::decide_batch` over `Partitioner::input_bits_from_sparsity` volumes |
+//! | `SloPartitioner::decide_with_slo{,_bits}(.., slo)` | `SloPolicy::decide(&ctx.with_slo(slo))` |
+//! | `SloPartitioner::decide_with_slo_full(.., slo)` | `SloPolicy::decide_detailed(&ctx.with_slo(slo))` |
+//!
+//! The unified [`Decision`] replaces the `PartitionDecision` /
+//! `SplitChoice` / `ConstrainedDecision` return-type triplet: the scalar
+//! accounting fields are always present, `t_delay_s`/`feasible`/`binding`
+//! are meaningful on SLO-aware policies, and the per-candidate vectors
+//! are filled by `decide_detailed` only.
 
 pub mod algorithm2;
 pub mod constrained;
 pub mod delay;
 pub mod envelope;
+pub mod policy;
+pub mod registry;
 
-pub use algorithm2::{PartitionDecision, Partitioner, SplitChoice, FCC, FISC_OUTPUT_BITS};
+pub use algorithm2::{
+    FixedWinner, PartitionDecision, Partitioner, SplitChoice, FCC, FISC_OUTPUT_BITS,
+};
 pub use constrained::{
     decide_with_slo_scan, ConstrainedChoice, ConstrainedDecision, SloPartitioner,
 };
 pub use delay::DelayModel;
 pub use envelope::{CostLine, Envelope};
+pub use policy::{
+    Decision, DecisionContext, EnergyPolicy, PartitionPolicy, SloPolicy, SparsityEnvelopePolicy,
+};
+pub use registry::{device_class, EnvelopeTable, PolicyRegistry, RegistryEntry};

@@ -1,0 +1,646 @@
+//! The unified runtime decision surface: one trait, one context, one
+//! decision type.
+//!
+//! The paper's runtime contribution (§VII, Alg. 2) is a single question —
+//! *"where do I split, given channel state?"* — but the engine grew one
+//! entry point per optimization (scan, envelope, segment-pinned, batched,
+//! SLO-constrained, …), each with its own return type. This module folds
+//! that surface back into a single abstraction, the shape JointDNN
+//! (Eshratifar et al., 2018) gives the same decision: a pluggable
+//! *partition policy*.
+//!
+//! * [`DecisionContext`] — everything a decision can depend on: the
+//!   channel state, the probed input volume (or the Sparsity-In it came
+//!   from), an optional latency SLO and an optional precomputed envelope
+//!   segment (γ-coherent admission).
+//! * [`Decision`] — the unified outcome, replacing the historical
+//!   `PartitionDecision` / `SplitChoice` / `ConstrainedDecision` triplet:
+//!   split + exact energy accounting always; delay/feasibility when the
+//!   policy models them; per-candidate vectors only from
+//!   [`PartitionPolicy::decide_detailed`].
+//! * [`PartitionPolicy`] — `fn decide(&self, ctx) -> Decision`, plus
+//!   batch and detailed hooks with default implementations.
+//!
+//! Implementations:
+//!
+//! * [`EnergyPolicy`] — the paper's unconstrained objective over the
+//!   precomputed γ-envelope ([`Partitioner`]): O(log L) per decision,
+//!   O(1)/request batched.
+//! * [`SloPolicy`] — the latency-SLO-constrained objective
+//!   ([`SloPartitioner`]): delay-envelope + constrained-frontier fast
+//!   path, bit-for-bit equal to the reference scan.
+//! * [`SparsityEnvelopePolicy`] — a second 1-D envelope over
+//!   `1 − Sparsity-In` at a *fixed* channel state: the FCC cost is linear
+//!   in `(1 − Sparsity-In)` while every fixed candidate is constant, so
+//!   the probe side collapses to a precomputed [`FixedWinner`] plus a
+//!   closed-form crossover threshold (the paper's Fig. 13 switchover
+//!   points, per device).
+//!
+//! Every policy re-evaluates its surviving candidates with the reference
+//! scan's exact floating-point expressions, so decisions are bit-for-bit
+//! identical to the O(|L|) scan — property-tested, ties and degenerate
+//! channels included.
+
+use std::sync::Arc;
+
+use crate::channel::TransmitEnv;
+
+use super::algorithm2::{FixedWinner, PartitionDecision, Partitioner, SplitChoice, FCC};
+use super::constrained::{decide_with_slo_scan, ConstrainedChoice, SloPartitioner};
+
+/// Everything one partition decision can depend on.
+///
+/// Construct with [`DecisionContext::from_input_bits`] (measured probe
+/// size) or [`DecisionContext::from_sparsity`] (eq.-29 estimate), then
+/// chain [`DecisionContext::with_slo`] / [`DecisionContext::with_segment`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DecisionContext {
+    /// The runtime communication environment.
+    pub env: TransmitEnv,
+    /// Input-layer transmit volume `D_RLC` in bits (the measured JPEG
+    /// probe size, or the eq.-29 estimate when built from a sparsity).
+    pub input_bits: f64,
+    /// The probed Sparsity-In this context was derived from, when known —
+    /// lets sparsity-keyed policies skip the volume derivation.
+    pub sparsity_in: Option<f64>,
+    /// Inference-latency SLO in seconds (`None` = unconstrained).
+    pub slo_s: Option<f64>,
+    /// Envelope segment containing this request's γ, when the admission
+    /// path already computed it (γ-coherent bucketing) — lets the decision
+    /// skip the breakpoint search.
+    pub segment: Option<usize>,
+}
+
+impl DecisionContext {
+    /// Context from a measured input volume (the serving coordinator's
+    /// probe path).
+    pub fn from_input_bits(input_bits: f64, env: TransmitEnv) -> Self {
+        DecisionContext {
+            env,
+            input_bits,
+            sparsity_in: None,
+            slo_s: None,
+            segment: None,
+        }
+    }
+
+    /// Context from a probed Sparsity-In (Alg. 2 line 2): the input volume
+    /// is derived once, through the partitioner's single shared helper.
+    pub fn from_sparsity(partitioner: &Partitioner, sparsity_in: f64, env: TransmitEnv) -> Self {
+        DecisionContext {
+            env,
+            input_bits: partitioner.input_bits_from_sparsity(sparsity_in),
+            sparsity_in: Some(sparsity_in),
+            slo_s: None,
+            segment: None,
+        }
+    }
+
+    /// Attach a latency SLO (seconds).
+    pub fn with_slo(mut self, slo_s: f64) -> Self {
+        self.slo_s = Some(slo_s);
+        self
+    }
+
+    /// Attach the precomputed envelope segment of this request's γ.
+    pub fn with_segment(mut self, segment: usize) -> Self {
+        self.segment = Some(segment);
+        self
+    }
+}
+
+/// The unified outcome of one partition decision.
+///
+/// The scalar fields are always filled and decompose exactly:
+/// `client_energy_j + transmit_energy_j == cost_j` (both taken from the
+/// same model expressions, never reconstructed by subtraction). The
+/// per-candidate vectors are empty except from
+/// [`PartitionPolicy::decide_detailed`]; delay fields are `None`/trivial
+/// for policies without a delay model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Decision {
+    /// Optimal split: 0 = FCC, `|L|` = FISC, else after layer `l_opt`.
+    pub l_opt: usize,
+    /// `E_Cost` at the optimum, joules.
+    pub cost_j: f64,
+    /// `E_Cost` at the FCC candidate (the savings reference), joules.
+    pub fcc_cost_j: f64,
+    /// `E_Cost` at the FISC candidate, joules.
+    pub fisc_cost_j: f64,
+    /// Client compute energy at the optimum, joules.
+    pub client_energy_j: f64,
+    /// Transmission energy at the optimum, joules.
+    pub transmit_energy_j: f64,
+    /// Transmit volume at the optimum, bits.
+    pub transmit_bits: f64,
+    /// Predicted `t_delay` at the optimum, seconds (SLO-aware policies).
+    pub t_delay_s: Option<f64>,
+    /// Whether the SLO (if any) was satisfiable; `true` when
+    /// unconstrained.
+    pub feasible: bool,
+    /// Whether the SLO moved the decision off the unconstrained energy
+    /// optimum (also `true` for infeasible best-effort outcomes).
+    pub binding: bool,
+    /// Per-candidate `E_Cost` vector (index = split), detailed form only.
+    pub costs_j: Vec<f64>,
+    /// Per-candidate delay vector (index = split), detailed SLO-aware
+    /// form only.
+    pub delays_s: Vec<f64>,
+}
+
+impl Decision {
+    /// Energy saved at the optimum relative to fully-cloud computation.
+    pub fn savings_vs_fcc(&self) -> f64 {
+        super::algorithm2::savings_ratio(self.cost_j, self.fcc_cost_j)
+    }
+
+    /// Energy saved at the optimum relative to fully-in-situ computation.
+    pub fn savings_vs_fisc(&self) -> f64 {
+        super::algorithm2::savings_ratio(self.cost_j, self.fisc_cost_j)
+    }
+
+    pub(crate) fn from_split_choice(choice: SplitChoice) -> Self {
+        Decision {
+            l_opt: choice.l_opt,
+            cost_j: choice.cost_j,
+            fcc_cost_j: choice.fcc_cost_j,
+            fisc_cost_j: choice.fisc_cost_j,
+            client_energy_j: choice.client_energy_j,
+            transmit_energy_j: choice.transmit_energy_j,
+            transmit_bits: choice.transmit_bits,
+            t_delay_s: None,
+            feasible: true,
+            binding: false,
+            costs_j: Vec::new(),
+            delays_s: Vec::new(),
+        }
+    }
+
+    pub(crate) fn from_constrained_choice(c: ConstrainedChoice) -> Self {
+        let mut d = Decision::from_split_choice(c.choice);
+        d.t_delay_s = Some(c.t_delay_s);
+        d.feasible = c.feasible;
+        d.binding = c.binding;
+        d
+    }
+
+    /// First strict-`<` argmin over a cost vector — the scan's fold, used
+    /// to recover the unconstrained optimum for the `binding` flag.
+    fn first_argmin(costs: &[f64]) -> usize {
+        let mut best = f64::INFINITY;
+        let mut win = 0;
+        for (i, &c) in costs.iter().enumerate() {
+            if c < best {
+                best = c;
+                win = i;
+            }
+        }
+        win
+    }
+}
+
+impl From<SplitChoice> for Decision {
+    fn from(choice: SplitChoice) -> Self {
+        Decision::from_split_choice(choice)
+    }
+}
+
+/// A runtime partition policy: the single decision surface the serving
+/// coordinator, the experiment sweeps, the benches and the CLI all route
+/// through.
+pub trait PartitionPolicy {
+    /// Short identifier for reports/metrics.
+    fn name(&self) -> &'static str;
+
+    /// Layer count of the bound network (`l_opt` ranges over
+    /// `0..=num_layers()`).
+    fn num_layers(&self) -> usize;
+
+    /// One decision. The hot path: no per-candidate vectors, no
+    /// allocation beyond the (empty-vector) [`Decision`] itself.
+    fn decide(&self, ctx: &DecisionContext) -> Decision;
+
+    /// Reporting form: like [`PartitionPolicy::decide`] but with the
+    /// per-candidate vectors filled when the policy can produce them.
+    /// Default: the plain decision.
+    fn decide_detailed(&self, ctx: &DecisionContext) -> Decision {
+        self.decide(ctx)
+    }
+
+    /// Batched decisions for one shared context: `input_bits` overrides
+    /// `ctx.input_bits` per request; everything else (env, SLO, segment)
+    /// is shared. `out` is cleared and refilled. Default: one
+    /// [`PartitionPolicy::decide`] per item; envelope-backed policies
+    /// override this to amortize the per-channel-state work.
+    fn decide_batch(&self, input_bits: &[f64], ctx: &DecisionContext, out: &mut Vec<Decision>) {
+        out.clear();
+        out.reserve(input_bits.len());
+        for &bits in input_bits {
+            let item = DecisionContext {
+                input_bits: bits,
+                sparsity_in: None,
+                ..*ctx
+            };
+            out.push(self.decide(&item));
+        }
+    }
+}
+
+/// The paper's unconstrained energy objective over the precomputed
+/// γ-envelope — the serving default.
+///
+/// Ignores `ctx.slo_s` (use [`SloPolicy`] for deadlines); honors
+/// `ctx.segment` to skip the breakpoint search on the γ-coherent
+/// admission path.
+#[derive(Clone, Debug)]
+pub struct EnergyPolicy {
+    partitioner: Arc<Partitioner>,
+}
+
+impl EnergyPolicy {
+    pub fn new(partitioner: Partitioner) -> Self {
+        Self::from_shared(Arc::new(partitioner))
+    }
+
+    /// Share one engine across policies/connections (the
+    /// [`crate::partition::registry::PolicyRegistry`] path).
+    pub fn from_shared(partitioner: Arc<Partitioner>) -> Self {
+        EnergyPolicy { partitioner }
+    }
+
+    pub fn partitioner(&self) -> &Partitioner {
+        &self.partitioner
+    }
+
+    /// The reference O(|L|) scan decision (kept for property tests and
+    /// detailed reporting).
+    pub fn reference(&self, sparsity_in: f64, env: &TransmitEnv) -> PartitionDecision {
+        self.partitioner.reference_decision(sparsity_in, env)
+    }
+}
+
+impl PartitionPolicy for EnergyPolicy {
+    fn name(&self) -> &'static str {
+        "energy"
+    }
+
+    fn num_layers(&self) -> usize {
+        self.partitioner.num_layers()
+    }
+
+    fn decide(&self, ctx: &DecisionContext) -> Decision {
+        let choice = match ctx.segment {
+            Some(seg) => self
+                .partitioner
+                .choose_in_segment(seg, ctx.input_bits, &ctx.env),
+            None => self.partitioner.choose_split(ctx.input_bits, &ctx.env),
+        };
+        Decision::from_split_choice(choice)
+    }
+
+    fn decide_detailed(&self, ctx: &DecisionContext) -> Decision {
+        let mut costs_j = Vec::with_capacity(self.num_layers() + 1);
+        let choice = self
+            .partitioner
+            .choose_into(ctx.input_bits, &ctx.env, &mut costs_j);
+        let mut d = Decision::from_split_choice(choice);
+        d.costs_j = costs_j;
+        d
+    }
+
+    fn decide_batch(&self, input_bits: &[f64], ctx: &DecisionContext, out: &mut Vec<Decision>) {
+        let mut choices = Vec::with_capacity(input_bits.len());
+        self.partitioner
+            .choose_batch(input_bits, &ctx.env, &mut choices);
+        out.clear();
+        out.reserve(choices.len());
+        out.extend(choices.into_iter().map(Decision::from_split_choice));
+    }
+}
+
+/// The latency-SLO-constrained objective: minimize energy subject to
+/// `t_delay ≤ ctx.slo_s`.
+///
+/// With no SLO on the context it reduces exactly to [`EnergyPolicy`]
+/// (same engine, same fold). With one, the delay-envelope +
+/// constrained-frontier fast path applies (see
+/// [`crate::partition::constrained`]).
+#[derive(Clone, Debug)]
+pub struct SloPolicy {
+    slo: Arc<SloPartitioner>,
+}
+
+impl SloPolicy {
+    pub fn new(slo_partitioner: SloPartitioner) -> Self {
+        SloPolicy {
+            slo: Arc::new(slo_partitioner),
+        }
+    }
+
+    pub fn slo_partitioner(&self) -> &SloPartitioner {
+        &self.slo
+    }
+
+    pub fn partitioner(&self) -> &Partitioner {
+        self.slo.partitioner()
+    }
+}
+
+impl PartitionPolicy for SloPolicy {
+    fn name(&self) -> &'static str {
+        "slo"
+    }
+
+    fn num_layers(&self) -> usize {
+        self.slo.partitioner().num_layers()
+    }
+
+    fn decide(&self, ctx: &DecisionContext) -> Decision {
+        match ctx.slo_s {
+            Some(slo_s) => Decision::from_constrained_choice(self.slo.choose_with_slo(
+                ctx.input_bits,
+                &ctx.env,
+                slo_s,
+            )),
+            None => {
+                let p = self.slo.partitioner();
+                let choice = match ctx.segment {
+                    Some(seg) => p.choose_in_segment(seg, ctx.input_bits, &ctx.env),
+                    None => p.choose_split(ctx.input_bits, &ctx.env),
+                };
+                Decision::from_split_choice(choice)
+            }
+        }
+    }
+
+    fn decide_detailed(&self, ctx: &DecisionContext) -> Decision {
+        // The reference scan needs the Sparsity-In the context was built
+        // from; with only a measured volume, fall back to the fast form.
+        let Some(sparsity_in) = ctx.sparsity_in else {
+            return self.decide(ctx);
+        };
+        let slo_s = ctx.slo_s.unwrap_or(f64::INFINITY);
+        let scan = decide_with_slo_scan(
+            self.slo.partitioner(),
+            self.slo.delay_model(),
+            sparsity_in,
+            &ctx.env,
+            slo_s,
+        );
+        let unconstrained = Decision::first_argmin(&scan.inner.costs_j);
+        Decision {
+            l_opt: scan.inner.l_opt,
+            cost_j: scan.inner.costs_j[scan.inner.l_opt],
+            fcc_cost_j: scan.inner.costs_j[FCC],
+            fisc_cost_j: scan.inner.costs_j[scan.inner.costs_j.len() - 1],
+            client_energy_j: scan.inner.client_energy_j,
+            transmit_energy_j: scan.inner.transmit_energy_j,
+            transmit_bits: scan.inner.transmit_bits,
+            t_delay_s: Some(scan.t_delay_s),
+            feasible: scan.feasible,
+            binding: !scan.feasible || scan.inner.l_opt != unconstrained,
+            costs_j: scan.inner.costs_j,
+            delays_s: scan.delays_s,
+        }
+    }
+}
+
+/// A second 1-D envelope, over `1 − Sparsity-In`, at a **fixed** channel
+/// state.
+///
+/// At fixed γ every fixed candidate's cost is a constant while the FCC
+/// cost is linear in `(1 − Sparsity-In)` (eq. 29 is affine in the zero
+/// fraction). The lower envelope over the probe axis therefore has at
+/// most two pieces — the fixed-candidate winner below, the FCC line
+/// above — and the probe side of a decision collapses to the precomputed
+/// [`FixedWinner`] plus one comparison. The breakpoint is a closed-form
+/// switchover threshold ([`SparsityEnvelopePolicy::crossover_sparsity`]):
+/// the per-device Fig.-13 crossover.
+///
+/// Decisions still re-evaluate both surviving candidates with the scan's
+/// exact cost expression, so they match the linear scan bit-for-bit
+/// (property-tested). The context's `env` is ignored in favor of the
+/// bound channel state; `ctx.sparsity_in` (when present) takes precedence
+/// over `ctx.input_bits`.
+#[derive(Clone, Debug)]
+pub struct SparsityEnvelopePolicy {
+    partitioner: Arc<Partitioner>,
+    env: TransmitEnv,
+    winner: Option<FixedWinner>,
+    crossover: Option<f64>,
+}
+
+impl SparsityEnvelopePolicy {
+    pub fn new(partitioner: Partitioner, env: TransmitEnv) -> Self {
+        Self::from_shared(Arc::new(partitioner), env)
+    }
+
+    /// Build over a shared engine (registry path). All per-channel-state
+    /// precomputation happens here, once.
+    pub fn from_shared(partitioner: Arc<Partitioner>, env: TransmitEnv) -> Self {
+        let winner = partitioner.fixed_winner(&env);
+        let crossover = winner.and_then(|w| {
+            // FCC cost is A·(1 − s) with A the zero-sparsity input cost;
+            // FCC wins (ties included, like the scan's index-order fold)
+            // iff A·(1 − s) ≤ winner cost iff s ≥ 1 − winner_cost/A.
+            let a = partitioner.candidate_cost_j(
+                FCC,
+                partitioner.input_bits_from_sparsity(0.0),
+                &env,
+            );
+            if a.is_finite() && a > 0.0 && w.cost_j.is_finite() {
+                Some(1.0 - w.cost_j / a)
+            } else {
+                None
+            }
+        });
+        SparsityEnvelopePolicy {
+            partitioner,
+            env,
+            winner,
+            crossover,
+        }
+    }
+
+    pub fn partitioner(&self) -> &Partitioner {
+        &self.partitioner
+    }
+
+    /// The channel state this policy is bound to.
+    pub fn env(&self) -> &TransmitEnv {
+        &self.env
+    }
+
+    /// The precomputed fixed-candidate winner at the bound channel state
+    /// (`None` on degenerate channels — decisions then take the guarded
+    /// scan path).
+    pub fn fixed_winner(&self) -> Option<&FixedWinner> {
+        self.winner.as_ref()
+    }
+
+    /// Closed-form switchover threshold: the Sparsity-In at-or-above
+    /// which FCC beats every fixed candidate at the bound channel state
+    /// (the paper's Fig.-13 crossover, per device). May fall outside
+    /// `[0, 1]` (FCC always / never optimal in the probe range); `None`
+    /// on degenerate channels or a zero-cost input line.
+    pub fn crossover_sparsity(&self) -> Option<f64> {
+        self.crossover
+    }
+
+    /// Decision for one probed Sparsity-In: two table lookups and one
+    /// comparison.
+    pub fn decide_sparsity(&self, sparsity_in: f64) -> Decision {
+        self.decide_bits(self.partitioner.input_bits_from_sparsity(sparsity_in))
+    }
+
+    fn decide_bits(&self, input_bits: f64) -> Decision {
+        let choice = match &self.winner {
+            Some(w) => self.partitioner.choose_with_winner(w, input_bits, &self.env),
+            None => self.partitioner.choose_split(input_bits, &self.env),
+        };
+        Decision::from_split_choice(choice)
+    }
+}
+
+impl PartitionPolicy for SparsityEnvelopePolicy {
+    fn name(&self) -> &'static str {
+        "sparsity-envelope"
+    }
+
+    fn num_layers(&self) -> usize {
+        self.partitioner.num_layers()
+    }
+
+    fn decide(&self, ctx: &DecisionContext) -> Decision {
+        match ctx.sparsity_in {
+            Some(sp) => self.decide_sparsity(sp),
+            None => self.decide_bits(ctx.input_bits),
+        }
+    }
+
+    fn decide_batch(&self, input_bits: &[f64], _ctx: &DecisionContext, out: &mut Vec<Decision>) {
+        out.clear();
+        out.reserve(input_bits.len());
+        out.extend(input_bits.iter().map(|&bits| self.decide_bits(bits)));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::alexnet;
+    use crate::cnnergy::CnnErgy;
+    use crate::partition::algorithm2::paper_partitioner;
+    use crate::partition::DelayModel;
+
+    fn env(b_e_mbps: f64, p_tx: f64) -> TransmitEnv {
+        TransmitEnv::with_effective_rate(b_e_mbps * 1e6, p_tx)
+    }
+
+    #[test]
+    fn energy_policy_matches_engine_paths() {
+        let p = paper_partitioner(&alexnet());
+        let policy = EnergyPolicy::new(p.clone());
+        let e = env(80.0, 0.78);
+        let ctx = DecisionContext::from_sparsity(&p, 0.608, e);
+        let d = policy.decide(&ctx);
+        let scan = p.reference_decision(0.608, &e);
+        assert_eq!(d.l_opt, scan.l_opt);
+        assert_eq!(d.cost_j, scan.costs_j[scan.l_opt]);
+        assert_eq!(d.client_energy_j + d.transmit_energy_j, d.cost_j);
+        // Detailed form carries the full cost vector.
+        let full = policy.decide_detailed(&ctx);
+        assert_eq!(full.costs_j, scan.costs_j);
+        assert_eq!(full.l_opt, d.l_opt);
+        // Segment-pinned context agrees with the plain path.
+        let gamma = e.p_tx_w / e.effective_bit_rate();
+        let seg = p.envelope().segment_index(gamma);
+        let pinned = policy.decide(&ctx.with_segment(seg));
+        assert_eq!(pinned, d);
+    }
+
+    #[test]
+    fn energy_policy_batch_matches_singles() {
+        let p = paper_partitioner(&alexnet());
+        let policy = EnergyPolicy::new(p.clone());
+        let e = env(80.0, 0.78);
+        let bits: Vec<f64> = (0..32)
+            .map(|i| p.input_bits_from_sparsity(0.3 + 0.02 * i as f64))
+            .collect();
+        let ctx = DecisionContext::from_input_bits(0.0, e);
+        let mut out = Vec::new();
+        policy.decide_batch(&bits, &ctx, &mut out);
+        assert_eq!(out.len(), bits.len());
+        for (&b, d) in bits.iter().zip(&out) {
+            let single = policy.decide(&DecisionContext::from_input_bits(b, e));
+            assert_eq!(d, &single);
+        }
+    }
+
+    #[test]
+    fn slo_policy_no_deadline_equals_energy_policy() {
+        let net = alexnet();
+        let p = paper_partitioner(&net);
+        let dm = DelayModel::new(&net, &CnnErgy::inference_8bit());
+        let slo = SloPolicy::new(SloPartitioner::new(p.clone(), dm));
+        let energy = EnergyPolicy::new(p.clone());
+        let ctx = DecisionContext::from_sparsity(&p, 0.608, env(80.0, 0.78));
+        assert_eq!(slo.decide(&ctx), energy.decide(&ctx));
+    }
+
+    #[test]
+    fn slo_policy_carries_delay_and_feasibility() {
+        let net = alexnet();
+        let p = paper_partitioner(&net);
+        let dm = DelayModel::new(&net, &CnnErgy::inference_8bit());
+        let slo = SloPolicy::new(SloPartitioner::new(p.clone(), dm));
+        let e = env(80.0, 0.78);
+        let loose = slo.decide(&DecisionContext::from_sparsity(&p, 0.608, e).with_slo(10.0));
+        assert!(loose.feasible && !loose.binding);
+        assert!(loose.t_delay_s.unwrap() <= 10.0);
+        let impossible = slo.decide(&DecisionContext::from_sparsity(&p, 0.608, e).with_slo(1e-9));
+        assert!(!impossible.feasible && impossible.binding);
+        // Detailed form agrees with the fast path on the shared fields.
+        let ctx = DecisionContext::from_sparsity(&p, 0.608, e).with_slo(0.015);
+        let fast = slo.decide(&ctx);
+        let full = slo.decide_detailed(&ctx);
+        assert_eq!(full.l_opt, fast.l_opt);
+        assert_eq!(full.cost_j, fast.cost_j);
+        assert_eq!(full.t_delay_s, fast.t_delay_s);
+        assert_eq!(full.feasible, fast.feasible);
+        assert_eq!(full.binding, fast.binding);
+        assert_eq!(full.delays_s.len(), p.num_layers() + 1);
+    }
+
+    #[test]
+    fn sparsity_policy_matches_scan_and_exposes_crossover() {
+        let p = paper_partitioner(&alexnet());
+        let e = env(80.0, 0.78);
+        let policy = SparsityEnvelopePolicy::new(p.clone(), e);
+        for i in 0..=40 {
+            let sp = i as f64 / 40.0;
+            let d = policy.decide_sparsity(sp);
+            let scan = p.reference_decision(sp, &e);
+            assert_eq!(d.l_opt, scan.l_opt, "sp={sp}");
+            assert_eq!(d.cost_j, scan.costs_j[scan.l_opt], "sp={sp}");
+        }
+        // The paper's regime: an intermediate layer wins at median
+        // sparsity, FCC above the crossover — which must exist in (0, 1).
+        let s_star = policy.crossover_sparsity().expect("crossover");
+        assert!(s_star > 0.0 && s_star < 1.0, "s* = {s_star}");
+        assert_eq!(policy.decide_sparsity((s_star + 1e-6).min(1.0)).l_opt, FCC);
+        assert_ne!(policy.decide_sparsity((s_star - 1e-6).max(0.0)).l_opt, FCC);
+    }
+
+    #[test]
+    fn sparsity_policy_degenerate_channel_falls_back() {
+        let p = paper_partitioner(&alexnet());
+        let dead = TransmitEnv::with_effective_rate(0.0, 0.78);
+        let policy = SparsityEnvelopePolicy::new(p.clone(), dead);
+        assert!(policy.fixed_winner().is_none());
+        assert!(policy.crossover_sparsity().is_none());
+        let d = policy.decide_sparsity(0.6);
+        assert_eq!(d.l_opt, p.num_layers());
+        assert!(d.cost_j.is_finite());
+    }
+}

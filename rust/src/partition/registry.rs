@@ -1,0 +1,502 @@
+//! Per-device envelope artifacts and the fleet-scale policy registry.
+//!
+//! A fleet coordinator serving many device models (paper Table IV) makes
+//! the same partition decision per (network, device transmit-power class):
+//! the decision tables — cumulative client energy `E[l]`, fixed transmit
+//! volumes `D_RLC[l]` and the derived γ-breakpoint envelope — are tiny
+//! (a few hundred bytes of JSON for a real CNN) and channel-independent,
+//! so they can be built once, shared across every connection of that
+//! class, and even shipped to clients for fully client-side decisions.
+//!
+//! * [`EnvelopeTable`] — the compact, serializable artifact keyed by
+//!   `(network, device)`: exactly the [`Partitioner::from_parts`] inputs
+//!   plus the derived breakpoint table for inspection. The JSON round
+//!   trip is **bit-exact** (the writer prints shortest-round-trip floats;
+//!   see [`crate::util::json`]), so a partitioner rebuilt from a
+//!   deserialized table reproduces in-memory decisions exactly —
+//!   property-tested across random γ, ties and degenerate channels.
+//! * [`PolicyRegistry`] — a thread-safe map of those artifacts with their
+//!   built engines, shared across connections; [`RegistryEntry::policy`]
+//!   hands out [`EnergyPolicy`] views over one shared [`Partitioner`].
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
+
+use anyhow::{anyhow, Result};
+
+use crate::channel::{TransmitEnv, DEVICE_POWER_TABLE};
+use crate::cnn::Network;
+use crate::cnnergy::CnnErgy;
+use crate::util::json::{self, Value};
+
+use super::algorithm2::Partitioner;
+use super::policy::{EnergyPolicy, SparsityEnvelopePolicy};
+
+/// Transmit-power class name for a device power: the Table-IV
+/// platform+radio whose surveyed uplink power matches (±5 mW), else a
+/// synthetic `ptx-<watts>` class. The radio is part of the class name —
+/// one platform's WLAN and LTE powers differ (Note 3: 1.28 W vs 2.3 W),
+/// so they are distinct transmit-power classes with distinct γ behavior.
+pub fn device_class(p_tx_w: f64) -> String {
+    const TOL_W: f64 = 5e-3;
+    for d in DEVICE_POWER_TABLE {
+        let radios = [(d.wlan_w, "WLAN"), (d.g3_w, "3G"), (d.lte_w, "LTE")];
+        for (power, radio) in radios {
+            if let Some(power) = power {
+                if (power - p_tx_w).abs() < TOL_W {
+                    return format!("{} {radio}", d.platform);
+                }
+            }
+        }
+    }
+    format!("ptx-{p_tx_w:.3}W")
+}
+
+/// The serializable per-(network, device) decision artifact (module docs).
+///
+/// All table entries must be finite: non-finite floats are not
+/// representable in JSON and can never win a scan argmin anyway.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EnvelopeTable {
+    /// Network name (the registry key's first half).
+    pub network: String,
+    /// Device transmit-power class (the key's second half, Table IV).
+    pub device: String,
+    /// The class's uplink transmit power, watts.
+    pub p_tx_w: f64,
+    /// Activation bit width of the volume tables.
+    pub bw: u32,
+    /// Raw input volume, bits.
+    pub input_raw_bits: u64,
+    /// Cumulative client energy `E[l]`, joules (split `l` at index `l-1`).
+    pub cumulative_energy_j: Vec<f64>,
+    /// Fixed transmit volumes `D_RLC[l]`, bits (split `l` at index `l-1`).
+    pub d_rlc_bits: Vec<f64>,
+    /// Derived γ breakpoints — redundant with the vectors above (the
+    /// rebuild recomputes them identically) but shipped so a thin client
+    /// can do the O(log L) lookup without the envelope-construction code.
+    pub breakpoints: Vec<f64>,
+    /// Winning split per envelope segment, γ-ascending.
+    pub segment_splits: Vec<usize>,
+}
+
+impl EnvelopeTable {
+    /// Extract the artifact from a built engine.
+    pub fn from_partitioner(
+        network: &str,
+        device: &str,
+        p_tx_w: f64,
+        partitioner: &Partitioner,
+    ) -> Self {
+        EnvelopeTable {
+            network: network.to_string(),
+            device: device.to_string(),
+            p_tx_w,
+            bw: partitioner.bit_width(),
+            input_raw_bits: partitioner.input_raw_bits(),
+            cumulative_energy_j: partitioner.energy_table_j().to_vec(),
+            d_rlc_bits: partitioner.volume_table_bits().to_vec(),
+            breakpoints: partitioner.envelope().breakpoints().to_vec(),
+            segment_splits: partitioner
+                .envelope()
+                .segments()
+                .iter()
+                .map(|l| l.split)
+                .collect(),
+        }
+    }
+
+    /// Rebuild the engine. The envelope construction is deterministic, so
+    /// the rebuilt breakpoints/segments are bit-identical to the stored
+    /// ones and every decision matches the source engine exactly.
+    pub fn to_partitioner(&self) -> Partitioner {
+        Partitioner::from_parts(
+            self.cumulative_energy_j.clone(),
+            self.d_rlc_bits.clone(),
+            self.input_raw_bits,
+            self.bw,
+        )
+    }
+
+    /// Registry key.
+    pub fn key(&self) -> (String, String) {
+        (self.network.clone(), self.device.clone())
+    }
+
+    /// Serialized size in bytes — the "cheap to ship" claim, measured.
+    pub fn table_bytes(&self) -> usize {
+        self.to_json().len()
+    }
+
+    /// Compact JSON form (round-trips bit-exactly through
+    /// [`EnvelopeTable::from_json`]).
+    pub fn to_json(&self) -> String {
+        json::to_string(&self.to_value())
+    }
+
+    fn to_value(&self) -> Value {
+        let nums = |v: &[f64]| Value::Arr(v.iter().map(|&x| Value::Num(x)).collect());
+        let mut obj = BTreeMap::new();
+        obj.insert("network".to_string(), Value::Str(self.network.clone()));
+        obj.insert("device".to_string(), Value::Str(self.device.clone()));
+        obj.insert("p_tx_w".to_string(), Value::Num(self.p_tx_w));
+        obj.insert("bw".to_string(), Value::Num(self.bw as f64));
+        obj.insert(
+            "input_raw_bits".to_string(),
+            Value::Num(self.input_raw_bits as f64),
+        );
+        obj.insert(
+            "cumulative_energy_j".to_string(),
+            nums(&self.cumulative_energy_j),
+        );
+        obj.insert("d_rlc_bits".to_string(), nums(&self.d_rlc_bits));
+        obj.insert("breakpoints".to_string(), nums(&self.breakpoints));
+        obj.insert(
+            "segment_splits".to_string(),
+            Value::Arr(
+                self.segment_splits
+                    .iter()
+                    .map(|&s| Value::Num(s as f64))
+                    .collect(),
+            ),
+        );
+        Value::Obj(obj)
+    }
+
+    /// Parse one table from JSON.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = json::parse(text).map_err(|e| anyhow!("envelope table: {e}"))?;
+        Self::from_value(&v)
+    }
+
+    fn from_value(v: &Value) -> Result<Self> {
+        let str_field = |key: &str| -> Result<String> {
+            v.get(key)
+                .and_then(Value::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("envelope table: missing string '{key}'"))
+        };
+        let num_field = |key: &str| -> Result<f64> {
+            v.get(key)
+                .and_then(Value::as_f64)
+                .ok_or_else(|| anyhow!("envelope table: missing number '{key}'"))
+        };
+        let vec_field = |key: &str| -> Result<Vec<f64>> {
+            v.get(key)
+                .and_then(Value::as_arr)
+                .ok_or_else(|| anyhow!("envelope table: missing array '{key}'"))?
+                .iter()
+                .map(|x| {
+                    x.as_f64()
+                        .ok_or_else(|| anyhow!("envelope table: non-number in '{key}'"))
+                })
+                .collect()
+        };
+        let bw = num_field("bw")?;
+        if !(1.0..=64.0).contains(&bw) || bw.fract() != 0.0 {
+            return Err(anyhow!("envelope table: bit width {bw} out of range"));
+        }
+        let input_raw_bits = num_field("input_raw_bits")?;
+        if !(input_raw_bits >= 0.0 && input_raw_bits.is_finite()) {
+            return Err(anyhow!(
+                "envelope table: invalid input_raw_bits {input_raw_bits}"
+            ));
+        }
+        let table = EnvelopeTable {
+            network: str_field("network")?,
+            device: str_field("device")?,
+            p_tx_w: num_field("p_tx_w")?,
+            bw: bw as u32,
+            input_raw_bits: input_raw_bits as u64,
+            cumulative_energy_j: vec_field("cumulative_energy_j")?,
+            d_rlc_bits: vec_field("d_rlc_bits")?,
+            breakpoints: vec_field("breakpoints")?,
+            segment_splits: vec_field("segment_splits")?
+                .into_iter()
+                .map(|s| s as usize)
+                .collect(),
+        };
+        if table.cumulative_energy_j.len() != table.d_rlc_bits.len() {
+            return Err(anyhow!(
+                "envelope table: energy/volume length mismatch ({} vs {})",
+                table.cumulative_energy_j.len(),
+                table.d_rlc_bits.len()
+            ));
+        }
+        // The struct doc's finiteness contract, enforced at the trust
+        // boundary: a NaN/∞ entry would silently corrupt every rebuilt
+        // envelope and cost downstream.
+        for (name, values) in [
+            ("cumulative_energy_j", &table.cumulative_energy_j),
+            ("d_rlc_bits", &table.d_rlc_bits),
+            ("breakpoints", &table.breakpoints),
+        ] {
+            if let Some(bad) = values.iter().find(|v| !v.is_finite()) {
+                return Err(anyhow!("envelope table: non-finite {name} entry {bad}"));
+            }
+        }
+        Ok(table)
+    }
+}
+
+/// One registry slot: the serializable artifact plus its built engine,
+/// shared across connections via `Arc`.
+#[derive(Debug)]
+pub struct RegistryEntry {
+    table: EnvelopeTable,
+    partitioner: Arc<Partitioner>,
+}
+
+impl RegistryEntry {
+    pub fn table(&self) -> &EnvelopeTable {
+        &self.table
+    }
+
+    pub fn partitioner(&self) -> &Arc<Partitioner> {
+        &self.partitioner
+    }
+
+    /// An [`EnergyPolicy`] view over the shared engine (cheap: one `Arc`
+    /// clone).
+    pub fn policy(&self) -> EnergyPolicy {
+        EnergyPolicy::from_shared(self.partitioner.clone())
+    }
+
+    /// A [`SparsityEnvelopePolicy`] over the shared engine at this
+    /// device's transmit power and the given effective bit rate.
+    pub fn sparsity_policy(&self, b_e_bps: f64) -> SparsityEnvelopePolicy {
+        SparsityEnvelopePolicy::from_shared(
+            self.partitioner.clone(),
+            TransmitEnv::with_effective_rate(b_e_bps, self.table.p_tx_w),
+        )
+    }
+}
+
+/// Thread-safe registry of envelope tables keyed by
+/// `(network, device class)` — the fleet coordinator's shared decision
+/// state (module docs). Keys are nested network → device maps so the
+/// hot-path lookup borrows its `&str` keys without allocating.
+#[derive(Debug, Default)]
+pub struct PolicyRegistry {
+    entries: RwLock<BTreeMap<String, BTreeMap<String, Arc<RegistryEntry>>>>,
+}
+
+impl PolicyRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.read().unwrap().values().map(BTreeMap::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Registered `(network, device)` keys, sorted.
+    pub fn keys(&self) -> Vec<(String, String)> {
+        self.entries
+            .read()
+            .unwrap()
+            .iter()
+            .flat_map(|(net, devices)| {
+                devices.keys().map(move |dev| (net.clone(), dev.clone()))
+            })
+            .collect()
+    }
+
+    /// Lookup by key — the per-connection hot path: one read lock, two
+    /// borrowed-key map probes, one `Arc` clone; no allocation.
+    pub fn get(&self, network: &str, device: &str) -> Option<Arc<RegistryEntry>> {
+        self.entries
+            .read()
+            .unwrap()
+            .get(network)
+            .and_then(|devices| devices.get(device))
+            .cloned()
+    }
+
+    /// Insert a (possibly deserialized) table, building its engine. If the
+    /// key is already present the existing shared entry wins — connections
+    /// already holding it keep a consistent view (and the redundant engine
+    /// build is skipped).
+    pub fn insert_table(&self, table: EnvelopeTable) -> Arc<RegistryEntry> {
+        if let Some(existing) = self.get(&table.network, &table.device) {
+            return existing;
+        }
+        let partitioner = Arc::new(table.to_partitioner());
+        self.insert_entry(table, partitioner)
+    }
+
+    fn insert_entry(
+        &self,
+        table: EnvelopeTable,
+        partitioner: Arc<Partitioner>,
+    ) -> Arc<RegistryEntry> {
+        let (network, device) = table.key();
+        let mut entries = self.entries.write().unwrap();
+        entries
+            .entry(network)
+            .or_default()
+            .entry(device)
+            .or_insert_with(|| Arc::new(RegistryEntry { table, partitioner }))
+            .clone()
+    }
+
+    /// Entry for `(network, device_class(env.p_tx_w))`, building the
+    /// engine from the analytical models on first use.
+    pub fn get_or_build(&self, network: &str, env: &TransmitEnv) -> Result<Arc<RegistryEntry>> {
+        let device = device_class(env.p_tx_w);
+        if let Some(entry) = self.get(network, &device) {
+            return Ok(entry);
+        }
+        let net = Network::by_name(network)
+            .ok_or_else(|| anyhow!("unknown network '{network}' for policy registry"))?;
+        let partitioner = Partitioner::new(&net, &CnnErgy::inference_8bit());
+        let table = EnvelopeTable::from_partitioner(network, &device, env.p_tx_w, &partitioner);
+        Ok(self.insert_entry(table, Arc::new(partitioner)))
+    }
+
+    /// Build one entry per Table-IV device with a surveyed WLAN power for
+    /// `network` (the paper's evaluation fleet). Returns the number of
+    /// entries present for the network afterwards.
+    pub fn build_table_iv_fleet(&self, network: &str) -> Result<usize> {
+        for d in DEVICE_POWER_TABLE {
+            if let Some(p_tx_w) = d.wlan_w {
+                let env = TransmitEnv::with_effective_rate(80.0e6, p_tx_w);
+                self.get_or_build(network, &env)?;
+            }
+        }
+        Ok(self.entries.read().unwrap().get(network).map_or(0, BTreeMap::len))
+    }
+
+    /// Serialize every table (`{"tables": [...]}`) — the artifact a fleet
+    /// coordinator ships to clients.
+    pub fn export_json(&self) -> String {
+        let tables: Vec<Value> = self
+            .entries
+            .read()
+            .unwrap()
+            .values()
+            .flat_map(BTreeMap::values)
+            .map(|e| e.table.to_value())
+            .collect();
+        let mut obj = BTreeMap::new();
+        obj.insert("tables".to_string(), Value::Arr(tables));
+        json::to_string(&Value::Obj(obj))
+    }
+
+    /// Import tables from an [`PolicyRegistry::export_json`] document,
+    /// building engines for each. Existing keys keep their entries.
+    /// Returns the number of tables read.
+    pub fn import_json(&self, text: &str) -> Result<usize> {
+        let doc = json::parse(text).map_err(|e| anyhow!("policy registry: {e}"))?;
+        let tables = doc
+            .get("tables")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| anyhow!("policy registry: missing 'tables' array"))?;
+        let mut count = 0;
+        for t in tables {
+            self.insert_table(EnvelopeTable::from_value(t)?);
+            count += 1;
+        }
+        Ok(count)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::alexnet;
+    use crate::partition::algorithm2::paper_partitioner;
+    use crate::partition::policy::{DecisionContext, PartitionPolicy};
+
+    #[test]
+    fn device_classes_match_table_iv() {
+        assert_eq!(device_class(0.78), "LG Nexus 4 WLAN");
+        assert_eq!(device_class(1.28), "Samsung Galaxy Note 3 WLAN");
+        assert_eq!(device_class(1.14), "BlackBerry Z10 WLAN");
+        // One platform's radios are distinct transmit-power classes.
+        assert_eq!(device_class(2.3), "Samsung Galaxy Note 3 LTE");
+        assert_eq!(device_class(0.71), "LG Nexus 4 3G");
+        assert!(device_class(0.4242).starts_with("ptx-"));
+    }
+
+    #[test]
+    fn import_rejects_corrupt_tables() {
+        let p = paper_partitioner(&alexnet());
+        let good = EnvelopeTable::from_partitioner("alexnet", "LG Nexus 4 WLAN", 0.78, &p);
+        // A zero bit width would make every rebuilt FCC volume NaN.
+        let text = good.to_json().replace("\"bw\":8", "\"bw\":0");
+        assert!(EnvelopeTable::from_json(&text).is_err());
+        // Length mismatch between the two tables.
+        let mut short = good.clone();
+        short.d_rlc_bits.pop();
+        assert!(EnvelopeTable::from_json(&short.to_json()).is_err());
+    }
+
+    #[test]
+    fn table_json_round_trip_is_exact() {
+        let p = paper_partitioner(&alexnet());
+        let table = EnvelopeTable::from_partitioner("alexnet", "LG Nexus 4", 0.78, &p);
+        let text = table.to_json();
+        let back = EnvelopeTable::from_json(&text).unwrap();
+        assert_eq!(back, table);
+        assert_eq!(table.table_bytes(), text.len());
+        // The artifact stays small enough to ship per connection.
+        assert!(text.len() < 4096, "table is {} bytes", text.len());
+        // Rebuilt engine reproduces the envelope bit-for-bit.
+        let rebuilt = back.to_partitioner();
+        assert_eq!(rebuilt.envelope().breakpoints(), p.envelope().breakpoints());
+        assert_eq!(rebuilt.envelope().segments(), p.envelope().segments());
+    }
+
+    #[test]
+    fn registry_shares_entries_and_round_trips() {
+        let registry = PolicyRegistry::new();
+        let env = TransmitEnv::with_effective_rate(80e6, 0.78);
+        let a = registry.get_or_build("alexnet", &env).unwrap();
+        let b = registry.get_or_build("alexnet", &env).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "same class must share one entry");
+        assert_eq!(registry.len(), 1);
+        assert!(registry.get_or_build("not_a_net", &env).is_err());
+
+        // Export → import into a fresh registry → identical decisions.
+        let text = registry.export_json();
+        let client = PolicyRegistry::new();
+        assert_eq!(client.import_json(&text).unwrap(), 1);
+        let remote = client.get("alexnet", "LG Nexus 4 WLAN").unwrap();
+        let ctx = DecisionContext::from_sparsity(a.partitioner(), 0.608, env);
+        assert_eq!(remote.policy().decide(&ctx), a.policy().decide(&ctx));
+    }
+
+    #[test]
+    fn fleet_builder_covers_wlan_devices() {
+        let registry = PolicyRegistry::new();
+        let n = registry.build_table_iv_fleet("alexnet").unwrap();
+        // Five Table-IV platforms report a WLAN power.
+        assert_eq!(n, 5);
+        assert_eq!(registry.len(), 5);
+        // Every fleet entry answers decisions through the shared trait.
+        for key in registry.keys() {
+            let entry = registry.get(&key.0, &key.1).unwrap();
+            let env = TransmitEnv::with_effective_rate(80e6, entry.table().p_tx_w);
+            let ctx = DecisionContext::from_sparsity(entry.partitioner(), 0.608, env);
+            let d = entry.policy().decide(&ctx);
+            assert!(d.cost_j.is_finite());
+        }
+    }
+
+    #[test]
+    fn sparsity_policy_from_registry_matches_scan() {
+        let registry = PolicyRegistry::new();
+        let env = TransmitEnv::with_effective_rate(100e6, 1.14);
+        let entry = registry.get_or_build("alexnet", &env).unwrap();
+        let policy = entry.sparsity_policy(100e6);
+        let d = policy.decide_sparsity(0.608);
+        let scan = entry.partitioner().reference_decision(0.608, &env);
+        assert_eq!(d.l_opt, scan.l_opt);
+        assert_eq!(d.cost_j, scan.costs_j[scan.l_opt]);
+    }
+}

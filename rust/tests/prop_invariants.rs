@@ -3,11 +3,20 @@
 //! substitutions"). Each property runs a few hundred seeded random cases
 //! and reports the failing case on assertion failure.
 
+// The deprecated decide_* wrappers are exercised deliberately: the
+// properties below are the bit-for-bit proofs that they and the
+// PartitionPolicy path agree.
+#![allow(deprecated)]
+
 use neupart::channel::TransmitEnv;
 use neupart::cnn::ConvShape;
 use neupart::cnnergy::{schedule, HwConfig};
 use neupart::compress::rlc;
-use neupart::partition::{decide_with_slo_scan, DelayModel, Partitioner, SloPartitioner};
+use neupart::partition::{
+    decide_with_slo_scan, DecisionContext, DelayModel, EnergyPolicy, EnvelopeTable,
+    PartitionPolicy, Partitioner, PolicyRegistry, SloPartitioner, SloPolicy,
+    SparsityEnvelopePolicy,
+};
 use neupart::util::json;
 use neupart::util::rng::Rng;
 
@@ -470,6 +479,169 @@ fn prop_segment_decision_matches_per_request() {
                 "case {case}/{probe}: γ={gamma}"
             );
         }
+    }
+}
+
+#[test]
+fn prop_policy_trait_matches_deprecated_wrappers_bit_for_bit() {
+    // The api-redesign acceptance invariant: every deprecated decide_*
+    // entry point is a thin wrapper provably equivalent to the
+    // PartitionPolicy route — same split, bit-identical costs, across
+    // random engines, ~12 decades of B_e, ties and degenerate channels.
+    let mut rng = Rng::new(0x90_11C7);
+    for case in 0..CASES {
+        let p = random_partitioner(&mut rng);
+        let energy = EnergyPolicy::new(p.clone());
+        let dm = random_delay_model(&mut rng, p.num_layers());
+        let slo_p = SloPartitioner::new(p.clone(), dm);
+        let slo_policy = SloPolicy::new(slo_p.clone());
+        let mut sps = Vec::new();
+        for probe in 0..6 {
+            let be = 10f64.powf(rng.next_f64() * 12.0 - 3.0);
+            let p_tx = rng.next_f64() * 2.5 + 0.05;
+            let env = TransmitEnv::with_effective_rate(be, p_tx);
+            let sp = rng.next_f64();
+            sps.push(sp);
+            let ctx = DecisionContext::from_sparsity(&p, sp, env);
+            let d = energy.decide(&ctx);
+            // decide_fast / decide_split wrappers.
+            let fast = p.decide_fast(sp, &env);
+            assert_eq!(d.l_opt, fast.l_opt, "case {case}/{probe}");
+            assert_eq!(d.cost_j, fast.cost_j, "case {case}/{probe}");
+            assert_eq!(d.fcc_cost_j, fast.fcc_cost_j);
+            assert_eq!(d.fisc_cost_j, fast.fisc_cost_j);
+            assert_eq!(d.transmit_energy_j, fast.transmit_energy_j);
+            // decide / decide_with_input_bits wrappers (reference scan).
+            let scan = p.decide(sp, &env);
+            let full = energy.decide_detailed(&ctx);
+            assert_eq!(full.l_opt, scan.l_opt, "case {case}/{probe}");
+            assert_eq!(full.costs_j, scan.costs_j, "case {case}/{probe}");
+            // decide_with_slo wrapper vs SloPolicy.
+            let slo_s = 10f64.powf(rng.next_f64() * 8.0 - 6.0);
+            let fast_slo = slo_p.decide_with_slo(sp, &env, slo_s);
+            let policy_slo = slo_policy.decide(&ctx.with_slo(slo_s));
+            assert_eq!(policy_slo.l_opt, fast_slo.choice.l_opt, "case {case}/{probe}");
+            assert_eq!(policy_slo.cost_j, fast_slo.choice.cost_j);
+            assert_eq!(policy_slo.t_delay_s, Some(fast_slo.t_delay_s));
+            assert_eq!(policy_slo.feasible, fast_slo.feasible);
+            assert_eq!(policy_slo.binding, fast_slo.binding);
+        }
+        // decide_batch_sparsity wrapper vs EnergyPolicy::decide_batch.
+        let env = TransmitEnv::with_effective_rate(
+            10f64.powf(rng.next_f64() * 8.0 - 1.0),
+            rng.next_f64() * 2.0 + 0.1,
+        );
+        let legacy = p.decide_batch_sparsity(&sps, &env);
+        let bits: Vec<f64> = sps
+            .iter()
+            .map(|&sp| p.input_bits_from_sparsity(sp))
+            .collect();
+        let mut batch = Vec::new();
+        energy.decide_batch(&bits, &DecisionContext::from_input_bits(0.0, env), &mut batch);
+        assert_eq!(batch.len(), legacy.len(), "case {case}");
+        for (d, l) in batch.iter().zip(&legacy) {
+            assert_eq!(d.l_opt, l.l_opt, "case {case}");
+            assert_eq!(d.cost_j, l.cost_j, "case {case}");
+        }
+        // Degenerate channels through the trait path.
+        for be in [0.0, -1.0, f64::NAN] {
+            let env = TransmitEnv::with_effective_rate(be, 0.78);
+            let ctx = DecisionContext::from_sparsity(&p, 0.5, env);
+            let d = energy.decide(&ctx);
+            assert_eq!(d.l_opt, p.num_layers(), "case {case}: be={be}");
+            assert!(d.cost_j.is_finite());
+            assert_eq!(d, energy.decide(&ctx.with_segment(3)), "case {case}: be={be}");
+        }
+    }
+}
+
+#[test]
+fn prop_envelope_table_json_round_trip_is_bit_exact() {
+    // EnvelopeTable invariant: decisions from a JSON-deserialized table
+    // match the in-memory envelope EXACTLY — across random γ (12 decades),
+    // exact breakpoint γ (cost ties between candidate lines), and
+    // degenerate channels.
+    let mut rng = Rng::new(0x7AB1E);
+    for case in 0..150 {
+        let p = random_partitioner(&mut rng);
+        let table = EnvelopeTable::from_partitioner("synthetic", "test-device", 0.78, &p);
+        let text = table.to_json();
+        let back = EnvelopeTable::from_json(&text).expect("parse back");
+        assert_eq!(back, table, "case {case}: struct round trip");
+        let q = back.to_partitioner();
+        // The rebuilt envelope is bit-identical.
+        assert_eq!(q.envelope().breakpoints(), p.envelope().breakpoints(), "case {case}");
+        assert_eq!(q.envelope().segments(), p.envelope().segments(), "case {case}");
+        let a = EnergyPolicy::new(p.clone());
+        let b = EnergyPolicy::new(q);
+        let check = |env: TransmitEnv, sp: f64, ctx_label: &str| {
+            let ctx = DecisionContext::from_sparsity(a.partitioner(), sp, env);
+            let da = a.decide(&ctx);
+            let db = b.decide(&ctx);
+            assert_eq!(da, db, "case {case}: {ctx_label}");
+            assert_eq!(da.cost_j.to_bits(), db.cost_j.to_bits(), "case {case}: {ctx_label}");
+        };
+        for probe in 0..8 {
+            let be = 10f64.powf(rng.next_f64() * 12.0 - 3.0);
+            let p_tx = rng.next_f64() * 2.5 + 0.05;
+            check(TransmitEnv::with_effective_rate(be, p_tx), rng.next_f64(), "random γ");
+        }
+        // Exact breakpoints (B_e = 1 reproduces γ bit-for-bit as P_Tx).
+        for &gamma in p.envelope().breakpoints() {
+            check(TransmitEnv::with_effective_rate(1.0, gamma), 0.5, "breakpoint");
+        }
+        // Degenerate channels.
+        for be in [0.0, -1.0, f64::NAN] {
+            check(TransmitEnv::with_effective_rate(be, 0.78), 0.5, "degenerate");
+        }
+    }
+
+    // The registry round-trips whole fleets the same way.
+    let registry = PolicyRegistry::new();
+    registry.build_table_iv_fleet("alexnet").unwrap();
+    let client = PolicyRegistry::new();
+    let imported = client.import_json(&registry.export_json()).unwrap();
+    assert_eq!(imported, registry.len());
+    assert_eq!(client.keys(), registry.keys());
+}
+
+#[test]
+fn prop_sparsity_envelope_policy_matches_sparsity_linear_scan() {
+    // SparsityEnvelopePolicy invariant: at a fixed channel state, the
+    // two-lookup probe-side decision equals the full linear scan for every
+    // Sparsity-In — bit-for-bit, including the crossover neighborhood and
+    // the endpoints.
+    let mut rng = Rng::new(0x5EA5);
+    for case in 0..CASES {
+        let p = random_partitioner(&mut rng);
+        let be = 10f64.powf(rng.next_f64() * 10.0 - 2.0);
+        let p_tx = rng.next_f64() * 2.5 + 0.05;
+        let env = TransmitEnv::with_effective_rate(be, p_tx);
+        let policy = SparsityEnvelopePolicy::new(p.clone(), env);
+        let mut sparsities = vec![0.0, 1.0, rng.next_f64(), rng.next_f64(), rng.next_f64()];
+        if let Some(s_star) = policy.crossover_sparsity() {
+            // Probe the closed-form threshold's neighborhood.
+            for delta in [-1e-3, 0.0, 1e-3] {
+                let s = (s_star + delta).clamp(0.0, 1.0);
+                sparsities.push(s);
+            }
+        }
+        for (probe, &sp) in sparsities.iter().enumerate() {
+            let d = policy.decide_sparsity(sp);
+            let scan = p.decide(sp, &env);
+            assert_eq!(d.l_opt, scan.l_opt, "case {case}/{probe}: be={be} p_tx={p_tx} sp={sp}");
+            assert_eq!(d.cost_j, scan.costs_j[scan.l_opt], "case {case}/{probe}");
+            assert_eq!(d.fcc_cost_j, scan.costs_j[0], "case {case}/{probe}");
+            // The trait route (sparsity carried on the context) agrees.
+            let via_ctx = policy.decide(&DecisionContext::from_sparsity(&p, sp, env));
+            assert_eq!(via_ctx, d, "case {case}/{probe}");
+        }
+        // Degenerate channel: guarded FISC fallback, like every path.
+        let dead = TransmitEnv::with_effective_rate(0.0, p_tx);
+        let dead_policy = SparsityEnvelopePolicy::new(p.clone(), dead);
+        let d = dead_policy.decide_sparsity(0.5);
+        assert_eq!(d.l_opt, p.num_layers(), "case {case}");
+        assert!(d.cost_j.is_finite(), "case {case}");
     }
 }
 

@@ -26,6 +26,7 @@ fn config(network: &str, force: Option<usize>) -> CoordinatorConfig {
         warm_splits: Vec::new(),
         batch_max: 3,
         gamma_coherent: true,
+        shed_infeasible: true,
         seed: 5,
     }
 }
@@ -41,6 +42,7 @@ fn requests(n: usize) -> Vec<InferenceRequest> {
             width: img.w,
             height: img.h,
             env: None,
+            deadline_s: None,
         })
         .collect()
 }
@@ -178,6 +180,56 @@ fn explicit_request_env_steers_the_decision() {
     let responses = coord.serve(reqs).unwrap();
     let n_layers = coord.partitioner().num_layers();
     assert_eq!(responses[1].split, n_layers, "dead channel must pin FISC");
+}
+
+#[test]
+fn infeasible_deadlines_are_shed_at_admission() {
+    if !have_artifacts() {
+        return;
+    }
+    let coord = Coordinator::new(config("tiny_alexnet", None)).unwrap();
+    let mut reqs = requests(4);
+    // Below any conceivable inference delay (the cloud-only compute time
+    // alone is orders of magnitude larger): provably infeasible.
+    reqs[1].deadline_s = Some(1e-9);
+    // Generous deadline: must be served normally.
+    reqs[2].deadline_s = Some(1e3);
+    let responses = coord.serve(reqs).unwrap();
+    let ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    assert_eq!(ids, vec![0, 2, 3], "shed request omitted, order preserved");
+    let m = coord.metrics.snapshot();
+    assert_eq!(m.shed_infeasible, 1);
+    assert_eq!(m.requests, 3);
+
+    // With shedding disabled the same workload is served best-effort.
+    let mut cfg = config("tiny_alexnet", None);
+    cfg.shed_infeasible = false;
+    let coord = Coordinator::new(cfg).unwrap();
+    let mut reqs = requests(4);
+    reqs[1].deadline_s = Some(1e-9);
+    let responses = coord.serve(reqs).unwrap();
+    assert_eq!(responses.len(), 4);
+    assert_eq!(coord.metrics.snapshot().shed_infeasible, 0);
+}
+
+#[test]
+fn coordinators_share_one_registry_entry() {
+    if !have_artifacts() {
+        return;
+    }
+    // Fleet mode: two connections of the same (network, device P_Tx
+    // class) built against one shared registry reuse one decision engine.
+    let registry = neupart::partition::PolicyRegistry::new();
+    let a = Coordinator::with_registry(config("tiny_alexnet", None), &registry).unwrap();
+    let b = Coordinator::with_registry(config("tiny_alexnet", None), &registry).unwrap();
+    assert_eq!(registry.len(), 1);
+    assert!(
+        std::ptr::eq(a.partitioner(), b.partitioner()),
+        "engines must be shared through the registry"
+    );
+    // And the shared engine still serves.
+    let responses = a.serve(requests(3)).unwrap();
+    assert_eq!(responses.len(), 3);
 }
 
 #[test]
