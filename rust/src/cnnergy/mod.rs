@@ -1,19 +1,42 @@
-//! CNNergy — the analytical CNN energy model (paper §IV).
+//! CNNergy — the analytical CNN energy model (paper §IV), compiled once
+//! and queried everywhere.
 //!
 //! [`CnnErgy`] is the user-facing facade: configure an accelerator
 //! ([`HwConfig`]) + technology point ([`TechParams`]) and query per-layer
 //! [`EnergyBreakdown`]s, cumulative client energy `E_L` (eq. 2) and
 //! latencies for any [`crate::cnn::Network`].
 //!
-//! The §IV-C scheduling mapper is memoized through a per-thread
-//! [`ScheduleCache`] (see [`schedule_cached`]): identical conv shapes recur
-//! within networks (fire/inception modules, VGG blocks) and across the
-//! partitioner builds and figure sweeps, so repeated energy evaluations
-//! stop re-deriving the mapper.
+//! ## Compile, then query
+//!
+//! The model itself is only the *compiler*. The artifact downstream code
+//! consumes is a [`NetworkProfile`] ([`CnnErgy::compiled`]): one pass over
+//! the network producing every table the runtime needs — per-layer
+//! breakdowns, cumulative `E_L`, latencies, the fixed `D_RLC` transmit
+//! volumes and the sparsity/input-volume inputs — `Arc`-shared through a
+//! process-wide keyed cache ([`global_profiles`]). Engine builds
+//! (`partition::Partitioner::from_profile`,
+//! `partition::DelayModel::from_profile`, the fleet registry) then slice
+//! tables instead of re-running the model, bit-identically to the direct
+//! path. Sweeps are incremental: channel and sparsity knobs never touch
+//! the profile, and a GLB-size sweep ([`NetworkProfile::with_glb_size`])
+//! re-derives only the schedule/GLB-dependent terms through the keyed
+//! cache.
+//!
+//! Two further caching layers sit below the profiles:
+//!
+//! * the §IV-C scheduling mapper is memoized per thread through
+//!   [`ScheduleCache`] (see [`schedule_cached`]): identical conv shapes
+//!   recur within networks (fire/inception modules, VGG blocks) and
+//!   across hardware sweeps;
+//! * spawned worker/executor threads start with an *empty* thread-local
+//!   mapper cache, so they are warmed from the shared profile at thread
+//!   start ([`NetworkProfile::seed_thread_schedule_cache`]) instead of
+//!   re-deriving schedules on their first evaluation.
 
 pub mod clock;
 pub mod detail;
 pub mod energy;
+pub mod profile;
 pub mod scheduling;
 pub mod sparsity;
 pub mod tech;
@@ -21,12 +44,15 @@ pub mod validate;
 
 pub use clock::ClockParams;
 pub use energy::{layer_energy, EnergyBreakdown};
+pub use profile::{global_profiles, paper_profile, NetworkProfile, ProfileCache};
 pub use scheduling::{
     schedule, schedule_cached, with_global_schedule_cache, HwConfig, Schedule, ScheduleCache,
 };
 pub use tech::TechParams;
 
-use crate::cnn::Network;
+use std::sync::Arc;
+
+use crate::cnn::{Layer, Network};
 
 /// The analytical energy model bound to one accelerator configuration.
 #[derive(Clone, Copy, Debug)]
@@ -73,30 +99,47 @@ impl CnnErgy {
     }
 
     /// Per-layer energy breakdowns for a network (paper Alg. 1 per layer).
+    /// The walk state comes from [`profile::layer_contexts`] — the same
+    /// source the profile compiler uses, so both paths stay bit-identical
+    /// by construction.
     pub fn network_breakdowns(&self, net: &Network) -> Vec<EnergyBreakdown> {
-        let mut out = Vec::with_capacity(net.layers.len());
-        let mut sparsity_in = 0.0; // decoded input image is dense
-        let mut prev_elems = (net.input.0 * net.input.1 * net.input.2) as u64;
-        let mut first_conv = true;
-        for layer in &net.layers {
-            let e = layer_energy(
-                layer,
-                prev_elems,
-                sparsity_in,
-                first_conv,
-                &self.hw,
-                &self.tech,
-                &self.clock,
-                self.glb_energy,
-            );
-            if layer.kind.has_relu() || !layer.convs.is_empty() {
-                first_conv = false;
-            }
-            sparsity_in = layer.sparsity_mu;
-            prev_elems = layer.out_elems();
-            out.push(e);
-        }
-        out
+        profile::layer_contexts(net)
+            .iter()
+            .zip(&net.layers)
+            .map(|(ctx, layer)| self.layer_breakdown(layer, ctx))
+            .collect()
+    }
+
+    /// One layer's breakdown at a recorded walk state — shared by the
+    /// direct path above and the profile compiler / incremental re-sweeps.
+    pub(crate) fn layer_breakdown(
+        &self,
+        layer: &Layer,
+        ctx: &profile::LayerCtx,
+    ) -> EnergyBreakdown {
+        layer_energy(
+            layer,
+            ctx.prev_elems,
+            ctx.sparsity_in,
+            ctx.first_conv,
+            &self.hw,
+            &self.tech,
+            &self.clock,
+            self.glb_energy,
+        )
+    }
+
+    /// Compile this model over a network into a fresh [`NetworkProfile`]
+    /// (one pass; see the module docs). Prefer [`CnnErgy::compiled`],
+    /// which shares the artifact through the process-wide cache.
+    pub fn compile(&self, net: &Network) -> NetworkProfile {
+        NetworkProfile::compute(net, self)
+    }
+
+    /// The shared compiled profile for `(net, self)` from the process-wide
+    /// [`global_profiles`] cache, computing it on first use.
+    pub fn compiled(&self, net: &Network) -> Arc<NetworkProfile> {
+        global_profiles().get_or_compute(net, self)
     }
 
     /// `E_L` for every `L` (paper eq. 2): cumulative client energy in pJ,

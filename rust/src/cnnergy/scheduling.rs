@@ -282,6 +282,15 @@ impl ScheduleCache {
         s
     }
 
+    /// Insert a precomputed schedule without touching the hit/miss
+    /// counters — the profile-driven thread warm-up
+    /// ([`crate::cnnergy::NetworkProfile::seed_thread_schedule_cache`]).
+    /// `sch` must equal `schedule(shape, hw)`: seeded entries are
+    /// indistinguishable from derived ones.
+    pub fn seed(&self, shape: &ConvShape, hw: &HwConfig, sch: Schedule) {
+        self.map.borrow_mut().insert(ScheduleKey::new(shape, hw), sch);
+    }
+
     /// Distinct (shape, hardware) pairs currently memoized.
     pub fn len(&self) -> usize {
         self.map.borrow().len()
@@ -444,6 +453,20 @@ mod tests {
         cache.clear();
         assert!(cache.is_empty());
         assert_eq!(cache.hits() + cache.misses(), 0);
+    }
+
+    #[test]
+    fn seeded_entries_hit_without_counting_misses() {
+        let cache = ScheduleCache::new();
+        let hw = HwConfig::eyeriss_8bit();
+        let shape = ConvShape::conv(27, 27, 5, 48, 256, 1);
+        cache.seed(&shape, &hw, schedule(&shape, &hw));
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.misses(), 0, "seeding must not count as a miss");
+        // The seeded entry serves lookups exactly like a derived one.
+        assert_eq!(cache.schedule(&shape, &hw), schedule(&shape, &hw));
+        assert_eq!(cache.misses(), 0);
+        assert_eq!(cache.hits(), 1);
     }
 
     #[test]

@@ -15,6 +15,7 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::cnnergy::NetworkProfile;
 use crate::runtime::NetworkRuntime;
 
 /// A unit of work for a device.
@@ -92,13 +93,20 @@ pub struct DeviceExecutor {
 impl DeviceExecutor {
     /// Spawn `pool` threads, each with its own PJRT client, all draining one
     /// shared job queue. Each thread precompiles `warm_splits` before taking
-    /// work (a `warm_up` job through the queue would only reach one thread).
+    /// work (a `warm_up` job through the queue would only reach one thread)
+    /// and, when `profile` is given, seeds its thread-local §IV-C schedule
+    /// cache from the shared compiled profile. Executor threads do not
+    /// evaluate the analytical model on the serving hot path (they run
+    /// compiled executables), so the seeding is defensive: any energy
+    /// evaluation that does land on these threads — diagnostics, future
+    /// per-request model queries — is derivation-free from the start.
     pub fn spawn(
         label: &'static str,
         artifacts_dir: PathBuf,
         network: String,
         pool: usize,
         warm_splits: Vec<usize>,
+        profile: Option<Arc<NetworkProfile>>,
     ) -> Result<Self> {
         assert!(pool >= 1);
         let (tx, rx) = channel::<Job>();
@@ -110,11 +118,12 @@ impl DeviceExecutor {
             let dir = artifacts_dir.clone();
             let net = network.clone();
             let warm = warm_splits.clone();
+            let seed = profile.clone();
             let ready = ready_tx.clone();
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("{label}-exec-{i}"))
-                    .spawn(move || executor_loop(rx, &dir, &net, &warm, ready))
+                    .spawn(move || executor_loop(rx, &dir, &net, &warm, seed, ready))
                     .context("spawning executor thread")?,
             );
         }
@@ -159,8 +168,14 @@ fn executor_loop(
     dir: &std::path::Path,
     network: &str,
     warm_splits: &[usize],
+    profile: Option<Arc<NetworkProfile>>,
     ready: Sender<Result<()>>,
 ) {
+    // Warm this thread's schedule cache from the shared compiled profile
+    // before any work arrives (see `DeviceExecutor::spawn`).
+    if let Some(p) = &profile {
+        p.seed_thread_schedule_cache();
+    }
     // Each thread owns its own PJRT client + executable cache.
     let runtime = match NetworkRuntime::load(dir, network) {
         Ok(r) => r,

@@ -27,6 +27,15 @@ pub struct MetricsSnapshot {
     /// infeasible at the admission-time channel state (the delay-envelope
     /// lower bound already exceeded the deadline).
     pub shed_infeasible: u64,
+    /// §IV-C schedule-cache entries seeded into worker threads from the
+    /// shared compiled profile at thread start (summed across workers).
+    pub schedule_seeded: u64,
+    /// Mapper derivations observed on worker threads *after* seeding.
+    /// Serving workers decide from precomputed tables and do not invoke
+    /// the mapper, so this stays 0; the counter is the regression canary
+    /// proving no schedule derivation sneaks into the serving hot path
+    /// (e.g. a future per-request model query bypassing the profile).
+    pub schedule_misses_post_warm: u64,
     /// Modeled energy totals, joules.
     pub client_energy_j: f64,
     pub transmit_energy_j: f64,
@@ -117,6 +126,12 @@ impl MetricsSnapshot {
         if self.shed_infeasible > 0 {
             s.push_str(&format!("shed (infeasible) : {}\n", self.shed_infeasible));
         }
+        if self.schedule_seeded > 0 {
+            s.push_str(&format!(
+                "schedule warm-up  : {} seeded, {} post-warm misses\n",
+                self.schedule_seeded, self.schedule_misses_post_warm
+            ));
+        }
         s
     }
 }
@@ -162,6 +177,15 @@ impl Metrics {
     /// deadline.
     pub fn record_shed(&self) {
         self.inner.lock().unwrap().shed_infeasible += 1;
+    }
+
+    /// Record one worker thread's profile warm-up: how many schedules were
+    /// seeded at thread start and how many mapper derivations happened
+    /// afterwards anyway (the zero-post-warmup-miss proof).
+    pub fn record_schedule_warm(&self, seeded: usize, misses_post_warm: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.schedule_seeded += seeded as u64;
+        m.schedule_misses_post_warm += misses_post_warm;
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -235,6 +259,19 @@ mod tests {
         assert!(s.report().contains("shed (infeasible) : 2"));
         // Shed requests are not served requests.
         assert_eq!(s.requests, 0);
+    }
+
+    #[test]
+    fn schedule_warm_accounting() {
+        let m = Metrics::new();
+        m.record_schedule_warm(8, 0);
+        m.record_schedule_warm(8, 0);
+        let s = m.snapshot();
+        assert_eq!(s.schedule_seeded, 16);
+        assert_eq!(s.schedule_misses_post_warm, 0);
+        assert!(s.report().contains("schedule warm-up  : 16 seeded, 0 post-warm misses"));
+        m.record_schedule_warm(8, 3);
+        assert_eq!(m.snapshot().schedule_misses_post_warm, 3);
     }
 
     #[test]

@@ -57,6 +57,18 @@
 //! Per-lane queue stats are exposed via [`Batcher::bucket_stats`],
 //! per-segment serving counts via [`MetricsSnapshot::segment_counts`]
 //! and [`MetricsSnapshot::lane_batches`].
+//!
+//! ## Compiled-profile warm-up
+//!
+//! The coordinator's engines (energy + per-device-class SLO) come from
+//! the policy registry, sliced from one shared compiled
+//! [`crate::cnnergy::NetworkProfile`]; executor and worker threads seed
+//! their thread-local §IV-C schedule caches from that profile at thread
+//! start, so any model evaluation landing on a spawned thread is
+//! derivation-free. Serving decisions themselves are table slices that
+//! never invoke the mapper — [`MetricsSnapshot::schedule_seeded`] /
+//! [`MetricsSnapshot::schedule_misses_post_warm`] are the canary keeping
+//! it that way.
 
 pub mod batcher;
 pub mod executor;

@@ -39,7 +39,7 @@ use super::batcher::{Batcher, Submit};
 
 use crate::channel::{jittered_rate_bps, Channel, ChannelConfig, TransmitEnv};
 use crate::cnn::Network;
-use crate::cnnergy::CnnErgy;
+use crate::cnnergy::{with_global_schedule_cache, CnnErgy, NetworkProfile};
 use crate::compress::jpeg::compress_rgb;
 use crate::compress::rlc;
 use crate::config::Config;
@@ -113,8 +113,12 @@ pub struct Coordinator {
     partitioner: Arc<Partitioner>,
     /// The decision surface every request routes through.
     policy: EnergyPolicy,
-    /// Delay-envelope machinery for admission-time SLO shedding.
-    slo: SloPartitioner,
+    /// Delay-envelope machinery for admission-time SLO shedding — shared
+    /// from the registry entry (one delay envelope per device class).
+    slo: Arc<SloPartitioner>,
+    /// The compiled analytical-model profile: seeds worker/executor
+    /// thread-local schedule caches and backs engine rebuilds.
+    profile: Arc<NetworkProfile>,
     net: Network,
     client: DeviceExecutor,
     cloud: DeviceExecutor,
@@ -136,19 +140,29 @@ impl Coordinator {
     pub fn with_registry(config: CoordinatorConfig, registry: &PolicyRegistry) -> Result<Self> {
         let net = Network::by_name(&config.network)
             .ok_or_else(|| anyhow!("unknown network '{}'", config.network))?;
-        let model = CnnErgy::inference_8bit();
         let entry = registry
             .get_or_build(&config.network, &config.env)
             .context("building policy registry entry")?;
         let partitioner = entry.partitioner().clone();
         let policy = entry.policy();
-        let slo = SloPartitioner::from_shared(partitioner.clone(), DelayModel::new(&net, &model));
+        // The shared compiled profile: seeds executor/worker thread-local
+        // schedule caches, and rebuilds the delay model when the registry
+        // entry came from an imported table (no latency data there).
+        let profile = CnnErgy::inference_8bit().compiled(&net);
+        let slo = match entry.slo_partitioner() {
+            Some(slo) => slo.clone(),
+            None => Arc::new(SloPartitioner::from_shared(
+                partitioner.clone(),
+                DelayModel::from_profile(&profile),
+            )),
+        };
         let client = DeviceExecutor::spawn(
             "client",
             config.artifacts_dir.clone(),
             config.network.clone(),
             1,
             config.warm_splits.clone(),
+            Some(profile.clone()),
         )
         .context("spawning client executor")?;
         let cloud = DeviceExecutor::spawn(
@@ -157,6 +171,7 @@ impl Coordinator {
             config.network.clone(),
             config.cloud_pool.max(1),
             config.warm_splits.clone(),
+            Some(profile.clone()),
         )
         .context("spawning cloud executor pool")?;
         let channel_config = ChannelConfig {
@@ -173,12 +188,18 @@ impl Coordinator {
             partitioner,
             policy,
             slo,
+            profile,
             net,
             client,
             cloud,
             channel,
             metrics: Arc::new(Metrics::new()),
         })
+    }
+
+    /// The compiled analytical-model profile backing this coordinator.
+    pub fn profile(&self) -> &Arc<NetworkProfile> {
+        &self.profile
     }
 
     pub fn partitioner(&self) -> &Partitioner {
@@ -492,21 +513,37 @@ impl Coordinator {
                 let client = self.client.handle();
                 let cloud = self.cloud.handle();
                 handles.push(scope.spawn(move || -> Result<()> {
-                    // Drain whole single-lane batches so each batch shares
-                    // one envelope segment (γ-coherence under jitter).
-                    while let Some((bucket, batch)) = batcher.take_batch_bucketed(batch_max) {
-                        let items: Vec<(InferenceRequest, TransmitEnv)> =
-                            batch.into_iter().map(|(item, _queued_for)| item).collect();
-                        self.metrics.record_batch(bucket, items.len());
-                        for resp in
-                            self.process_admitted_batch(bucket, &items, &client, &cloud)?
-                        {
-                            let idx = (resp.id - id_base) as usize;
-                            self.metrics.record(&resp);
-                            results.lock().unwrap()[idx] = Some(resp);
+                    // Warm this worker's thread-local schedule cache from
+                    // the shared compiled profile before taking work, and
+                    // snapshot the miss counter: the post-warm-up delta is
+                    // recorded in metrics as the regression canary that no
+                    // schedule derivation runs on the serving hot path
+                    // (decisions slice precomputed tables only).
+                    let seeded = self.profile.seed_thread_schedule_cache();
+                    let misses_before = with_global_schedule_cache(|c| c.misses());
+                    let drain = || -> Result<()> {
+                        // Drain whole single-lane batches so each batch
+                        // shares one envelope segment (γ-coherence under
+                        // jitter).
+                        while let Some((bucket, batch)) = batcher.take_batch_bucketed(batch_max) {
+                            let items: Vec<(InferenceRequest, TransmitEnv)> =
+                                batch.into_iter().map(|(item, _queued_for)| item).collect();
+                            self.metrics.record_batch(bucket, items.len());
+                            for resp in
+                                self.process_admitted_batch(bucket, &items, &client, &cloud)?
+                            {
+                                let idx = (resp.id - id_base) as usize;
+                                self.metrics.record(&resp);
+                                results.lock().unwrap()[idx] = Some(resp);
+                            }
                         }
-                    }
-                    Ok(())
+                        Ok(())
+                    };
+                    let outcome = drain();
+                    let misses_after = with_global_schedule_cache(|c| c.misses());
+                    self.metrics
+                        .record_schedule_warm(seeded, misses_after - misses_before);
+                    outcome
                 }));
             }
             // Producer: assign each request its admission-time channel

@@ -16,9 +16,8 @@ use crate::cnn::alexnet;
 use crate::cnnergy::CnnErgy;
 use crate::compress::jpeg::compress_rgb;
 use crate::corpus::Corpus;
-use crate::partition::algorithm2::paper_partitioner;
 use crate::partition::{
-    DecisionContext, DelayModel, PartitionPolicy, SloPartitioner, SloPolicy,
+    DecisionContext, DelayModel, PartitionPolicy, Partitioner, SloPartitioner, SloPolicy,
 };
 use crate::util::stats::mean;
 
@@ -56,10 +55,11 @@ pub fn run_qsweep(out_dir: &Path) -> Result<String> {
 
 pub fn run_slo(out_dir: &Path) -> Result<String> {
     let net = alexnet();
-    let model = CnnErgy::inference_8bit();
+    // Both engines slice the shared compiled profile (one model pass).
+    let profile = CnnErgy::inference_8bit().compiled(&net);
     let policy = SloPolicy::new(SloPartitioner::new(
-        paper_partitioner(&net),
-        DelayModel::new(&net, &model),
+        Partitioner::from_profile(&profile),
+        DelayModel::from_profile(&profile),
     ));
     let env = TransmitEnv::with_effective_rate(80e6, 0.78);
     let ctx = DecisionContext::from_sparsity(policy.partitioner(), MEDIAN_SPARSITY_IN, env);

@@ -11,6 +11,7 @@ use crate::channel::TransmitEnv;
 use crate::cnn::{alexnet, squeezenet_v11, Network};
 use crate::partition::algorithm2::paper_partitioner;
 use crate::partition::{DecisionContext, EnergyPolicy, PartitionPolicy};
+use crate::util::par::par_map;
 
 use super::csvout::write_csv;
 
@@ -45,8 +46,16 @@ fn panel(net: &Network, out_dir: &Path, file: &str) -> Result<String> {
 }
 
 pub fn run(out_dir: &Path) -> Result<String> {
-    let a = panel(&alexnet(), out_dir, "fig11a_alexnet_ecost")?;
-    let b = panel(&squeezenet_v11(), out_dir, "fig11b_squeezenet_ecost")?;
+    // The two panels are independent (each slices its own compiled profile
+    // and writes its own CSV); the parallel sweep driver runs them
+    // concurrently and returns them in order.
+    let jobs: [(Network, &str); 2] = [
+        (alexnet(), "fig11a_alexnet_ecost"),
+        (squeezenet_v11(), "fig11b_squeezenet_ecost"),
+    ];
+    let mut reports = par_map(&jobs, |(net, file)| panel(net, out_dir, file));
+    let b = reports.pop().expect("squeezenet panel")?;
+    let a = reports.pop().expect("alexnet panel")?;
     Ok(format!("{a}\n{b}"))
 }
 

@@ -14,6 +14,7 @@ use crate::channel::TransmitEnv;
 use crate::cnn::alexnet;
 use crate::partition::algorithm2::paper_partitioner;
 use crate::partition::{DecisionContext, EnergyPolicy, PartitionPolicy, SparsityEnvelopePolicy};
+use crate::util::par::par_map;
 
 use super::csvout::write_csv;
 
@@ -41,9 +42,13 @@ pub fn run(out_dir: &Path) -> Result<String> {
     let mut report =
         String::from("AlexNet savings at optimal partition (columns: savings_vs_FCC% / savings_vs_FISC%)\n");
 
-    for (qname, sp) in PAPER_QUARTILES {
-        report.push_str(&format!("\nSparsity-In {qname} = {:.2}%\n", sp * 100.0));
-        report.push_str("  Be_Mbps   P_Tx=0.78W          P_Tx=1.28W\n");
+    // One independent grid sweep per quartile, fanned out over the
+    // parallel driver; chunks come back in quartile order, so rows and
+    // report bytes match the serial loop exactly.
+    for (qrows, qreport) in par_map(&PAPER_QUARTILES, |&(qname, sp)| {
+        let mut qrows = Vec::new();
+        let mut qreport = format!("\nSparsity-In {qname} = {:.2}%\n", sp * 100.0);
+        qreport.push_str("  Be_Mbps   P_Tx=0.78W          P_Tx=1.28W\n");
         for be in be_sweep_mbps() {
             let mut cols = Vec::new();
             for p_tx in P_TX_SWEEP {
@@ -54,13 +59,17 @@ pub fn run(out_dir: &Path) -> Result<String> {
                 let d = policy.decide(&ctx);
                 let fcc = d.savings_vs_fcc() * 100.0;
                 let fisc = d.savings_vs_fisc() * 100.0;
-                rows.push(format!("{qname},{be},{p_tx},{fcc:.2},{fisc:.2},{}", d.l_opt));
+                qrows.push(format!("{qname},{be},{p_tx},{fcc:.2},{fisc:.2},{}", d.l_opt));
                 cols.push(format!("{fcc:>6.1} / {fisc:>5.1}"));
             }
             if (be as u64) % 20 == 0 || be <= 20.0 {
-                report.push_str(&format!("  {be:>7.0}   {}   {}\n", cols[0], cols[1]));
+                qreport.push_str(&format!("  {be:>7.0}   {}   {}\n", cols[0], cols[1]));
             }
         }
+        (qrows, qreport)
+    }) {
+        rows.extend(qrows);
+        report.push_str(&qreport);
     }
     write_csv(
         out_dir,

@@ -12,8 +12,10 @@ use crate::cnn::alexnet;
 use crate::cnnergy::CnnErgy;
 use crate::partition::algorithm2::paper_partitioner;
 use crate::partition::{
-    DecisionContext, DelayModel, EnergyPolicy, PartitionPolicy, SloPartitioner, SloPolicy,
+    DecisionContext, DelayModel, EnergyPolicy, PartitionPolicy, Partitioner, SloPartitioner,
+    SloPolicy,
 };
+use crate::util::par::par_map;
 
 use super::csvout::write_csv;
 use super::fig11::MEDIAN_SPARSITY_IN;
@@ -23,11 +25,20 @@ use super::fig11::MEDIAN_SPARSITY_IN;
 /// ones — the regime the flat-valley analysis cares about.
 const FIG14A_SLO_S: f64 = 0.015;
 
+/// The Fig. 14(c) GLB sweep points, ascending kB.
+fn glb_sweep_sizes_kb() -> Vec<usize> {
+    let mut sizes: Vec<usize> = (3..=9).map(|p| 1usize << p).chain([88, 96, 192]).collect();
+    sizes.sort_unstable();
+    sizes
+}
+
 pub fn run_a(out_dir: &Path) -> Result<String> {
     let net = alexnet();
-    let model = CnnErgy::inference_8bit();
-    let p = paper_partitioner(&net);
-    let dm = DelayModel::new(&net, &model);
+    // Both engines slice the one shared compiled profile — no model
+    // re-evaluation between the energy and delay surfaces.
+    let profile = CnnErgy::inference_8bit().compiled(&net);
+    let p = Partitioner::from_profile(&profile);
+    let dm = DelayModel::from_profile(&profile);
     let energy = EnergyPolicy::new(p.clone());
     let slo_policy = SloPolicy::new(SloPartitioner::new(p.clone(), dm.clone()));
 
@@ -35,8 +46,10 @@ pub fn run_a(out_dir: &Path) -> Result<String> {
     let mut report = String::from(
         "AlexNet inference delay at Q2 (ms):\nBe_Mbps   optimal      FCC     FISC  l_opt  | SLO 15ms: split feas\n",
     );
-    let mut be = 10.0;
-    while be <= 300.0 {
+    // Per-rate points are independent; the parallel driver fans them out
+    // and returns them in sweep order (rows/report bytes unchanged).
+    let bes: Vec<f64> = (1..=30).map(|i| (i * 10) as f64).collect();
+    for (row, line) in par_map(&bes, |&be| {
         let env = TransmitEnv::with_effective_rate(be * 1e6, 0.78);
         let ctx = DecisionContext::from_sparsity(&p, MEDIAN_SPARSITY_IN, env);
         let d = energy.decide(&ctx);
@@ -46,15 +59,15 @@ pub fn run_a(out_dir: &Path) -> Result<String> {
         // The latency-constrained decision over the same sweep: the
         // envelope-backed SLO path (O(log L)), not the delay scan.
         let slo = slo_policy.decide(&ctx.with_slo(FIG14A_SLO_S));
-        rows.push(format!(
+        let row = format!(
             "{be},{t_opt:.3},{t_fcc:.3},{t_fisc:.3},{},{},{},{:.3}",
             d.l_opt,
             slo.l_opt,
             slo.feasible,
             slo.t_delay_s.unwrap_or(f64::NAN) * 1e3
-        ));
-        if (be as u64) % 20 == 0 || be <= 20.0 {
-            report.push_str(&format!(
+        );
+        let line = if (be as u64) % 20 == 0 || be <= 20.0 {
+            Some(format!(
                 "{be:>7.0} {t_opt:>9.2} {t_fcc:>8.2} {t_fisc:>8.2}  {:>5}  | {:>11} {}\n",
                 if d.l_opt == 0 {
                     "In".to_string()
@@ -65,9 +78,16 @@ pub fn run_a(out_dir: &Path) -> Result<String> {
                 },
                 slo.l_opt,
                 slo.feasible
-            ));
+            ))
+        } else {
+            None
+        };
+        (row, line)
+    }) {
+        rows.push(row);
+        if let Some(line) = line {
+            report.push_str(&line);
         }
-        be += 10.0;
     }
     write_csv(
         out_dir,
@@ -134,12 +154,17 @@ pub fn run_c(out_dir: &Path) -> Result<String> {
     let mut rows = Vec::new();
     let mut report = String::from("AlexNet total energy vs GLB size (8-bit):\nGLB_kB  total_mJ\n");
     let mut best = (0usize, f64::INFINITY);
-    let sizes_kb: Vec<usize> = (3..=9).map(|p| 1usize << p).chain([88, 96, 192]).collect();
-    let mut sizes = sizes_kb.clone();
-    sizes.sort_unstable();
-    for kb in sizes {
-        let model = CnnErgy::inference_8bit().with_glb_size(kb * 1024);
-        let total = model.total_energy_pj(&net) * 1e-9;
+    let sizes = glb_sweep_sizes_kb();
+    // Incremental sweep through the compiled base profile: each GLB point
+    // re-derives only the schedule/GLB-dependent energy terms (the volume
+    // and sparsity tables are reused) via the keyed profile cache, fanned
+    // out over the parallel driver. Totals are bit-identical to a full
+    // per-point model rebuild (tested below).
+    let base = CnnErgy::inference_8bit().compiled(&net);
+    let totals = par_map(&sizes, |&kb| {
+        base.with_glb_size(kb * 1024).total_energy_pj() * 1e-9
+    });
+    for (&kb, &total) in sizes.iter().zip(&totals) {
         if total < best.1 {
             best = (kb, total);
         }
@@ -221,6 +246,42 @@ mod tests {
         let scan = slo_p.decide_with_slo_full(MEDIAN_SPARSITY_IN, &slow_env, FIG14A_SLO_S);
         assert_eq!(tight.choice.l_opt, scan.inner.l_opt);
         assert_eq!(tight.feasible, scan.feasible);
+    }
+
+    #[test]
+    fn fig14c_incremental_sweep_bit_identical_to_full_rebuild() {
+        // Satellite check: routing the GLB sweep through the incremental
+        // profile path must not move a single bit relative to the old
+        // full-model-rebuild-per-point loop.
+        let net = alexnet();
+        let base = CnnErgy::inference_8bit().compiled(&net);
+        for kb in glb_sweep_sizes_kb() {
+            let fresh = CnnErgy::inference_8bit()
+                .with_glb_size(kb * 1024)
+                .total_energy_pj(&net);
+            let incremental = base.with_glb_size(kb * 1024).total_energy_pj();
+            assert_eq!(incremental, fresh, "GLB {kb} kB");
+        }
+    }
+
+    #[test]
+    fn fig14c_csv_byte_identical_to_legacy_rebuild_output() {
+        // The whole written CSV, byte for byte, against the legacy
+        // direct-rebuild generation. Per-process dir: a fixed path would
+        // race concurrent test runs sharing the same temp dir.
+        let dir = std::env::temp_dir().join(format!("neupart_fig14c_csv_{}", std::process::id()));
+        run_c(&dir).unwrap();
+        let written = std::fs::read_to_string(dir.join("fig14c_glb_sweep.csv")).unwrap();
+        let net = alexnet();
+        let mut expected = String::from("glb_kB,total_mJ\n");
+        for kb in glb_sweep_sizes_kb() {
+            let total = CnnErgy::inference_8bit()
+                .with_glb_size(kb * 1024)
+                .total_energy_pj(&net)
+                * 1e-9;
+            expected.push_str(&format!("{kb},{total:.4}\n"));
+        }
+        assert_eq!(written, expected);
     }
 
     #[test]

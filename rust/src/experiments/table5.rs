@@ -16,6 +16,7 @@ use crate::channel::TransmitEnv;
 use crate::cnn::{alexnet, googlenet, squeezenet_v11, Network};
 use crate::partition::algorithm2::paper_partitioner;
 use crate::partition::{DecisionContext, EnergyPolicy, PartitionPolicy};
+use crate::util::par::par_map;
 use crate::util::stats::quantile;
 
 use super::csvout::write_csv;
@@ -86,15 +87,19 @@ pub fn run(out_dir: &Path) -> Result<String> {
         "Table V: average % savings at optimal layer (B_e = 80 Mbps)\n\
          network          P_Tx     Q-I    Q-II   Q-III    Q-IV | vs FISC\n",
     );
-    for (net, p_tx) in nets {
-        let (q, fisc) = quartile_savings(&net, p_tx, &samples);
+    // The three network rows are independent full-corpus sweeps; the
+    // parallel driver fans them out and returns them in table order.
+    for (name, p_tx, q, fisc) in par_map(&nets, |(net, p_tx)| {
+        let (q, fisc) = quartile_savings(net, *p_tx, &samples);
+        (net.name, *p_tx, q, fisc)
+    }) {
         rows.push(format!(
-            "{},{p_tx},{:.1},{:.1},{:.1},{:.1},{:.1}",
-            net.name, q[0], q[1], q[2], q[3], fisc
+            "{name},{p_tx},{:.1},{:.1},{:.1},{:.1},{:.1}",
+            q[0], q[1], q[2], q[3], fisc
         ));
         report.push_str(&format!(
-            "{:<16} {p_tx:>4.2}W {:>7.1} {:>7.1} {:>7.1} {:>7.1} | {:>6.1}\n",
-            net.name, q[0], q[1], q[2], q[3], fisc
+            "{name:<16} {p_tx:>4.2}W {:>7.1} {:>7.1} {:>7.1} {:>7.1} | {:>6.1}\n",
+            q[0], q[1], q[2], q[3], fisc
         ));
     }
     report.push_str(

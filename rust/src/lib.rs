@@ -31,8 +31,22 @@
 //! `decide_*` methods survive as deprecated wrappers, see the
 //! [`partition`] module docs for the migration table).
 //!
-//! Three precomputation layers make the per-request work effectively O(1):
+//! Four precomputation layers make the per-request work effectively O(1):
 //!
+//! * **Compiled network profiles** ([`cnnergy::NetworkProfile`]): the §IV
+//!   analytical model is evaluated once per (network, hardware, tech)
+//!   point into an `Arc`-shared table artifact ([`cnnergy::CnnErgy::compiled`],
+//!   process-wide keyed cache), so engine builds
+//!   ([`Partitioner::from_profile`](partition::Partitioner::from_profile),
+//!   [`partition::DelayModel::from_profile`], the fleet registry) are
+//!   table slicing — bit-identical to the direct path — and sweeps are
+//!   incremental: channel/sparsity knobs never touch the profile, GLB
+//!   sweeps re-derive only the terms they affect
+//!   ([`cnnergy::NetworkProfile::with_glb_size`]). Spawned worker threads
+//!   warm their mapper caches from the profile
+//!   ([`cnnergy::NetworkProfile::seed_thread_schedule_cache`]), and the
+//!   figure sweeps fan out over a scoped-thread parallel driver
+//!   ([`util::par::par_map`]).
 //! * **Lower-envelope partitioning** ([`partition::envelope`]): every fixed
 //!   split's cost `E[l] + γ·bits[l]` is a line in the channel parameter
 //!   `γ = P_Tx / B_e`, so the [`Partitioner`] precomputes the convex lower

@@ -32,7 +32,7 @@
 use crate::channel::TransmitEnv;
 use crate::cnn::Network;
 use crate::cnnergy::sparsity::layer_d_rlc_bits;
-use crate::cnnergy::CnnErgy;
+use crate::cnnergy::{CnnErgy, NetworkProfile};
 
 use super::envelope::{CostLine, Envelope};
 
@@ -131,7 +131,10 @@ impl SplitChoice {
 }
 
 impl Partitioner {
-    /// Offline precomputation: bind a network to an energy model.
+    /// Offline precomputation: bind a network to an energy model. This
+    /// re-runs the full §IV analytical model; prefer
+    /// [`Partitioner::from_profile`] over a compiled (and usually shared)
+    /// [`NetworkProfile`], which slices the same tables bit-identically.
     pub fn new(net: &Network, model: &CnnErgy) -> Self {
         let bw = model.hw.b_w;
         let cumulative_energy_j = model
@@ -144,6 +147,25 @@ impl Partitioner {
             layer_d_rlc_bits(net, bw),
             net.input_raw_bits(bw),
             bw,
+        )
+    }
+
+    /// Build from a compiled [`NetworkProfile`]: table slicing instead of
+    /// model re-evaluation. The profile's tables are computed with the
+    /// exact expressions [`Partitioner::new`] uses, and the pJ→J map below
+    /// is the same, so the resulting engine is bit-identical
+    /// (property-tested in `rust/tests/prop_invariants.rs`).
+    pub fn from_profile(profile: &NetworkProfile) -> Self {
+        let cumulative_energy_j = profile
+            .cumulative_energy_pj()
+            .iter()
+            .map(|&pj| pj * 1e-12)
+            .collect();
+        Self::from_parts(
+            cumulative_energy_j,
+            profile.d_rlc_bits().to_vec(),
+            profile.input_raw_bits(),
+            profile.bit_width(),
         )
     }
 
@@ -761,10 +783,12 @@ pub struct FixedWinner {
     pub fisc_cost_j: f64,
 }
 
-/// Convenience: build the partitioner for a named full-size network on the
-/// paper's 8-bit inference model.
+/// Convenience: build the partitioner for a network on the paper's 8-bit
+/// inference model, sliced from the shared compiled profile
+/// ([`crate::cnnergy::paper_profile`]) — bit-identical to a direct
+/// [`Partitioner::new`] build, without re-running the analytical model.
 pub fn paper_partitioner(net: &Network) -> Partitioner {
-    Partitioner::new(net, &CnnErgy::inference_8bit())
+    Partitioner::from_profile(&CnnErgy::inference_8bit().compiled(net))
 }
 
 #[cfg(test)]
@@ -797,6 +821,23 @@ mod tests {
             ["P1", "P2", "P3", "C2", "C5"].contains(&name),
             "unexpected optimum {name}"
         );
+    }
+
+    #[test]
+    fn from_profile_build_is_bit_identical_to_direct_build() {
+        let net = alexnet();
+        let model = CnnErgy::inference_8bit();
+        let direct = Partitioner::new(&net, &model);
+        let profiled = Partitioner::from_profile(&model.compiled(&net));
+        assert_eq!(profiled.energy_table_j(), direct.energy_table_j());
+        assert_eq!(profiled.volume_table_bits(), direct.volume_table_bits());
+        assert_eq!(profiled.input_raw_bits(), direct.input_raw_bits());
+        assert_eq!(profiled.bit_width(), direct.bit_width());
+        assert_eq!(
+            profiled.envelope().breakpoints(),
+            direct.envelope().breakpoints()
+        );
+        assert_eq!(profiled.envelope().segments(), direct.envelope().segments());
     }
 
     #[test]

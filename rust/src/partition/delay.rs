@@ -13,7 +13,7 @@
 
 use crate::channel::TransmitEnv;
 use crate::cnn::Network;
-use crate::cnnergy::CnnErgy;
+use crate::cnnergy::{CnnErgy, NetworkProfile};
 
 use super::Partitioner;
 
@@ -34,14 +34,32 @@ pub struct DelayModel {
 }
 
 impl DelayModel {
+    /// Bind a network to an energy model — re-runs the full §IV model for
+    /// the client latencies; prefer [`DelayModel::from_profile`], which
+    /// slices the same latency table from a compiled profile.
     pub fn new(net: &Network, model: &CnnErgy) -> Self {
         let client_s = model.layer_latencies_s(net);
-        let cloud_s = net
-            .layers
+        let cloud_s = Self::cloud_latencies_s(net);
+        Self::from_parts(client_s, cloud_s)
+    }
+
+    /// Build from a compiled [`NetworkProfile`]: the client latencies are
+    /// table slices, the (cheap, MAC-count-only) cloud latencies derive
+    /// from the profile's network — bit-identical to [`DelayModel::new`]
+    /// on the same (network, model) pair (property-tested).
+    pub fn from_profile(profile: &NetworkProfile) -> Self {
+        Self::from_parts(
+            profile.latencies_s().to_vec(),
+            Self::cloud_latencies_s(profile.network()),
+        )
+    }
+
+    /// Per-layer cloud latency on the paper's TPU (`2·#MACs / ops-rate`).
+    fn cloud_latencies_s(net: &Network) -> Vec<f64> {
+        net.layers
             .iter()
             .map(|l| 2.0 * l.macs() as f64 / TPU_OPS_PER_S)
-            .collect();
-        Self::from_parts(client_s, cloud_s)
+            .collect()
     }
 
     /// Build from externally supplied per-layer latencies (profiled tables,
@@ -166,6 +184,27 @@ mod tests {
         let t_opt = dm.t_delay_s(d.l_opt, d.transmit_bits, &env);
         let t_fisc = dm.fisc_delay_s(&env);
         assert!(t_opt <= t_fisc * 1.05, "opt {t_opt} vs fisc {t_fisc}");
+    }
+
+    #[test]
+    fn from_profile_matches_direct_build_bit_for_bit() {
+        let net = alexnet();
+        let model = CnnErgy::inference_8bit();
+        let direct = DelayModel::new(&net, &model);
+        let profiled = DelayModel::from_profile(&model.compiled(&net));
+        assert_eq!(profiled.num_layers(), direct.num_layers());
+        for split in 0..=direct.num_layers() {
+            assert_eq!(
+                profiled.client_prefix_s(split),
+                direct.client_prefix_s(split),
+                "split {split}"
+            );
+            assert_eq!(
+                profiled.cloud_suffix_s(split),
+                direct.cloud_suffix_s(split),
+                "split {split}"
+            );
+        }
     }
 
     #[test]

@@ -21,6 +21,13 @@
 //! [`PolicyRegistry`] — small enough to ship to clients for fully
 //! client-side decisions.
 //!
+//! Engine builds slice a compiled [`crate::cnnergy::NetworkProfile`]
+//! ([`Partitioner::from_profile`], [`DelayModel::from_profile`]) instead
+//! of re-running the §IV analytical model — bit-identical tables, one
+//! model pass per (network, hardware) point shared process-wide; registry
+//! entries built analytically also carry a per-device-class SLO engine
+//! ([`registry::RegistryEntry::slo_partitioner`]).
+//!
 //! ## Migrating off the deprecated `decide_*` methods
 //!
 //! The historical per-optimization entry points survive as thin

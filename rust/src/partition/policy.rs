@@ -332,9 +332,15 @@ pub struct SloPolicy {
 
 impl SloPolicy {
     pub fn new(slo_partitioner: SloPartitioner) -> Self {
-        SloPolicy {
-            slo: Arc::new(slo_partitioner),
-        }
+        Self::from_shared(Arc::new(slo_partitioner))
+    }
+
+    /// Share one SLO engine across policies/connections (the
+    /// [`crate::partition::registry::PolicyRegistry`] path: registry
+    /// entries carry a per-device-class delay model built from the same
+    /// compiled profile as the energy engine).
+    pub fn from_shared(slo: Arc<SloPartitioner>) -> Self {
+        SloPolicy { slo }
     }
 
     pub fn slo_partitioner(&self) -> &SloPartitioner {

@@ -18,6 +18,16 @@
 //! * [`PolicyRegistry`] — a thread-safe map of those artifacts with their
 //!   built engines, shared across connections; [`RegistryEntry::policy`]
 //!   hands out [`EnergyPolicy`] views over one shared [`Partitioner`].
+//!
+//! Entries built from the analytical models ([`PolicyRegistry::get_or_build`],
+//! the Table-IV fleet builder) slice every engine from one shared compiled
+//! [`NetworkProfile`](crate::cnnergy::NetworkProfile) — the partitioner
+//! build is table slicing, and each entry also carries a per-device-class
+//! SLO engine ([`RegistryEntry::slo_partitioner`]: a [`SloPartitioner`]
+//! over the same shared [`Partitioner`] plus a [`DelayModel`] from the
+//! same profile), so `SloPolicy` serving and infeasible-shedding stop
+//! rebuilding delay envelopes per connection. Entries rebuilt from
+//! imported JSON tables carry no latency data and hence no SLO engine.
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, RwLock};
@@ -28,9 +38,12 @@ use crate::channel::{TransmitEnv, DEVICE_POWER_TABLE};
 use crate::cnn::Network;
 use crate::cnnergy::CnnErgy;
 use crate::util::json::{self, Value};
+use crate::util::par::par_map;
 
 use super::algorithm2::Partitioner;
-use super::policy::{EnergyPolicy, SparsityEnvelopePolicy};
+use super::constrained::SloPartitioner;
+use super::delay::DelayModel;
+use super::policy::{EnergyPolicy, SloPolicy, SparsityEnvelopePolicy};
 
 /// Transmit-power class name for a device power: the Table-IV
 /// platform+radio whose surveyed uplink power matches (±5 mW), else a
@@ -239,12 +252,16 @@ impl EnvelopeTable {
     }
 }
 
-/// One registry slot: the serializable artifact plus its built engine,
+/// One registry slot: the serializable artifact plus its built engines,
 /// shared across connections via `Arc`.
 #[derive(Debug)]
 pub struct RegistryEntry {
     table: EnvelopeTable,
     partitioner: Arc<Partitioner>,
+    /// Per-device-class SLO engine over the same shared partitioner, built
+    /// from the same compiled profile (module docs). `None` for entries
+    /// rebuilt from imported tables, which carry no latency data.
+    slo: Option<Arc<SloPartitioner>>,
 }
 
 impl RegistryEntry {
@@ -256,10 +273,23 @@ impl RegistryEntry {
         &self.partitioner
     }
 
+    /// The shared SLO engine (delay envelope + constrained frontier) for
+    /// this device class, when the entry was built from the analytical
+    /// models.
+    pub fn slo_partitioner(&self) -> Option<&Arc<SloPartitioner>> {
+        self.slo.as_ref()
+    }
+
     /// An [`EnergyPolicy`] view over the shared engine (cheap: one `Arc`
     /// clone).
     pub fn policy(&self) -> EnergyPolicy {
         EnergyPolicy::from_shared(self.partitioner.clone())
+    }
+
+    /// An [`SloPolicy`] view over the shared SLO engine, when present
+    /// (cheap: one `Arc` clone).
+    pub fn slo_policy(&self) -> Option<SloPolicy> {
+        self.slo.as_ref().map(|s| SloPolicy::from_shared(s.clone()))
     }
 
     /// A [`SparsityEnvelopePolicy`] over the shared engine at this
@@ -326,13 +356,16 @@ impl PolicyRegistry {
             return existing;
         }
         let partitioner = Arc::new(table.to_partitioner());
-        self.insert_entry(table, partitioner)
+        // Imported tables carry decision tables only — no latency data, so
+        // no SLO engine (module docs).
+        self.insert_entry(table, partitioner, None)
     }
 
     fn insert_entry(
         &self,
         table: EnvelopeTable,
         partitioner: Arc<Partitioner>,
+        slo: Option<Arc<SloPartitioner>>,
     ) -> Arc<RegistryEntry> {
         let (network, device) = table.key();
         let mut entries = self.entries.write().unwrap();
@@ -340,12 +373,20 @@ impl PolicyRegistry {
             .entry(network)
             .or_default()
             .entry(device)
-            .or_insert_with(|| Arc::new(RegistryEntry { table, partitioner }))
+            .or_insert_with(|| {
+                Arc::new(RegistryEntry {
+                    table,
+                    partitioner,
+                    slo,
+                })
+            })
             .clone()
     }
 
     /// Entry for `(network, device_class(env.p_tx_w))`, building the
-    /// engine from the analytical models on first use.
+    /// engines from the analytical models on first use: one shared
+    /// compiled profile feeds both the partitioner (table slicing) and the
+    /// per-device-class SLO engine.
     pub fn get_or_build(&self, network: &str, env: &TransmitEnv) -> Result<Arc<RegistryEntry>> {
         let device = device_class(env.p_tx_w);
         if let Some(entry) = self.get(network, &device) {
@@ -353,20 +394,35 @@ impl PolicyRegistry {
         }
         let net = Network::by_name(network)
             .ok_or_else(|| anyhow!("unknown network '{network}' for policy registry"))?;
-        let partitioner = Partitioner::new(&net, &CnnErgy::inference_8bit());
+        let profile = CnnErgy::inference_8bit().compiled(&net);
+        let partitioner = Arc::new(Partitioner::from_profile(&profile));
+        let slo = Arc::new(SloPartitioner::from_shared(
+            partitioner.clone(),
+            DelayModel::from_profile(&profile),
+        ));
         let table = EnvelopeTable::from_partitioner(network, &device, env.p_tx_w, &partitioner);
-        Ok(self.insert_entry(table, Arc::new(partitioner)))
+        Ok(self.insert_entry(table, partitioner, Some(slo)))
     }
 
     /// Build one entry per Table-IV device with a surveyed WLAN power for
-    /// `network` (the paper's evaluation fleet). Returns the number of
-    /// entries present for the network afterwards.
+    /// `network` (the paper's evaluation fleet), fanned out over the
+    /// parallel sweep driver — the per-device builds are independent and
+    /// each is table slicing over the one shared profile. Returns the
+    /// number of entries present for the network afterwards.
     pub fn build_table_iv_fleet(&self, network: &str) -> Result<usize> {
-        for d in DEVICE_POWER_TABLE {
-            if let Some(p_tx_w) = d.wlan_w {
-                let env = TransmitEnv::with_effective_rate(80.0e6, p_tx_w);
-                self.get_or_build(network, &env)?;
-            }
+        // Compile the shared profile ONCE before fanning out: every device
+        // class shares one (network, model) cache key, and the profile
+        // cache has no in-flight dedup, so racing cold workers would each
+        // run the full model pass and discard all but one result.
+        if let Some(net) = Network::by_name(network) {
+            let _ = CnnErgy::inference_8bit().compiled(&net);
+        }
+        let powers: Vec<f64> = DEVICE_POWER_TABLE.iter().filter_map(|d| d.wlan_w).collect();
+        for built in par_map(&powers, |&p_tx_w| {
+            let env = TransmitEnv::with_effective_rate(80.0e6, p_tx_w);
+            self.get_or_build(network, &env).map(|_| ())
+        }) {
+            built?;
         }
         Ok(self.entries.read().unwrap().get(network).map_or(0, BTreeMap::len))
     }
@@ -411,6 +467,37 @@ mod tests {
     use crate::cnn::alexnet;
     use crate::partition::algorithm2::paper_partitioner;
     use crate::partition::policy::{DecisionContext, PartitionPolicy};
+
+    #[test]
+    fn analytic_entries_carry_shared_slo_engines() {
+        let registry = PolicyRegistry::new();
+        let env = TransmitEnv::with_effective_rate(80e6, 0.78);
+        let entry = registry.get_or_build("alexnet", &env).unwrap();
+        let slo = entry
+            .slo_partitioner()
+            .expect("analytic entries carry a per-device SLO engine");
+        // The SLO engine shares the entry's partitioner (no deep copy).
+        assert_eq!(slo.partitioner().num_layers(), entry.partitioner().num_layers());
+        // Decisions match an independently built SLO stack bit-for-bit.
+        let net = alexnet();
+        let model = CnnErgy::inference_8bit();
+        let fresh = SloPartitioner::new(
+            Partitioner::new(&net, &model),
+            DelayModel::new(&net, &model),
+        );
+        let base_ctx = DecisionContext::from_sparsity(entry.partitioner(), 0.608, env);
+        let ctx = base_ctx.with_slo(0.015);
+        let via_entry = entry.slo_policy().unwrap().decide(&ctx);
+        let direct = SloPolicy::new(fresh).decide(&ctx);
+        assert_eq!(via_entry, direct);
+        // Imported (table-only) registries have no latency data, so no
+        // SLO engine.
+        let client = PolicyRegistry::new();
+        client.import_json(&registry.export_json()).unwrap();
+        let imported = client.get("alexnet", "LG Nexus 4 WLAN").unwrap();
+        assert!(imported.slo_partitioner().is_none());
+        assert!(imported.slo_policy().is_none());
+    }
 
     #[test]
     fn device_classes_match_table_iv() {

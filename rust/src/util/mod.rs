@@ -1,6 +1,7 @@
 //! Small self-contained utilities (offline build: no external crates).
 
 pub mod json;
+pub mod par;
 pub mod rng;
 pub mod stats;
 

@@ -1,0 +1,89 @@
+//! Scoped-thread parallel sweep driver (offline build: no rayon).
+//!
+//! [`par_map`] fans a slice of independent work items over
+//! `std::thread::scope` workers with an atomic work-stealing index and
+//! returns results **in input order**, so callers that assemble CSV rows
+//! or report text from the results produce byte-identical output to the
+//! serial loop they replaced. Used by the figure sweeps
+//! (`experiments::fig11`/`fig13`/`fig14`/`table5`), the Table-IV fleet
+//! builder (`partition::PolicyRegistry::build_table_iv_fleet`) and the
+//! cnnergy bench's parallel-vs-serial comparison.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Apply `f` to every item, fanning out over scoped threads; results come
+/// back in input order. Falls back to a plain serial map for zero/one
+/// items or single-core hosts. `f` runs concurrently on multiple threads,
+/// so it must be `Sync` (shared by reference) and side-effect-safe; a
+/// panicking item propagates the panic to the caller.
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    let threads = std::thread::available_parallelism()
+        .map_or(1, |p| p.get())
+        .min(n);
+    if threads <= 1 {
+        return items.iter().map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut tagged: Vec<(usize, R)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f(&items[i])));
+                    }
+                    local
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("par_map worker panicked"))
+            .collect()
+    });
+    tagged.sort_unstable_by_key(|&(i, _)| i);
+    tagged.into_iter().map(|(_, r)| r).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let items: Vec<usize> = (0..257).collect();
+        let out = par_map(&items, |&x| x * 2);
+        assert_eq!(out, items.iter().map(|&x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn handles_empty_and_single() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(par_map(&empty, |&x| x).is_empty());
+        assert_eq!(par_map(&[41u32], |&x| x + 1), vec![42]);
+    }
+
+    #[test]
+    fn matches_serial_map_on_heterogeneous_work() {
+        // Uneven per-item cost exercises the work-stealing index.
+        let items: Vec<u64> = (0..64).collect();
+        let serial: Vec<u64> = items
+            .iter()
+            .map(|&x| (0..(x % 7) * 1000 + 1).fold(x, |a, b| a.wrapping_add(b * b)))
+            .collect();
+        let parallel = par_map(&items, |&x| {
+            (0..(x % 7) * 1000 + 1).fold(x, |a, b| a.wrapping_add(b * b))
+        });
+        assert_eq!(parallel, serial);
+    }
+}

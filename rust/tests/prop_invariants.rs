@@ -9,8 +9,8 @@
 #![allow(deprecated)]
 
 use neupart::channel::TransmitEnv;
-use neupart::cnn::ConvShape;
-use neupart::cnnergy::{schedule, HwConfig};
+use neupart::cnn::{ConvShape, Network};
+use neupart::cnnergy::{schedule, CnnErgy, HwConfig, NetworkProfile};
 use neupart::compress::rlc;
 use neupart::partition::{
     decide_with_slo_scan, DecisionContext, DelayModel, EnergyPolicy, EnvelopeTable,
@@ -683,5 +683,142 @@ fn random_json(rng: &mut Rng, depth: usize) -> json::Value {
                     .collect(),
             )
         }
+    }
+}
+
+// ---- compiled NetworkProfile (PR 4) ----
+
+/// Random-but-valid energy model: one of the paper's two operating points,
+/// optionally rescaled to a random GLB size and client throughput — the
+/// knobs engine builds and sweeps actually turn.
+fn random_model(rng: &mut Rng) -> CnnErgy {
+    let mut model = if rng.next_f64() < 0.5 {
+        CnnErgy::inference_8bit()
+    } else {
+        CnnErgy::eyeriss_16bit()
+    };
+    if rng.next_f64() < 0.7 {
+        model = model.with_glb_size(rng.range_usize(4, 512) * 1024 + rng.range_usize(0, 1023));
+    }
+    if rng.next_f64() < 0.5 {
+        model.hw.throughput_macs *= 0.25 + rng.next_f64();
+    }
+    model
+}
+
+#[test]
+fn prop_profile_backed_engines_bit_identical_to_fresh_builds() {
+    // The tentpole contract: a profile-backed engine build (table slicing)
+    // reproduces the direct full-model build bit for bit — tables,
+    // envelopes, delay sums and decisions — across random hardware/tech
+    // points, GLB sizes, sparsities and degenerate channels.
+    let mut rng = Rng::new(0x9420_F11E);
+    let nets = [
+        Network::by_name("alexnet").unwrap(),
+        Network::by_name("squeezenet").unwrap(),
+        Network::by_name("googlenet").unwrap(),
+        Network::by_name("tiny_alexnet").unwrap(),
+    ];
+    for case in 0..40 {
+        let net = rng.choose(&nets);
+        let model = random_model(&mut rng);
+        let profile = NetworkProfile::compute(net, &model);
+        let ctx_s = format!("case {case}: {} glb={}", net.name, model.hw.glb_bytes);
+
+        // Profile tables == direct model queries.
+        assert_eq!(profile.breakdowns(), model.network_breakdowns(net).as_slice(), "{ctx_s}");
+        assert_eq!(
+            profile.cumulative_energy_pj(),
+            model.cumulative_energy_pj(net).as_slice(),
+            "{ctx_s}"
+        );
+        assert_eq!(profile.latencies_s(), model.layer_latencies_s(net).as_slice(), "{ctx_s}");
+        assert_eq!(profile.total_energy_pj(), model.total_energy_pj(net), "{ctx_s}");
+
+        // Engine tables == fresh builds.
+        let fresh_p = Partitioner::new(net, &model);
+        let prof_p = Partitioner::from_profile(&profile);
+        assert_eq!(prof_p.energy_table_j(), fresh_p.energy_table_j(), "{ctx_s}");
+        assert_eq!(prof_p.volume_table_bits(), fresh_p.volume_table_bits(), "{ctx_s}");
+        assert_eq!(prof_p.input_raw_bits(), fresh_p.input_raw_bits(), "{ctx_s}");
+        assert_eq!(prof_p.envelope().breakpoints(), fresh_p.envelope().breakpoints(), "{ctx_s}");
+        assert_eq!(prof_p.envelope().segments(), fresh_p.envelope().segments(), "{ctx_s}");
+        let fresh_dm = DelayModel::new(net, &model);
+        let prof_dm = DelayModel::from_profile(&profile);
+        for split in 0..=net.num_layers() {
+            assert_eq!(
+                prof_dm.client_prefix_s(split),
+                fresh_dm.client_prefix_s(split),
+                "{ctx_s} split {split}"
+            );
+            assert_eq!(
+                prof_dm.cloud_suffix_s(split),
+                fresh_dm.cloud_suffix_s(split),
+                "{ctx_s} split {split}"
+            );
+        }
+
+        // Decisions — energy and SLO policies — across random channel
+        // states including degenerate ones, and random probe sparsities.
+        let fresh_energy = EnergyPolicy::new(fresh_p.clone());
+        let prof_energy = EnergyPolicy::new(prof_p.clone());
+        let fresh_slo = SloPolicy::new(SloPartitioner::new(fresh_p, fresh_dm));
+        let prof_slo = SloPolicy::new(SloPartitioner::new(prof_p, prof_dm));
+        for _ in 0..8 {
+            let b_e = *rng.choose(&[0.0, -3.0, f64::NAN, 1e4, 1e6, 8e7, 2e8, 1e12]);
+            let p_tx = *rng.choose(&[0.0, 0.25, 0.78, 1.28, 2.5]);
+            let env = TransmitEnv::with_effective_rate(b_e, p_tx);
+            let sp = rng.next_f64();
+            let ctx = DecisionContext::from_sparsity(prof_energy.partitioner(), sp, env);
+            assert_eq!(prof_energy.decide(&ctx), fresh_energy.decide(&ctx), "{ctx_s}");
+            let slo_s = rng.next_f64() * 0.05;
+            let slo_ctx = ctx.with_slo(slo_s);
+            assert_eq!(prof_slo.decide(&slo_ctx), fresh_slo.decide(&slo_ctx), "{ctx_s}");
+        }
+    }
+}
+
+#[test]
+fn prop_incremental_glb_resweep_bit_identical_to_rebuild() {
+    // The incremental sweep contract: resizing a compiled profile's GLB
+    // re-derives only the schedule/GLB-dependent terms, yet every table
+    // matches a cold full rebuild at the resized model bit for bit.
+    let mut rng = Rng::new(0x61B5_3EE9);
+    let nets = [
+        Network::by_name("alexnet").unwrap(),
+        Network::by_name("squeezenet").unwrap(),
+    ];
+    for case in 0..30 {
+        let net = rng.choose(&nets);
+        let model = if rng.next_f64() < 0.5 {
+            CnnErgy::inference_8bit()
+        } else {
+            CnnErgy::eyeriss_16bit()
+        };
+        let base = model.compiled(net);
+        let glb = rng.range_usize(2, 600) * 1024 + rng.range_usize(0, 1023);
+        let resized = base.with_glb_size(glb);
+        let fresh_model = model.with_glb_size(glb);
+        let ctx_s = format!("case {case}: {} glb={glb}", net.name);
+
+        assert_eq!(resized.total_energy_pj(), fresh_model.total_energy_pj(net), "{ctx_s}");
+        assert_eq!(
+            resized.breakdowns(),
+            fresh_model.network_breakdowns(net).as_slice(),
+            "{ctx_s}"
+        );
+        assert_eq!(
+            resized.latencies_s(),
+            fresh_model.layer_latencies_s(net).as_slice(),
+            "{ctx_s}"
+        );
+        // The volume side is GLB-independent and reused verbatim.
+        assert_eq!(resized.d_rlc_bits(), base.d_rlc_bits(), "{ctx_s}");
+        assert_eq!(resized.input_raw_bits(), base.input_raw_bits(), "{ctx_s}");
+        // An engine sliced from the resized profile == a fresh build.
+        let p_inc = Partitioner::from_profile(&resized);
+        let p_fresh = Partitioner::new(net, &fresh_model);
+        assert_eq!(p_inc.energy_table_j(), p_fresh.energy_table_j(), "{ctx_s}");
+        assert_eq!(p_inc.envelope().breakpoints(), p_fresh.envelope().breakpoints(), "{ctx_s}");
     }
 }

@@ -69,6 +69,13 @@ fn serve_roundtrip_and_metrics_consistency() {
     assert_eq!(m.split_counts.values().sum::<u64>(), n as u64);
     let bits: u64 = responses.iter().map(|r| r.transmit_bits).sum();
     assert_eq!(m.transmit_bits, bits);
+    // Worker threads were seeded from the shared compiled profile; the
+    // post-warm-up miss counter is the canary that no §IV-C schedule
+    // derivation runs on the serving hot path (decisions are table
+    // slices — a regression that re-evaluates the model per request on a
+    // worker would trip this).
+    assert!(m.schedule_seeded > 0, "workers were not profile-seeded");
+    assert_eq!(m.schedule_misses_post_warm, 0);
 }
 
 #[test]
