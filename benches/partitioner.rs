@@ -1,20 +1,22 @@
 //! Bench: the runtime partition decision (paper Alg. 2) — the O(|L|)
 //! linear scan (with its per-call cost-vector allocation) against the
-//! precomputed lower-envelope engine and its batched serving path.
+//! precomputed lower-envelope engine and its batched serving path, all
+//! through the one public surface, the `PartitionPolicy` trait.
 //!
 //! The paper's claim is that Alg. 2's overhead is "virtually zero"; the
-//! envelope engine makes that literal: `decide_fast` is a breakpoint
-//! binary search plus one FCC comparison, and `decide_batch` amortizes the
-//! envelope candidates over a whole batch. Emits the criterion-style lines
-//! plus `results/bench_partitioner.csv` and the machine-readable
-//! `results/BENCH_partition.json` (per-network ns/decision, decisions/s
-//! and speedups) so the perf trajectory is tracked across PRs.
+//! envelope engine makes that literal: `EnergyPolicy::decide` is a
+//! breakpoint binary search plus one FCC comparison, and `decide_batch`
+//! amortizes the envelope candidates over a whole batch. Emits the
+//! criterion-style lines plus `results/bench_partitioner.csv` and the
+//! machine-readable `results/BENCH_partition.json` (per-network
+//! ns/decision, decisions/s and speedups) so the perf trajectory is
+//! tracked across PRs. The registry section measures the fleet surface:
+//! shared-entry lookup, v2 artifact size (`table_v2_bytes`) and — the
+//! PR-5 regression guard — SLO decisions answered from an **imported**
+//! fleet's shared engines (`slo_from_import_ns`): if a v2 import ever
+//! stops reconstructing its SLO engine, this bench aborts and CI fails.
 //!
 //! Set `NEUPART_BENCH_SMOKE=1` for the CI smoke run (shorter budgets).
-
-// The legacy decide_* entry points are benchmarked on purpose: they are
-// the baselines the policy-trait path is compared against.
-#![allow(deprecated)]
 
 use std::collections::BTreeMap;
 
@@ -24,7 +26,7 @@ use neupart::cnn::Network;
 use neupart::cnnergy::CnnErgy;
 use neupart::partition::{
     decide_with_slo_scan, device_class, DecisionContext, DelayModel, EnergyPolicy, EnvelopeTable,
-    PartitionPolicy, Partitioner, PolicyRegistry, SloPartitioner, FCC,
+    PartitionPolicy, Partitioner, PolicyRegistry, SloPartitioner, SloPolicy, FCC,
 };
 use neupart::util::json::Value;
 
@@ -43,46 +45,28 @@ fn main() {
     let mut summary = BTreeMap::new();
     for net in Network::paper_networks() {
         let p = Partitioner::new(&net, &model);
+        let policy = EnergyPolicy::new(p.clone());
 
-        // Baseline: the linear scan, fresh Vec<f64> per decision (the
-        // pre-envelope hot path). Sparsity varies per call so the input
-        // volume is not branch-predictable.
+        // Baseline: the linear scan with a fresh cost vector per decision
+        // (`decide_detailed`, the pre-envelope hot path). Sparsity varies
+        // per call so the input volume is not branch-predictable.
         let mut sp = 0.40;
         let scan_ns = b
             .bench(&format!("alg2_scan/{}", net.name), || {
                 sp = if sp > 0.9 { 0.40 } else { sp + 0.001 };
-                p.decide(sp, &env)
+                policy.decide_detailed(&DecisionContext::from_sparsity(&p, sp, env))
             })
             .mean_ns;
 
-        // Allocation-free scan into a reused buffer (decide_into).
-        let mut buf = Vec::with_capacity(p.num_layers() + 1);
-        let mut sp_i = 0.40;
-        let into_ns = b
-            .bench(&format!("alg2_scan_into/{}", net.name), || {
-                sp_i = if sp_i > 0.9 { 0.40 } else { sp_i + 0.001 };
-                p.decide_into(p.transmit_bits(FCC, sp_i), &env, &mut buf)
-            })
-            .mean_ns;
-
-        // Envelope engine: O(log segments) + one FCC comparison.
-        let mut sp_e = 0.40;
-        let envelope_ns = b
-            .bench(&format!("alg2_envelope/{}", net.name), || {
-                sp_e = if sp_e > 0.9 { 0.40 } else { sp_e + 0.001 };
-                p.decide_fast(sp_e, &env)
-            })
-            .mean_ns;
-
-        // The unified decision surface: EnergyPolicy::decide through the
-        // PartitionPolicy trait (what the serving coordinator calls).
-        let policy = EnergyPolicy::new(p.clone());
+        // Envelope engine through the trait: O(log segments) + one FCC
+        // comparison — what the serving coordinator calls. (There is no
+        // separate `decide_fast` entry point anymore; the trait path IS
+        // the envelope path, so this is the one envelope measurement.)
         let mut sp_p = 0.40;
         let policy_ns = b
             .bench(&format!("policy_decide/{}", net.name), || {
                 sp_p = if sp_p > 0.9 { 0.40 } else { sp_p + 0.001 };
-                let ctx = DecisionContext::from_sparsity(policy.partitioner(), sp_p, env);
-                policy.decide(&ctx)
+                policy.decide(&DecisionContext::from_sparsity(&p, sp_p, env))
             })
             .mean_ns;
 
@@ -90,13 +74,14 @@ fn main() {
         let input_bits: Vec<f64> = (0..BATCH)
             .map(|i| p.transmit_bits(FCC, 0.40 + 0.55 * i as f64 / BATCH as f64))
             .collect();
+        let batch_ctx = DecisionContext::from_input_bits(0.0, env);
         let mut out = Vec::with_capacity(BATCH);
         let batch_ns = b
             .bench_elems(
                 &format!("alg2_batch{BATCH}/{}", net.name),
                 BATCH as u64,
                 || {
-                    p.decide_batch(&input_bits, &env, &mut out);
+                    policy.decide_batch(&input_bits, &batch_ctx, &mut out);
                     out.len()
                 },
             )
@@ -104,9 +89,9 @@ fn main() {
             / BATCH as f64;
 
         // Constrained (SLO) path: the O(|L|) delay scan (fresh delay + cost
-        // vectors per call) against the envelope-backed SloPartitioner.
+        // vectors per call) against the envelope-backed SloPolicy.
         let dm = DelayModel::new(&net, &model);
-        let slo_p = SloPartitioner::new(p.clone(), dm.clone());
+        let slo_policy = SloPolicy::new(SloPartitioner::new(p.clone(), dm.clone()));
         let mut sp_s = 0.40;
         let mut slo_i = 0;
         let slo_scan_ns = b
@@ -122,7 +107,10 @@ fn main() {
             .bench(&format!("slo_envelope/{}", net.name), || {
                 sp_f = if sp_f > 0.9 { 0.40 } else { sp_f + 0.001 };
                 slo_j = (slo_j + 1) % SLO_CYCLE_S.len();
-                slo_p.decide_with_slo(sp_f, &env, SLO_CYCLE_S[slo_j])
+                slo_policy.decide(
+                    &DecisionContext::from_sparsity(&p, sp_f, env)
+                        .with_slo(SLO_CYCLE_S[slo_j]),
+                )
             })
             .mean_ns;
 
@@ -133,8 +121,6 @@ fn main() {
             Value::Num(p.envelope().num_segments() as f64),
         );
         row.insert("scan_ns".to_string(), Value::Num(scan_ns));
-        row.insert("scan_into_ns".to_string(), Value::Num(into_ns));
-        row.insert("envelope_ns".to_string(), Value::Num(envelope_ns));
         row.insert("policy_ns".to_string(), Value::Num(policy_ns));
         row.insert("batch_ns_per_decision".to_string(), Value::Num(batch_ns));
         row.insert(
@@ -142,16 +128,16 @@ fn main() {
             Value::Num(1e9 / scan_ns),
         );
         row.insert(
-            "envelope_decisions_per_s".to_string(),
-            Value::Num(1e9 / envelope_ns),
+            "policy_decisions_per_s".to_string(),
+            Value::Num(1e9 / policy_ns),
         );
         row.insert(
             "batch_decisions_per_s".to_string(),
             Value::Num(1e9 / batch_ns),
         );
         row.insert(
-            "speedup_envelope_vs_scan".to_string(),
-            Value::Num(scan_ns / envelope_ns),
+            "speedup_policy_vs_scan".to_string(),
+            Value::Num(scan_ns / policy_ns),
         );
         row.insert(
             "speedup_batch_vs_scan".to_string(),
@@ -161,7 +147,7 @@ fn main() {
         row.insert("slo_envelope_ns".to_string(), Value::Num(slo_envelope_ns));
         row.insert(
             "slo_frontier_len".to_string(),
-            Value::Num(slo_p.frontier_len() as f64),
+            Value::Num(slo_policy.slo_partitioner().frontier_len() as f64),
         );
         row.insert(
             "speedup_slo_envelope_vs_scan".to_string(),
@@ -169,11 +155,11 @@ fn main() {
         );
         summary.insert(net.name.to_string(), Value::Obj(row));
         println!(
-            "  {}: scan {:.0} ns -> envelope {:.0} ns ({:.1}x), batch {:.1} ns/dec ({:.1}x), slo {:.0} -> {:.0} ns ({:.1}x)",
+            "  {}: scan {:.0} ns -> policy/envelope {:.0} ns ({:.1}x), batch {:.1} ns/dec ({:.1}x), slo {:.0} -> {:.0} ns ({:.1}x)",
             net.name,
             scan_ns,
-            envelope_ns,
-            scan_ns / envelope_ns,
+            policy_ns,
+            scan_ns / policy_ns,
             batch_ns,
             scan_ns / batch_ns,
             slo_scan_ns,
@@ -189,14 +175,16 @@ fn main() {
 
     // Decision + savings accounting together (the Table-V inner loop).
     let p = Partitioner::new(&net, &model);
+    let savings_policy = EnergyPolicy::new(p.clone());
     b.bench("alg2_decide+savings/alexnet", || {
-        let d = p.decide_fast(0.608, &env);
+        let d = savings_policy.decide(&DecisionContext::from_sparsity(&p, 0.608, env));
         (d.savings_vs_fcc(), d.savings_vs_fisc())
     });
 
     // Fleet registry: the per-connection hot path is one read-locked map
-    // lookup returning a shared entry; the serialized per-device envelope
-    // table is the artifact a coordinator ships to clients.
+    // lookup returning a shared entry; the serialized per-device v2
+    // envelope table (energy + latency vectors) is the artifact a
+    // coordinator ships to clients.
     let registry = PolicyRegistry::new();
     let entry = registry.get_or_build("alexnet", &env).expect("registry entry");
     let device = device_class(env.p_tx_w);
@@ -205,10 +193,57 @@ fn main() {
             registry.get("alexnet", &device).expect("registered")
         })
         .mean_ns;
-    let table =
-        EnvelopeTable::from_partitioner("alexnet", &device, env.p_tx_w, entry.partitioner());
-    let table_bytes = table.table_bytes();
-    println!("  registry: lookup {registry_lookup_ns:.0} ns, envelope table {table_bytes} bytes");
+    // Two distinct size measurements: the energy-only (v1-shaped) artifact
+    // vs the full v2 artifact with its latency tables — the delta is the
+    // price of shipping SLO capability to clients.
+    let table_bytes =
+        EnvelopeTable::from_partitioner("alexnet", &device, env.p_tx_w, entry.partitioner())
+            .table_bytes();
+    let table_v2_bytes = entry.table().table_bytes();
+    assert!(
+        entry.table().has_slo_tables(),
+        "analytic registry entries must export v2 latency tables"
+    );
+    assert!(
+        table_v2_bytes > table_bytes,
+        "v2 artifact must carry more than the energy-only tables"
+    );
+
+    // Imported-fleet SLO serving — the PR-5 regression guard: a registry
+    // rebuilt purely from the exported JSON must answer SLO decisions from
+    // shared (import-reconstructed) engines. If the import ever loses the
+    // SLO engine again, serving would regress to per-connection delay
+    // -envelope rebuilds — abort the bench (and CI) instead of measuring a
+    // lie.
+    let client = PolicyRegistry::new();
+    let report = client
+        .import_json(&registry.export_json())
+        .expect("fleet import");
+    assert_eq!(
+        report.missing_slo, 0,
+        "imported v2 fleet lost SLO engines: {report}"
+    );
+    let imported = client.get("alexnet", &device).expect("imported entry");
+    let imported_slo = imported
+        .slo_policy()
+        .expect("v2 import must reconstruct the shared SLO engine");
+    let imported_p = imported.partitioner().clone();
+    let mut sp_i = 0.40;
+    let mut slo_k = 0;
+    let slo_from_import_ns = b
+        .bench("slo_from_import/alexnet", || {
+            sp_i = if sp_i > 0.9 { 0.40 } else { sp_i + 0.001 };
+            slo_k = (slo_k + 1) % SLO_CYCLE_S.len();
+            imported_slo.decide(
+                &DecisionContext::from_sparsity(&imported_p, sp_i, env)
+                    .with_slo(SLO_CYCLE_S[slo_k]),
+            )
+        })
+        .mean_ns;
+    println!(
+        "  registry: lookup {registry_lookup_ns:.0} ns, table {table_bytes} -> v2 \
+         {table_v2_bytes} bytes, imported-fleet slo decision {slo_from_import_ns:.0} ns"
+    );
 
     b.write_csv(std::path::Path::new("results/bench_partitioner.csv"))
         .expect("csv");
@@ -219,6 +254,11 @@ fn main() {
             ("batch_size".to_string(), Value::Num(BATCH as f64)),
             ("registry_lookup_ns".to_string(), Value::Num(registry_lookup_ns)),
             ("table_bytes".to_string(), Value::Num(table_bytes as f64)),
+            ("table_v2_bytes".to_string(), Value::Num(table_v2_bytes as f64)),
+            (
+                "slo_from_import_ns".to_string(),
+                Value::Num(slo_from_import_ns),
+            ),
         ],
     )
     .expect("json");

@@ -100,7 +100,6 @@ pub fn mobilenet_v1() -> Network {
 }
 
 #[cfg(test)]
-#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::channel::TransmitEnv;
@@ -147,7 +146,7 @@ mod tests {
         let net = mobilenet_v1();
         let p = paper_partitioner(&net);
         let env = TransmitEnv::with_effective_rate(80e6, 0.78);
-        let d = p.decide(0.608, &env);
+        let d = p.reference_decision(0.608, &env);
         assert_eq!(d.costs_j.len(), 30);
         // An efficient mobile CNN should never be FCC-optimal at Q2/80Mbps.
         assert_ne!(d.l_opt, 0);

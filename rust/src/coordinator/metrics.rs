@@ -27,6 +27,13 @@ pub struct MetricsSnapshot {
     /// infeasible at the admission-time channel state (the delay-envelope
     /// lower bound already exceeded the deadline).
     pub shed_infeasible: u64,
+    /// SLO engines this coordinator had to rebuild because its registry
+    /// entry carried none (a v1 `EnvelopeTable` import with no latency
+    /// data). Non-zero means deadline serving fell back to a
+    /// per-coordinator delay-envelope build instead of the shared
+    /// registry engine — the formerly *silent* degradation this counter
+    /// makes loud.
+    pub slo_missing: u64,
     /// §IV-C schedule-cache entries seeded into worker threads from the
     /// shared compiled profile at thread start (summed across workers).
     pub schedule_seeded: u64,
@@ -126,6 +133,12 @@ impl MetricsSnapshot {
         if self.shed_infeasible > 0 {
             s.push_str(&format!("shed (infeasible) : {}\n", self.shed_infeasible));
         }
+        if self.slo_missing > 0 {
+            s.push_str(&format!(
+                "slo engines rebuilt (missing from registry entry) : {}\n",
+                self.slo_missing
+            ));
+        }
         if self.schedule_seeded > 0 {
             s.push_str(&format!(
                 "schedule warm-up  : {} seeded, {} post-warm misses\n",
@@ -177,6 +190,13 @@ impl Metrics {
     /// deadline.
     pub fn record_shed(&self) {
         self.inner.lock().unwrap().shed_infeasible += 1;
+    }
+
+    /// Record one SLO-engine rebuild forced by a registry entry with no
+    /// latency data (v1 import) — the loud form of what used to be a
+    /// silent degradation.
+    pub fn record_slo_missing(&self) {
+        self.inner.lock().unwrap().slo_missing += 1;
     }
 
     /// Record one worker thread's profile warm-up: how many schedules were
@@ -259,6 +279,17 @@ mod tests {
         assert!(s.report().contains("shed (infeasible) : 2"));
         // Shed requests are not served requests.
         assert_eq!(s.requests, 0);
+    }
+
+    #[test]
+    fn slo_missing_accounting() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().slo_missing, 0);
+        assert!(!m.snapshot().report().contains("slo engines rebuilt"));
+        m.record_slo_missing();
+        let s = m.snapshot();
+        assert_eq!(s.slo_missing, 1);
+        assert!(s.report().contains("slo engines rebuilt (missing from registry entry) : 1"));
     }
 
     #[test]

@@ -35,9 +35,10 @@
 //! * each request's effective env (client-reported via
 //!   [`InferenceRequest::env`], or the configured env with one seeded
 //!   admission-time jitter sample) is mapped to the envelope segment
-//!   containing its γ;
+//!   containing its γ ([`crate::partition::Partitioner::envelope_segment`]);
 //! * the admission queue keeps one FIFO lane per segment plus an overflow
-//!   lane for degenerate channel states ([`Batcher::with_buckets`]), and
+//!   lane for degenerate **or corrupted** channel states — `B_e ≤ 0`,
+//!   NaN/∞ rates, non-finite γ — ([`Batcher::with_buckets`]), and
 //!   workers drain whole single-lane batches
 //!   ([`Batcher::take_batch_bucketed`]);
 //! * every request in a batch then shares its envelope segment, so the

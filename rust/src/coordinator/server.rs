@@ -145,16 +145,26 @@ impl Coordinator {
             .context("building policy registry entry")?;
         let partitioner = entry.partitioner().clone();
         let policy = entry.policy();
+        let metrics = Arc::new(Metrics::new());
         // The shared compiled profile: seeds executor/worker thread-local
         // schedule caches, and rebuilds the delay model when the registry
-        // entry came from an imported table (no latency data there).
+        // entry came from an imported table with no latency data (a v1
+        // `EnvelopeTable`). Deadline requests and infeasible-shedding then
+        // still have a correct SLO engine — but the per-coordinator
+        // rebuild is counted in `MetricsSnapshot::slo_missing` instead of
+        // degrading silently (v2 artifacts carry the latency tables, so
+        // imported fleets share one engine per device class and this
+        // counter stays 0).
         let profile = CnnErgy::inference_8bit().compiled(&net);
         let slo = match entry.slo_partitioner() {
             Some(slo) => slo.clone(),
-            None => Arc::new(SloPartitioner::from_shared(
-                partitioner.clone(),
-                DelayModel::from_profile(&profile),
-            )),
+            None => {
+                metrics.record_slo_missing();
+                Arc::new(SloPartitioner::from_shared(
+                    partitioner.clone(),
+                    DelayModel::from_profile(&profile),
+                ))
+            }
         };
         let client = DeviceExecutor::spawn(
             "client",
@@ -193,7 +203,7 @@ impl Coordinator {
             client,
             cloud,
             channel,
-            metrics: Arc::new(Metrics::new()),
+            metrics,
         })
     }
 
@@ -226,19 +236,14 @@ impl Coordinator {
         }
     }
 
-    /// Envelope segment containing this env's γ, `None` for degenerate
-    /// channel states (B_e ≤ 0, γ ≤ 0, empty envelope) that must take the
-    /// guarded scan path.
+    /// Envelope segment containing this env's γ, `None` for degenerate or
+    /// non-finite channel states (B_e ≤ 0/NaN/∞, γ ≤ 0, γ non-finite,
+    /// empty envelope) that must take the guarded scan path — such
+    /// requests land in the overflow lane instead of panicking or being
+    /// pinned to a bogus segment (regression-tested with corrupted
+    /// channel states in `serving_e2e`).
     fn gamma_segment(&self, env: &TransmitEnv) -> Option<usize> {
-        let b_e = env.effective_bit_rate();
-        if !(b_e > 0.0) {
-            return None;
-        }
-        let gamma = env.p_tx_w / b_e;
-        if !(gamma > 0.0) || self.partitioner.envelope().num_segments() == 0 {
-            return None;
-        }
-        Some(self.partitioner.envelope().segment_index(gamma))
+        self.partitioner.envelope_segment(env)
     }
 
     /// Admission lane for a request env under the current bucketing mode.

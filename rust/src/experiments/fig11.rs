@@ -60,7 +60,6 @@ pub fn run(out_dir: &Path) -> Result<String> {
 }
 
 #[cfg(test)]
-#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::channel::TransmitEnv;
@@ -70,10 +69,12 @@ mod tests {
     fn intermediate_optimum_for_both_networks() {
         let env = TransmitEnv::with_effective_rate(100.0e6, 1.14);
         for net in [alexnet(), squeezenet_v11()] {
-            let p = paper_partitioner(&net);
-            let d = p.decide(MEDIAN_SPARSITY_IN, &env);
+            let policy = EnergyPolicy::new(paper_partitioner(&net));
+            let ctx =
+                DecisionContext::from_sparsity(policy.partitioner(), MEDIAN_SPARSITY_IN, env);
+            let d = policy.decide(&ctx);
             assert!(
-                d.l_opt > FCC && d.l_opt < p.num_layers(),
+                d.l_opt > FCC && d.l_opt < policy.num_layers(),
                 "{}: l_opt {}",
                 net.name,
                 d.l_opt
@@ -85,9 +86,10 @@ mod tests {
     fn squeezenet_optimal_at_a_fire_squeeze_layer() {
         // Paper: Fs6 optimal — squeeze outputs are the skinny waists.
         let net = squeezenet_v11();
-        let p = paper_partitioner(&net);
+        let policy = EnergyPolicy::new(paper_partitioner(&net));
         let env = TransmitEnv::with_effective_rate(100.0e6, 1.14);
-        let d = p.decide(MEDIAN_SPARSITY_IN, &env);
+        let ctx = DecisionContext::from_sparsity(policy.partitioner(), MEDIAN_SPARSITY_IN, env);
+        let d = policy.decide(&ctx);
         let name = net.layers[d.l_opt - 1].name;
         assert!(name.starts_with("Fs") || name.starts_with('P'), "opt {name}");
     }

@@ -110,21 +110,24 @@ pub fn run(out_dir: &Path) -> Result<String> {
 }
 
 #[cfg(test)]
-#[allow(deprecated)]
 mod tests {
     use super::*;
-    use crate::partition::FCC;
+    use crate::partition::{Decision, FCC};
+
+    fn decide(policy: &EnergyPolicy, sp: f64, env: TransmitEnv) -> Decision {
+        policy.decide(&DecisionContext::from_sparsity(policy.partitioner(), sp, env))
+    }
 
     #[test]
     fn wide_intermediate_region_exists_at_q1() {
         // Paper: "for a wide range of communication environments, the
         // optimal layer is an intermediate layer".
-        let p = paper_partitioner(&alexnet());
+        let policy = EnergyPolicy::new(paper_partitioner(&alexnet()));
         let mut intermediate = 0;
         for be in be_sweep_mbps() {
             let env = TransmitEnv::with_effective_rate(be * 1e6, 0.78);
-            let d = p.decide(0.5199, &env);
-            if d.l_opt != FCC && d.l_opt != p.num_layers() {
+            let d = decide(&policy, 0.5199, env);
+            if d.l_opt != FCC && d.l_opt != policy.num_layers() {
                 intermediate += 1;
             }
         }
@@ -135,11 +138,11 @@ mod tests {
     fn higher_ptx_shifts_crossover_right() {
         // Paper: with higher P_Tx the savings region exhibits a right shift
         // (FCC becomes competitive only at higher bit rates).
-        let p = paper_partitioner(&alexnet());
+        let policy = EnergyPolicy::new(paper_partitioner(&alexnet()));
         let first_fcc = |p_tx: f64| -> f64 {
             for be in be_sweep_mbps() {
                 let env = TransmitEnv::with_effective_rate(be * 1e6, p_tx);
-                if p.decide(0.6909, &env).l_opt == FCC {
+                if decide(&policy, 0.6909, env).l_opt == FCC {
                     return be;
                 }
             }
@@ -150,10 +153,10 @@ mod tests {
 
     #[test]
     fn savings_vs_fisc_independent_of_sparsity_in() {
-        let p = paper_partitioner(&alexnet());
+        let policy = EnergyPolicy::new(paper_partitioner(&alexnet()));
         let env = TransmitEnv::with_effective_rate(80e6, 0.78);
-        let a = p.decide(0.52, &env);
-        let b = p.decide(0.69, &env);
+        let a = decide(&policy, 0.52, env);
+        let b = decide(&policy, 0.69, env);
         if a.l_opt == b.l_opt && a.l_opt != FCC {
             assert!((a.savings_vs_fisc() - b.savings_vs_fisc()).abs() < 1e-9);
         }

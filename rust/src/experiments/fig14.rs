@@ -180,19 +180,24 @@ pub fn run_c(out_dir: &Path) -> Result<String> {
 }
 
 #[cfg(test)]
-#[allow(deprecated)]
 mod tests {
     use super::*;
+    use crate::partition::decide_with_slo_scan;
+
+    fn detailed_at(policy: &EnergyPolicy, be_mbps: f64) -> crate::partition::Decision {
+        let env = TransmitEnv::with_effective_rate(be_mbps * 1e6, 0.78);
+        let ctx = DecisionContext::from_sparsity(policy.partitioner(), MEDIAN_SPARSITY_IN, env);
+        policy.decide_detailed(&ctx)
+    }
 
     #[test]
     fn fig14b_crossover_order_p3_p2_p1() {
         // As B_e grows, the optimum among {P1,P2,P3} walks backward
         // (deeper -> shallower): P3 wins at low rates, P1 at high rates.
         let net = alexnet();
-        let p = paper_partitioner(&net);
+        let policy = EnergyPolicy::new(paper_partitioner(&net));
         let best_at = |be: f64| {
-            let env = TransmitEnv::with_effective_rate(be * 1e6, 0.78);
-            let d = p.decide(MEDIAN_SPARSITY_IN, &env);
+            let d = detailed_at(&policy, be);
             ["P1", "P2", "P3"]
                 .iter()
                 .map(|n| (*n, d.costs_j[net.layer_index(n).unwrap() + 1]))
@@ -209,14 +214,13 @@ mod tests {
         // Paper: switching P2->P1 near the crossover changes energy
         // negligibly (the robustness argument for bandwidth variation).
         let net = alexnet();
-        let p = paper_partitioner(&net);
+        let policy = EnergyPolicy::new(paper_partitioner(&net));
         // Find the P2->P1 crossover.
         let idx_p1 = net.layer_index("P1").unwrap() + 1;
         let idx_p2 = net.layer_index("P2").unwrap() + 1;
         let mut be = 5.0;
         while be < 2000.0 {
-            let env = TransmitEnv::with_effective_rate(be * 1e6, 0.78);
-            let d = p.decide(MEDIAN_SPARSITY_IN, &env);
+            let d = detailed_at(&policy, be);
             if d.costs_j[idx_p1] <= d.costs_j[idx_p2] {
                 let gap = (d.costs_j[idx_p1] - d.costs_j[idx_p2]).abs()
                     / d.costs_j[idx_p2];
@@ -236,15 +240,25 @@ mod tests {
         let net = alexnet();
         let p = paper_partitioner(&net);
         let dm = DelayModel::new(&net, &CnnErgy::inference_8bit());
-        let slo_p = SloPartitioner::new(p.clone(), dm);
+        let policy = SloPolicy::new(SloPartitioner::new(p.clone(), dm));
+        let energy = EnergyPolicy::new(p.clone());
         let fast_env = TransmitEnv::with_effective_rate(300e6, 0.78);
-        let loose = slo_p.decide_with_slo(MEDIAN_SPARSITY_IN, &fast_env, 10.0);
+        let ctx = DecisionContext::from_sparsity(&p, MEDIAN_SPARSITY_IN, fast_env);
+        let loose = policy.decide(&ctx.with_slo(10.0));
         assert!(loose.feasible && !loose.binding);
-        assert_eq!(loose.choice.l_opt, p.decide(MEDIAN_SPARSITY_IN, &fast_env).l_opt);
+        assert_eq!(loose.l_opt, energy.decide(&ctx).l_opt);
         let slow_env = TransmitEnv::with_effective_rate(1e6, 0.78);
-        let tight = slo_p.decide_with_slo(MEDIAN_SPARSITY_IN, &slow_env, FIG14A_SLO_S);
-        let scan = slo_p.decide_with_slo_full(MEDIAN_SPARSITY_IN, &slow_env, FIG14A_SLO_S);
-        assert_eq!(tight.choice.l_opt, scan.inner.l_opt);
+        let slow_ctx =
+            DecisionContext::from_sparsity(&p, MEDIAN_SPARSITY_IN, slow_env).with_slo(FIG14A_SLO_S);
+        let tight = policy.decide(&slow_ctx);
+        let scan = decide_with_slo_scan(
+            policy.partitioner(),
+            policy.slo_partitioner().delay_model(),
+            MEDIAN_SPARSITY_IN,
+            &slow_env,
+            FIG14A_SLO_S,
+        );
+        assert_eq!(tight.l_opt, scan.l_opt);
         assert_eq!(tight.feasible, scan.feasible);
     }
 

@@ -28,8 +28,8 @@
 //! constrained) and [`partition::SparsityEnvelopePolicy`] (probe-side
 //! envelope with closed-form Fig.-13 crossovers) — all bit-for-bit equal
 //! to the reference O(|L|) scan (property-tested; the historical
-//! `decide_*` methods survive as deprecated wrappers, see the
-//! [`partition`] module docs for the migration table).
+//! `decide_*` methods and their return-type triplet are gone — see the
+//! [`partition`] module docs for the removed-name migration table).
 //!
 //! Four precomputation layers make the per-request work effectively O(1):
 //!
@@ -65,7 +65,10 @@
 //!   [`partition::EnvelopeTable`] keyed by (network, device P_Tx class)
 //!   — Table IV's fleet — and shared across connections through
 //!   [`partition::PolicyRegistry`]; the round trip is bit-exact, so a
-//!   shipped table makes fully client-side decisions.
+//!   shipped table makes fully client-side decisions. The v2 artifact
+//!   also carries the per-layer client/cloud latency vectors, so an
+//!   imported fleet reconstructs its shared SLO engines too (v1 reads
+//!   stay compatible and report the missing-SLO condition loudly).
 //! * **Schedule memoization** ([`cnnergy::ScheduleCache`]): the §IV-C
 //!   mapper's result depends only on (conv shape, accelerator geometry), so
 //!   a per-thread cache ([`cnnergy::schedule_cached`]) eliminates repeated
@@ -90,6 +93,6 @@ pub mod util;
 pub use cnn::{ConvShape, Layer, LayerKind, Network};
 pub use cnnergy::{CnnErgy, EnergyBreakdown, HwConfig, ScheduleCache, TechParams};
 pub use partition::{
-    Decision, DecisionContext, EnergyPolicy, EnvelopeTable, PartitionDecision, PartitionPolicy,
-    Partitioner, PolicyRegistry, SloPolicy, SparsityEnvelopePolicy, SplitChoice,
+    Decision, DecisionContext, EnergyPolicy, EnvelopeTable, PartitionPolicy, Partitioner,
+    PolicyRegistry, SloPolicy, SparsityEnvelopePolicy,
 };

@@ -9,11 +9,12 @@
 //!
 //! The [`Partitioner`] is the *engine*; the public decision surface is the
 //! [`crate::partition::policy::PartitionPolicy`] trait
-//! ([`crate::partition::policy::EnergyPolicy`] wraps this engine). The
-//! historical `decide_*` methods remain as thin deprecated wrappers over
-//! the same internal paths, property-tested bit-for-bit against the trait
-//! route — see the [`crate::partition`] module docs for the migration
-//! table.
+//! ([`crate::partition::policy::EnergyPolicy`] wraps this engine). Every
+//! internal path produces the unified
+//! [`Decision`](crate::partition::policy::Decision) — the historical
+//! `decide_*` methods and their `PartitionDecision`/`SplitChoice` return
+//! types were removed once all call sites migrated to the trait (see the
+//! [`crate::partition`] module docs for the migration table).
 //!
 //! Internal runtime paths, fastest first:
 //!
@@ -35,6 +36,7 @@ use crate::cnnergy::sparsity::layer_d_rlc_bits;
 use crate::cnnergy::{CnnErgy, NetworkProfile};
 
 use super::envelope::{CostLine, Envelope};
+use super::policy::Decision;
 
 /// Partition index meaning "transmit the JPEG input; all layers in cloud".
 pub const FCC: usize = 0;
@@ -58,22 +60,6 @@ pub struct Partitioner {
     envelope: Envelope,
 }
 
-/// The outcome of one runtime partition decision (reporting form, carries
-/// the full per-candidate cost vector).
-#[derive(Clone, Debug, PartialEq)]
-pub struct PartitionDecision {
-    /// Optimal split: 0 = FCC, `|L|` = FISC, else after layer `l_opt`.
-    pub l_opt: usize,
-    /// `E_Cost` per candidate split `0..=|L|`, joules.
-    pub costs_j: Vec<f64>,
-    /// Client compute energy at the optimum, joules.
-    pub client_energy_j: f64,
-    /// Transmission energy at the optimum, joules.
-    pub transmit_energy_j: f64,
-    /// Transmit volume at the optimum, bits.
-    pub transmit_bits: f64,
-}
-
 /// Division-robust savings ratio: `1 - cost/reference`, with 0.0 instead of
 /// the NaN a zero (or 0/0, ∞/∞) reference would otherwise produce. Shared
 /// with [`crate::partition::policy::Decision`].
@@ -83,50 +69,6 @@ pub(crate) fn savings_ratio(cost: f64, reference: f64) -> f64 {
         0.0
     } else {
         s
-    }
-}
-
-impl PartitionDecision {
-    /// Energy saved at the optimum relative to fully-cloud computation.
-    pub fn savings_vs_fcc(&self) -> f64 {
-        savings_ratio(self.costs_j[self.l_opt], self.costs_j[FCC])
-    }
-
-    /// Energy saved at the optimum relative to fully-in-situ computation.
-    pub fn savings_vs_fisc(&self) -> f64 {
-        savings_ratio(self.costs_j[self.l_opt], self.costs_j[self.costs_j.len() - 1])
-    }
-}
-
-/// The outcome of one envelope-path decision: everything the serving hot
-/// path and the figure sweeps need, with no per-candidate vector.
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub struct SplitChoice {
-    /// Optimal split: 0 = FCC, `|L|` = FISC, else after layer `l_opt`.
-    pub l_opt: usize,
-    /// `E_Cost` at the optimum, joules.
-    pub cost_j: f64,
-    /// `E_Cost` at the FCC candidate (the savings reference), joules.
-    pub fcc_cost_j: f64,
-    /// `E_Cost` at the FISC candidate, joules.
-    pub fisc_cost_j: f64,
-    /// Client compute energy at the optimum, joules.
-    pub client_energy_j: f64,
-    /// Transmission energy at the optimum, joules.
-    pub transmit_energy_j: f64,
-    /// Transmit volume at the optimum, bits.
-    pub transmit_bits: f64,
-}
-
-impl SplitChoice {
-    /// Energy saved at the optimum relative to fully-cloud computation.
-    pub fn savings_vs_fcc(&self) -> f64 {
-        savings_ratio(self.cost_j, self.fcc_cost_j)
-    }
-
-    /// Energy saved at the optimum relative to fully-in-situ computation.
-    pub fn savings_vs_fisc(&self) -> f64 {
-        savings_ratio(self.cost_j, self.fisc_cost_j)
     }
 }
 
@@ -288,7 +230,7 @@ impl Partitioner {
     /// SLO-constrained path evaluates feasible candidates through this so
     /// its argmin stays bit-for-bit comparable with the scan's. Degenerate
     /// channels (`B_e ≤ 0`/NaN) produce non-finite costs; callers that can
-    /// see such inputs must guard first (as every `decide*` path does).
+    /// see such inputs must guard first (as every decision path does).
     pub fn candidate_cost_j(&self, split: usize, input_bits: f64, env: &TransmitEnv) -> f64 {
         self.cost_at(split, input_bits, env, env.effective_bit_rate())
     }
@@ -312,37 +254,28 @@ impl Partitioner {
         env.p_tx_w * self.bits_with_input(split, input_bits) / b_e
     }
 
-    /// Algorithm 2 (reference form): evaluate all candidates, return the
-    /// argmin with the full cost vector. The input layer's volume is
-    /// estimated from `sparsity_in` via eq. 29.
-    #[deprecated(
-        note = "route decisions through `partition::policy` (`EnergyPolicy` + \
-                `DecisionContext::from_sparsity`, `decide_detailed` for the cost \
-                vector); see the `partition` module docs migration table"
-    )]
-    pub fn decide(&self, sparsity_in: f64, env: &TransmitEnv) -> PartitionDecision {
-        self.reference_decision(sparsity_in, env)
+    /// Envelope segment containing this env's γ — the serving front door's
+    /// admission mapping. `None` for degenerate or non-finite channel
+    /// states (`B_e ≤ 0`/NaN, `γ ≤ 0`, `γ` non-finite, empty envelope):
+    /// those requests must take the guarded scan path (and, in a bucketed
+    /// coordinator, the overflow lane) instead of being pinned to a
+    /// segment a corrupted channel report never belonged to.
+    pub fn envelope_segment(&self, env: &TransmitEnv) -> Option<usize> {
+        let b_e = env.effective_bit_rate();
+        if !(b_e > 0.0) {
+            return None;
+        }
+        let gamma = env.p_tx_w / b_e;
+        if !(gamma > 0.0) || !gamma.is_finite() || self.envelope.num_segments() == 0 {
+            return None;
+        }
+        Some(self.envelope.segment_index(gamma))
     }
 
-    /// Algorithm 2 with the input layer's `D_RLC` supplied directly — the
-    /// serving coordinator passes the *measured* JPEG size from the probe
-    /// (strictly more accurate than the eq.-29 estimate; same algorithm).
-    #[deprecated(
-        note = "route decisions through `partition::policy` (`EnergyPolicy` + \
-                `DecisionContext::from_input_bits`); see the `partition` module \
-                docs migration table"
-    )]
-    pub fn decide_with_input_bits(&self, input_bits: f64, env: &TransmitEnv) -> PartitionDecision {
-        self.reference_decision_with_bits(input_bits, env)
-    }
-
-    /// Reference-scan decision from a probed Sparsity-In (internal form of
-    /// the deprecated `decide`).
-    pub(crate) fn reference_decision(
-        &self,
-        sparsity_in: f64,
-        env: &TransmitEnv,
-    ) -> PartitionDecision {
+    /// Reference-scan decision from a probed Sparsity-In: the O(|L|) linear
+    /// scan with the per-candidate cost vector filled — the "brute force"
+    /// semantics every fast path must reproduce bit-for-bit.
+    pub(crate) fn reference_decision(&self, sparsity_in: f64, env: &TransmitEnv) -> Decision {
         self.reference_decision_with_bits(self.input_bits_from_sparsity(sparsity_in), env)
     }
 
@@ -351,43 +284,24 @@ impl Partitioner {
         &self,
         input_bits: f64,
         env: &TransmitEnv,
-    ) -> PartitionDecision {
+    ) -> Decision {
         let mut costs_j = Vec::with_capacity(self.num_layers + 1);
-        let choice = self.choose_into(input_bits, env, &mut costs_j);
-        PartitionDecision {
-            l_opt: choice.l_opt,
-            client_energy_j: choice.client_energy_j,
-            transmit_energy_j: choice.transmit_energy_j,
-            transmit_bits: choice.transmit_bits,
-            costs_j,
-        }
+        let mut d = self.choose_into(input_bits, env, &mut costs_j);
+        d.costs_j = costs_j;
+        d
     }
 
-    /// Linear-scan decision writing the per-candidate costs into a
+    /// The scan-with-cost-vector core behind the policy layer's detailed
+    /// decisions: linear-scan argmin writing the per-candidate costs into a
     /// caller-owned buffer (cleared, then filled; capacity is reused across
-    /// calls, so sweep loops run allocation-free).
-    #[deprecated(
-        note = "route decisions through `partition::policy` \
-                (`EnergyPolicy::decide_detailed`); see the `partition` module \
-                docs migration table"
-    )]
-    pub fn decide_into(
-        &self,
-        input_bits: f64,
-        env: &TransmitEnv,
-        costs_j: &mut Vec<f64>,
-    ) -> SplitChoice {
-        self.choose_into(input_bits, env, costs_j)
-    }
-
-    /// The scan-with-cost-vector core behind the deprecated `decide_into`
-    /// and the policy layer's detailed decisions.
+    /// calls, so sweep loops run allocation-free). The returned decision's
+    /// own `costs_j` is left empty — the caller owns the buffer.
     pub(crate) fn choose_into(
         &self,
         input_bits: f64,
         env: &TransmitEnv,
         costs_j: &mut Vec<f64>,
-    ) -> SplitChoice {
+    ) -> Decision {
         costs_j.clear();
         let b_e = env.effective_bit_rate();
         if !(b_e > 0.0) {
@@ -398,7 +312,7 @@ impl Partitioner {
             costs_j.extend(std::iter::repeat(f64::INFINITY).take(self.num_layers));
             let fisc = self.client_energy_j(self.num_layers);
             costs_j.push(fisc);
-            return self.degenerate_choice();
+            return self.degenerate_decision();
         }
         let mut l_opt = 0;
         let mut best = f64::INFINITY;
@@ -410,33 +324,32 @@ impl Partitioner {
             }
             costs_j.push(cost);
         }
-        let client_energy_j = self.client_energy_j(l_opt);
-        SplitChoice {
+        Decision::energy_outcome(
             l_opt,
-            cost_j: best,
-            fcc_cost_j: costs_j[FCC],
-            fisc_cost_j: costs_j[self.num_layers],
-            client_energy_j,
+            best,
+            costs_j[FCC],
+            costs_j[self.num_layers],
+            self.client_energy_j(l_opt),
             // From the transmit model, not `best - client`: subtraction
             // drifts by an ulp, this decomposes `best` exactly (the cost
             // expression is `client + p_tx·bits/b_e`).
-            transmit_energy_j: env.p_tx_w * self.bits_with_input(l_opt, input_bits) / b_e,
-            transmit_bits: self.bits_with_input(l_opt, input_bits),
-        }
+            env.p_tx_w * self.bits_with_input(l_opt, input_bits) / b_e,
+            self.bits_with_input(l_opt, input_bits),
+        )
     }
 
-    /// The no-channel fallback choice: FISC at its compute-only cost.
-    fn degenerate_choice(&self) -> SplitChoice {
+    /// The no-channel fallback decision: FISC at its compute-only cost.
+    fn degenerate_decision(&self) -> Decision {
         let fisc = self.client_energy_j(self.num_layers);
-        SplitChoice {
-            l_opt: self.num_layers,
-            cost_j: fisc,
-            fcc_cost_j: f64::INFINITY,
-            fisc_cost_j: fisc,
-            client_energy_j: fisc,
-            transmit_energy_j: 0.0,
-            transmit_bits: FISC_OUTPUT_BITS,
-        }
+        Decision::energy_outcome(
+            self.num_layers,
+            fisc,
+            f64::INFINITY,
+            fisc,
+            fisc,
+            0.0,
+            FISC_OUTPUT_BITS,
+        )
     }
 
     /// First-minimum candidate among `cands`: re-evaluated with the scan's
@@ -477,7 +390,7 @@ impl Partitioner {
     /// winner: the scan's fold over [FCC, winner] — seed at +∞, strict `<`
     /// replacements — so a NaN FCC cost is skipped (never chosen) rather
     /// than poisoning the comparison, exactly like the scan.
-    fn choice_from_winner(
+    fn decision_from_winner(
         &self,
         fcc_cost: f64,
         env_split: usize,
@@ -485,7 +398,7 @@ impl Partitioner {
         input_bits: f64,
         env: &TransmitEnv,
         b_e: f64,
-    ) -> SplitChoice {
+    ) -> Decision {
         let mut l_opt = FCC;
         let mut best = f64::INFINITY;
         if fcc_cost < best {
@@ -495,34 +408,23 @@ impl Partitioner {
             best = env_cost;
             l_opt = env_split;
         }
-        let client_energy_j = self.client_energy_j(l_opt);
-        SplitChoice {
+        Decision::energy_outcome(
             l_opt,
-            cost_j: best,
-            fcc_cost_j: fcc_cost,
-            fisc_cost_j: self.cost_at(self.num_layers, input_bits, env, b_e),
-            client_energy_j,
-            transmit_energy_j: env.p_tx_w * self.bits_with_input(l_opt, input_bits) / b_e,
-            transmit_bits: self.bits_with_input(l_opt, input_bits),
-        }
-    }
-
-    /// Envelope decision: O(log L) breakpoint lookup, no allocation.
-    #[deprecated(
-        note = "route decisions through `partition::policy` (`EnergyPolicy` + \
-                `DecisionContext::from_input_bits`); see the `partition` module \
-                docs migration table"
-    )]
-    pub fn decide_split(&self, input_bits: f64, env: &TransmitEnv) -> SplitChoice {
-        self.choose_split(input_bits, env)
+            best,
+            fcc_cost,
+            self.cost_at(self.num_layers, input_bits, env, b_e),
+            self.client_energy_j(l_opt),
+            env.p_tx_w * self.bits_with_input(l_opt, input_bits) / b_e,
+            self.bits_with_input(l_opt, input_bits),
+        )
     }
 
     /// Envelope-decision core: O(log L) breakpoint lookup, no allocation.
     /// The argmin matches the reference scan bit-for-bit.
-    pub(crate) fn choose_split(&self, input_bits: f64, env: &TransmitEnv) -> SplitChoice {
+    pub(crate) fn choose_split(&self, input_bits: f64, env: &TransmitEnv) -> Decision {
         let b_e = env.effective_bit_rate();
         if !(b_e > 0.0) {
-            return self.degenerate_choice();
+            return self.degenerate_decision();
         }
         let gamma = env.p_tx_w / b_e;
         if !(gamma > 0.0) || self.envelope.num_segments() == 0 {
@@ -530,30 +432,15 @@ impl Partitioner {
             // or an empty envelope (zero layers / non-finite tables): the
             // envelope sweep assumed γ > 0 and finite lines, so fall back
             // to the full scan.
-            return self.scan_choice(input_bits, env, b_e);
+            return self.scan_decision(input_bits, env, b_e);
         }
         let fcc_cost = self.cost_at(FCC, input_bits, env, b_e);
         let (env_split, env_cost) = self.envelope_winner(gamma, env, b_e);
-        self.choice_from_winner(fcc_cost, env_split, env_cost, input_bits, env, b_e)
-    }
-
-    /// Single decision with the envelope segment already known.
-    #[deprecated(
-        note = "route decisions through `partition::policy` (`EnergyPolicy` + \
-                `DecisionContext::with_segment`); see the `partition` module \
-                docs migration table"
-    )]
-    pub fn decide_in_segment(
-        &self,
-        segment: usize,
-        input_bits: f64,
-        env: &TransmitEnv,
-    ) -> SplitChoice {
-        self.choose_in_segment(segment, input_bits, env)
+        self.decision_from_winner(fcc_cost, env_split, env_cost, input_bits, env, b_e)
     }
 
     /// Single-decision core with the envelope segment already known — the
-    /// γ-bucketed admission path computes `envelope().segment_index(γ)`
+    /// γ-bucketed admission path computes [`Partitioner::envelope_segment`]
     /// once at the front door, groups same-segment requests, and each
     /// member's decision then skips the breakpoint search entirely.
     /// Exactly equivalent to [`Partitioner::choose_split`]
@@ -565,14 +452,14 @@ impl Partitioner {
         segment: usize,
         input_bits: f64,
         env: &TransmitEnv,
-    ) -> SplitChoice {
+    ) -> Decision {
         let b_e = env.effective_bit_rate();
         if !(b_e > 0.0) {
-            return self.degenerate_choice();
+            return self.degenerate_decision();
         }
         let gamma = env.p_tx_w / b_e;
         if !(gamma > 0.0) || self.envelope.num_segments() == 0 {
-            return self.scan_choice(input_bits, env, b_e);
+            return self.scan_decision(input_bits, env, b_e);
         }
         debug_assert_eq!(
             segment,
@@ -582,21 +469,11 @@ impl Partitioner {
         let fcc_cost = self.cost_at(FCC, input_bits, env, b_e);
         let (env_split, env_cost) =
             self.winner_from(self.envelope.candidates_for_segment(segment), env, b_e);
-        self.choice_from_winner(fcc_cost, env_split, env_cost, input_bits, env, b_e)
-    }
-
-    /// Envelope decision from the runtime-probed Sparsity-In (eq. 29).
-    #[deprecated(
-        note = "route decisions through `partition::policy` (`EnergyPolicy` + \
-                `DecisionContext::from_sparsity`); see the `partition` module \
-                docs migration table"
-    )]
-    pub fn decide_fast(&self, sparsity_in: f64, env: &TransmitEnv) -> SplitChoice {
-        self.choose_split(self.input_bits_from_sparsity(sparsity_in), env)
+        self.decision_from_winner(fcc_cost, env_split, env_cost, input_bits, env, b_e)
     }
 
     /// Full scan without a cost buffer (fallback for degenerate γ).
-    fn scan_choice(&self, input_bits: f64, env: &TransmitEnv, b_e: f64) -> SplitChoice {
+    fn scan_decision(&self, input_bits: f64, env: &TransmitEnv, b_e: f64) -> Decision {
         let mut l_opt = 0;
         let mut best = f64::INFINITY;
         for split in 0..=self.num_layers {
@@ -606,16 +483,15 @@ impl Partitioner {
                 l_opt = split;
             }
         }
-        let client_energy_j = self.client_energy_j(l_opt);
-        SplitChoice {
+        Decision::energy_outcome(
             l_opt,
-            cost_j: best,
-            fcc_cost_j: self.cost_at(FCC, input_bits, env, b_e),
-            fisc_cost_j: self.cost_at(self.num_layers, input_bits, env, b_e),
-            client_energy_j,
-            transmit_energy_j: env.p_tx_w * self.bits_with_input(l_opt, input_bits) / b_e,
-            transmit_bits: self.bits_with_input(l_opt, input_bits),
-        }
+            best,
+            self.cost_at(FCC, input_bits, env, b_e),
+            self.cost_at(self.num_layers, input_bits, env, b_e),
+            self.client_energy_j(l_opt),
+            env.p_tx_w * self.bits_with_input(l_opt, input_bits) / b_e,
+            self.bits_with_input(l_opt, input_bits),
+        )
     }
 
     /// The fixed-candidate winner for one channel state, with everything a
@@ -656,7 +532,7 @@ impl Partitioner {
         winner: &FixedWinner,
         input_bits: f64,
         env: &TransmitEnv,
-    ) -> SplitChoice {
+    ) -> Decision {
         self.winner_fold(winner, input_bits, env, env.effective_bit_rate())
     }
 
@@ -668,43 +544,33 @@ impl Partitioner {
         input_bits: f64,
         env: &TransmitEnv,
         b_e: f64,
-    ) -> SplitChoice {
+    ) -> Decision {
         let fcc_cost = self.cost_at(FCC, input_bits, env, b_e);
         let mut best = f64::INFINITY;
         if fcc_cost < best {
             best = fcc_cost;
         }
         if winner.cost_j < best {
-            SplitChoice {
-                l_opt: winner.split,
-                cost_j: winner.cost_j,
-                fcc_cost_j: fcc_cost,
-                fisc_cost_j: winner.fisc_cost_j,
-                client_energy_j: winner.client_energy_j,
-                transmit_energy_j: winner.transmit_energy_j,
-                transmit_bits: winner.transmit_bits,
-            }
+            Decision::energy_outcome(
+                winner.split,
+                winner.cost_j,
+                fcc_cost,
+                winner.fisc_cost_j,
+                winner.client_energy_j,
+                winner.transmit_energy_j,
+                winner.transmit_bits,
+            )
         } else {
-            SplitChoice {
-                l_opt: FCC,
-                cost_j: best,
-                fcc_cost_j: fcc_cost,
-                fisc_cost_j: winner.fisc_cost_j,
-                client_energy_j: 0.0,
-                transmit_energy_j: best,
-                transmit_bits: input_bits,
-            }
+            Decision::energy_outcome(
+                FCC,
+                best,
+                fcc_cost,
+                winner.fisc_cost_j,
+                0.0,
+                best,
+                input_bits,
+            )
         }
-    }
-
-    /// Batched decisions for one shared channel state.
-    #[deprecated(
-        note = "route decisions through `partition::policy` \
-                (`EnergyPolicy::decide_batch`); see the `partition` module docs \
-                migration table"
-    )]
-    pub fn decide_batch(&self, input_bits: &[f64], env: &TransmitEnv, out: &mut Vec<SplitChoice>) {
-        self.choose_batch(input_bits, env, out)
     }
 
     /// Batch-decision core: the γ lookup and the envelope candidates' costs
@@ -712,19 +578,21 @@ impl Partitioner {
     /// across the whole batch; each request then costs two flops and a
     /// compare. This is the serving coordinator's per-batch path and the
     /// experiment sweeps' per-grid-point path. `out` is cleared and
-    /// refilled (capacity reuse keeps the loop allocation-free).
+    /// refilled (capacity reuse keeps the loop allocation-free — the
+    /// decisions' per-candidate vectors are empty, so no per-item heap
+    /// traffic either).
     pub(crate) fn choose_batch(
         &self,
         input_bits: &[f64],
         env: &TransmitEnv,
-        out: &mut Vec<SplitChoice>,
+        out: &mut Vec<Decision>,
     ) {
         out.clear();
         out.reserve(input_bits.len());
         let b_e = env.effective_bit_rate();
         if !(b_e > 0.0) {
-            let choice = self.degenerate_choice();
-            out.extend(input_bits.iter().map(|_| choice));
+            let choice = self.degenerate_decision();
+            out.extend(input_bits.iter().map(|_| choice.clone()));
             return;
         }
         match self.fixed_winner(env) {
@@ -736,30 +604,9 @@ impl Partitioner {
             None => out.extend(
                 input_bits
                     .iter()
-                    .map(|&bits| self.scan_choice(bits, env, b_e)),
+                    .map(|&bits| self.scan_decision(bits, env, b_e)),
             ),
         }
-    }
-
-    /// Batched decisions over probed Sparsity-In values.
-    #[deprecated(
-        note = "route decisions through `partition::policy` \
-                (`EnergyPolicy::decide_batch` over \
-                `input_bits_from_sparsity`-derived volumes); see the `partition` \
-                module docs migration table"
-    )]
-    pub fn decide_batch_sparsity(
-        &self,
-        sparsity_in: &[f64],
-        env: &TransmitEnv,
-    ) -> Vec<SplitChoice> {
-        let bits: Vec<f64> = sparsity_in
-            .iter()
-            .map(|&sp| self.input_bits_from_sparsity(sp))
-            .collect();
-        let mut out = Vec::with_capacity(bits.len());
-        self.choose_batch(&bits, env, &mut out);
-        out
     }
 }
 
@@ -792,10 +639,6 @@ pub fn paper_partitioner(net: &Network) -> Partitioner {
 }
 
 #[cfg(test)]
-// The legacy entry points stay under test on purpose: these are the
-// bit-for-bit proofs that the deprecated wrappers and the policy-trait
-// path agree.
-#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::cnn::{alexnet, googlenet, squeezenet_v11, vgg16};
@@ -804,13 +647,23 @@ mod tests {
         TransmitEnv::with_effective_rate(b_e_mbps * 1e6, p_tx)
     }
 
+    /// Reference scan over a probed Sparsity-In (test shorthand).
+    fn scan(p: &Partitioner, sp: f64, e: &TransmitEnv) -> Decision {
+        p.reference_decision(sp, e)
+    }
+
+    /// Envelope fast path over a probed Sparsity-In (test shorthand).
+    fn fast(p: &Partitioner, sp: f64, e: &TransmitEnv) -> Decision {
+        p.choose_split(p.input_bits_from_sparsity(sp), e)
+    }
+
     #[test]
     fn alexnet_intermediate_optimum_at_paper_point() {
         // Fig. 11(a): at B_e=100 Mbps, P_Tx=1.14 W (BlackBerry Z10) the
         // optimum for AlexNet is an intermediate layer (the paper finds P2).
         let net = alexnet();
         let p = paper_partitioner(&net);
-        let d = p.decide(0.608, &env(100.0, 1.14));
+        let d = scan(&p, 0.608, &env(100.0, 1.14));
         assert!(d.l_opt > FCC && d.l_opt < p.num_layers(), "l_opt {}", d.l_opt);
         // Intermediate optimum must beat both extremes.
         assert!(d.savings_vs_fcc() > 0.0);
@@ -844,8 +697,8 @@ mod tests {
     fn squeezenet_saves_more_than_alexnet() {
         // Table V: SqueezeNet's savings vs FCC dominate AlexNet's.
         let e = env(80.0, 0.78);
-        let a = paper_partitioner(&alexnet()).decide(0.52, &e);
-        let s = paper_partitioner(&squeezenet_v11()).decide(0.52, &e);
+        let a = scan(&paper_partitioner(&alexnet()), 0.52, &e);
+        let s = scan(&paper_partitioner(&squeezenet_v11()), 0.52, &e);
         assert!(s.savings_vs_fcc() > a.savings_vs_fcc());
     }
 
@@ -854,7 +707,7 @@ mod tests {
         // Paper §VIII-A: "For VGG-16, the optimal solution is FCC".
         let p = paper_partitioner(&vgg16());
         for sp in [0.52, 0.608, 0.69] {
-            let d = p.decide(sp, &env(80.0, 0.78));
+            let d = scan(&p, sp, &env(80.0, 0.78));
             assert_eq!(d.l_opt, FCC, "VGG should be FCC at sparsity {sp}");
         }
     }
@@ -864,7 +717,7 @@ mod tests {
         // Paper: GoogleNet is mostly FCC- or FISC-optimal; for poorly
         // compressing images (low Sparsity-In) an intermediate point can win.
         let p = paper_partitioner(&googlenet());
-        let d_high = p.decide(0.80, &env(80.0, 1.28));
+        let d_high = scan(&p, 0.80, &env(80.0, 1.28));
         assert_eq!(d_high.l_opt, FCC);
     }
 
@@ -874,7 +727,7 @@ mod tests {
         for sp in [0.3, 0.52, 0.608, 0.69, 0.9] {
             for be in [5.0, 20.0, 80.0, 200.0] {
                 let e = env(be, 0.78);
-                let d = p.decide(sp, &e);
+                let d = scan(&p, sp, &e);
                 let brute = d
                     .costs_j
                     .iter()
@@ -893,18 +746,18 @@ mod tests {
         // Limits: at vanishing bandwidth transmission is prohibitive -> FISC;
         // at huge bandwidth transmission is free -> FCC.
         let p = paper_partitioner(&alexnet());
-        let slow = p.decide(0.608, &env(0.01, 0.78));
+        let slow = scan(&p, 0.608, &env(0.01, 0.78));
         assert_eq!(slow.l_opt, p.num_layers());
-        let fast = p.decide(0.608, &env(100_000.0, 0.78));
-        assert_eq!(fast.l_opt, FCC);
+        let quick = scan(&p, 0.608, &env(100_000.0, 0.78));
+        assert_eq!(quick.l_opt, FCC);
     }
 
     #[test]
     fn higher_sparsity_in_favors_fcc() {
         let p = paper_partitioner(&alexnet());
         let e = env(80.0, 0.78);
-        let lo = p.decide(0.40, &e);
-        let hi = p.decide(0.95, &e);
+        let lo = scan(&p, 0.40, &e);
+        let hi = scan(&p, 0.95, &e);
         assert!(hi.costs_j[FCC] < lo.costs_j[FCC]);
         // Costs at non-FCC candidates are unaffected by Sparsity-In.
         assert_eq!(lo.costs_j[3], hi.costs_j[3]);
@@ -947,17 +800,17 @@ mod tests {
                 for be in [0.01, 1.0, 5.0, 20.0, 80.0, 200.0, 3000.0, 1e6] {
                     for p_tx in [0.25, 0.78, 1.28, 2.5] {
                         let e = env(be, p_tx);
-                        let scan = p.decide(sp, &e);
-                        let fast = p.decide_fast(sp, &e);
+                        let s = scan(&p, sp, &e);
+                        let f = fast(&p, sp, &e);
                         assert_eq!(
-                            fast.l_opt, scan.l_opt,
+                            f.l_opt, s.l_opt,
                             "{} sp={sp} be={be} ptx={p_tx}",
                             net.name
                         );
-                        assert_eq!(fast.cost_j, scan.costs_j[scan.l_opt]);
-                        assert_eq!(fast.fcc_cost_j, scan.costs_j[FCC]);
-                        assert_eq!(fast.savings_vs_fcc(), scan.savings_vs_fcc());
-                        assert_eq!(fast.savings_vs_fisc(), scan.savings_vs_fisc());
+                        assert_eq!(f.cost_j, s.costs_j[s.l_opt]);
+                        assert_eq!(f.fcc_cost_j, s.costs_j[FCC]);
+                        assert_eq!(f.savings_vs_fcc(), s.savings_vs_fcc());
+                        assert_eq!(f.savings_vs_fisc(), s.savings_vs_fisc());
                     }
                 }
             }
@@ -965,31 +818,36 @@ mod tests {
     }
 
     #[test]
-    fn decide_batch_matches_singles() {
+    fn choose_batch_matches_singles() {
         let p = paper_partitioner(&alexnet());
         let e = env(80.0, 0.78);
         let sps: Vec<f64> = (0..64).map(|i| 0.30 + 0.01 * i as f64).collect();
-        let batch = p.decide_batch_sparsity(&sps, &e);
+        let bits: Vec<f64> = sps
+            .iter()
+            .map(|&sp| p.input_bits_from_sparsity(sp))
+            .collect();
+        let mut batch = Vec::new();
+        p.choose_batch(&bits, &e, &mut batch);
         assert_eq!(batch.len(), sps.len());
         for (&sp, b) in sps.iter().zip(&batch) {
-            let single = p.decide(sp, &e);
+            let single = scan(&p, sp, &e);
             assert_eq!(b.l_opt, single.l_opt, "sp={sp}");
             assert_eq!(b.cost_j, single.costs_j[single.l_opt]);
         }
     }
 
     #[test]
-    fn decide_into_reuses_buffer() {
+    fn choose_into_reuses_buffer() {
         let p = paper_partitioner(&alexnet());
         let e = env(80.0, 0.78);
         let mut buf = Vec::new();
-        let a = p.decide_into(p.transmit_bits(FCC, 0.608), &e, &mut buf);
+        let a = p.choose_into(p.transmit_bits(FCC, 0.608), &e, &mut buf);
         assert_eq!(buf.len(), p.num_layers() + 1);
         let cap = buf.capacity();
-        let b = p.decide_into(p.transmit_bits(FCC, 0.52), &e, &mut buf);
+        let b = p.choose_into(p.transmit_bits(FCC, 0.52), &e, &mut buf);
         assert_eq!(buf.capacity(), cap, "buffer must be reused");
-        assert_eq!(a.l_opt, p.decide(0.608, &e).l_opt);
-        assert_eq!(b.l_opt, p.decide(0.52, &e).l_opt);
+        assert_eq!(a.l_opt, scan(&p, 0.608, &e).l_opt);
+        assert_eq!(b.l_opt, scan(&p, 0.52, &e).l_opt);
     }
 
     #[test]
@@ -997,15 +855,15 @@ mod tests {
         let p = paper_partitioner(&alexnet());
         for b_e in [0.0, -5.0, f64::NAN] {
             let e = TransmitEnv::with_effective_rate(b_e, 0.78);
-            let d = p.decide(0.608, &e);
+            let d = scan(&p, 0.608, &e);
             assert_eq!(d.l_opt, p.num_layers(), "b_e={b_e}");
             assert!(d.costs_j[d.l_opt].is_finite());
             assert!(!d.savings_vs_fcc().is_nan());
             assert!(!d.savings_vs_fisc().is_nan());
-            let fast = p.decide_split(1e6, &e);
-            assert_eq!(fast.l_opt, p.num_layers());
-            assert!(fast.cost_j.is_finite());
-            assert_eq!(fast.transmit_energy_j, 0.0);
+            let f = p.choose_split(1e6, &e);
+            assert_eq!(f.l_opt, p.num_layers());
+            assert!(f.cost_j.is_finite());
+            assert_eq!(f.transmit_energy_j, 0.0);
         }
     }
 
@@ -1015,38 +873,64 @@ mod tests {
         // used to be NaN (0/0); the guard pins it to 0.0.
         let p = paper_partitioner(&alexnet());
         let e = env(80.0, 0.78);
-        let d = p.decide_with_input_bits(0.0, &e);
+        let d = p.reference_decision_with_bits(0.0, &e);
         assert_eq!(d.l_opt, FCC);
         assert_eq!(d.costs_j[FCC], 0.0);
         assert_eq!(d.savings_vs_fcc(), 0.0);
-        let fast = p.decide_split(0.0, &e);
-        assert_eq!(fast.l_opt, FCC);
-        assert_eq!(fast.savings_vs_fcc(), 0.0);
+        let f = p.choose_split(0.0, &e);
+        assert_eq!(f.l_opt, FCC);
+        assert_eq!(f.savings_vs_fcc(), 0.0);
     }
 
     #[test]
-    fn decide_in_segment_matches_decide_split() {
+    fn choose_in_segment_matches_choose_split() {
         let p = paper_partitioner(&alexnet());
         for be in [0.01, 1.0, 20.0, 80.0, 1e4, 1e7] {
             for p_tx in [0.0, 0.25, 0.78, 2.5] {
                 let e = env(be, p_tx);
                 let bits = p.transmit_bits(FCC, 0.608);
-                let b_e = e.effective_bit_rate();
-                let seg = if b_e > 0.0 && e.p_tx_w / b_e > 0.0 {
-                    p.envelope().segment_index(e.p_tx_w / b_e)
-                } else {
-                    0
-                };
+                let seg = p.envelope_segment(&e).unwrap_or(0);
                 assert_eq!(
-                    p.decide_in_segment(seg, bits, &e),
-                    p.decide_split(bits, &e),
+                    p.choose_in_segment(seg, bits, &e),
+                    p.choose_split(bits, &e),
                     "be={be} p_tx={p_tx}"
                 );
             }
         }
         // Degenerate channel ignores the segment and resolves to FISC.
         let e = TransmitEnv::with_effective_rate(0.0, 0.78);
-        assert_eq!(p.decide_in_segment(7, 1e6, &e).l_opt, p.num_layers());
+        assert_eq!(p.choose_in_segment(7, 1e6, &e).l_opt, p.num_layers());
+    }
+
+    #[test]
+    fn envelope_segment_rejects_degenerate_and_non_finite_channel_states() {
+        // Regression (corrupted channel reports): a NaN/∞/non-positive
+        // request rate — or a non-finite γ — must map to None so the
+        // coordinator routes the request to its overflow lane instead of
+        // pinning it to an envelope segment it never belonged to.
+        let p = paper_partitioner(&alexnet());
+        for b_e in [0.0, -5.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let e = TransmitEnv::with_effective_rate(b_e, 0.78);
+            assert_eq!(p.envelope_segment(&e), None, "b_e={b_e}");
+        }
+        // γ = ∞ (corrupted transmit power) and γ = 0 (free transmission).
+        assert_eq!(
+            p.envelope_segment(&TransmitEnv::with_effective_rate(80e6, f64::INFINITY)),
+            None
+        );
+        assert_eq!(
+            p.envelope_segment(&TransmitEnv::with_effective_rate(80e6, f64::NAN)),
+            None
+        );
+        assert_eq!(
+            p.envelope_segment(&TransmitEnv::with_effective_rate(80e6, 0.0)),
+            None
+        );
+        // A sane channel state maps into the breakpoint table's range.
+        let seg = p
+            .envelope_segment(&TransmitEnv::with_effective_rate(80e6, 0.78))
+            .expect("valid channel state has a segment");
+        assert!(seg < p.envelope().num_segments());
     }
 
     #[test]
@@ -1054,7 +938,7 @@ mod tests {
         let p = paper_partitioner(&alexnet());
         let e = env(80.0, 0.78);
         let bits = p.transmit_bits(FCC, 0.608);
-        let d = p.decide(0.608, &e);
+        let d = scan(&p, 0.608, &e);
         for split in 0..=p.num_layers() {
             let sum = p.client_energy_j(split) + p.transmit_energy_j(split, bits, &e);
             assert_eq!(sum, p.candidate_cost_j(split, bits, &e), "split {split}");
@@ -1069,12 +953,12 @@ mod tests {
     #[test]
     fn zero_gamma_free_transmission_is_fcc() {
         // P_Tx = 0 makes every transmission free: γ = 0 exercises the scan
-        // fallback inside decide_split.
+        // fallback inside choose_split.
         let p = paper_partitioner(&alexnet());
         let e = env(80.0, 0.0);
-        let scan = p.decide(0.608, &e);
-        let fast = p.decide_fast(0.608, &e);
-        assert_eq!(scan.l_opt, FCC);
-        assert_eq!(fast.l_opt, FCC);
+        let s = scan(&p, 0.608, &e);
+        let f = fast(&p, 0.608, &e);
+        assert_eq!(s.l_opt, FCC);
+        assert_eq!(f.l_opt, FCC);
     }
 }

@@ -37,48 +37,24 @@
 //! decision matches [`decide_with_slo_scan`] bit-for-bit — property-tested
 //! across random SLOs, γ sweeps, breakpoint ties and infeasible cases.
 //!
+//! Both paths produce the unified
+//! [`Decision`](crate::partition::policy::Decision); route requests
+//! through [`crate::partition::policy::SloPolicy`].
+//!
 //! Degenerate channels (`B_e ≤ 0` or NaN, e.g. a jittered env collapsing
 //! to zero rate) resolve to FISC with finite costs on both paths — the
-//! same guard `Partitioner::decide` received — instead of panicking on
+//! same guard the energy engine received — instead of panicking on
 //! non-finite delays.
 
 use std::sync::Arc;
 
 use crate::channel::TransmitEnv;
 
-use super::algorithm2::{PartitionDecision, Partitioner, SplitChoice, FCC};
+use super::algorithm2::{Partitioner, FCC};
 use super::delay::DelayModel;
 use super::envelope::{CostLine, Envelope};
+use super::policy::Decision;
 use super::FISC_OUTPUT_BITS;
-
-/// Outcome of a constrained decision (reporting form, carries the full
-/// per-candidate delay vector — use
-/// [`crate::partition::policy::SloPolicy`] on the serving path).
-#[derive(Clone, Debug, PartialEq)]
-pub struct ConstrainedDecision {
-    pub inner: PartitionDecision,
-    /// Predicted `t_delay` at the chosen split, seconds.
-    pub t_delay_s: f64,
-    /// Whether the SLO was satisfiable at all.
-    pub feasible: bool,
-    /// Per-candidate predicted delay (same indexing as `inner.costs_j`).
-    pub delays_s: Vec<f64>,
-}
-
-/// Outcome of one envelope-path constrained decision: everything the
-/// serving hot path needs, no per-candidate vectors, `Copy`.
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub struct ConstrainedChoice {
-    /// The chosen split with its energy accounting.
-    pub choice: SplitChoice,
-    /// Predicted `t_delay` at the chosen split, seconds.
-    pub t_delay_s: f64,
-    /// Whether the SLO was satisfiable at all.
-    pub feasible: bool,
-    /// Whether the SLO moved the decision off the unconstrained energy
-    /// optimum (true also for infeasible best-effort outcomes).
-    pub binding: bool,
-}
 
 /// The SLO-aware partitioner: a [`Partitioner`] and a [`DelayModel`] plus
 /// the precomputed delay envelope and constrained frontier (module docs).
@@ -172,42 +148,6 @@ impl SloPartitioner {
         self.frontier.len()
     }
 
-    /// Energy-optimal split under a latency SLO, from the runtime-probed
-    /// Sparsity-In (eq. 29).
-    #[deprecated(
-        note = "route decisions through `partition::policy` (`SloPolicy` + \
-                `DecisionContext::from_sparsity(..).with_slo(..)`); see the \
-                `partition` module docs migration table"
-    )]
-    pub fn decide_with_slo(
-        &self,
-        sparsity_in: f64,
-        env: &TransmitEnv,
-        slo_s: f64,
-    ) -> ConstrainedChoice {
-        self.choose_with_slo(
-            self.partitioner.input_bits_from_sparsity(sparsity_in),
-            env,
-            slo_s,
-        )
-    }
-
-    /// Energy-optimal split under a latency SLO with the input layer's
-    /// `D_RLC` supplied directly.
-    #[deprecated(
-        note = "route decisions through `partition::policy` (`SloPolicy` + \
-                `DecisionContext::from_input_bits(..).with_slo(..)`); see the \
-                `partition` module docs migration table"
-    )]
-    pub fn decide_with_slo_bits(
-        &self,
-        input_bits: f64,
-        env: &TransmitEnv,
-        slo_s: f64,
-    ) -> ConstrainedChoice {
-        self.choose_with_slo(input_bits, env, slo_s)
-    }
-
     /// Constrained-decision core (module docs): unconstrained envelope
     /// decision + one O(1) delay check when the SLO is loose, a frontier
     /// walk when it binds, a delay-envelope lookup when infeasible. The
@@ -218,40 +158,34 @@ impl SloPartitioner {
         input_bits: f64,
         env: &TransmitEnv,
         slo_s: f64,
-    ) -> ConstrainedChoice {
+    ) -> Decision {
         let p = &self.partitioner;
         let n = p.num_layers();
         let b_e = env.effective_bit_rate();
         if !(b_e > 0.0) {
             // Degenerate channel: transmission impossible, FISC is the only
             // executable policy and its delay is the client compute time.
-            let choice = p.choose_split(input_bits, env);
+            let mut d = p.choose_split(input_bits, env);
             let t = self.delay.client_prefix_s(n);
             let feasible = t <= slo_s;
-            return ConstrainedChoice {
-                choice,
-                t_delay_s: t,
-                feasible,
-                // Matches the documented semantics: infeasible best-effort
-                // outcomes count as binding even though the split is
-                // unchanged.
-                binding: !feasible,
-            };
+            d.t_delay_s = Some(t);
+            d.feasible = feasible;
+            // Matches the documented semantics: infeasible best-effort
+            // outcomes count as binding even though the split is unchanged.
+            d.binding = !feasible;
+            return d;
         }
 
         // Common case: the unconstrained optimum already meets the SLO —
         // O(log L) decision plus one O(1) delay lookup. When it is the
         // global first-argmin and feasible, it is also the feasible-set
         // first-argmin, so this matches the scan exactly.
-        let unc = p.choose_split(input_bits, env);
+        let mut unc = p.choose_split(input_bits, env);
         let t_unc = self.delay.t_delay_s(unc.l_opt, unc.transmit_bits, env);
         if t_unc <= slo_s {
-            return ConstrainedChoice {
-                choice: unc,
-                t_delay_s: t_unc,
-                feasible: true,
-                binding: false,
-            };
+            unc.t_delay_s = Some(t_unc);
+            // feasible: true, binding: false — the energy defaults.
+            return unc;
         }
 
         // The SLO binds: first-minimum cost over the feasible candidates,
@@ -281,12 +215,11 @@ impl SloPartitioner {
             }
         }
         if best != usize::MAX {
-            return ConstrainedChoice {
-                choice: self.split_choice(best, best_cost, input_bits, env),
-                t_delay_s: best_delay,
-                feasible: true,
-                binding: true,
-            };
+            let mut d = self.split_decision(best, best_cost, input_bits, env);
+            d.t_delay_s = Some(best_delay);
+            d.feasible = true;
+            d.binding = true;
+            return d;
         }
 
         // Infeasible: best effort = the first delay-minimal candidate.
@@ -295,12 +228,11 @@ impl SloPartitioner {
         // the segment containing β plus neighbors.
         let (win, t_win) = self.min_delay_split(fcc_delay, env, b_e);
         let cost = p.candidate_cost_j(win, input_bits, env);
-        ConstrainedChoice {
-            choice: self.split_choice(win, cost, input_bits, env),
-            t_delay_s: t_win,
-            feasible: false,
-            binding: true,
-        }
+        let mut d = self.split_decision(win, cost, input_bits, env);
+        d.t_delay_s = Some(t_win);
+        d.feasible = false;
+        d.binding = true;
+        d
     }
 
     /// First delay-minimal split: the scan's strict-`<` fold seeded with
@@ -332,47 +264,32 @@ impl SloPartitioner {
         (win, t_win)
     }
 
-    /// Assemble the [`SplitChoice`] for an SLO-overridden split, with the
+    /// Assemble the [`Decision`] for an SLO-overridden split, with the
     /// transmit energy taken from the partitioner's own transmit model
-    /// (never reconstructed by subtraction).
-    fn split_choice(
+    /// (never reconstructed by subtraction). Delay/feasibility fields are
+    /// filled by the caller.
+    fn split_decision(
         &self,
         split: usize,
         cost_j: f64,
         input_bits: f64,
         env: &TransmitEnv,
-    ) -> SplitChoice {
+    ) -> Decision {
         let p = &self.partitioner;
         let transmit_bits = if split == FCC {
             input_bits
         } else {
             p.transmit_bits(split, 0.0)
         };
-        SplitChoice {
-            l_opt: split,
+        Decision::energy_outcome(
+            split,
             cost_j,
-            fcc_cost_j: p.candidate_cost_j(FCC, input_bits, env),
-            fisc_cost_j: p.candidate_cost_j(p.num_layers(), input_bits, env),
-            client_energy_j: p.client_energy_j(split),
-            transmit_energy_j: p.transmit_energy_j(split, input_bits, env),
+            p.candidate_cost_j(FCC, input_bits, env),
+            p.candidate_cost_j(p.num_layers(), input_bits, env),
+            p.client_energy_j(split),
+            p.transmit_energy_j(split, input_bits, env),
             transmit_bits,
-        }
-    }
-
-    /// Reporting form: full per-candidate delay vector via the reference
-    /// scan. O(|L|) — figures and offline analysis only.
-    #[deprecated(
-        note = "route decisions through `partition::policy` \
-                (`SloPolicy::decide_detailed`); see the `partition` module docs \
-                migration table"
-    )]
-    pub fn decide_with_slo_full(
-        &self,
-        sparsity_in: f64,
-        env: &TransmitEnv,
-        slo_s: f64,
-    ) -> ConstrainedDecision {
-        decide_with_slo_scan(&self.partitioner, &self.delay, sparsity_in, env, slo_s)
+        )
     }
 
     /// A provable lower bound on the achievable `t_delay` at a channel
@@ -394,7 +311,9 @@ impl SloPartitioner {
     }
 }
 
-/// Energy-optimal split under a latency SLO — the O(|L|) reference scan.
+/// Energy-optimal split under a latency SLO — the O(|L|) reference scan,
+/// returning a fully detailed [`Decision`] (per-candidate `costs_j` and
+/// `delays_s` filled).
 ///
 /// This is the semantics the envelope path must reproduce bit-for-bit
 /// (property-tested); serving should use
@@ -408,23 +327,22 @@ pub fn decide_with_slo_scan(
     sparsity_in: f64,
     env: &TransmitEnv,
     slo_s: f64,
-) -> ConstrainedDecision {
+) -> Decision {
     let n = partitioner.num_layers();
     let b_e = env.effective_bit_rate();
 
     if !(b_e > 0.0) {
         // Degenerate channel (B_e ≤ 0 or NaN): every transmitting split is
         // impossible (+∞ delay), FISC runs locally in its compute time.
-        let unconstrained = partitioner.reference_decision(sparsity_in, env); // FISC, finite
+        let mut d = partitioner.reference_decision(sparsity_in, env); // FISC, finite
         let mut delays_s = vec![f64::INFINITY; n + 1];
         let fisc_t = delay.client_prefix_s(n);
         delays_s[n] = fisc_t;
-        return ConstrainedDecision {
-            t_delay_s: fisc_t,
-            feasible: fisc_t <= slo_s,
-            delays_s,
-            inner: unconstrained,
-        };
+        d.t_delay_s = Some(fisc_t);
+        d.feasible = fisc_t <= slo_s;
+        d.binding = !d.feasible;
+        d.delays_s = delays_s;
+        return d;
     }
 
     let unconstrained = partitioner.reference_decision(sparsity_in, env);
@@ -467,32 +385,26 @@ pub fn decide_with_slo_scan(
         win
     });
 
-    let mut inner = unconstrained;
-    if chosen != inner.l_opt {
-        inner = PartitionDecision {
-            l_opt: chosen,
-            client_energy_j: partitioner.client_energy_j(chosen),
-            // From the partitioner's own transmit model: subtracting the
-            // client energy from the cached total drifts under rounding
-            // and can go -0.0; this decomposes costs_j[chosen] exactly.
-            transmit_energy_j: partitioner.transmit_energy_j(chosen, bits_at(FCC), env),
-            transmit_bits: bits_at(chosen),
-            costs_j: inner.costs_j,
-        };
+    let unconstrained_opt = unconstrained.l_opt;
+    let mut d = unconstrained;
+    if chosen != d.l_opt {
+        d.l_opt = chosen;
+        d.cost_j = d.costs_j[chosen];
+        d.client_energy_j = partitioner.client_energy_j(chosen);
+        // From the partitioner's own transmit model: subtracting the
+        // client energy from the cached total drifts under rounding
+        // and can go -0.0; this decomposes costs_j[chosen] exactly.
+        d.transmit_energy_j = partitioner.transmit_energy_j(chosen, bits_at(FCC), env);
+        d.transmit_bits = bits_at(chosen);
     }
-    ConstrainedDecision {
-        t_delay_s: delays_s[chosen],
-        feasible,
-        delays_s,
-        inner,
-    }
+    d.t_delay_s = Some(delays_s[chosen]);
+    d.feasible = feasible;
+    d.binding = !feasible || chosen != unconstrained_opt;
+    d.delays_s = delays_s;
+    d
 }
 
 #[cfg(test)]
-// The legacy entry points stay under test on purpose: these are the
-// bit-for-bit proofs that the deprecated wrappers and the policy-trait
-// path agree.
-#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::cnn::alexnet;
@@ -510,16 +422,27 @@ mod tests {
         SloPartitioner::new(p, dm)
     }
 
+    /// Envelope fast path over a probed Sparsity-In (test shorthand — the
+    /// serving surface is `SloPolicy`, which calls the same core).
+    fn fast(slo_p: &SloPartitioner, sp: f64, env: &TransmitEnv, slo_s: f64) -> Decision {
+        slo_p.choose_with_slo(
+            slo_p.partitioner().input_bits_from_sparsity(sp),
+            env,
+            slo_s,
+        )
+    }
+
     #[test]
     fn loose_slo_recovers_unconstrained_optimum() {
         let (p, dm) = setup();
         let env = TransmitEnv::with_effective_rate(80e6, 0.78);
         let d = decide_with_slo_scan(&p, &dm, 0.608, &env, 10.0);
         assert!(d.feasible);
-        assert_eq!(d.inner.l_opt, p.decide(0.608, &env).l_opt);
-        let fast = slo_setup().decide_with_slo(0.608, &env, 10.0);
-        assert_eq!(fast.choice.l_opt, d.inner.l_opt);
-        assert!(!fast.binding);
+        assert_eq!(d.l_opt, p.reference_decision(0.608, &env).l_opt);
+        let slo_p = slo_setup();
+        let f = fast(&slo_p, 0.608, &env, 10.0);
+        assert_eq!(f.l_opt, d.l_opt);
+        assert!(!f.binding);
     }
 
     #[test]
@@ -530,15 +453,12 @@ mod tests {
         let env = TransmitEnv::with_effective_rate(200e6, 0.78);
         let loose = decide_with_slo_scan(&p, &dm, 0.608, &env, 10.0);
         let tight = decide_with_slo_scan(&p, &dm, 0.608, &env, 0.015);
-        assert!(tight.inner.l_opt <= loose.inner.l_opt);
+        assert!(tight.l_opt <= loose.l_opt);
         if tight.feasible {
-            assert!(tight.t_delay_s <= 0.015 + 1e-12);
+            assert!(tight.t_delay_s.unwrap() <= 0.015 + 1e-12);
         }
         // Energy never improves under a binding constraint.
-        assert!(
-            tight.inner.costs_j[tight.inner.l_opt]
-                >= loose.inner.costs_j[loose.inner.l_opt] - 1e-15
-        );
+        assert!(tight.costs_j[tight.l_opt] >= loose.costs_j[loose.l_opt] - 1e-15);
     }
 
     #[test]
@@ -549,7 +469,7 @@ mod tests {
         assert!(!d.feasible);
         // Best effort = delay-minimal candidate.
         let min_delay = d.delays_s.iter().cloned().fold(f64::INFINITY, f64::min);
-        assert!((d.t_delay_s - min_delay).abs() < 1e-15);
+        assert!((d.t_delay_s.unwrap() - min_delay).abs() < 1e-15);
     }
 
     #[test]
@@ -568,15 +488,19 @@ mod tests {
         for be in [0.5, 5.0, 40.0, 130.0, 1000.0] {
             for slo_ms in [0.001, 1.0, 8.0, 15.0, 40.0, 200.0] {
                 let env = TransmitEnv::with_effective_rate(be * 1e6, 0.78);
-                let scan = slo_p.decide_with_slo_full(0.608, &env, slo_ms / 1e3);
-                let fast = slo_p.decide_with_slo(0.608, &env, slo_ms / 1e3);
-                assert_eq!(
-                    fast.choice.l_opt, scan.inner.l_opt,
-                    "be={be} slo={slo_ms}ms"
+                let scan = decide_with_slo_scan(
+                    slo_p.partitioner(),
+                    slo_p.delay_model(),
+                    0.608,
+                    &env,
+                    slo_ms / 1e3,
                 );
-                assert_eq!(fast.choice.cost_j, scan.inner.costs_j[scan.inner.l_opt]);
-                assert_eq!(fast.t_delay_s, scan.t_delay_s, "be={be} slo={slo_ms}ms");
-                assert_eq!(fast.feasible, scan.feasible);
+                let f = fast(&slo_p, 0.608, &env, slo_ms / 1e3);
+                assert_eq!(f.l_opt, scan.l_opt, "be={be} slo={slo_ms}ms");
+                assert_eq!(f.cost_j, scan.costs_j[scan.l_opt]);
+                assert_eq!(f.t_delay_s, scan.t_delay_s, "be={be} slo={slo_ms}ms");
+                assert_eq!(f.feasible, scan.feasible);
+                assert_eq!(f.binding, scan.binding, "be={be} slo={slo_ms}ms");
             }
         }
     }
@@ -591,17 +515,17 @@ mod tests {
         for b_e in [0.0, -5.0, f64::NAN] {
             let env = TransmitEnv::with_effective_rate(b_e, 0.78);
             let d = decide_with_slo_scan(&p, &dm, 0.608, &env, 1e-6);
-            assert_eq!(d.inner.l_opt, n, "b_e={b_e}");
-            assert!(d.inner.costs_j[n].is_finite());
-            assert!(d.t_delay_s.is_finite());
-            assert_eq!(d.inner.transmit_energy_j, 0.0);
-            let fast = slo_p.decide_with_slo(0.608, &env, 1e-6);
-            assert_eq!(fast.choice.l_opt, n);
-            assert!(fast.choice.cost_j.is_finite());
-            assert_eq!(fast.t_delay_s, d.t_delay_s);
-            assert_eq!(fast.feasible, d.feasible);
+            assert_eq!(d.l_opt, n, "b_e={b_e}");
+            assert!(d.costs_j[n].is_finite());
+            assert!(d.t_delay_s.unwrap().is_finite());
+            assert_eq!(d.transmit_energy_j, 0.0);
+            let f = fast(&slo_p, 0.608, &env, 1e-6);
+            assert_eq!(f.l_opt, n);
+            assert!(f.cost_j.is_finite());
+            assert_eq!(f.t_delay_s, d.t_delay_s);
+            assert_eq!(f.feasible, d.feasible);
             // A loose SLO is feasible through FISC alone.
-            let loose = slo_p.decide_with_slo(0.608, &env, 1e9);
+            let loose = fast(&slo_p, 0.608, &env, 1e9);
             assert!(loose.feasible);
         }
     }
@@ -615,25 +539,22 @@ mod tests {
         // The paper's 80 Mbps operating point: AlexNet's unconstrained
         // optimum is an intermediate split (Table V).
         let env = TransmitEnv::with_effective_rate(80e6, 0.78);
-        let unc = p.decide(0.608, &env);
+        let unc = p.reference_decision(0.608, &env);
         // An SLO only the FCC upload can meet: forces the override path.
         let slo = dm.fcc_delay_s(p.transmit_bits(FCC, 0.608), &env);
         let tight = decide_with_slo_scan(&p, &dm, 0.608, &env, slo);
         assert!(tight.feasible);
-        assert_ne!(tight.inner.l_opt, unc.l_opt, "override path not engaged");
-        let l = tight.inner.l_opt;
+        assert_ne!(tight.l_opt, unc.l_opt, "override path not engaged");
+        let l = tight.l_opt;
         assert_eq!(
-            tight.inner.client_energy_j + tight.inner.transmit_energy_j,
-            tight.inner.costs_j[l]
+            tight.client_energy_j + tight.transmit_energy_j,
+            tight.costs_j[l]
         );
-        assert!(!tight.inner.transmit_energy_j.is_sign_negative());
+        assert!(!tight.transmit_energy_j.is_sign_negative());
         // The envelope path decomposes exactly too.
-        let fast = slo_setup().decide_with_slo(0.608, &env, slo);
-        assert_eq!(fast.choice.l_opt, l);
-        assert_eq!(
-            fast.choice.client_energy_j + fast.choice.transmit_energy_j,
-            fast.choice.cost_j
-        );
+        let f = fast(&slo_setup(), 0.608, &env, slo);
+        assert_eq!(f.l_opt, l);
+        assert_eq!(f.client_energy_j + f.transmit_energy_j, f.cost_j);
     }
 
     #[test]

@@ -39,7 +39,7 @@ impl DelayModel {
     /// slices the same latency table from a compiled profile.
     pub fn new(net: &Network, model: &CnnErgy) -> Self {
         let client_s = model.layer_latencies_s(net);
-        let cloud_s = Self::cloud_latencies_s(net);
+        let cloud_s = Self::tpu_cloud_latencies_s(net);
         Self::from_parts(client_s, cloud_s)
     }
 
@@ -50,12 +50,12 @@ impl DelayModel {
     pub fn from_profile(profile: &NetworkProfile) -> Self {
         Self::from_parts(
             profile.latencies_s().to_vec(),
-            Self::cloud_latencies_s(profile.network()),
+            Self::tpu_cloud_latencies_s(profile.network()),
         )
     }
 
     /// Per-layer cloud latency on the paper's TPU (`2·#MACs / ops-rate`).
-    fn cloud_latencies_s(net: &Network) -> Vec<f64> {
+    fn tpu_cloud_latencies_s(net: &Network) -> Vec<f64> {
         net.layers
             .iter()
             .map(|l| 2.0 * l.macs() as f64 / TPU_OPS_PER_S)
@@ -89,6 +89,21 @@ impl DelayModel {
     /// Number of layers in the bound network.
     pub fn num_layers(&self) -> usize {
         self.client_s.len()
+    }
+
+    /// Per-layer client latency table, seconds — the
+    /// [`crate::partition::registry::EnvelopeTable`] v2 latency payload
+    /// (together with [`DelayModel::cloud_latencies_s`]): these two
+    /// vectors are exactly the [`DelayModel::from_parts`] inputs, so a
+    /// deserialized artifact reconstructs this model bit-identically.
+    pub fn client_latencies_s(&self) -> &[f64] {
+        &self.client_s
+    }
+
+    /// Per-layer cloud latency table, seconds (see
+    /// [`DelayModel::client_latencies_s`]).
+    pub fn cloud_latencies_s(&self) -> &[f64] {
+        &self.cloud_s
     }
 
     /// Client compute time for layers `1..=split`, seconds.
@@ -140,7 +155,6 @@ impl DelayModel {
 }
 
 #[cfg(test)]
-#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::cnn::alexnet;
@@ -180,7 +194,7 @@ mod tests {
         // tracks between/below the extremes for most of the B_e range.
         let (dm, p) = setup();
         let env = TransmitEnv::with_effective_rate(80e6, 0.78);
-        let d = p.decide(0.608, &env);
+        let d = p.reference_decision(0.608, &env);
         let t_opt = dm.t_delay_s(d.l_opt, d.transmit_bits, &env);
         let t_fisc = dm.fisc_delay_s(&env);
         assert!(t_opt <= t_fisc * 1.05, "opt {t_opt} vs fisc {t_fisc}");

@@ -17,7 +17,8 @@
 //!
 //! Fleet scale: [`registry`] extracts the per-(network, device P_Tx
 //! class) decision tables into a JSON-round-trippable [`EnvelopeTable`]
-//! artifact and shares built engines across connections through
+//! artifact (v2: energy *and* latency tables, so imported fleets keep
+//! their SLO engines) and shares built engines across connections through
 //! [`PolicyRegistry`] — small enough to ship to clients for fully
 //! client-side decisions.
 //!
@@ -25,16 +26,17 @@
 //! ([`Partitioner::from_profile`], [`DelayModel::from_profile`]) instead
 //! of re-running the §IV analytical model — bit-identical tables, one
 //! model pass per (network, hardware) point shared process-wide; registry
-//! entries built analytically also carry a per-device-class SLO engine
-//! ([`registry::RegistryEntry::slo_partitioner`]).
+//! entries carry a per-device-class SLO engine
+//! ([`registry::RegistryEntry::slo_partitioner`]) whether built
+//! analytically or imported from a v2 artifact.
 //!
-//! ## Migrating off the deprecated `decide_*` methods
+//! ## Migrating off the removed `decide_*` methods
 //!
-//! The historical per-optimization entry points survive as thin
-//! deprecated wrappers, property-tested bit-for-bit against the trait
-//! path (`rust/tests/prop_invariants.rs`):
+//! The historical per-optimization entry points (deprecated in the
+//! policy-unification PR, deleted once every call site migrated) map onto
+//! the trait as follows:
 //!
-//! | deprecated | replacement |
+//! | removed | replacement |
 //! |---|---|
 //! | `Partitioner::decide(sp, env)` | `EnergyPolicy::decide_detailed(&DecisionContext::from_sparsity(p, sp, env))` |
 //! | `Partitioner::decide_with_input_bits(bits, env)` | `EnergyPolicy::decide_detailed(&DecisionContext::from_input_bits(bits, env))` |
@@ -47,11 +49,12 @@
 //! | `SloPartitioner::decide_with_slo{,_bits}(.., slo)` | `SloPolicy::decide(&ctx.with_slo(slo))` |
 //! | `SloPartitioner::decide_with_slo_full(.., slo)` | `SloPolicy::decide_detailed(&ctx.with_slo(slo))` |
 //!
-//! The unified [`Decision`] replaces the `PartitionDecision` /
-//! `SplitChoice` / `ConstrainedDecision` return-type triplet: the scalar
-//! accounting fields are always present, `t_delay_s`/`feasible`/`binding`
-//! are meaningful on SLO-aware policies, and the per-candidate vectors
-//! are filled by `decide_detailed` only.
+//! The unified [`Decision`] likewise replaced the removed
+//! `PartitionDecision` / `SplitChoice` / `ConstrainedDecision`
+//! return-type triplet: the scalar accounting fields are always present,
+//! `t_delay_s`/`feasible`/`binding` are meaningful on SLO-aware policies,
+//! and the per-candidate vectors are filled by `decide_detailed` (and by
+//! the [`decide_with_slo_scan`] reference) only.
 
 pub mod algorithm2;
 pub mod constrained;
@@ -60,15 +63,14 @@ pub mod envelope;
 pub mod policy;
 pub mod registry;
 
-pub use algorithm2::{
-    FixedWinner, PartitionDecision, Partitioner, SplitChoice, FCC, FISC_OUTPUT_BITS,
-};
-pub use constrained::{
-    decide_with_slo_scan, ConstrainedChoice, ConstrainedDecision, SloPartitioner,
-};
+pub use algorithm2::{FixedWinner, Partitioner, FCC, FISC_OUTPUT_BITS};
+pub use constrained::{decide_with_slo_scan, SloPartitioner};
 pub use delay::DelayModel;
 pub use envelope::{CostLine, Envelope};
 pub use policy::{
     Decision, DecisionContext, EnergyPolicy, PartitionPolicy, SloPolicy, SparsityEnvelopePolicy,
 };
-pub use registry::{device_class, EnvelopeTable, PolicyRegistry, RegistryEntry};
+pub use registry::{
+    device_class, DelayTables, EnvelopeTable, ImportReport, PolicyRegistry, RegistryEntry,
+    ENVELOPE_TABLE_VERSION,
+};

@@ -45,8 +45,8 @@ use std::sync::Arc;
 
 use crate::channel::TransmitEnv;
 
-use super::algorithm2::{FixedWinner, PartitionDecision, Partitioner, SplitChoice, FCC};
-use super::constrained::{decide_with_slo_scan, ConstrainedChoice, SloPartitioner};
+use super::algorithm2::{FixedWinner, Partitioner, FCC};
+use super::constrained::{decide_with_slo_scan, SloPartitioner};
 
 /// Everything one partition decision can depend on.
 ///
@@ -159,49 +159,34 @@ impl Decision {
         super::algorithm2::savings_ratio(self.cost_j, self.fisc_cost_j)
     }
 
-    pub(crate) fn from_split_choice(choice: SplitChoice) -> Self {
+    /// The unconstrained-energy outcome: scalar accounting fields set, the
+    /// delay/feasibility fields at their trivial defaults and the
+    /// per-candidate vectors empty. This is the single construction path
+    /// every engine fast path uses; SLO-aware callers overwrite
+    /// `t_delay_s`/`feasible`/`binding` afterwards.
+    pub(crate) fn energy_outcome(
+        l_opt: usize,
+        cost_j: f64,
+        fcc_cost_j: f64,
+        fisc_cost_j: f64,
+        client_energy_j: f64,
+        transmit_energy_j: f64,
+        transmit_bits: f64,
+    ) -> Self {
         Decision {
-            l_opt: choice.l_opt,
-            cost_j: choice.cost_j,
-            fcc_cost_j: choice.fcc_cost_j,
-            fisc_cost_j: choice.fisc_cost_j,
-            client_energy_j: choice.client_energy_j,
-            transmit_energy_j: choice.transmit_energy_j,
-            transmit_bits: choice.transmit_bits,
+            l_opt,
+            cost_j,
+            fcc_cost_j,
+            fisc_cost_j,
+            client_energy_j,
+            transmit_energy_j,
+            transmit_bits,
             t_delay_s: None,
             feasible: true,
             binding: false,
             costs_j: Vec::new(),
             delays_s: Vec::new(),
         }
-    }
-
-    pub(crate) fn from_constrained_choice(c: ConstrainedChoice) -> Self {
-        let mut d = Decision::from_split_choice(c.choice);
-        d.t_delay_s = Some(c.t_delay_s);
-        d.feasible = c.feasible;
-        d.binding = c.binding;
-        d
-    }
-
-    /// First strict-`<` argmin over a cost vector — the scan's fold, used
-    /// to recover the unconstrained optimum for the `binding` flag.
-    fn first_argmin(costs: &[f64]) -> usize {
-        let mut best = f64::INFINITY;
-        let mut win = 0;
-        for (i, &c) in costs.iter().enumerate() {
-            if c < best {
-                best = c;
-                win = i;
-            }
-        }
-        win
-    }
-}
-
-impl From<SplitChoice> for Decision {
-    fn from(choice: SplitChoice) -> Self {
-        Decision::from_split_choice(choice)
     }
 }
 
@@ -271,12 +256,6 @@ impl EnergyPolicy {
     pub fn partitioner(&self) -> &Partitioner {
         &self.partitioner
     }
-
-    /// The reference O(|L|) scan decision (kept for property tests and
-    /// detailed reporting).
-    pub fn reference(&self, sparsity_in: f64, env: &TransmitEnv) -> PartitionDecision {
-        self.partitioner.reference_decision(sparsity_in, env)
-    }
 }
 
 impl PartitionPolicy for EnergyPolicy {
@@ -289,32 +268,25 @@ impl PartitionPolicy for EnergyPolicy {
     }
 
     fn decide(&self, ctx: &DecisionContext) -> Decision {
-        let choice = match ctx.segment {
+        match ctx.segment {
             Some(seg) => self
                 .partitioner
                 .choose_in_segment(seg, ctx.input_bits, &ctx.env),
             None => self.partitioner.choose_split(ctx.input_bits, &ctx.env),
-        };
-        Decision::from_split_choice(choice)
+        }
     }
 
     fn decide_detailed(&self, ctx: &DecisionContext) -> Decision {
         let mut costs_j = Vec::with_capacity(self.num_layers() + 1);
-        let choice = self
+        let mut d = self
             .partitioner
             .choose_into(ctx.input_bits, &ctx.env, &mut costs_j);
-        let mut d = Decision::from_split_choice(choice);
         d.costs_j = costs_j;
         d
     }
 
     fn decide_batch(&self, input_bits: &[f64], ctx: &DecisionContext, out: &mut Vec<Decision>) {
-        let mut choices = Vec::with_capacity(input_bits.len());
-        self.partitioner
-            .choose_batch(input_bits, &ctx.env, &mut choices);
-        out.clear();
-        out.reserve(choices.len());
-        out.extend(choices.into_iter().map(Decision::from_split_choice));
+        self.partitioner.choose_batch(input_bits, &ctx.env, out);
     }
 }
 
@@ -363,18 +335,13 @@ impl PartitionPolicy for SloPolicy {
 
     fn decide(&self, ctx: &DecisionContext) -> Decision {
         match ctx.slo_s {
-            Some(slo_s) => Decision::from_constrained_choice(self.slo.choose_with_slo(
-                ctx.input_bits,
-                &ctx.env,
-                slo_s,
-            )),
+            Some(slo_s) => self.slo.choose_with_slo(ctx.input_bits, &ctx.env, slo_s),
             None => {
                 let p = self.slo.partitioner();
-                let choice = match ctx.segment {
+                match ctx.segment {
                     Some(seg) => p.choose_in_segment(seg, ctx.input_bits, &ctx.env),
                     None => p.choose_split(ctx.input_bits, &ctx.env),
-                };
-                Decision::from_split_choice(choice)
+                }
             }
         }
     }
@@ -386,28 +353,13 @@ impl PartitionPolicy for SloPolicy {
             return self.decide(ctx);
         };
         let slo_s = ctx.slo_s.unwrap_or(f64::INFINITY);
-        let scan = decide_with_slo_scan(
+        decide_with_slo_scan(
             self.slo.partitioner(),
             self.slo.delay_model(),
             sparsity_in,
             &ctx.env,
             slo_s,
-        );
-        let unconstrained = Decision::first_argmin(&scan.inner.costs_j);
-        Decision {
-            l_opt: scan.inner.l_opt,
-            cost_j: scan.inner.costs_j[scan.inner.l_opt],
-            fcc_cost_j: scan.inner.costs_j[FCC],
-            fisc_cost_j: scan.inner.costs_j[scan.inner.costs_j.len() - 1],
-            client_energy_j: scan.inner.client_energy_j,
-            transmit_energy_j: scan.inner.transmit_energy_j,
-            transmit_bits: scan.inner.transmit_bits,
-            t_delay_s: Some(scan.t_delay_s),
-            feasible: scan.feasible,
-            binding: !scan.feasible || scan.inner.l_opt != unconstrained,
-            costs_j: scan.inner.costs_j,
-            delays_s: scan.delays_s,
-        }
+        )
     }
 }
 
@@ -500,11 +452,10 @@ impl SparsityEnvelopePolicy {
     }
 
     fn decide_bits(&self, input_bits: f64) -> Decision {
-        let choice = match &self.winner {
+        match &self.winner {
             Some(w) => self.partitioner.choose_with_winner(w, input_bits, &self.env),
             None => self.partitioner.choose_split(input_bits, &self.env),
-        };
-        Decision::from_split_choice(choice)
+        }
     }
 }
 

@@ -1,35 +1,61 @@
-//! Per-device envelope artifacts and the fleet-scale policy registry.
+//! Per-device envelope artifacts (v2) and the fleet-scale policy registry.
 //!
 //! A fleet coordinator serving many device models (paper Table IV) makes
 //! the same partition decision per (network, device transmit-power class):
 //! the decision tables — cumulative client energy `E[l]`, fixed transmit
-//! volumes `D_RLC[l]` and the derived γ-breakpoint envelope — are tiny
-//! (a few hundred bytes of JSON for a real CNN) and channel-independent,
-//! so they can be built once, shared across every connection of that
-//! class, and even shipped to clients for fully client-side decisions.
+//! volumes `D_RLC[l]`, the derived γ-breakpoint envelope and (since v2)
+//! the per-layer client/cloud latency vectors — are tiny (a few hundred
+//! bytes of JSON for a real CNN) and channel-independent, so they can be
+//! built once, shared across every connection of that class, and even
+//! shipped to clients for fully client-side decisions.
 //!
 //! * [`EnvelopeTable`] — the compact, serializable artifact keyed by
 //!   `(network, device)`: exactly the [`Partitioner::from_parts`] inputs
-//!   plus the derived breakpoint table for inspection. The JSON round
+//!   plus the derived breakpoint table for inspection, and (v2) the
+//!   [`DelayModel::from_parts`] latency inputs so an importer can
+//!   reconstruct the device class's [`SloPartitioner`]. The JSON round
 //!   trip is **bit-exact** (the writer prints shortest-round-trip floats;
-//!   see [`crate::util::json`]), so a partitioner rebuilt from a
-//!   deserialized table reproduces in-memory decisions exactly —
-//!   property-tested across random γ, ties and degenerate channels.
+//!   see [`crate::util::json`]), so engines rebuilt from a deserialized
+//!   table reproduce in-memory decisions exactly — energy *and* SLO —
+//!   property-tested across random γ, SLOs, ties and degenerate channels.
 //! * [`PolicyRegistry`] — a thread-safe map of those artifacts with their
 //!   built engines, shared across connections; [`RegistryEntry::policy`]
-//!   hands out [`EnergyPolicy`] views over one shared [`Partitioner`].
+//!   hands out [`EnergyPolicy`] views over one shared [`Partitioner`] and
+//!   [`RegistryEntry::slo_policy`] [`SloPolicy`] views over one shared
+//!   [`SloPartitioner`].
 //!
 //! Entries built from the analytical models ([`PolicyRegistry::get_or_build`],
 //! the Table-IV fleet builder) slice every engine from one shared compiled
 //! [`NetworkProfile`](crate::cnnergy::NetworkProfile) — the partitioner
 //! build is table slicing, and each entry also carries a per-device-class
-//! SLO engine ([`RegistryEntry::slo_partitioner`]: a [`SloPartitioner`]
-//! over the same shared [`Partitioner`] plus a [`DelayModel`] from the
-//! same profile), so `SloPolicy` serving and infeasible-shedding stop
-//! rebuilding delay envelopes per connection. Entries rebuilt from
-//! imported JSON tables carry no latency data and hence no SLO engine.
+//! SLO engine. Entries rebuilt from imported v2 tables reconstruct the
+//! same SLO engine from the artifact's latency vectors.
+//!
+//! ## v1 compatibility
+//!
+//! v1 artifacts (no `version` key, no latency vectors) still import, but
+//! the resulting entries have **no SLO engine** —
+//! [`RegistryEntry::slo_policy`] returns `None` and a deadline-serving
+//! coordinator must rebuild the delay engine from a compiled profile
+//! (counted in `MetricsSnapshot::slo_missing`). The condition is reported
+//! loudly instead of silently degrading: [`PolicyRegistry::import_json`]
+//! returns an [`ImportReport`] whose `missing_slo` counts the latency-less
+//! tables, and re-exporting such an entry produces a v2 document without
+//! latency vectors (byte-stable across round trips).
+//!
+//! ## Trust boundary
+//!
+//! [`EnvelopeTable::from_json`] validates the artifact before any engine
+//! is built: finite-only tables, bit width in range, matching
+//! energy/volume/latency lengths, non-negative latencies, monotone
+//! (γ-ascending) breakpoints, a segment table sized to the breakpoints,
+//! and — since the stored envelope is redundant with the vectors it was
+//! derived from — the breakpoints/segment winners must equal a rebuild
+//! from the shipped tables bit-for-bit (a mismatch means a corrupt or
+//! hand-edited artifact).
 
 use std::collections::BTreeMap;
+use std::fmt;
 use std::sync::{Arc, RwLock};
 
 use anyhow::{anyhow, Result};
@@ -44,6 +70,12 @@ use super::algorithm2::Partitioner;
 use super::constrained::SloPartitioner;
 use super::delay::DelayModel;
 use super::policy::{EnergyPolicy, SloPolicy, SparsityEnvelopePolicy};
+
+/// Current [`EnvelopeTable`] serialization version. v1 documents (no
+/// `version` key) predate the latency tables; v2 adds the optional
+/// per-layer client/cloud latency vectors that let importers reconstruct
+/// the SLO engine.
+pub const ENVELOPE_TABLE_VERSION: u32 = 2;
 
 /// Transmit-power class name for a device power: the Table-IV
 /// platform+radio whose surveyed uplink power matches (±5 mW), else a
@@ -63,6 +95,18 @@ pub fn device_class(p_tx_w: f64) -> String {
         }
     }
     format!("ptx-{p_tx_w:.3}W")
+}
+
+/// The v2 latency payload: exactly the [`DelayModel::from_parts`] inputs,
+/// one entry per layer. Bit-exact through the JSON round trip, so the
+/// reconstructed delay model (and hence the [`SloPartitioner`] built over
+/// it) reproduces the analytic engine's SLO decisions exactly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DelayTables {
+    /// Per-layer client compute latency, seconds.
+    pub client_latencies_s: Vec<f64>,
+    /// Per-layer cloud compute latency, seconds.
+    pub cloud_latencies_s: Vec<f64>,
 }
 
 /// The serializable per-(network, device) decision artifact (module docs).
@@ -91,10 +135,16 @@ pub struct EnvelopeTable {
     pub breakpoints: Vec<f64>,
     /// Winning split per envelope segment, γ-ascending.
     pub segment_splits: Vec<usize>,
+    /// v2: per-layer latency tables for the SLO engine. `None` for v1
+    /// documents — the imported entry then has no SLO engine and the
+    /// import reports it ([`ImportReport::missing_slo`]).
+    pub delay: Option<DelayTables>,
 }
 
 impl EnvelopeTable {
-    /// Extract the artifact from a built engine.
+    /// Extract the energy-side artifact from a built engine (no latency
+    /// tables — prefer [`EnvelopeTable::from_engines`] so importers keep
+    /// their SLO engines).
     pub fn from_partitioner(
         network: &str,
         device: &str,
@@ -116,12 +166,37 @@ impl EnvelopeTable {
                 .iter()
                 .map(|l| l.split)
                 .collect(),
+            delay: None,
         }
     }
 
-    /// Rebuild the engine. The envelope construction is deterministic, so
-    /// the rebuilt breakpoints/segments are bit-identical to the stored
-    /// ones and every decision matches the source engine exactly.
+    /// Extract the full v2 artifact — energy tables plus the delay model's
+    /// latency vectors — from a built engine pair. Both must describe the
+    /// same network.
+    pub fn from_engines(
+        network: &str,
+        device: &str,
+        p_tx_w: f64,
+        partitioner: &Partitioner,
+        delay: &DelayModel,
+    ) -> Self {
+        assert_eq!(
+            partitioner.num_layers(),
+            delay.num_layers(),
+            "partitioner and delay model describe different networks"
+        );
+        let mut table = Self::from_partitioner(network, device, p_tx_w, partitioner);
+        table.delay = Some(DelayTables {
+            client_latencies_s: delay.client_latencies_s().to_vec(),
+            cloud_latencies_s: delay.cloud_latencies_s().to_vec(),
+        });
+        table
+    }
+
+    /// Rebuild the energy engine. The envelope construction is
+    /// deterministic, so the rebuilt breakpoints/segments are bit-identical
+    /// to the stored ones and every decision matches the source engine
+    /// exactly.
     pub fn to_partitioner(&self) -> Partitioner {
         Partitioner::from_parts(
             self.cumulative_energy_j.clone(),
@@ -129,6 +204,20 @@ impl EnvelopeTable {
             self.input_raw_bits,
             self.bw,
         )
+    }
+
+    /// Rebuild the delay model from the v2 latency tables (`None` for v1
+    /// artifacts).
+    pub fn to_delay_model(&self) -> Option<DelayModel> {
+        self.delay.as_ref().map(|d| {
+            DelayModel::from_parts(d.client_latencies_s.clone(), d.cloud_latencies_s.clone())
+        })
+    }
+
+    /// Whether this artifact carries the v2 latency tables (and hence can
+    /// reconstruct an SLO engine on import).
+    pub fn has_slo_tables(&self) -> bool {
+        self.delay.is_some()
     }
 
     /// Registry key.
@@ -142,14 +231,19 @@ impl EnvelopeTable {
     }
 
     /// Compact JSON form (round-trips bit-exactly through
-    /// [`EnvelopeTable::from_json`]).
+    /// [`EnvelopeTable::from_json`]; always written at
+    /// [`ENVELOPE_TABLE_VERSION`]).
     pub fn to_json(&self) -> String {
         json::to_string(&self.to_value())
     }
 
-    fn to_value(&self) -> Value {
+    pub(crate) fn to_value(&self) -> Value {
         let nums = |v: &[f64]| Value::Arr(v.iter().map(|&x| Value::Num(x)).collect());
         let mut obj = BTreeMap::new();
+        obj.insert(
+            "version".to_string(),
+            Value::Num(ENVELOPE_TABLE_VERSION as f64),
+        );
         obj.insert("network".to_string(), Value::Str(self.network.clone()));
         obj.insert("device".to_string(), Value::Str(self.device.clone()));
         obj.insert("p_tx_w".to_string(), Value::Num(self.p_tx_w));
@@ -173,16 +267,35 @@ impl EnvelopeTable {
                     .collect(),
             ),
         );
+        if let Some(delay) = &self.delay {
+            obj.insert(
+                "client_latencies_s".to_string(),
+                nums(&delay.client_latencies_s),
+            );
+            obj.insert(
+                "cloud_latencies_s".to_string(),
+                nums(&delay.cloud_latencies_s),
+            );
+        }
         Value::Obj(obj)
     }
 
-    /// Parse one table from JSON.
+    /// Parse one table from JSON, validating it at the trust boundary
+    /// (module docs): this is the only door a network-supplied artifact
+    /// enters through.
     pub fn from_json(text: &str) -> Result<Self> {
         let v = json::parse(text).map_err(|e| anyhow!("envelope table: {e}"))?;
         Self::from_value(&v)
     }
 
-    fn from_value(v: &Value) -> Result<Self> {
+    pub(crate) fn from_value(v: &Value) -> Result<Self> {
+        Self::from_value_with_engine(v).map(|(table, _)| table)
+    }
+
+    /// [`EnvelopeTable::from_value`] that also hands back the engine the
+    /// stored-envelope consistency check had to build anyway, so the
+    /// import path does not construct the same envelope twice.
+    pub(crate) fn from_value_with_engine(v: &Value) -> Result<(Self, Partitioner)> {
         let str_field = |key: &str| -> Result<String> {
             v.get(key)
                 .and_then(Value::as_str)
@@ -205,6 +318,19 @@ impl EnvelopeTable {
                 })
                 .collect()
         };
+        // v1 documents predate the key; anything newer than this writer is
+        // rejected rather than silently mis-read.
+        if let Some(val) = v.get("version") {
+            let n = val
+                .as_f64()
+                .ok_or_else(|| anyhow!("envelope table: non-number 'version'"))?;
+            if n.fract() != 0.0 || !(1.0..=ENVELOPE_TABLE_VERSION as f64).contains(&n) {
+                return Err(anyhow!(
+                    "envelope table: unsupported version {n} (this reader \
+                     handles 1..={ENVELOPE_TABLE_VERSION})"
+                ));
+            }
+        }
         let bw = num_field("bw")?;
         if !(1.0..=64.0).contains(&bw) || bw.fract() != 0.0 {
             return Err(anyhow!("envelope table: bit width {bw} out of range"));
@@ -215,6 +341,19 @@ impl EnvelopeTable {
                 "envelope table: invalid input_raw_bits {input_raw_bits}"
             ));
         }
+        let delay = match (v.get("client_latencies_s"), v.get("cloud_latencies_s")) {
+            (None, None) => None,
+            (Some(_), Some(_)) => Some(DelayTables {
+                client_latencies_s: vec_field("client_latencies_s")?,
+                cloud_latencies_s: vec_field("cloud_latencies_s")?,
+            }),
+            _ => {
+                return Err(anyhow!(
+                    "envelope table: latency tables must ship together \
+                     (one of client_latencies_s/cloud_latencies_s is missing)"
+                ))
+            }
+        };
         let table = EnvelopeTable {
             network: str_field("network")?,
             device: str_field("device")?,
@@ -228,27 +367,149 @@ impl EnvelopeTable {
                 .into_iter()
                 .map(|s| s as usize)
                 .collect(),
+            delay,
         };
-        if table.cumulative_energy_j.len() != table.d_rlc_bits.len() {
+        let engine = table.validated_engine()?;
+        Ok((table, engine))
+    }
+
+    /// The trust-boundary validation behind [`EnvelopeTable::from_json`]
+    /// (module docs). Separated out so tests can corrupt a parsed struct
+    /// directly.
+    pub fn validate(&self) -> Result<()> {
+        self.validated_engine().map(|_| ())
+    }
+
+    /// Validation core: every check from the module docs, returning the
+    /// rebuilt engine the stored-envelope comparison constructs (callers
+    /// on the import path reuse it instead of rebuilding).
+    fn validated_engine(&self) -> Result<Partitioner> {
+        if !self.p_tx_w.is_finite() || self.p_tx_w < 0.0 {
+            return Err(anyhow!(
+                "envelope table: invalid transmit power {} W",
+                self.p_tx_w
+            ));
+        }
+        let n = self.cumulative_energy_j.len();
+        if self.d_rlc_bits.len() != n {
             return Err(anyhow!(
                 "envelope table: energy/volume length mismatch ({} vs {})",
-                table.cumulative_energy_j.len(),
-                table.d_rlc_bits.len()
+                n,
+                self.d_rlc_bits.len()
             ));
         }
         // The struct doc's finiteness contract, enforced at the trust
         // boundary: a NaN/∞ entry would silently corrupt every rebuilt
         // envelope and cost downstream.
-        for (name, values) in [
-            ("cumulative_energy_j", &table.cumulative_energy_j),
-            ("d_rlc_bits", &table.d_rlc_bits),
-            ("breakpoints", &table.breakpoints),
-        ] {
+        let mut finite_checks: Vec<(&str, &[f64])> = vec![
+            ("cumulative_energy_j", &self.cumulative_energy_j),
+            ("d_rlc_bits", &self.d_rlc_bits),
+            ("breakpoints", &self.breakpoints),
+        ];
+        if let Some(delay) = &self.delay {
+            finite_checks.push(("client_latencies_s", &delay.client_latencies_s));
+            finite_checks.push(("cloud_latencies_s", &delay.cloud_latencies_s));
+        }
+        for (name, values) in finite_checks {
             if let Some(bad) = values.iter().find(|v| !v.is_finite()) {
                 return Err(anyhow!("envelope table: non-finite {name} entry {bad}"));
             }
         }
-        Ok(table)
+        // γ breakpoints must ascend: a non-monotone table breaks the
+        // binary search every thin-client lookup relies on.
+        if let Some(w) = self.breakpoints.windows(2).find(|w| w[0] > w[1]) {
+            return Err(anyhow!(
+                "envelope table: non-monotone gamma breakpoints ({} after {})",
+                w[1],
+                w[0]
+            ));
+        }
+        // One winning split per segment, one more segment than breakpoints
+        // (empty tables have neither).
+        let want_segments = if n == 0 { 0 } else { self.breakpoints.len() + 1 };
+        if self.segment_splits.len() != want_segments {
+            return Err(anyhow!(
+                "envelope table: segment/breakpoint length mismatch \
+                 ({} segment splits for {} breakpoints)",
+                self.segment_splits.len(),
+                self.breakpoints.len()
+            ));
+        }
+        if let Some(delay) = &self.delay {
+            if delay.client_latencies_s.len() != n || delay.cloud_latencies_s.len() != n {
+                return Err(anyhow!(
+                    "envelope table: latency table length mismatch \
+                     ({} client / {} cloud entries for {} layers)",
+                    delay.client_latencies_s.len(),
+                    delay.cloud_latencies_s.len(),
+                    n
+                ));
+            }
+            if let Some(bad) = delay
+                .client_latencies_s
+                .iter()
+                .chain(&delay.cloud_latencies_s)
+                .find(|t| **t < 0.0)
+            {
+                return Err(anyhow!("envelope table: negative latency entry {bad}"));
+            }
+        }
+        // The stored envelope is redundant with the vectors it was derived
+        // from; a rebuild must reproduce it bit-for-bit (the JSON round
+        // trip is bit-exact), so any mismatch flags a corrupt or
+        // hand-edited artifact before an engine is built from it.
+        let rebuilt = self.to_partitioner();
+        let same_breakpoints = rebuilt.envelope().breakpoints() == self.breakpoints.as_slice();
+        let same_segments = rebuilt
+            .envelope()
+            .segments()
+            .iter()
+            .map(|l| l.split)
+            .eq(self.segment_splits.iter().copied());
+        if !(same_breakpoints && same_segments) {
+            return Err(anyhow!(
+                "envelope table: stored envelope does not match a rebuild \
+                 from the shipped tables (corrupt artifact)"
+            ));
+        }
+        Ok(rebuilt)
+    }
+}
+
+/// Outcome of a [`PolicyRegistry::import_json`]: how many tables were
+/// read, and how many of the **live registry entries** they resolved to
+/// carry no SLO engine (a v1 artifact's entry, or a pre-existing
+/// latency-less entry an imported table collided with) — deadline-aware
+/// serving must rebuild delay envelopes elsewhere for those. Reported
+/// loudly here instead of silently degrading.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ImportReport {
+    /// Tables read from the document.
+    pub imported: usize,
+    /// Tables whose live entry has no SLO engine and so cannot answer SLO
+    /// decisions from shared engines.
+    pub missing_slo: usize,
+}
+
+impl ImportReport {
+    /// True when every imported table reconstructs its SLO engine.
+    pub fn all_slo_capable(&self) -> bool {
+        self.missing_slo == 0
+    }
+}
+
+impl fmt::Display for ImportReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.missing_slo == 0 {
+            write!(f, "imported {} envelope table(s)", self.imported)
+        } else {
+            write!(
+                f,
+                "imported {} envelope table(s); {} carry no latency data \
+                 (v1 artifact) — their entries have no SLO engine",
+                self.imported, self.missing_slo
+            )
+        }
     }
 }
 
@@ -258,9 +519,10 @@ impl EnvelopeTable {
 pub struct RegistryEntry {
     table: EnvelopeTable,
     partitioner: Arc<Partitioner>,
-    /// Per-device-class SLO engine over the same shared partitioner, built
-    /// from the same compiled profile (module docs). `None` for entries
-    /// rebuilt from imported tables, which carry no latency data.
+    /// Per-device-class SLO engine over the same shared partitioner —
+    /// built from the compiled profile (analytic entries) or from the
+    /// artifact's v2 latency tables (imported entries). `None` only for
+    /// entries rebuilt from v1 tables, which carry no latency data.
     slo: Option<Arc<SloPartitioner>>,
 }
 
@@ -274,8 +536,8 @@ impl RegistryEntry {
     }
 
     /// The shared SLO engine (delay envelope + constrained frontier) for
-    /// this device class, when the entry was built from the analytical
-    /// models.
+    /// this device class — present for analytic entries and v2 imports,
+    /// absent only for v1 imports (module docs).
     pub fn slo_partitioner(&self) -> Option<&Arc<SloPartitioner>> {
         self.slo.as_ref()
     }
@@ -347,18 +609,35 @@ impl PolicyRegistry {
             .cloned()
     }
 
-    /// Insert a (possibly deserialized) table, building its engine. If the
-    /// key is already present the existing shared entry wins — connections
-    /// already holding it keep a consistent view (and the redundant engine
-    /// build is skipped).
+    /// Insert a (possibly deserialized) table, building its engines: the
+    /// energy engine always, the SLO engine whenever the table carries the
+    /// v2 latency vectors. If the key is already present the existing
+    /// shared entry wins — connections already holding it keep a
+    /// consistent view (and the redundant engine build is skipped).
     pub fn insert_table(&self, table: EnvelopeTable) -> Arc<RegistryEntry> {
         if let Some(existing) = self.get(&table.network, &table.device) {
             return existing;
         }
-        let partitioner = Arc::new(table.to_partitioner());
-        // Imported tables carry decision tables only — no latency data, so
-        // no SLO engine (module docs).
-        self.insert_entry(table, partitioner, None)
+        let engine = table.to_partitioner();
+        self.insert_table_with_engine(table, engine)
+    }
+
+    /// [`PolicyRegistry::insert_table`] with the energy engine already
+    /// built (the import path reuses the rebuild the table validation
+    /// performed).
+    fn insert_table_with_engine(
+        &self,
+        table: EnvelopeTable,
+        engine: Partitioner,
+    ) -> Arc<RegistryEntry> {
+        if let Some(existing) = self.get(&table.network, &table.device) {
+            return existing;
+        }
+        let partitioner = Arc::new(engine);
+        let slo = table
+            .to_delay_model()
+            .map(|delay| Arc::new(SloPartitioner::from_shared(partitioner.clone(), delay)));
+        self.insert_entry(table, partitioner, slo)
     }
 
     fn insert_entry(
@@ -386,7 +665,8 @@ impl PolicyRegistry {
     /// Entry for `(network, device_class(env.p_tx_w))`, building the
     /// engines from the analytical models on first use: one shared
     /// compiled profile feeds both the partitioner (table slicing) and the
-    /// per-device-class SLO engine.
+    /// per-device-class SLO engine; the stored artifact carries the v2
+    /// latency tables so an export/import keeps both.
     pub fn get_or_build(&self, network: &str, env: &TransmitEnv) -> Result<Arc<RegistryEntry>> {
         let device = device_class(env.p_tx_w);
         if let Some(entry) = self.get(network, &device) {
@@ -400,7 +680,13 @@ impl PolicyRegistry {
             partitioner.clone(),
             DelayModel::from_profile(&profile),
         ));
-        let table = EnvelopeTable::from_partitioner(network, &device, env.p_tx_w, &partitioner);
+        let table = EnvelopeTable::from_engines(
+            network,
+            &device,
+            env.p_tx_w,
+            &partitioner,
+            slo.delay_model(),
+        );
         Ok(self.insert_entry(table, partitioner, Some(slo)))
     }
 
@@ -428,7 +714,9 @@ impl PolicyRegistry {
     }
 
     /// Serialize every table (`{"tables": [...]}`) — the artifact a fleet
-    /// coordinator ships to clients.
+    /// coordinator ships to clients. Tables built analytically carry the
+    /// v2 latency vectors; tables imported from v1 documents re-export
+    /// without them (byte-stable).
     pub fn export_json(&self) -> String {
         let tables: Vec<Value> = self
             .entries
@@ -444,20 +732,30 @@ impl PolicyRegistry {
     }
 
     /// Import tables from an [`PolicyRegistry::export_json`] document,
-    /// building engines for each. Existing keys keep their entries.
-    /// Returns the number of tables read.
-    pub fn import_json(&self, text: &str) -> Result<usize> {
+    /// building engines for each (energy always; SLO for v2 tables).
+    /// Existing keys keep their entries. The returned [`ImportReport`]
+    /// counts the tables read and — loudly — how many of the **live**
+    /// entries behind them have no SLO engine: since an existing key wins
+    /// over an imported table, the diagnostic is computed from the entry
+    /// each table resolved to, not from the document alone (a v2 table
+    /// colliding with an older v1 entry still reports the missing engine;
+    /// a v1 table colliding with an analytic entry does not).
+    pub fn import_json(&self, text: &str) -> Result<ImportReport> {
         let doc = json::parse(text).map_err(|e| anyhow!("policy registry: {e}"))?;
         let tables = doc
             .get("tables")
             .and_then(Value::as_arr)
             .ok_or_else(|| anyhow!("policy registry: missing 'tables' array"))?;
-        let mut count = 0;
+        let mut report = ImportReport::default();
         for t in tables {
-            self.insert_table(EnvelopeTable::from_value(t)?);
-            count += 1;
+            let (table, engine) = EnvelopeTable::from_value_with_engine(t)?;
+            let entry = self.insert_table_with_engine(table, engine);
+            if entry.slo_partitioner().is_none() {
+                report.missing_slo += 1;
+            }
+            report.imported += 1;
         }
-        Ok(count)
+        Ok(report)
     }
 }
 
@@ -490,13 +788,104 @@ mod tests {
         let via_entry = entry.slo_policy().unwrap().decide(&ctx);
         let direct = SloPolicy::new(fresh).decide(&ctx);
         assert_eq!(via_entry, direct);
-        // Imported (table-only) registries have no latency data, so no
-        // SLO engine.
+    }
+
+    #[test]
+    fn imported_v2_registries_reconstruct_slo_engines() {
+        // The v2 artifact carries the latency tables, so a client registry
+        // built purely from JSON answers SLO decisions from shared engines
+        // — bit-for-bit equal to the exporting (analytic) registry.
+        let registry = PolicyRegistry::new();
+        let env = TransmitEnv::with_effective_rate(80e6, 0.78);
+        let entry = registry.get_or_build("alexnet", &env).unwrap();
+        assert!(entry.table().has_slo_tables(), "analytic exports are v2");
+
         let client = PolicyRegistry::new();
-        client.import_json(&registry.export_json()).unwrap();
+        let report = client.import_json(&registry.export_json()).unwrap();
+        assert_eq!(report.imported, 1);
+        assert_eq!(report.missing_slo, 0);
+        assert!(report.all_slo_capable());
         let imported = client.get("alexnet", "LG Nexus 4 WLAN").unwrap();
-        assert!(imported.slo_partitioner().is_none());
-        assert!(imported.slo_policy().is_none());
+        let imported_slo = imported.slo_policy().expect("v2 import keeps the SLO engine");
+        let ctx = DecisionContext::from_sparsity(entry.partitioner(), 0.608, env).with_slo(0.015);
+        assert_eq!(imported_slo.decide(&ctx), entry.slo_policy().unwrap().decide(&ctx));
+        // The admission-shedding bound survives the round trip exactly.
+        assert_eq!(
+            imported
+                .slo_partitioner()
+                .unwrap()
+                .min_delay_lower_bound_s(&env)
+                .to_bits(),
+            entry
+                .slo_partitioner()
+                .unwrap()
+                .min_delay_lower_bound_s(&env)
+                .to_bits()
+        );
+    }
+
+    #[test]
+    fn v1_tables_import_without_slo_and_report_loudly() {
+        // A latency-less (v1-shaped) table still imports, but the entry has
+        // no SLO engine and the import report says so.
+        let p = paper_partitioner(&alexnet());
+        let table = EnvelopeTable::from_partitioner("alexnet", "LG Nexus 4 WLAN", 0.78, &p);
+        assert!(!table.has_slo_tables());
+        let mut obj = BTreeMap::new();
+        obj.insert("tables".to_string(), Value::Arr(vec![table.to_value()]));
+        let doc = json::to_string(&Value::Obj(obj));
+        let registry = PolicyRegistry::new();
+        let report = registry.import_json(&doc).unwrap();
+        assert_eq!(report, ImportReport { imported: 1, missing_slo: 1 });
+        assert!(!report.all_slo_capable());
+        assert!(report.to_string().contains("no SLO engine"));
+        let entry = registry.get("alexnet", "LG Nexus 4 WLAN").unwrap();
+        assert!(entry.slo_partitioner().is_none());
+        assert!(entry.slo_policy().is_none());
+    }
+
+    #[test]
+    fn import_report_reflects_live_entries_on_key_collisions() {
+        // Existing-key-wins means the report must describe the entries a
+        // fleet actually serves from, not the document: a v2 table landing
+        // on an older v1 entry still reports the missing SLO engine, and a
+        // v1 table landing on an analytic entry does not.
+        let p = paper_partitioner(&alexnet());
+        let v1 = EnvelopeTable::from_partitioner("alexnet", "LG Nexus 4 WLAN", 0.78, &p);
+        let v1_doc = {
+            let mut obj = BTreeMap::new();
+            obj.insert("tables".to_string(), Value::Arr(vec![v1.to_value()]));
+            json::to_string(&Value::Obj(obj))
+        };
+
+        // v1 entry already present; importing the v2 export of the same
+        // key keeps the v1 entry — and keeps reporting it.
+        let stale = PolicyRegistry::new();
+        assert_eq!(stale.import_json(&v1_doc).unwrap().missing_slo, 1);
+        let analytic = PolicyRegistry::new();
+        let env = TransmitEnv::with_effective_rate(80e6, 0.78);
+        analytic.get_or_build("alexnet", &env).unwrap();
+        let report = stale.import_json(&analytic.export_json()).unwrap();
+        assert_eq!(report.imported, 1);
+        assert_eq!(report.missing_slo, 1, "live entry is still the v1 one");
+        assert!(stale
+            .get("alexnet", "LG Nexus 4 WLAN")
+            .unwrap()
+            .slo_policy()
+            .is_none());
+
+        // Analytic entry already present; importing a v1 document for the
+        // same key must NOT cry wolf — the served entry has its engine.
+        let fresh = PolicyRegistry::new();
+        fresh.get_or_build("alexnet", &env).unwrap();
+        let report = fresh.import_json(&v1_doc).unwrap();
+        assert_eq!(report.imported, 1);
+        assert_eq!(report.missing_slo, 0);
+        assert!(fresh
+            .get("alexnet", "LG Nexus 4 WLAN")
+            .unwrap()
+            .slo_policy()
+            .is_some());
     }
 
     #[test]
@@ -520,23 +909,88 @@ mod tests {
         // Length mismatch between the two tables.
         let mut short = good.clone();
         short.d_rlc_bits.pop();
-        assert!(EnvelopeTable::from_json(&short.to_json()).is_err());
+        let err = short.validate().unwrap_err().to_string();
+        assert!(err.contains("length mismatch"), "{err}");
+        // A version from the future is rejected, not mis-read.
+        let future = good.to_json().replace("\"version\":2", "\"version\":3");
+        let err = EnvelopeTable::from_json(&future).unwrap_err().to_string();
+        assert!(err.contains("unsupported version"), "{err}");
+    }
+
+    #[test]
+    fn import_rejects_non_monotone_breakpoints_and_bad_segment_tables() {
+        // Synthetic 4-layer engine with a guaranteed 3-segment envelope
+        // (lines (100,0), (10,50), (1,200); the FISC line is dominated), so
+        // the swapped-breakpoint corruption below is always constructible.
+        let p = Partitioner::from_parts(
+            vec![0.0, 50.0, 200.0, 1000.0],
+            vec![100.0, 10.0, 1.0, 0.5],
+            1_000_000,
+            8,
+        );
+        let dm = DelayModel::from_parts(
+            vec![1e-3, 2e-3, 4e-3, 8e-3],
+            vec![1e-5, 2e-5, 4e-5, 8e-5],
+        );
+        let good = EnvelopeTable::from_engines("synthetic", "test-device", 0.78, &p, &dm);
+        assert!(good.validate().is_ok());
+
+        // Swapped breakpoints: the descending pair breaks the γ binary
+        // search contract.
+        let mut swapped = good.clone();
+        assert!(swapped.breakpoints.len() >= 2, "need ≥ 2 breakpoints");
+        swapped.breakpoints.swap(0, 1);
+        let err = swapped.validate().unwrap_err().to_string();
+        assert!(err.contains("non-monotone gamma breakpoints"), "{err}");
+
+        // A segment table that does not pair with the breakpoints.
+        let mut lopsided = good.clone();
+        lopsided.segment_splits.pop();
+        let err = lopsided.validate().unwrap_err().to_string();
+        assert!(err.contains("segment/breakpoint length mismatch"), "{err}");
+
+        // Latency tables sized to the wrong layer count.
+        let mut bad_delay = good.clone();
+        bad_delay.delay.as_mut().unwrap().client_latencies_s.pop();
+        let err = bad_delay.validate().unwrap_err().to_string();
+        assert!(err.contains("latency table length mismatch"), "{err}");
+
+        // A tampered envelope (stored winner moved) no longer matches the
+        // deterministic rebuild from the shipped vectors.
+        let mut tampered = good.clone();
+        tampered.segment_splits[0] = tampered.segment_splits[0].wrapping_add(1);
+        let err = tampered.validate().unwrap_err().to_string();
+        assert!(err.contains("does not match a rebuild"), "{err}");
+
+        // One-sided latency tables are rejected at parse time.
+        let one_sided = good.to_json().replace("\"cloud_latencies_s\"", "\"cloud_latencies_x\"");
+        assert!(EnvelopeTable::from_json(&one_sided).is_err());
     }
 
     #[test]
     fn table_json_round_trip_is_exact() {
-        let p = paper_partitioner(&alexnet());
-        let table = EnvelopeTable::from_partitioner("alexnet", "LG Nexus 4", 0.78, &p);
+        let net = alexnet();
+        let model = CnnErgy::inference_8bit();
+        let p = Partitioner::new(&net, &model);
+        let dm = DelayModel::new(&net, &model);
+        let table = EnvelopeTable::from_engines("alexnet", "LG Nexus 4", 0.78, &p, &dm);
         let text = table.to_json();
         let back = EnvelopeTable::from_json(&text).unwrap();
         assert_eq!(back, table);
         assert_eq!(table.table_bytes(), text.len());
-        // The artifact stays small enough to ship per connection.
-        assert!(text.len() < 4096, "table is {} bytes", text.len());
-        // Rebuilt engine reproduces the envelope bit-for-bit.
+        // The artifact stays small enough to ship per connection, latency
+        // tables included.
+        assert!(text.len() < 6144, "table is {} bytes", text.len());
+        // Rebuilt engines reproduce envelope and delay model bit-for-bit.
         let rebuilt = back.to_partitioner();
         assert_eq!(rebuilt.envelope().breakpoints(), p.envelope().breakpoints());
         assert_eq!(rebuilt.envelope().segments(), p.envelope().segments());
+        let rebuilt_dm = back.to_delay_model().unwrap();
+        assert_eq!(rebuilt_dm.client_latencies_s(), dm.client_latencies_s());
+        assert_eq!(rebuilt_dm.cloud_latencies_s(), dm.cloud_latencies_s());
+        for split in 0..=p.num_layers() {
+            assert_eq!(rebuilt_dm.base_delay_s(split), dm.base_delay_s(split));
+        }
     }
 
     #[test]
@@ -552,7 +1006,7 @@ mod tests {
         // Export → import into a fresh registry → identical decisions.
         let text = registry.export_json();
         let client = PolicyRegistry::new();
-        assert_eq!(client.import_json(&text).unwrap(), 1);
+        assert_eq!(client.import_json(&text).unwrap().imported, 1);
         let remote = client.get("alexnet", "LG Nexus 4 WLAN").unwrap();
         let ctx = DecisionContext::from_sparsity(a.partitioner(), 0.608, env);
         assert_eq!(remote.policy().decide(&ctx), a.policy().decide(&ctx));
@@ -565,13 +1019,16 @@ mod tests {
         // Five Table-IV platforms report a WLAN power.
         assert_eq!(n, 5);
         assert_eq!(registry.len(), 5);
-        // Every fleet entry answers decisions through the shared trait.
+        // Every fleet entry answers decisions through the shared trait and
+        // carries a shareable (v2-exportable) SLO engine.
         for key in registry.keys() {
             let entry = registry.get(&key.0, &key.1).unwrap();
             let env = TransmitEnv::with_effective_rate(80e6, entry.table().p_tx_w);
             let ctx = DecisionContext::from_sparsity(entry.partitioner(), 0.608, env);
             let d = entry.policy().decide(&ctx);
             assert!(d.cost_j.is_finite());
+            assert!(entry.table().has_slo_tables());
+            assert!(entry.slo_policy().is_some());
         }
     }
 

@@ -3,17 +3,12 @@
 //! substitutions"). Each property runs a few hundred seeded random cases
 //! and reports the failing case on assertion failure.
 
-// The deprecated decide_* wrappers are exercised deliberately: the
-// properties below are the bit-for-bit proofs that they and the
-// PartitionPolicy path agree.
-#![allow(deprecated)]
-
 use neupart::channel::TransmitEnv;
 use neupart::cnn::{ConvShape, Network};
 use neupart::cnnergy::{schedule, CnnErgy, HwConfig, NetworkProfile};
 use neupart::compress::rlc;
 use neupart::partition::{
-    decide_with_slo_scan, DecisionContext, DelayModel, EnergyPolicy, EnvelopeTable,
+    decide_with_slo_scan, Decision, DecisionContext, DelayModel, EnergyPolicy, EnvelopeTable,
     PartitionPolicy, Partitioner, PolicyRegistry, SloPartitioner, SloPolicy,
     SparsityEnvelopePolicy,
 };
@@ -43,6 +38,19 @@ fn random_hw(rng: &mut Rng) -> HwConfig {
     hw.glb_bytes = rng.range_usize(4, 512) * 1024;
     hw.batch = rng.range_usize(1, 8);
     hw
+}
+
+/// Reference linear scan: `EnergyPolicy::decide_detailed` from a sparsity
+/// (the brute-force O(|L|) semantics every fast path must reproduce).
+fn reference_scan(policy: &EnergyPolicy, sp: f64, env: &TransmitEnv) -> Decision {
+    let ctx = DecisionContext::from_sparsity(policy.partitioner(), sp, *env);
+    policy.decide_detailed(&ctx)
+}
+
+/// Envelope fast path from a sparsity.
+fn fast_decide(policy: &EnergyPolicy, sp: f64, env: &TransmitEnv) -> Decision {
+    let ctx = DecisionContext::from_sparsity(policy.partitioner(), sp, *env);
+    policy.decide(&ctx)
 }
 
 #[test]
@@ -118,13 +126,13 @@ fn prop_partitioner_argmin_matches_brute_force() {
         let d_rlc: Vec<f64> = (0..n_layers)
             .map(|_| rng.next_f64() * 1e6 + 1.0)
             .collect();
-        let p = Partitioner::from_parts(cum, d_rlc, 1_000_000, 8);
+        let policy = EnergyPolicy::new(Partitioner::from_parts(cum, d_rlc, 1_000_000, 8));
         let env = TransmitEnv::with_effective_rate(
             rng.next_f64() * 200e6 + 1e6,
             rng.next_f64() * 2.0 + 0.1,
         );
         let sp = rng.next_f64();
-        let d = p.decide(sp, &env);
+        let d = reference_scan(&policy, sp, &env);
 
         assert_eq!(d.costs_j.len(), n_layers + 1, "case {case}");
         let brute = d
@@ -165,11 +173,11 @@ fn prop_partition_decision_monotone_in_bitrate() {
             v *= 0.5 + rng.next_f64() * 0.45;
             d_rlc.push(v);
         }
-        let p = Partitioner::from_parts(cum, d_rlc, 2_000_000, 8);
+        let policy = EnergyPolicy::new(Partitioner::from_parts(cum, d_rlc, 2_000_000, 8));
         let mut prev_opt = usize::MAX;
         for be in [1.0, 5.0, 25.0, 125.0, 625.0] {
             let env = TransmitEnv::with_effective_rate(be * 1e6, 0.78);
-            let opt = p.decide(0.6, &env).l_opt;
+            let opt = fast_decide(&policy, 0.6, &env).l_opt;
             if prev_opt != usize::MAX {
                 assert!(
                     opt <= prev_opt,
@@ -199,13 +207,14 @@ fn random_partitioner(rng: &mut Rng) -> Partitioner {
 
 #[test]
 fn prop_envelope_decide_matches_scan_argmin() {
-    // The tentpole invariant: the envelope paths (decide_fast /
-    // decide_split / decide_batch) must reproduce the brute-force linear
-    // scan argmin EXACTLY over a randomized (network, sparsity_in, B_e,
-    // P_Tx) grid — same split, bit-identical cost.
+    // The tentpole invariant: the envelope paths (EnergyPolicy::decide /
+    // decide_batch) must reproduce the brute-force linear scan argmin
+    // EXACTLY over a randomized (network, sparsity_in, B_e, P_Tx) grid —
+    // same split, bit-identical cost.
     let mut rng = Rng::new(0x5EED);
     for case in 0..CASES {
         let p = random_partitioner(&mut rng);
+        let policy = EnergyPolicy::new(p.clone());
         let mut sps = Vec::new();
         for probe in 0..6 {
             // Log-uniform B_e over ~12 decades hits the extreme-γ corners
@@ -216,8 +225,8 @@ fn prop_envelope_decide_matches_scan_argmin() {
             let env = TransmitEnv::with_effective_rate(be, p_tx);
             let sp = rng.next_f64();
             sps.push(sp);
-            let scan = p.decide(sp, &env); // reference linear scan
-            let fast = p.decide_fast(sp, &env); // envelope path
+            let scan = reference_scan(&policy, sp, &env); // reference linear scan
+            let fast = fast_decide(&policy, sp, &env); // envelope path
             assert_eq!(
                 fast.l_opt, scan.l_opt,
                 "case {case}/{probe}: be={be} p_tx={p_tx} sp={sp}"
@@ -235,10 +244,15 @@ fn prop_envelope_decide_matches_scan_argmin() {
         // Batched decisions (one shared env) agree element-wise.
         let be = 10f64.powf(rng.next_f64() * 8.0 - 1.0);
         let env = TransmitEnv::with_effective_rate(be, rng.next_f64() * 2.0 + 0.1);
-        let batch = p.decide_batch_sparsity(&sps, &env);
+        let bits: Vec<f64> = sps
+            .iter()
+            .map(|&sp| p.input_bits_from_sparsity(sp))
+            .collect();
+        let mut batch = Vec::new();
+        policy.decide_batch(&bits, &DecisionContext::from_input_bits(0.0, env), &mut batch);
         assert_eq!(batch.len(), sps.len(), "case {case}");
         for (&sp, choice) in sps.iter().zip(&batch) {
-            let scan = p.decide(sp, &env);
+            let scan = reference_scan(&policy, sp, &env);
             assert_eq!(choice.l_opt, scan.l_opt, "case {case}: batch sp={sp}");
             assert_eq!(choice.cost_j, scan.costs_j[scan.l_opt]);
         }
@@ -254,11 +268,12 @@ fn prop_envelope_matches_scan_at_exact_breakpoints_and_ties() {
     let mut rng = Rng::new(0x71E5);
     for case in 0..120 {
         let p = random_partitioner(&mut rng);
+        let policy = EnergyPolicy::new(p.clone());
         for (i, &gamma) in p.envelope().breakpoints().iter().enumerate() {
             for sp in [0.0, 0.5, 0.999] {
                 let env = TransmitEnv::with_effective_rate(1.0, gamma);
-                let scan = p.decide(sp, &env);
-                let fast = p.decide_fast(sp, &env);
+                let scan = reference_scan(&policy, sp, &env);
+                let fast = fast_decide(&policy, sp, &env);
                 assert_eq!(
                     fast.l_opt, scan.l_opt,
                     "case {case}: breakpoint {i} γ={gamma} sp={sp}"
@@ -269,17 +284,17 @@ fn prop_envelope_matches_scan_at_exact_breakpoints_and_ties() {
     }
     // Duplicate lines: splits 1 and 2 identical, 3 cheap-to-send; the
     // envelope must tie-break toward split 1 exactly like the scan.
-    let p = Partitioner::from_parts(
+    let policy = EnergyPolicy::new(Partitioner::from_parts(
         vec![1e-3, 1e-3, 5e-3],
         vec![8e5, 8e5, 10.0],
         1_000_000,
         8,
-    );
+    ));
     for be in [1e3, 1e6, 1e9, 1e12] {
         let env = TransmitEnv::with_effective_rate(be, 0.78);
         for sp in [0.1, 0.608, 0.95] {
-            let scan = p.decide(sp, &env);
-            let fast = p.decide_fast(sp, &env);
+            let scan = reference_scan(&policy, sp, &env);
+            let fast = fast_decide(&policy, sp, &env);
             assert_eq!(fast.l_opt, scan.l_opt, "dup lines: be={be} sp={sp}");
         }
     }
@@ -293,21 +308,38 @@ fn prop_degenerate_channel_is_guarded() {
     let mut rng = Rng::new(0xDEAD);
     for case in 0..60 {
         let p = random_partitioner(&mut rng);
+        let policy = EnergyPolicy::new(p.clone());
         let n = p.num_layers();
         for be in [0.0, -1.0, f64::NAN] {
             let env = TransmitEnv::with_effective_rate(be, 0.78);
-            let scan = p.decide(rng.next_f64(), &env);
+            let scan = reference_scan(&policy, rng.next_f64(), &env);
             assert_eq!(scan.l_opt, n, "case {case}: be={be}");
             assert!(scan.costs_j[n].is_finite());
             assert!(!scan.savings_vs_fcc().is_nan());
             assert!(!scan.savings_vs_fisc().is_nan());
-            let fast = p.decide_split(rng.next_f64() * 1e6, &env);
+            let fast = policy.decide(&DecisionContext::from_input_bits(
+                rng.next_f64() * 1e6,
+                env,
+            ));
             assert_eq!(fast.l_opt, n);
             assert!(fast.cost_j.is_finite());
             assert!(!fast.savings_vs_fcc().is_nan());
-            let batch = p.decide_batch_sparsity(&[0.2, 0.8], &env);
+            // The engine must also refuse to place a degenerate γ in any
+            // envelope segment (overflow-lane routing at the front door).
+            assert_eq!(p.envelope_segment(&env), None, "case {case}: be={be}");
+            let bits = [
+                p.input_bits_from_sparsity(0.2),
+                p.input_bits_from_sparsity(0.8),
+            ];
+            let mut batch = Vec::new();
+            policy.decide_batch(&bits, &DecisionContext::from_input_bits(0.0, env), &mut batch);
             assert!(batch.iter().all(|c| c.l_opt == n && c.cost_j.is_finite()));
         }
+        // Non-finite γ from a corrupted power/rate report: no segment.
+        let inf_rate = TransmitEnv::with_effective_rate(f64::INFINITY, 0.78);
+        assert_eq!(p.envelope_segment(&inf_rate), None, "case {case}");
+        let inf_power = TransmitEnv::with_effective_rate(80e6, f64::INFINITY);
+        assert_eq!(p.envelope_segment(&inf_power), None, "case {case}");
     }
 }
 
@@ -323,10 +355,21 @@ fn random_delay_model(rng: &mut Rng, n_layers: usize) -> DelayModel {
     DelayModel::from_parts(client, cloud)
 }
 
+/// SLO fast path (the `SloPolicy` route) from a sparsity.
+fn fast_slo_decide(
+    slo_policy: &SloPolicy,
+    sp: f64,
+    env: &TransmitEnv,
+    slo_s: f64,
+) -> Decision {
+    let ctx = DecisionContext::from_sparsity(slo_policy.partitioner(), sp, *env).with_slo(slo_s);
+    slo_policy.decide(&ctx)
+}
+
 /// Compare the envelope-backed constrained decision against the reference
 /// scan on one query — every shared field bit-for-bit.
 fn assert_constrained_match(
-    slo_p: &SloPartitioner,
+    slo_policy: &SloPolicy,
     p: &Partitioner,
     dm: &DelayModel,
     sp: f64,
@@ -335,40 +378,39 @@ fn assert_constrained_match(
     ctx: &str,
 ) {
     let scan = decide_with_slo_scan(p, dm, sp, env, slo);
-    let fast = slo_p.decide_with_slo(sp, env, slo);
-    assert_eq!(fast.choice.l_opt, scan.inner.l_opt, "l_opt: {ctx}");
+    let fast = fast_slo_decide(slo_policy, sp, env, slo);
+    assert_eq!(fast.l_opt, scan.l_opt, "l_opt: {ctx}");
+    assert_eq!(fast.cost_j, scan.costs_j[scan.l_opt], "cost: {ctx}");
     assert_eq!(
-        fast.choice.cost_j, scan.inner.costs_j[scan.inner.l_opt],
-        "cost: {ctx}"
-    );
-    assert_eq!(
-        fast.t_delay_s.to_bits(),
-        scan.t_delay_s.to_bits(),
-        "t_delay ({} vs {}): {ctx}",
+        fast.t_delay_s.unwrap().to_bits(),
+        scan.t_delay_s.unwrap().to_bits(),
+        "t_delay ({:?} vs {:?}): {ctx}",
         fast.t_delay_s,
         scan.t_delay_s
     );
     assert_eq!(fast.feasible, scan.feasible, "feasible: {ctx}");
+    assert_eq!(fast.binding, scan.binding, "binding: {ctx}");
     // The fast path's decomposition is exact by construction.
     assert_eq!(
-        fast.choice.client_energy_j + fast.choice.transmit_energy_j,
-        fast.choice.cost_j,
+        fast.client_energy_j + fast.transmit_energy_j,
+        fast.cost_j,
         "decomposition: {ctx}"
     );
 }
 
 #[test]
 fn prop_constrained_envelope_matches_scan() {
-    // The PR-2 tentpole invariant: SloPartitioner::decide_with_slo (the
-    // envelope-backed path) must reproduce the O(|L|) reference scan
-    // bit-for-bit across random SLOs (log-uniform, zero, infinite, and
-    // exact delay ties), γ sweeps over ~12 decades, and degenerate
-    // channels — splits, costs, delays and feasibility all identical.
+    // The PR-2 tentpole invariant, restated over the unified surface:
+    // SloPolicy::decide (the envelope-backed path) must reproduce the
+    // O(|L|) reference scan bit-for-bit across random SLOs (log-uniform,
+    // zero, infinite, and exact delay ties), γ sweeps over ~12 decades,
+    // and degenerate channels — splits, costs, delays, feasibility and
+    // bindingness all identical.
     let mut rng = Rng::new(0x510C);
     for case in 0..CASES {
         let p = random_partitioner(&mut rng);
         let dm = random_delay_model(&mut rng, p.num_layers());
-        let slo_p = SloPartitioner::new(p.clone(), dm.clone());
+        let slo_policy = SloPolicy::new(SloPartitioner::new(p.clone(), dm.clone()));
         for probe in 0..8 {
             let be = 10f64.powf(rng.next_f64() * 12.0 - 3.0);
             let p_tx = rng.next_f64() * 2.5 + 0.05;
@@ -388,18 +430,18 @@ fn prop_constrained_envelope_matches_scan() {
                 }
             };
             let ctx = format!("case {case}/{probe}: be={be} p_tx={p_tx} sp={sp} slo={slo}");
-            assert_constrained_match(&slo_p, &p, &dm, sp, &env, slo, &ctx);
+            assert_constrained_match(&slo_policy, &p, &dm, sp, &env, slo, &ctx);
         }
         // Degenerate channels: no panics, FISC, finite accounting.
         for be in [0.0, -1.0, f64::NAN] {
             let env = TransmitEnv::with_effective_rate(be, 0.78);
             let slo = rng.next_f64();
             let ctx = format!("case {case}: degenerate be={be} slo={slo}");
-            assert_constrained_match(&slo_p, &p, &dm, 0.5, &env, slo, &ctx);
-            let fast = slo_p.decide_with_slo(0.5, &env, slo);
-            assert_eq!(fast.choice.l_opt, p.num_layers(), "{ctx}");
-            assert!(fast.choice.cost_j.is_finite(), "{ctx}");
-            assert!(fast.t_delay_s.is_finite(), "{ctx}");
+            assert_constrained_match(&slo_policy, &p, &dm, 0.5, &env, slo, &ctx);
+            let fast = fast_slo_decide(&slo_policy, 0.5, &env, slo);
+            assert_eq!(fast.l_opt, p.num_layers(), "{ctx}");
+            assert!(fast.cost_j.is_finite(), "{ctx}");
+            assert!(fast.t_delay_s.unwrap().is_finite(), "{ctx}");
         }
     }
 }
@@ -414,13 +456,13 @@ fn prop_constrained_matches_scan_at_energy_breakpoints() {
     for case in 0..100 {
         let p = random_partitioner(&mut rng);
         let dm = random_delay_model(&mut rng, p.num_layers());
-        let slo_p = SloPartitioner::new(p.clone(), dm.clone());
+        let slo_policy = SloPolicy::new(SloPartitioner::new(p.clone(), dm.clone()));
         let breakpoints: Vec<f64> = p.envelope().breakpoints().to_vec();
         for (i, gamma) in breakpoints.into_iter().enumerate() {
             let env = TransmitEnv::with_effective_rate(1.0, gamma);
             for slo in [0.0, 1e-2, 1e3, f64::INFINITY] {
                 let ctx = format!("case {case}: breakpoint {i} γ={gamma} slo={slo}");
-                assert_constrained_match(&slo_p, &p, &dm, 0.6, &env, slo, &ctx);
+                assert_constrained_match(&slo_policy, &p, &dm, 0.6, &env, slo, &ctx);
             }
         }
     }
@@ -434,12 +476,13 @@ fn prop_transmit_energy_decomposes_costs_exactly() {
     let mut rng = Rng::new(0xDEC0);
     for case in 0..CASES {
         let p = random_partitioner(&mut rng);
+        let policy = EnergyPolicy::new(p.clone());
         let env = TransmitEnv::with_effective_rate(
             10f64.powf(rng.next_f64() * 10.0 - 2.0),
             rng.next_f64() * 2.0 + 0.05,
         );
         let sp = rng.next_f64();
-        let d = p.decide(sp, &env);
+        let d = reference_scan(&policy, sp, &env);
         let input_bits = p.transmit_bits(0, sp);
         for split in 0..=p.num_layers() {
             let sum = p.client_energy_j(split) + p.transmit_energy_j(split, input_bits, &env);
@@ -463,6 +506,7 @@ fn prop_segment_decision_matches_per_request() {
     let mut rng = Rng::new(0x6A33);
     for case in 0..CASES {
         let p = random_partitioner(&mut rng);
+        let policy = EnergyPolicy::new(p.clone());
         let base = 10f64.powf(rng.next_f64() * 8.0 - 1.0);
         let p_tx = rng.next_f64() * 2.0 + 0.1;
         for probe in 0..8 {
@@ -470,31 +514,35 @@ fn prop_segment_decision_matches_per_request() {
             // admission-time sampling.
             let factor = (1.0 + 0.95 * (2.0 * rng.next_f64() - 1.0)).max(0.05);
             let env = TransmitEnv::with_effective_rate(base * factor, p_tx);
-            let gamma = env.p_tx_w / env.effective_bit_rate();
-            let seg = p.envelope().segment_index(gamma);
-            let bits = p.transmit_bits(0, rng.next_f64());
+            let seg = p
+                .envelope_segment(&env)
+                .expect("positive-rate env has a segment");
+            let ctx = DecisionContext::from_input_bits(
+                p.transmit_bits(0, rng.next_f64()),
+                env,
+            );
             assert_eq!(
-                p.decide_in_segment(seg, bits, &env),
-                p.decide_split(bits, &env),
-                "case {case}/{probe}: γ={gamma}"
+                policy.decide(&ctx.with_segment(seg)),
+                policy.decide(&ctx),
+                "case {case}/{probe}"
             );
         }
     }
 }
 
 #[test]
-fn prop_policy_trait_matches_deprecated_wrappers_bit_for_bit() {
-    // The api-redesign acceptance invariant: every deprecated decide_*
-    // entry point is a thin wrapper provably equivalent to the
-    // PartitionPolicy route — same split, bit-identical costs, across
-    // random engines, ~12 decades of B_e, ties and degenerate channels.
+fn prop_policy_fast_paths_match_reference_scan_bit_for_bit() {
+    // The api-redesign acceptance invariant, kept after the deprecated
+    // wrappers were deleted: the PartitionPolicy fast paths (envelope,
+    // batched, SLO) are provably equivalent to the reference scans — same
+    // split, bit-identical costs, across random engines, ~12 decades of
+    // B_e, ties and degenerate channels.
     let mut rng = Rng::new(0x90_11C7);
     for case in 0..CASES {
         let p = random_partitioner(&mut rng);
         let energy = EnergyPolicy::new(p.clone());
         let dm = random_delay_model(&mut rng, p.num_layers());
-        let slo_p = SloPartitioner::new(p.clone(), dm);
-        let slo_policy = SloPolicy::new(slo_p.clone());
+        let slo_policy = SloPolicy::new(SloPartitioner::new(p.clone(), dm.clone()));
         let mut sps = Vec::new();
         for probe in 0..6 {
             let be = 10f64.powf(rng.next_f64() * 12.0 - 3.0);
@@ -504,44 +552,43 @@ fn prop_policy_trait_matches_deprecated_wrappers_bit_for_bit() {
             sps.push(sp);
             let ctx = DecisionContext::from_sparsity(&p, sp, env);
             let d = energy.decide(&ctx);
-            // decide_fast / decide_split wrappers.
-            let fast = p.decide_fast(sp, &env);
-            assert_eq!(d.l_opt, fast.l_opt, "case {case}/{probe}");
-            assert_eq!(d.cost_j, fast.cost_j, "case {case}/{probe}");
-            assert_eq!(d.fcc_cost_j, fast.fcc_cost_j);
-            assert_eq!(d.fisc_cost_j, fast.fisc_cost_j);
-            assert_eq!(d.transmit_energy_j, fast.transmit_energy_j);
-            // decide / decide_with_input_bits wrappers (reference scan).
-            let scan = p.decide(sp, &env);
             let full = energy.decide_detailed(&ctx);
-            assert_eq!(full.l_opt, scan.l_opt, "case {case}/{probe}");
-            assert_eq!(full.costs_j, scan.costs_j, "case {case}/{probe}");
-            // decide_with_slo wrapper vs SloPolicy.
+            assert_eq!(d.l_opt, full.l_opt, "case {case}/{probe}");
+            assert_eq!(d.cost_j, full.costs_j[full.l_opt], "case {case}/{probe}");
+            assert_eq!(d.fcc_cost_j, full.costs_j[0]);
+            assert_eq!(d.fisc_cost_j, full.costs_j[full.costs_j.len() - 1]);
+            assert_eq!(d.client_energy_j, full.client_energy_j);
+            assert_eq!(d.transmit_energy_j, full.transmit_energy_j);
+            assert_eq!(d.transmit_bits, full.transmit_bits);
+            // SLO fast path vs the reference SLO scan.
             let slo_s = 10f64.powf(rng.next_f64() * 8.0 - 6.0);
-            let fast_slo = slo_p.decide_with_slo(sp, &env, slo_s);
-            let policy_slo = slo_policy.decide(&ctx.with_slo(slo_s));
-            assert_eq!(policy_slo.l_opt, fast_slo.choice.l_opt, "case {case}/{probe}");
-            assert_eq!(policy_slo.cost_j, fast_slo.choice.cost_j);
-            assert_eq!(policy_slo.t_delay_s, Some(fast_slo.t_delay_s));
-            assert_eq!(policy_slo.feasible, fast_slo.feasible);
-            assert_eq!(policy_slo.binding, fast_slo.binding);
+            let fast_slo = slo_policy.decide(&ctx.with_slo(slo_s));
+            let scan_slo = decide_with_slo_scan(&p, &dm, sp, &env, slo_s);
+            assert_eq!(fast_slo.l_opt, scan_slo.l_opt, "case {case}/{probe}");
+            assert_eq!(fast_slo.cost_j, scan_slo.costs_j[scan_slo.l_opt]);
+            assert_eq!(fast_slo.t_delay_s, scan_slo.t_delay_s);
+            assert_eq!(fast_slo.feasible, scan_slo.feasible);
+            assert_eq!(fast_slo.binding, scan_slo.binding);
+            // SloPolicy::decide_detailed IS the reference scan.
+            let detailed = slo_policy.decide_detailed(&ctx.with_slo(slo_s));
+            assert_eq!(detailed, scan_slo, "case {case}/{probe}");
         }
-        // decide_batch_sparsity wrapper vs EnergyPolicy::decide_batch.
+        // Batched decisions vs per-request singles.
         let env = TransmitEnv::with_effective_rate(
             10f64.powf(rng.next_f64() * 8.0 - 1.0),
             rng.next_f64() * 2.0 + 0.1,
         );
-        let legacy = p.decide_batch_sparsity(&sps, &env);
         let bits: Vec<f64> = sps
             .iter()
             .map(|&sp| p.input_bits_from_sparsity(sp))
             .collect();
         let mut batch = Vec::new();
         energy.decide_batch(&bits, &DecisionContext::from_input_bits(0.0, env), &mut batch);
-        assert_eq!(batch.len(), legacy.len(), "case {case}");
-        for (d, l) in batch.iter().zip(&legacy) {
-            assert_eq!(d.l_opt, l.l_opt, "case {case}");
-            assert_eq!(d.cost_j, l.cost_j, "case {case}");
+        assert_eq!(batch.len(), bits.len(), "case {case}");
+        for (&b, d) in bits.iter().zip(&batch) {
+            let single = energy.decide(&DecisionContext::from_input_bits(b, env));
+            assert_eq!(d.l_opt, single.l_opt, "case {case}");
+            assert_eq!(d.cost_j, single.cost_j, "case {case}");
         }
         // Degenerate channels through the trait path.
         for be in [0.0, -1.0, f64::NAN] {
@@ -596,13 +643,97 @@ fn prop_envelope_table_json_round_trip_is_bit_exact() {
         }
     }
 
-    // The registry round-trips whole fleets the same way.
+    // The registry round-trips whole fleets the same way — and since the
+    // fleet builder exports v2 artifacts, every imported entry keeps its
+    // SLO engine.
     let registry = PolicyRegistry::new();
     registry.build_table_iv_fleet("alexnet").unwrap();
     let client = PolicyRegistry::new();
-    let imported = client.import_json(&registry.export_json()).unwrap();
-    assert_eq!(imported, registry.len());
+    let report = client.import_json(&registry.export_json()).unwrap();
+    assert_eq!(report.imported, registry.len());
+    assert_eq!(report.missing_slo, 0);
     assert_eq!(client.keys(), registry.keys());
+    for (net, dev) in client.keys() {
+        assert!(
+            client.get(&net, &dev).unwrap().slo_policy().is_some(),
+            "{net}/{dev} lost its SLO engine on import"
+        );
+    }
+}
+
+#[test]
+fn prop_envelope_table_v2_slo_round_trip_is_bit_exact() {
+    // The PR-5 tentpole invariant: an imported v2 EnvelopeTable (energy
+    // tables + latency vectors) reconstructs an SLO engine whose decisions
+    // — SloPolicy::decide over random SLOs/γ, including exact breakpoint
+    // ties and degenerate channels — and admission-shedding lower bound
+    // are bit-for-bit identical to the analytic engine it was exported
+    // from.
+    let mut rng = Rng::new(0x2B17_E5AC);
+    for case in 0..150 {
+        let p = random_partitioner(&mut rng);
+        let dm = random_delay_model(&mut rng, p.num_layers());
+        let table = EnvelopeTable::from_engines("synthetic", "test-device", 0.78, &p, &dm);
+        assert!(table.has_slo_tables(), "case {case}");
+        let text = table.to_json();
+        let back = EnvelopeTable::from_json(&text).expect("parse back");
+        assert_eq!(back, table, "case {case}: struct round trip");
+
+        // Rebuild the full SLO stack from the deserialized artifact.
+        let q = back.to_partitioner();
+        let qdm = back.to_delay_model().expect("v2 carries latency tables");
+        let analytic = SloPolicy::new(SloPartitioner::new(p.clone(), dm.clone()));
+        let imported = SloPolicy::new(SloPartitioner::new(q, qdm));
+
+        let check = |env: TransmitEnv, sp: f64, slo: f64, label: &str| {
+            let ctx_a = DecisionContext::from_sparsity(analytic.partitioner(), sp, env)
+                .with_slo(slo);
+            let da = analytic.decide(&ctx_a);
+            let db = imported.decide(&ctx_a);
+            assert_eq!(da, db, "case {case}: {label}");
+            assert_eq!(da.cost_j.to_bits(), db.cost_j.to_bits(), "case {case}: {label}");
+            assert_eq!(
+                da.t_delay_s.unwrap().to_bits(),
+                db.t_delay_s.unwrap().to_bits(),
+                "case {case}: {label}"
+            );
+            // The admission-shedding bound is part of the SLO surface too.
+            assert_eq!(
+                analytic
+                    .slo_partitioner()
+                    .min_delay_lower_bound_s(&env)
+                    .to_bits(),
+                imported
+                    .slo_partitioner()
+                    .min_delay_lower_bound_s(&env)
+                    .to_bits(),
+                "case {case}: lower bound at {label}"
+            );
+        };
+        for probe in 0..8 {
+            let be = 10f64.powf(rng.next_f64() * 12.0 - 3.0);
+            let p_tx = rng.next_f64() * 2.5 + 0.05;
+            let slo = match probe % 3 {
+                0 => 10f64.powf(rng.next_f64() * 8.0 - 6.0),
+                1 => 0.0,
+                _ => f64::INFINITY,
+            };
+            check(
+                TransmitEnv::with_effective_rate(be, p_tx),
+                rng.next_f64(),
+                slo,
+                "random γ/SLO",
+            );
+        }
+        // Exact energy breakpoints and delay-envelope breakpoints.
+        for &gamma in p.envelope().breakpoints() {
+            check(TransmitEnv::with_effective_rate(1.0, gamma), 0.5, 1e-3, "energy breakpoint");
+        }
+        // Degenerate channels.
+        for be in [0.0, -1.0, f64::NAN] {
+            check(TransmitEnv::with_effective_rate(be, 0.78), 0.5, 0.25, "degenerate");
+        }
+    }
 }
 
 #[test]
@@ -614,6 +745,7 @@ fn prop_sparsity_envelope_policy_matches_sparsity_linear_scan() {
     let mut rng = Rng::new(0x5EA5);
     for case in 0..CASES {
         let p = random_partitioner(&mut rng);
+        let energy = EnergyPolicy::new(p.clone());
         let be = 10f64.powf(rng.next_f64() * 10.0 - 2.0);
         let p_tx = rng.next_f64() * 2.5 + 0.05;
         let env = TransmitEnv::with_effective_rate(be, p_tx);
@@ -628,7 +760,7 @@ fn prop_sparsity_envelope_policy_matches_sparsity_linear_scan() {
         }
         for (probe, &sp) in sparsities.iter().enumerate() {
             let d = policy.decide_sparsity(sp);
-            let scan = p.decide(sp, &env);
+            let scan = reference_scan(&energy, sp, &env);
             assert_eq!(d.l_opt, scan.l_opt, "case {case}/{probe}: be={be} p_tx={p_tx} sp={sp}");
             assert_eq!(d.cost_j, scan.costs_j[scan.l_opt], "case {case}/{probe}");
             assert_eq!(d.fcc_cost_j, scan.costs_j[0], "case {case}/{probe}");

@@ -190,6 +190,75 @@ fn explicit_request_env_steers_the_decision() {
 }
 
 #[test]
+fn corrupted_channel_states_route_to_overflow_lane_without_panicking() {
+    if !have_artifacts() {
+        return;
+    }
+    // Regression: a request reporting a NaN/∞/non-positive rate (a
+    // corrupted channel-state report) must be admitted into the overflow
+    // lane and served through the guarded scan path — never panic in the
+    // γ-segment search and never pin to a bogus envelope segment.
+    let coord = Coordinator::new(config("tiny_alexnet", None)).unwrap();
+    let mut reqs = requests(5);
+    reqs[1].env = Some(TransmitEnv::with_effective_rate(f64::NAN, 0.78));
+    reqs[2].env = Some(TransmitEnv::with_effective_rate(f64::INFINITY, 0.78));
+    reqs[3].env = Some(TransmitEnv::with_effective_rate(-80e6, 0.78));
+    // Corrupted transmit power (γ = ∞ at a finite rate).
+    reqs[4].env = Some(TransmitEnv::with_effective_rate(80e6, f64::INFINITY));
+    let responses = coord.serve(reqs).unwrap();
+    assert_eq!(responses.len(), 5);
+    for r in &responses {
+        if r.id != 0 {
+            assert_eq!(r.gamma_segment, None, "request {} got a segment", r.id);
+        }
+        assert!(r.logits.iter().all(|v| v.is_finite()));
+    }
+    // A corrupted state plus a deadline exercises the shedding bound's
+    // degenerate-channel guard too (NaN rate → FISC-only lower bound).
+    let coord = Coordinator::new(config("tiny_alexnet", None)).unwrap();
+    let mut reqs = requests(2);
+    reqs[1].env = Some(TransmitEnv::with_effective_rate(f64::NAN, 0.78));
+    reqs[1].deadline_s = Some(1e3);
+    let responses = coord.serve(reqs).unwrap();
+    assert_eq!(responses.len(), 2);
+}
+
+#[test]
+fn registry_without_slo_engine_is_counted_not_silent() {
+    if !have_artifacts() {
+        return;
+    }
+    // A registry populated from a v1-shaped table (no latency data) has no
+    // shared SLO engine: the coordinator must rebuild one from the
+    // compiled profile AND count the event — deadline serving still works.
+    let registry = neupart::partition::PolicyRegistry::new();
+    let cfg = config("tiny_alexnet", None);
+    let profile = neupart::CnnErgy::inference_8bit()
+        .compiled(&neupart::Network::by_name("tiny_alexnet").unwrap());
+    let v1_table = neupart::EnvelopeTable::from_partitioner(
+        "tiny_alexnet",
+        &neupart::partition::device_class(cfg.env.p_tx_w),
+        cfg.env.p_tx_w,
+        &neupart::Partitioner::from_profile(&profile),
+    );
+    registry.insert_table(v1_table);
+    let coord = Coordinator::with_registry(cfg, &registry).unwrap();
+    assert_eq!(coord.metrics.snapshot().slo_missing, 1);
+    let mut reqs = requests(2);
+    reqs[0].deadline_s = Some(1e3); // loose: must be served
+    reqs[1].deadline_s = Some(1e-9); // provably infeasible: must be shed
+    let responses = coord.serve(reqs).unwrap();
+    assert_eq!(responses.len(), 1);
+    let m = coord.metrics.snapshot();
+    assert_eq!(m.shed_infeasible, 1);
+
+    // The analytic path (and a v2 import) shares the registry engine: no
+    // rebuild, counter stays 0.
+    let coord = Coordinator::new(config("tiny_alexnet", None)).unwrap();
+    assert_eq!(coord.metrics.snapshot().slo_missing, 0);
+}
+
+#[test]
 fn infeasible_deadlines_are_shed_at_admission() {
     if !have_artifacts() {
         return;
