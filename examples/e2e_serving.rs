@@ -14,7 +14,9 @@
 use std::path::PathBuf;
 
 use neupart::channel::TransmitEnv;
-use neupart::coordinator::{Coordinator, CoordinatorConfig, InferenceRequest};
+use neupart::coordinator::{
+    Coordinator, CoordinatorConfig, ExecutorBackend, InferenceRequest, RetryPolicy,
+};
 use neupart::corpus::Corpus;
 
 fn requests(n: usize, seed: u64) -> Vec<InferenceRequest> {
@@ -53,6 +55,9 @@ fn config(force_split: Option<usize>, be_mbps: f64) -> CoordinatorConfig {
         batch_max: 8,
         gamma_coherent: true,
         shed_infeasible: true,
+        backend: ExecutorBackend::Pjrt,
+        faults: None,
+        retry: RetryPolicy::default(),
         seed: 7,
     }
 }
@@ -84,7 +89,7 @@ fn main() -> anyhow::Result<()> {
         println!("  [{label}] startup (artifact compile): {:.1} s", t_init.elapsed().as_secs_f64());
         let reqs = requests(n, 7);
         let t0 = std::time::Instant::now();
-        let responses = coord.serve(reqs)?;
+        let responses = coord.serve_responses(reqs)?;
         let wall = t0.elapsed();
 
         // Verify numerics: every policy must classify like the cloud does.

@@ -1,0 +1,369 @@
+//! Seeded, deterministic fault injection for the simulated uplink.
+//!
+//! Real mobile uplinks drop transfers, stall mid-flight, and black out
+//! during handover. The [`FaultModel`] reproduces those three failure
+//! classes with a schedule that is a pure function of its
+//! [`FaultConfig::seed`], so a chaos run replays bit-for-bit:
+//!
+//! * **Drops** — with probability [`FaultConfig::drop_prob`] a transfer
+//!   aborts partway through; the radio energy spent up to the abort point
+//!   is charged as waste (partial-transfer accounting).
+//! * **Stalls** — with probability [`FaultConfig::stall_prob`] the
+//!   transfer completes but occupies the air up to
+//!   [`FaultConfig::stall_max_factor`] times longer at full `P_Tx`, so
+//!   the extra joules land in [`super::ChannelStats`].
+//! * **Outages** — a two-state Markov chain
+//!   ([`MarkovOutage`]) models up/down link windows; sends attempted
+//!   while the link is down fail fast without keying the radio.
+//!
+//! The model only decides *what* happens to a transfer; the energy and
+//! airtime arithmetic stays in [`super::Channel::send`].
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+/// Two-state (up/down) Markov outage model. The chain advances once per
+/// transfer attempt: from up, the link fails with `p_up_to_down`; from
+/// down, it recovers with `p_down_to_up`. Mean outage length in transfer
+/// attempts is `1 / p_down_to_up`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MarkovOutage {
+    pub p_up_to_down: f64,
+    pub p_down_to_up: f64,
+}
+
+/// Fault-injection knobs for the simulated channel. All probabilities are
+/// per transfer attempt; [`FaultConfig::none`] disables everything.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultConfig {
+    /// Probability a transfer is dropped partway through.
+    pub drop_prob: f64,
+    /// Probability a delivered transfer stalls (extra airtime at full
+    /// `P_Tx`).
+    pub stall_prob: f64,
+    /// Upper bound on the stall's extra-airtime factor: a stalled
+    /// transfer takes `(1 + U(0, stall_max_factor))` times its nominal
+    /// airtime.
+    pub stall_max_factor: f64,
+    /// Markov up/down outage windows (`None` = link never blacks out).
+    pub outage: Option<MarkovOutage>,
+    /// Seed of the fault schedule; two models with the same config
+    /// produce identical decision sequences.
+    pub seed: u64,
+}
+
+impl FaultConfig {
+    /// The fault-free configuration (what `faults: None` also means).
+    pub fn none() -> Self {
+        FaultConfig {
+            drop_prob: 0.0,
+            stall_prob: 0.0,
+            stall_max_factor: 0.0,
+            outage: None,
+            seed: 0,
+        }
+    }
+
+    /// Does any fault class have a chance of firing?
+    pub fn is_active(&self) -> bool {
+        self.drop_prob > 0.0 || self.stall_prob > 0.0 || self.outage.is_some()
+    }
+
+    /// Reject configurations a user-facing builder should never accept:
+    /// probabilities outside `[0, 1]` (or NaN), a negative or non-finite
+    /// stall factor.
+    pub fn validate(&self) -> Result<()> {
+        for (name, p) in [("drop_prob", self.drop_prob), ("stall_prob", self.stall_prob)] {
+            if !(0.0..=1.0).contains(&p) {
+                bail!("{name} must be in [0, 1], got {p}");
+            }
+        }
+        if !(self.stall_max_factor >= 0.0 && self.stall_max_factor.is_finite()) {
+            bail!(
+                "stall_max_factor must be finite and ≥ 0, got {}",
+                self.stall_max_factor
+            );
+        }
+        if let Some(o) = self.outage {
+            for (name, p) in [
+                ("p_up_to_down", o.p_up_to_down),
+                ("p_down_to_up", o.p_down_to_up),
+            ] {
+                if !(0.0..=1.0).contains(&p) {
+                    bail!("outage {name} must be in [0, 1], got {p}");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Clamp out-of-range knobs to safe values (NaN probabilities → 0,
+    /// probabilities into `[0, 1]`, NaN/negative stall factor → 0).
+    pub fn sanitized(mut self) -> Self {
+        let clamp01 = |p: f64| if p.is_nan() { 0.0 } else { p.clamp(0.0, 1.0) };
+        self.drop_prob = clamp01(self.drop_prob);
+        self.stall_prob = clamp01(self.stall_prob);
+        self.stall_max_factor = if self.stall_max_factor.is_nan() || self.stall_max_factor < 0.0 {
+            0.0
+        } else {
+            self.stall_max_factor
+        };
+        self.outage = self.outage.map(|o| MarkovOutage {
+            p_up_to_down: clamp01(o.p_up_to_down),
+            p_down_to_up: clamp01(o.p_down_to_up),
+        });
+        self
+    }
+}
+
+/// Why a transfer failed. `Dropped` carries the partial-transfer waste
+/// already charged to [`super::ChannelStats`]; `Outage` fails fast before
+/// the radio keys up, so it wastes nothing.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ChannelError {
+    Dropped {
+        wasted_energy_j: f64,
+        wasted_airtime_s: f64,
+    },
+    Outage,
+}
+
+impl ChannelError {
+    /// Radio energy burnt by the failed attempt, joules.
+    pub fn wasted_energy_j(&self) -> f64 {
+        match self {
+            ChannelError::Dropped { wasted_energy_j, .. } => *wasted_energy_j,
+            ChannelError::Outage => 0.0,
+        }
+    }
+
+    /// Airtime occupied by the failed attempt, seconds.
+    pub fn wasted_airtime_s(&self) -> f64 {
+        match self {
+            ChannelError::Dropped { wasted_airtime_s, .. } => *wasted_airtime_s,
+            ChannelError::Outage => 0.0,
+        }
+    }
+}
+
+impl fmt::Display for ChannelError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ChannelError::Dropped {
+                wasted_energy_j,
+                wasted_airtime_s,
+            } => write!(
+                f,
+                "transfer dropped mid-flight (wasted {:.3e} J over {:.3e} s)",
+                wasted_energy_j, wasted_airtime_s
+            ),
+            ChannelError::Outage => write!(f, "link outage: transfer rejected"),
+        }
+    }
+}
+
+impl std::error::Error for ChannelError {}
+
+/// What the fault model decided for one transfer attempt.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultDecision {
+    /// Deliver normally.
+    Deliver,
+    /// Deliver, but occupy the air `extra_factor` × nominal airtime longer
+    /// at full `P_Tx`.
+    Stall { extra_factor: f64 },
+    /// Abort after `completed_fraction` of the nominal airtime.
+    Drop { completed_fraction: f64 },
+    /// The link is down; fail fast without keying the radio.
+    Outage,
+}
+
+/// The seeded fault state machine. Decisions depend only on the config
+/// (schedule RNG + Markov link state), never on payload size or wall
+/// clock, so a fixed seed replays the identical schedule.
+#[derive(Clone, Debug)]
+pub struct FaultModel {
+    config: FaultConfig,
+    rng: Rng,
+    link_down: bool,
+    decided: u64,
+}
+
+impl FaultModel {
+    pub fn new(config: FaultConfig) -> Self {
+        let config = config.sanitized();
+        FaultModel {
+            rng: Rng::new(config.seed),
+            config,
+            link_down: false,
+            decided: 0,
+        }
+    }
+
+    /// Decide the fate of the next transfer attempt. Draw order is fixed
+    /// (Markov step, then drop, then stall) and each draw happens only
+    /// when its fault class is configured, so enabling one class never
+    /// perturbs the schedule of a run that disabled it.
+    pub fn next_decision(&mut self) -> FaultDecision {
+        self.decided += 1;
+        if let Some(o) = self.config.outage {
+            let u = self.rng.next_f64();
+            if self.link_down {
+                if u < o.p_down_to_up {
+                    self.link_down = false;
+                }
+            } else if u < o.p_up_to_down {
+                self.link_down = true;
+            }
+            if self.link_down {
+                return FaultDecision::Outage;
+            }
+        }
+        if self.config.drop_prob > 0.0 && self.rng.next_f64() < self.config.drop_prob {
+            return FaultDecision::Drop {
+                completed_fraction: self.rng.next_f64(),
+            };
+        }
+        if self.config.stall_prob > 0.0 && self.rng.next_f64() < self.config.stall_prob {
+            return FaultDecision::Stall {
+                extra_factor: self.rng.next_f64() * self.config.stall_max_factor,
+            };
+        }
+        FaultDecision::Deliver
+    }
+
+    /// Transfer attempts decided so far.
+    pub fn decisions_made(&self) -> u64 {
+        self.decided
+    }
+
+    /// Is the Markov link currently in an outage window?
+    pub fn link_down(&self) -> bool {
+        self.link_down
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chaos_config(seed: u64) -> FaultConfig {
+        FaultConfig {
+            drop_prob: 0.3,
+            stall_prob: 0.3,
+            stall_max_factor: 2.0,
+            outage: Some(MarkovOutage {
+                p_up_to_down: 0.2,
+                p_down_to_up: 0.5,
+            }),
+            seed,
+        }
+    }
+
+    #[test]
+    fn seeded_schedule_is_deterministic() {
+        let mut a = FaultModel::new(chaos_config(42));
+        let mut b = FaultModel::new(chaos_config(42));
+        for _ in 0..500 {
+            assert_eq!(a.next_decision(), b.next_decision());
+        }
+        assert_eq!(a.decisions_made(), 500);
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = FaultModel::new(chaos_config(1));
+        let mut b = FaultModel::new(chaos_config(2));
+        let diverged = (0..200).any(|_| a.next_decision() != b.next_decision());
+        assert!(diverged, "200 identical decisions from different seeds");
+    }
+
+    #[test]
+    fn inactive_model_always_delivers() {
+        let mut m = FaultModel::new(FaultConfig::none());
+        for _ in 0..100 {
+            assert_eq!(m.next_decision(), FaultDecision::Deliver);
+        }
+        assert!(!FaultConfig::none().is_active());
+        assert!(chaos_config(0).is_active());
+    }
+
+    #[test]
+    fn every_fault_class_fires_under_chaos() {
+        let mut m = FaultModel::new(chaos_config(7));
+        let (mut drops, mut stalls, mut outages, mut delivers) = (0, 0, 0, 0);
+        for _ in 0..2000 {
+            match m.next_decision() {
+                FaultDecision::Drop { completed_fraction } => {
+                    assert!((0.0..1.0).contains(&completed_fraction));
+                    drops += 1;
+                }
+                FaultDecision::Stall { extra_factor } => {
+                    assert!((0.0..=2.0).contains(&extra_factor));
+                    stalls += 1;
+                }
+                FaultDecision::Outage => outages += 1,
+                FaultDecision::Deliver => delivers += 1,
+            }
+        }
+        assert!(drops > 0 && stalls > 0 && outages > 0 && delivers > 0);
+    }
+
+    #[test]
+    fn pinned_outage_rejects_everything_after_first_step() {
+        let cfg = FaultConfig {
+            drop_prob: 0.0,
+            stall_prob: 0.0,
+            stall_max_factor: 0.0,
+            outage: Some(MarkovOutage {
+                p_up_to_down: 1.0,
+                p_down_to_up: 0.0,
+            }),
+            seed: 3,
+        };
+        let mut m = FaultModel::new(cfg);
+        for _ in 0..50 {
+            assert_eq!(m.next_decision(), FaultDecision::Outage);
+        }
+        assert!(m.link_down());
+    }
+
+    #[test]
+    fn validate_and_sanitize() {
+        assert!(chaos_config(0).validate().is_ok());
+        let mut bad = chaos_config(0);
+        bad.drop_prob = 1.5;
+        assert!(bad.validate().is_err());
+        assert_eq!(bad.sanitized().drop_prob, 1.0);
+        bad.drop_prob = f64::NAN;
+        assert_eq!(bad.sanitized().drop_prob, 0.0);
+        bad.drop_prob = 0.1;
+        bad.stall_max_factor = -2.0;
+        assert!(bad.validate().is_err());
+        assert_eq!(bad.sanitized().stall_max_factor, 0.0);
+        bad.stall_max_factor = 1.0;
+        bad.outage = Some(MarkovOutage {
+            p_up_to_down: 7.0,
+            p_down_to_up: -1.0,
+        });
+        assert!(bad.validate().is_err());
+        let s = bad.sanitized().outage.unwrap();
+        assert_eq!((s.p_up_to_down, s.p_down_to_up), (1.0, 0.0));
+    }
+
+    #[test]
+    fn error_accessors() {
+        let e = ChannelError::Dropped {
+            wasted_energy_j: 0.5,
+            wasted_airtime_s: 0.25,
+        };
+        assert_eq!(e.wasted_energy_j(), 0.5);
+        assert_eq!(e.wasted_airtime_s(), 0.25);
+        assert_eq!(ChannelError::Outage.wasted_energy_j(), 0.0);
+        assert!(format!("{e}").contains("dropped"));
+        assert!(format!("{}", ChannelError::Outage).contains("outage"));
+    }
+}

@@ -1,12 +1,39 @@
 //! Wireless-channel substrate: transmission energy/time models (paper §VI-A)
 //! and the smartphone uplink power survey (paper Table IV), plus a
 //! simulated channel the serving coordinator sends activations through.
+//!
+//! ## The failure path
+//!
+//! Real mobile uplinks are not the ideal pipe of §VI-A: they drop
+//! transfers, stall mid-flight, and black out during handover. The
+//! simulator therefore carries an optional seeded [`FaultModel`]
+//! ([`ChannelConfig::faults`]) covering three fault classes:
+//!
+//! * **drops** — the transfer aborts after a uniform fraction of its
+//!   airtime; the radio energy already spent is charged to
+//!   [`ChannelStats::wasted_energy_j`] (partial-transfer accounting) and
+//!   the send returns [`ChannelError::Dropped`];
+//! * **stalls** — the transfer completes but occupies the air up to
+//!   `stall_max_factor` × longer at full `P_Tx`, so the extra joules show
+//!   up in both the returned energy and [`ChannelStats::stall_airtime_s`];
+//! * **outages** — a two-state Markov chain ([`MarkovOutage`]) opens
+//!   up/down link windows; sends during a down window fail fast with
+//!   [`ChannelError::Outage`] and zero energy.
+//!
+//! [`Channel::send`] accordingly returns
+//! `Result<(energy_j, airtime_s), ChannelError>`; the fault schedule is a
+//! pure function of [`FaultConfig::seed`], so chaos runs replay
+//! bit-for-bit. The coordinator wraps the send in a retry policy and
+//! falls back to fully in-situ execution (the paper's FISC arm) when the
+//! channel stays down — see [`crate::coordinator`] module docs.
 
 pub mod devices;
+pub mod faults;
 pub mod simulator;
 pub mod transmission;
 
 pub use devices::{DevicePower, DEVICE_POWER_TABLE};
+pub use faults::{ChannelError, FaultConfig, FaultDecision, FaultModel, MarkovOutage};
 pub use simulator::{
     jittered_rate_bps, Channel, ChannelConfig, ChannelStats, MAX_JITTER, MIN_EFFECTIVE_RATE_BPS,
 };

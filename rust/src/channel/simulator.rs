@@ -4,13 +4,23 @@
 //! the serving loop actually *wait* those times and accrue those joules, so
 //! end-to-end runs report the same quantities the model predicts — plus
 //! optional bandwidth jitter to exercise the flat-valley robustness the
-//! paper analyzes in Fig. 14(b).
+//! paper analyzes in Fig. 14(b), and optional seeded fault injection
+//! ([`super::faults`]) so the coordinator's failure path (retry, FISC
+//! fallback, degraded mode) can be driven deterministically.
+//!
+//! With faults configured, [`Channel::send`] can fail: a **drop** aborts
+//! mid-transfer and charges the radio energy spent up to the abort point
+//! as waste, a **stall** delivers but burns extra airtime at full `P_Tx`,
+//! and an **outage** rejects the attempt before the radio keys up. All
+//! three leave [`ChannelStats`] finite and non-negative (property-tested
+//! below).
 
 use std::sync::Mutex;
 use std::time::Duration;
 
 use anyhow::{bail, Result};
 
+use super::faults::{ChannelError, FaultConfig, FaultDecision, FaultModel};
 use super::transmission::TransmitEnv;
 use crate::util::rng::Rng;
 
@@ -66,6 +76,9 @@ pub struct ChannelConfig {
     /// Scale factor applied to simulated airtime before sleeping (0 disables
     /// real sleeps so tests/benches run instantly; 1 = real time).
     pub time_scale: f64,
+    /// Seeded fault injection (`None` = the channel never fails; see
+    /// [`super::faults`]).
+    pub faults: Option<FaultConfig>,
 }
 
 impl ChannelConfig {
@@ -74,13 +87,14 @@ impl ChannelConfig {
             env,
             jitter: 0.0,
             time_scale: 0.0,
+            faults: None,
         }
     }
 
     /// Reject configurations a user-facing builder should never accept:
     /// non-finite or non-positive bit rate, jitter outside `[0, MAX_JITTER]`
     /// (≥ 1 would make the jittered rate hit zero or negative), negative or
-    /// non-finite time scale.
+    /// non-finite time scale, out-of-range fault probabilities.
     pub fn validate(&self) -> Result<()> {
         let rate = self.env.effective_bit_rate();
         if !(rate > 0.0 && rate.is_finite()) {
@@ -96,12 +110,16 @@ impl ChannelConfig {
         if !(self.time_scale >= 0.0 && self.time_scale.is_finite()) {
             bail!("time_scale must be finite and ≥ 0, got {}", self.time_scale);
         }
+        if let Some(f) = &self.faults {
+            f.validate()?;
+        }
         Ok(())
     }
 
     /// Clamp out-of-range knobs to safe values (NaN jitter → 0; jitter into
-    /// `[0, MAX_JITTER]`; NaN/negative time scale → 0). The env rate is
-    /// left as configured — [`Channel::send`] floors the *jittered* rate.
+    /// `[0, MAX_JITTER]`; NaN/negative time scale → 0; fault probabilities
+    /// into `[0, 1]`). The env rate is left as configured —
+    /// [`Channel::send`] floors the *jittered* rate.
     pub fn sanitized(mut self) -> Self {
         self.jitter = if self.jitter.is_nan() {
             0.0
@@ -113,33 +131,72 @@ impl ChannelConfig {
         } else {
             self.time_scale
         };
+        self.faults = self.faults.map(FaultConfig::sanitized);
         self
     }
 }
 
-/// Cumulative channel statistics.
+/// Cumulative channel statistics. `energy_j`/`airtime_s` are *totals* —
+/// they include the waste of dropped and stalled transfers, which is also
+/// broken out separately so callers can account for it.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct ChannelStats {
+    /// Transfers delivered (dropped attempts are counted in
+    /// `transfers_dropped` instead).
     pub transfers: u64,
+    /// Payload bits of delivered transfers.
     pub payload_bits: u64,
+    /// Total radio energy, joules (delivered + wasted).
     pub energy_j: f64,
+    /// Total airtime, seconds (delivered + wasted).
     pub airtime_s: f64,
+    /// Transfer attempts dropped mid-flight.
+    pub transfers_dropped: u64,
+    /// Delivered transfers that stalled (extra airtime at full `P_Tx`).
+    pub stalls: u64,
+    /// Attempts rejected while the link was in an outage window (no
+    /// energy spent).
+    pub outage_rejections: u64,
+    /// Radio energy burnt by dropped transfers, joules (subset of
+    /// `energy_j`).
+    pub wasted_energy_j: f64,
+    /// Airtime occupied by dropped transfers, seconds (subset of
+    /// `airtime_s`).
+    pub wasted_airtime_s: f64,
+    /// Extra airtime burnt by stalls, seconds (subset of `airtime_s`).
+    pub stall_airtime_s: f64,
+}
+
+struct ChannelState {
+    rng: Rng,
+    stats: ChannelStats,
+    faults: Option<FaultModel>,
 }
 
 /// A thread-safe simulated uplink.
 pub struct Channel {
     config: ChannelConfig,
-    state: Mutex<(Rng, ChannelStats)>,
+    state: Mutex<ChannelState>,
 }
 
 impl Channel {
     /// Build a channel; the config is sanitized (see
     /// [`ChannelConfig::sanitized`]) so a stored channel can never produce
-    /// non-finite airtime or energy.
+    /// non-finite airtime or energy. The fault schedule is seeded from
+    /// [`FaultConfig::seed`], independent of the jitter seed.
     pub fn new(config: ChannelConfig, seed: u64) -> Self {
+        let config = config.sanitized();
+        let faults = config
+            .faults
+            .filter(FaultConfig::is_active)
+            .map(FaultModel::new);
         Channel {
-            config: config.sanitized(),
-            state: Mutex::new((Rng::new(seed), ChannelStats::default())),
+            config,
+            state: Mutex::new(ChannelState {
+                rng: Rng::new(seed),
+                stats: ChannelStats::default(),
+                faults,
+            }),
         }
     }
 
@@ -149,36 +206,86 @@ impl Channel {
     /// degenerate envs (zero/negative/NaN rate saturates at
     /// [`MIN_EFFECTIVE_RATE_BPS`]) while valid slow channels keep their
     /// configured rate.
-    pub fn send(&self, payload_bits: u64) -> (f64, f64) {
-        let (energy, airtime) = {
-            let mut guard = self.state.lock().unwrap();
-            let (ref mut rng, ref mut stats) = *guard;
-            let u = if self.config.jitter > 0.0 {
-                rng.next_f64()
-            } else {
-                0.5 // factor 1.0: deterministic, no RNG draw consumed
+    ///
+    /// With faults configured the send can fail: `Err(Dropped)` charges
+    /// the partial-transfer energy as waste, `Err(Outage)` fails fast
+    /// with no energy spent. A stalled transfer still succeeds — its
+    /// returned energy/airtime include the stall, so the caller's
+    /// accounting matches the stats.
+    pub fn send(&self, payload_bits: u64) -> std::result::Result<(f64, f64), ChannelError> {
+        let (outcome, sleep_s) = {
+            let mut guard = self.state.lock().unwrap_or_else(|p| p.into_inner());
+            let state = &mut *guard;
+            let fault = match state.faults.as_mut() {
+                Some(m) => m.next_decision(),
+                None => FaultDecision::Deliver,
             };
-            let b_e = jittered_rate_bps(
-                self.config.env.effective_bit_rate(),
-                self.config.jitter,
-                u,
-            );
-            let airtime = payload_bits as f64 / b_e;
-            let energy = self.config.env.p_tx_w * airtime;
-            stats.transfers += 1;
-            stats.payload_bits += payload_bits;
-            stats.energy_j += energy;
-            stats.airtime_s += airtime;
-            (energy, airtime)
+            if matches!(fault, FaultDecision::Outage) {
+                state.stats.outage_rejections += 1;
+                // The radio never keys up: no energy, no airtime.
+                (Err(ChannelError::Outage), 0.0)
+            } else {
+                let u = if self.config.jitter > 0.0 {
+                    state.rng.next_f64()
+                } else {
+                    0.5 // factor 1.0: deterministic, no RNG draw consumed
+                };
+                let b_e = jittered_rate_bps(
+                    self.config.env.effective_bit_rate(),
+                    self.config.jitter,
+                    u,
+                );
+                let airtime = payload_bits as f64 / b_e;
+                let energy = self.config.env.p_tx_w * airtime;
+                match fault {
+                    FaultDecision::Drop { completed_fraction } => {
+                        let f = completed_fraction.clamp(0.0, 1.0);
+                        let wasted_airtime = airtime * f;
+                        let wasted_energy = energy * f;
+                        state.stats.transfers_dropped += 1;
+                        state.stats.energy_j += wasted_energy;
+                        state.stats.airtime_s += wasted_airtime;
+                        state.stats.wasted_energy_j += wasted_energy;
+                        state.stats.wasted_airtime_s += wasted_airtime;
+                        (
+                            Err(ChannelError::Dropped {
+                                wasted_energy_j: wasted_energy,
+                                wasted_airtime_s: wasted_airtime,
+                            }),
+                            wasted_airtime,
+                        )
+                    }
+                    FaultDecision::Stall { extra_factor } => {
+                        let stall_airtime = airtime * extra_factor.max(0.0);
+                        let total_airtime = airtime + stall_airtime;
+                        let total_energy = self.config.env.p_tx_w * total_airtime;
+                        state.stats.transfers += 1;
+                        state.stats.stalls += 1;
+                        state.stats.payload_bits += payload_bits;
+                        state.stats.energy_j += total_energy;
+                        state.stats.airtime_s += total_airtime;
+                        state.stats.stall_airtime_s += stall_airtime;
+                        (Ok((total_energy, total_airtime)), total_airtime)
+                    }
+                    FaultDecision::Deliver => {
+                        state.stats.transfers += 1;
+                        state.stats.payload_bits += payload_bits;
+                        state.stats.energy_j += energy;
+                        state.stats.airtime_s += airtime;
+                        (Ok((energy, airtime)), airtime)
+                    }
+                    FaultDecision::Outage => unreachable!("handled above"),
+                }
+            }
         };
-        if self.config.time_scale > 0.0 {
-            std::thread::sleep(Duration::from_secs_f64(airtime * self.config.time_scale));
+        if self.config.time_scale > 0.0 && sleep_s > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(sleep_s * self.config.time_scale));
         }
-        (energy, airtime)
+        outcome
     }
 
     pub fn stats(&self) -> ChannelStats {
-        self.state.lock().unwrap().1
+        self.state.lock().unwrap_or_else(|p| p.into_inner()).stats
     }
 
     pub fn config(&self) -> &ChannelConfig {
@@ -189,6 +296,7 @@ impl Channel {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::channel::faults::MarkovOutage;
 
     fn env() -> TransmitEnv {
         TransmitEnv::with_effective_rate(100.0e6, 1.0)
@@ -197,12 +305,14 @@ mod tests {
     #[test]
     fn deterministic_channel_matches_model() {
         let ch = Channel::new(ChannelConfig::ideal(env()), 1);
-        let (e, t) = ch.send(1_000_000);
+        let (e, t) = ch.send(1_000_000).unwrap();
         assert!((t - 0.01).abs() < 1e-12);
         assert!((e - 0.01).abs() < 1e-12);
         let stats = ch.stats();
         assert_eq!(stats.transfers, 1);
         assert_eq!(stats.payload_bits, 1_000_000);
+        assert_eq!(stats.transfers_dropped, 0);
+        assert_eq!(stats.wasted_energy_j, 0.0);
     }
 
     #[test]
@@ -211,7 +321,7 @@ mod tests {
         cfg.jitter = 0.2;
         let ch = Channel::new(cfg, 7);
         for _ in 0..200 {
-            let (_, t) = ch.send(1_000_000);
+            let (_, t) = ch.send(1_000_000).unwrap();
             // B_e in [80, 120] Mbps -> t in [1/120, 1/80] * 1e6 us.
             assert!((0.00833..0.0126).contains(&t), "t {t}");
         }
@@ -221,7 +331,7 @@ mod tests {
     fn stats_accumulate() {
         let ch = Channel::new(ChannelConfig::ideal(env()), 3);
         for _ in 0..10 {
-            ch.send(100);
+            ch.send(100).unwrap();
         }
         let s = ch.stats();
         assert_eq!(s.transfers, 10);
@@ -241,7 +351,7 @@ mod tests {
             assert!(ch.config().jitter <= MAX_JITTER, "jitter {j}");
             assert!(ch.config().jitter >= 0.0, "jitter {j}");
             for _ in 0..200 {
-                let (e, t) = ch.send(1_000_000);
+                let (e, t) = ch.send(1_000_000).unwrap();
                 assert!(t.is_finite() && t > 0.0, "jitter {j}: airtime {t}");
                 assert!(e.is_finite() && e >= 0.0, "jitter {j}: energy {e}");
             }
@@ -257,7 +367,7 @@ mod tests {
                 ChannelConfig::ideal(TransmitEnv::with_effective_rate(rate, 1.0)),
                 3,
             );
-            let (e, t) = ch.send(1_000);
+            let (e, t) = ch.send(1_000).unwrap();
             // 1 kbit at the 1 kbps floor: 1 s of airtime, finite energy.
             assert!((t - 1_000.0 / MIN_EFFECTIVE_RATE_BPS).abs() < 1e-9, "rate {rate}");
             assert!(e.is_finite(), "rate {rate}");
@@ -272,7 +382,7 @@ mod tests {
             ChannelConfig::ideal(TransmitEnv::with_effective_rate(500.0, 0.78)),
             9,
         );
-        let (e, t) = ch.send(1_000);
+        let (e, t) = ch.send(1_000).unwrap();
         assert!((t - 2.0).abs() < 1e-12, "airtime {t}");
         assert!((e - 0.78 * 2.0).abs() < 1e-12, "energy {e}");
     }
@@ -309,6 +419,14 @@ mod tests {
         assert!(cfg.validate().is_err());
         cfg.env = TransmitEnv::with_effective_rate(f64::NAN, 1.0);
         assert!(cfg.validate().is_err());
+        cfg.env = env();
+        cfg.faults = Some(FaultConfig {
+            drop_prob: 2.0,
+            ..FaultConfig::none()
+        });
+        assert!(cfg.validate().is_err());
+        cfg.faults = Some(FaultConfig::none());
+        assert!(cfg.validate().is_ok());
     }
 
     #[test]
@@ -321,9 +439,14 @@ mod tests {
         assert_eq!(s.time_scale, 0.5);
         cfg.jitter = 2.0;
         cfg.time_scale = f64::NAN;
+        cfg.faults = Some(FaultConfig {
+            drop_prob: f64::NAN,
+            ..FaultConfig::none()
+        });
         let s = cfg.sanitized();
         assert_eq!(s.jitter, MAX_JITTER);
         assert_eq!(s.time_scale, 0.0);
+        assert_eq!(s.faults.unwrap().drop_prob, 0.0);
     }
 
     #[test]
@@ -334,7 +457,7 @@ mod tests {
             let c = ch.clone();
             handles.push(std::thread::spawn(move || {
                 for _ in 0..25 {
-                    c.send(8);
+                    c.send(8).unwrap();
                 }
             }));
         }
@@ -342,5 +465,155 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(ch.stats().transfers, 100);
+    }
+
+    // ---- fault injection (satellite: FaultModel determinism + finite,
+    // non-negative stats under every fault class) ----
+
+    fn faulty(drop: f64, stall: f64, outage: Option<MarkovOutage>, seed: u64) -> ChannelConfig {
+        let mut cfg = ChannelConfig::ideal(env());
+        cfg.faults = Some(FaultConfig {
+            drop_prob: drop,
+            stall_prob: stall,
+            stall_max_factor: 3.0,
+            outage,
+            seed,
+        });
+        cfg
+    }
+
+    fn mild_outage() -> Option<MarkovOutage> {
+        Some(MarkovOutage {
+            p_up_to_down: 0.2,
+            p_down_to_up: 0.5,
+        })
+    }
+
+    #[test]
+    fn dropped_transfer_charges_partial_energy_as_waste() {
+        let ch = Channel::new(faulty(1.0, 0.0, None, 21), 1);
+        let err = ch.send(1_000_000).unwrap_err();
+        match err {
+            ChannelError::Dropped {
+                wasted_energy_j,
+                wasted_airtime_s,
+            } => {
+                // Full transfer would be 10 ms / 10 mJ at 100 Mbps, 1 W;
+                // the partial waste is a fraction of that.
+                assert!((0.0..=0.01).contains(&wasted_energy_j));
+                assert!((0.0..=0.01).contains(&wasted_airtime_s));
+                let s = ch.stats();
+                assert_eq!(s.transfers, 0);
+                assert_eq!(s.transfers_dropped, 1);
+                assert_eq!(s.payload_bits, 0);
+                assert!((s.wasted_energy_j - wasted_energy_j).abs() < 1e-15);
+                assert!((s.energy_j - wasted_energy_j).abs() < 1e-15);
+            }
+            other => panic!("expected Dropped, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stalled_transfer_burns_extra_airtime_at_full_power() {
+        let ch = Channel::new(faulty(0.0, 1.0, None, 9), 1);
+        let (e, t) = ch.send(1_000_000).unwrap();
+        // Nominal is 10 ms / 10 mJ; a stall only adds.
+        assert!(t >= 0.01 - 1e-12, "airtime {t}");
+        assert!(e >= 0.01 - 1e-12, "energy {e}");
+        let s = ch.stats();
+        assert_eq!(s.transfers, 1);
+        assert_eq!(s.stalls, 1);
+        assert!(s.stall_airtime_s >= 0.0);
+        // Energy total is P_Tx × total airtime: stall charged at full power.
+        assert!((s.energy_j - s.airtime_s * 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn outage_rejects_without_spending_energy() {
+        let ch = Channel::new(
+            faulty(
+                0.0,
+                0.0,
+                Some(MarkovOutage {
+                    p_up_to_down: 1.0,
+                    p_down_to_up: 0.0,
+                }),
+                13,
+            ),
+            1,
+        );
+        for _ in 0..20 {
+            assert_eq!(ch.send(1_000).unwrap_err(), ChannelError::Outage);
+        }
+        let s = ch.stats();
+        assert_eq!(s.outage_rejections, 20);
+        assert_eq!(s.energy_j, 0.0);
+        assert_eq!(s.airtime_s, 0.0);
+    }
+
+    #[test]
+    fn seeded_fault_schedule_is_reproducible_through_the_channel() {
+        // Two channels with identical configs replay the identical
+        // outcome sequence and end bit-for-bit at the same stats.
+        let mk = || Channel::new(faulty(0.3, 0.3, mild_outage(), 77), 5);
+        let (a, b) = (mk(), mk());
+        for _ in 0..400 {
+            let (ra, rb) = (a.send(50_000), b.send(50_000));
+            assert_eq!(ra, rb);
+        }
+        assert_eq!(a.stats(), b.stats());
+        assert!(a.stats().transfers_dropped > 0, "chaos config never dropped");
+    }
+
+    #[test]
+    fn stats_stay_finite_and_non_negative_under_every_fault_class() {
+        // Property sweep: each fault class alone and combined, over sane
+        // and degenerate envs, keeps every stat finite and non-negative,
+        // with the waste/stall breakdowns bounded by the totals.
+        let fault_cases = [
+            faulty(0.5, 0.0, None, 1).faults,
+            faulty(0.0, 0.7, None, 2).faults,
+            faulty(0.0, 0.0, mild_outage(), 3).faults,
+            faulty(0.4, 0.4, mild_outage(), 4).faults,
+        ];
+        let envs = [
+            env(),
+            TransmitEnv::with_effective_rate(0.0, 1.0),
+            TransmitEnv::with_effective_rate(f64::NAN, 0.78),
+            TransmitEnv::with_effective_rate(500.0, 0.78),
+        ];
+        for (ci, faults) in fault_cases.into_iter().enumerate() {
+            for (ei, e) in envs.into_iter().enumerate() {
+                let mut cfg = ChannelConfig::ideal(e);
+                cfg.jitter = 0.4;
+                cfg.faults = faults;
+                let ch = Channel::new(cfg, 17);
+                let mut prev = ChannelStats::default();
+                for i in 0..300 {
+                    let _ = ch.send(10_000);
+                    let s = ch.stats();
+                    let tag = format!("case {ci}/{ei} send {i}");
+                    assert!(s.energy_j.is_finite() && s.energy_j >= 0.0, "{tag}");
+                    assert!(s.airtime_s.is_finite() && s.airtime_s >= 0.0, "{tag}");
+                    assert!(s.wasted_energy_j.is_finite() && s.wasted_energy_j >= 0.0, "{tag}");
+                    assert!(s.stall_airtime_s.is_finite() && s.stall_airtime_s >= 0.0, "{tag}");
+                    // Totals are monotone and dominate the breakdowns.
+                    assert!(s.energy_j >= prev.energy_j, "{tag}");
+                    assert!(s.airtime_s >= prev.airtime_s, "{tag}");
+                    assert!(s.wasted_energy_j <= s.energy_j + 1e-12, "{tag}");
+                    assert!(
+                        s.wasted_airtime_s + s.stall_airtime_s <= s.airtime_s + 1e-12,
+                        "{tag}"
+                    );
+                    prev = s;
+                }
+                let s = ch.stats();
+                assert_eq!(
+                    s.transfers + s.transfers_dropped + s.outage_rejections,
+                    300,
+                    "case {ci}/{ei}: every attempt must be accounted"
+                );
+            }
+        }
     }
 }

@@ -2,13 +2,31 @@
 //!
 //! A [`DeviceExecutor`] is a thread that owns one PJRT client and a lazy
 //! cache of compiled prefix/suffix executables for a network (PJRT handles
-//! are `Rc`-based, so they cannot cross threads). Work arrives over an mpsc
-//! channel; each job carries its own oneshot-style reply sender.
+//! are `Rc`-based, so they cannot cross threads) — or, under
+//! [`ExecutorBackend::Sim`], a deterministic pure-Rust stand-in runtime
+//! ([`crate::runtime::SimNetRuntime`]) that needs no artifacts. Work
+//! arrives over an mpsc channel; each job carries its own oneshot-style
+//! reply sender.
 //!
 //! The *client* device is a single executor (a phone has one accelerator);
 //! the *cloud* is a pool of executors behind one shared job queue.
+//!
+//! ## Failure containment
+//!
+//! A job that panics inside the runtime is caught
+//! (`std::panic::catch_unwind`) and returned as an error on that job's
+//! reply channel: one poisoned request cannot take down the executor
+//! thread, poison the shared `rx` mutex, or starve sibling requests. The
+//! real cause of a thread death (init failure, panic message) is parked
+//! in a shared last-error slot so [`ExecutorHandle`] errors carry it
+//! instead of a generic "executor is gone". [`ExecutorHandle::alive_threads`]
+//! exposes how many pool threads are still serving — the coordinator uses
+//! it to tell "one bad job" from "the pool is down" and degrade
+//! accordingly.
 
+use std::any::Any;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -16,7 +34,19 @@ use std::thread::JoinHandle;
 use anyhow::{anyhow, Context, Result};
 
 use crate::cnnergy::NetworkProfile;
-use crate::runtime::NetworkRuntime;
+use crate::runtime::{NetworkRuntime, SimNetRuntime};
+
+/// Which runtime an executor thread loads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecutorBackend {
+    /// Real AOT-compiled XLA executables through PJRT (requires
+    /// `artifacts/` and a working XLA build).
+    Pjrt,
+    /// Deterministic pure-Rust stand-in over the network topology
+    /// ([`crate::runtime::SimNetRuntime`]) — no artifacts, used by the
+    /// chaos e2e suite and artifact-free benches.
+    Sim,
+}
 
 /// A unit of work for a device.
 pub enum Job {
@@ -40,22 +70,47 @@ pub enum Job {
     Shutdown,
 }
 
+/// Last recorded cause of an executor-thread death (init failure or
+/// panic), shared between the threads and every handle.
+type LastError = Arc<Mutex<Option<String>>>;
+
+fn record_last_error(slot: &LastError, cause: String) {
+    *slot.lock().unwrap_or_else(|p| p.into_inner()) = Some(cause);
+}
+
 /// Handle for submitting jobs to one device (cheaply cloneable).
 #[derive(Clone)]
 pub struct ExecutorHandle {
     tx: Sender<Job>,
     label: &'static str,
+    last_error: LastError,
+    alive: Arc<AtomicUsize>,
 }
 
 impl ExecutorHandle {
+    /// The "executor is unreachable" error, carrying the real recorded
+    /// cause (init failure / panic message) when one exists instead of
+    /// only a generic label.
+    fn gone_error(&self, stage: &str) -> anyhow::Error {
+        let cause = self
+            .last_error
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .clone();
+        match cause {
+            Some(c) => anyhow!("{} executor {stage}: {c}", self.label),
+            None => anyhow!("{} executor {stage}", self.label),
+        }
+    }
+
     fn call(&self, make: impl FnOnce(Sender<Result<Vec<f32>>>) -> Job) -> Result<Vec<f32>> {
         let (reply_tx, reply_rx) = channel();
         self.tx
             .send(make(reply_tx))
-            .map_err(|_| anyhow!("{} executor is gone", self.label))?;
+            .map_err(|_| self.gone_error("is gone"))?;
         reply_rx
             .recv()
-            .map_err(|_| anyhow!("{} executor dropped reply", self.label))?
+            .map_err(|_| self.gone_error("dropped reply"))?
     }
 
     /// Run a client prefix; blocks until the device finishes.
@@ -76,10 +131,17 @@ impl ExecutorHandle {
                 splits,
                 reply: reply_tx,
             })
-            .map_err(|_| anyhow!("{} executor is gone", self.label))?;
+            .map_err(|_| self.gone_error("is gone"))?;
         reply_rx
             .recv()
-            .map_err(|_| anyhow!("{} executor dropped reply", self.label))?
+            .map_err(|_| self.gone_error("dropped reply"))?
+    }
+
+    /// Pool threads still serving. 0 means the device is down entirely
+    /// (every job will fail) — the coordinator's cue to degrade to
+    /// client-only mode rather than erroring request after request.
+    pub fn alive_threads(&self) -> usize {
+        self.alive.load(Ordering::SeqCst)
     }
 }
 
@@ -88,18 +150,21 @@ pub struct DeviceExecutor {
     tx: Sender<Job>,
     threads: Vec<JoinHandle<()>>,
     label: &'static str,
+    last_error: LastError,
+    alive: Arc<AtomicUsize>,
 }
 
 impl DeviceExecutor {
-    /// Spawn `pool` threads, each with its own PJRT client, all draining one
-    /// shared job queue. Each thread precompiles `warm_splits` before taking
-    /// work (a `warm_up` job through the queue would only reach one thread)
-    /// and, when `profile` is given, seeds its thread-local §IV-C schedule
-    /// cache from the shared compiled profile. Executor threads do not
-    /// evaluate the analytical model on the serving hot path (they run
-    /// compiled executables), so the seeding is defensive: any energy
-    /// evaluation that does land on these threads — diagnostics, future
-    /// per-request model queries — is derivation-free from the start.
+    /// Spawn `pool` threads, each with its own runtime (PJRT client or sim
+    /// stand-in per `backend`), all draining one shared job queue. Each
+    /// thread precompiles `warm_splits` before taking work (a `warm_up`
+    /// job through the queue would only reach one thread) and, when
+    /// `profile` is given, seeds its thread-local §IV-C schedule cache
+    /// from the shared compiled profile. Executor threads do not evaluate
+    /// the analytical model on the serving hot path (they run compiled
+    /// executables), so the seeding is defensive: any energy evaluation
+    /// that does land on these threads — diagnostics, future per-request
+    /// model queries — is derivation-free from the start.
     pub fn spawn(
         label: &'static str,
         artifacts_dir: PathBuf,
@@ -107,11 +172,14 @@ impl DeviceExecutor {
         pool: usize,
         warm_splits: Vec<usize>,
         profile: Option<Arc<NetworkProfile>>,
+        backend: ExecutorBackend,
     ) -> Result<Self> {
         assert!(pool >= 1);
         let (tx, rx) = channel::<Job>();
         let shared_rx = Arc::new(Mutex::new(rx));
         let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let last_error: LastError = Arc::new(Mutex::new(None));
+        let alive = Arc::new(AtomicUsize::new(0));
         let mut threads = Vec::with_capacity(pool);
         for i in 0..pool {
             let rx = shared_rx.clone();
@@ -120,10 +188,16 @@ impl DeviceExecutor {
             let warm = warm_splits.clone();
             let seed = profile.clone();
             let ready = ready_tx.clone();
+            let last_error = last_error.clone();
+            let alive = alive.clone();
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("{label}-exec-{i}"))
-                    .spawn(move || executor_loop(rx, &dir, &net, &warm, seed, ready))
+                    .spawn(move || {
+                        executor_loop(
+                            rx, &dir, &net, &warm, seed, ready, backend, label, last_error, alive,
+                        )
+                    })
                     .context("spawning executor thread")?,
             );
         }
@@ -136,13 +210,40 @@ impl DeviceExecutor {
                 .map_err(|_| anyhow!("{label}: executor died during init"))?
                 .with_context(|| format!("{label}: executor init"))?;
         }
-        Ok(DeviceExecutor { tx, threads, label })
+        Ok(DeviceExecutor {
+            tx,
+            threads,
+            label,
+            last_error,
+            alive,
+        })
     }
 
     pub fn handle(&self) -> ExecutorHandle {
         ExecutorHandle {
             tx: self.tx.clone(),
             label: self.label,
+            last_error: self.last_error.clone(),
+            alive: self.alive.clone(),
+        }
+    }
+
+    /// Pool threads still serving (see [`ExecutorHandle::alive_threads`]).
+    pub fn alive_threads(&self) -> usize {
+        self.alive.load(Ordering::SeqCst)
+    }
+
+    /// Chaos hook: tell every thread to stop without joining (takes
+    /// `&self`, so a served coordinator can kill its own pool mid-run).
+    /// Threads drain their Shutdown and exit; once the last one is gone,
+    /// `alive_threads()` reads 0 and handle sends fail.
+    pub fn kill(&self) {
+        record_last_error(
+            &self.last_error,
+            format!("{} pool killed (chaos)", self.label),
+        );
+        for _ in 0..self.threads.len() {
+            let _ = self.tx.send(Job::Shutdown);
         }
     }
 
@@ -163,6 +264,86 @@ impl Drop for DeviceExecutor {
     }
 }
 
+/// Best-effort extraction of a panic payload's message.
+fn panic_message(payload: &(dyn Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Run one job's body with panic containment: a panicking runtime turns
+/// into an `Err` on this job's reply instead of unwinding through the
+/// executor loop (which would kill the thread and poison the shared `rx`
+/// mutex for every sibling). The panic message is parked in the
+/// last-error slot so subsequent "executor is gone" errors explain
+/// themselves if the thread does die later.
+fn contained<T>(
+    label: &str,
+    last_error: &LastError,
+    f: impl FnOnce() -> Result<T>,
+) -> Result<T> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+        Ok(result) => result,
+        Err(payload) => {
+            let msg = panic_message(payload.as_ref());
+            record_last_error(last_error, format!("job panicked: {msg}"));
+            Err(anyhow!("{label} executor job panicked: {msg}"))
+        }
+    }
+}
+
+/// The runtime an executor thread drives (thread-local, never crosses
+/// threads — the PJRT variant is `Rc`-based).
+enum LoopRuntime {
+    Pjrt(NetworkRuntime),
+    Sim(SimNetRuntime),
+}
+
+impl LoopRuntime {
+    fn load(backend: ExecutorBackend, dir: &std::path::Path, network: &str) -> Result<Self> {
+        match backend {
+            ExecutorBackend::Pjrt => Ok(LoopRuntime::Pjrt(NetworkRuntime::load(dir, network)?)),
+            ExecutorBackend::Sim => Ok(LoopRuntime::Sim(SimNetRuntime::load(network)?)),
+        }
+    }
+
+    fn run_prefix(&self, split: usize, data: &[f32]) -> Result<Vec<f32>> {
+        match self {
+            LoopRuntime::Pjrt(rt) => rt.run_prefix(split, data),
+            LoopRuntime::Sim(rt) => rt.run_prefix(split, data),
+        }
+    }
+
+    fn run_suffix(&self, split: usize, data: &[f32]) -> Result<Vec<f32>> {
+        match self {
+            LoopRuntime::Pjrt(rt) => rt.run_suffix(split, data),
+            LoopRuntime::Sim(rt) => rt.run_suffix(split, data),
+        }
+    }
+
+    fn warm_up(&self, splits: &[usize]) -> Result<()> {
+        match self {
+            LoopRuntime::Pjrt(rt) => rt.warm_up(splits),
+            LoopRuntime::Sim(rt) => rt.warm_up(splits),
+        }
+    }
+}
+
+/// Decrements the pool's alive counter when the thread exits, however it
+/// exits.
+struct AliveGuard(Arc<AtomicUsize>);
+
+impl Drop for AliveGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
 fn executor_loop(
     rx: Arc<Mutex<Receiver<Job>>>,
     dir: &std::path::Path,
@@ -170,21 +351,32 @@ fn executor_loop(
     warm_splits: &[usize],
     profile: Option<Arc<NetworkProfile>>,
     ready: Sender<Result<()>>,
+    backend: ExecutorBackend,
+    label: &'static str,
+    last_error: LastError,
+    alive: Arc<AtomicUsize>,
 ) {
+    alive.fetch_add(1, Ordering::SeqCst);
+    let _alive = AliveGuard(alive);
     // Warm this thread's schedule cache from the shared compiled profile
     // before any work arrives (see `DeviceExecutor::spawn`).
     if let Some(p) = &profile {
         p.seed_thread_schedule_cache();
     }
-    // Each thread owns its own PJRT client + executable cache.
-    let runtime = match NetworkRuntime::load(dir, network) {
+    // Each thread owns its own runtime (PJRT client + executable cache,
+    // or the sim stand-in).
+    let runtime = match LoopRuntime::load(backend, dir, network) {
         Ok(r) => r,
         Err(e) => {
+            record_last_error(&last_error, format!("init failed: {e:#}"));
             let _ = ready.send(Err(e));
             return;
         }
     };
     let warmed = runtime.warm_up(warm_splits);
+    if let Err(e) = &warmed {
+        record_last_error(&last_error, format!("warm-up failed: {e:#}"));
+    }
     let failed = warmed.is_err();
     let _ = ready.send(warmed);
     if failed {
@@ -192,7 +384,9 @@ fn executor_loop(
     }
     loop {
         let job = {
-            let guard = rx.lock().unwrap();
+            // Tolerate a poisoned mutex: a sibling that died while holding
+            // the lock must not cascade into this thread.
+            let guard = rx.lock().unwrap_or_else(|p| p.into_inner());
             match guard.recv() {
                 Ok(j) => j,
                 Err(_) => return, // all senders gone
@@ -200,15 +394,108 @@ fn executor_loop(
         };
         match job {
             Job::Prefix { split, data, reply } => {
-                let _ = reply.send(runtime.run_prefix(split, &data));
+                let _ = reply.send(contained(label, &last_error, || {
+                    runtime.run_prefix(split, &data)
+                }));
             }
             Job::Suffix { split, data, reply } => {
-                let _ = reply.send(runtime.run_suffix(split, &data));
+                let _ = reply.send(contained(label, &last_error, || {
+                    runtime.run_suffix(split, &data)
+                }));
             }
             Job::WarmUp { splits, reply } => {
-                let _ = reply.send(runtime.warm_up(&splits));
+                let _ = reply.send(contained(label, &last_error, || runtime.warm_up(&splits)));
             }
             Job::Shutdown => return,
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::SIM_POISON;
+
+    fn sim_executor(label: &'static str, pool: usize) -> DeviceExecutor {
+        DeviceExecutor::spawn(
+            label,
+            PathBuf::from("unused"),
+            "tiny_alexnet".to_string(),
+            pool,
+            vec![],
+            None,
+            ExecutorBackend::Sim,
+        )
+        .unwrap()
+    }
+
+    fn image() -> Vec<f32> {
+        (0..32 * 32 * 3).map(|i| (i % 7) as f32 / 7.0).collect()
+    }
+
+    #[test]
+    fn sim_backend_serves_jobs() {
+        let exec = sim_executor("client", 1);
+        let h = exec.handle();
+        assert_eq!(h.alive_threads(), 1);
+        let act = h.run_prefix(3, image()).unwrap();
+        assert!(!act.is_empty());
+        let logits = h.run_suffix(3, act).unwrap();
+        assert!(!logits.is_empty());
+        h.warm_up(vec![0, 3, 11]).unwrap();
+    }
+
+    #[test]
+    fn poisoned_job_is_contained_and_reported() {
+        let exec = sim_executor("cloud", 2);
+        let h = exec.handle();
+        let mut poisoned = image();
+        poisoned[0] = SIM_POISON;
+        // The poisoned job fails with the real panic message...
+        let err = h.run_prefix(2, poisoned).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("poison"),
+            "panic cause lost: {err:#}"
+        );
+        // ...and the thread survives to serve the next request.
+        assert_eq!(h.alive_threads(), 2);
+        assert!(h.run_prefix(2, image()).is_ok());
+    }
+
+    #[test]
+    fn killed_pool_reports_itself_down_with_cause() {
+        let exec = sim_executor("cloud", 2);
+        let h = exec.handle();
+        assert!(h.run_prefix(1, image()).is_ok());
+        exec.kill();
+        // Threads drain their Shutdown and exit.
+        for _ in 0..200 {
+            if h.alive_threads() == 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert_eq!(h.alive_threads(), 0, "killed pool still alive");
+        let err = h.run_prefix(1, image()).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("killed"),
+            "kill cause lost: {err:#}"
+        );
+    }
+
+    #[test]
+    fn init_failure_carries_cause() {
+        // Unknown network: every thread fails at load; spawn surfaces it.
+        let err = DeviceExecutor::spawn(
+            "client",
+            PathBuf::from("unused"),
+            "not_a_net".to_string(),
+            1,
+            vec![],
+            None,
+            ExecutorBackend::Sim,
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("not_a_net"), "{err:#}");
     }
 }

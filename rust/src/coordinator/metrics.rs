@@ -43,6 +43,26 @@ pub struct MetricsSnapshot {
     /// proving no schedule derivation sneaks into the serving hot path
     /// (e.g. a future per-request model query bypassing the profile).
     pub schedule_misses_post_warm: u64,
+    /// Uplink/cloud retries across all requests (event-counted at retry
+    /// time, so abandoned requests' retries are included too).
+    pub retries_total: u64,
+    /// Transfers the faulty channel dropped mid-flight.
+    pub transfers_dropped: u64,
+    /// Sends rejected because the link was in a Markov outage window.
+    pub outage_rejections: u64,
+    /// Requests completed through the fully-in-situ fallback after the
+    /// channel/cloud path was exhausted.
+    pub fallback_fisc: u64,
+    /// Times the coordinator flipped into client-only degraded mode
+    /// (cloud pool down entirely). At most 1 per coordinator lifetime.
+    pub degraded_mode_entered: u64,
+    /// Retry loops abandoned because the request's remaining deadline
+    /// budget could not cover another attempt.
+    pub deadline_abandoned: u64,
+    /// Requests that could not be served even degraded.
+    pub failed_requests: u64,
+    /// Radio energy burnt on failed transfer attempts, joules.
+    pub wasted_retry_energy_j: f64,
     /// Modeled energy totals, joules.
     pub client_energy_j: f64,
     pub transmit_energy_j: f64,
@@ -145,6 +165,30 @@ impl MetricsSnapshot {
                 self.schedule_seeded, self.schedule_misses_post_warm
             ));
         }
+        if self.retries_total > 0 || self.transfers_dropped > 0 || self.outage_rejections > 0 {
+            s.push_str(&format!(
+                "channel faults    : {} retries | {} drops | {} outage rejections | {:.4} mJ wasted\n",
+                self.retries_total,
+                self.transfers_dropped,
+                self.outage_rejections,
+                self.wasted_retry_energy_j * 1e3
+            ));
+        }
+        if self.fallback_fisc > 0 {
+            s.push_str(&format!("fallback (FISC)   : {}\n", self.fallback_fisc));
+        }
+        if self.deadline_abandoned > 0 {
+            s.push_str(&format!(
+                "deadline abandoned: {}\n",
+                self.deadline_abandoned
+            ));
+        }
+        if self.degraded_mode_entered > 0 {
+            s.push_str("degraded mode     : client-only (cloud pool down)\n");
+        }
+        if self.failed_requests > 0 {
+            s.push_str(&format!("failed requests   : {}\n", self.failed_requests));
+        }
         s
     }
 }
@@ -208,8 +252,53 @@ impl Metrics {
         m.schedule_misses_post_warm += misses_post_warm;
     }
 
+    /// Record one uplink/cloud retry (event-counted at retry time).
+    pub fn record_retry(&self) {
+        self.lock().retries_total += 1;
+    }
+
+    /// Record one mid-flight transfer drop and the radio energy it wasted.
+    pub fn record_transfer_drop(&self, wasted_j: f64) {
+        let mut m = self.lock();
+        m.transfers_dropped += 1;
+        if wasted_j.is_finite() && wasted_j > 0.0 {
+            m.wasted_retry_energy_j += wasted_j;
+        }
+    }
+
+    /// Record one send rejected during an outage window.
+    pub fn record_outage_rejection(&self) {
+        self.lock().outage_rejections += 1;
+    }
+
+    /// Record one request completed through the FISC fallback.
+    pub fn record_fallback_fisc(&self) {
+        self.lock().fallback_fisc += 1;
+    }
+
+    /// Record the coordinator entering client-only degraded mode.
+    pub fn record_degraded_mode(&self) {
+        self.lock().degraded_mode_entered += 1;
+    }
+
+    /// Record one retry loop abandoned on a deadline budget.
+    pub fn record_deadline_abandoned(&self) {
+        self.lock().deadline_abandoned += 1;
+    }
+
+    /// Record one request that failed even degraded.
+    pub fn record_failed(&self) {
+        self.lock().failed_requests += 1;
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, MetricsSnapshot> {
+        // A worker that panicked while holding the lock must not take
+        // metrics down with it.
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
-        self.inner.lock().unwrap().clone()
+        self.lock().clone()
     }
 }
 
@@ -229,6 +318,10 @@ mod tests {
             client_energy_j: e,
             transmit_energy_j: e / 2.0,
             gamma_segment: Some(1),
+            decided_split: split,
+            retries: 0,
+            wasted_energy_j: 0.0,
+            fallback_fisc: false,
             t_decide: Duration::from_micros(2),
             t_client: Duration::from_millis(1),
             t_channel: Duration::from_millis(2),
@@ -303,6 +396,38 @@ mod tests {
         assert!(s.report().contains("schedule warm-up  : 16 seeded, 0 post-warm misses"));
         m.record_schedule_warm(8, 3);
         assert_eq!(m.snapshot().schedule_misses_post_warm, 3);
+    }
+
+    #[test]
+    fn failure_path_accounting() {
+        let m = Metrics::new();
+        let clean = m.snapshot();
+        assert_eq!(clean.retries_total, 0);
+        assert!(!clean.report().contains("channel faults"));
+        m.record_retry();
+        m.record_retry();
+        m.record_transfer_drop(2e-3);
+        m.record_transfer_drop(f64::NAN); // counted, energy ignored
+        m.record_outage_rejection();
+        m.record_fallback_fisc();
+        m.record_degraded_mode();
+        m.record_deadline_abandoned();
+        m.record_failed();
+        let s = m.snapshot();
+        assert_eq!(s.retries_total, 2);
+        assert_eq!(s.transfers_dropped, 2);
+        assert_eq!(s.outage_rejections, 1);
+        assert_eq!(s.fallback_fisc, 1);
+        assert_eq!(s.degraded_mode_entered, 1);
+        assert_eq!(s.deadline_abandoned, 1);
+        assert_eq!(s.failed_requests, 1);
+        assert!((s.wasted_retry_energy_j - 2e-3).abs() < 1e-15);
+        let report = s.report();
+        assert!(report.contains("channel faults"));
+        assert!(report.contains("fallback (FISC)   : 1"));
+        assert!(report.contains("degraded mode"));
+        assert!(report.contains("deadline abandoned: 1"));
+        assert!(report.contains("failed requests   : 1"));
     }
 
     #[test]

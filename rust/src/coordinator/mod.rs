@@ -70,15 +70,64 @@
 //! never invoke the mapper — [`MetricsSnapshot::schedule_seeded`] /
 //! [`MetricsSnapshot::schedule_misses_post_warm`] are the canary keeping
 //! it that way.
+//!
+//! ## The failure path (fault-tolerant serving)
+//!
+//! A real mobile uplink drops transfers, stalls, and blacks out; executor
+//! threads can die. The coordinator assumes all of it and resolves every
+//! admitted request to exactly one [`InferenceOutcome`] — `Ok`,
+//! `Degraded`, or `Failed` — one bad request never aborts its batch or
+//! the serve call:
+//!
+//! 1. **Fault injection.** [`CoordinatorConfig::faults`] installs a
+//!    seeded [`crate::channel::FaultModel`] on the simulated uplink
+//!    (per-transfer drops with partial-energy accounting, stalls at full
+//!    `P_Tx`, Markov up/down outage windows). The schedule is a pure
+//!    function of the fault seed, so chaos runs replay bit-for-bit.
+//! 2. **Retry/backoff.** [`CoordinatorConfig::retry`] (a
+//!    [`RetryPolicy`]) wraps the uplink send and the cloud-suffix call:
+//!    bounded attempts, exponential backoff with seeded jitter, and a
+//!    deadline-aware budget — a request carrying
+//!    [`InferenceRequest::deadline_s`] stops retrying while the deadline
+//!    is still meetable ([`MetricsSnapshot::deadline_abandoned`]).
+//! 3. **FISC fallback.** When the remote path is exhausted, the request
+//!    completes fully in situ (split := |L|, the paper's FISC arm) as a
+//!    `Degraded` outcome that accounts the energy *actually* spent: the
+//!    abandoned prefix, the full in-situ rerun, and the joules wasted on
+//!    failed transfers ([`InferenceResponse::wasted_energy_j`]).
+//! 4. **Degraded mode.** A cloud pool found dead
+//!    ([`ExecutorHandle::alive_threads`] == 0) latches the coordinator
+//!    into client-only mode: later requests route straight to FISC
+//!    without burning retries ([`Coordinator::is_degraded`],
+//!    [`MetricsSnapshot::degraded_mode_entered`]).
+//! 5. **Isolation.** Executor jobs run under panic containment (a
+//!    poisoned request fails alone; the thread and its siblings survive),
+//!    and executor-death errors carry the real recorded cause instead of
+//!    a generic "executor is gone".
+//!
+//! Only the client device dying makes a request `Failed` — there is no
+//! fallback below fully-in-situ. Counters:
+//! [`MetricsSnapshot::retries_total`],
+//! [`MetricsSnapshot::transfers_dropped`],
+//! [`MetricsSnapshot::outage_rejections`],
+//! [`MetricsSnapshot::fallback_fisc`],
+//! [`MetricsSnapshot::deadline_abandoned`],
+//! [`MetricsSnapshot::degraded_mode_entered`],
+//! [`MetricsSnapshot::failed_requests`],
+//! [`MetricsSnapshot::wasted_retry_energy_j`]. The chaos e2e suite
+//! (`rust/tests/chaos_e2e.rs`) drives every fault class through the
+//! artifact-free [`ExecutorBackend::Sim`] backend.
 
 pub mod batcher;
 pub mod executor;
 pub mod metrics;
 pub mod request;
+pub mod retry;
 pub mod server;
 
 pub use batcher::{Batcher, BatcherStats, BucketStats, Submit};
-pub use executor::{DeviceExecutor, ExecutorHandle};
+pub use executor::{DeviceExecutor, ExecutorBackend, ExecutorHandle};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use request::{InferenceRequest, InferenceResponse};
+pub use request::{InferenceFailure, InferenceOutcome, InferenceRequest, InferenceResponse};
+pub use retry::{RetryPolicy, RetryVerdict};
 pub use server::{Coordinator, CoordinatorConfig};

@@ -59,6 +59,20 @@ pub struct InferenceResponse {
     /// Envelope segment of the request's γ at decision time (`None` when
     /// the channel was degenerate or γ-bucketing did not apply).
     pub gamma_segment: Option<usize>,
+    /// The split the partition policy originally decided, before any
+    /// fault-driven rerouting. Equals `split` on the happy path; differs
+    /// when the coordinator fell back to FISC or was in degraded mode.
+    pub decided_split: usize,
+    /// Uplink/cloud retries this request consumed (0 = first try worked).
+    pub retries: u32,
+    /// Radio energy burnt on *failed* transfer attempts, joules (partial
+    /// transfers that dropped mid-flight). Not part of [`Self::e_cost_j`]'s
+    /// modeled cost but real battery drain — tracked separately so chaos
+    /// runs can reconcile it against `ChannelStats::wasted_energy_j`.
+    pub wasted_energy_j: f64,
+    /// The request completed via the fully-in-situ fallback (split forced
+    /// to |L|) after the channel/cloud path was exhausted.
+    pub fallback_fisc: bool,
     /// Wall-clock spent in each stage.
     pub t_decide: Duration,
     pub t_client: Duration,
@@ -85,6 +99,65 @@ impl InferenceResponse {
     }
 }
 
+/// A request the coordinator could not complete even degraded: the error
+/// chain plus what the attempt cost the battery.
+#[derive(Clone, Debug)]
+pub struct InferenceFailure {
+    pub id: u64,
+    /// Human-readable cause (retry exhaustion chain, executor panic, …).
+    pub error: String,
+    /// Radio energy burnt on failed transfer attempts, joules.
+    pub wasted_energy_j: f64,
+    /// Uplink/cloud attempts made before giving up.
+    pub attempts: u32,
+}
+
+/// Per-request outcome of fault-tolerant serving: every admitted request
+/// resolves to exactly one of these — one bad request never aborts its
+/// batch or the serve call.
+#[derive(Clone, Debug)]
+pub enum InferenceOutcome {
+    /// Served exactly as decided.
+    Ok(InferenceResponse),
+    /// Served, but not as decided: the coordinator fell back to FISC
+    /// (or was already in client-only degraded mode) after the
+    /// channel/cloud path failed. The response records the energy
+    /// actually spent, including the waste.
+    Degraded(InferenceResponse),
+    /// Could not be served at all (client executor failure on the
+    /// fallback path).
+    Failed(InferenceFailure),
+}
+
+impl InferenceOutcome {
+    pub fn id(&self) -> u64 {
+        match self {
+            InferenceOutcome::Ok(r) | InferenceOutcome::Degraded(r) => r.id,
+            InferenceOutcome::Failed(f) => f.id,
+        }
+    }
+
+    /// The response, when the request produced one (Ok or Degraded).
+    pub fn response(&self) -> Option<&InferenceResponse> {
+        match self {
+            InferenceOutcome::Ok(r) | InferenceOutcome::Degraded(r) => Some(r),
+            InferenceOutcome::Failed(_) => None,
+        }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        matches!(self, InferenceOutcome::Ok(_))
+    }
+
+    pub fn is_degraded(&self) -> bool {
+        matches!(self, InferenceOutcome::Degraded(_))
+    }
+
+    pub fn is_failed(&self) -> bool {
+        matches!(self, InferenceOutcome::Failed(_))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -101,6 +174,10 @@ mod tests {
             client_energy_j: 1e-3,
             transmit_energy_j: 2e-3,
             gamma_segment: None,
+            decided_split: 2,
+            retries: 0,
+            wasted_energy_j: 0.0,
+            fallback_fisc: false,
             t_decide: Duration::ZERO,
             t_client: Duration::ZERO,
             t_channel: Duration::ZERO,
@@ -109,5 +186,45 @@ mod tests {
         };
         assert_eq!(resp.top1(), 1);
         assert!((resp.e_cost_j() - 3e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn outcome_accessors() {
+        let resp = InferenceResponse {
+            id: 7,
+            logits: vec![1.0],
+            split: 11,
+            site: ExecutionSite::Client,
+            sparsity_in: 0.5,
+            transmit_bits: 0,
+            client_energy_j: 1e-3,
+            transmit_energy_j: 0.0,
+            gamma_segment: None,
+            decided_split: 4,
+            retries: 3,
+            wasted_energy_j: 2e-4,
+            fallback_fisc: true,
+            t_decide: Duration::ZERO,
+            t_client: Duration::ZERO,
+            t_channel: Duration::ZERO,
+            t_cloud: Duration::ZERO,
+            t_total: Duration::ZERO,
+        };
+        let ok = InferenceOutcome::Ok(resp.clone());
+        let degraded = InferenceOutcome::Degraded(resp);
+        let failed = InferenceOutcome::Failed(InferenceFailure {
+            id: 9,
+            error: "client executor job panicked".to_string(),
+            wasted_energy_j: 0.0,
+            attempts: 1,
+        });
+        assert!(ok.is_ok() && !ok.is_degraded() && !ok.is_failed());
+        assert!(degraded.is_degraded());
+        assert!(failed.is_failed());
+        assert_eq!(ok.id(), 7);
+        assert_eq!(failed.id(), 9);
+        assert!(ok.response().is_some());
+        assert!(failed.response().is_none());
+        assert!(degraded.response().unwrap().fallback_fisc);
     }
 }

@@ -1,0 +1,246 @@
+//! Bounded retry with exponential backoff for the coordinator's failure
+//! path.
+//!
+//! A [`RetryPolicy`] wraps the two fallible remote steps of
+//! [`crate::coordinator::Coordinator`]'s execute loop — the uplink send
+//! and the cloud-suffix call. It is deadline-aware: a request carrying
+//! `deadline_s` stops retrying as soon as the remaining budget cannot
+//! cover the backoff plus one more estimated attempt
+//! ([`RetryVerdict::DeadlineExhausted`]), letting the coordinator fall
+//! back to FISC while the deadline is still meetable.
+//!
+//! Like the channel simulator, real sleeping is scaled by
+//! [`RetryPolicy::sleep_scale`] (0 = tests/benches never sleep), and the
+//! jitter draw is supplied by the caller so schedules stay seeded and
+//! reproducible.
+
+use std::time::Duration;
+
+/// Bounded-attempt exponential backoff with jitter.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Total attempts including the first (1 = never retry).
+    pub max_attempts: u32,
+    /// Backoff before the second attempt, seconds; doubles per retry.
+    pub base_backoff_s: f64,
+    /// Cap on any single backoff, seconds.
+    pub max_backoff_s: f64,
+    /// Jitter fraction in `[0, 1]`: each backoff is shaved by up to this
+    /// fraction (`backoff × (1 − jitter·u)`), de-synchronizing retry
+    /// storms without ever exceeding the deterministic bound.
+    pub jitter: f64,
+    /// Scale on real sleeping (0 = decide backoffs but never sleep;
+    /// 1 = sleep them for real).
+    pub sleep_scale: f64,
+}
+
+impl Default for RetryPolicy {
+    /// Three attempts, 10 ms base doubling to a 500 ms cap, half-range
+    /// jitter, no real sleeping (the simulated channel does not make the
+    /// caller wait real time either).
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 3,
+            base_backoff_s: 0.01,
+            max_backoff_s: 0.5,
+            jitter: 0.5,
+            sleep_scale: 0.0,
+        }
+    }
+}
+
+/// Outcome of asking the policy whether to try again.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RetryVerdict {
+    /// Try again after `backoff_s`.
+    Retry { backoff_s: f64 },
+    /// The attempt budget is spent.
+    ExhaustedAttempts,
+    /// The request's remaining deadline budget cannot cover another
+    /// attempt.
+    DeadlineExhausted,
+}
+
+impl RetryPolicy {
+    /// A policy that never retries (every failure is terminal).
+    pub fn disabled() -> Self {
+        RetryPolicy {
+            max_attempts: 1,
+            base_backoff_s: 0.0,
+            max_backoff_s: 0.0,
+            jitter: 0.0,
+            sleep_scale: 0.0,
+        }
+    }
+
+    /// Clamp degenerate knobs (zero attempts → 1; NaN/negative times and
+    /// jitter → 0; jitter capped at 1).
+    pub fn sanitized(mut self) -> Self {
+        let clamp0 = |x: f64| if x.is_nan() || x < 0.0 { 0.0 } else { x };
+        self.max_attempts = self.max_attempts.max(1);
+        self.base_backoff_s = clamp0(self.base_backoff_s);
+        self.max_backoff_s = clamp0(self.max_backoff_s);
+        self.jitter = clamp0(self.jitter).min(1.0);
+        self.sleep_scale = clamp0(self.sleep_scale);
+        self
+    }
+
+    /// Backoff before attempt `attempts_made + 1`: exponential doubling
+    /// from the base, capped, shaved by the jitter sample
+    /// (`unit_sample ∈ [0, 1)`).
+    pub fn backoff_s(&self, attempts_made: u32, unit_sample: f64) -> f64 {
+        let exp = attempts_made.saturating_sub(1).min(52);
+        let raw = self.base_backoff_s.max(0.0) * (1u64 << exp) as f64;
+        let capped = raw.min(self.max_backoff_s.max(0.0));
+        let j = if self.jitter.is_nan() {
+            0.0
+        } else {
+            self.jitter.clamp(0.0, 1.0)
+        };
+        capped * (1.0 - j * unit_sample.clamp(0.0, 1.0))
+    }
+
+    /// Decide whether to retry after `attempts_made` failed attempts.
+    /// `est_attempt_s` is the caller's estimate of one more attempt's
+    /// duration; `remaining_budget_s` is the request's remaining deadline
+    /// budget (`None` = best effort, never deadline-limited).
+    pub fn verdict(
+        &self,
+        attempts_made: u32,
+        est_attempt_s: f64,
+        remaining_budget_s: Option<f64>,
+        unit_sample: f64,
+    ) -> RetryVerdict {
+        if attempts_made >= self.max_attempts {
+            return RetryVerdict::ExhaustedAttempts;
+        }
+        let backoff_s = self.backoff_s(attempts_made, unit_sample);
+        if let Some(budget) = remaining_budget_s {
+            let est = if est_attempt_s.is_finite() && est_attempt_s > 0.0 {
+                est_attempt_s
+            } else {
+                0.0
+            };
+            if backoff_s + est > budget {
+                return RetryVerdict::DeadlineExhausted;
+            }
+        }
+        RetryVerdict::Retry { backoff_s }
+    }
+
+    /// Sleep the scaled backoff (no-op at `sleep_scale` 0).
+    pub fn sleep(&self, backoff_s: f64) {
+        let s = backoff_s * self.sleep_scale;
+        if s > 0.0 && s.is_finite() {
+            std::thread::sleep(Duration::from_secs_f64(s));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let p = RetryPolicy {
+            max_attempts: 10,
+            base_backoff_s: 0.01,
+            max_backoff_s: 0.05,
+            jitter: 0.0,
+            sleep_scale: 0.0,
+        };
+        assert!((p.backoff_s(1, 0.0) - 0.01).abs() < 1e-12);
+        assert!((p.backoff_s(2, 0.0) - 0.02).abs() < 1e-12);
+        assert!((p.backoff_s(3, 0.0) - 0.04).abs() < 1e-12);
+        // Capped from the fourth retry on.
+        assert!((p.backoff_s(4, 0.0) - 0.05).abs() < 1e-12);
+        assert!((p.backoff_s(9, 0.0) - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jitter_only_shaves() {
+        let p = RetryPolicy {
+            jitter: 0.5,
+            ..RetryPolicy::default()
+        };
+        let full = p.backoff_s(1, 0.0);
+        for u in [0.0, 0.3, 0.999] {
+            let b = p.backoff_s(1, u);
+            assert!(b <= full + 1e-15, "jitter increased the backoff");
+            assert!(b >= full * 0.5 - 1e-15, "shaved more than the fraction");
+        }
+    }
+
+    #[test]
+    fn attempts_bound_respected() {
+        let p = RetryPolicy {
+            max_attempts: 3,
+            ..RetryPolicy::default()
+        };
+        assert!(matches!(p.verdict(1, 0.0, None, 0.0), RetryVerdict::Retry { .. }));
+        assert!(matches!(p.verdict(2, 0.0, None, 0.0), RetryVerdict::Retry { .. }));
+        assert_eq!(p.verdict(3, 0.0, None, 0.0), RetryVerdict::ExhaustedAttempts);
+        assert_eq!(
+            RetryPolicy::disabled().verdict(1, 0.0, None, 0.0),
+            RetryVerdict::ExhaustedAttempts
+        );
+    }
+
+    #[test]
+    fn deadline_budget_stops_retrying() {
+        let p = RetryPolicy {
+            max_attempts: 10,
+            base_backoff_s: 0.1,
+            max_backoff_s: 1.0,
+            jitter: 0.0,
+            sleep_scale: 0.0,
+        };
+        // Plenty of budget: retry.
+        assert!(matches!(
+            p.verdict(1, 0.2, Some(10.0), 0.0),
+            RetryVerdict::Retry { .. }
+        ));
+        // Backoff (0.1) + estimated attempt (0.2) exceeds the 0.25 budget.
+        assert_eq!(
+            p.verdict(1, 0.2, Some(0.25), 0.0),
+            RetryVerdict::DeadlineExhausted
+        );
+        // Already past the deadline.
+        assert_eq!(
+            p.verdict(1, 0.0, Some(-1.0), 0.0),
+            RetryVerdict::DeadlineExhausted
+        );
+        // Non-finite attempt estimates are ignored rather than poisonous.
+        assert!(matches!(
+            p.verdict(1, f64::INFINITY, Some(10.0), 0.0),
+            RetryVerdict::Retry { .. }
+        ));
+    }
+
+    #[test]
+    fn sanitized_fixes_degenerate_knobs() {
+        let p = RetryPolicy {
+            max_attempts: 0,
+            base_backoff_s: -1.0,
+            max_backoff_s: f64::NAN,
+            jitter: 4.0,
+            sleep_scale: -0.5,
+        }
+        .sanitized();
+        assert_eq!(p.max_attempts, 1);
+        assert_eq!(p.base_backoff_s, 0.0);
+        assert_eq!(p.max_backoff_s, 0.0);
+        assert_eq!(p.jitter, 1.0);
+        assert_eq!(p.sleep_scale, 0.0);
+        assert_eq!(p.backoff_s(1, 0.5), 0.0);
+    }
+
+    #[test]
+    fn zero_sleep_scale_never_sleeps() {
+        let p = RetryPolicy::default();
+        let t0 = std::time::Instant::now();
+        p.sleep(1000.0);
+        assert!(t0.elapsed() < Duration::from_millis(100));
+    }
+}

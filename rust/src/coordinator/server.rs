@@ -1,5 +1,5 @@
 //! The coordinator proper: request queue, worker pool, per-request
-//! partition decision and client→channel→cloud execution.
+//! partition decision and fault-tolerant client→channel→cloud execution.
 //!
 //! Every decision routes through the [`PartitionPolicy`] trait
 //! ([`EnergyPolicy`] over an engine shared via [`PolicyRegistry`]) — the
@@ -28,16 +28,31 @@
 //! shed before any probe/compute is spent and counted in
 //! [`crate::coordinator::MetricsSnapshot::shed_infeasible`]. Toggle with
 //! [`CoordinatorConfig::shed_infeasible`].
+//!
+//! ## The failure path
+//!
+//! With a [`FaultConfig`] installed ([`CoordinatorConfig::faults`]) the
+//! uplink drops, stalls and blacks out; executors can die or panic. The
+//! coordinator survives all of it per request (see
+//! [`crate::coordinator`] module docs): retries with
+//! [`CoordinatorConfig::retry`], falls back to fully in-situ execution
+//! when the remote path is exhausted, flips to client-only degraded mode
+//! when the cloud pool is down entirely, and resolves every admitted
+//! request to an [`InferenceOutcome`].
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
 use super::batcher::{Batcher, Submit};
 
-use crate::channel::{jittered_rate_bps, Channel, ChannelConfig, TransmitEnv};
+use crate::channel::{
+    jittered_rate_bps, Channel, ChannelConfig, ChannelError, ChannelStats, FaultConfig,
+    TransmitEnv,
+};
 use crate::cnn::Network;
 use crate::cnnergy::{with_global_schedule_cache, CnnErgy, NetworkProfile};
 use crate::compress::jpeg::compress_rgb;
@@ -49,9 +64,12 @@ use crate::partition::{
 };
 use crate::util::rng::Rng;
 
-use super::executor::{DeviceExecutor, ExecutorHandle};
+use super::executor::{DeviceExecutor, ExecutorBackend, ExecutorHandle};
 use super::metrics::Metrics;
-use super::request::{ExecutionSite, InferenceRequest, InferenceResponse};
+use super::request::{
+    ExecutionSite, InferenceFailure, InferenceOutcome, InferenceRequest, InferenceResponse,
+};
+use super::retry::{RetryPolicy, RetryVerdict};
 
 /// Coordinator construction parameters.
 #[derive(Clone, Debug)]
@@ -81,6 +99,15 @@ pub struct CoordinatorConfig {
     /// admission-time channel state (module docs). Only requests that
     /// carry a deadline are ever shed.
     pub shed_infeasible: bool,
+    /// Which runtime the executor threads load (PJRT artifacts or the
+    /// deterministic sim stand-in).
+    pub backend: ExecutorBackend,
+    /// Fault model installed on the simulated uplink (`None` = ideal
+    /// channel, as before).
+    pub faults: Option<FaultConfig>,
+    /// Retry/backoff policy wrapped around the uplink send and the cloud
+    /// suffix call.
+    pub retry: RetryPolicy,
     pub seed: u64,
 }
 
@@ -100,6 +127,9 @@ impl CoordinatorConfig {
             batch_max: 8,
             gamma_coherent: true,
             shed_infeasible: true,
+            backend: ExecutorBackend::Pjrt,
+            faults: None,
+            retry: RetryPolicy::default(),
             seed: cfg.seed,
         }
     }
@@ -123,6 +153,9 @@ pub struct Coordinator {
     client: DeviceExecutor,
     cloud: DeviceExecutor,
     channel: Arc<Channel>,
+    /// Latched when the cloud pool is found dead: every subsequent
+    /// request routes client-only (FISC) without burning retries first.
+    degraded: AtomicBool,
     pub metrics: Arc<Metrics>,
 }
 
@@ -173,6 +206,7 @@ impl Coordinator {
             1,
             config.warm_splits.clone(),
             Some(profile.clone()),
+            config.backend,
         )
         .context("spawning client executor")?;
         let cloud = DeviceExecutor::spawn(
@@ -182,12 +216,14 @@ impl Coordinator {
             config.cloud_pool.max(1),
             config.warm_splits.clone(),
             Some(profile.clone()),
+            config.backend,
         )
         .context("spawning cloud executor pool")?;
         let channel_config = ChannelConfig {
             env: config.env,
             jitter: config.jitter,
             time_scale: config.time_scale,
+            faults: config.faults,
         };
         channel_config
             .validate()
@@ -203,6 +239,7 @@ impl Coordinator {
             client,
             cloud,
             channel,
+            degraded: AtomicBool::new(false),
             metrics,
         })
     }
@@ -223,6 +260,35 @@ impl Coordinator {
 
     pub fn network(&self) -> &Network {
         &self.net
+    }
+
+    /// Snapshot of the simulated uplink's accounting (delivered/dropped
+    /// transfers, wasted joules, stall airtime).
+    pub fn channel_stats(&self) -> ChannelStats {
+        self.channel.stats()
+    }
+
+    /// Handle to the client device executor.
+    pub fn client_handle(&self) -> ExecutorHandle {
+        self.client.handle()
+    }
+
+    /// Handle to the cloud executor pool.
+    pub fn cloud_handle(&self) -> ExecutorHandle {
+        self.cloud.handle()
+    }
+
+    /// Chaos hook: kill the cloud pool (threads exit, handles start
+    /// failing). The next request that notices routes the coordinator
+    /// into client-only degraded mode.
+    pub fn kill_cloud_pool(&self) {
+        self.cloud.kill();
+    }
+
+    /// Whether the coordinator has latched into client-only degraded mode
+    /// (cloud pool found dead).
+    pub fn is_degraded(&self) -> bool {
+        self.degraded.load(Ordering::SeqCst)
     }
 
     /// Number of admission lanes: one per envelope segment plus an
@@ -285,12 +351,25 @@ impl Coordinator {
     }
 
     /// Serve one request synchronously at the configured channel state.
+    /// Compatibility surface over [`Self::process_outcome`]: a `Degraded`
+    /// outcome is still a response; only `Failed` becomes an error.
     pub fn process(
         &self,
         req: &InferenceRequest,
         client: &ExecutorHandle,
         cloud: &ExecutorHandle,
     ) -> Result<InferenceResponse> {
+        outcome_into_result(self.process_outcome(req, client, cloud))
+    }
+
+    /// Serve one request synchronously, resolving it to an
+    /// [`InferenceOutcome`].
+    pub fn process_outcome(
+        &self,
+        req: &InferenceRequest,
+        client: &ExecutorHandle,
+        cloud: &ExecutorHandle,
+    ) -> InferenceOutcome {
         let t_start = Instant::now();
 
         // 1. Probe the JPEG-compressed input (Alg. 2 line 1): yields both
@@ -318,10 +397,13 @@ impl Coordinator {
         )
     }
 
-    /// Serve a batch of requests taken together from the admission queue at
-    /// one shared channel state: probe every input, make ONE batched
-    /// partition decision (the envelope candidates are evaluated once and
-    /// reused across the batch), then execute each request.
+    /// Serve a batch of requests taken together from the admission queue:
+    /// probe every input, decide, then execute each request. When every
+    /// request rides the coordinator's configured channel state, the
+    /// envelope candidates are evaluated ONCE and reused across the batch
+    /// (`decide_batch`); a request carrying its own env is decided at
+    /// *its* channel state, never the coordinator's (per-request envs
+    /// disable the shared-state fast path for the batch).
     pub fn process_batch(
         &self,
         reqs: &[InferenceRequest],
@@ -336,28 +418,39 @@ impl Coordinator {
         let input_bits: Vec<f64> = probes.iter().map(|p| p.bits as f64).collect();
         let t_decide_start = Instant::now();
         let mut decisions = Vec::with_capacity(reqs.len());
-        let ctx = DecisionContext::from_input_bits(0.0, self.config.env);
-        self.policy.decide_batch(&input_bits, &ctx, &mut decisions);
+        if reqs.iter().any(|r| r.env.is_some()) {
+            // Mixed channel states: the batched fast path would price every
+            // request at the coordinator env and silently mis-split the
+            // ones that reported their own. Decide each at its own state.
+            for (req, bits) in reqs.iter().zip(&input_bits) {
+                let env = req.env.unwrap_or(self.config.env);
+                let ctx = DecisionContext::from_input_bits(*bits, env);
+                decisions.push(self.policy.decide(&ctx));
+            }
+        } else {
+            let ctx = DecisionContext::from_input_bits(0.0, self.config.env);
+            self.policy.decide_batch(&input_bits, &ctx, &mut decisions);
+        }
         // The whole batch shares one decision pass; attribute the per-batch
         // cost evenly so per-request accounting stays meaningful.
         let t_decide = t_decide_start.elapsed() / reqs.len().max(1) as u32;
-        let segment = self.gamma_segment(&self.config.env);
 
         reqs.iter()
             .zip(&probes)
             .zip(&decisions)
             .map(|((req, probe), decision)| {
-                self.execute(
+                let env = req.env.unwrap_or(self.config.env);
+                outcome_into_result(self.execute(
                     req,
                     decision,
                     probe.bits,
                     probe.sparsity,
-                    segment,
+                    self.gamma_segment(&env),
                     t_start,
                     t_decide,
                     client,
                     cloud,
-                )
+                ))
             })
             .collect()
     }
@@ -365,14 +458,15 @@ impl Coordinator {
     /// Serve one γ-coherent admission batch: every request carries its own
     /// channel state, but all states share one envelope segment, so each
     /// decision skips the breakpoint search while staying bit-for-bit
-    /// equal to the per-request path.
+    /// equal to the per-request path. Each request resolves independently
+    /// — one failure never aborts its batch.
     fn process_admitted_batch(
         &self,
         bucket: usize,
         items: &[(InferenceRequest, TransmitEnv)],
         client: &ExecutorHandle,
         cloud: &ExecutorHandle,
-    ) -> Result<Vec<InferenceResponse>> {
+    ) -> Vec<InferenceOutcome> {
         let t_start = Instant::now();
         items
             .iter()
@@ -403,7 +497,11 @@ impl Coordinator {
             .collect()
     }
 
-    /// Execute one decided request: client prefix → channel → cloud suffix.
+    /// Execute one decided request through the fault-tolerant path:
+    /// client prefix → uplink (with retry) → cloud suffix (with retry),
+    /// falling back to fully in-situ execution when the remote path is
+    /// exhausted. Every request resolves to an outcome; only the client
+    /// executor dying can make one `Failed`.
     #[allow(clippy::too_many_arguments)]
     fn execute(
         &self,
@@ -413,54 +511,239 @@ impl Coordinator {
         sparsity_in: f64,
         gamma_segment: Option<usize>,
         t_start: Instant,
-        t_decide: std::time::Duration,
+        t_decide: Duration,
         client: &ExecutorHandle,
         cloud: &ExecutorHandle,
-    ) -> Result<InferenceResponse> {
+    ) -> InferenceOutcome {
         let n_layers = self.partitioner.num_layers();
-        let split = self.config.force_split.unwrap_or(decision.l_opt);
+        let decided_split = self.config.force_split.unwrap_or(decision.l_opt);
+        // Client-only degraded mode: don't burn retries on a cloud pool we
+        // already know is dead — route straight to FISC.
+        let degraded_route = decided_split < n_layers && self.is_degraded();
+        let split = if degraded_route { n_layers } else { decided_split };
+        let retry = self.config.retry.sanitized();
+        // Per-request backoff jitter stream: a pure function of (seed,
+        // request id), so fault schedules replay bit-for-bit.
+        let mut backoff_rng = Rng::new(
+            self.config
+                .seed
+                .wrapping_add(req.id.wrapping_mul(0xA24B_AED4_963E_E407)),
+        );
+        let mut retries = 0u32;
+        let mut wasted_energy_j = 0.0f64;
 
         // 3. Client prefix execution (layers 1..=split) on the device.
         let t_client_start = Instant::now();
         let activation = if split > 0 {
-            client.run_prefix(split, req.tensor.clone())?
+            match client.run_prefix(split, req.tensor.clone()) {
+                Ok(a) => a,
+                Err(e) => {
+                    // The client device is the one thing there is no
+                    // fallback for.
+                    self.metrics.record_failed();
+                    return InferenceOutcome::Failed(InferenceFailure {
+                        id: req.id,
+                        error: format!("client prefix (split {split}): {e:#}"),
+                        wasted_energy_j,
+                        attempts: 0,
+                    });
+                }
+            }
         } else {
             Vec::new()
         };
         let t_client = t_client_start.elapsed();
 
-        // 4. Ship data over the (simulated) uplink.
+        // 4. Ship data over the (simulated) uplink, retrying per policy.
         let t_chan_start = Instant::now();
-        let (transmit_bits, transmit_energy_j, quantized) = if split == 0 {
+        let (payload_bits, quantized) = if split == 0 {
             // FCC: upload the JPEG-compressed image.
-            let (e, _) = self.channel.send(probe_bits);
-            (probe_bits, e, None)
+            (probe_bits, None)
         } else if split < n_layers {
             // Partitioned: quantize + RLC-encode the activation for real.
             let (q, scale) = rlc::quantize(&activation, 8);
             let enc = rlc::encode(&q, 8);
             let bits = enc.len_bits() as u64;
-            let (e, _) = self.channel.send(bits);
-            (bits, e, Some((enc, scale)))
+            (bits, Some((enc, scale)))
         } else {
             // FISC: only the class index comes back.
-            let (e, _) = self.channel.send(FISC_OUTPUT_BITS as u64);
-            (FISC_OUTPUT_BITS as u64, e, None)
+            (FISC_OUTPUT_BITS as u64, None)
         };
+        // One more attempt costs about this much air — feeds the
+        // deadline-aware retry verdict.
+        let est_attempt_s = {
+            let t = self.config.env.time_s(payload_bits as f64);
+            if t.is_finite() {
+                t
+            } else {
+                0.0
+            }
+        };
+        let mut attempts = 0u32;
+        let mut sent: Option<f64> = None;
+        let mut last_send_err: Option<ChannelError> = None;
+        loop {
+            attempts += 1;
+            match self.channel.send(payload_bits) {
+                Ok((energy_j, _airtime_s)) => {
+                    sent = Some(energy_j);
+                    break;
+                }
+                Err(err) => {
+                    match err {
+                        ChannelError::Dropped {
+                            wasted_energy_j: w, ..
+                        } => {
+                            wasted_energy_j += w;
+                            self.metrics.record_transfer_drop(w);
+                        }
+                        ChannelError::Outage => self.metrics.record_outage_rejection(),
+                    }
+                    last_send_err = Some(err);
+                    let budget = req
+                        .deadline_s
+                        .map(|d| d - t_start.elapsed().as_secs_f64());
+                    match retry.verdict(attempts, est_attempt_s, budget, backoff_rng.next_f64()) {
+                        RetryVerdict::Retry { backoff_s } => {
+                            retries += 1;
+                            self.metrics.record_retry();
+                            retry.sleep(backoff_s);
+                        }
+                        RetryVerdict::ExhaustedAttempts => break,
+                        RetryVerdict::DeadlineExhausted => {
+                            self.metrics.record_deadline_abandoned();
+                            break;
+                        }
+                    }
+                }
+            }
+        }
         let t_channel = t_chan_start.elapsed();
 
-        // 5. Cloud suffix execution (layers split+1..).
+        let transmit_energy_j = match sent {
+            Some(e) => e,
+            None if split == n_layers => {
+                // FISC plan whose class-index report could not be shipped:
+                // the answer is already local, so finish degraded rather
+                // than throwing the computed logits away.
+                self.metrics.record_fallback_fisc();
+                return InferenceOutcome::Degraded(InferenceResponse {
+                    id: req.id,
+                    logits: activation,
+                    split,
+                    site: ExecutionSite::Client,
+                    sparsity_in,
+                    transmit_bits: 0,
+                    client_energy_j: self.partitioner.client_energy_j(split),
+                    transmit_energy_j: 0.0,
+                    gamma_segment,
+                    decided_split,
+                    retries,
+                    wasted_energy_j,
+                    fallback_fisc: true,
+                    t_decide,
+                    t_client,
+                    t_channel,
+                    t_cloud: Duration::ZERO,
+                    t_total: t_start.elapsed(),
+                });
+            }
+            None => {
+                // Remote path exhausted before the payload ever arrived:
+                // fall back to fully in-situ execution.
+                let cause = match last_send_err {
+                    Some(e) => format!("uplink exhausted after {attempts} attempts: {e}"),
+                    None => format!("uplink exhausted after {attempts} attempts"),
+                };
+                return self.fisc_fallback(FallbackCtx {
+                    req,
+                    cause,
+                    decided_split,
+                    prefix_split: split,
+                    gamma_segment,
+                    sparsity_in,
+                    retries,
+                    wasted_energy_j,
+                    t_start,
+                    t_decide,
+                    t_client,
+                    t_channel,
+                    client,
+                });
+            }
+        };
+        let transmit_bits = payload_bits;
+
+        // 5. Cloud suffix execution (layers split+1..), retrying per
+        //    policy; a dead pool flips the coordinator into degraded mode.
         let t_cloud_start = Instant::now();
-        let logits = if split == 0 {
-            cloud.run_suffix(0, req.tensor.clone())?
-        } else if split < n_layers {
-            let (enc, scale) = quantized.unwrap();
-            // The cloud decodes the RLC stream and dequantizes.
-            let q = rlc::decode(&enc, 8);
-            let dequant: Vec<f32> = q.iter().map(|&v| v as f32 * scale).collect();
-            cloud.run_suffix(split, dequant)?
-        } else {
+        let logits = if split == n_layers {
             activation
+        } else {
+            let suffix_input: Vec<f32> = if split == 0 {
+                req.tensor.clone()
+            } else {
+                let (enc, scale) = quantized.expect("partitioned split carries encoding");
+                // The cloud decodes the RLC stream and dequantizes.
+                let q = rlc::decode(&enc, 8);
+                q.iter().map(|&v| v as f32 * scale).collect()
+            };
+            let mut cloud_attempts = 0u32;
+            let outcome = loop {
+                cloud_attempts += 1;
+                match cloud.run_suffix(split, suffix_input.clone()) {
+                    Ok(l) => break Ok(l),
+                    Err(e) => {
+                        if cloud.alive_threads() == 0 {
+                            // The whole pool is gone, not one bad call:
+                            // latch degraded mode so later requests skip
+                            // the remote path entirely.
+                            if !self.degraded.swap(true, Ordering::SeqCst) {
+                                self.metrics.record_degraded_mode();
+                            }
+                            break Err(e);
+                        }
+                        let budget = req
+                            .deadline_s
+                            .map(|d| d - t_start.elapsed().as_secs_f64());
+                        match retry.verdict(cloud_attempts, 0.0, budget, backoff_rng.next_f64())
+                        {
+                            RetryVerdict::Retry { backoff_s } => {
+                                retries += 1;
+                                self.metrics.record_retry();
+                                retry.sleep(backoff_s);
+                            }
+                            RetryVerdict::ExhaustedAttempts => break Err(e),
+                            RetryVerdict::DeadlineExhausted => {
+                                self.metrics.record_deadline_abandoned();
+                                break Err(e);
+                            }
+                        }
+                    }
+                }
+            };
+            match outcome {
+                Ok(l) => l,
+                Err(e) => {
+                    return self.fisc_fallback(FallbackCtx {
+                        req,
+                        cause: format!(
+                            "cloud suffix exhausted after {cloud_attempts} attempts: {e:#}"
+                        ),
+                        decided_split,
+                        prefix_split: split,
+                        gamma_segment,
+                        sparsity_in,
+                        retries,
+                        wasted_energy_j,
+                        t_start,
+                        t_decide,
+                        t_client,
+                        t_channel,
+                        client,
+                    });
+                }
+            }
         };
         let t_cloud = t_cloud_start.elapsed();
 
@@ -471,7 +754,10 @@ impl Coordinator {
         } else {
             ExecutionSite::Partitioned
         };
-        Ok(InferenceResponse {
+        if degraded_route {
+            self.metrics.record_fallback_fisc();
+        }
+        let resp = InferenceResponse {
             id: req.id,
             logits,
             split,
@@ -481,23 +767,86 @@ impl Coordinator {
             client_energy_j: self.partitioner.client_energy_j(split),
             transmit_energy_j,
             gamma_segment,
+            decided_split,
+            retries,
+            wasted_energy_j,
+            fallback_fisc: degraded_route,
             t_decide,
             t_client,
             t_channel,
             t_cloud,
             t_total: t_start.elapsed(),
-        })
+        };
+        if degraded_route {
+            InferenceOutcome::Degraded(resp)
+        } else {
+            InferenceOutcome::Ok(resp)
+        }
     }
 
-    /// Serve a batch of requests through the admission queue + worker pool;
-    /// responses are returned in request order and recorded in
-    /// [`Self::metrics`]. Per-request channel states are assigned at
-    /// admission (deterministically, from the configured seed) and each
-    /// request is queued in its γ-segment's lane; workers drain
-    /// single-segment batches. Requests whose deadline is provably
-    /// infeasible at their admission-time channel state are shed (module
-    /// docs) and omitted from the returned responses.
-    pub fn serve(&self, requests: Vec<InferenceRequest>) -> Result<Vec<InferenceResponse>> {
+    /// Complete a request fully in situ after the remote path failed: run
+    /// all layers on the client and account the energy actually spent —
+    /// the already-run prefix, the full FISC pass, and the joules wasted
+    /// on failed transfers.
+    fn fisc_fallback(&self, ctx: FallbackCtx<'_>) -> InferenceOutcome {
+        let n_layers = self.partitioner.num_layers();
+        let t_fb_start = Instant::now();
+        match ctx.client.run_prefix(n_layers, ctx.req.tensor.clone()) {
+            Ok(logits) => {
+                self.metrics.record_fallback_fisc();
+                // Energy actually spent client-side: the abandoned prefix
+                // (layers 1..=prefix_split) plus the full in-situ rerun.
+                let spent_prefix_j = if ctx.prefix_split > 0 && ctx.prefix_split < n_layers {
+                    self.partitioner.client_energy_j(ctx.prefix_split)
+                } else {
+                    0.0
+                };
+                InferenceOutcome::Degraded(InferenceResponse {
+                    id: ctx.req.id,
+                    logits,
+                    split: n_layers,
+                    site: ExecutionSite::Client,
+                    sparsity_in: ctx.sparsity_in,
+                    transmit_bits: 0,
+                    client_energy_j: spent_prefix_j
+                        + self.partitioner.client_energy_j(n_layers),
+                    transmit_energy_j: 0.0,
+                    gamma_segment: ctx.gamma_segment,
+                    decided_split: ctx.decided_split,
+                    retries: ctx.retries,
+                    wasted_energy_j: ctx.wasted_energy_j,
+                    fallback_fisc: true,
+                    t_decide: ctx.t_decide,
+                    t_client: ctx.t_client + t_fb_start.elapsed(),
+                    t_channel: ctx.t_channel,
+                    t_cloud: Duration::ZERO,
+                    t_total: ctx.t_start.elapsed(),
+                })
+            }
+            Err(e) => {
+                self.metrics.record_failed();
+                InferenceOutcome::Failed(InferenceFailure {
+                    id: ctx.req.id,
+                    error: format!("{}; FISC fallback failed: {e:#}", ctx.cause),
+                    wasted_energy_j: ctx.wasted_energy_j,
+                    attempts: ctx.retries + 1,
+                })
+            }
+        }
+    }
+
+    /// Serve a batch of requests through the admission queue + worker
+    /// pool; outcomes are returned in request order, and every response
+    /// (Ok or Degraded) is recorded in [`Self::metrics`]. Per-request
+    /// channel states are assigned at admission (deterministically, from
+    /// the configured seed) and each request is queued in its γ-segment's
+    /// lane; workers drain single-segment batches. Requests whose deadline
+    /// is provably infeasible at their admission-time channel state are
+    /// shed (module docs) and omitted from the returned outcomes. The
+    /// outer `Result` is infrastructure only (a worker thread dying, the
+    /// admission queue closing early) — per-request failures are
+    /// [`InferenceOutcome::Failed`] entries, never an `Err`.
+    pub fn serve(&self, requests: Vec<InferenceRequest>) -> Result<Vec<InferenceOutcome>> {
         let n = requests.len();
         let id_base = requests.first().map(|r| r.id).unwrap_or(0);
         let mut shed = 0usize;
@@ -506,7 +855,7 @@ impl Coordinator {
         let batcher: Arc<Batcher<(InferenceRequest, TransmitEnv)>> = Arc::new(
             Batcher::with_buckets((2 * self.config.workers).max(4), self.admission_buckets()),
         );
-        let results: Arc<Mutex<Vec<Option<InferenceResponse>>>> =
+        let results: Arc<Mutex<Vec<Option<InferenceOutcome>>>> =
             Arc::new(Mutex::new((0..n).map(|_| None).collect()));
 
         std::thread::scope(|scope| -> Result<()> {
@@ -517,7 +866,7 @@ impl Coordinator {
                 let results = results.clone();
                 let client = self.client.handle();
                 let cloud = self.cloud.handle();
-                handles.push(scope.spawn(move || -> Result<()> {
+                handles.push(scope.spawn(move || {
                     // Warm this worker's thread-local schedule cache from
                     // the shared compiled profile before taking work, and
                     // snapshot the miss counter: the post-warm-up delta is
@@ -526,29 +875,26 @@ impl Coordinator {
                     // (decisions slice precomputed tables only).
                     let seeded = self.profile.seed_thread_schedule_cache();
                     let misses_before = with_global_schedule_cache(|c| c.misses());
-                    let drain = || -> Result<()> {
-                        // Drain whole single-lane batches so each batch
-                        // shares one envelope segment (γ-coherence under
-                        // jitter).
-                        while let Some((bucket, batch)) = batcher.take_batch_bucketed(batch_max) {
-                            let items: Vec<(InferenceRequest, TransmitEnv)> =
-                                batch.into_iter().map(|(item, _queued_for)| item).collect();
-                            self.metrics.record_batch(bucket, items.len());
-                            for resp in
-                                self.process_admitted_batch(bucket, &items, &client, &cloud)?
-                            {
-                                let idx = (resp.id - id_base) as usize;
-                                self.metrics.record(&resp);
-                                results.lock().unwrap()[idx] = Some(resp);
+                    // Drain whole single-lane batches so each batch shares
+                    // one envelope segment (γ-coherence under jitter).
+                    while let Some((bucket, batch)) = batcher.take_batch_bucketed(batch_max) {
+                        let items: Vec<(InferenceRequest, TransmitEnv)> =
+                            batch.into_iter().map(|(item, _queued_for)| item).collect();
+                        self.metrics.record_batch(bucket, items.len());
+                        for outcome in
+                            self.process_admitted_batch(bucket, &items, &client, &cloud)
+                        {
+                            let idx = (outcome.id() - id_base) as usize;
+                            if let Some(resp) = outcome.response() {
+                                self.metrics.record(resp);
                             }
+                            results.lock().unwrap_or_else(|p| p.into_inner())[idx] =
+                                Some(outcome);
                         }
-                        Ok(())
-                    };
-                    let outcome = drain();
+                    }
                     let misses_after = with_global_schedule_cache(|c| c.misses());
                     self.metrics
                         .record_schedule_warm(seeded, misses_after - misses_before);
-                    outcome
                 }));
             }
             // Producer: assign each request its admission-time channel
@@ -574,24 +920,71 @@ impl Coordinator {
             }
             batcher.close();
             for h in handles {
-                h.join().map_err(|_| anyhow!("worker panicked"))??;
+                h.join().map_err(|_| anyhow!("worker panicked"))?;
             }
             Ok(())
         })?;
 
-        let collected: Vec<InferenceResponse> = Arc::try_unwrap(results)
+        let collected: Vec<InferenceOutcome> = Arc::try_unwrap(results)
             .map_err(|_| anyhow!("results still shared"))?
             .into_inner()
-            .unwrap()
+            .unwrap_or_else(|p| p.into_inner())
             .into_iter()
             .flatten()
             .collect();
         if collected.len() + shed != n {
             return Err(anyhow!(
-                "missing responses: served {} + shed {shed} of {n}",
+                "missing outcomes: resolved {} + shed {shed} of {n}",
                 collected.len()
             ));
         }
         Ok(collected)
+    }
+
+    /// Compatibility surface over [`Self::serve`] for callers that expect
+    /// every request to produce a response: degraded responses pass
+    /// through; the first `Failed` outcome becomes an error.
+    pub fn serve_responses(
+        &self,
+        requests: Vec<InferenceRequest>,
+    ) -> Result<Vec<InferenceResponse>> {
+        self.serve(requests)?
+            .into_iter()
+            .map(outcome_into_result)
+            .collect()
+    }
+}
+
+/// Everything `fisc_fallback` needs to finish a request in situ.
+struct FallbackCtx<'a> {
+    req: &'a InferenceRequest,
+    /// Why the remote path was abandoned (joined into the failure error
+    /// if even the fallback fails).
+    cause: String,
+    decided_split: usize,
+    /// The prefix already executed on the client before falling back.
+    prefix_split: usize,
+    gamma_segment: Option<usize>,
+    sparsity_in: f64,
+    retries: u32,
+    wasted_energy_j: f64,
+    t_start: Instant,
+    t_decide: Duration,
+    t_client: Duration,
+    t_channel: Duration,
+    client: &'a ExecutorHandle,
+}
+
+/// Collapse an outcome for callers that treat any served response as
+/// success: only `Failed` becomes an error.
+fn outcome_into_result(outcome: InferenceOutcome) -> Result<InferenceResponse> {
+    match outcome {
+        InferenceOutcome::Ok(r) | InferenceOutcome::Degraded(r) => Ok(r),
+        InferenceOutcome::Failed(f) => Err(anyhow!(
+            "request {} failed after {} attempts: {}",
+            f.id,
+            f.attempts,
+            f.error
+        )),
     }
 }

@@ -259,7 +259,7 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
         .collect();
 
     let t0 = std::time::Instant::now();
-    let responses = coord.serve(requests)?;
+    let responses = coord.serve_responses(requests)?;
     let wall = t0.elapsed();
 
     println!("{}", coord.metrics.snapshot().report());

@@ -9,10 +9,17 @@
 //! thread that compiled them; the coordinator gives each logical device
 //! (client accelerator, cloud accelerator) its own executor thread
 //! (see [`crate::coordinator`]).
+//!
+//! [`simnet`] is the artifact-free deterministic stand-in backend
+//! (selected via the coordinator's `ExecutorBackend::Sim`): same
+//! prefix/suffix surface, pure Rust, used by the chaos e2e suite and the
+//! serving bench when no artifacts exist.
 
 pub mod manifest;
 pub mod pjrt;
+pub mod simnet;
 pub mod xla_shim;
 
 pub use manifest::{Manifest, ManifestLayer, ManifestNetwork};
 pub use pjrt::{Executable, NetworkRuntime, Runtime};
+pub use simnet::{SimNetRuntime, SIM_POISON};

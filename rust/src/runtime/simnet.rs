@@ -1,0 +1,214 @@
+//! Deterministic pure-Rust executor backend (no PJRT, no artifacts).
+//!
+//! The real executor stack runs AOT-compiled XLA executables through PJRT
+//! ([`super::pjrt`]), which needs `artifacts/` and a working XLA build —
+//! neither exists in the offline environment. [`SimNetRuntime`] is a
+//! stand-in with the same prefix/suffix surface over the same
+//! [`crate::cnn::Network`] topology: each layer is a fixed sparse mixing
+//! of its input (4 hashed taps per output element, ReLU-like cutoff,
+//! bounded squash), so
+//!
+//! * outputs have the exact per-layer shapes of the manifest topology
+//!   (`Layer::out_elems`), so the RLC/quantize path sees realistic
+//!   volumes;
+//! * `run_suffix(split, run_prefix(split, x)) == run_suffix(0, x)` for
+//!   every split — the partition-invariance the PJRT path gets from real
+//!   executables holds by construction, because both sides apply the
+//!   same deterministic layer function;
+//! * the ReLU-like cutoff yields genuinely sparse activations, so RLC
+//!   compression and the sparsity probe behave like on real networks;
+//! * everything is a pure function of the input — bit-reproducible, no
+//!   RNG, no wall clock.
+//!
+//! This is what lets the chaos/fault-injection e2e suite and the serving
+//! bench drive the *entire* coordinator failure path without artifacts.
+//!
+//! The backend also carries a deliberate poison hook: a tensor whose
+//! first element is [`SIM_POISON`] makes the layer function panic, which
+//! the executor loop must contain ([`crate::coordinator`] worker panic
+//! containment) — the chaos suite's poisoned-request tests are built on
+//! it.
+
+use anyhow::{anyhow, Result};
+
+use crate::cnn::Network;
+
+/// Poison-pill sentinel: a request tensor starting with this exact value
+/// makes the sim backend panic mid-job (chaos hook for panic-containment
+/// tests). Large and negative so no normalized image or activation ever
+/// produces it.
+pub const SIM_POISON: f32 = -3.0e33;
+
+/// A deterministic stand-in network runtime over a [`Network`] topology.
+pub struct SimNetRuntime {
+    net: Network,
+}
+
+impl SimNetRuntime {
+    /// Bind the named network topology (no artifacts required).
+    pub fn load(network: &str) -> Result<Self> {
+        let net = Network::by_name(network)
+            .ok_or_else(|| anyhow!("sim backend: unknown network '{network}'"))?;
+        Ok(SimNetRuntime { net })
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.net.num_layers()
+    }
+
+    /// One layer of the deterministic surrogate: every output element is
+    /// a 4-tap hashed mixing of the input with a ReLU-like cutoff and a
+    /// bounded squash (values stay in `[0, 1)` at any depth).
+    fn forward_layer(&self, layer: usize, input: &[f32]) -> Vec<f32> {
+        let out_len = self.net.layers[layer - 1].out_elems() as usize;
+        let in_len = input.len();
+        let mut out = Vec::with_capacity(out_len);
+        for j in 0..out_len {
+            let acc = if in_len == 0 {
+                0.0f32
+            } else {
+                let mut acc = 0.0f32;
+                for t in 0..4u64 {
+                    let h = tap_hash(layer as u64, j as u64 * 4 + t);
+                    let idx = (h as usize) % in_len;
+                    // Deterministic signed weight in [-1, 1).
+                    let w = ((h >> 32) & 0xFFFF) as f32 / 32768.0 - 1.0;
+                    acc += w * input[idx];
+                }
+                acc
+            };
+            out.push(if acc > 0.0 { acc / (1.0 + acc) } else { 0.0 });
+        }
+        out
+    }
+
+    fn check_poison(&self, data: &[f32]) {
+        if data.first() == Some(&SIM_POISON) {
+            panic!("sim poison pill in tensor");
+        }
+    }
+
+    fn check_split(&self, split: usize) -> Result<()> {
+        if split > self.num_layers() {
+            return Err(anyhow!(
+                "{}: split {split} beyond {} layers",
+                self.net.name,
+                self.num_layers()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Run layers `1..=split` on an input image.
+    pub fn run_prefix(&self, split: usize, image: &[f32]) -> Result<Vec<f32>> {
+        self.check_split(split)?;
+        self.check_poison(image);
+        let mut x = image.to_vec();
+        for l in 1..=split {
+            x = self.forward_layer(l, &x);
+        }
+        Ok(x)
+    }
+
+    /// Run layers `split+1..` on an activation (or the image for split 0).
+    pub fn run_suffix(&self, split: usize, activation: &[f32]) -> Result<Vec<f32>> {
+        self.check_split(split)?;
+        self.check_poison(activation);
+        let mut x = activation.to_vec();
+        for l in split + 1..=self.num_layers() {
+            x = self.forward_layer(l, &x);
+        }
+        Ok(x)
+    }
+
+    /// Nothing to precompile: the sim backend is always warm.
+    pub fn warm_up(&self, _splits: &[usize]) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// splitmix64-style finalizer over (layer, tap) — the surrogate's fixed
+/// "weights".
+fn tap_hash(layer: u64, tap: u64) -> u64 {
+    let mut x = layer
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(tap.wrapping_mul(0xD1B5_4A32_D192_ED03));
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn image() -> Vec<f32> {
+        // 32×32×3 input for the tiny networks, deterministic content.
+        (0..32 * 32 * 3)
+            .map(|i| ((i * 7 + 3) % 256) as f32 / 255.0)
+            .collect()
+    }
+
+    #[test]
+    fn partition_invariance_across_every_split() {
+        let rt = SimNetRuntime::load("tiny_alexnet").unwrap();
+        let img = image();
+        let reference = rt.run_suffix(0, &img).unwrap();
+        assert!(!reference.is_empty());
+        for split in 1..=rt.num_layers() {
+            let act = rt.run_prefix(split, &img).unwrap();
+            let via_split = rt.run_suffix(split, &act).unwrap();
+            assert_eq!(reference, via_split, "split {split} diverged");
+        }
+    }
+
+    #[test]
+    fn outputs_follow_topology_shapes() {
+        let rt = SimNetRuntime::load("tiny_alexnet").unwrap();
+        let img = image();
+        let net = Network::by_name("tiny_alexnet").unwrap();
+        for split in 1..=rt.num_layers() {
+            let act = rt.run_prefix(split, &img).unwrap();
+            assert_eq!(act.len() as u64, net.layers[split - 1].out_elems());
+        }
+    }
+
+    #[test]
+    fn deterministic_and_bounded() {
+        let rt = SimNetRuntime::load("tiny_squeezenet").unwrap();
+        let img = image();
+        let a = rt.run_suffix(0, &img).unwrap();
+        let b = rt.run_suffix(0, &img).unwrap();
+        assert_eq!(a, b);
+        assert!(a.iter().all(|v| v.is_finite() && (0.0..1.0).contains(v)));
+    }
+
+    #[test]
+    fn activations_are_sparse() {
+        // The ReLU-like cutoff must produce real zeros, or the RLC path
+        // degenerates.
+        let rt = SimNetRuntime::load("tiny_alexnet").unwrap();
+        let act = rt.run_prefix(3, &image()).unwrap();
+        let zeros = act.iter().filter(|v| **v == 0.0).count();
+        assert!(zeros > 0, "no sparsity in sim activations");
+        assert!(zeros < act.len(), "all-zero sim activations");
+    }
+
+    #[test]
+    fn unknown_network_and_bad_split_fail_fast() {
+        assert!(SimNetRuntime::load("not_a_net").is_err());
+        let rt = SimNetRuntime::load("tiny_alexnet").unwrap();
+        assert!(rt.run_prefix(99, &image()).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "poison")]
+    fn poison_pill_panics() {
+        let rt = SimNetRuntime::load("tiny_alexnet").unwrap();
+        let mut img = image();
+        img[0] = SIM_POISON;
+        let _ = rt.run_prefix(1, &img);
+    }
+}

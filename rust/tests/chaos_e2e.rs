@@ -1,0 +1,434 @@
+//! Chaos e2e: the coordinator's failure path under injected faults.
+//!
+//! Runs on the artifact-free deterministic sim backend
+//! (`ExecutorBackend::Sim`), so unlike `serving_e2e` this suite never
+//! skips. Each test injects one fault class — transfer drops, stalls,
+//! Markov outages, a killed cloud pool, a poisoned request — and asserts
+//! the bounded-outcome contract: every admitted request resolves to
+//! exactly one of Ok / Degraded / Failed, FISC fallbacks account the
+//! energy actually spent, and a fixed fault seed reproduces the schedule
+//! bit-for-bit.
+//!
+//! Set `NEUPART_CHAOS_AGGRESSIVE=1` to scale request counts up 8×.
+
+use std::path::PathBuf;
+
+use neupart::channel::{FaultConfig, MarkovOutage, TransmitEnv};
+use neupart::coordinator::{
+    Coordinator, CoordinatorConfig, ExecutorBackend, InferenceOutcome, InferenceRequest,
+    RetryPolicy,
+};
+use neupart::corpus::Corpus;
+use neupart::runtime::SIM_POISON;
+
+fn scale(n: usize) -> usize {
+    if std::env::var_os("NEUPART_CHAOS_AGGRESSIVE").is_some() {
+        n * 8
+    } else {
+        n
+    }
+}
+
+fn config() -> CoordinatorConfig {
+    CoordinatorConfig {
+        // Never read by the sim backend.
+        artifacts_dir: PathBuf::from("artifacts"),
+        network: "tiny_alexnet".to_string(),
+        env: TransmitEnv::with_effective_rate(130.0e6, 0.78),
+        jpeg_quality: 90,
+        cloud_pool: 2,
+        workers: 2,
+        jitter: 0.0,
+        time_scale: 0.0,
+        force_split: None,
+        warm_splits: Vec::new(),
+        batch_max: 3,
+        gamma_coherent: true,
+        shed_infeasible: true,
+        backend: ExecutorBackend::Sim,
+        faults: None,
+        retry: RetryPolicy::default(),
+        seed: 42,
+    }
+}
+
+fn requests(n: usize) -> Vec<InferenceRequest> {
+    Corpus::new(32, 32, 17)
+        .iter(n)
+        .enumerate()
+        .map(|(i, img)| InferenceRequest {
+            id: i as u64,
+            tensor: img.to_f32_nhwc(),
+            pixels: img.pixels.clone(),
+            width: img.w,
+            height: img.h,
+            env: None,
+            deadline_s: None,
+        })
+        .collect()
+}
+
+/// Every outcome resolved, ids in request order, responses sane.
+fn assert_resolved(outcomes: &[InferenceOutcome], n: usize) {
+    assert_eq!(outcomes.len(), n);
+    for (i, o) in outcomes.iter().enumerate() {
+        assert_eq!(o.id(), i as u64, "outcomes in request order");
+        if let Some(r) = o.response() {
+            assert!(!r.logits.is_empty());
+            assert!(r.logits.iter().all(|v| v.is_finite()));
+            assert!(r.client_energy_j.is_finite() && r.client_energy_j >= 0.0);
+            assert!(r.transmit_energy_j.is_finite() && r.transmit_energy_j >= 0.0);
+            assert!(r.wasted_energy_j.is_finite() && r.wasted_energy_j >= 0.0);
+        }
+    }
+}
+
+#[test]
+fn clean_channel_serves_everything_ok() {
+    let n = scale(6);
+    let coord = Coordinator::new(config()).unwrap();
+    let outcomes = coord.serve(requests(n)).unwrap();
+    assert_resolved(&outcomes, n);
+    assert!(outcomes.iter().all(InferenceOutcome::is_ok), "clean run degraded");
+    let m = coord.metrics.snapshot();
+    assert_eq!(m.requests, n as u64);
+    assert_eq!(m.retries_total, 0);
+    assert_eq!(m.transfers_dropped, 0);
+    assert_eq!(m.fallback_fisc, 0);
+    assert_eq!(m.failed_requests, 0);
+    assert!(!coord.is_degraded());
+}
+
+#[test]
+fn transfer_drops_are_retried_through() {
+    let n = scale(16);
+    let mut cfg = config();
+    cfg.faults = Some(FaultConfig {
+        drop_prob: 0.5,
+        stall_prob: 0.0,
+        stall_max_factor: 0.0,
+        outage: None,
+        seed: 911,
+    });
+    cfg.retry = RetryPolicy {
+        max_attempts: 8,
+        ..RetryPolicy::default()
+    };
+    let coord = Coordinator::new(cfg).unwrap();
+    let outcomes = coord.serve(requests(n)).unwrap();
+    assert_resolved(&outcomes, n);
+    // Retries absorb the drops: nothing fails, and with 8 attempts at
+    // p=0.5 almost everything lands Ok (a straggler may exhaust its
+    // budget and complete degraded — that is the contract, not a bug).
+    assert!(outcomes.iter().all(|o| !o.is_failed()));
+    let ok = outcomes.iter().filter(|o| o.is_ok()).count();
+    assert!(ok >= n - n / 8, "only {ok}/{n} recovered via retry");
+    let m = coord.metrics.snapshot();
+    assert!(m.retries_total > 0, "drops at p=0.5 never triggered a retry");
+    assert!(m.transfers_dropped > 0);
+    assert!(m.wasted_retry_energy_j > 0.0, "drops wasted no energy");
+    // Per-request retry accounting shows up in the responses too.
+    let retried: u32 = outcomes
+        .iter()
+        .filter_map(|o| o.response().map(|r| r.retries))
+        .sum();
+    assert!(retried > 0);
+}
+
+#[test]
+fn exhausted_uplink_falls_back_to_fisc_with_energy_accounting() {
+    let n = scale(6);
+    let mut cfg = config();
+    cfg.workers = 1;
+    cfg.faults = Some(FaultConfig {
+        drop_prob: 1.0, // every transfer dies mid-flight
+        stall_prob: 0.0,
+        stall_max_factor: 0.0,
+        outage: None,
+        seed: 13,
+    });
+    cfg.retry = RetryPolicy {
+        max_attempts: 2,
+        ..RetryPolicy::default()
+    };
+    let coord = Coordinator::new(cfg).unwrap();
+    let n_layers = coord.partitioner().num_layers();
+    let outcomes = coord.serve(requests(n)).unwrap();
+    assert_resolved(&outcomes, n);
+    let mut wasted_sum = 0.0;
+    for o in &outcomes {
+        assert!(o.is_degraded(), "dead uplink must degrade, got {o:?}");
+        let r = o.response().unwrap();
+        assert!(r.fallback_fisc);
+        assert_eq!(r.split, n_layers, "fallback must run fully in situ");
+        assert_eq!(r.transmit_bits, 0, "fallback shipped bits over a dead link");
+        assert_eq!(r.transmit_energy_j, 0.0);
+        assert!(r.client_energy_j > 0.0, "in-situ run spent no energy?");
+        // Exactly one retry then exhaustion, per the 2-attempt policy.
+        assert_eq!(r.retries, 1);
+        assert!(r.wasted_energy_j > 0.0, "dropped transfers wasted no energy");
+        wasted_sum += r.wasted_energy_j;
+    }
+    let m = coord.metrics.snapshot();
+    assert_eq!(m.fallback_fisc, n as u64);
+    assert_eq!(m.retries_total, n as u64);
+    assert_eq!(m.transfers_dropped, 2 * n as u64);
+    assert_eq!(m.failed_requests, 0);
+    // The per-request waste reconciles with the channel's own books.
+    let stats = coord.channel_stats();
+    assert_eq!(stats.transfers, 0, "nothing was ever delivered");
+    assert_eq!(stats.transfers_dropped, 2 * n as u64);
+    let diff = (wasted_sum - stats.wasted_energy_j).abs();
+    assert!(
+        diff <= 1e-9 * stats.wasted_energy_j.max(1.0),
+        "response waste {wasted_sum} != channel waste {}",
+        stats.wasted_energy_j
+    );
+}
+
+#[test]
+fn pinned_outage_degrades_without_spending_radio_energy() {
+    let n = scale(5);
+    let mut cfg = config();
+    cfg.faults = Some(FaultConfig {
+        drop_prob: 0.0,
+        stall_prob: 0.0,
+        stall_max_factor: 0.0,
+        // Down on the first Markov step, never recovers.
+        outage: Some(MarkovOutage {
+            p_up_to_down: 1.0,
+            p_down_to_up: 0.0,
+        }),
+        seed: 5,
+    });
+    cfg.retry = RetryPolicy {
+        max_attempts: 3,
+        ..RetryPolicy::default()
+    };
+    let coord = Coordinator::new(cfg).unwrap();
+    let outcomes = coord.serve(requests(n)).unwrap();
+    assert_resolved(&outcomes, n);
+    for o in &outcomes {
+        let r = o.response().expect("outage must degrade, not fail");
+        assert!(o.is_degraded());
+        assert!(r.fallback_fisc);
+        // Outage rejections are fail-fast: no partial transfer, no waste.
+        assert_eq!(r.wasted_energy_j, 0.0);
+    }
+    let m = coord.metrics.snapshot();
+    assert!(m.outage_rejections >= n as u64);
+    assert_eq!(m.transfers_dropped, 0);
+    let stats = coord.channel_stats();
+    assert_eq!(stats.transfers, 0);
+    assert_eq!(stats.energy_j, 0.0, "outage windows must not burn energy");
+}
+
+#[test]
+fn killed_cloud_pool_latches_client_only_degraded_mode() {
+    let n = scale(6);
+    let mut cfg = config();
+    cfg.force_split = Some(3); // partitioned: every request needs the cloud
+    let coord = Coordinator::new(cfg).unwrap();
+    let n_layers = coord.partitioner().num_layers();
+
+    coord.kill_cloud_pool();
+    // Threads drain their shutdown signals and exit.
+    let cloud = coord.cloud_handle();
+    for _ in 0..500 {
+        if cloud.alive_threads() == 0 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    assert_eq!(cloud.alive_threads(), 0, "killed pool still alive");
+
+    let outcomes = coord.serve(requests(n)).unwrap();
+    assert_resolved(&outcomes, n);
+    for o in &outcomes {
+        assert!(o.is_degraded(), "dead cloud must degrade, got {o:?}");
+        let r = o.response().unwrap();
+        assert_eq!(r.split, n_layers, "degraded mode must serve client-only");
+        assert_eq!(r.decided_split, 3);
+    }
+    assert!(coord.is_degraded());
+    let m = coord.metrics.snapshot();
+    assert_eq!(m.degraded_mode_entered, 1, "latch must fire exactly once");
+    assert_eq!(m.fallback_fisc, n as u64);
+    assert_eq!(m.failed_requests, 0);
+
+    // Degraded mode is sticky and keeps serving.
+    let more = coord.serve(requests(3)).unwrap();
+    assert!(more.iter().all(InferenceOutcome::is_degraded));
+    assert_eq!(coord.metrics.snapshot().degraded_mode_entered, 1);
+}
+
+#[test]
+fn poisoned_request_fails_alone_and_threads_survive() {
+    let n = 5;
+    let mut cfg = config();
+    cfg.force_split = Some(4); // client prefix sees the poison first
+    let coord = Coordinator::new(cfg).unwrap();
+    let mut reqs = requests(n);
+    reqs[2].tensor[0] = SIM_POISON;
+    let outcomes = coord.serve(reqs).unwrap();
+    assert_resolved(&outcomes, n);
+    for (i, o) in outcomes.iter().enumerate() {
+        if i == 2 {
+            match o {
+                InferenceOutcome::Failed(f) => {
+                    assert!(
+                        f.error.contains("poison"),
+                        "panic cause lost in '{}'",
+                        f.error
+                    );
+                }
+                other => panic!("poisoned request resolved as {other:?}"),
+            }
+        } else {
+            assert!(o.is_ok(), "sibling of poisoned request was hit: {o:?}");
+        }
+    }
+    let m = coord.metrics.snapshot();
+    assert_eq!(m.failed_requests, 1);
+    assert_eq!(m.requests, (n - 1) as u64, "only served requests recorded");
+    // The executor threads contained the panic: both devices still serve.
+    assert_eq!(coord.client_handle().alive_threads(), 1);
+    assert_eq!(coord.cloud_handle().alive_threads(), 2);
+    let clean = coord.serve(requests(4)).unwrap();
+    assert!(clean.iter().all(InferenceOutcome::is_ok));
+}
+
+#[test]
+fn hopeless_deadline_abandons_retries_but_still_degrades() {
+    let n = scale(4);
+    let mut cfg = config();
+    cfg.shed_infeasible = false; // let the hopeless deadline through
+    cfg.faults = Some(FaultConfig {
+        drop_prob: 1.0,
+        stall_prob: 0.0,
+        stall_max_factor: 0.0,
+        outage: None,
+        seed: 3,
+    });
+    cfg.retry = RetryPolicy {
+        max_attempts: 10,
+        ..RetryPolicy::default()
+    };
+    let coord = Coordinator::new(cfg).unwrap();
+    let mut reqs = requests(n);
+    for r in &mut reqs {
+        // No backoff + attempt fits in a picosecond: the very first
+        // failure must abandon the retry loop on the deadline budget.
+        r.deadline_s = Some(1e-12);
+    }
+    let outcomes = coord.serve(reqs).unwrap();
+    assert_resolved(&outcomes, n);
+    for o in &outcomes {
+        let r = o.response().expect("deadline abandonment must degrade");
+        assert!(r.fallback_fisc);
+        assert_eq!(r.retries, 0, "budget-dead request still retried");
+    }
+    let m = coord.metrics.snapshot();
+    assert_eq!(m.deadline_abandoned, n as u64);
+    assert_eq!(m.retries_total, 0);
+}
+
+#[test]
+fn seeded_fault_schedule_replays_bit_for_bit() {
+    // Single worker + single FIFO lane: request order through the channel
+    // is the submission order, so the whole fault schedule is a pure
+    // function of the seeds.
+    let n = scale(12);
+    let build = || {
+        let mut cfg = config();
+        cfg.workers = 1;
+        cfg.gamma_coherent = false;
+        cfg.faults = Some(FaultConfig {
+            drop_prob: 0.25,
+            stall_prob: 0.25,
+            stall_max_factor: 2.0,
+            outage: None,
+            seed: 271_828,
+        });
+        cfg.retry = RetryPolicy {
+            max_attempts: 6,
+            ..RetryPolicy::default()
+        };
+        Coordinator::new(cfg).unwrap()
+    };
+    let a = build();
+    let b = build();
+    let out_a = a.serve(requests(n)).unwrap();
+    let out_b = b.serve(requests(n)).unwrap();
+    assert_resolved(&out_a, n);
+    for (x, y) in out_a.iter().zip(&out_b) {
+        assert_eq!(x.id(), y.id());
+        assert_eq!(x.is_ok(), y.is_ok());
+        assert_eq!(x.is_degraded(), y.is_degraded());
+        assert_eq!(x.is_failed(), y.is_failed());
+        if let (Some(rx), Some(ry)) = (x.response(), y.response()) {
+            assert_eq!(rx.split, ry.split);
+            assert_eq!(rx.decided_split, ry.decided_split);
+            assert_eq!(rx.retries, ry.retries);
+            assert_eq!(rx.transmit_bits, ry.transmit_bits);
+            assert_eq!(rx.fallback_fisc, ry.fallback_fisc);
+            // Bit-for-bit: modeled energies, wasted joules, logits.
+            assert_eq!(rx.transmit_energy_j.to_bits(), ry.transmit_energy_j.to_bits());
+            assert_eq!(rx.wasted_energy_j.to_bits(), ry.wasted_energy_j.to_bits());
+            assert_eq!(rx.logits, ry.logits);
+        }
+    }
+    // The channels walked identical fault schedules.
+    assert_eq!(a.channel_stats(), b.channel_stats());
+    // And different fault seeds actually diverge (the test has teeth).
+    let mut cfg = config();
+    cfg.workers = 1;
+    cfg.gamma_coherent = false;
+    cfg.faults = Some(FaultConfig {
+        drop_prob: 0.25,
+        stall_prob: 0.25,
+        stall_max_factor: 2.0,
+        outage: None,
+        seed: 161_803,
+    });
+    cfg.retry = RetryPolicy {
+        max_attempts: 6,
+        ..RetryPolicy::default()
+    };
+    let c = Coordinator::new(cfg).unwrap();
+    c.serve(requests(n)).unwrap();
+    assert_ne!(
+        a.channel_stats(),
+        c.channel_stats(),
+        "different fault seeds produced identical schedules"
+    );
+}
+
+#[test]
+fn process_batch_honors_per_request_channel_states() {
+    // Regression (per-request env routing): the batched path used to
+    // decide every request at the coordinator's configured env, silently
+    // ignoring `req.env`. Two requests at opposite channel extremes must
+    // decide differently — and exactly like the per-request path.
+    let coord = Coordinator::new(config()).unwrap();
+    let n_layers = coord.partitioner().num_layers();
+    let client = coord.client_handle();
+    let cloud = coord.cloud_handle();
+    let mut reqs = requests(2);
+    // Blazing free uplink: offloading everything is optimal (FCC).
+    reqs[0].env = Some(TransmitEnv::with_effective_rate(1e12, 1e-3));
+    // Dead-slow, power-hungry uplink: staying on the client is optimal.
+    reqs[1].env = Some(TransmitEnv::with_effective_rate(10.0, 5.0));
+
+    let batch = coord.process_batch(&reqs, &client, &cloud).unwrap();
+    assert_eq!(batch.len(), 2);
+    let solo: Vec<_> = reqs
+        .iter()
+        .map(|r| coord.process(r, &client, &cloud).unwrap())
+        .collect();
+    assert_eq!(batch[0].split, solo[0].split, "batch diverged from solo");
+    assert_eq!(batch[1].split, solo[1].split, "batch diverged from solo");
+    assert_eq!(batch[0].split, 0, "free uplink must go full cloud");
+    assert_eq!(batch[1].split, n_layers, "dead uplink must stay in situ");
+    assert_ne!(batch[0].split, batch[1].split);
+}

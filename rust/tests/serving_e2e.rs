@@ -5,7 +5,9 @@
 use std::path::{Path, PathBuf};
 
 use neupart::channel::TransmitEnv;
-use neupart::coordinator::{Coordinator, CoordinatorConfig, InferenceRequest};
+use neupart::coordinator::{
+    Coordinator, CoordinatorConfig, ExecutorBackend, InferenceRequest, RetryPolicy,
+};
 use neupart::corpus::Corpus;
 
 fn have_artifacts() -> bool {
@@ -27,6 +29,9 @@ fn config(network: &str, force: Option<usize>) -> CoordinatorConfig {
         batch_max: 3,
         gamma_coherent: true,
         shed_infeasible: true,
+        backend: ExecutorBackend::Pjrt,
+        faults: None,
+        retry: RetryPolicy::default(),
         seed: 5,
     }
 }
@@ -54,7 +59,7 @@ fn serve_roundtrip_and_metrics_consistency() {
     }
     let coord = Coordinator::new(config("tiny_alexnet", None)).unwrap();
     let n = 6;
-    let responses = coord.serve(requests(n)).unwrap();
+    let responses = coord.serve_responses(requests(n)).unwrap();
     assert_eq!(responses.len(), n);
     for (i, r) in responses.iter().enumerate() {
         assert_eq!(r.id, i as u64, "responses in request order");
@@ -87,12 +92,12 @@ fn partitioned_inference_agrees_with_cloud() {
     // Cloud-only reference.
     let fcc = Coordinator::new(config("tiny_alexnet", Some(0)))
         .unwrap()
-        .serve(requests(n))
+        .serve_responses(requests(n))
         .unwrap();
     // Forced mid-network split: exercises quantize -> RLC -> dequantize.
     let mid = Coordinator::new(config("tiny_alexnet", Some(5)))
         .unwrap()
-        .serve(requests(n))
+        .serve_responses(requests(n))
         .unwrap();
     let agree = fcc
         .iter()
@@ -120,7 +125,7 @@ fn forced_fisc_never_touches_channel_payloads() {
         return;
     }
     let coord = Coordinator::new(config("tiny_alexnet", Some(11))).unwrap();
-    let responses = coord.serve(requests(3)).unwrap();
+    let responses = coord.serve_responses(requests(3)).unwrap();
     for r in responses {
         assert_eq!(r.split, 11);
         assert!(r.transmit_bits <= 64, "FISC shipped {} bits", r.transmit_bits);
@@ -136,7 +141,7 @@ fn channel_jitter_does_not_break_serving() {
     let mut cfg = config("tiny_squeezenet", None);
     cfg.jitter = 0.3;
     let coord = Coordinator::new(cfg).unwrap();
-    let responses = coord.serve(requests(4)).unwrap();
+    let responses = coord.serve_responses(requests(4)).unwrap();
     assert_eq!(responses.len(), 4);
 }
 
@@ -154,13 +159,13 @@ fn gamma_bucketed_batches_match_per_request_decisions() {
     bucketed_cfg.jitter = 0.4;
     bucketed_cfg.gamma_coherent = true;
     let bucketed = Coordinator::new(bucketed_cfg).unwrap();
-    let with_buckets = bucketed.serve(requests(n)).unwrap();
+    let with_buckets = bucketed.serve_responses(requests(n)).unwrap();
 
     let mut flat_cfg = config("tiny_alexnet", None);
     flat_cfg.jitter = 0.4;
     flat_cfg.gamma_coherent = false;
     let flat = Coordinator::new(flat_cfg).unwrap();
-    let without_buckets = flat.serve(requests(n)).unwrap();
+    let without_buckets = flat.serve_responses(requests(n)).unwrap();
 
     for (a, b) in with_buckets.iter().zip(&without_buckets) {
         assert_eq!(a.id, b.id);
@@ -184,7 +189,7 @@ fn explicit_request_env_steers_the_decision() {
     let coord = Coordinator::new(config("tiny_alexnet", None)).unwrap();
     let mut reqs = requests(2);
     reqs[1].env = Some(TransmitEnv::with_effective_rate(10.0, 0.78)); // 10 bps
-    let responses = coord.serve(reqs).unwrap();
+    let responses = coord.serve_responses(reqs).unwrap();
     let n_layers = coord.partitioner().num_layers();
     assert_eq!(responses[1].split, n_layers, "dead channel must pin FISC");
 }
@@ -205,7 +210,7 @@ fn corrupted_channel_states_route_to_overflow_lane_without_panicking() {
     reqs[3].env = Some(TransmitEnv::with_effective_rate(-80e6, 0.78));
     // Corrupted transmit power (γ = ∞ at a finite rate).
     reqs[4].env = Some(TransmitEnv::with_effective_rate(80e6, f64::INFINITY));
-    let responses = coord.serve(reqs).unwrap();
+    let responses = coord.serve_responses(reqs).unwrap();
     assert_eq!(responses.len(), 5);
     for r in &responses {
         if r.id != 0 {
@@ -219,7 +224,7 @@ fn corrupted_channel_states_route_to_overflow_lane_without_panicking() {
     let mut reqs = requests(2);
     reqs[1].env = Some(TransmitEnv::with_effective_rate(f64::NAN, 0.78));
     reqs[1].deadline_s = Some(1e3);
-    let responses = coord.serve(reqs).unwrap();
+    let responses = coord.serve_responses(reqs).unwrap();
     assert_eq!(responses.len(), 2);
 }
 
@@ -247,7 +252,7 @@ fn registry_without_slo_engine_is_counted_not_silent() {
     let mut reqs = requests(2);
     reqs[0].deadline_s = Some(1e3); // loose: must be served
     reqs[1].deadline_s = Some(1e-9); // provably infeasible: must be shed
-    let responses = coord.serve(reqs).unwrap();
+    let responses = coord.serve_responses(reqs).unwrap();
     assert_eq!(responses.len(), 1);
     let m = coord.metrics.snapshot();
     assert_eq!(m.shed_infeasible, 1);
@@ -270,7 +275,7 @@ fn infeasible_deadlines_are_shed_at_admission() {
     reqs[1].deadline_s = Some(1e-9);
     // Generous deadline: must be served normally.
     reqs[2].deadline_s = Some(1e3);
-    let responses = coord.serve(reqs).unwrap();
+    let responses = coord.serve_responses(reqs).unwrap();
     let ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
     assert_eq!(ids, vec![0, 2, 3], "shed request omitted, order preserved");
     let m = coord.metrics.snapshot();
@@ -283,7 +288,7 @@ fn infeasible_deadlines_are_shed_at_admission() {
     let coord = Coordinator::new(cfg).unwrap();
     let mut reqs = requests(4);
     reqs[1].deadline_s = Some(1e-9);
-    let responses = coord.serve(reqs).unwrap();
+    let responses = coord.serve_responses(reqs).unwrap();
     assert_eq!(responses.len(), 4);
     assert_eq!(coord.metrics.snapshot().shed_infeasible, 0);
 }
@@ -304,7 +309,7 @@ fn coordinators_share_one_registry_entry() {
         "engines must be shared through the registry"
     );
     // And the shared engine still serves.
-    let responses = a.serve(requests(3)).unwrap();
+    let responses = a.serve_responses(requests(3)).unwrap();
     assert_eq!(responses.len(), 3);
 }
 
