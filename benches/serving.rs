@@ -8,15 +8,26 @@
 //! otherwise falls back to the deterministic sim backend so the bench
 //! (and the CI smoke run) always measures the full coordinator path.
 //!
+//! Also drives the million-client load harness through a sharded
+//! [`ServingTier`] (always on the hermetic sim backend): the Table-IV
+//! device fleet, admission-to-decision latency percentiles, a same-seed
+//! determinism double-run, and a single-shard vs multi-shard admission
+//! speedup.
+//!
 //! Emits machine-readable `results/BENCH_serving.json`
-//! (`clean_serve_ns`, `fallback_fisc_ns`, `retry_overhead_ns`).
+//! (`clean_serve_ns`, `fallback_fisc_ns`, `retry_overhead_ns`,
+//! `loadgen_p50_ns`/`p99_ns`/`p999_ns`, `throughput_rps`, `shed_rate`,
+//! `shard_count`, `lane_occupancy`, `loadgen_deterministic`,
+//! `shard_speedup_admission`).
 
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::time::Instant;
 
 use neupart::channel::{FaultConfig, MarkovOutage, TransmitEnv};
 use neupart::coordinator::{
-    Coordinator, CoordinatorConfig, ExecutorBackend, InferenceRequest, RetryPolicy,
+    loadgen, ArrivalModel, Coordinator, CoordinatorConfig, ExecutorBackend, InferenceRequest,
+    LoadGenConfig, RetryPolicy, ServingTier, ServingTierConfig,
 };
 use neupart::corpus::Corpus;
 use neupart::util::json::Value;
@@ -25,14 +36,8 @@ fn requests(n: usize) -> Vec<InferenceRequest> {
     Corpus::new(32, 32, 11)
         .iter(n)
         .enumerate()
-        .map(|(i, img)| InferenceRequest {
-            id: i as u64,
-            tensor: img.to_f32_nhwc(),
-            pixels: img.pixels.clone(),
-            width: img.w,
-            height: img.h,
-            env: None,
-            deadline_s: None,
+        .map(|(i, img)| {
+            InferenceRequest::new(i as u64, img.to_f32_nhwc(), img.pixels, img.w, img.h)
         })
         .collect()
 }
@@ -57,6 +62,24 @@ fn config(backend: ExecutorBackend, force: Option<usize>) -> CoordinatorConfig {
         retry: RetryPolicy::default(),
         seed: 3,
     }
+}
+
+/// Per-shard config for the load-harness tiers: always the hermetic sim
+/// backend, `cloud_pool` trimmed to one thread per shard.
+fn shard_config(workers: usize, force: Option<usize>) -> CoordinatorConfig {
+    let mut cfg = config(ExecutorBackend::Sim, force);
+    cfg.workers = workers;
+    cfg.cloud_pool = 1;
+    cfg
+}
+
+/// One shard per device class in `cfg`'s fleet mix.
+fn fleet_tier(cfg: &LoadGenConfig) -> ServingTier {
+    ServingTier::new(ServingTierConfig::per_class(
+        shard_config(2, None),
+        &cfg.class_envs(),
+    ))
+    .expect("tier")
 }
 
 /// One measured serve of `n` requests; returns mean ns/request.
@@ -153,6 +176,86 @@ fn main() {
         retry_overhead_ns
     );
 
+    // ---- Load harness: the Table-IV fleet through the sharded tier ----
+    // Always the hermetic sim backend, whatever the policy benches above
+    // ran on: the harness measures the serving tier, not the kernels.
+    let det_clients: u64 = 100_000;
+    let lg_clients: u64 = if smoke { det_clients } else { 1_000_000 };
+    let mut lg_cfg = LoadGenConfig::table_iv_wlan(lg_clients, 42);
+    lg_cfg.arrival = ArrivalModel::Open { producers: 4 };
+    let tier = fleet_tier(&lg_cfg);
+    let shard_count = tier.shard_count();
+    let report = loadgen::run(&tier, &lg_cfg).expect("load run");
+    assert_eq!(report.completed + report.shed, report.clients);
+    println!(
+        "\nloadgen: {} clients over {} shards -> {:.0} req/s, shed {:.2}%",
+        report.clients,
+        shard_count,
+        report.throughput_rps,
+        report.shed_rate * 100.0
+    );
+    println!(
+        "loadgen latency (admission->decision): p50 {:.1} us  p99 {:.1} us  p999 {:.1} us",
+        report.p50_ns / 1e3,
+        report.p99_ns / 1e3,
+        report.p999_ns / 1e3
+    );
+
+    // Same-seed determinism: the shed set and fallback counts are pure
+    // functions of (seed, client id) — two fresh tiers must agree.
+    let mut det_cfg = lg_cfg.clone();
+    det_cfg.clients = det_clients;
+    let det_a = if lg_clients == det_clients {
+        report.clone()
+    } else {
+        loadgen::run(&fleet_tier(&det_cfg), &det_cfg).expect("determinism run a")
+    };
+    let det_b = loadgen::run(&fleet_tier(&det_cfg), &det_cfg).expect("determinism run b");
+    let deterministic = det_a.shed == det_b.shed
+        && det_a.ok == det_b.ok
+        && det_a.degraded == det_b.degraded
+        && det_a.fallback_fisc == det_b.fallback_fisc;
+    assert!(deterministic, "same seed must shed and fall back identically");
+    println!(
+        "loadgen determinism: {} clients, shed {} / fallback {} on both runs",
+        det_clients, det_b.shed, det_b.fallback_fisc
+    );
+
+    // Single-shard vs multi-shard admission throughput, same per-shard
+    // resources (1 worker, 1-thread executors) and a forced-FISC workload
+    // so each shard serializes on its own client executor: the shard
+    // count is the only variable.
+    let speed_n: u64 = if smoke { 20_000 } else { 100_000 };
+    let mut speed_cfg = LoadGenConfig::table_iv_wlan(speed_n, 7);
+    speed_cfg.arrival = ArrivalModel::Open { producers: 4 };
+    speed_cfg.infeasible_frac = 0.0;
+    speed_cfg.mix = vec![(0.78, 1.0), (0.85, 1.0), (1.14, 1.0), (1.28, 1.0)];
+    let single =
+        ServingTier::new(ServingTierConfig::single(shard_config(1, Some(11)))).expect("tier");
+    let single_rep = loadgen::run(&single, &speed_cfg).expect("single-shard run");
+    drop(single);
+    let multi = ServingTier::new(ServingTierConfig::per_class(
+        shard_config(1, Some(11)),
+        &speed_cfg.class_envs(),
+    ))
+    .expect("tier");
+    let multi_rep = loadgen::run(&multi, &speed_cfg).expect("multi-shard run");
+    drop(multi);
+    let shard_speedup = multi_rep.throughput_rps / single_rep.throughput_rps.max(f64::MIN_POSITIVE);
+    println!(
+        "shard speedup: 1 shard {:.0} req/s vs {} shards {:.0} req/s -> {:.2}x",
+        single_rep.throughput_rps,
+        speed_cfg.mix.len(),
+        multi_rep.throughput_rps,
+        shard_speedup
+    );
+
+    let lanes: BTreeMap<String, Value> = report
+        .lane_occupancy
+        .iter()
+        .map(|(lane, batches)| (lane.to_string(), Value::Num(*batches as f64)))
+        .collect();
+
     let mut b = neupart::bench::Bencher::from_env();
     // Record the serve timings through the Bencher's results array too, so
     // the JSON carries the standard shape alongside the top-level keys.
@@ -176,6 +279,28 @@ fn main() {
             ("clean_serve_ns".to_string(), Value::Num(clean_serve_ns)),
             ("fallback_fisc_ns".to_string(), Value::Num(fallback_fisc_ns)),
             ("retry_overhead_ns".to_string(), Value::Num(retry_overhead_ns)),
+            (
+                "loadgen_clients".to_string(),
+                Value::Num(report.clients as f64),
+            ),
+            ("loadgen_p50_ns".to_string(), Value::Num(report.p50_ns)),
+            ("loadgen_p99_ns".to_string(), Value::Num(report.p99_ns)),
+            ("loadgen_p999_ns".to_string(), Value::Num(report.p999_ns)),
+            (
+                "throughput_rps".to_string(),
+                Value::Num(report.throughput_rps),
+            ),
+            ("shed_rate".to_string(), Value::Num(report.shed_rate)),
+            ("shard_count".to_string(), Value::Num(shard_count as f64)),
+            ("lane_occupancy".to_string(), Value::Obj(lanes)),
+            (
+                "loadgen_deterministic".to_string(),
+                Value::Bool(deterministic),
+            ),
+            (
+                "shard_speedup_admission".to_string(),
+                Value::Num(shard_speedup),
+            ),
         ],
     )
     .expect("json");

@@ -24,14 +24,8 @@ fn requests(n: usize, seed: u64) -> Vec<InferenceRequest> {
     corpus
         .iter(n)
         .enumerate()
-        .map(|(i, img)| InferenceRequest {
-            id: i as u64,
-            tensor: img.to_f32_nhwc(),
-            pixels: img.pixels.clone(),
-            width: img.w,
-            height: img.h,
-            env: None,
-            deadline_s: None,
+        .map(|(i, img)| {
+            InferenceRequest::new(i as u64, img.to_f32_nhwc(), img.pixels, img.w, img.h)
         })
         .collect()
 }

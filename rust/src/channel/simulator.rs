@@ -167,6 +167,24 @@ pub struct ChannelStats {
     pub stall_airtime_s: f64,
 }
 
+impl ChannelStats {
+    /// Fold another channel's stats into this one (every field sums).
+    /// The fleet view of a sharded serving tier: each shard owns its own
+    /// [`Channel`], and the tier merges their stats into one report.
+    pub fn merge(&mut self, other: &ChannelStats) {
+        self.transfers += other.transfers;
+        self.payload_bits += other.payload_bits;
+        self.energy_j += other.energy_j;
+        self.airtime_s += other.airtime_s;
+        self.transfers_dropped += other.transfers_dropped;
+        self.stalls += other.stalls;
+        self.outage_rejections += other.outage_rejections;
+        self.wasted_energy_j += other.wasted_energy_j;
+        self.wasted_airtime_s += other.wasted_airtime_s;
+        self.stall_airtime_s += other.stall_airtime_s;
+    }
+}
+
 struct ChannelState {
     rng: Rng,
     stats: ChannelStats,
@@ -300,6 +318,24 @@ mod tests {
 
     fn env() -> TransmitEnv {
         TransmitEnv::with_effective_rate(100.0e6, 1.0)
+    }
+
+    #[test]
+    fn stats_merge_sums_every_field() {
+        let a = Channel::new(ChannelConfig::ideal(env()), 1);
+        a.send(1_000_000).unwrap();
+        let b = Channel::new(ChannelConfig::ideal(env()), 2);
+        b.send(2_000_000).unwrap();
+        b.send(1_000_000).unwrap();
+        let mut fleet = a.stats();
+        fleet.merge(&b.stats());
+        assert_eq!(fleet.transfers, 3);
+        assert_eq!(fleet.payload_bits, 4_000_000);
+        assert!((fleet.energy_j - (a.stats().energy_j + b.stats().energy_j)).abs() < 1e-12);
+        assert!((fleet.airtime_s - 0.04).abs() < 1e-12);
+        let mut identity = a.stats();
+        identity.merge(&ChannelStats::default());
+        assert_eq!(identity, a.stats());
     }
 
     #[test]

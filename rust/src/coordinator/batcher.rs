@@ -270,40 +270,78 @@ impl<T> Batcher<T> {
     /// envelope-coherent batches; the serving workers amortize the
     /// per-channel-state partition decision across each one.
     pub fn take_batch_bucketed(&self, max: usize) -> Option<(usize, Vec<(T, Duration)>)> {
+        self.take_batch_from(None, max)
+    }
+
+    /// [`Batcher::take_batch_bucketed`] with a preferred lane: drains from
+    /// `preferred` whenever it holds work, falling back to the globally
+    /// oldest head only when the preferred lane is empty. Shard workers pin
+    /// themselves to hot γ lanes this way — a worker keeps serving one
+    /// envelope segment (so its executor's compiled-prefix/schedule-cache
+    /// state stays warm for that segment) without ever idling while other
+    /// lanes have work. Within every lane the drain is still
+    /// oldest-head-first FIFO.
+    pub fn take_batch_pinned(
+        &self,
+        preferred: usize,
+        max: usize,
+    ) -> Option<(usize, Vec<(T, Duration)>)> {
+        self.take_batch_from(Some(self.clamp_bucket(preferred)), max)
+    }
+
+    fn take_batch_from(
+        &self,
+        preferred: Option<usize>,
+        max: usize,
+    ) -> Option<(usize, Vec<(T, Duration)>)> {
         assert!(max >= 1);
         let mut s = self.state.lock().unwrap();
         loop {
-            while let Some(bucket) = s.oldest_bucket() {
-                let mut batch = Vec::new();
-                while batch.len() < max {
-                    match s.queues[bucket].pop_front() {
-                        Some(entry) => {
-                            s.len -= 1;
-                            self.not_full.notify_one();
-                            if let Some(d) = entry.deadline {
-                                if Instant::now() >= d {
-                                    s.stats.shed_expired += 1;
-                                    s.bucket_stats[bucket].shed_expired += 1;
-                                    continue; // shed in-queue expiry
-                                }
-                            }
-                            s.stats.taken += 1;
-                            s.bucket_stats[bucket].taken += 1;
-                            batch.push((entry.item, entry.enqueued.elapsed()));
-                        }
+            loop {
+                let bucket = match preferred {
+                    Some(b) if !s.queues[b].is_empty() => b,
+                    _ => match s.oldest_bucket() {
+                        Some(b) => b,
                         None => break,
-                    }
-                }
+                    },
+                };
+                let batch = self.drain_bucket(&mut s, bucket, max);
                 if !batch.is_empty() {
                     return Some((bucket, batch));
                 }
-                // Every entry in that bucket had expired — try the next.
+                // Every entry in that bucket had expired — pick again.
             }
             if s.closed {
                 return None;
             }
             s = self.not_empty.wait(s).unwrap();
         }
+    }
+
+    /// Drain up to `max` admissible entries from one bucket (FIFO),
+    /// shedding expired ones. Must be called with the lock held.
+    fn drain_bucket(&self, s: &mut State<T>, bucket: usize, max: usize) -> Vec<(T, Duration)> {
+        let mut batch = Vec::new();
+        while batch.len() < max {
+            match s.queues[bucket].pop_front() {
+                Some(entry) => {
+                    s.len -= 1;
+                    self.not_full.notify_one();
+                    if let Some(d) = entry.deadline {
+                        if Instant::now() >= d {
+                            s.stats.shed_expired += 1;
+                            s.bucket_stats[bucket].shed_expired += 1;
+                            continue; // shed in-queue expiry
+                        }
+                    }
+                    s.stats.taken += 1;
+                    s.bucket_stats[bucket].taken += 1;
+                    batch.push((entry.item, entry.enqueued.elapsed()));
+                }
+                None => break,
+            }
+        }
+        batch
     }
 
     /// Close the queue: producers get `Rejected`, consumers drain then stop.
@@ -526,6 +564,51 @@ mod tests {
         assert_eq!(b.try_submit_to(0, 1, None), Submit::Accepted);
         assert_eq!(b.try_submit_to(3, 2, None), Submit::Accepted);
         assert_eq!(b.try_submit_to(1, 3, None), Submit::Rejected);
+    }
+
+    #[test]
+    fn pinned_take_prefers_its_lane_over_older_heads() {
+        let b = Batcher::with_buckets(16, 3);
+        b.submit_to(0, 10, None); // globally oldest head
+        b.submit_to(2, 30, None);
+        b.submit_to(2, 31, None);
+        // A worker pinned to lane 2 drains its own lane first, FIFO...
+        let (bucket, batch) = b.take_batch_pinned(2, 8).unwrap();
+        assert_eq!(bucket, 2);
+        assert_eq!(batch.iter().map(|(v, _)| *v).collect::<Vec<_>>(), vec![30, 31]);
+        // ...and falls back to the oldest head once its lane is empty.
+        let (bucket, batch) = b.take_batch_pinned(2, 8).unwrap();
+        assert_eq!((bucket, batch[0].0), (0, 10));
+    }
+
+    #[test]
+    fn pinned_take_is_fifo_within_its_lane_and_clamps() {
+        let b = Batcher::with_buckets(16, 2);
+        for i in 0..4 {
+            b.submit_to(1, i, None);
+        }
+        // Out-of-range pin clamps to the last lane.
+        let (bucket, batch) = b.take_batch_pinned(usize::MAX, 2).unwrap();
+        assert_eq!(bucket, 1);
+        assert_eq!(batch.iter().map(|(v, _)| *v).collect::<Vec<_>>(), vec![0, 1]);
+        let (_, batch) = b.take_batch_pinned(1, 8).unwrap();
+        assert_eq!(batch.iter().map(|(v, _)| *v).collect::<Vec<_>>(), vec![2, 3]);
+        b.close();
+        assert_eq!(b.take_batch_pinned(1, 8), None);
+    }
+
+    #[test]
+    fn pinned_take_sheds_expired_in_preferred_lane() {
+        let b = Batcher::with_buckets(8, 2);
+        let soon = Instant::now() + Duration::from_millis(5);
+        b.submit_to(1, 1, Some(soon));
+        b.submit_to(0, 2, None);
+        std::thread::sleep(Duration::from_millis(10));
+        // Lane 1's only entry expired; the pinned worker still gets work.
+        let (bucket, batch) = b.take_batch_pinned(1, 4).unwrap();
+        assert_eq!(bucket, 0);
+        assert_eq!(batch[0].0, 2);
+        assert_eq!(b.stats().shed_expired, 1);
     }
 
     #[test]

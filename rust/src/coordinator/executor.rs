@@ -82,7 +82,7 @@ fn record_last_error(slot: &LastError, cause: String) {
 #[derive(Clone)]
 pub struct ExecutorHandle {
     tx: Sender<Job>,
-    label: &'static str,
+    label: String,
     last_error: LastError,
     alive: Arc<AtomicUsize>,
 }
@@ -149,7 +149,7 @@ impl ExecutorHandle {
 pub struct DeviceExecutor {
     tx: Sender<Job>,
     threads: Vec<JoinHandle<()>>,
-    label: &'static str,
+    label: String,
     last_error: LastError,
     alive: Arc<AtomicUsize>,
 }
@@ -166,7 +166,7 @@ impl DeviceExecutor {
     /// that does land on these threads — diagnostics, future per-request
     /// model queries — is derivation-free from the start.
     pub fn spawn(
-        label: &'static str,
+        label: impl Into<String>,
         artifacts_dir: PathBuf,
         network: String,
         pool: usize,
@@ -175,6 +175,7 @@ impl DeviceExecutor {
         backend: ExecutorBackend,
     ) -> Result<Self> {
         assert!(pool >= 1);
+        let label = label.into();
         let (tx, rx) = channel::<Job>();
         let shared_rx = Arc::new(Mutex::new(rx));
         let (ready_tx, ready_rx) = channel::<Result<()>>();
@@ -190,12 +191,22 @@ impl DeviceExecutor {
             let ready = ready_tx.clone();
             let last_error = last_error.clone();
             let alive = alive.clone();
+            let thread_label = label.clone();
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("{label}-exec-{i}"))
                     .spawn(move || {
                         executor_loop(
-                            rx, &dir, &net, &warm, seed, ready, backend, label, last_error, alive,
+                            rx,
+                            &dir,
+                            &net,
+                            &warm,
+                            seed,
+                            ready,
+                            backend,
+                            thread_label,
+                            last_error,
+                            alive,
                         )
                     })
                     .context("spawning executor thread")?,
@@ -222,7 +233,7 @@ impl DeviceExecutor {
     pub fn handle(&self) -> ExecutorHandle {
         ExecutorHandle {
             tx: self.tx.clone(),
-            label: self.label,
+            label: self.label.clone(),
             last_error: self.last_error.clone(),
             alive: self.alive.clone(),
         }
@@ -352,7 +363,7 @@ fn executor_loop(
     profile: Option<Arc<NetworkProfile>>,
     ready: Sender<Result<()>>,
     backend: ExecutorBackend,
-    label: &'static str,
+    label: String,
     last_error: LastError,
     alive: Arc<AtomicUsize>,
 ) {
@@ -394,17 +405,17 @@ fn executor_loop(
         };
         match job {
             Job::Prefix { split, data, reply } => {
-                let _ = reply.send(contained(label, &last_error, || {
+                let _ = reply.send(contained(&label, &last_error, || {
                     runtime.run_prefix(split, &data)
                 }));
             }
             Job::Suffix { split, data, reply } => {
-                let _ = reply.send(contained(label, &last_error, || {
+                let _ = reply.send(contained(&label, &last_error, || {
                     runtime.run_suffix(split, &data)
                 }));
             }
             Job::WarmUp { splits, reply } => {
-                let _ = reply.send(contained(label, &last_error, || runtime.warm_up(&splits)));
+                let _ = reply.send(contained(&label, &last_error, || runtime.warm_up(&splits)));
             }
             Job::Shutdown => return,
         }

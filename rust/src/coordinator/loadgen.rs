@@ -1,0 +1,460 @@
+//! Deterministic load harness for the sharded serving tier.
+//!
+//! Drives N simulated clients — a configurable fleet mix over the
+//! Table-IV device classes — through a [`ServingTier`] and reports
+//! admission-to-decision latency percentiles (p50/p99/p999), throughput,
+//! shed rate and per-lane occupancy. Everything rides the deterministic
+//! sim runtime ([`crate::runtime::SimNetRuntime`]) under
+//! `ExecutorBackend::Sim`, so the harness is artifact-free and hermetic.
+//!
+//! ## Determinism
+//!
+//! Every client's request — its device class, channel rate, deadline and
+//! image — is a pure function of `(seed, client id)`, independent of
+//! thread interleaving. Because each request carries its own channel
+//! state, the shed set (provably infeasible deadlines) is decided by the
+//! shared SLO engine on request *content* alone: two runs with the same
+//! seed shed and fall back identically, whatever the scheduler does.
+//! Wall-clock quantities (latency percentiles, throughput) are the only
+//! run-to-run variables.
+//!
+//! ## Arrival models
+//!
+//! * [`ArrivalModel::Closed`] — `concurrency` client threads, each in a
+//!   submit→wait-for-outcome loop: a fixed number of outstanding
+//!   requests, the classic closed-loop harness.
+//! * [`ArrivalModel::Open`] — `producers` threads push their share of
+//!   clients as fast as admission backpressure allows while one
+//!   collector drains outcomes: an open(ish) arrival stream bounded by
+//!   the tier's own queue capacity rather than by outcome latency.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::channel::TransmitEnv;
+use crate::corpus::Corpus;
+use crate::util::rng::Rng;
+use crate::util::stats::quantile;
+
+use super::request::{InferenceOutcome, InferenceRequest};
+use super::server::Admit;
+use super::tier::ServingTier;
+
+/// How simulated clients arrive at the front door.
+#[derive(Clone, Copy, Debug)]
+pub enum ArrivalModel {
+    /// `concurrency` clients each keep exactly one request outstanding.
+    Closed { concurrency: usize },
+    /// `producers` threads submit as fast as admission backpressure
+    /// allows; a collector drains outcomes concurrently.
+    Open { producers: usize },
+}
+
+/// Load harness parameters.
+#[derive(Clone, Debug)]
+pub struct LoadGenConfig {
+    /// Simulated clients (one request each).
+    pub clients: u64,
+    pub arrival: ArrivalModel,
+    /// Seeds every per-client draw; same seed → same fleet, same shed
+    /// set.
+    pub seed: u64,
+    /// Center of the per-client effective-rate draw, bit/s.
+    pub base_rate_bps: f64,
+    /// Fractional spread of the rate draw: each client's rate is
+    /// `base × (1 − spread/2 + spread·u)`, u ∈ [0,1).
+    pub rate_spread: f64,
+    /// Fraction of clients given a provably infeasible deadline (they
+    /// are shed at admission — the harness's shed-path traffic).
+    pub infeasible_frac: f64,
+    /// Distinct images pre-generated and cycled across clients (probe
+    /// inputs vary without paying image synthesis per client).
+    pub image_pool: usize,
+    /// Device fleet mix: `(P_Tx watts, weight)` — Table-IV WLAN powers
+    /// by default. The draw is weighted; the chosen `P_Tx` also routes
+    /// the client to its device-class shard.
+    pub mix: Vec<(f64, f64)>,
+}
+
+impl LoadGenConfig {
+    /// The Table-IV WLAN fleet: five device classes with a skew toward
+    /// the lower-power handsets.
+    pub fn table_iv_wlan(clients: u64, seed: u64) -> Self {
+        LoadGenConfig {
+            clients,
+            arrival: ArrivalModel::Closed { concurrency: 8 },
+            seed,
+            base_rate_bps: 120.0e6,
+            rate_spread: 0.5,
+            infeasible_frac: 0.02,
+            image_pool: 32,
+            mix: vec![
+                (0.78, 0.30), // LG Nexus 4
+                (0.85, 0.25), // Samsung Galaxy S3
+                (1.14, 0.20), // BlackBerry Z10
+                (1.28, 0.15), // Samsung Galaxy Note 3
+                (1.10, 0.10), // Nokia N900
+            ],
+        }
+    }
+
+    /// The distinct `P_Tx` classes in the mix, in mix order — one shard
+    /// spec per class when building the tier this config will drive.
+    pub fn class_envs(&self) -> Vec<TransmitEnv> {
+        self.mix
+            .iter()
+            .map(|(p_tx, _)| TransmitEnv::with_effective_rate(self.base_rate_bps, *p_tx))
+            .collect()
+    }
+
+    /// Build client `id`'s request: a pure function of `(seed, id)`.
+    fn client_request(&self, id: u64, pool: &[PoolImage]) -> InferenceRequest {
+        let mut rng = Rng::new(self.seed ^ id.wrapping_mul(0xD6E8_FEB8_6659_FD93));
+        // Weighted device-class draw.
+        let total_w: f64 = self.mix.iter().map(|(_, w)| w.max(0.0)).sum();
+        let mut pick = rng.next_f64() * total_w.max(f64::MIN_POSITIVE);
+        let mut p_tx = self.mix.last().map(|(p, _)| *p).unwrap_or(1.0);
+        for (p, w) in &self.mix {
+            let w = w.max(0.0);
+            if pick < w {
+                p_tx = *p;
+                break;
+            }
+            pick -= w;
+        }
+        let spread = self.rate_spread.clamp(0.0, 2.0);
+        let rate = self.base_rate_bps * (1.0 - spread * 0.5 + spread * rng.next_f64());
+        let img = &pool[(id as usize) % pool.len()];
+        let deadline_s = if rng.next_f64() < self.infeasible_frac {
+            // Provably infeasible at any channel state: shed at admission.
+            1e-12
+        } else {
+            10.0
+        };
+        InferenceRequest::new(id, img.tensor.clone(), img.pixels.clone(), img.w, img.h)
+            .with_env(TransmitEnv::with_effective_rate(rate, p_tx))
+            .with_deadline(deadline_s)
+    }
+
+    fn image_pool(&self) -> Vec<PoolImage> {
+        let n = self.image_pool.max(1);
+        Corpus::new(32, 32, self.seed ^ 0x517C_C1B7_2722_0A95)
+            .iter(n)
+            .map(|img| PoolImage {
+                tensor: img.to_f32_nhwc(),
+                pixels: img.pixels,
+                w: img.w,
+                h: img.h,
+            })
+            .collect()
+    }
+}
+
+struct PoolImage {
+    tensor: Vec<f32>,
+    pixels: Vec<f64>,
+    w: usize,
+    h: usize,
+}
+
+/// What one load run measured.
+#[derive(Clone, Debug, Default)]
+pub struct LoadReport {
+    pub clients: u64,
+    /// Requests that resolved to an outcome (admitted, not shed).
+    pub completed: u64,
+    pub ok: u64,
+    pub degraded: u64,
+    pub failed: u64,
+    /// Requests shed at admission (infeasible deadline).
+    pub shed: u64,
+    /// Completed requests that took the FISC fallback.
+    pub fallback_fisc: u64,
+    pub wall_s: f64,
+    /// Completed requests per wall-clock second, across all shards.
+    pub throughput_rps: f64,
+    /// `shed / clients`.
+    pub shed_rate: f64,
+    /// Admission-to-decision latency (`t_queue + t_decide`) percentiles,
+    /// nanoseconds.
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub p999_ns: f64,
+    /// Per-γ-lane batches drained, fleet-wide (lane index, batches).
+    pub lane_occupancy: Vec<(usize, u64)>,
+}
+
+/// Per-thread tally folded into the final report.
+#[derive(Default)]
+struct Tally {
+    latencies_ns: Vec<f64>,
+    ok: u64,
+    degraded: u64,
+    failed: u64,
+    shed: u64,
+    fallback_fisc: u64,
+}
+
+impl Tally {
+    fn absorb_outcome(&mut self, outcome: &InferenceOutcome) {
+        match outcome {
+            InferenceOutcome::Ok(_) => self.ok += 1,
+            InferenceOutcome::Degraded(_) => self.degraded += 1,
+            InferenceOutcome::Failed(_) => self.failed += 1,
+        }
+        if let Some(resp) = outcome.response() {
+            if resp.fallback_fisc {
+                self.fallback_fisc += 1;
+            }
+            self.latencies_ns
+                .push((resp.t_queue + resp.t_decide).as_nanos() as f64);
+        }
+    }
+
+    fn merge(&mut self, other: Tally) {
+        self.latencies_ns.extend(other.latencies_ns);
+        self.ok += other.ok;
+        self.degraded += other.degraded;
+        self.failed += other.failed;
+        self.shed += other.shed;
+        self.fallback_fisc += other.fallback_fisc;
+    }
+}
+
+/// Drive `cfg.clients` simulated clients through the tier and report.
+pub fn run(tier: &ServingTier, cfg: &LoadGenConfig) -> Result<LoadReport> {
+    if cfg.clients == 0 {
+        return Err(anyhow!("load run needs at least one client"));
+    }
+    let pool = cfg.image_pool();
+    let t0 = Instant::now();
+    let tally = match cfg.arrival {
+        ArrivalModel::Closed { concurrency } => {
+            run_closed(tier, cfg, &pool, concurrency.max(1))?
+        }
+        ArrivalModel::Open { producers } => run_open(tier, cfg, &pool, producers.max(1))?,
+    };
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let completed = tally.ok + tally.degraded + tally.failed;
+    let (p50_ns, p99_ns, p999_ns) = if tally.latencies_ns.is_empty() {
+        (0.0, 0.0, 0.0)
+    } else {
+        (
+            quantile(&tally.latencies_ns, 0.50),
+            quantile(&tally.latencies_ns, 0.99),
+            quantile(&tally.latencies_ns, 0.999),
+        )
+    };
+    let lane_occupancy = tier
+        .fleet_snapshot()
+        .lane_batches
+        .into_iter()
+        .collect::<Vec<_>>();
+    Ok(LoadReport {
+        clients: cfg.clients,
+        completed,
+        ok: tally.ok,
+        degraded: tally.degraded,
+        failed: tally.failed,
+        shed: tally.shed,
+        fallback_fisc: tally.fallback_fisc,
+        wall_s,
+        throughput_rps: if wall_s > 0.0 {
+            completed as f64 / wall_s
+        } else {
+            0.0
+        },
+        shed_rate: tally.shed as f64 / cfg.clients as f64,
+        p50_ns,
+        p99_ns,
+        p999_ns,
+        lane_occupancy,
+    })
+}
+
+/// Closed loop: `concurrency` client threads, each one outstanding
+/// request at a time. Client ids are strided across threads, so the set
+/// of requests (and therefore the shed set) is independent of the thread
+/// count.
+fn run_closed(
+    tier: &ServingTier,
+    cfg: &LoadGenConfig,
+    pool: &[PoolImage],
+    concurrency: usize,
+) -> Result<Tally> {
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(concurrency);
+        for t in 0..concurrency {
+            handles.push(scope.spawn(move || -> Result<Tally> {
+                let mut tally = Tally::default();
+                let (tx, rx) = std::sync::mpsc::channel();
+                let mut id = t as u64;
+                while id < cfg.clients {
+                    let req = cfg.client_request(id, pool);
+                    match tier.admit(req, &tx) {
+                        Admit::Queued => {
+                            let outcome = rx
+                                .recv()
+                                .map_err(|_| anyhow!("workers gone mid-run"))?;
+                            tally.absorb_outcome(&outcome);
+                        }
+                        Admit::Shed => tally.shed += 1,
+                        Admit::Closed => return Err(anyhow!("tier closed mid-run")),
+                    }
+                    id += concurrency as u64;
+                }
+                Ok(tally)
+            }));
+        }
+        let mut total = Tally::default();
+        for h in handles {
+            total.merge(h.join().map_err(|_| anyhow!("client thread panicked"))??);
+        }
+        Ok(total)
+    })
+}
+
+/// Open(ish) loop: `producers` threads submit their stride of clients as
+/// fast as queue backpressure allows; the calling thread collects every
+/// outcome until all reply senders are gone.
+fn run_open(
+    tier: &ServingTier,
+    cfg: &LoadGenConfig,
+    pool: &[PoolImage],
+    producers: usize,
+) -> Result<Tally> {
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(producers);
+        for t in 0..producers {
+            let tx = tx.clone();
+            handles.push(scope.spawn(move || -> Result<u64> {
+                let mut shed = 0u64;
+                let mut id = t as u64;
+                while id < cfg.clients {
+                    let req = cfg.client_request(id, pool);
+                    match tier.admit(req, &tx) {
+                        Admit::Queued => {}
+                        Admit::Shed => shed += 1,
+                        Admit::Closed => return Err(anyhow!("tier closed mid-run")),
+                    }
+                    id += producers as u64;
+                }
+                Ok(shed)
+            }));
+        }
+        drop(tx);
+        // Collector: drains until every producer-held and in-flight reply
+        // sender is dropped (i.e. all admitted requests resolved).
+        let mut tally = Tally::default();
+        while let Ok(outcome) = rx.recv() {
+            tally.absorb_outcome(&outcome);
+        }
+        for h in handles {
+            tally.shed += h.join().map_err(|_| anyhow!("producer panicked"))??;
+        }
+        Ok(tally)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use std::path::PathBuf;
+
+    use crate::coordinator::{
+        CoordinatorConfig, ExecutorBackend, RetryPolicy, ServingTier, ServingTierConfig,
+    };
+
+    fn base_config() -> CoordinatorConfig {
+        CoordinatorConfig {
+            artifacts_dir: PathBuf::from("unused"),
+            network: "tiny_alexnet".to_string(),
+            env: TransmitEnv::with_effective_rate(120.0e6, 0.78),
+            jpeg_quality: 60,
+            cloud_pool: 1,
+            workers: 2,
+            jitter: 0.0,
+            time_scale: 0.0,
+            force_split: None,
+            warm_splits: Vec::new(),
+            batch_max: 4,
+            gamma_coherent: true,
+            shed_infeasible: true,
+            backend: ExecutorBackend::Sim,
+            faults: None,
+            retry: RetryPolicy::default(),
+            seed: 11,
+        }
+    }
+
+    fn tier_for(cfg: &LoadGenConfig) -> ServingTier {
+        ServingTier::new(ServingTierConfig::per_class(
+            base_config(),
+            &cfg.class_envs(),
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn closed_run_accounts_every_client() {
+        let mut cfg = LoadGenConfig::table_iv_wlan(120, 5);
+        cfg.arrival = ArrivalModel::Closed { concurrency: 4 };
+        cfg.infeasible_frac = 0.1;
+        let tier = tier_for(&cfg);
+        let report = run(&tier, &cfg).unwrap();
+        assert_eq!(report.clients, 120);
+        assert_eq!(report.completed + report.shed, 120);
+        assert!(report.shed > 0, "no shed traffic with 10% infeasible");
+        assert_eq!(report.failed, 0);
+        assert!(report.throughput_rps > 0.0);
+        assert!(report.p50_ns <= report.p99_ns && report.p99_ns <= report.p999_ns);
+        assert!(!report.lane_occupancy.is_empty());
+        assert!((report.shed_rate - report.shed as f64 / 120.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn open_run_matches_closed_run_counts() {
+        let mut cfg = LoadGenConfig::table_iv_wlan(100, 9);
+        cfg.infeasible_frac = 0.1;
+        cfg.arrival = ArrivalModel::Closed { concurrency: 3 };
+        let closed = run(&tier_for(&cfg), &cfg).unwrap();
+        cfg.arrival = ArrivalModel::Open { producers: 3 };
+        let open = run(&tier_for(&cfg), &cfg).unwrap();
+        // The request set is a pure function of (seed, id): both arrival
+        // models see identical shed/ok counts.
+        assert_eq!(closed.shed, open.shed);
+        assert_eq!(closed.ok, open.ok);
+        assert_eq!(closed.completed, open.completed);
+    }
+
+    #[test]
+    fn same_seed_is_deterministic_across_runs_and_concurrency() {
+        let mut cfg = LoadGenConfig::table_iv_wlan(100, 31);
+        cfg.infeasible_frac = 0.1;
+        cfg.arrival = ArrivalModel::Closed { concurrency: 2 };
+        let a = run(&tier_for(&cfg), &cfg).unwrap();
+        cfg.arrival = ArrivalModel::Closed { concurrency: 7 };
+        let b = run(&tier_for(&cfg), &cfg).unwrap();
+        assert_eq!(a.shed, b.shed);
+        assert_eq!(a.ok, b.ok);
+        assert_eq!(a.fallback_fisc, b.fallback_fisc);
+        // A different seed draws a different fleet.
+        let other = LoadGenConfig {
+            seed: 32,
+            ..cfg.clone()
+        };
+        let c = run(&tier_for(&other), &other).unwrap();
+        assert!(c.shed != a.shed || c.ok != a.ok || c.p50_ns != a.p50_ns);
+    }
+
+    #[test]
+    fn zero_clients_is_an_error() {
+        let cfg = LoadGenConfig::table_iv_wlan(0, 1);
+        let tier = tier_for(&cfg);
+        assert!(run(&tier, &cfg).is_err());
+    }
+}

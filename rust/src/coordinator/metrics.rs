@@ -71,7 +71,10 @@ pub struct MetricsSnapshot {
     /// Wall-clock latency stats.
     pub total_latency: Duration,
     pub max_latency: Duration,
-    /// Stage totals.
+    /// Stage totals. `queue` is the admission-queue wait (zero on the
+    /// direct `process*` paths); admission-to-decision latency is
+    /// `queue + decide`.
+    pub queue: Duration,
     pub decide: Duration,
     pub client: Duration,
     pub channel: Duration,
@@ -79,6 +82,49 @@ pub struct MetricsSnapshot {
 }
 
 impl MetricsSnapshot {
+    /// Fold another snapshot into this one: counters and energy/latency
+    /// totals sum, histograms merge per key, `max_latency` takes the max.
+    /// This is the fleet-aggregate path — a [`super::ServingTier`] merges
+    /// its per-shard snapshots into one report with it, and any
+    /// multi-coordinator deployment can combine snapshots without
+    /// hand-summing fields.
+    pub fn merge(&mut self, other: &MetricsSnapshot) {
+        self.requests += other.requests;
+        for (k, v) in &other.split_counts {
+            *self.split_counts.entry(*k).or_insert(0) += v;
+        }
+        for (k, v) in &other.segment_counts {
+            *self.segment_counts.entry(*k).or_insert(0) += v;
+        }
+        self.batches += other.batches;
+        self.batch_requests += other.batch_requests;
+        for (k, v) in &other.lane_batches {
+            *self.lane_batches.entry(*k).or_insert(0) += v;
+        }
+        self.shed_infeasible += other.shed_infeasible;
+        self.slo_missing += other.slo_missing;
+        self.schedule_seeded += other.schedule_seeded;
+        self.schedule_misses_post_warm += other.schedule_misses_post_warm;
+        self.retries_total += other.retries_total;
+        self.transfers_dropped += other.transfers_dropped;
+        self.outage_rejections += other.outage_rejections;
+        self.fallback_fisc += other.fallback_fisc;
+        self.degraded_mode_entered += other.degraded_mode_entered;
+        self.deadline_abandoned += other.deadline_abandoned;
+        self.failed_requests += other.failed_requests;
+        self.wasted_retry_energy_j += other.wasted_retry_energy_j;
+        self.client_energy_j += other.client_energy_j;
+        self.transmit_energy_j += other.transmit_energy_j;
+        self.transmit_bits += other.transmit_bits;
+        self.total_latency += other.total_latency;
+        self.max_latency = self.max_latency.max(other.max_latency);
+        self.queue += other.queue;
+        self.decide += other.decide;
+        self.client += other.client;
+        self.channel += other.channel;
+        self.cloud += other.cloud;
+    }
+
     pub fn mean_latency(&self) -> Duration {
         if self.requests == 0 {
             Duration::ZERO
@@ -216,6 +262,7 @@ impl Metrics {
         m.transmit_bits += resp.transmit_bits;
         m.total_latency += resp.t_total;
         m.max_latency = m.max_latency.max(resp.t_total);
+        m.queue += resp.t_queue;
         m.decide += resp.t_decide;
         m.client += resp.t_client;
         m.channel += resp.t_channel;
@@ -250,6 +297,13 @@ impl Metrics {
         let mut m = self.inner.lock().unwrap();
         m.schedule_seeded += seeded as u64;
         m.schedule_misses_post_warm += misses_post_warm;
+    }
+
+    /// Record mapper derivations observed after warm-up, separately from
+    /// the one-time seeding — long-lived shard workers warm once at spawn
+    /// and then account per drained batch.
+    pub fn record_schedule_misses(&self, misses_post_warm: u64) {
+        self.lock().schedule_misses_post_warm += misses_post_warm;
     }
 
     /// Record one uplink/cloud retry (event-counted at retry time).
@@ -322,6 +376,7 @@ mod tests {
             retries: 0,
             wasted_energy_j: 0.0,
             fallback_fisc: false,
+            t_queue: Duration::from_micros(5),
             t_decide: Duration::from_micros(2),
             t_client: Duration::from_millis(1),
             t_channel: Duration::from_millis(2),
@@ -428,6 +483,75 @@ mod tests {
         assert!(report.contains("degraded mode"));
         assert!(report.contains("deadline abandoned: 1"));
         assert!(report.contains("failed requests   : 1"));
+    }
+
+    #[test]
+    fn merge_sums_counters_and_maxes_latency() {
+        let a = Metrics::new();
+        a.record(&resp(2, 1e-3));
+        a.record(&resp(0, 2e-3));
+        a.record_batch(0, 2);
+        a.record_shed();
+        a.record_retry();
+        a.record_transfer_drop(1e-3);
+        a.record_degraded_mode();
+        a.record_schedule_warm(8, 0);
+        let b = Metrics::new();
+        b.record(&resp(2, 3e-3));
+        b.record_batch(1, 1);
+        b.record_fallback_fisc();
+        b.record_failed();
+        b.record_schedule_warm(8, 2);
+
+        let mut fleet = a.snapshot();
+        fleet.merge(&b.snapshot());
+        assert_eq!(fleet.requests, 3);
+        assert_eq!(fleet.split_counts[&2], 2);
+        assert_eq!(fleet.split_counts[&0], 1);
+        assert_eq!(fleet.segment_counts[&1], 3);
+        assert_eq!(fleet.batches, 2);
+        assert_eq!(fleet.batch_requests, 3);
+        assert_eq!(fleet.lane_batches[&0], 1);
+        assert_eq!(fleet.lane_batches[&1], 1);
+        assert_eq!(fleet.shed_infeasible, 1);
+        assert_eq!(fleet.retries_total, 1);
+        assert_eq!(fleet.transfers_dropped, 1);
+        assert_eq!(fleet.fallback_fisc, 1);
+        assert_eq!(fleet.degraded_mode_entered, 1);
+        assert_eq!(fleet.failed_requests, 1);
+        assert_eq!(fleet.schedule_seeded, 16);
+        assert_eq!(fleet.schedule_misses_post_warm, 2);
+        assert!((fleet.wasted_retry_energy_j - 1e-3).abs() < 1e-15);
+        assert!((fleet.client_energy_j - 6e-3).abs() < 1e-15);
+        assert_eq!(fleet.transmit_bits, 3000);
+        assert_eq!(fleet.total_latency, Duration::from_millis(18));
+        assert_eq!(fleet.max_latency, Duration::from_millis(6));
+        assert_eq!(fleet.queue, Duration::from_micros(15));
+        assert_eq!(fleet.decide, Duration::from_micros(6));
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let a = Metrics::new();
+        a.record(&resp(1, 1e-3));
+        let before = a.snapshot();
+        let mut merged = before.clone();
+        merged.merge(&MetricsSnapshot::default());
+        assert_eq!(merged.requests, before.requests);
+        assert_eq!(merged.total_latency, before.total_latency);
+        assert_eq!(merged.max_latency, before.max_latency);
+        assert_eq!(merged.split_counts, before.split_counts);
+    }
+
+    #[test]
+    fn schedule_misses_accumulate_separately_from_seeding() {
+        let m = Metrics::new();
+        m.record_schedule_warm(8, 0);
+        m.record_schedule_misses(0);
+        m.record_schedule_misses(2);
+        let s = m.snapshot();
+        assert_eq!(s.schedule_seeded, 8);
+        assert_eq!(s.schedule_misses_post_warm, 2);
     }
 
     #[test]

@@ -1,29 +1,55 @@
-//! The NeuPart serving coordinator (paper §VII applied as a system).
+//! The NeuPart serving tier (paper §VII applied as a system).
 //!
-//! A working client/cloud serving stack over real PJRT executables:
+//! A sharded client/cloud serving stack — the request path is
+//! **route → shard → lane → executor**:
 //!
 //! ```text
-//!  requests ──► queue ──► worker pool ──┬─ probe Sparsity-In (JPEG DCT)
-//!                                       ├─ Alg. 2 partition decision
-//!                                       │    (PartitionPolicy trait)
-//!                                       ├─ client executor (PJRT, 1 thread
-//!                                       │    = the one mobile accelerator)
-//!                                       ├─ quantize + RLC encode
-//!                                       ├─ channel simulator (energy/time)
-//!                                       └─ cloud executor pool (PJRT)
+//!  request ──► route(network, device-class)        lock-free front door
+//!                 │                                 (ServingTier::route)
+//!                 ▼
+//!          CoordinatorShard ──► γ lane ──► pinned worker ──┬─ probe Sparsity-In
+//!          (one per (network,    (envelope   (worker i      ├─ Alg. 2 partition
+//!           device-class) key;    segment     prefers lane  │    decision
+//!           own queue, executors, of γ =      i mod lanes)  ├─ client executor
+//!           channel, retry path,  P_Tx/B_e)                 ├─ quantize + RLC
+//!           degraded latch)                                 ├─ channel simulator
+//!                                                           └─ cloud executor pool
 //! ```
 //!
+//! * **route** — [`ServingTier::route`] maps a request's (network,
+//!   device-class) to its shard over an immutable table built at
+//!   construction: no lock, and admission never crosses shard
+//!   boundaries. The class comes from the reported env's `P_Tx`
+//!   ([`crate::partition::device_class`]); the network from
+//!   [`InferenceRequest::network`].
+//! * **shard** — a [`CoordinatorShard`] owns every piece of serving
+//!   state for its key: registry-shared decision engines, its own
+//!   γ-lane [`Batcher`], executor pool, channel, retry path and
+//!   degraded-mode latch. [`Coordinator`] is the single-shard wrapper
+//!   keeping the original surface; a [`ServingTier`] composes N shards
+//!   with fleet-merged metrics ([`ServingTier::fleet_snapshot`],
+//!   [`MetricsSnapshot::merge`], `ChannelStats::merge`).
+//! * **lane** — requests queue in the γ lane of their admission-time
+//!   channel state (details below); workers drain whole single-lane
+//!   batches, pinned to a preferred lane so per-segment state stays hot.
+//! * **executor** — each executor thread owns its runtime (PJRT handles
+//!   are `Rc`-based and thread-local; or the deterministic sim
+//!   stand-in) and talks over mpsc channels. The offline build has no
+//!   tokio: the event loop is std threads + channels (DESIGN.md
+//!   §"Offline substitutions").
+//!
 //! Every partition decision routes through the
-//! [`crate::partition::PartitionPolicy`] trait: the coordinator holds an
+//! [`crate::partition::PartitionPolicy`] trait: each shard holds an
 //! [`crate::partition::EnergyPolicy`] over an engine obtained from a
 //! [`crate::partition::PolicyRegistry`] (pass a shared registry via
-//! [`Coordinator::with_registry`] to reuse one envelope table across
-//! every connection of a (network, device P_Tx class)).
+//! [`Coordinator::with_registry`] / [`ServingTier::with_registry`] to
+//! reuse one envelope table across every shard and connection of a
+//! (network, device P_Tx class)).
 //!
-//! PJRT handles are thread-local (`Rc`), so each executor thread owns its
-//! own client + compiled-executable cache; workers talk to them over mpsc
-//! channels. The offline build has no tokio: the event loop is std threads
-//! + channels (DESIGN.md §"Offline substitutions").
+//! The [`loadgen`] harness drives millions of simulated clients — a
+//! seeded Table-IV device mix — through a tier over the hermetic sim
+//! runtime, reporting p50/p99/p999 admission-to-decision latency,
+//! throughput, shed rate and per-lane occupancy deterministically.
 //!
 //! ## γ-coherent admission (channel-state quantization)
 //!
@@ -96,10 +122,11 @@
 //!    abandoned prefix, the full in-situ rerun, and the joules wasted on
 //!    failed transfers ([`InferenceResponse::wasted_energy_j`]).
 //! 4. **Degraded mode.** A cloud pool found dead
-//!    ([`ExecutorHandle::alive_threads`] == 0) latches the coordinator
+//!    ([`ExecutorHandle::alive_threads`] == 0) latches *that shard*
 //!    into client-only mode: later requests route straight to FISC
-//!    without burning retries ([`Coordinator::is_degraded`],
-//!    [`MetricsSnapshot::degraded_mode_entered`]).
+//!    without burning retries ([`CoordinatorShard::is_degraded`],
+//!    [`MetricsSnapshot::degraded_mode_entered`]). Sibling shards keep
+//!    serving — fault state never crosses shard boundaries.
 //! 5. **Isolation.** Executor jobs run under panic containment (a
 //!    poisoned request fails alone; the thread and its siblings survive),
 //!    and executor-death errors carry the real recorded cause instead of
@@ -120,14 +147,18 @@
 
 pub mod batcher;
 pub mod executor;
+pub mod loadgen;
 pub mod metrics;
 pub mod request;
 pub mod retry;
 pub mod server;
+pub mod tier;
 
 pub use batcher::{Batcher, BatcherStats, BucketStats, Submit};
 pub use executor::{DeviceExecutor, ExecutorBackend, ExecutorHandle};
+pub use loadgen::{ArrivalModel, LoadGenConfig, LoadReport};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use request::{InferenceFailure, InferenceOutcome, InferenceRequest, InferenceResponse};
 pub use retry::{RetryPolicy, RetryVerdict};
-pub use server::{Coordinator, CoordinatorConfig};
+pub use server::{Admit, Coordinator, CoordinatorConfig, CoordinatorShard};
+pub use tier::{ServingTier, ServingTierConfig, ShardSpec};

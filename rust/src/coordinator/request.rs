@@ -5,6 +5,11 @@ use std::time::Duration;
 use crate::channel::TransmitEnv;
 
 /// One inference request: a camera image.
+///
+/// The `id` is the request's identity through the whole serving stack:
+/// outcomes carry it ([`super::InferenceOutcome::id`]) and the sharded
+/// fan-out/fan-in path reassembles results *by id*, never by position —
+/// ids may be arbitrary u64s (client-assigned), not a dense range.
 #[derive(Clone, Debug)]
 pub struct InferenceRequest {
     pub id: u64,
@@ -18,7 +23,8 @@ pub struct InferenceRequest {
     /// coordinator's configured env, jittered per request when the
     /// coordinator's jitter knob is on). Drives the γ-bucketed admission
     /// path: requests are grouped by the envelope segment containing their
-    /// γ = P_Tx/B_e.
+    /// γ = P_Tx/B_e — and, in a sharded tier, the transmit power picks the
+    /// request's (network, device-class) shard.
     pub env: Option<TransmitEnv>,
     /// End-to-end inference deadline in seconds (`None` = best effort).
     /// At admission the coordinator compares the delay-envelope lower
@@ -26,6 +32,45 @@ pub struct InferenceRequest {
     /// sheds provably infeasible requests before any compute is spent
     /// (`MetricsSnapshot::shed_infeasible`).
     pub deadline_s: Option<f64>,
+    /// Target network for tier routing (`None` = the tier's default
+    /// network). A single coordinator serves one network and ignores it.
+    pub network: Option<String>,
+}
+
+impl InferenceRequest {
+    /// A best-effort request at the coordinator's configured channel
+    /// state. Use the `with_*` builders to attach a channel report, a
+    /// deadline, or a tier-routing network hint.
+    pub fn new(id: u64, tensor: Vec<f32>, pixels: Vec<f64>, width: usize, height: usize) -> Self {
+        InferenceRequest {
+            id,
+            tensor,
+            pixels,
+            width,
+            height,
+            env: None,
+            deadline_s: None,
+            network: None,
+        }
+    }
+
+    /// Attach a client-reported channel state.
+    pub fn with_env(mut self, env: TransmitEnv) -> Self {
+        self.env = Some(env);
+        self
+    }
+
+    /// Attach an end-to-end deadline (seconds).
+    pub fn with_deadline(mut self, deadline_s: f64) -> Self {
+        self.deadline_s = Some(deadline_s);
+        self
+    }
+
+    /// Attach a tier-routing network hint.
+    pub fn with_network(mut self, network: impl Into<String>) -> Self {
+        self.network = Some(network.into());
+        self
+    }
 }
 
 /// Where each piece of the computation ran.
@@ -73,6 +118,11 @@ pub struct InferenceResponse {
     /// The request completed via the fully-in-situ fallback (split forced
     /// to |L|) after the channel/cloud path was exhausted.
     pub fallback_fisc: bool,
+    /// Wall-clock spent waiting in the admission queue before a worker
+    /// drained this request (zero on the direct `process*` paths).
+    /// Admission-to-decision latency — what the load harness reports as
+    /// p50/p99/p999 — is `t_queue + t_decide`.
+    pub t_queue: Duration,
     /// Wall-clock spent in each stage.
     pub t_decide: Duration,
     pub t_client: Duration,
@@ -163,6 +213,20 @@ mod tests {
     use super::*;
 
     #[test]
+    fn request_builder_defaults_and_overrides() {
+        let req = InferenceRequest::new(9, vec![0.5; 4], vec![128.0; 12], 2, 2);
+        assert_eq!(req.id, 9);
+        assert!(req.env.is_none() && req.deadline_s.is_none() && req.network.is_none());
+        let req = req
+            .with_env(crate::channel::TransmitEnv::with_effective_rate(80e6, 0.78))
+            .with_deadline(0.25)
+            .with_network("tiny_alexnet");
+        assert_eq!(req.env.unwrap().p_tx_w, 0.78);
+        assert_eq!(req.deadline_s, Some(0.25));
+        assert_eq!(req.network.as_deref(), Some("tiny_alexnet"));
+    }
+
+    #[test]
     fn top1_is_argmax() {
         let resp = InferenceResponse {
             id: 1,
@@ -178,6 +242,7 @@ mod tests {
             retries: 0,
             wasted_energy_j: 0.0,
             fallback_fisc: false,
+            t_queue: Duration::ZERO,
             t_decide: Duration::ZERO,
             t_client: Duration::ZERO,
             t_channel: Duration::ZERO,
@@ -204,6 +269,7 @@ mod tests {
             retries: 3,
             wasted_energy_j: 2e-4,
             fallback_fisc: true,
+            t_queue: Duration::ZERO,
             t_decide: Duration::ZERO,
             t_client: Duration::ZERO,
             t_channel: Duration::ZERO,

@@ -1,5 +1,19 @@
-//! The coordinator proper: request queue, worker pool, per-request
-//! partition decision and fault-tolerant client→channel→cloud execution.
+//! The coordinator shard: γ-lane admission queue, pinned worker pool,
+//! per-request partition decision and fault-tolerant
+//! client→channel→cloud execution.
+//!
+//! A [`CoordinatorShard`] is the unit of serving state for one
+//! (network, device-class) key — the same key [`PolicyRegistry`] shares
+//! decision engines under. Each shard owns its registry-shared engines,
+//! its own [`Batcher`] of γ lanes, its own executor pool, channel, retry
+//! path and degraded-mode latch, so admission never crosses shard
+//! boundaries. Shards are composed two ways:
+//!
+//! * [`Coordinator`] — the single-shard compatibility wrapper: one shard
+//!   plus its worker threads, exposing the original serve/process
+//!   surface.
+//! * [`super::ServingTier`] — N shards behind a lock-free route table
+//!   (`route(request) → shard`), with fleet-aggregated metrics.
 //!
 //! Every decision routes through the [`PartitionPolicy`] trait
 //! ([`EnergyPolicy`] over an engine shared via [`PolicyRegistry`]) — the
@@ -15,6 +29,10 @@
 //! per-request jitter spreads their γ values (a segment-pinned
 //! [`DecisionContext`] skips the breakpoint search but re-evaluates
 //! exactly, so the chosen splits match the per-request path bit-for-bit).
+//! Workers are *pinned* to hot lanes (`worker i` prefers lane
+//! `i mod lanes`, falling back to the globally oldest head when its lane
+//! is empty), keeping each worker's seeded schedule-cache state warm for
+//! one segment without ever idling while other lanes have work.
 //! Requests in degenerate channel states (B_e ≤ 0, γ ≤ 0) fall into a
 //! dedicated overflow lane and take the guarded scan path.
 //!
@@ -33,16 +51,19 @@
 //!
 //! With a [`FaultConfig`] installed ([`CoordinatorConfig::faults`]) the
 //! uplink drops, stalls and blacks out; executors can die or panic. The
-//! coordinator survives all of it per request (see
-//! [`crate::coordinator`] module docs): retries with
-//! [`CoordinatorConfig::retry`], falls back to fully in-situ execution
-//! when the remote path is exhausted, flips to client-only degraded mode
-//! when the cloud pool is down entirely, and resolves every admitted
-//! request to an [`InferenceOutcome`].
+//! shard survives all of it per request (see [`crate::coordinator`]
+//! module docs): retries with [`CoordinatorConfig::retry`], falls back to
+//! fully in-situ execution when the remote path is exhausted, flips to
+//! client-only degraded mode when *its* cloud pool is down entirely
+//! (sibling shards keep serving), and resolves every admitted request to
+//! an [`InferenceOutcome`].
 
+use std::collections::{BTreeMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
@@ -59,8 +80,8 @@ use crate::compress::jpeg::compress_rgb;
 use crate::compress::rlc;
 use crate::config::Config;
 use crate::partition::{
-    Decision, DecisionContext, DelayModel, EnergyPolicy, PartitionPolicy, Partitioner,
-    PolicyRegistry, SloPartitioner, FISC_OUTPUT_BITS,
+    device_class, Decision, DecisionContext, DelayModel, EnergyPolicy, PartitionPolicy,
+    Partitioner, PolicyRegistry, SloPartitioner, FISC_OUTPUT_BITS,
 };
 use crate::util::rng::Rng;
 
@@ -135,9 +156,38 @@ impl CoordinatorConfig {
     }
 }
 
-/// The serving coordinator (see module docs of [`crate::coordinator`]).
-pub struct Coordinator {
+/// What the front door did with a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admit {
+    /// Queued into a γ lane; the outcome will arrive on the reply sender.
+    Queued,
+    /// Shed at admission (provably infeasible deadline, counted in
+    /// `MetricsSnapshot::shed_infeasible`); no outcome will arrive.
+    Shed,
+    /// The shard is shutting down; no outcome will arrive.
+    Closed,
+}
+
+/// One admitted request riding the shard's γ lanes: the request, its
+/// admission-time channel state, and the oneshot-style reply route its
+/// outcome takes back to whoever admitted it.
+struct Admitted {
+    req: InferenceRequest,
+    env: TransmitEnv,
+    reply: Sender<InferenceOutcome>,
+}
+
+/// One serving shard (see module docs): the engines, queue, executors and
+/// fault state for a single (network, device-class) key.
+pub struct CoordinatorShard {
     config: CoordinatorConfig,
+    /// Decorrelates this shard's deterministic streams (retry backoff)
+    /// from sibling shards built off the same base seed. 0 for a
+    /// single-shard deployment, preserving the pre-shard streams.
+    salt: u64,
+    /// Table-IV device class of this shard's configured `P_Tx` — the
+    /// second half of its (network, device-class) identity.
+    class: String,
     /// Shared decision engine (from the registry entry for this
     /// (network, device P_Tx class)).
     partitioner: Arc<Partitioner>,
@@ -153,24 +203,29 @@ pub struct Coordinator {
     client: DeviceExecutor,
     cloud: DeviceExecutor,
     channel: Arc<Channel>,
-    /// Latched when the cloud pool is found dead: every subsequent
-    /// request routes client-only (FISC) without burning retries first.
+    /// Latched when this shard's cloud pool is found dead: every
+    /// subsequent request routes client-only (FISC) without burning
+    /// retries first. Per-shard — siblings are unaffected.
     degraded: AtomicBool,
+    /// The shard's persistent admission queue (one γ lane per envelope
+    /// segment plus overflow). Workers drain it until `shutdown`.
+    batcher: Batcher<Admitted>,
+    /// Admission-time jitter stream for requests that don't report their
+    /// own channel state.
+    admission_rng: Mutex<Rng>,
     pub metrics: Arc<Metrics>,
 }
 
-impl Coordinator {
-    /// Build the serving stack with a private policy registry.
-    pub fn new(config: CoordinatorConfig) -> Result<Self> {
-        Self::with_registry(config, &PolicyRegistry::new())
-    }
-
-    /// Build the serving stack: analytic models + executor threads, with
-    /// the decision engine taken from (or built into) `registry` — a
-    /// fleet coordinator passes one shared registry so every connection
-    /// of the same (network, device P_Tx class) reuses one envelope
-    /// table.
-    pub fn with_registry(config: CoordinatorConfig, registry: &PolicyRegistry) -> Result<Self> {
+impl CoordinatorShard {
+    /// Build one shard with the decision engine taken from (or built
+    /// into) `registry`. `salt` decorrelates per-shard deterministic
+    /// streams; pass 0 for a single-shard deployment (bit-compatible with
+    /// the pre-shard coordinator).
+    pub fn new_in(
+        config: CoordinatorConfig,
+        registry: &PolicyRegistry,
+        salt: u64,
+    ) -> Result<Self> {
         let net = Network::by_name(&config.network)
             .ok_or_else(|| anyhow!("unknown network '{}'", config.network))?;
         let entry = registry
@@ -179,15 +234,16 @@ impl Coordinator {
         let partitioner = entry.partitioner().clone();
         let policy = entry.policy();
         let metrics = Arc::new(Metrics::new());
+        let class = device_class(config.env.p_tx_w);
         // The shared compiled profile: seeds executor/worker thread-local
         // schedule caches, and rebuilds the delay model when the registry
         // entry came from an imported table with no latency data (a v1
         // `EnvelopeTable`). Deadline requests and infeasible-shedding then
-        // still have a correct SLO engine — but the per-coordinator
-        // rebuild is counted in `MetricsSnapshot::slo_missing` instead of
-        // degrading silently (v2 artifacts carry the latency tables, so
-        // imported fleets share one engine per device class and this
-        // counter stays 0).
+        // still have a correct SLO engine — but the per-shard rebuild is
+        // counted in `MetricsSnapshot::slo_missing` instead of degrading
+        // silently (v2 artifacts carry the latency tables, so imported
+        // fleets share one engine per device class and this counter
+        // stays 0).
         let profile = CnnErgy::inference_8bit().compiled(&net);
         let slo = match entry.slo_partitioner() {
             Some(slo) => slo.clone(),
@@ -200,7 +256,7 @@ impl Coordinator {
             }
         };
         let client = DeviceExecutor::spawn(
-            "client",
+            format!("client@{class}"),
             config.artifacts_dir.clone(),
             config.network.clone(),
             1,
@@ -210,7 +266,7 @@ impl Coordinator {
         )
         .context("spawning client executor")?;
         let cloud = DeviceExecutor::spawn(
-            "cloud",
+            format!("cloud@{class}"),
             config.artifacts_dir.clone(),
             config.network.clone(),
             config.cloud_pool.max(1),
@@ -229,8 +285,19 @@ impl Coordinator {
             .validate()
             .context("invalid channel configuration")?;
         let channel = Arc::new(Channel::new(channel_config, config.seed));
-        Ok(Coordinator {
+        let buckets = if config.gamma_coherent {
+            partitioner.envelope().num_segments().max(1) + 1
+        } else {
+            1
+        };
+        // Admission queue sized to keep a bounded backlog ahead of the
+        // single client device (backpressure on the producer side).
+        let batcher = Batcher::with_buckets((4 * config.workers).max(16), buckets);
+        let admission_rng = Mutex::new(Rng::new(config.seed ^ 0xADB5_17E2_D188_FE01));
+        Ok(CoordinatorShard {
             config,
+            salt,
+            class,
             partitioner,
             policy,
             slo,
@@ -240,11 +307,13 @@ impl Coordinator {
             cloud,
             channel,
             degraded: AtomicBool::new(false),
+            batcher,
+            admission_rng,
             metrics,
         })
     }
 
-    /// The compiled analytical-model profile backing this coordinator.
+    /// The compiled analytical-model profile backing this shard.
     pub fn profile(&self) -> &Arc<NetworkProfile> {
         &self.profile
     }
@@ -260,6 +329,15 @@ impl Coordinator {
 
     pub fn network(&self) -> &Network {
         &self.net
+    }
+
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.config
+    }
+
+    /// Table-IV device class of this shard's configured `P_Tx`.
+    pub fn device_class(&self) -> &str {
+        &self.class
     }
 
     /// Snapshot of the simulated uplink's accounting (delivered/dropped
@@ -278,15 +356,15 @@ impl Coordinator {
         self.cloud.handle()
     }
 
-    /// Chaos hook: kill the cloud pool (threads exit, handles start
-    /// failing). The next request that notices routes the coordinator
-    /// into client-only degraded mode.
+    /// Chaos hook: kill this shard's cloud pool (threads exit, handles
+    /// start failing). The next request that notices routes the shard
+    /// into client-only degraded mode; sibling shards are unaffected.
     pub fn kill_cloud_pool(&self) {
         self.cloud.kill();
     }
 
-    /// Whether the coordinator has latched into client-only degraded mode
-    /// (cloud pool found dead).
+    /// Whether this shard has latched into client-only degraded mode
+    /// (its cloud pool found dead).
     pub fn is_degraded(&self) -> bool {
         self.degraded.load(Ordering::SeqCst)
     }
@@ -340,6 +418,89 @@ impl Coordinator {
             env
         } else {
             self.config.env
+        }
+    }
+
+    /// The shard's front door: assign the request its admission-time
+    /// channel state, shed it if its deadline is provably infeasible
+    /// there, else queue it in its γ lane. Blocks only on queue
+    /// backpressure (bounded backlog); the outcome arrives on `reply`
+    /// once a worker resolves the request.
+    pub fn admit(&self, req: InferenceRequest, reply: &Sender<InferenceOutcome>) -> Admit {
+        let env = {
+            let mut rng = self
+                .admission_rng
+                .lock()
+                .unwrap_or_else(|p| p.into_inner());
+            self.admission_env(&req, &mut rng)
+        };
+        if self.config.shed_infeasible {
+            if let Some(deadline) = req.deadline_s {
+                if self.slo.min_delay_lower_bound_s(&env) > deadline {
+                    self.metrics.record_shed();
+                    return Admit::Shed;
+                }
+            }
+        }
+        let bucket = self.bucket_for(&env);
+        let admitted = Admitted {
+            req,
+            env,
+            reply: reply.clone(),
+        };
+        match self.batcher.submit_to(bucket, admitted, None) {
+            Submit::Accepted => Admit::Queued,
+            _ => Admit::Closed,
+        }
+    }
+
+    /// Close the admission queue: queued requests still resolve, then the
+    /// workers exit. Idempotent; the owning [`Coordinator`] /
+    /// [`super::ServingTier`] calls this before joining its workers.
+    pub fn shutdown(&self) {
+        self.batcher.close();
+    }
+
+    /// One worker thread's life: warm the thread-local schedule cache
+    /// once, then drain γ-coherent batches until shutdown — preferring
+    /// the lane this worker is pinned to (`worker_idx mod lanes`), taking
+    /// the globally oldest head when that lane is empty.
+    pub fn worker_loop(&self, worker_idx: usize) {
+        // Warm this worker's thread-local schedule cache from the shared
+        // compiled profile before taking work, and track the miss counter
+        // per batch: the post-warm-up delta is recorded in metrics as the
+        // regression canary that no schedule derivation runs on the
+        // serving hot path (decisions slice precomputed tables only).
+        let seeded = self.profile.seed_thread_schedule_cache();
+        self.metrics.record_schedule_warm(seeded, 0);
+        let mut misses_before = with_global_schedule_cache(|c| c.misses());
+        let client = self.client.handle();
+        let cloud = self.cloud.handle();
+        let batch_max = self.config.batch_max.max(1);
+        let preferred = worker_idx % self.admission_buckets();
+        while let Some((bucket, batch)) = self.batcher.take_batch_pinned(preferred, batch_max) {
+            let mut items = Vec::with_capacity(batch.len());
+            let mut routes = Vec::with_capacity(batch.len());
+            for (admitted, queued_for) in batch {
+                items.push((admitted.req, admitted.env));
+                routes.push((admitted.reply, queued_for));
+            }
+            self.metrics.record_batch(bucket, items.len());
+            let outcomes = self.process_admitted_batch(bucket, &items, &client, &cloud);
+            for (mut outcome, (reply, queued_for)) in outcomes.into_iter().zip(routes) {
+                if let InferenceOutcome::Ok(r) | InferenceOutcome::Degraded(r) = &mut outcome {
+                    r.t_queue = queued_for;
+                }
+                if let Some(resp) = outcome.response() {
+                    self.metrics.record(resp);
+                }
+                // A caller that gave up on its reply is not an error.
+                let _ = reply.send(outcome);
+            }
+            let misses_after = with_global_schedule_cache(|c| c.misses());
+            self.metrics
+                .record_schedule_misses(misses_after - misses_before);
+            misses_before = misses_after;
         }
     }
 
@@ -399,11 +560,11 @@ impl Coordinator {
 
     /// Serve a batch of requests taken together from the admission queue:
     /// probe every input, decide, then execute each request. When every
-    /// request rides the coordinator's configured channel state, the
-    /// envelope candidates are evaluated ONCE and reused across the batch
+    /// request rides the shard's configured channel state, the envelope
+    /// candidates are evaluated ONCE and reused across the batch
     /// (`decide_batch`); a request carrying its own env is decided at
-    /// *its* channel state, never the coordinator's (per-request envs
-    /// disable the shared-state fast path for the batch).
+    /// *its* channel state, never the shard's (per-request envs disable
+    /// the shared-state fast path for the batch).
     pub fn process_batch(
         &self,
         reqs: &[InferenceRequest],
@@ -420,8 +581,8 @@ impl Coordinator {
         let mut decisions = Vec::with_capacity(reqs.len());
         if reqs.iter().any(|r| r.env.is_some()) {
             // Mixed channel states: the batched fast path would price every
-            // request at the coordinator env and silently mis-split the
-            // ones that reported their own. Decide each at its own state.
+            // request at the shard env and silently mis-split the ones that
+            // reported their own. Decide each at its own state.
             for (req, bits) in reqs.iter().zip(&input_bits) {
                 let env = req.env.unwrap_or(self.config.env);
                 let ctx = DecisionContext::from_input_bits(*bits, env);
@@ -523,12 +684,9 @@ impl Coordinator {
         let split = if degraded_route { n_layers } else { decided_split };
         let retry = self.config.retry.sanitized();
         // Per-request backoff jitter stream: a pure function of (seed,
-        // request id), so fault schedules replay bit-for-bit.
-        let mut backoff_rng = Rng::new(
-            self.config
-                .seed
-                .wrapping_add(req.id.wrapping_mul(0xA24B_AED4_963E_E407)),
-        );
+        // shard salt, request id), so fault schedules replay bit-for-bit
+        // regardless of worker interleaving.
+        let mut backoff_rng = RetryPolicy::backoff_rng(self.config.seed, self.salt, req.id);
         let mut retries = 0u32;
         let mut wasted_energy_j = 0.0f64;
 
@@ -641,6 +799,7 @@ impl Coordinator {
                     retries,
                     wasted_energy_j,
                     fallback_fisc: true,
+                    t_queue: Duration::ZERO,
                     t_decide,
                     t_client,
                     t_channel,
@@ -675,7 +834,7 @@ impl Coordinator {
         let transmit_bits = payload_bits;
 
         // 5. Cloud suffix execution (layers split+1..), retrying per
-        //    policy; a dead pool flips the coordinator into degraded mode.
+        //    policy; a dead pool flips the shard into degraded mode.
         let t_cloud_start = Instant::now();
         let logits = if split == n_layers {
             activation
@@ -771,6 +930,7 @@ impl Coordinator {
             retries,
             wasted_energy_j,
             fallback_fisc: degraded_route,
+            t_queue: Duration::ZERO,
             t_decide,
             t_client,
             t_channel,
@@ -816,6 +976,7 @@ impl Coordinator {
                     retries: ctx.retries,
                     wasted_energy_j: ctx.wasted_energy_j,
                     fallback_fisc: true,
+                    t_queue: Duration::ZERO,
                     t_decide: ctx.t_decide,
                     t_client: ctx.t_client + t_fb_start.elapsed(),
                     t_channel: ctx.t_channel,
@@ -835,110 +996,29 @@ impl Coordinator {
         }
     }
 
-    /// Serve a batch of requests through the admission queue + worker
-    /// pool; outcomes are returned in request order, and every response
-    /// (Ok or Degraded) is recorded in [`Self::metrics`]. Per-request
-    /// channel states are assigned at admission (deterministically, from
-    /// the configured seed) and each request is queued in its γ-segment's
-    /// lane; workers drain single-segment batches. Requests whose deadline
-    /// is provably infeasible at their admission-time channel state are
-    /// shed (module docs) and omitted from the returned outcomes. The
-    /// outer `Result` is infrastructure only (a worker thread dying, the
-    /// admission queue closing early) — per-request failures are
-    /// [`InferenceOutcome::Failed`] entries, never an `Err`.
+    /// Serve a batch of requests through this shard's admission queue and
+    /// its (already running) workers; outcomes are returned in request
+    /// order, reassembled *by request id* — ids may be arbitrary,
+    /// non-contiguous u64s. Every response (Ok or Degraded) is recorded
+    /// in [`Self::metrics`]. Requests whose deadline is provably
+    /// infeasible at their admission-time channel state are shed (module
+    /// docs) and omitted from the returned outcomes. The outer `Result`
+    /// is infrastructure only (the admission queue closing early, workers
+    /// gone) — per-request failures are [`InferenceOutcome::Failed`]
+    /// entries, never an `Err`.
     pub fn serve(&self, requests: Vec<InferenceRequest>) -> Result<Vec<InferenceOutcome>> {
-        let n = requests.len();
-        let id_base = requests.first().map(|r| r.id).unwrap_or(0);
-        let mut shed = 0usize;
-        // Admission queue sized to keep a bounded backlog ahead of the
-        // single client device (backpressure on the producer side).
-        let batcher: Arc<Batcher<(InferenceRequest, TransmitEnv)>> = Arc::new(
-            Batcher::with_buckets((2 * self.config.workers).max(4), self.admission_buckets()),
-        );
-        let results: Arc<Mutex<Vec<Option<InferenceOutcome>>>> =
-            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
-
-        std::thread::scope(|scope| -> Result<()> {
-            let mut handles = Vec::new();
-            let batch_max = self.config.batch_max.max(1);
-            for _ in 0..self.config.workers.max(1) {
-                let batcher = batcher.clone();
-                let results = results.clone();
-                let client = self.client.handle();
-                let cloud = self.cloud.handle();
-                handles.push(scope.spawn(move || {
-                    // Warm this worker's thread-local schedule cache from
-                    // the shared compiled profile before taking work, and
-                    // snapshot the miss counter: the post-warm-up delta is
-                    // recorded in metrics as the regression canary that no
-                    // schedule derivation runs on the serving hot path
-                    // (decisions slice precomputed tables only).
-                    let seeded = self.profile.seed_thread_schedule_cache();
-                    let misses_before = with_global_schedule_cache(|c| c.misses());
-                    // Drain whole single-lane batches so each batch shares
-                    // one envelope segment (γ-coherence under jitter).
-                    while let Some((bucket, batch)) = batcher.take_batch_bucketed(batch_max) {
-                        let items: Vec<(InferenceRequest, TransmitEnv)> =
-                            batch.into_iter().map(|(item, _queued_for)| item).collect();
-                        self.metrics.record_batch(bucket, items.len());
-                        for outcome in
-                            self.process_admitted_batch(bucket, &items, &client, &cloud)
-                        {
-                            let idx = (outcome.id() - id_base) as usize;
-                            if let Some(resp) = outcome.response() {
-                                self.metrics.record(resp);
-                            }
-                            results.lock().unwrap_or_else(|p| p.into_inner())[idx] =
-                                Some(outcome);
-                        }
-                    }
-                    let misses_after = with_global_schedule_cache(|c| c.misses());
-                    self.metrics
-                        .record_schedule_warm(seeded, misses_after - misses_before);
-                }));
+        let (tx, rx) = channel();
+        let mut order: Vec<u64> = Vec::with_capacity(requests.len());
+        for req in requests {
+            let id = req.id;
+            match self.admit(req, &tx) {
+                Admit::Queued => order.push(id),
+                Admit::Shed => {}
+                Admit::Closed => return Err(anyhow!("admission queue closed early")),
             }
-            // Producer: assign each request its admission-time channel
-            // state, shed provably infeasible deadlines, route the rest to
-            // their γ lanes, then close so workers drain and exit.
-            let mut jitter_rng = Rng::new(self.config.seed ^ 0xADB5_17E2_D188_FE01);
-            for req in requests {
-                let env = self.admission_env(&req, &mut jitter_rng);
-                if self.config.shed_infeasible {
-                    if let Some(deadline) = req.deadline_s {
-                        if self.slo.min_delay_lower_bound_s(&env) > deadline {
-                            self.metrics.record_shed();
-                            shed += 1;
-                            continue;
-                        }
-                    }
-                }
-                let bucket = self.bucket_for(&env);
-                if batcher.submit_to(bucket, (req, env), None) != Submit::Accepted {
-                    batcher.close();
-                    return Err(anyhow!("admission queue closed early"));
-                }
-            }
-            batcher.close();
-            for h in handles {
-                h.join().map_err(|_| anyhow!("worker panicked"))?;
-            }
-            Ok(())
-        })?;
-
-        let collected: Vec<InferenceOutcome> = Arc::try_unwrap(results)
-            .map_err(|_| anyhow!("results still shared"))?
-            .into_inner()
-            .unwrap_or_else(|p| p.into_inner())
-            .into_iter()
-            .flatten()
-            .collect();
-        if collected.len() + shed != n {
-            return Err(anyhow!(
-                "missing outcomes: resolved {} + shed {shed} of {n}",
-                collected.len()
-            ));
         }
-        Ok(collected)
+        drop(tx);
+        collect_by_id(&rx, &order)
     }
 
     /// Compatibility surface over [`Self::serve`] for callers that expect
@@ -952,6 +1032,200 @@ impl Coordinator {
             .into_iter()
             .map(outcome_into_result)
             .collect()
+    }
+}
+
+/// Fan-in for sharded serving: receive exactly `order.len()` outcomes and
+/// reassemble them in admission order *by id*. Duplicate ids are paired
+/// first-come-first-served; a missing outcome is an infrastructure error.
+pub(super) fn collect_by_id(
+    rx: &std::sync::mpsc::Receiver<InferenceOutcome>,
+    order: &[u64],
+) -> Result<Vec<InferenceOutcome>> {
+    let mut by_id: BTreeMap<u64, VecDeque<InferenceOutcome>> = BTreeMap::new();
+    for _ in 0..order.len() {
+        let outcome = rx
+            .recv()
+            .map_err(|_| anyhow!("serving workers gone before all outcomes resolved"))?;
+        by_id.entry(outcome.id()).or_default().push_back(outcome);
+    }
+    order
+        .iter()
+        .map(|id| {
+            by_id
+                .get_mut(id)
+                .and_then(VecDeque::pop_front)
+                .ok_or_else(|| anyhow!("no outcome for request id {id}"))
+        })
+        .collect()
+}
+
+/// Spawn `config.workers` pinned worker threads over a shard. The caller
+/// owns the join handles (the shard must not, or the `Arc` cycle would
+/// keep it alive forever); close the shard's queue via
+/// [`CoordinatorShard::shutdown`] before joining.
+pub(super) fn spawn_workers(shard: &Arc<CoordinatorShard>) -> Vec<JoinHandle<()>> {
+    (0..shard.config.workers.max(1))
+        .map(|i| {
+            let shard = shard.clone();
+            std::thread::Builder::new()
+                .name(format!("{}-worker-{i}", shard.class))
+                .spawn(move || shard.worker_loop(i))
+                .expect("spawning shard worker")
+        })
+        .collect()
+}
+
+/// The single-shard serving coordinator: one [`CoordinatorShard`] plus
+/// its running worker threads, exposing the original pre-shard surface
+/// (see module docs of [`crate::coordinator`]).
+pub struct Coordinator {
+    shard: Arc<CoordinatorShard>,
+    workers: Vec<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Coordinator {
+    /// Build the serving stack with a private policy registry.
+    pub fn new(config: CoordinatorConfig) -> Result<Self> {
+        Self::with_registry(config, &PolicyRegistry::new())
+    }
+
+    /// Build the serving stack: analytic models + executor threads +
+    /// running workers, with the decision engine taken from (or built
+    /// into) `registry` — a fleet coordinator passes one shared registry
+    /// so every connection of the same (network, device P_Tx class)
+    /// reuses one envelope table.
+    pub fn with_registry(config: CoordinatorConfig, registry: &PolicyRegistry) -> Result<Self> {
+        let shard = Arc::new(CoordinatorShard::new_in(config, registry, 0)?);
+        let workers = spawn_workers(&shard);
+        let metrics = shard.metrics.clone();
+        Ok(Coordinator {
+            shard,
+            workers,
+            metrics,
+        })
+    }
+
+    /// The shard behind this coordinator.
+    pub fn shard(&self) -> &Arc<CoordinatorShard> {
+        &self.shard
+    }
+
+    /// The compiled analytical-model profile backing this coordinator.
+    pub fn profile(&self) -> &Arc<NetworkProfile> {
+        self.shard.profile()
+    }
+
+    pub fn partitioner(&self) -> &Partitioner {
+        self.shard.partitioner()
+    }
+
+    /// The decision policy every request routes through.
+    pub fn policy(&self) -> &EnergyPolicy {
+        self.shard.policy()
+    }
+
+    pub fn network(&self) -> &Network {
+        self.shard.network()
+    }
+
+    /// Snapshot of the simulated uplink's accounting (delivered/dropped
+    /// transfers, wasted joules, stall airtime).
+    pub fn channel_stats(&self) -> ChannelStats {
+        self.shard.channel_stats()
+    }
+
+    /// Handle to the client device executor.
+    pub fn client_handle(&self) -> ExecutorHandle {
+        self.shard.client_handle()
+    }
+
+    /// Handle to the cloud executor pool.
+    pub fn cloud_handle(&self) -> ExecutorHandle {
+        self.shard.cloud_handle()
+    }
+
+    /// Chaos hook: kill the cloud pool (threads exit, handles start
+    /// failing). The next request that notices routes the coordinator
+    /// into client-only degraded mode.
+    pub fn kill_cloud_pool(&self) {
+        self.shard.kill_cloud_pool();
+    }
+
+    /// Whether the coordinator has latched into client-only degraded mode
+    /// (cloud pool found dead).
+    pub fn is_degraded(&self) -> bool {
+        self.shard.is_degraded()
+    }
+
+    /// Number of admission lanes (see
+    /// [`CoordinatorShard::admission_buckets`]).
+    pub fn admission_buckets(&self) -> usize {
+        self.shard.admission_buckets()
+    }
+
+    /// Precompile the hot split points so serving latency is steady-state.
+    pub fn warm_up(&self, splits: &[usize]) -> Result<()> {
+        self.shard.warm_up(splits)
+    }
+
+    /// Serve one request synchronously (see [`CoordinatorShard::process`]).
+    pub fn process(
+        &self,
+        req: &InferenceRequest,
+        client: &ExecutorHandle,
+        cloud: &ExecutorHandle,
+    ) -> Result<InferenceResponse> {
+        self.shard.process(req, client, cloud)
+    }
+
+    /// Serve one request synchronously, resolving it to an
+    /// [`InferenceOutcome`].
+    pub fn process_outcome(
+        &self,
+        req: &InferenceRequest,
+        client: &ExecutorHandle,
+        cloud: &ExecutorHandle,
+    ) -> InferenceOutcome {
+        self.shard.process_outcome(req, client, cloud)
+    }
+
+    /// Serve a batch synchronously (see
+    /// [`CoordinatorShard::process_batch`]).
+    pub fn process_batch(
+        &self,
+        reqs: &[InferenceRequest],
+        client: &ExecutorHandle,
+        cloud: &ExecutorHandle,
+    ) -> Result<Vec<InferenceResponse>> {
+        self.shard.process_batch(reqs, client, cloud)
+    }
+
+    /// Serve a batch through the admission queue + worker pool (see
+    /// [`CoordinatorShard::serve`]). Outcomes come back in request order,
+    /// reassembled by id.
+    pub fn serve(&self, requests: Vec<InferenceRequest>) -> Result<Vec<InferenceOutcome>> {
+        self.shard.serve(requests)
+    }
+
+    /// Compatibility surface over [`Self::serve`] for callers that expect
+    /// every request to produce a response: degraded responses pass
+    /// through; the first `Failed` outcome becomes an error.
+    pub fn serve_responses(
+        &self,
+        requests: Vec<InferenceRequest>,
+    ) -> Result<Vec<InferenceResponse>> {
+        self.shard.serve_responses(requests)
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shard.shutdown();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
     }
 }
 

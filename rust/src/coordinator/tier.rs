@@ -1,0 +1,339 @@
+//! The sharded serving tier: N coordinator shards behind a lock-free
+//! front door.
+//!
+//! A [`ServingTier`] owns one [`CoordinatorShard`] per (network,
+//! device-class) key — the same key [`PolicyRegistry`] shares decision
+//! engines under — plus the pinned worker threads of every shard. The
+//! route table (`network → device-class → shard`) is built once at
+//! construction and never mutated, so [`ServingTier::route`] is a pure
+//! read with no lock: admission contention is confined to each shard's
+//! own γ-lane queue and never crosses shard boundaries.
+//!
+//! Requests carry their routing key themselves: the target network in
+//! [`InferenceRequest::network`] (`None` = the tier's default) and the
+//! device class implied by their reported channel state's `P_Tx`
+//! ([`device_class`]). A request with no reported env — or an unknown
+//! class — lands on the network's first shard; an unknown network lands
+//! on shard 0, which always exists.
+//!
+//! Fault state is per shard: one shard latching client-only degraded
+//! mode (its cloud pool dead) leaves its siblings serving normally.
+//! [`ServingTier::fleet_snapshot`] / [`ServingTier::fleet_channel_stats`]
+//! merge the per-shard accounting into one fleet view.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::channel::{ChannelStats, TransmitEnv};
+use crate::partition::{device_class, PolicyRegistry};
+
+use super::metrics::MetricsSnapshot;
+use super::request::{InferenceOutcome, InferenceRequest};
+use super::server::{collect_by_id, spawn_workers, Admit, CoordinatorConfig, CoordinatorShard};
+
+/// One shard's identity: the network it serves and the channel state
+/// whose `P_Tx` names its Table-IV device class.
+#[derive(Clone, Debug)]
+pub struct ShardSpec {
+    pub network: String,
+    pub env: TransmitEnv,
+}
+
+/// Tier construction parameters: a base coordinator config (executor
+/// pool sizes, retry policy, seed, …) stamped out per shard with each
+/// spec's network and channel state.
+#[derive(Clone, Debug)]
+pub struct ServingTierConfig {
+    pub base: CoordinatorConfig,
+    pub shards: Vec<ShardSpec>,
+}
+
+impl ServingTierConfig {
+    /// A one-shard tier equivalent to the plain [`super::Coordinator`]
+    /// over `base`.
+    pub fn single(base: CoordinatorConfig) -> Self {
+        let spec = ShardSpec {
+            network: base.network.clone(),
+            env: base.env,
+        };
+        ServingTierConfig {
+            base,
+            shards: vec![spec],
+        }
+    }
+
+    /// A tier over one network with one shard per device channel state
+    /// (each state's `P_Tx` picks its Table-IV class).
+    pub fn per_class(base: CoordinatorConfig, envs: &[TransmitEnv]) -> Self {
+        let shards = envs
+            .iter()
+            .map(|env| ShardSpec {
+                network: base.network.clone(),
+                env: *env,
+            })
+            .collect();
+        ServingTierConfig { base, shards }
+    }
+}
+
+/// The sharded serving tier (module docs).
+pub struct ServingTier {
+    shards: Vec<Arc<CoordinatorShard>>,
+    /// network → device-class → shard index. Built once, never mutated:
+    /// the lock-free front door.
+    routes: BTreeMap<String, BTreeMap<String, usize>>,
+    default_network: String,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ServingTier {
+    /// Build the tier with a private policy registry.
+    pub fn new(config: ServingTierConfig) -> Result<Self> {
+        Self::with_registry(config, &PolicyRegistry::new())
+    }
+
+    /// Build every shard and start its pinned workers, sharing decision
+    /// engines through `registry`: shards (and any outside coordinators)
+    /// with the same (network, device-class) key reuse one envelope
+    /// table. Shard 0 keeps the base seed and salt 0 — bit-compatible
+    /// with a plain coordinator — while later shards get decorrelated
+    /// seeds/salts derived from their index, so a tier replays
+    /// deterministically under a fixed spec list.
+    pub fn with_registry(config: ServingTierConfig, registry: &PolicyRegistry) -> Result<Self> {
+        if config.shards.is_empty() {
+            return Err(anyhow!("a serving tier needs at least one shard"));
+        }
+        let default_network = config.shards[0].network.clone();
+        let mut shards = Vec::with_capacity(config.shards.len());
+        let mut routes: BTreeMap<String, BTreeMap<String, usize>> = BTreeMap::new();
+        for (idx, spec) in config.shards.iter().enumerate() {
+            let mut cfg = config.base.clone();
+            cfg.network = spec.network.clone();
+            cfg.env = spec.env;
+            let salt = (idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            cfg.seed = config.base.seed.wrapping_add(salt);
+            let shard = Arc::new(
+                CoordinatorShard::new_in(cfg, registry, salt)
+                    .with_context(|| format!("building shard {idx} ({})", spec.network))?,
+            );
+            // First spec wins a duplicated (network, class) key; the
+            // duplicate shard still serves whatever is admitted to it
+            // directly, it just gets no routed traffic.
+            routes
+                .entry(spec.network.clone())
+                .or_default()
+                .entry(shard.device_class().to_string())
+                .or_insert(idx);
+            shards.push(shard);
+        }
+        let workers = shards.iter().flat_map(spawn_workers).collect();
+        Ok(ServingTier {
+            shards,
+            routes,
+            default_network,
+            workers,
+        })
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shards, in spec order (`route` returns indices into this).
+    pub fn shards(&self) -> &[Arc<CoordinatorShard>] {
+        &self.shards
+    }
+
+    /// The front door: which shard serves this request. Lock-free — one
+    /// immutable map walk keyed by the request's (network, device-class).
+    pub fn route(&self, req: &InferenceRequest) -> usize {
+        let network = req.network.as_deref().unwrap_or(&self.default_network);
+        let Some(classes) = self.routes.get(network) else {
+            return 0;
+        };
+        req.env
+            .map(|env| device_class(env.p_tx_w))
+            .and_then(|class| classes.get(&class).copied())
+            .or_else(|| classes.values().next().copied())
+            .unwrap_or(0)
+    }
+
+    /// Route and admit one request; its outcome arrives on `reply`.
+    pub fn admit(&self, req: InferenceRequest, reply: &Sender<InferenceOutcome>) -> Admit {
+        self.shards[self.route(&req)].admit(req, reply)
+    }
+
+    /// Serve a batch across the tier: every request is routed to its
+    /// shard's γ lanes, outcomes fan back in over one channel and are
+    /// reassembled *by request id* in admission order (ids may be
+    /// arbitrary u64s). Shed requests are omitted, exactly like
+    /// [`CoordinatorShard::serve`].
+    pub fn serve(&self, requests: Vec<InferenceRequest>) -> Result<Vec<InferenceOutcome>> {
+        let (tx, rx) = channel();
+        let mut order: Vec<u64> = Vec::with_capacity(requests.len());
+        for req in requests {
+            let id = req.id;
+            match self.admit(req, &tx) {
+                Admit::Queued => order.push(id),
+                Admit::Shed => {}
+                Admit::Closed => return Err(anyhow!("admission queue closed early")),
+            }
+        }
+        drop(tx);
+        collect_by_id(&rx, &order)
+    }
+
+    /// Fleet view: every shard's metrics merged into one snapshot.
+    pub fn fleet_snapshot(&self) -> MetricsSnapshot {
+        let mut fleet = MetricsSnapshot::default();
+        for shard in &self.shards {
+            fleet.merge(&shard.metrics.snapshot());
+        }
+        fleet
+    }
+
+    /// Fleet view: every shard's uplink accounting merged.
+    pub fn fleet_channel_stats(&self) -> ChannelStats {
+        let mut fleet = ChannelStats::default();
+        for shard in &self.shards {
+            fleet.merge(&shard.channel_stats());
+        }
+        fleet
+    }
+
+    /// Close every shard's admission queue; queued requests still
+    /// resolve, then workers exit (joined on drop).
+    pub fn shutdown(&self) {
+        for shard in &self.shards {
+            shard.shutdown();
+        }
+    }
+}
+
+impl Drop for ServingTier {
+    fn drop(&mut self) {
+        self.shutdown();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use std::path::PathBuf;
+
+    use crate::coordinator::{ExecutorBackend, RetryPolicy};
+    use crate::corpus::Corpus;
+
+    fn base_config() -> CoordinatorConfig {
+        CoordinatorConfig {
+            artifacts_dir: PathBuf::from("unused"),
+            network: "tiny_alexnet".to_string(),
+            env: TransmitEnv::with_effective_rate(130.0e6, 0.78),
+            jpeg_quality: 60,
+            cloud_pool: 1,
+            workers: 1,
+            jitter: 0.0,
+            time_scale: 0.0,
+            force_split: None,
+            warm_splits: Vec::new(),
+            batch_max: 4,
+            gamma_coherent: true,
+            shed_infeasible: true,
+            backend: ExecutorBackend::Sim,
+            faults: None,
+            retry: RetryPolicy::default(),
+            seed: 42,
+        }
+    }
+
+    fn requests(n: usize) -> Vec<InferenceRequest> {
+        let corpus = Corpus::new(32, 32, 7);
+        corpus
+            .iter(n)
+            .enumerate()
+            .map(|(i, img)| {
+                InferenceRequest::new(i as u64, img.to_f32_nhwc(), img.pixels, img.w, img.h)
+            })
+            .collect()
+    }
+
+    fn two_class_tier() -> ServingTier {
+        let envs = [
+            TransmitEnv::with_effective_rate(130.0e6, 0.78), // LG Nexus 4 WLAN
+            TransmitEnv::with_effective_rate(130.0e6, 1.28), // Note 3 WLAN
+        ];
+        ServingTier::new(ServingTierConfig::per_class(base_config(), &envs)).unwrap()
+    }
+
+    #[test]
+    fn route_is_keyed_by_network_and_device_class() {
+        let tier = two_class_tier();
+        assert_eq!(tier.shard_count(), 2);
+        let req = requests(1).remove(0);
+        // No env → the network's first shard.
+        assert_eq!(tier.route(&req), 0);
+        // The reported P_Tx picks the class shard.
+        let slow = req
+            .clone()
+            .with_env(TransmitEnv::with_effective_rate(90.0e6, 1.28));
+        assert_eq!(tier.route(&slow), 1);
+        let fast = req
+            .clone()
+            .with_env(TransmitEnv::with_effective_rate(90.0e6, 0.78));
+        assert_eq!(tier.route(&fast), 0);
+        // Unknown class → first shard of the network; unknown network →
+        // shard 0.
+        let odd = req
+            .clone()
+            .with_env(TransmitEnv::with_effective_rate(90.0e6, 3.14));
+        assert_eq!(tier.route(&odd), 0);
+        let lost = req.with_network("no_such_net");
+        assert_eq!(tier.route(&lost), 0);
+    }
+
+    #[test]
+    fn serve_routes_per_shard_and_merges_fleet_views() {
+        let tier = two_class_tier();
+        let mut reqs = requests(6);
+        for (i, r) in reqs.iter_mut().enumerate() {
+            let p_tx = if i % 2 == 0 { 0.78 } else { 1.28 };
+            r.env = Some(TransmitEnv::with_effective_rate(130.0e6, p_tx));
+        }
+        let outcomes = tier.serve(reqs).unwrap();
+        assert_eq!(outcomes.len(), 6);
+        for (i, o) in outcomes.iter().enumerate() {
+            assert_eq!(o.id(), i as u64, "outcomes out of admission order");
+            assert!(o.is_ok());
+        }
+        // Each shard saw exactly its class's half of the traffic...
+        assert_eq!(tier.shards()[0].metrics.snapshot().requests, 3);
+        assert_eq!(tier.shards()[1].metrics.snapshot().requests, 3);
+        // ...and the fleet views add up.
+        let fleet = tier.fleet_snapshot();
+        assert_eq!(fleet.requests, 6);
+        assert!(fleet.batches >= 2, "each shard drains at least one batch");
+        let chan = tier.fleet_channel_stats();
+        assert_eq!(
+            chan.transfers,
+            tier.shards()[0].channel_stats().transfers
+                + tier.shards()[1].channel_stats().transfers
+        );
+    }
+
+    #[test]
+    fn empty_tier_is_rejected() {
+        let cfg = ServingTierConfig {
+            base: base_config(),
+            shards: Vec::new(),
+        };
+        assert!(ServingTier::new(cfg).is_err());
+    }
+}

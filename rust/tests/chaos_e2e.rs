@@ -12,11 +12,12 @@
 //! Set `NEUPART_CHAOS_AGGRESSIVE=1` to scale request counts up 8×.
 
 use std::path::PathBuf;
+use std::sync::mpsc::channel;
 
 use neupart::channel::{FaultConfig, MarkovOutage, TransmitEnv};
 use neupart::coordinator::{
-    Coordinator, CoordinatorConfig, ExecutorBackend, InferenceOutcome, InferenceRequest,
-    RetryPolicy,
+    Admit, Coordinator, CoordinatorConfig, ExecutorBackend, InferenceOutcome, InferenceRequest,
+    RetryPolicy, ServingTier, ServingTierConfig,
 };
 use neupart::corpus::Corpus;
 use neupart::runtime::SIM_POISON;
@@ -52,18 +53,22 @@ fn config() -> CoordinatorConfig {
     }
 }
 
+/// A two-shard tier over `base`: one shard per Table-IV WLAN class
+/// (LG Nexus 4 at 0.78 W, Note 3 at 1.28 W).
+fn two_class_tier(base: CoordinatorConfig) -> ServingTier {
+    let envs = [
+        TransmitEnv::with_effective_rate(130.0e6, 0.78),
+        TransmitEnv::with_effective_rate(130.0e6, 1.28),
+    ];
+    ServingTier::new(ServingTierConfig::per_class(base, &envs)).unwrap()
+}
+
 fn requests(n: usize) -> Vec<InferenceRequest> {
     Corpus::new(32, 32, 17)
         .iter(n)
         .enumerate()
-        .map(|(i, img)| InferenceRequest {
-            id: i as u64,
-            tensor: img.to_f32_nhwc(),
-            pixels: img.pixels.clone(),
-            width: img.w,
-            height: img.h,
-            env: None,
-            deadline_s: None,
+        .map(|(i, img)| {
+            InferenceRequest::new(i as u64, img.to_f32_nhwc(), img.pixels, img.w, img.h)
         })
         .collect()
 }
@@ -431,4 +436,119 @@ fn process_batch_honors_per_request_channel_states() {
     assert_eq!(batch[0].split, 0, "free uplink must go full cloud");
     assert_eq!(batch[1].split, n_layers, "dead uplink must stay in situ");
     assert_ne!(batch[0].split, batch[1].split);
+}
+
+#[test]
+fn killed_cloud_pool_degrades_only_its_own_shard() {
+    // Shard isolation: a dead cloud pool latches client-only degraded
+    // mode in its own shard; sibling shards of the tier keep serving Ok.
+    let n = scale(6);
+    let mut base = config();
+    base.force_split = Some(3); // partitioned: every request needs the cloud
+    let tier = two_class_tier(base);
+    let victim = &tier.shards()[0];
+    victim.kill_cloud_pool();
+    let cloud = victim.cloud_handle();
+    for _ in 0..500 {
+        if cloud.alive_threads() == 0 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    assert_eq!(cloud.alive_threads(), 0, "killed pool still alive");
+
+    // Even ids report the victim's class (0.78 W), odd ids the sibling's.
+    let mut reqs = requests(n);
+    for (i, r) in reqs.iter_mut().enumerate() {
+        let p_tx = if i % 2 == 0 { 0.78 } else { 1.28 };
+        r.env = Some(TransmitEnv::with_effective_rate(130.0e6, p_tx));
+    }
+    let outcomes = tier.serve(reqs).unwrap();
+    assert_resolved(&outcomes, n);
+    for (i, o) in outcomes.iter().enumerate() {
+        if i % 2 == 0 {
+            assert!(o.is_degraded(), "dead-cloud shard must degrade, got {o:?}");
+        } else {
+            assert!(o.is_ok(), "sibling shard hit by a foreign fault: {o:?}");
+        }
+    }
+    assert!(tier.shards()[0].is_degraded());
+    assert!(!tier.shards()[1].is_degraded(), "degraded latch leaked across shards");
+    let fleet = tier.fleet_snapshot();
+    assert_eq!(fleet.degraded_mode_entered, 1, "latch must fire once, in one shard");
+    assert_eq!(fleet.fallback_fisc, (n / 2) as u64);
+    assert_eq!(fleet.failed_requests, 0);
+}
+
+#[test]
+fn corrupted_channel_states_use_each_shards_own_overflow_lane() {
+    // Per-shard overflow lane: a corrupted channel report (NaN/∞/
+    // non-positive rate) routes by its P_Tx class like any other request,
+    // then lands in that shard's overflow lane — no panic, no bogus
+    // segment pin, and the sibling shard's lanes stay untouched.
+    let tier = two_class_tier(config());
+    let mut reqs = requests(4);
+    reqs[0].env = Some(TransmitEnv::with_effective_rate(f64::NAN, 0.78));
+    reqs[1].env = Some(TransmitEnv::with_effective_rate(f64::INFINITY, 1.28));
+    reqs[2].env = Some(TransmitEnv::with_effective_rate(-80e6, 0.78));
+    reqs[3].env = Some(TransmitEnv::with_effective_rate(0.0, 1.28));
+    let outcomes = tier.serve(reqs).unwrap();
+    assert_resolved(&outcomes, 4);
+    for o in &outcomes {
+        let r = o.response().expect("corrupted env must still serve");
+        assert_eq!(r.gamma_segment, None, "request {} pinned to a segment", r.id);
+    }
+    for shard in tier.shards() {
+        let m = shard.metrics.snapshot();
+        assert_eq!(m.requests, 2);
+        let overflow = shard.admission_buckets() - 1;
+        assert_eq!(
+            m.lane_batches.keys().copied().collect::<Vec<_>>(),
+            vec![overflow],
+            "corrupted envs must drain only through the overflow lane"
+        );
+    }
+}
+
+#[test]
+fn shard_admission_is_fifo_within_a_lane() {
+    // With one worker and every request in the same γ lane, outcomes
+    // must come back oldest-head-first — the lane is a FIFO, batching
+    // and pinning never reorder within it.
+    let mut base = config();
+    base.workers = 1;
+    let tier = two_class_tier(base);
+    let shard = &tier.shards()[0];
+    let n = scale(8);
+    let (tx, rx) = channel();
+    for req in requests(n) {
+        assert_eq!(shard.admit(req, &tx), Admit::Queued);
+    }
+    drop(tx);
+    let ids: Vec<u64> = rx.iter().map(|o| o.id()).collect();
+    assert_eq!(
+        ids,
+        (0..n as u64).collect::<Vec<_>>(),
+        "a γ lane must drain oldest-head-first"
+    );
+    assert_eq!(shard.metrics.snapshot().requests, n as u64);
+    // Direct shard admission never leaks to the sibling.
+    assert_eq!(tier.shards()[1].metrics.snapshot().requests, 0);
+}
+
+#[test]
+fn serve_reassembles_outcomes_by_id_not_position() {
+    // Request ids are opaque tokens: serve must pair outcomes with
+    // requests by the id each one carried — never by assuming ids are
+    // dense, ordered, or index-like.
+    let coord = Coordinator::new(config()).unwrap();
+    let ids = [100u64, 7, 3000, 42];
+    let mut reqs = requests(ids.len());
+    for (r, id) in reqs.iter_mut().zip(ids) {
+        r.id = id;
+    }
+    let outcomes = coord.serve(reqs).unwrap();
+    let got: Vec<u64> = outcomes.iter().map(|o| o.id()).collect();
+    assert_eq!(got, ids, "outcomes must follow admission order keyed by id");
+    assert!(outcomes.iter().all(InferenceOutcome::is_ok));
 }
