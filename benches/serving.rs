@@ -14,22 +14,35 @@
 //! determinism double-run, and a single-shard vs multi-shard admission
 //! speedup.
 //!
+//! Also drives the dynamic-channel scenario path (always on the sim
+//! backend): a link that dies mid-prefix must fire a mid-flight
+//! re-decision with a positive modeled saving over the frozen-γ plan,
+//! a link grazing a breakpoint must be absorbed by the hysteresis band,
+//! and the per-sample cost of the scenario clock is timed.
+//!
 //! Emits machine-readable `results/BENCH_serving.json`
 //! (`clean_serve_ns`, `fallback_fisc_ns`, `retry_overhead_ns`,
 //! `loadgen_p50_ns`/`p99_ns`/`p999_ns`, `throughput_rps`, `shed_rate`,
 //! `shard_count`, `lane_occupancy`, `loadgen_deterministic`,
-//! `shard_speedup_admission`).
+//! `shard_speedup_admission`, `redecisions_fired`,
+//! `redecisions_suppressed`, `energy_delta_vs_frozen_j`,
+//! `scenario_step_ns`).
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::time::Instant;
 
-use neupart::channel::{FaultConfig, MarkovOutage, TransmitEnv};
+use neupart::channel::{
+    FaultConfig, MarkovFadingScenario, MarkovOutage, ScenarioConfig, ScenarioModel, TracePoint,
+    TraceScenario, TransmitEnv,
+};
+use neupart::compress::jpeg::compress_rgb;
 use neupart::coordinator::{
     loadgen, ArrivalModel, Coordinator, CoordinatorConfig, ExecutorBackend, InferenceRequest,
-    LoadGenConfig, RetryPolicy, ServingTier, ServingTierConfig,
+    LoadGenConfig, RedecideConfig, RetryPolicy, ServingTier, ServingTierConfig,
 };
 use neupart::corpus::Corpus;
+use neupart::partition::DelayModel;
 use neupart::util::json::Value;
 
 fn requests(n: usize) -> Vec<InferenceRequest> {
@@ -59,6 +72,8 @@ fn config(backend: ExecutorBackend, force: Option<usize>) -> CoordinatorConfig {
         shed_infeasible: true,
         backend,
         faults: None,
+        scenario: None,
+        redecide: None,
         retry: RetryPolicy::default(),
         seed: 3,
     }
@@ -80,6 +95,23 @@ fn fleet_tier(cfg: &LoadGenConfig) -> ServingTier {
         &cfg.class_envs(),
     ))
     .expect("tier")
+}
+
+/// Transmit power used by the scenario section's synthetic traces.
+const SCENARIO_P_TX_W: f64 = 0.78;
+
+/// Deterministic full-range noise pixels: JPEG cannot squeeze noise, so
+/// the probe volume scales with the pixel count.
+fn noise_pixels(dim: usize) -> Vec<f64> {
+    let mut state: u64 = 0xC0FFEE | 1;
+    (0..dim * dim * 3)
+        .map(|_| {
+            state = state
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            ((state >> 33) & 0xff) as f64
+        })
+        .collect()
 }
 
 /// One measured serve of `n` requests; returns mean ns/request.
@@ -175,6 +207,110 @@ fn main() {
         m.wasted_retry_energy_j * 1e3,
         retry_overhead_ns
     );
+
+    // ---- Dynamic channel scenarios: mid-flight re-decision ----
+    // Always the hermetic sim backend: this section measures the
+    // scenario/re-decision path, not the kernels. Both traces are built
+    // from the *measured* envelope (breakpoints, first-segment winner,
+    // layer latencies), so the asserts survive energy-model retuning.
+    let probe = Coordinator::new(config(ExecutorBackend::Sim, None)).expect("coordinator");
+    let bps = probe.partitioner().envelope().breakpoints().to_vec();
+    assert!(!bps.is_empty(), "tiny_alexnet envelope has no breakpoints");
+    let w_lo = probe.partitioner().envelope().segments()[0].split;
+    let lat0 = DelayModel::from_profile(probe.profile()).client_latencies_s()[0];
+    let gamma_adm = bps[0] / 1.3;
+    // Grazing γ: past the first breakpoint but inside both the 1.5×
+    // hysteresis band and the second segment.
+    let gamma_osc = if bps.len() >= 2 {
+        (bps[0] * 1.3).min((bps[0] * bps[1]).sqrt())
+    } else {
+        bps[0] * 1.3
+    };
+    assert!(gamma_osc > bps[0] && gamma_osc < bps[0] * 1.5);
+    // A probe large enough that admission lands on the envelope winner
+    // rather than FCC (a full-input upload would dodge the walk).
+    let adm_env = TransmitEnv::with_effective_rate(SCENARIO_P_TX_W / gamma_adm, SCENARIO_P_TX_W);
+    let (pixels, dim) = [192usize, 384, 768]
+        .into_iter()
+        .map(|dim| (noise_pixels(dim), dim))
+        .find(|(px, dim)| {
+            let bits = compress_rgb(px, *dim, *dim, 90).bits as f64;
+            let pt = probe.partitioner();
+            let fcc = pt.candidate_cost_j(0, bits, &adm_env);
+            fcc > 1.5 * pt.candidate_cost_j(w_lo, bits, &adm_env)
+        })
+        .expect("no probe large enough to exclude FCC");
+    drop(probe);
+
+    let plateau = |t_s: f64, gamma: f64| TracePoint {
+        t_s,
+        rate_bps: SCENARIO_P_TX_W / gamma,
+        p_tx_w: SCENARIO_P_TX_W,
+    };
+    let scenario_serve = |trace: TraceScenario, margin: f64| {
+        let mut cfg = config(ExecutorBackend::Sim, None);
+        cfg.scenario = Some(ScenarioConfig::Trace(trace));
+        cfg.redecide = Some(RedecideConfig { hysteresis_margin: margin });
+        let coord = Coordinator::new(cfg).expect("coordinator");
+        let img = Corpus::new(32, 32, 11).iter(1).next().expect("image");
+        let req = InferenceRequest::new(0, img.to_f32_nhwc(), pixels.clone(), dim, dim);
+        coord.serve(vec![req]).expect("scenario serve");
+        coord.metrics.snapshot()
+    };
+
+    // The link dies before the first layer boundary (1 bps, far below
+    // the channel's effective floor): the walk must move the split.
+    let fade = TraceScenario::from_points(vec![
+        plateau(0.0, gamma_adm),
+        TracePoint {
+            t_s: lat0 * 0.5,
+            rate_bps: 1.0,
+            p_tx_w: SCENARIO_P_TX_W,
+        },
+    ])
+    .expect("fade trace");
+    let m_fade = scenario_serve(fade, 0.1);
+    assert!(m_fade.redecisions_fired >= 1, "dead link must fire a re-decision");
+    assert!(
+        m_fade.energy_delta_vs_frozen_j > 0.0,
+        "re-decision must model a saving over frozen γ"
+    );
+    println!(
+        "\nscenario/fade       fired {} re-decision(s), modeled saving {:.4} mJ vs frozen gamma",
+        m_fade.redecisions_fired,
+        m_fade.energy_delta_vs_frozen_j * 1e3
+    );
+
+    // The link steps just past the first breakpoint, inside the band:
+    // hysteresis must hold the split and count the crossing suppressed.
+    let graze = TraceScenario::from_points(vec![
+        plateau(0.0, gamma_adm),
+        plateau(lat0 * 0.5, gamma_osc),
+    ])
+    .expect("graze trace");
+    let m_graze = scenario_serve(graze, 0.5);
+    assert!(
+        m_graze.redecisions_suppressed >= 1,
+        "grazing link must record a suppressed crossing"
+    );
+    assert_eq!(m_graze.redecisions_fired, 0, "hysteresis must hold the split");
+    println!(
+        "scenario/graze      {} crossing(s) suppressed by hysteresis, split pinned",
+        m_graze.redecisions_suppressed
+    );
+
+    // Per-sample cost of the scenario clock (Markov LTE regime fading):
+    // this is what every layer-boundary check and channel send pays.
+    let markov = MarkovFadingScenario::lte(9);
+    let steps: u64 = if smoke { 100_000 } else { 1_000_000 };
+    let t0 = Instant::now();
+    let mut acc = 0.0;
+    for i in 0..steps {
+        acc += markov.env_at(i as f64 * 1e-3).effective_bit_rate();
+    }
+    std::hint::black_box(acc);
+    let scenario_step_ns = t0.elapsed().as_nanos() as f64 / steps as f64;
+    println!("scenario/step       {scenario_step_ns:.1} ns per env_at sample (Markov LTE)");
 
     // ---- Load harness: the Table-IV fleet through the sharded tier ----
     // Always the hermetic sim backend, whatever the policy benches above
@@ -300,6 +436,22 @@ fn main() {
             (
                 "shard_speedup_admission".to_string(),
                 Value::Num(shard_speedup),
+            ),
+            (
+                "redecisions_fired".to_string(),
+                Value::Num(m_fade.redecisions_fired as f64),
+            ),
+            (
+                "redecisions_suppressed".to_string(),
+                Value::Num(m_graze.redecisions_suppressed as f64),
+            ),
+            (
+                "energy_delta_vs_frozen_j".to_string(),
+                Value::Num(m_fade.energy_delta_vs_frozen_j),
+            ),
+            (
+                "scenario_step_ns".to_string(),
+                Value::Num(scenario_step_ns),
             ),
         ],
     )

@@ -51,6 +51,8 @@ fn config(force_split: Option<usize>, be_mbps: f64) -> CoordinatorConfig {
         shed_infeasible: true,
         backend: ExecutorBackend::Pjrt,
         faults: None,
+        scenario: None,
+        redecide: None,
         retry: RetryPolicy::default(),
         seed: 7,
     }

@@ -2,6 +2,29 @@
 //! and the smartphone uplink power survey (paper Table IV), plus a
 //! simulated channel the serving coordinator sends activations through.
 //!
+//! ## Scenario → fault → send layering
+//!
+//! A [`Channel::send`] resolves in three layers, outermost first:
+//!
+//! 1. **Scenario** ([`ChannelConfig::scenario`], [`super::channel::scenario`])
+//!    — *what the link looks like right now.* A [`ScenarioModel`] is a
+//!    deterministic, seeded time series of [`TransmitEnv`] states (trace
+//!    replay, Markov LTE/WiFi regime fading, diurnal load curves); the
+//!    channel keeps a scenario clock ([`Channel::clock_s`]) that advances
+//!    with every send's airtime and with explicit
+//!    [`Channel::advance_clock`] charges (the coordinator adds
+//!    client-prefix compute time), so the rate/power a send sees is the
+//!    one in force *at that instant*, not a frozen admission snapshot.
+//!    Without a scenario the static [`ChannelConfig::env`] applies.
+//! 2. **Fault** ([`ChannelConfig::faults`], [`super::channel::faults`]) —
+//!    *what happens to this transfer.* A seeded [`FaultModel`] decides
+//!    deliver/stall/drop/outage per attempt.
+//! 3. **Send arithmetic** — jitter is sampled on top of the scenario (or
+//!    static) rate, and airtime/energy are charged per the fault decision.
+//!
+//! Both the scenario schedule and the fault schedule are pure functions
+//! of their seeds, so chaos and fading runs replay bit-for-bit.
+//!
 //! ## The failure path
 //!
 //! Real mobile uplinks are not the ideal pipe of §VI-A: they drop
@@ -29,11 +52,16 @@
 
 pub mod devices;
 pub mod faults;
+pub mod scenario;
 pub mod simulator;
 pub mod transmission;
 
 pub use devices::{DevicePower, DEVICE_POWER_TABLE};
 pub use faults::{ChannelError, FaultConfig, FaultDecision, FaultModel, MarkovOutage};
+pub use scenario::{
+    DiurnalScenario, MarkovFadingScenario, Regime, ScenarioConfig, ScenarioModel, TracePoint,
+    TraceScenario,
+};
 pub use simulator::{
     jittered_rate_bps, Channel, ChannelConfig, ChannelStats, MAX_JITTER, MIN_EFFECTIVE_RATE_BPS,
 };

@@ -21,6 +21,7 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 
 use super::faults::{ChannelError, FaultConfig, FaultDecision, FaultModel};
+use super::scenario::{ScenarioConfig, ScenarioModel};
 use super::transmission::TransmitEnv;
 use crate::util::rng::Rng;
 
@@ -67,7 +68,7 @@ pub fn jittered_rate_bps(rate_bps: f64, jitter: f64, unit_sample: f64) -> f64 {
 }
 
 /// Channel behavior knobs.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ChannelConfig {
     pub env: TransmitEnv,
     /// Multiplicative bandwidth jitter amplitude (0 = deterministic;
@@ -79,6 +80,12 @@ pub struct ChannelConfig {
     /// Seeded fault injection (`None` = the channel never fails; see
     /// [`super::faults`]).
     pub faults: Option<FaultConfig>,
+    /// Time-varying channel scenario (`None` = the static `env` above).
+    /// When set, the rate and power each send sees come from the scenario
+    /// evaluated at the channel's clock ([`Channel::clock_s`]) — jitter
+    /// and faults then layer on top of the scenario env (scenario → fault
+    /// → send; see [`super::scenario`]).
+    pub scenario: Option<ScenarioConfig>,
 }
 
 impl ChannelConfig {
@@ -88,6 +95,7 @@ impl ChannelConfig {
             jitter: 0.0,
             time_scale: 0.0,
             faults: None,
+            scenario: None,
         }
     }
 
@@ -112,6 +120,9 @@ impl ChannelConfig {
         }
         if let Some(f) = &self.faults {
             f.validate()?;
+        }
+        if let Some(s) = &self.scenario {
+            s.validate()?;
         }
         Ok(())
     }
@@ -189,6 +200,11 @@ struct ChannelState {
     rng: Rng,
     stats: ChannelStats,
     faults: Option<FaultModel>,
+    /// Scenario clock, seconds. Advances by the airtime each send occupies
+    /// and by explicit [`Channel::advance_clock`] calls (the coordinator
+    /// charges client-prefix compute time here so the env a send sees is
+    /// the one in force *after* the prefix ran, not at admission).
+    clock_s: f64,
 }
 
 /// A thread-safe simulated uplink.
@@ -214,6 +230,7 @@ impl Channel {
                 rng: Rng::new(seed),
                 stats: ChannelStats::default(),
                 faults,
+                clock_s: 0.0,
             }),
         }
     }
@@ -238,68 +255,89 @@ impl Channel {
                 Some(m) => m.next_decision(),
                 None => FaultDecision::Deliver,
             };
-            if matches!(fault, FaultDecision::Outage) {
-                state.stats.outage_rejections += 1;
-                // The radio never keys up: no energy, no airtime.
-                (Err(ChannelError::Outage), 0.0)
-            } else {
-                let u = if self.config.jitter > 0.0 {
-                    state.rng.next_f64()
-                } else {
-                    0.5 // factor 1.0: deterministic, no RNG draw consumed
-                };
-                let b_e = jittered_rate_bps(
-                    self.config.env.effective_bit_rate(),
-                    self.config.jitter,
-                    u,
-                );
-                let airtime = payload_bits as f64 / b_e;
-                let energy = self.config.env.p_tx_w * airtime;
-                match fault {
-                    FaultDecision::Drop { completed_fraction } => {
-                        let f = completed_fraction.clamp(0.0, 1.0);
-                        let wasted_airtime = airtime * f;
-                        let wasted_energy = energy * f;
-                        state.stats.transfers_dropped += 1;
-                        state.stats.energy_j += wasted_energy;
-                        state.stats.airtime_s += wasted_airtime;
-                        state.stats.wasted_energy_j += wasted_energy;
-                        state.stats.wasted_airtime_s += wasted_airtime;
-                        (
-                            Err(ChannelError::Dropped {
-                                wasted_energy_j: wasted_energy,
-                                wasted_airtime_s: wasted_airtime,
-                            }),
-                            wasted_airtime,
-                        )
-                    }
-                    FaultDecision::Stall { extra_factor } => {
-                        let stall_airtime = airtime * extra_factor.max(0.0);
-                        let total_airtime = airtime + stall_airtime;
-                        let total_energy = self.config.env.p_tx_w * total_airtime;
-                        state.stats.transfers += 1;
-                        state.stats.stalls += 1;
-                        state.stats.payload_bits += payload_bits;
-                        state.stats.energy_j += total_energy;
-                        state.stats.airtime_s += total_airtime;
-                        state.stats.stall_airtime_s += stall_airtime;
-                        (Ok((total_energy, total_airtime)), total_airtime)
-                    }
-                    FaultDecision::Deliver => {
-                        state.stats.transfers += 1;
-                        state.stats.payload_bits += payload_bits;
-                        state.stats.energy_j += energy;
-                        state.stats.airtime_s += airtime;
-                        (Ok((energy, airtime)), airtime)
-                    }
-                    FaultDecision::Outage => unreachable!("handled above"),
-                }
-            }
+            let (outcome, sleep_s) = Self::resolve_send(&self.config, state, payload_bits, fault);
+            // The airtime this send occupied moves the scenario clock, so
+            // back-to-back sends through a fading link see it keep fading.
+            state.clock_s += sleep_s;
+            (outcome, sleep_s)
         };
         if self.config.time_scale > 0.0 && sleep_s > 0.0 {
             std::thread::sleep(Duration::from_secs_f64(sleep_s * self.config.time_scale));
         }
         outcome
+    }
+
+    /// The fault/arithmetic core of [`Channel::send`], with the state lock
+    /// already held and the fault already decided.
+    fn resolve_send(
+        config: &ChannelConfig,
+        state: &mut ChannelState,
+        payload_bits: u64,
+        fault: FaultDecision,
+    ) -> (std::result::Result<(f64, f64), ChannelError>, f64) {
+        if matches!(fault, FaultDecision::Outage) {
+            state.stats.outage_rejections += 1;
+            // The radio never keys up: no energy, no airtime.
+            (Err(ChannelError::Outage), 0.0)
+        } else {
+            let u = if config.jitter > 0.0 {
+                state.rng.next_f64()
+            } else {
+                0.5 // factor 1.0: deterministic, no RNG draw consumed
+            };
+            // Scenario → fault → send: with a scenario installed, the
+            // base rate and power are the ones in force at the channel
+            // clock; jitter layers on top.
+            let (base_rate, p_tx) = match &config.scenario {
+                Some(s) => {
+                    let e = s.env_at(state.clock_s);
+                    (e.effective_bit_rate(), e.p_tx_w)
+                }
+                None => (config.env.effective_bit_rate(), config.env.p_tx_w),
+            };
+            let b_e = jittered_rate_bps(base_rate, config.jitter, u);
+            let airtime = payload_bits as f64 / b_e;
+            let energy = p_tx * airtime;
+            match fault {
+                FaultDecision::Drop { completed_fraction } => {
+                    let f = completed_fraction.clamp(0.0, 1.0);
+                    let wasted_airtime = airtime * f;
+                    let wasted_energy = energy * f;
+                    state.stats.transfers_dropped += 1;
+                    state.stats.energy_j += wasted_energy;
+                    state.stats.airtime_s += wasted_airtime;
+                    state.stats.wasted_energy_j += wasted_energy;
+                    state.stats.wasted_airtime_s += wasted_airtime;
+                    (
+                        Err(ChannelError::Dropped {
+                            wasted_energy_j: wasted_energy,
+                            wasted_airtime_s: wasted_airtime,
+                        }),
+                        wasted_airtime,
+                    )
+                }
+                FaultDecision::Stall { extra_factor } => {
+                    let stall_airtime = airtime * extra_factor.max(0.0);
+                    let total_airtime = airtime + stall_airtime;
+                    let total_energy = p_tx * total_airtime;
+                    state.stats.transfers += 1;
+                    state.stats.stalls += 1;
+                    state.stats.payload_bits += payload_bits;
+                    state.stats.energy_j += total_energy;
+                    state.stats.airtime_s += total_airtime;
+                    state.stats.stall_airtime_s += stall_airtime;
+                    (Ok((total_energy, total_airtime)), total_airtime)
+                }
+                FaultDecision::Deliver => {
+                    state.stats.transfers += 1;
+                    state.stats.payload_bits += payload_bits;
+                    state.stats.energy_j += energy;
+                    state.stats.airtime_s += airtime;
+                    (Ok((energy, airtime)), airtime)
+                }
+                FaultDecision::Outage => unreachable!("handled above"),
+            }
+        }
     }
 
     pub fn stats(&self) -> ChannelStats {
@@ -308,6 +346,30 @@ impl Channel {
 
     pub fn config(&self) -> &ChannelConfig {
         &self.config
+    }
+
+    /// The installed scenario, if any.
+    pub fn scenario(&self) -> Option<&ScenarioConfig> {
+        self.config.scenario.as_ref()
+    }
+
+    /// Current scenario clock, seconds since the channel was built.
+    pub fn clock_s(&self) -> f64 {
+        self.state
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .clock_s
+    }
+
+    /// Advance the scenario clock by `dt_s` seconds of simulated time the
+    /// channel did not itself observe — the coordinator charges
+    /// client-prefix compute time here so a send issued after the prefix
+    /// sees the env in force *then*. Non-finite or negative deltas are
+    /// ignored (the clock never runs backwards).
+    pub fn advance_clock(&self, dt_s: f64) {
+        if dt_s.is_finite() && dt_s > 0.0 {
+            self.state.lock().unwrap_or_else(|p| p.into_inner()).clock_s += dt_s;
+        }
     }
 }
 
@@ -470,7 +532,7 @@ mod tests {
         let mut cfg = ChannelConfig::ideal(env());
         cfg.jitter = 0.2;
         cfg.time_scale = 0.5;
-        let s = cfg.sanitized();
+        let s = cfg.clone().sanitized();
         assert_eq!(s.jitter, 0.2);
         assert_eq!(s.time_scale, 0.5);
         cfg.jitter = 2.0;
@@ -501,6 +563,61 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(ch.stats().transfers, 100);
+    }
+
+    // ---- scenario-driven channel (the scenario clock replaces the
+    // frozen admission env as the rate/power source) ----
+
+    #[test]
+    fn scenario_rate_follows_the_clock() {
+        use crate::channel::scenario::{ScenarioConfig, TraceScenario};
+        let mut cfg = ChannelConfig::ideal(env());
+        cfg.scenario = Some(ScenarioConfig::Trace(
+            TraceScenario::ramp(10.0, 100.0e6, 10.0e6, 1.0).unwrap(),
+        ));
+        let ch = Channel::new(cfg, 1);
+        // At clock 0 the scenario is at full rate: 1 Mbit → 10 ms.
+        let (e0, t0) = ch.send(1_000_000).unwrap();
+        assert!((t0 - 0.01).abs() < 1e-6, "airtime {t0}");
+        assert!((e0 - 0.01).abs() < 1e-6, "energy {e0}");
+        assert!((ch.clock_s() - t0).abs() < 1e-12);
+        // Charge prefix compute time past the fade: the same payload now
+        // rides the 10 Mbps tail and costs 10× the airtime and energy.
+        ch.advance_clock(10.0);
+        let (e1, t1) = ch.send(1_000_000).unwrap();
+        assert!((t1 - 0.1).abs() < 1e-4, "airtime {t1}");
+        assert!(e1 > 9.0 * e0, "energy {e1} vs {e0}");
+        assert!(ch.clock_s() > 10.0);
+    }
+
+    #[test]
+    fn advance_clock_ignores_degenerate_deltas_and_never_runs_backwards() {
+        let ch = Channel::new(ChannelConfig::ideal(env()), 1);
+        assert_eq!(ch.clock_s(), 0.0);
+        ch.advance_clock(2.5);
+        ch.advance_clock(-1.0);
+        ch.advance_clock(f64::NAN);
+        ch.advance_clock(f64::INFINITY);
+        assert_eq!(ch.clock_s(), 2.5);
+    }
+
+    #[test]
+    fn scenario_channel_replays_bit_for_bit() {
+        use crate::channel::scenario::{MarkovFadingScenario, ScenarioConfig};
+        let mk = || {
+            let mut cfg = ChannelConfig::ideal(env());
+            cfg.jitter = 0.2;
+            cfg.scenario = Some(ScenarioConfig::Markov(MarkovFadingScenario::lte(5)));
+            Channel::new(cfg, 9)
+        };
+        let (a, b) = (mk(), mk());
+        for _ in 0..200 {
+            assert_eq!(a.send(500_000), b.send(500_000));
+            a.advance_clock(0.125);
+            b.advance_clock(0.125);
+        }
+        assert_eq!(a.stats(), b.stats());
+        assert_eq!(a.clock_s(), b.clock_s());
     }
 
     // ---- fault injection (satellite: FaultModel determinism + finite,

@@ -59,6 +59,16 @@ pub struct MetricsSnapshot {
     /// Retry loops abandoned because the request's remaining deadline
     /// budget could not cover another attempt.
     pub deadline_abandoned: u64,
+    /// Mid-flight re-decisions that moved the split after the scenario γ
+    /// crossed an envelope breakpoint and cleared the hysteresis band.
+    pub redecisions_fired: u64,
+    /// Breakpoint crossings the hysteresis band held back (detected but
+    /// not acted on — the thrash the band exists to prevent).
+    pub redecisions_suppressed: u64,
+    /// Modeled energy saved by re-deciding vs freezing γ at admission,
+    /// joules, summed over re-decided requests (negative would mean the
+    /// re-decision cost energy).
+    pub energy_delta_vs_frozen_j: f64,
     /// Requests that could not be served even degraded.
     pub failed_requests: u64,
     /// Radio energy burnt on failed transfer attempts, joules.
@@ -111,6 +121,9 @@ impl MetricsSnapshot {
         self.fallback_fisc += other.fallback_fisc;
         self.degraded_mode_entered += other.degraded_mode_entered;
         self.deadline_abandoned += other.deadline_abandoned;
+        self.redecisions_fired += other.redecisions_fired;
+        self.redecisions_suppressed += other.redecisions_suppressed;
+        self.energy_delta_vs_frozen_j += other.energy_delta_vs_frozen_j;
         self.failed_requests += other.failed_requests;
         self.wasted_retry_energy_j += other.wasted_retry_energy_j;
         self.client_energy_j += other.client_energy_j;
@@ -229,6 +242,14 @@ impl MetricsSnapshot {
                 self.deadline_abandoned
             ));
         }
+        if self.redecisions_fired > 0 || self.redecisions_suppressed > 0 {
+            s.push_str(&format!(
+                "re-decisions      : {} fired | {} suppressed | {:+.4} mJ vs frozen γ\n",
+                self.redecisions_fired,
+                self.redecisions_suppressed,
+                self.energy_delta_vs_frozen_j * 1e3
+            ));
+        }
         if self.degraded_mode_entered > 0 {
             s.push_str("degraded mode     : client-only (cloud pool down)\n");
         }
@@ -340,6 +361,24 @@ impl Metrics {
         self.lock().deadline_abandoned += 1;
     }
 
+    /// Record one mid-flight re-decision that moved the split.
+    pub fn record_redecision_fired(&self) {
+        self.lock().redecisions_fired += 1;
+    }
+
+    /// Record one breakpoint crossing the hysteresis band held back.
+    pub fn record_redecision_suppressed(&self) {
+        self.lock().redecisions_suppressed += 1;
+    }
+
+    /// Record one re-decided request's modeled energy saving over its
+    /// frozen-γ twin (non-finite deltas are dropped).
+    pub fn record_energy_delta(&self, delta_j: f64) {
+        if delta_j.is_finite() {
+            self.lock().energy_delta_vs_frozen_j += delta_j;
+        }
+    }
+
     /// Record one request that failed even degraded.
     pub fn record_failed(&self) {
         self.lock().failed_requests += 1;
@@ -372,6 +411,8 @@ mod tests {
             client_energy_j: e,
             transmit_energy_j: e / 2.0,
             gamma_segment: Some(1),
+            gamma_at_admission: 1e-8,
+            gamma_at_completion: 1e-8,
             decided_split: split,
             retries: 0,
             wasted_energy_j: 0.0,
@@ -483,6 +524,34 @@ mod tests {
         assert!(report.contains("degraded mode"));
         assert!(report.contains("deadline abandoned: 1"));
         assert!(report.contains("failed requests   : 1"));
+    }
+
+    #[test]
+    fn redecision_accounting() {
+        let m = Metrics::new();
+        let clean = m.snapshot();
+        assert_eq!(clean.redecisions_fired, 0);
+        assert!(!clean.report().contains("re-decisions"));
+        m.record_redecision_fired();
+        m.record_redecision_suppressed();
+        m.record_redecision_suppressed();
+        m.record_energy_delta(3e-3);
+        m.record_energy_delta(f64::NAN); // dropped
+        m.record_energy_delta(-1e-3); // negative deltas still count
+        let s = m.snapshot();
+        assert_eq!(s.redecisions_fired, 1);
+        assert_eq!(s.redecisions_suppressed, 2);
+        assert!((s.energy_delta_vs_frozen_j - 2e-3).abs() < 1e-15);
+        assert!(s.report().contains("re-decisions      : 1 fired | 2 suppressed"));
+
+        let other = Metrics::new();
+        other.record_redecision_fired();
+        other.record_energy_delta(1e-3);
+        let mut fleet = s.clone();
+        fleet.merge(&other.snapshot());
+        assert_eq!(fleet.redecisions_fired, 2);
+        assert_eq!(fleet.redecisions_suppressed, 2);
+        assert!((fleet.energy_delta_vs_frozen_j - 3e-3).abs() < 1e-15);
     }
 
     #[test]

@@ -97,6 +97,41 @@
 //! [`MetricsSnapshot::schedule_misses_post_warm`] are the canary keeping
 //! it that way.
 //!
+//! ## Mid-flight re-decision (dynamic channel scenarios)
+//!
+//! With a [`crate::channel::ScenarioConfig`] installed
+//! ([`CoordinatorConfig::scenario`]) the uplink's rate and power follow a
+//! deterministic time series — trace replay, Markov LTE/WiFi regime
+//! fading, diurnal load — instead of a single frozen env. The executor
+//! then stops freezing `γ = P_Tx/B_e` at admission:
+//!
+//! * **Model clock.** Client-prefix compute advances the channel's
+//!   scenario clock ([`crate::channel::Channel::advance_clock`]) by the
+//!   prefix's modeled latency (the shared
+//!   [`crate::partition::DelayModel`]), so the activation ships at the
+//!   rate in force *after* the prefix ran — with or without re-decision.
+//! * **Re-decision walk.** With [`CoordinatorConfig::redecide`] set, the
+//!   executor checks γ at every client-layer boundary: a crossing of an
+//!   envelope breakpoint
+//!   ([`crate::partition::Partitioner::segment_crossing`], a segment
+//!   lookup — never a re-solve) that clears the boundary by the
+//!   configured hysteresis margin moves the split to the
+//!   envelope-restricted optimum over the still-unexecuted layers
+//!   ([`crate::partition::Partitioner::replan_split`]); the executed
+//!   prefix is sunk and stays fully accounted.
+//! * **Hysteresis.** [`RedecideConfig::hysteresis_margin`] derives a
+//!   dead band from breakpoint geometry (`γ > b·(1+m)` up,
+//!   `γ < b/(1+m)` down): an oscillating link that grazes a breakpoint
+//!   holds its split instead of thrashing. Crossings held back are
+//!   counted in [`MetricsSnapshot::redecisions_suppressed`]; fired moves
+//!   in [`MetricsSnapshot::redecisions_fired`]; the modeled saving over
+//!   the frozen-γ twin in
+//!   [`MetricsSnapshot::energy_delta_vs_frozen_j`].
+//! * **γ drift accounting.** Every response reports
+//!   [`InferenceResponse::gamma_at_admission`] and
+//!   [`InferenceResponse::gamma_at_completion`], so fading runs can
+//!   quantify how stale the admission decision would have been.
+//!
 //! ## The failure path (fault-tolerant serving)
 //!
 //! A real mobile uplink drops transfers, stalls, and blacks out; executor
@@ -160,5 +195,5 @@ pub use loadgen::{ArrivalModel, LoadGenConfig, LoadReport};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use request::{InferenceFailure, InferenceOutcome, InferenceRequest, InferenceResponse};
 pub use retry::{RetryPolicy, RetryVerdict};
-pub use server::{Admit, Coordinator, CoordinatorConfig, CoordinatorShard};
+pub use server::{Admit, Coordinator, CoordinatorConfig, CoordinatorShard, RedecideConfig};
 pub use tier::{ServingTier, ServingTierConfig, ShardSpec};

@@ -104,6 +104,15 @@ pub struct InferenceResponse {
     /// Envelope segment of the request's γ at decision time (`None` when
     /// the channel was degenerate or γ-bucketing did not apply).
     pub gamma_segment: Option<usize>,
+    /// γ = P_Tx/B_e of the admission-time channel state (infinite for
+    /// degenerate states).
+    pub gamma_at_admission: f64,
+    /// γ in force when the request finished its uplink leg: under a
+    /// dynamic channel scenario the prefix compute and the airtime have
+    /// advanced the scenario clock by then, so a fading link shows
+    /// `gamma_at_completion > gamma_at_admission`. Equals
+    /// `gamma_at_admission` on a static channel.
+    pub gamma_at_completion: f64,
     /// The split the partition policy originally decided, before any
     /// fault-driven rerouting. Equals `split` on the happy path; differs
     /// when the coordinator fell back to FISC or was in degraded mode.
@@ -238,6 +247,8 @@ mod tests {
             client_energy_j: 1e-3,
             transmit_energy_j: 2e-3,
             gamma_segment: None,
+            gamma_at_admission: 1e-8,
+            gamma_at_completion: 1e-8,
             decided_split: 2,
             retries: 0,
             wasted_energy_j: 0.0,
@@ -265,6 +276,8 @@ mod tests {
             client_energy_j: 1e-3,
             transmit_energy_j: 0.0,
             gamma_segment: None,
+            gamma_at_admission: 6e-9,
+            gamma_at_completion: 2.4e-8,
             decided_split: 4,
             retries: 3,
             wasted_energy_j: 2e-4,

@@ -72,7 +72,7 @@ use super::batcher::{Batcher, Submit};
 
 use crate::channel::{
     jittered_rate_bps, Channel, ChannelConfig, ChannelError, ChannelStats, FaultConfig,
-    TransmitEnv,
+    ScenarioConfig, ScenarioModel, TransmitEnv,
 };
 use crate::cnn::Network;
 use crate::cnnergy::{with_global_schedule_cache, CnnErgy, NetworkProfile};
@@ -126,10 +126,41 @@ pub struct CoordinatorConfig {
     /// Fault model installed on the simulated uplink (`None` = ideal
     /// channel, as before).
     pub faults: Option<FaultConfig>,
+    /// Dynamic channel scenario driving the simulated uplink's rate and
+    /// power over model time (`None` = the static `env`, as before).
+    /// Client-prefix compute advances the scenario clock, so a send
+    /// happens at the rate in force after the prefix ran — not the
+    /// admission-time snapshot.
+    pub scenario: Option<ScenarioConfig>,
+    /// Mid-flight re-decision between client-prefix layers (`None` = the
+    /// split stays frozen at its admission-time decision). Only
+    /// meaningful together with `scenario`.
+    pub redecide: Option<RedecideConfig>,
     /// Retry/backoff policy wrapped around the uplink send and the cloud
     /// suffix call.
     pub retry: RetryPolicy,
     pub seed: u64,
+}
+
+/// Mid-flight re-decision knobs: how decisively the scenario's γ must
+/// clear an envelope breakpoint before the executor moves the split
+/// point between client-prefix layers.
+#[derive(Clone, Copy, Debug)]
+pub struct RedecideConfig {
+    /// Fractional hysteresis band around each breakpoint: a crossing
+    /// fires only when γ clears the boundary by this factor
+    /// (`γ > b·(1+m)` upward, `γ < b/(1+m)` downward). Crossings inside
+    /// the band are counted as suppressed, not acted on; 0 disables the
+    /// band (every crossing fires — the thrash-prone naive policy).
+    pub hysteresis_margin: f64,
+}
+
+impl Default for RedecideConfig {
+    fn default() -> Self {
+        RedecideConfig {
+            hysteresis_margin: 0.1,
+        }
+    }
 }
 
 impl CoordinatorConfig {
@@ -150,6 +181,8 @@ impl CoordinatorConfig {
             shed_infeasible: true,
             backend: ExecutorBackend::Pjrt,
             faults: None,
+            scenario: None,
+            redecide: None,
             retry: RetryPolicy::default(),
             seed: cfg.seed,
         }
@@ -280,6 +313,7 @@ impl CoordinatorShard {
             jitter: config.jitter,
             time_scale: config.time_scale,
             faults: config.faults,
+            scenario: config.scenario.clone(),
         };
         channel_config
             .validate()
@@ -403,21 +437,37 @@ impl CoordinatorShard {
     }
 
     /// The effective channel state a request is admitted with: its own
-    /// reported env if present, else the configured env with one
-    /// admission-time sample of [`jittered_rate_bps`] — the same clamped,
-    /// floored multiplicative model [`Channel::send`] charges, so the γ
-    /// used for bucketing tracks the rates the simulator actually uses.
+    /// reported env if present, else the scenario env at the channel's
+    /// current clock (when a scenario is installed) or the configured
+    /// static env — either with one admission-time sample of
+    /// [`jittered_rate_bps`] when jitter is on, the same clamped, floored
+    /// multiplicative model [`Channel::send`] charges, so the γ used for
+    /// bucketing tracks the rates the simulator actually uses.
     fn admission_env(&self, req: &InferenceRequest, rng: &mut Rng) -> TransmitEnv {
         if let Some(env) = req.env {
             return env;
         }
+        let base = match &self.config.scenario {
+            Some(s) => s.env_at(self.channel.clock_s()),
+            None => self.config.env,
+        };
         if self.config.jitter > 0.0 {
-            let mut env = self.config.env;
+            let mut env = base;
             env.bit_rate_bps =
                 jittered_rate_bps(env.bit_rate_bps, self.config.jitter, rng.next_f64());
             env
         } else {
-            self.config.env
+            base
+        }
+    }
+
+    /// γ in force when a request finishes its uplink leg: the scenario γ
+    /// at the channel's current clock (prefix compute and airtime have
+    /// already advanced it), or the admission γ without a scenario.
+    fn completion_gamma(&self, admission_gamma: f64) -> f64 {
+        match &self.config.scenario {
+            Some(s) => s.gamma_at(self.channel.clock_s()),
+            None => admission_gamma,
         }
     }
 
@@ -551,6 +601,7 @@ impl CoordinatorShard {
             probe.bits,
             probe.sparsity,
             self.gamma_segment(&env),
+            &env,
             t_start,
             t_decide,
             client,
@@ -607,6 +658,7 @@ impl CoordinatorShard {
                     probe.bits,
                     probe.sparsity,
                     self.gamma_segment(&env),
+                    &env,
                     t_start,
                     t_decide,
                     client,
@@ -649,6 +701,7 @@ impl CoordinatorShard {
                     probe.bits,
                     probe.sparsity,
                     segment,
+                    env,
                     t_start,
                     t_decide,
                     client,
@@ -671,6 +724,7 @@ impl CoordinatorShard {
         probe_bits: u64,
         sparsity_in: f64,
         gamma_segment: Option<usize>,
+        env: &TransmitEnv,
         t_start: Instant,
         t_decide: Duration,
         client: &ExecutorHandle,
@@ -678,10 +732,88 @@ impl CoordinatorShard {
     ) -> InferenceOutcome {
         let n_layers = self.partitioner.num_layers();
         let decided_split = self.config.force_split.unwrap_or(decision.l_opt);
+        let gamma_at_admission = gamma_of(env);
         // Client-only degraded mode: don't burn retries on a cloud pool we
         // already know is dead — route straight to FISC.
         let degraded_route = decided_split < n_layers && self.is_degraded();
-        let split = if degraded_route { n_layers } else { decided_split };
+        let mut split = if degraded_route { n_layers } else { decided_split };
+
+        // Mid-flight re-decision over the scenario clock: the client
+        // prefix runs layer by layer in model time while the link keeps
+        // evolving. At each layer boundary the executor checks whether
+        // the scenario's γ has crossed an envelope breakpoint
+        // (`Partitioner::segment_crossing` — a segment lookup, never a
+        // re-solve) and clears it by the hysteresis margin; if so, the
+        // split moves to the envelope-restricted optimum over the still
+        // unexecuted layers (`Partitioner::replan_split`). The prefix
+        // model time — of the *final* plan — then advances the channel
+        // clock, so the send is priced at the rate in force after the
+        // compute, for frozen-γ and re-deciding configs alike.
+        if let Some(scn) = &self.config.scenario {
+            let t0 = self.channel.clock_s();
+            let lat = self.slo.delay_model().client_latencies_s();
+            let walk = match (&self.config.redecide, gamma_segment) {
+                (Some(r), Some(seg))
+                    if !degraded_route && self.config.force_split.is_none() && split > 0 =>
+                {
+                    Some((*r, seg))
+                }
+                _ => None,
+            };
+            let mut prefix_model_s = 0.0f64;
+            if let Some((red, mut seg)) = walk {
+                let mut executed = 0usize;
+                while executed < split {
+                    prefix_model_s += lat.get(executed).copied().unwrap_or(0.0);
+                    executed += 1;
+                    let env_now = scn.env_at(t0 + prefix_model_s);
+                    match self.partitioner.segment_crossing(
+                        seg,
+                        &env_now,
+                        red.hysteresis_margin,
+                    ) {
+                        Some(c) if c.cleared => {
+                            seg = c.to;
+                            // The executed prefix is sunk: the re-plan is
+                            // restricted to splits at or past it.
+                            let new_split = self.partitioner.replan_split(executed, &env_now);
+                            if new_split != split {
+                                split = new_split;
+                                self.metrics.record_redecision_fired();
+                            }
+                        }
+                        Some(_) => self.metrics.record_redecision_suppressed(),
+                        None => {}
+                    }
+                }
+                if split != decided_split {
+                    // Modeled energy of this execution vs the frozen-γ
+                    // twin that would have shipped at the admission-time
+                    // split — each priced at the scenario rate in force
+                    // at its own send instant.
+                    let frozen_prefix_s: f64 = lat.iter().take(decided_split).sum();
+                    let bits = probe_bits as f64;
+                    let frozen_j = self.partitioner.client_energy_j(decided_split)
+                        + self.partitioner.transmit_energy_j(
+                            decided_split,
+                            bits,
+                            &scn.env_at(t0 + frozen_prefix_s),
+                        );
+                    let actual_j = self.partitioner.client_energy_j(split)
+                        + self.partitioner.transmit_energy_j(
+                            split,
+                            bits,
+                            &scn.env_at(t0 + prefix_model_s),
+                        );
+                    self.metrics.record_energy_delta(frozen_j - actual_j);
+                }
+            } else {
+                for l in 0..split {
+                    prefix_model_s += lat.get(l).copied().unwrap_or(0.0);
+                }
+            }
+            self.channel.advance_clock(prefix_model_s);
+        }
         let retry = self.config.retry.sanitized();
         // Per-request backoff jitter stream: a pure function of (seed,
         // shard salt, request id), so fault schedules replay bit-for-bit
@@ -795,6 +927,8 @@ impl CoordinatorShard {
                     client_energy_j: self.partitioner.client_energy_j(split),
                     transmit_energy_j: 0.0,
                     gamma_segment,
+                    gamma_at_admission,
+                    gamma_at_completion: self.completion_gamma(gamma_at_admission),
                     decided_split,
                     retries,
                     wasted_energy_j,
@@ -820,6 +954,7 @@ impl CoordinatorShard {
                     decided_split,
                     prefix_split: split,
                     gamma_segment,
+                    gamma_at_admission,
                     sparsity_in,
                     retries,
                     wasted_energy_j,
@@ -892,6 +1027,7 @@ impl CoordinatorShard {
                         decided_split,
                         prefix_split: split,
                         gamma_segment,
+                        gamma_at_admission,
                         sparsity_in,
                         retries,
                         wasted_energy_j,
@@ -926,6 +1062,8 @@ impl CoordinatorShard {
             client_energy_j: self.partitioner.client_energy_j(split),
             transmit_energy_j,
             gamma_segment,
+            gamma_at_admission,
+            gamma_at_completion: self.completion_gamma(gamma_at_admission),
             decided_split,
             retries,
             wasted_energy_j,
@@ -972,6 +1110,8 @@ impl CoordinatorShard {
                         + self.partitioner.client_energy_j(n_layers),
                     transmit_energy_j: 0.0,
                     gamma_segment: ctx.gamma_segment,
+                    gamma_at_admission: ctx.gamma_at_admission,
+                    gamma_at_completion: self.completion_gamma(ctx.gamma_at_admission),
                     decided_split: ctx.decided_split,
                     retries: ctx.retries,
                     wasted_energy_j: ctx.wasted_energy_j,
@@ -1239,6 +1379,7 @@ struct FallbackCtx<'a> {
     /// The prefix already executed on the client before falling back.
     prefix_split: usize,
     gamma_segment: Option<usize>,
+    gamma_at_admission: f64,
     sparsity_in: f64,
     retries: u32,
     wasted_energy_j: f64,
@@ -1247,6 +1388,19 @@ struct FallbackCtx<'a> {
     t_client: Duration,
     t_channel: Duration,
     client: &'a ExecutorHandle,
+}
+
+/// γ = P_Tx/B_e of a channel state; infinite for degenerate states
+/// (B_e ≤ 0, NaN) — the "transmitting is impossibly expensive" limit,
+/// consistent with how the envelope treats them.
+fn gamma_of(env: &TransmitEnv) -> f64 {
+    let b_e = env.effective_bit_rate();
+    let gamma = env.p_tx_w / b_e;
+    if b_e > 0.0 && gamma.is_finite() {
+        gamma
+    } else {
+        f64::INFINITY
+    }
 }
 
 /// Collapse an outcome for callers that treat any served response as

@@ -249,6 +249,8 @@ mod tests {
             shed_infeasible: true,
             backend: ExecutorBackend::Sim,
             faults: None,
+            scenario: None,
+            redecide: None,
             retry: RetryPolicy::default(),
             seed: 42,
         }

@@ -272,6 +272,94 @@ impl Partitioner {
         Some(self.envelope.segment_index(gamma))
     }
 
+    /// Has γ left `from_segment`, and by how much? The mid-flight
+    /// re-decision check: an O(log L) breakpoint lookup per client-prefix
+    /// layer boundary, *not* a re-solve. Returns `None` while γ is still
+    /// inside `from_segment` (or on degenerate/non-finite channel states,
+    /// where re-decision is meaningless — the admission-time guards own
+    /// those). When γ has moved to a different segment, the crossing
+    /// reports the first boundary crossed and whether γ *cleared* it by
+    /// the hysteresis margin: `γ > b·(1+m)` moving up, `γ < b/(1+m)`
+    /// moving down. The margin is thus derived from breakpoint geometry —
+    /// a relative band around the boundary inside which a crossing is
+    /// observed but not acted on, so an oscillating γ cannot thrash the
+    /// split.
+    pub fn segment_crossing(
+        &self,
+        from_segment: usize,
+        env: &TransmitEnv,
+        margin: f64,
+    ) -> Option<SegmentCrossing> {
+        let b_e = env.effective_bit_rate();
+        if !(b_e > 0.0) {
+            return None;
+        }
+        let gamma = env.p_tx_w / b_e;
+        if !(gamma > 0.0) || !gamma.is_finite() || self.envelope.num_segments() == 0 {
+            return None;
+        }
+        let from = from_segment.min(self.envelope.num_segments() - 1);
+        let to = self.envelope.segment_index(gamma);
+        if to == from {
+            return None;
+        }
+        let margin = if margin.is_finite() && margin > 0.0 {
+            margin
+        } else {
+            0.0
+        };
+        let bp = self.envelope.breakpoints();
+        let (boundary_gamma, cleared) = if to > from {
+            let b = bp[from];
+            (b, gamma > b * (1.0 + margin))
+        } else {
+            let b = bp[from - 1];
+            (b, gamma < b / (1.0 + margin))
+        };
+        Some(SegmentCrossing {
+            from,
+            to,
+            boundary_gamma,
+            cleared,
+        })
+    }
+
+    /// Re-plan the split for the current channel state, restricted to
+    /// candidates the executor can still take: splits `≥ min_split` (the
+    /// layers already computed on the client; FCC is never re-chosen —
+    /// executed prefix work is kept, not discarded). Exact restricted
+    /// argmin with the scan's first-minimum tie-breaking: the envelope
+    /// winner is used when it is still reachable, otherwise a bounded
+    /// scan over the remaining candidates. A degenerate channel resolves
+    /// to FISC, the only split that can ship its result.
+    pub fn replan_split(&self, min_split: usize, env: &TransmitEnv) -> usize {
+        let n = self.num_layers;
+        let min_split = min_split.clamp(1, n);
+        let b_e = env.effective_bit_rate();
+        if !(b_e > 0.0) {
+            return n;
+        }
+        let gamma = env.p_tx_w / b_e;
+        if gamma > 0.0 && gamma.is_finite() && self.envelope.num_segments() > 0 {
+            let (win, _) = self.envelope_winner(gamma, env, b_e);
+            if win >= min_split {
+                // The unrestricted fixed-candidate argmin is reachable,
+                // so it is also the restricted argmin.
+                return win;
+            }
+        }
+        let mut l_opt = n;
+        let mut best = f64::INFINITY;
+        for split in min_split..=n {
+            let cost = self.cost_at(split, 0.0, env, b_e);
+            if cost < best {
+                best = cost;
+                l_opt = split;
+            }
+        }
+        l_opt
+    }
+
     /// Reference-scan decision from a probed Sparsity-In: the O(|L|) linear
     /// scan with the per-candidate cost vector filled — the "brute force"
     /// semantics every fast path must reproduce bit-for-bit.
@@ -608,6 +696,24 @@ impl Partitioner {
             ),
         }
     }
+}
+
+/// A detected γ envelope-segment crossing (see
+/// [`Partitioner::segment_crossing`]): γ was admitted in segment `from`
+/// and now lies in segment `to`, having crossed `boundary_gamma`;
+/// `cleared` says whether it cleared the boundary by the hysteresis
+/// margin (only then should a re-decision fire).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SegmentCrossing {
+    /// Segment the decision was made in.
+    pub from: usize,
+    /// Segment the current γ lies in.
+    pub to: usize,
+    /// The first breakpoint crossed on the way from `from` to `to`.
+    pub boundary_gamma: f64,
+    /// γ cleared the boundary by the margin — the crossing is decisive,
+    /// not jitter around the breakpoint.
+    pub cleared: bool,
 }
 
 /// Per-channel-state precomputation: the winning fixed candidate at one γ
@@ -948,6 +1054,131 @@ mod tests {
         let dead = TransmitEnv::with_effective_rate(-1.0, 0.78);
         assert_eq!(p.transmit_energy_j(p.num_layers(), bits, &dead), 0.0);
         assert_eq!(p.transmit_energy_j(0, bits, &dead), f64::INFINITY);
+    }
+
+    // ---- mid-flight re-decision helpers ----
+
+    /// An env whose γ is exactly `gamma` at P_Tx = 0.78 W.
+    fn env_at_gamma(gamma: f64) -> TransmitEnv {
+        TransmitEnv::with_effective_rate(0.78 / gamma, 0.78)
+    }
+
+    #[test]
+    fn segment_crossing_detects_and_gates_on_margin() {
+        let p = paper_partitioner(&alexnet());
+        let bp = p.envelope().breakpoints();
+        assert!(!bp.is_empty(), "AlexNet envelope must have breakpoints");
+        let b = bp[0];
+        let inside = env_at_gamma(b * 0.5);
+        let seg = p.envelope_segment(&inside).unwrap();
+        // Still in the admission segment: no crossing.
+        assert_eq!(p.segment_crossing(seg, &inside, 0.1), None);
+        // Just past the boundary: crossing observed but not cleared at a
+        // 10% margin.
+        let grazing = p
+            .segment_crossing(seg, &env_at_gamma(b * 1.05), 0.1)
+            .expect("γ left the segment");
+        assert_eq!(grazing.from, seg);
+        assert!(grazing.to > seg);
+        assert!((grazing.boundary_gamma - b).abs() < 1e-12 * b.max(1.0));
+        assert!(!grazing.cleared, "5% past must not clear a 10% margin");
+        // Well past the boundary: cleared.
+        let decisive = p
+            .segment_crossing(seg, &env_at_gamma(b * 1.5), 0.1)
+            .expect("γ left the segment");
+        assert!(decisive.cleared);
+        // Downward crossing back into the original segment mirrors the
+        // geometry: boundary is the segment's lower breakpoint.
+        let back = p
+            .segment_crossing(seg + 1, &env_at_gamma(b * 0.95), 0.1)
+            .expect("γ fell below the segment");
+        assert_eq!(back.to, seg);
+        assert!(!back.cleared, "5% below must not clear a 10% margin");
+        let back_far = p
+            .segment_crossing(seg + 1, &env_at_gamma(b * 0.5), 0.1)
+            .expect("γ fell below the segment");
+        assert!(back_far.cleared);
+        // Zero margin: any crossing is decisive.
+        assert!(
+            p.segment_crossing(seg, &env_at_gamma(b * 1.0001), 0.0)
+                .expect("crossed")
+                .cleared
+        );
+    }
+
+    #[test]
+    fn segment_crossing_guards_degenerate_channels() {
+        let p = paper_partitioner(&alexnet());
+        for b_e in [0.0, -5.0, f64::NAN] {
+            let e = TransmitEnv::with_effective_rate(b_e, 0.78);
+            assert_eq!(p.segment_crossing(0, &e, 0.1), None, "b_e={b_e}");
+        }
+        assert_eq!(
+            p.segment_crossing(0, &TransmitEnv::with_effective_rate(80e6, 0.0), 0.1),
+            None
+        );
+        // Out-of-range from_segment clamps to the last segment instead of
+        // panicking; γ in segment 0 is then a (downward) crossing.
+        let e = env_at_gamma(p.envelope().breakpoints()[0] * 0.5);
+        let clamped = p.segment_crossing(usize::MAX, &e, 0.1).expect("crossed");
+        assert_eq!(clamped.from, p.envelope().num_segments() - 1);
+        assert_eq!(clamped.to, 0);
+        // NaN margin degrades to zero margin rather than poisoning the
+        // comparison.
+        let b = p.envelope().breakpoints()[0];
+        let seg = p.envelope_segment(&env_at_gamma(b * 0.5)).unwrap();
+        assert!(
+            p.segment_crossing(seg, &env_at_gamma(b * 1.2), f64::NAN)
+                .expect("crossed")
+                .cleared
+        );
+    }
+
+    #[test]
+    fn replan_split_is_restricted_argmin() {
+        let p = paper_partitioner(&alexnet());
+        let n = p.num_layers();
+        for gamma_scale in [0.1, 0.5, 1.5, 10.0, 1000.0] {
+            let b = p.envelope().breakpoints()[0];
+            let e = env_at_gamma(b * gamma_scale);
+            for min_split in 1..=n {
+                let got = p.replan_split(min_split, &e);
+                // Brute-force restricted argmin, first-minimum ties.
+                let mut best = f64::INFINITY;
+                let mut want = n;
+                for s in min_split..=n {
+                    let c = p.candidate_cost_j(s, 0.0, &e);
+                    if c < best {
+                        best = c;
+                        want = s;
+                    }
+                }
+                assert_eq!(got, want, "γ-scale {gamma_scale} min_split {min_split}");
+                assert!(got >= min_split);
+            }
+        }
+        // Degenerate channel: FISC is the only split that can ship.
+        let dead = TransmitEnv::with_effective_rate(0.0, 0.78);
+        assert_eq!(p.replan_split(3, &dead), n);
+        // min_split is clamped into [1, n].
+        assert!(p.replan_split(0, &env_at_gamma(1e-6)) >= 1);
+        assert_eq!(p.replan_split(n + 7, &env_at_gamma(1e-6)), n);
+    }
+
+    #[test]
+    fn rising_gamma_replans_to_a_later_or_equal_split() {
+        // The NeuPart geometry: higher γ (worse channel) makes fewer
+        // transmit bits optimal, so the re-planned split moves toward
+        // FISC, never backwards past work already done.
+        let p = paper_partitioner(&alexnet());
+        let mut prev = 1;
+        for exp in -2..=6 {
+            let gamma = 10f64.powi(exp);
+            let s = p.replan_split(prev, &env_at_gamma(gamma));
+            assert!(s >= prev, "γ={gamma}: split went backwards {prev}→{s}");
+            prev = s;
+        }
+        assert_eq!(prev, p.num_layers(), "extreme γ must end at FISC");
     }
 
     #[test]

@@ -63,7 +63,7 @@ pub mod envelope;
 pub mod policy;
 pub mod registry;
 
-pub use algorithm2::{FixedWinner, Partitioner, FCC, FISC_OUTPUT_BITS};
+pub use algorithm2::{FixedWinner, Partitioner, SegmentCrossing, FCC, FISC_OUTPUT_BITS};
 pub use constrained::{decide_with_slo_scan, SloPartitioner};
 pub use delay::DelayModel;
 pub use envelope::{CostLine, Envelope};

@@ -48,6 +48,8 @@ fn config() -> CoordinatorConfig {
         shed_infeasible: true,
         backend: ExecutorBackend::Sim,
         faults: None,
+        scenario: None,
+        redecide: None,
         retry: RetryPolicy::default(),
         seed: 42,
     }

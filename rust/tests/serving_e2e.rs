@@ -31,6 +31,8 @@ fn config(network: &str, force: Option<usize>) -> CoordinatorConfig {
         shed_infeasible: true,
         backend: ExecutorBackend::Pjrt,
         faults: None,
+        scenario: None,
+        redecide: None,
         retry: RetryPolicy::default(),
         seed: 5,
     }
