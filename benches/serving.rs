@@ -20,13 +20,21 @@
 //! a link grazing a breakpoint must be absorbed by the hysteresis band,
 //! and the per-sample cost of the scenario clock is timed.
 //!
+//! Also prices the health plane (always on the sim backend): the
+//! breaker's trip→reopen recovery latency through a cloud-pool
+//! replacement, the brownout shed rate of an open burst vs a clean
+//! closed-loop run (which must shed nothing), and the drift watchdog's
+//! detection/calibration under an injected 2× model skew.
+//!
 //! Emits machine-readable `results/BENCH_serving.json`
 //! (`clean_serve_ns`, `fallback_fisc_ns`, `retry_overhead_ns`,
 //! `loadgen_p50_ns`/`p99_ns`/`p999_ns`, `throughput_rps`, `shed_rate`,
 //! `shard_count`, `lane_occupancy`, `loadgen_deterministic`,
 //! `shard_speedup_admission`, `redecisions_fired`,
 //! `redecisions_suppressed`, `energy_delta_vs_frozen_j`,
-//! `scenario_step_ns`).
+//! `scenario_step_ns`, `breaker_trip_to_reopen_s`,
+//! `brownout_shed_rate`, `drift_detect_requests`,
+//! `calibration_factor`).
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -38,8 +46,9 @@ use neupart::channel::{
 };
 use neupart::compress::jpeg::compress_rgb;
 use neupart::coordinator::{
-    loadgen, ArrivalModel, Coordinator, CoordinatorConfig, ExecutorBackend, InferenceRequest,
-    LoadGenConfig, RedecideConfig, RetryPolicy, ServingTier, ServingTierConfig,
+    loadgen, ArrivalModel, BrownoutConfig, Coordinator, CoordinatorConfig, ExecutorBackend,
+    HealthConfig, InferenceRequest, LoadGenConfig, RedecideConfig, RetryPolicy, ServingTier,
+    ServingTierConfig,
 };
 use neupart::corpus::Corpus;
 use neupart::partition::DelayModel;
@@ -75,6 +84,7 @@ fn config(backend: ExecutorBackend, force: Option<usize>) -> CoordinatorConfig {
         scenario: None,
         redecide: None,
         retry: RetryPolicy::default(),
+        health: HealthConfig::default(),
         seed: 3,
     }
 }
@@ -312,6 +322,115 @@ fn main() {
     let scenario_step_ns = t0.elapsed().as_nanos() as f64 / steps as f64;
     println!("scenario/step       {scenario_step_ns:.1} ns per env_at sample (Markov LTE)");
 
+    // ---- Health plane: breaker recovery, brownout, drift watchdog ----
+    // Always the hermetic sim backend: this section prices the recovery
+    // machinery, not the kernels.
+
+    // Breaker trip → reopen. Forced-FCC so every request takes the
+    // remote path: kill the cloud pool (the shard force-opens on the
+    // dead-pool evidence), replace it, and measure how long partitioned
+    // serving takes to come back (cooldown + a successful probe).
+    let breaker = Coordinator::new(config(ExecutorBackend::Sim, Some(0))).expect("coordinator");
+    breaker.serve(requests(8)).expect("warmup serve");
+    breaker.kill_cloud_pool();
+    let t_trip = Instant::now();
+    breaker.serve(requests(4)).expect("tripping serve");
+    assert!(
+        breaker.metrics.snapshot().degraded_mode_entered >= 1,
+        "dead cloud pool must trip the breaker"
+    );
+    breaker.replace_cloud_pool().expect("replace cloud pool");
+    let mut breaker_trip_to_reopen_s = f64::NAN;
+    for _ in 0..400 {
+        breaker.serve(requests(2)).expect("recovery serve");
+        if breaker.metrics.snapshot().breaker_reopened >= 1 {
+            breaker_trip_to_reopen_s = t_trip.elapsed().as_secs_f64();
+            break;
+        }
+        // The breaker cools down in wall time; don't outrun it.
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    assert!(
+        breaker_trip_to_reopen_s.is_finite(),
+        "breaker must reopen after the pool is replaced"
+    );
+    println!(
+        "\nhealth/breaker      trip -> reopen in {:.3} s (pool replaced mid-run)",
+        breaker_trip_to_reopen_s
+    );
+
+    // Brownout: a clean closed-loop run must shed nothing, an open
+    // burst over the same fleet must shed its loose-deadline overload
+    // instead of queueing it. Watermarks are pulled low so the verdict
+    // does not depend on producer/worker timing margins.
+    let brown_n: u64 = if smoke { 20_000 } else { 100_000 };
+    let mut brown_cfg = LoadGenConfig::table_iv_wlan(brown_n, 13);
+    brown_cfg.infeasible_frac = 0.0;
+    let mut brown_shard = shard_config(2, None);
+    brown_shard.health.brownout = BrownoutConfig {
+        enabled: true,
+        soft_watermark: 0.25,
+        hard_watermark: 0.5,
+        loose_headroom_s: 1.0,
+    };
+    let brown_tier = |cfg: &LoadGenConfig| {
+        ServingTier::new(ServingTierConfig::per_class(
+            brown_shard.clone(),
+            &cfg.class_envs(),
+        ))
+        .expect("tier")
+    };
+    brown_cfg.arrival = ArrivalModel::Closed { concurrency: 2 };
+    let clean_rep = loadgen::run(&brown_tier(&brown_cfg), &brown_cfg).expect("clean brownout run");
+    assert_eq!(
+        clean_rep.shed_overflow + clean_rep.shed_brownout,
+        0,
+        "clean closed-loop load must not brown out"
+    );
+    brown_cfg.arrival = ArrivalModel::Burst {
+        concurrency: 2,
+        producers: 4,
+        clean_fraction: 0.2,
+    };
+    let burst_rep = loadgen::run(&brown_tier(&brown_cfg), &brown_cfg).expect("burst brownout run");
+    assert!(
+        burst_rep.shed_brownout > 0,
+        "open burst must shed via the brownout reason"
+    );
+    let brownout_shed_rate = (burst_rep.shed_overflow + burst_rep.shed_brownout) as f64
+        / burst_rep.clients.max(1) as f64;
+    println!(
+        "health/brownout     clean shed 0, burst shed {:.1}% ({} brownout / {} overflow), p99 {:.1} us",
+        brownout_shed_rate * 100.0,
+        burst_rep.shed_brownout,
+        burst_rep.shed_overflow,
+        burst_rep.p99_ns / 1e3
+    );
+
+    // Drift watchdog: forced-FISC (the client prefix is the whole
+    // network, so every request observes a residual) under an injected
+    // 2× latency+energy skew — every observation detects, the class
+    // quarantines past min_samples, and the calibration factor
+    // converges onto the skew.
+    let drift_n = 32usize;
+    let drift = Coordinator::new(config(ExecutorBackend::Sim, Some(11))).expect("coordinator");
+    drift.set_model_skew(2.0, 2.0);
+    drift.serve(requests(drift_n)).expect("drift serve");
+    let m_drift = drift.metrics.snapshot();
+    assert_eq!(
+        m_drift.drift_detect_requests, drift_n as u64,
+        "every skewed request must detect drift"
+    );
+    assert!(m_drift.drift_quarantines >= 1, "2x skew must quarantine");
+    assert!(
+        (m_drift.calibration_factor - 2.0).abs() < 0.25,
+        "calibration factor must converge onto the injected skew"
+    );
+    println!(
+        "health/drift        {} detections, {} quarantine(s), calibration factor {:.3}",
+        m_drift.drift_detect_requests, m_drift.drift_quarantines, m_drift.calibration_factor
+    );
+
     // ---- Load harness: the Table-IV fleet through the sharded tier ----
     // Always the hermetic sim backend, whatever the policy benches above
     // ran on: the harness measures the serving tier, not the kernels.
@@ -452,6 +571,22 @@ fn main() {
             (
                 "scenario_step_ns".to_string(),
                 Value::Num(scenario_step_ns),
+            ),
+            (
+                "breaker_trip_to_reopen_s".to_string(),
+                Value::Num(breaker_trip_to_reopen_s),
+            ),
+            (
+                "brownout_shed_rate".to_string(),
+                Value::Num(brownout_shed_rate),
+            ),
+            (
+                "drift_detect_requests".to_string(),
+                Value::Num(m_drift.drift_detect_requests as f64),
+            ),
+            (
+                "calibration_factor".to_string(),
+                Value::Num(m_drift.calibration_factor),
             ),
         ],
     )

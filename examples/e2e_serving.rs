@@ -15,7 +15,7 @@ use std::path::PathBuf;
 
 use neupart::channel::TransmitEnv;
 use neupart::coordinator::{
-    Coordinator, CoordinatorConfig, ExecutorBackend, InferenceRequest, RetryPolicy,
+    Coordinator, CoordinatorConfig, ExecutorBackend, HealthConfig, InferenceRequest, RetryPolicy,
 };
 use neupart::corpus::Corpus;
 
@@ -54,6 +54,7 @@ fn config(force_split: Option<usize>, be_mbps: f64) -> CoordinatorConfig {
         scenario: None,
         redecide: None,
         retry: RetryPolicy::default(),
+        health: HealthConfig::default(),
         seed: 7,
     }
 }

@@ -190,6 +190,7 @@ pub struct FaultModel {
     rng: Rng,
     link_down: bool,
     decided: u64,
+    recoveries: u64,
 }
 
 impl FaultModel {
@@ -200,6 +201,7 @@ impl FaultModel {
             config,
             link_down: false,
             decided: 0,
+            recoveries: 0,
         }
     }
 
@@ -214,6 +216,7 @@ impl FaultModel {
             if self.link_down {
                 if u < o.p_down_to_up {
                     self.link_down = false;
+                    self.recoveries += 1;
                 }
             } else if u < o.p_up_to_down {
                 self.link_down = true;
@@ -243,6 +246,13 @@ impl FaultModel {
     /// Is the Markov link currently in an outage window?
     pub fn link_down(&self) -> bool {
         self.link_down
+    }
+
+    /// Down→up Markov transitions seen so far — the outage-end
+    /// visibility the health plane's breaker probes rely on (a recovery
+    /// only becomes observable when a send advances the chain).
+    pub fn outage_recoveries(&self) -> u64 {
+        self.recoveries
     }
 }
 
@@ -329,6 +339,29 @@ mod tests {
             assert_eq!(m.next_decision(), FaultDecision::Outage);
         }
         assert!(m.link_down());
+    }
+
+    #[test]
+    fn outage_recoveries_count_down_to_up_transitions() {
+        let mut m = FaultModel::new(chaos_config(7));
+        let mut was_down = false;
+        let mut expected = 0u64;
+        for _ in 0..2000 {
+            let d = m.next_decision();
+            let down = d == FaultDecision::Outage;
+            if was_down && !down {
+                expected += 1;
+            }
+            was_down = down;
+        }
+        assert!(expected > 0, "chaos config never recovered in 2000 steps");
+        assert_eq!(m.outage_recoveries(), expected);
+        // A link that never goes down never recovers.
+        let mut clean = FaultModel::new(FaultConfig::none());
+        for _ in 0..100 {
+            clean.next_decision();
+        }
+        assert_eq!(clean.outage_recoveries(), 0);
     }
 
     #[test]

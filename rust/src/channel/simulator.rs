@@ -168,6 +168,11 @@ pub struct ChannelStats {
     /// Attempts rejected while the link was in an outage window (no
     /// energy spent).
     pub outage_rejections: u64,
+    /// Markov down→up recoveries observed so far — the outage-end
+    /// signal the health plane's breaker probes surface. Only a send
+    /// advances the Markov chain, so an ended outage becomes visible
+    /// exactly when a (probe) transfer attempts the link again.
+    pub outage_recoveries: u64,
     /// Radio energy burnt by dropped transfers, joules (subset of
     /// `energy_j`).
     pub wasted_energy_j: f64,
@@ -190,6 +195,7 @@ impl ChannelStats {
         self.transfers_dropped += other.transfers_dropped;
         self.stalls += other.stalls;
         self.outage_rejections += other.outage_rejections;
+        self.outage_recoveries += other.outage_recoveries;
         self.wasted_energy_j += other.wasted_energy_j;
         self.wasted_airtime_s += other.wasted_airtime_s;
         self.stall_airtime_s += other.stall_airtime_s;
@@ -252,7 +258,11 @@ impl Channel {
             let mut guard = self.state.lock().unwrap_or_else(|p| p.into_inner());
             let state = &mut *guard;
             let fault = match state.faults.as_mut() {
-                Some(m) => m.next_decision(),
+                Some(m) => {
+                    let d = m.next_decision();
+                    state.stats.outage_recoveries = m.outage_recoveries();
+                    d
+                }
                 None => FaultDecision::Deliver,
             };
             let (outcome, sleep_s) = Self::resolve_send(&self.config, state, payload_bits, fault);
@@ -398,6 +408,16 @@ mod tests {
         let mut identity = a.stats();
         identity.merge(&ChannelStats::default());
         assert_eq!(identity, a.stats());
+        let mut x = ChannelStats {
+            outage_recoveries: 2,
+            ..Default::default()
+        };
+        let y = ChannelStats {
+            outage_recoveries: 3,
+            ..Default::default()
+        };
+        x.merge(&y);
+        assert_eq!(x.outage_recoveries, 5);
     }
 
     #[test]
@@ -702,6 +722,31 @@ mod tests {
         assert_eq!(s.outage_rejections, 20);
         assert_eq!(s.energy_j, 0.0);
         assert_eq!(s.airtime_s, 0.0);
+        // A pinned-down link never recovers.
+        assert_eq!(s.outage_recoveries, 0);
+    }
+
+    #[test]
+    fn outage_end_is_visible_through_stats() {
+        // Down after the first attempt, back up on the next: every
+        // retry cycle surfaces one recovery.
+        let ch = Channel::new(
+            faulty(
+                0.0,
+                0.0,
+                Some(MarkovOutage {
+                    p_up_to_down: 1.0,
+                    p_down_to_up: 1.0,
+                }),
+                13,
+            ),
+            1,
+        );
+        assert_eq!(ch.send(1_000).unwrap_err(), ChannelError::Outage);
+        assert_eq!(ch.stats().outage_recoveries, 0);
+        // The next send advances the chain down→up and delivers.
+        assert!(ch.send(1_000).is_ok());
+        assert_eq!(ch.stats().outage_recoveries, 1);
     }
 
     #[test]

@@ -21,7 +21,7 @@
 //! segment from starving a quiet one. Capacity is shared across buckets.
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 /// A queued item with admission metadata.
@@ -127,6 +127,21 @@ impl<T> Batcher<T> {
         self.buckets
     }
 
+    /// Shared capacity across all buckets.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Lock the queue state, recovering from a poisoned mutex. A thread
+    /// that panics while holding the lock (e.g. a worker dying mid-drain)
+    /// leaves the queue structurally sound — every mutation here is a
+    /// plain field update with no multi-step invariant that a panic could
+    /// tear — so the health plane keeps serving instead of cascading the
+    /// panic into every producer and consumer that touches the queue next.
+    fn lock_state(&self) -> MutexGuard<'_, State<T>> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
     fn clamp_bucket(&self, bucket: usize) -> usize {
         bucket.min(self.buckets - 1)
     }
@@ -141,7 +156,7 @@ impl<T> Batcher<T> {
     /// Blocking submit into a specific bucket (clamped to the valid range).
     pub fn submit_to(&self, bucket: usize, item: T, deadline: Option<Instant>) -> Submit {
         let bucket = self.clamp_bucket(bucket);
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.lock_state();
         loop {
             if s.closed {
                 return Submit::Rejected;
@@ -162,7 +177,7 @@ impl<T> Batcher<T> {
                     let (guard, timeout) = self
                         .not_full
                         .wait_timeout(s, d.saturating_duration_since(now))
-                        .unwrap();
+                        .unwrap_or_else(|p| p.into_inner());
                     if timeout.timed_out() {
                         let mut guard = guard;
                         guard.stats.shed_expired += 1;
@@ -171,7 +186,7 @@ impl<T> Batcher<T> {
                     }
                     guard
                 }
-                None => self.not_full.wait(s).unwrap(),
+                None => self.not_full.wait(s).unwrap_or_else(|p| p.into_inner()),
             };
         }
         self.push(&mut s, bucket, item, deadline);
@@ -186,7 +201,7 @@ impl<T> Batcher<T> {
     /// Non-blocking submit into a specific bucket (clamped).
     pub fn try_submit_to(&self, bucket: usize, item: T, deadline: Option<Instant>) -> Submit {
         let bucket = self.clamp_bucket(bucket);
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.lock_state();
         if s.closed || s.len >= self.capacity {
             s.stats.rejected_full += 1;
             return Submit::Rejected;
@@ -244,7 +259,7 @@ impl<T> Batcher<T> {
     /// Blocking take; skips (and counts) entries whose deadline expired in
     /// the queue. Returns `None` once closed and drained.
     pub fn take(&self) -> Option<(T, Duration)> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.lock_state();
         loop {
             if let Some(out) = self.pop_oldest(&mut s) {
                 return Some(out);
@@ -252,7 +267,7 @@ impl<T> Batcher<T> {
             if s.closed {
                 return None;
             }
-            s = self.not_empty.wait(s).unwrap();
+            s = self.not_empty.wait(s).unwrap_or_else(|p| p.into_inner());
         }
     }
 
@@ -295,7 +310,7 @@ impl<T> Batcher<T> {
         max: usize,
     ) -> Option<(usize, Vec<(T, Duration)>)> {
         assert!(max >= 1);
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.lock_state();
         loop {
             loop {
                 let bucket = match preferred {
@@ -314,7 +329,7 @@ impl<T> Batcher<T> {
             if s.closed {
                 return None;
             }
-            s = self.not_empty.wait(s).unwrap();
+            s = self.not_empty.wait(s).unwrap_or_else(|p| p.into_inner());
         }
     }
 
@@ -346,30 +361,39 @@ impl<T> Batcher<T> {
 
     /// Close the queue: producers get `Rejected`, consumers drain then stop.
     pub fn close(&self) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.lock_state();
         s.closed = true;
         self.not_empty.notify_all();
         self.not_full.notify_all();
     }
 
     pub fn stats(&self) -> BatcherStats {
-        self.state.lock().unwrap().stats
+        self.lock_state().stats
     }
 
     /// Per-bucket statistics, indexed by bucket.
     pub fn bucket_stats(&self) -> Vec<BucketStats> {
-        self.state.lock().unwrap().bucket_stats.clone()
+        self.lock_state().bucket_stats.clone()
     }
 
     /// Total queued entries across buckets.
     pub fn depth(&self) -> usize {
-        self.state.lock().unwrap().len
+        self.lock_state().len
     }
 
     /// Queued entries per bucket.
     pub fn bucket_depths(&self) -> Vec<usize> {
-        let s = self.state.lock().unwrap();
+        let s = self.lock_state();
         s.queues.iter().map(|q| q.len()).collect()
+    }
+
+    /// Panic while holding the state lock, poisoning the mutex. Test hook
+    /// for the poison-recovery regression test — production code has no
+    /// path that panics under the lock.
+    #[cfg(test)]
+    fn poison_for_test(&self) {
+        let _guard = self.state.lock().unwrap();
+        panic!("poisoning the batcher state lock for the regression test");
     }
 }
 
@@ -509,6 +533,27 @@ mod tests {
         assert_eq!(b.stats().taken, 200);
     }
 
+    #[test]
+    fn poisoned_lock_recovers_and_keeps_serving() {
+        let b = Arc::new(Batcher::new(4));
+        b.submit(1, None);
+        let b2 = b.clone();
+        let poisoner = std::thread::spawn(move || b2.poison_for_test());
+        assert!(poisoner.join().is_err(), "poison hook must panic");
+        // Every public entry point recovers the poisoned lock and the
+        // queue keeps serving with its contents intact.
+        assert_eq!(b.submit(2, None), Submit::Accepted);
+        assert_eq!(b.try_submit(3, None), Submit::Accepted);
+        assert_eq!(b.depth(), 3);
+        assert_eq!(b.take().unwrap().0, 1);
+        let batch = b.take_batch(8).unwrap();
+        assert_eq!(batch.iter().map(|(v, _)| *v).collect::<Vec<_>>(), vec![2, 3]);
+        assert_eq!(b.stats().taken, 3);
+        assert_eq!(b.bucket_depths(), vec![0]);
+        b.close();
+        assert_eq!(b.take(), None);
+    }
+
     // ---- γ-bucketed lanes ----
 
     #[test]
@@ -561,6 +606,7 @@ mod tests {
     #[test]
     fn capacity_is_shared_across_buckets() {
         let b = Batcher::with_buckets(2, 4);
+        assert_eq!(b.capacity(), 2);
         assert_eq!(b.try_submit_to(0, 1, None), Submit::Accepted);
         assert_eq!(b.try_submit_to(3, 2, None), Submit::Accepted);
         assert_eq!(b.try_submit_to(1, 3, None), Submit::Rejected);

@@ -1,0 +1,873 @@
+//! The per-shard health plane: circuit breaker, overload brownout, and
+//! model-drift watchdog.
+//!
+//! Three cooperating mechanisms keep a shard serving well when its
+//! runtime assumptions break — and, unlike the PR-6 degraded *latch*,
+//! every one of them recovers on its own:
+//!
+//! * **Circuit breaker** ([`CircuitBreaker`]) — guards the remote path
+//!   (uplink send + cloud suffix). `Closed` serves normally while a
+//!   rolling window of request-level remote outcomes is watched; when
+//!   the windowed error rate trips (or the cloud pool is found dead,
+//!   [`CircuitBreaker::force_open`]) the breaker goes `Open` and the
+//!   shard serves client-only (FISC) without touching the radio. After
+//!   a cooldown it admits a bounded number of `HalfOpen` probe
+//!   requests; a probe that completes the remote path closes the
+//!   breaker and the shard returns to partitioned serving — a replaced
+//!   cloud pool or an ended Markov outage heals without a restart.
+//! * **Overload brownout** ([`BrownoutConfig`]) — admission watches
+//!   queue depth as a fraction of capacity. Past the soft watermark,
+//!   overflow-lane (degenerate-γ) requests are shed; past the hard
+//!   watermark, loose-deadline requests are shed too, so a traffic
+//!   burst degrades throughput gracefully instead of blowing queue
+//!   latency for the tight-deadline traffic. Off by default: the
+//!   open-arrival load harness keeps the queue at capacity by design.
+//! * **Drift watchdog** ([`DriftWatchdog`]) — every completed client
+//!   prefix compares observed latency/energy against the compiled
+//!   `NetworkProfile` prediction for the executed split. The EWMA of
+//!   the observed/predicted ratios leaving the nominal band first
+//!   applies a scalar calibration factor to the shard's decisions (an
+//!   affine γ-rescale — envelope geometry unchanged, see
+//!   [`crate::partition::CalibrationCell`]); past the quarantine ratio
+//!   the class routes to the conservative policy (FISC or full-cloud,
+//!   whichever the measured side favors) until residuals recover.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Why admission refused a request without queueing it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The deadline was provably infeasible at the admission-time
+    /// channel state (the delay-envelope lower bound already exceeded
+    /// it).
+    Infeasible,
+    /// Brownout past the soft watermark: the request was headed for the
+    /// overflow (degenerate-γ) lane while the queue ran hot.
+    Overflow,
+    /// Brownout past the hard watermark: a loose-deadline request shed
+    /// to keep tight-deadline admission latency bounded.
+    Brownout,
+}
+
+/// Health-plane knobs, one sub-config per mechanism.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HealthConfig {
+    pub breaker: BreakerConfig,
+    pub brownout: BrownoutConfig,
+    pub watchdog: WatchdogConfig,
+}
+
+// ---------------------------------------------------------------------------
+// Circuit breaker
+// ---------------------------------------------------------------------------
+
+/// Circuit-breaker knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BreakerConfig {
+    /// Off = the remote path is always allowed and never recorded (the
+    /// pre-breaker behavior, minus the unrecoverable latch).
+    pub enabled: bool,
+    /// Rolling window of request-level remote outcomes.
+    pub window: usize,
+    /// Minimum outcomes in the window before the error rate can trip.
+    pub min_samples: usize,
+    /// Windowed error-rate trip threshold in `(0, 1]`.
+    pub trip_error_rate: f64,
+    /// Seconds the breaker stays `Open` before admitting probes.
+    pub cooldown_s: f64,
+    /// Concurrent probe requests allowed in `HalfOpen`.
+    pub half_open_probes: u32,
+    /// Probe successes required to close from `HalfOpen`.
+    pub close_after: u32,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        BreakerConfig {
+            enabled: true,
+            window: 32,
+            min_samples: 8,
+            trip_error_rate: 0.5,
+            cooldown_s: 0.05,
+            half_open_probes: 2,
+            close_after: 1,
+        }
+    }
+}
+
+impl BreakerConfig {
+    /// A breaker that never trips — chaos tests asserting exact
+    /// per-request retry/drop counts use this to keep the PR-6 failure
+    /// path untouched by breaker routing.
+    pub fn disabled() -> Self {
+        BreakerConfig {
+            enabled: false,
+            ..Self::default()
+        }
+    }
+
+    /// Clamp degenerate knobs so a hand-rolled config cannot wedge the
+    /// breaker (zero window/probes, NaN rates, negative cooldowns).
+    pub fn sanitized(mut self) -> Self {
+        self.window = self.window.max(1);
+        self.min_samples = self.min_samples.clamp(1, self.window);
+        self.trip_error_rate = if self.trip_error_rate.is_nan() {
+            1.0
+        } else {
+            self.trip_error_rate.clamp(f64::MIN_POSITIVE, 1.0)
+        };
+        self.cooldown_s = if self.cooldown_s.is_nan() {
+            0.0
+        } else {
+            self.cooldown_s.max(0.0)
+        };
+        self.half_open_probes = self.half_open_probes.max(1);
+        self.close_after = self.close_after.max(1);
+        self
+    }
+}
+
+/// Breaker state machine position.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Remote path serving normally, outcomes windowed.
+    Closed,
+    /// Remote path denied; cooling down toward probes.
+    Open,
+    /// Bounded probes in flight deciding whether to close.
+    HalfOpen,
+}
+
+/// What the breaker grants one request's remote path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RemoteGate {
+    /// Closed (or breaker disabled): use the remote path normally.
+    Allow,
+    /// HalfOpen: this request is one of the bounded probes.
+    Probe,
+    /// Open (or probe quota full): serve client-only, skip the radio.
+    Deny,
+}
+
+/// State transition a recorded outcome caused, for metrics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerTransition {
+    None,
+    /// Entered `Open` (windowed trip, failed probe, or dead pool).
+    Tripped,
+    /// Closed again from `HalfOpen` — the remote path healed.
+    Reopened,
+}
+
+struct BreakerInner {
+    state: BreakerState,
+    /// Rolling request-level remote outcomes, `true` = failure.
+    window: VecDeque<bool>,
+    failures: usize,
+    opened_at: Option<Instant>,
+    probes_in_flight: u32,
+    probe_successes: u32,
+}
+
+/// Windowed circuit breaker over the shard's remote path (module docs).
+pub struct CircuitBreaker {
+    config: BreakerConfig,
+    inner: Mutex<BreakerInner>,
+}
+
+impl CircuitBreaker {
+    pub fn new(config: BreakerConfig) -> Self {
+        CircuitBreaker {
+            config: config.sanitized(),
+            inner: Mutex::new(BreakerInner {
+                state: BreakerState::Closed,
+                window: VecDeque::new(),
+                failures: 0,
+                opened_at: None,
+                probes_in_flight: 0,
+                probe_successes: 0,
+            }),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, BreakerInner> {
+        // A worker that panicked while holding the lock must not wedge
+        // the shard's health plane.
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn open(s: &mut BreakerInner) {
+        s.state = BreakerState::Open;
+        s.opened_at = Some(Instant::now());
+        s.window.clear();
+        s.failures = 0;
+        s.probes_in_flight = 0;
+        s.probe_successes = 0;
+    }
+
+    /// Gate one request's remote path. `Open` lazily becomes `HalfOpen`
+    /// once the cooldown has elapsed — the transitioning caller gets the
+    /// first probe slot.
+    pub fn admit_remote(&self) -> RemoteGate {
+        if !self.config.enabled {
+            return RemoteGate::Allow;
+        }
+        let mut s = self.lock();
+        match s.state {
+            BreakerState::Closed => RemoteGate::Allow,
+            BreakerState::Open => {
+                let cooled = s
+                    .opened_at
+                    .map(|t| t.elapsed().as_secs_f64() >= self.config.cooldown_s)
+                    .unwrap_or(true);
+                if cooled {
+                    s.state = BreakerState::HalfOpen;
+                    s.probes_in_flight = 1;
+                    s.probe_successes = 0;
+                    RemoteGate::Probe
+                } else {
+                    RemoteGate::Deny
+                }
+            }
+            BreakerState::HalfOpen => {
+                if s.probes_in_flight < self.config.half_open_probes {
+                    s.probes_in_flight += 1;
+                    RemoteGate::Probe
+                } else {
+                    RemoteGate::Deny
+                }
+            }
+        }
+    }
+
+    /// Record one request-level remote verdict (the whole uplink+cloud
+    /// path succeeded or was exhausted — individual retry attempts are
+    /// not breaker events, so a retry-heavy-but-succeeding run never
+    /// trips).
+    pub fn record(&self, gate: RemoteGate, ok: bool) -> BreakerTransition {
+        if !self.config.enabled || gate == RemoteGate::Deny {
+            return BreakerTransition::None;
+        }
+        let mut s = self.lock();
+        if gate == RemoteGate::Probe {
+            s.probes_in_flight = s.probes_in_flight.saturating_sub(1);
+        }
+        match s.state {
+            BreakerState::Closed => {
+                if s.window.len() == self.config.window && s.window.pop_front() == Some(true) {
+                    s.failures -= 1;
+                }
+                s.window.push_back(!ok);
+                if !ok {
+                    s.failures += 1;
+                }
+                let n = s.window.len();
+                if n >= self.config.min_samples
+                    && s.failures as f64 >= self.config.trip_error_rate * n as f64
+                {
+                    Self::open(&mut s);
+                    BreakerTransition::Tripped
+                } else {
+                    BreakerTransition::None
+                }
+            }
+            BreakerState::HalfOpen => {
+                if gate != RemoteGate::Probe {
+                    // A stale Allow verdict from before the trip; the
+                    // probes decide the state, not it.
+                    return BreakerTransition::None;
+                }
+                if ok {
+                    s.probe_successes += 1;
+                    if s.probe_successes >= self.config.close_after {
+                        s.state = BreakerState::Closed;
+                        s.window.clear();
+                        s.failures = 0;
+                        s.opened_at = None;
+                        s.probes_in_flight = 0;
+                        s.probe_successes = 0;
+                        BreakerTransition::Reopened
+                    } else {
+                        BreakerTransition::None
+                    }
+                } else {
+                    // A failed probe re-opens and restarts the cooldown.
+                    Self::open(&mut s);
+                    BreakerTransition::Tripped
+                }
+            }
+            // Stale verdicts arriving after a force_open are inert.
+            BreakerState::Open => BreakerTransition::None,
+        }
+    }
+
+    /// Release a probe slot without a verdict — the request failed
+    /// before its remote path was attempted (client prefix died).
+    pub fn abandon(&self, gate: RemoteGate) {
+        if self.config.enabled && gate == RemoteGate::Probe {
+            let mut s = self.lock();
+            s.probes_in_flight = s.probes_in_flight.saturating_sub(1);
+        }
+    }
+
+    /// Fast trip on unambiguous evidence (the cloud pool read zero alive
+    /// threads). Returns `true` when this call performed the transition.
+    pub fn force_open(&self) -> bool {
+        if !self.config.enabled {
+            return false;
+        }
+        let mut s = self.lock();
+        if s.state == BreakerState::Open {
+            return false;
+        }
+        Self::open(&mut s);
+        true
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.lock().state
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Overload brownout
+// ---------------------------------------------------------------------------
+
+/// Brownout watermarks over queue depth as a fraction of capacity.
+#[derive(Clone, Copy, Debug)]
+pub struct BrownoutConfig {
+    /// Off by default: the open-arrival load harness saturates the
+    /// queue by design, and clean-load shed rate must stay 0.
+    pub enabled: bool,
+    /// Depth fraction past which overflow-lane requests are shed.
+    pub soft_watermark: f64,
+    /// Depth fraction past which loose-deadline requests are shed too.
+    pub hard_watermark: f64,
+    /// A deadline is "loose" when its headroom over the delay-envelope
+    /// lower bound exceeds this (no deadline at all is loosest).
+    pub loose_headroom_s: f64,
+}
+
+impl Default for BrownoutConfig {
+    fn default() -> Self {
+        BrownoutConfig {
+            enabled: false,
+            soft_watermark: 0.75,
+            hard_watermark: 0.90,
+            loose_headroom_s: 1.0,
+        }
+    }
+}
+
+impl BrownoutConfig {
+    /// Clamp degenerate watermarks (NaN → never shed; soft above hard →
+    /// soft pulled down to hard).
+    pub fn sanitized(mut self) -> Self {
+        let clamp01 = |x: f64| if x.is_nan() { f64::INFINITY } else { x.max(0.0) };
+        self.soft_watermark = clamp01(self.soft_watermark);
+        self.hard_watermark = clamp01(self.hard_watermark);
+        self.soft_watermark = self.soft_watermark.min(self.hard_watermark);
+        self.loose_headroom_s = if self.loose_headroom_s.is_nan() {
+            0.0
+        } else {
+            self.loose_headroom_s.max(0.0)
+        };
+        self
+    }
+
+    /// Shed verdict for one admission: `depth_frac` is queue depth over
+    /// capacity, `overflow_lane` marks a degenerate-γ request, and
+    /// `headroom_s` is `deadline − delay lower bound` (`None` = no
+    /// deadline). Priority order: overflow-lane first (soft watermark),
+    /// then loose deadlines (hard watermark); tight-deadline requests
+    /// are never browned out.
+    pub fn assess(
+        &self,
+        depth_frac: f64,
+        overflow_lane: bool,
+        headroom_s: Option<f64>,
+    ) -> Option<ShedReason> {
+        if !self.enabled || !(depth_frac >= self.soft_watermark) {
+            return None;
+        }
+        if overflow_lane {
+            return Some(ShedReason::Overflow);
+        }
+        if depth_frac >= self.hard_watermark {
+            let loose = match headroom_s {
+                None => true,
+                Some(h) => h > self.loose_headroom_s,
+            };
+            if loose {
+                return Some(ShedReason::Brownout);
+            }
+        }
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Drift watchdog
+// ---------------------------------------------------------------------------
+
+/// Drift-watchdog knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct WatchdogConfig {
+    pub enabled: bool,
+    /// EWMA smoothing factor in `(0, 1]`.
+    pub alpha: f64,
+    /// Nominal band half-width: residual EWMAs within `1 ± band` leave
+    /// the decision path untouched.
+    pub band: f64,
+    /// Ratio-symmetric deviation (`max(r, 1/r)`) past which the class is
+    /// quarantined to the conservative policy.
+    pub quarantine_ratio: f64,
+    /// Observations before the watchdog may change state.
+    pub min_samples: u64,
+}
+
+impl Default for WatchdogConfig {
+    fn default() -> Self {
+        WatchdogConfig {
+            enabled: true,
+            alpha: 0.2,
+            band: 0.25,
+            quarantine_ratio: 1.75,
+            min_samples: 8,
+        }
+    }
+}
+
+impl WatchdogConfig {
+    /// Clamp degenerate knobs (alpha into `(0, 1]`, band ≥ 0, the
+    /// quarantine ratio strictly above the band edge).
+    pub fn sanitized(mut self) -> Self {
+        self.alpha = if self.alpha.is_nan() {
+            0.2
+        } else {
+            self.alpha.clamp(1e-3, 1.0)
+        };
+        self.band = if self.band.is_nan() { 0.0 } else { self.band.max(0.0) };
+        self.quarantine_ratio = if self.quarantine_ratio.is_nan() {
+            f64::INFINITY
+        } else {
+            self.quarantine_ratio.max(1.0 + self.band)
+        };
+        self.min_samples = self.min_samples.max(1);
+        self
+    }
+}
+
+/// Where the watchdog currently routes this class's decisions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DriftState {
+    /// Residuals inside the band: decisions untouched.
+    Nominal,
+    /// Residuals outside the band: scalar calibration applied.
+    Calibrated,
+    /// Residuals past the quarantine ratio: conservative routing.
+    Quarantined,
+}
+
+/// What one observation did to the watchdog, for metrics and routing.
+#[derive(Clone, Copy, Debug)]
+pub struct DriftUpdate {
+    pub state: DriftState,
+    /// This observation's own ratios were outside the band.
+    pub detected: bool,
+    pub entered_calibration: bool,
+    pub entered_quarantine: bool,
+    /// Left Calibrated/Quarantined back to Nominal.
+    pub recovered: bool,
+    /// Calibration factors to apply (1.0 while Nominal).
+    pub latency_factor: f64,
+    pub energy_factor: f64,
+}
+
+struct WatchdogInner {
+    ewma_latency: f64,
+    ewma_energy: f64,
+    samples: u64,
+    state: DriftState,
+}
+
+/// Per-(network, device-class) EWMA residual tracker (module docs). A
+/// shard *is* one (network, device-class), so one watchdog per shard.
+pub struct DriftWatchdog {
+    config: WatchdogConfig,
+    inner: Mutex<WatchdogInner>,
+}
+
+/// Ratio-symmetric deviation from 1: `max(r, 1/r)`, so a 2× and a 0.5×
+/// skew are equally far from nominal. Degenerate ratios read as nominal.
+fn deviation(r: f64) -> f64 {
+    if r.is_finite() && r > 0.0 {
+        r.max(1.0 / r)
+    } else {
+        1.0
+    }
+}
+
+impl DriftWatchdog {
+    pub fn new(config: WatchdogConfig) -> Self {
+        DriftWatchdog {
+            config: config.sanitized(),
+            inner: Mutex::new(WatchdogInner {
+                ewma_latency: 1.0,
+                ewma_energy: 1.0,
+                samples: 0,
+                state: DriftState::Nominal,
+            }),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, WatchdogInner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Fold one completed request's observed/predicted ratios into the
+    /// EWMAs and re-evaluate the state. With a faithful device every
+    /// ratio is exactly 1.0, the EWMAs stay exactly 1.0 whatever the
+    /// worker interleaving, and the watchdog never perturbs decisions.
+    pub fn observe(&self, latency_ratio: f64, energy_ratio: f64) -> DriftUpdate {
+        let mut s = self.lock();
+        let a = self.config.alpha;
+        if latency_ratio.is_finite() && latency_ratio > 0.0 {
+            s.ewma_latency = (1.0 - a) * s.ewma_latency + a * latency_ratio;
+        }
+        if energy_ratio.is_finite() && energy_ratio > 0.0 {
+            s.ewma_energy = (1.0 - a) * s.ewma_energy + a * energy_ratio;
+        }
+        s.samples += 1;
+
+        let edge = 1.0 + self.config.band;
+        let detected = deviation(latency_ratio).max(deviation(energy_ratio)) > edge;
+        let dev = deviation(s.ewma_latency).max(deviation(s.ewma_energy));
+        let old = s.state;
+        let new = if s.samples < self.config.min_samples {
+            old
+        } else if dev >= self.config.quarantine_ratio {
+            DriftState::Quarantined
+        } else if dev > edge {
+            DriftState::Calibrated
+        } else {
+            DriftState::Nominal
+        };
+        s.state = new;
+
+        // Clamp the factors so a pathological residual cannot turn the
+        // calibration into a divide-by-~0.
+        let clamp = |x: f64| x.clamp(0.05, 20.0);
+        let (latency_factor, energy_factor) = if new == DriftState::Nominal {
+            (1.0, 1.0)
+        } else {
+            (clamp(s.ewma_latency), clamp(s.ewma_energy))
+        };
+        DriftUpdate {
+            state: new,
+            detected,
+            entered_calibration: old != DriftState::Calibrated && new == DriftState::Calibrated,
+            entered_quarantine: old != DriftState::Quarantined && new == DriftState::Quarantined,
+            recovered: old != DriftState::Nominal && new == DriftState::Nominal,
+            latency_factor,
+            energy_factor,
+        }
+    }
+
+    pub fn state(&self) -> DriftState {
+        self.lock().state
+    }
+
+    /// Current latency calibration factor (1.0 while Nominal).
+    pub fn latency_factor(&self) -> f64 {
+        let s = self.lock();
+        if s.state == DriftState::Nominal {
+            1.0
+        } else {
+            s.ewma_latency.clamp(0.05, 20.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_breaker(cooldown_s: f64) -> CircuitBreaker {
+        CircuitBreaker::new(BreakerConfig {
+            enabled: true,
+            window: 8,
+            min_samples: 4,
+            trip_error_rate: 0.5,
+            cooldown_s,
+            half_open_probes: 2,
+            close_after: 1,
+        })
+    }
+
+    #[test]
+    fn closed_allows_and_successes_never_trip() {
+        let b = fast_breaker(10.0);
+        for _ in 0..100 {
+            let gate = b.admit_remote();
+            assert_eq!(gate, RemoteGate::Allow);
+            assert_eq!(b.record(gate, true), BreakerTransition::None);
+        }
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn windowed_error_rate_trips_to_open() {
+        let b = fast_breaker(10.0);
+        let mut tripped = false;
+        for _ in 0..4 {
+            let gate = b.admit_remote();
+            if b.record(gate, false) == BreakerTransition::Tripped {
+                tripped = true;
+            }
+        }
+        assert!(tripped, "4/4 failures at min_samples=4 must trip");
+        assert_eq!(b.state(), BreakerState::Open);
+    }
+
+    #[test]
+    fn mixed_window_below_rate_stays_closed() {
+        let b = fast_breaker(10.0);
+        // 1 failure per 3 successes: 25% < 50% trip rate.
+        for i in 0..40 {
+            let gate = b.admit_remote();
+            assert_eq!(b.record(gate, i % 4 != 0), BreakerTransition::None);
+        }
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    /// Property: while Open (within cooldown) the breaker never grants
+    /// the remote path — no Allow, no Probe.
+    #[test]
+    fn open_denies_remote_until_cooldown() {
+        let b = fast_breaker(1000.0);
+        assert!(b.force_open());
+        for _ in 0..200 {
+            assert_eq!(b.admit_remote(), RemoteGate::Deny);
+        }
+        assert_eq!(b.state(), BreakerState::Open);
+    }
+
+    /// Property: HalfOpen grants at most `half_open_probes` concurrent
+    /// probes; everyone else is denied.
+    #[test]
+    fn half_open_bounds_concurrent_probes() {
+        let b = fast_breaker(0.0);
+        assert!(b.force_open());
+        let mut probes = Vec::new();
+        for _ in 0..50 {
+            match b.admit_remote() {
+                RemoteGate::Probe => probes.push(RemoteGate::Probe),
+                RemoteGate::Deny => {}
+                RemoteGate::Allow => panic!("Allow while not Closed"),
+            }
+        }
+        assert_eq!(probes.len(), 2, "probe quota exceeded");
+        // Releasing a slot (no verdict) admits exactly one more probe.
+        b.abandon(RemoteGate::Probe);
+        assert_eq!(b.admit_remote(), RemoteGate::Probe);
+        assert_eq!(b.admit_remote(), RemoteGate::Deny);
+    }
+
+    #[test]
+    fn probe_success_reopens_and_serves_normally() {
+        let b = fast_breaker(0.0);
+        assert!(b.force_open());
+        let gate = b.admit_remote();
+        assert_eq!(gate, RemoteGate::Probe);
+        assert_eq!(b.record(gate, true), BreakerTransition::Reopened);
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert_eq!(b.admit_remote(), RemoteGate::Allow);
+    }
+
+    #[test]
+    fn probe_failure_reopens_the_cooldown() {
+        let b = fast_breaker(0.0);
+        assert!(b.force_open());
+        let gate = b.admit_remote();
+        assert_eq!(gate, RemoteGate::Probe);
+        assert_eq!(b.record(gate, false), BreakerTransition::Tripped);
+        assert_eq!(b.state(), BreakerState::Open);
+    }
+
+    #[test]
+    fn force_open_is_idempotent_and_disabled_breaker_is_inert() {
+        let b = fast_breaker(10.0);
+        assert!(b.force_open());
+        assert!(!b.force_open(), "second force_open must report no-op");
+
+        let off = CircuitBreaker::new(BreakerConfig::disabled());
+        assert!(!off.force_open());
+        for _ in 0..20 {
+            let gate = off.admit_remote();
+            assert_eq!(gate, RemoteGate::Allow);
+            assert_eq!(off.record(gate, false), BreakerTransition::None);
+        }
+        assert_eq!(off.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn breaker_config_sanitizes_degenerate_knobs() {
+        let c = BreakerConfig {
+            enabled: true,
+            window: 0,
+            min_samples: 99,
+            trip_error_rate: f64::NAN,
+            cooldown_s: -1.0,
+            half_open_probes: 0,
+            close_after: 0,
+        }
+        .sanitized();
+        assert_eq!(c.window, 1);
+        assert_eq!(c.min_samples, 1);
+        assert_eq!(c.trip_error_rate, 1.0);
+        assert_eq!(c.cooldown_s, 0.0);
+        assert_eq!(c.half_open_probes, 1);
+        assert_eq!(c.close_after, 1);
+    }
+
+    // ---- brownout ----
+
+    fn brownout() -> BrownoutConfig {
+        BrownoutConfig {
+            enabled: true,
+            ..BrownoutConfig::default()
+        }
+        .sanitized()
+    }
+
+    #[test]
+    fn brownout_disabled_or_cool_queue_sheds_nothing() {
+        let off = BrownoutConfig::default();
+        assert_eq!(off.assess(1.0, true, None), None);
+        let on = brownout();
+        assert_eq!(on.assess(0.5, true, None), None);
+    }
+
+    #[test]
+    fn brownout_sheds_in_priority_order() {
+        let b = brownout();
+        // Soft watermark: overflow lane only.
+        assert_eq!(b.assess(0.8, true, None), Some(ShedReason::Overflow));
+        assert_eq!(b.assess(0.8, false, None), None);
+        // Hard watermark: overflow first, then loose deadlines.
+        assert_eq!(b.assess(0.95, true, Some(0.1)), Some(ShedReason::Overflow));
+        assert_eq!(b.assess(0.95, false, None), Some(ShedReason::Brownout));
+        assert_eq!(b.assess(0.95, false, Some(5.0)), Some(ShedReason::Brownout));
+        // Tight deadlines are never browned out.
+        assert_eq!(b.assess(0.95, false, Some(0.1)), None);
+        assert_eq!(b.assess(1.0, false, Some(0.0)), None);
+    }
+
+    #[test]
+    fn brownout_sanitize_orders_watermarks() {
+        let b = BrownoutConfig {
+            enabled: true,
+            soft_watermark: 0.9,
+            hard_watermark: 0.5,
+            loose_headroom_s: f64::NAN,
+        }
+        .sanitized();
+        assert_eq!(b.soft_watermark, 0.5);
+        assert_eq!(b.loose_headroom_s, 0.0);
+        let nan = BrownoutConfig {
+            enabled: true,
+            soft_watermark: f64::NAN,
+            hard_watermark: f64::NAN,
+            loose_headroom_s: 1.0,
+        }
+        .sanitized();
+        // NaN watermarks disarm rather than always-fire.
+        assert_eq!(nan.assess(1.0, true, None), None);
+    }
+
+    // ---- drift watchdog ----
+
+    #[test]
+    fn faithful_device_never_leaves_nominal() {
+        let w = DriftWatchdog::new(WatchdogConfig::default());
+        for _ in 0..1000 {
+            let u = w.observe(1.0, 1.0);
+            assert_eq!(u.state, DriftState::Nominal);
+            assert!(!u.detected);
+            assert_eq!(u.energy_factor, 1.0);
+        }
+        assert_eq!(w.latency_factor(), 1.0);
+    }
+
+    #[test]
+    fn two_x_skew_detects_then_quarantines() {
+        let w = DriftWatchdog::new(WatchdogConfig::default());
+        let mut quarantined = false;
+        for i in 0..64 {
+            let u = w.observe(2.0, 2.0);
+            assert!(u.detected, "2x is outside the 25% band");
+            if u.entered_quarantine {
+                assert!(i >= 7, "state frozen before min_samples");
+                quarantined = true;
+            }
+        }
+        assert!(quarantined);
+        assert_eq!(w.state(), DriftState::Quarantined);
+        // The factor converges toward the skew.
+        assert!((w.latency_factor() - 2.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn mild_skew_calibrates_without_quarantine() {
+        let w = DriftWatchdog::new(WatchdogConfig::default());
+        let mut calibrated = false;
+        for _ in 0..64 {
+            let u = w.observe(1.4, 1.4);
+            assert_ne!(u.state, DriftState::Quarantined, "1.4x is below 1.75x");
+            calibrated |= u.entered_calibration;
+        }
+        assert!(calibrated);
+        assert_eq!(w.state(), DriftState::Calibrated);
+    }
+
+    #[test]
+    fn undershoot_skew_is_symmetric() {
+        let w = DriftWatchdog::new(WatchdogConfig::default());
+        for _ in 0..64 {
+            w.observe(0.5, 0.5);
+        }
+        // A device 2x *cheaper* than modeled drifts just as far.
+        assert_eq!(w.state(), DriftState::Quarantined);
+        assert!(w.latency_factor() < 1.0);
+    }
+
+    #[test]
+    fn skew_removal_recovers_to_nominal() {
+        let w = DriftWatchdog::new(WatchdogConfig::default());
+        for _ in 0..64 {
+            w.observe(2.0, 2.0);
+        }
+        assert_eq!(w.state(), DriftState::Quarantined);
+        let mut recovered = false;
+        for _ in 0..64 {
+            let u = w.observe(1.0, 1.0);
+            recovered |= u.recovered;
+        }
+        assert!(recovered, "residual EWMA must decay back inside the band");
+        assert_eq!(w.state(), DriftState::Nominal);
+        assert_eq!(w.latency_factor(), 1.0);
+    }
+
+    #[test]
+    fn degenerate_ratios_are_ignored() {
+        let w = DriftWatchdog::new(WatchdogConfig::default());
+        for _ in 0..64 {
+            let u = w.observe(f64::NAN, f64::INFINITY);
+            assert!(!u.detected);
+        }
+        assert_eq!(w.state(), DriftState::Nominal);
+    }
+}

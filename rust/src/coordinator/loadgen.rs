@@ -34,6 +34,14 @@
 //!   under load actually behaves. Request *content* stays a pure
 //!   function of `(seed, client id)` — the trace shapes only the
 //!   timing.
+//! * [`ArrivalModel::Burst`] — a two-phase overload run: the first
+//!   share of clients arrives closed-loop (the clean baseline), the
+//!   rest as an open flood. This is the arrival shape the brownout
+//!   path ([`crate::coordinator::BrownoutConfig`]) is built to absorb;
+//!   [`LoadReport`] breaks the shed count down by reason
+//!   (`shed_infeasible` / `shed_overflow` / `shed_brownout`) so a bench
+//!   can assert the clean phase sheds nothing while the burst sheds in
+//!   priority order.
 
 use std::time::{Duration, Instant};
 
@@ -44,6 +52,7 @@ use crate::corpus::Corpus;
 use crate::util::rng::Rng;
 use crate::util::stats::quantile;
 
+use super::health::ShedReason;
 use super::request::{InferenceOutcome, InferenceRequest};
 use super::server::Admit;
 use super::tier::ServingTier;
@@ -65,6 +74,15 @@ pub enum ArrivalModel {
         trace: TraceScenario,
         peak_rps: f64,
         time_scale: f64,
+    },
+    /// Two-phase overload run: the first `clean_fraction` of clients
+    /// arrive closed-loop with `concurrency` outstanding (the clean
+    /// baseline), then the remainder arrive as an open flood from
+    /// `producers` threads — the burst the brownout path absorbs.
+    Burst {
+        concurrency: usize,
+        producers: usize,
+        clean_fraction: f64,
     },
 }
 
@@ -184,8 +202,16 @@ pub struct LoadReport {
     pub ok: u64,
     pub degraded: u64,
     pub failed: u64,
-    /// Requests shed at admission (infeasible deadline).
+    /// Requests shed at admission (all reasons).
     pub shed: u64,
+    /// Shed: deadline provably unmeetable at any split.
+    pub shed_infeasible: u64,
+    /// Shed: overflow-γ-lane request dropped past the brownout soft
+    /// watermark.
+    pub shed_overflow: u64,
+    /// Shed: loose-deadline request dropped past the brownout hard
+    /// watermark.
+    pub shed_brownout: u64,
     /// Completed requests that took the FISC fallback.
     pub fallback_fisc: u64,
     pub wall_s: f64,
@@ -210,10 +236,22 @@ struct Tally {
     degraded: u64,
     failed: u64,
     shed: u64,
+    shed_infeasible: u64,
+    shed_overflow: u64,
+    shed_brownout: u64,
     fallback_fisc: u64,
 }
 
 impl Tally {
+    fn absorb_shed(&mut self, reason: ShedReason) {
+        self.shed += 1;
+        match reason {
+            ShedReason::Infeasible => self.shed_infeasible += 1,
+            ShedReason::Overflow => self.shed_overflow += 1,
+            ShedReason::Brownout => self.shed_brownout += 1,
+        }
+    }
+
     fn absorb_outcome(&mut self, outcome: &InferenceOutcome) {
         match outcome {
             InferenceOutcome::Ok(_) => self.ok += 1,
@@ -235,6 +273,9 @@ impl Tally {
         self.degraded += other.degraded;
         self.failed += other.failed;
         self.shed += other.shed;
+        self.shed_infeasible += other.shed_infeasible;
+        self.shed_overflow += other.shed_overflow;
+        self.shed_brownout += other.shed_brownout;
         self.fallback_fisc += other.fallback_fisc;
     }
 }
@@ -246,16 +287,34 @@ pub fn run(tier: &ServingTier, cfg: &LoadGenConfig) -> Result<LoadReport> {
     }
     let pool = cfg.image_pool();
     let t0 = Instant::now();
+    let all = (0, cfg.clients);
     let tally = match &cfg.arrival {
         ArrivalModel::Closed { concurrency } => {
-            run_closed(tier, cfg, &pool, (*concurrency).max(1))?
+            run_closed(tier, cfg, &pool, (*concurrency).max(1), all)?
         }
-        ArrivalModel::Open { producers } => run_open(tier, cfg, &pool, (*producers).max(1))?,
+        ArrivalModel::Open { producers } => run_open(tier, cfg, &pool, (*producers).max(1), all)?,
         ArrivalModel::Trace {
             trace,
             peak_rps,
             time_scale,
         } => run_trace(tier, cfg, &pool, trace, *peak_rps, *time_scale)?,
+        ArrivalModel::Burst {
+            concurrency,
+            producers,
+            clean_fraction,
+        } => {
+            let clean = ((cfg.clients as f64) * clean_fraction.clamp(0.0, 1.0)).round() as u64;
+            let clean = clean.min(cfg.clients);
+            let mut t = run_closed(tier, cfg, &pool, (*concurrency).max(1), (0, clean))?;
+            t.merge(run_open(
+                tier,
+                cfg,
+                &pool,
+                (*producers).max(1),
+                (clean, cfg.clients),
+            )?);
+            t
+        }
     };
     let wall_s = t0.elapsed().as_secs_f64();
 
@@ -281,6 +340,9 @@ pub fn run(tier: &ServingTier, cfg: &LoadGenConfig) -> Result<LoadReport> {
         degraded: tally.degraded,
         failed: tally.failed,
         shed: tally.shed,
+        shed_infeasible: tally.shed_infeasible,
+        shed_overflow: tally.shed_overflow,
+        shed_brownout: tally.shed_brownout,
         fallback_fisc: tally.fallback_fisc,
         wall_s,
         throughput_rps: if wall_s > 0.0 {
@@ -297,23 +359,25 @@ pub fn run(tier: &ServingTier, cfg: &LoadGenConfig) -> Result<LoadReport> {
 }
 
 /// Closed loop: `concurrency` client threads, each one outstanding
-/// request at a time. Client ids are strided across threads, so the set
-/// of requests (and therefore the shed set) is independent of the thread
-/// count.
+/// request at a time, over the id range `[range.0, range.1)`. Client ids
+/// are strided across threads, so the set of requests (and therefore the
+/// shed set) is independent of the thread count.
 fn run_closed(
     tier: &ServingTier,
     cfg: &LoadGenConfig,
     pool: &[PoolImage],
     concurrency: usize,
+    range: (u64, u64),
 ) -> Result<Tally> {
+    let (start, end) = range;
     std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(concurrency);
         for t in 0..concurrency {
             handles.push(scope.spawn(move || -> Result<Tally> {
                 let mut tally = Tally::default();
                 let (tx, rx) = std::sync::mpsc::channel();
-                let mut id = t as u64;
-                while id < cfg.clients {
+                let mut id = start + t as u64;
+                while id < end {
                     let req = cfg.client_request(id, pool);
                     match tier.admit(req, &tx) {
                         Admit::Queued => {
@@ -322,7 +386,7 @@ fn run_closed(
                                 .map_err(|_| anyhow!("workers gone mid-run"))?;
                             tally.absorb_outcome(&outcome);
                         }
-                        Admit::Shed => tally.shed += 1,
+                        Admit::Shed(reason) => tally.absorb_shed(reason),
                         Admit::Closed => return Err(anyhow!("tier closed mid-run")),
                     }
                     id += concurrency as u64;
@@ -338,33 +402,36 @@ fn run_closed(
     })
 }
 
-/// Open(ish) loop: `producers` threads submit their stride of clients as
-/// fast as queue backpressure allows; the calling thread collects every
-/// outcome until all reply senders are gone.
+/// Open(ish) loop: `producers` threads submit their stride of the id
+/// range `[range.0, range.1)` as fast as queue backpressure allows; the
+/// calling thread collects every outcome until all reply senders are
+/// gone.
 fn run_open(
     tier: &ServingTier,
     cfg: &LoadGenConfig,
     pool: &[PoolImage],
     producers: usize,
+    range: (u64, u64),
 ) -> Result<Tally> {
+    let (start, end) = range;
     let (tx, rx) = std::sync::mpsc::channel();
     std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(producers);
         for t in 0..producers {
             let tx = tx.clone();
-            handles.push(scope.spawn(move || -> Result<u64> {
-                let mut shed = 0u64;
-                let mut id = t as u64;
-                while id < cfg.clients {
+            handles.push(scope.spawn(move || -> Result<Tally> {
+                let mut tally = Tally::default();
+                let mut id = start + t as u64;
+                while id < end {
                     let req = cfg.client_request(id, pool);
                     match tier.admit(req, &tx) {
                         Admit::Queued => {}
-                        Admit::Shed => shed += 1,
+                        Admit::Shed(reason) => tally.absorb_shed(reason),
                         Admit::Closed => return Err(anyhow!("tier closed mid-run")),
                     }
                     id += producers as u64;
                 }
-                Ok(shed)
+                Ok(tally)
             }));
         }
         drop(tx);
@@ -375,7 +442,7 @@ fn run_open(
             tally.absorb_outcome(&outcome);
         }
         for h in handles {
-            tally.shed += h.join().map_err(|_| anyhow!("producer panicked"))??;
+            tally.merge(h.join().map_err(|_| anyhow!("producer panicked"))??);
         }
         Ok(tally)
     })
@@ -404,14 +471,14 @@ fn run_trace(
     let (tx, rx) = std::sync::mpsc::channel();
     std::thread::scope(|scope| {
         let ptx = tx.clone();
-        let producer = scope.spawn(move || -> Result<u64> {
-            let mut shed = 0u64;
+        let producer = scope.spawn(move || -> Result<Tally> {
+            let mut shed_tally = Tally::default();
             let mut t_model = 0.0f64;
             for id in 0..cfg.clients {
                 let req = cfg.client_request(id, pool);
                 match tier.admit(req, &ptx) {
                     Admit::Queued => {}
-                    Admit::Shed => shed += 1,
+                    Admit::Shed(reason) => shed_tally.absorb_shed(reason),
                     Admit::Closed => return Err(anyhow!("tier closed mid-run")),
                 }
                 // The load a cell offers tracks its bandwidth: arrivals
@@ -423,14 +490,14 @@ fn run_trace(
                     std::thread::sleep(Duration::from_secs_f64(gap_s * time_scale));
                 }
             }
-            Ok(shed)
+            Ok(shed_tally)
         });
         drop(tx);
         let mut tally = Tally::default();
         while let Ok(outcome) = rx.recv() {
             tally.absorb_outcome(&outcome);
         }
-        tally.shed += producer.join().map_err(|_| anyhow!("producer panicked"))??;
+        tally.merge(producer.join().map_err(|_| anyhow!("producer panicked"))??);
         Ok(tally)
     })
 }
@@ -442,7 +509,8 @@ mod tests {
     use std::path::PathBuf;
 
     use crate::coordinator::{
-        CoordinatorConfig, ExecutorBackend, RetryPolicy, ServingTier, ServingTierConfig,
+        CoordinatorConfig, ExecutorBackend, HealthConfig, RetryPolicy, ServingTier,
+        ServingTierConfig,
     };
 
     fn base_config() -> CoordinatorConfig {
@@ -465,6 +533,7 @@ mod tests {
             scenario: None,
             redecide: None,
             retry: RetryPolicy::default(),
+            health: HealthConfig::default(),
             seed: 11,
         }
     }
@@ -527,6 +596,28 @@ mod tests {
         };
         let c = run(&tier_for(&other), &other).unwrap();
         assert!(c.shed != a.shed || c.ok != a.ok || c.p50_ns != a.p50_ns);
+    }
+
+    #[test]
+    fn burst_run_matches_closed_counts_and_splits_shed_reasons() {
+        let mut cfg = LoadGenConfig::table_iv_wlan(100, 9);
+        cfg.infeasible_frac = 0.1;
+        cfg.arrival = ArrivalModel::Closed { concurrency: 3 };
+        let closed = run(&tier_for(&cfg), &cfg).unwrap();
+        cfg.arrival = ArrivalModel::Burst {
+            concurrency: 3,
+            producers: 4,
+            clean_fraction: 0.5,
+        };
+        let burst = run(&tier_for(&cfg), &cfg).unwrap();
+        assert_eq!(burst.completed + burst.shed, 100);
+        // Brownout is off by default, so the shed set is decided by
+        // request content alone and matches the closed-loop run; every
+        // shed is attributed to the infeasible-deadline reason.
+        assert_eq!(closed.shed, burst.shed);
+        assert_eq!(burst.shed_infeasible, burst.shed);
+        assert_eq!(burst.shed_overflow + burst.shed_brownout, 0);
+        assert_eq!(closed.ok, burst.ok);
     }
 
     #[test]

@@ -5,6 +5,7 @@ use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Duration;
 
+use super::health::ShedReason;
 use super::request::InferenceResponse;
 
 /// Aggregated serving statistics.
@@ -27,6 +28,12 @@ pub struct MetricsSnapshot {
     /// infeasible at the admission-time channel state (the delay-envelope
     /// lower bound already exceeded the deadline).
     pub shed_infeasible: u64,
+    /// Requests the overload brownout shed while they were headed for
+    /// the overflow (degenerate-γ) lane past the soft watermark.
+    pub shed_overflow: u64,
+    /// Loose-deadline requests the overload brownout shed past the hard
+    /// watermark to keep tight-deadline queue latency bounded.
+    pub shed_brownout: u64,
     /// SLO engines this coordinator had to rebuild because its registry
     /// entry carried none (a v1 `EnvelopeTable` import with no latency
     /// data). Non-zero means deadline serving fell back to a
@@ -53,9 +60,31 @@ pub struct MetricsSnapshot {
     /// Requests completed through the fully-in-situ fallback after the
     /// channel/cloud path was exhausted.
     pub fallback_fisc: u64,
-    /// Times the coordinator flipped into client-only degraded mode
-    /// (cloud pool down entirely). At most 1 per coordinator lifetime.
+    /// Times the remote-path circuit breaker entered `Open` (windowed
+    /// error-rate trip, failed half-open probe, or the cloud pool found
+    /// dead) — each one is an entry into client-only degraded serving,
+    /// and, unlike the pre-breaker latch, each one is recoverable.
     pub degraded_mode_entered: u64,
+    /// Half-open probe requests the breaker granted the remote path.
+    pub breaker_probes: u64,
+    /// Times the breaker closed again from half-open — the remote path
+    /// healed and the shard returned to partitioned serving.
+    pub breaker_reopened: u64,
+    /// Completed requests whose own observed/predicted residual fell
+    /// outside the drift watchdog's nominal band.
+    pub drift_detect_requests: u64,
+    /// Times the drift watchdog entered the Calibrated state.
+    pub drift_calibrations: u64,
+    /// Times the drift watchdog entered the Quarantined state.
+    pub drift_quarantines: u64,
+    /// Times the drift watchdog recovered back to Nominal.
+    pub drift_recoveries: u64,
+    /// Requests served under quarantine's conservative routing.
+    pub drift_quarantined_requests: u64,
+    /// Latest energy calibration factor the watchdog applied to this
+    /// shard's decisions (0.0 = never recorded, 1.0 = nominal). Merging
+    /// keeps the most-drifted shard's factor.
+    pub calibration_factor: f64,
     /// Retry loops abandoned because the request's remaining deadline
     /// budget could not cover another attempt.
     pub deadline_abandoned: u64,
@@ -112,6 +141,8 @@ impl MetricsSnapshot {
             *self.lane_batches.entry(*k).or_insert(0) += v;
         }
         self.shed_infeasible += other.shed_infeasible;
+        self.shed_overflow += other.shed_overflow;
+        self.shed_brownout += other.shed_brownout;
         self.slo_missing += other.slo_missing;
         self.schedule_seeded += other.schedule_seeded;
         self.schedule_misses_post_warm += other.schedule_misses_post_warm;
@@ -120,6 +151,22 @@ impl MetricsSnapshot {
         self.outage_rejections += other.outage_rejections;
         self.fallback_fisc += other.fallback_fisc;
         self.degraded_mode_entered += other.degraded_mode_entered;
+        self.breaker_probes += other.breaker_probes;
+        self.breaker_reopened += other.breaker_reopened;
+        self.drift_detect_requests += other.drift_detect_requests;
+        self.drift_calibrations += other.drift_calibrations;
+        self.drift_quarantines += other.drift_quarantines;
+        self.drift_recoveries += other.drift_recoveries;
+        self.drift_quarantined_requests += other.drift_quarantined_requests;
+        // A gauge, not a counter: the fleet view keeps the most-drifted
+        // shard's factor, treating 0.0 as "never recorded".
+        if other.calibration_factor != 0.0
+            && (self.calibration_factor == 0.0
+                || (other.calibration_factor - 1.0).abs()
+                    > (self.calibration_factor - 1.0).abs())
+        {
+            self.calibration_factor = other.calibration_factor;
+        }
         self.deadline_abandoned += other.deadline_abandoned;
         self.redecisions_fired += other.redecisions_fired;
         self.redecisions_suppressed += other.redecisions_suppressed;
@@ -212,6 +259,12 @@ impl MetricsSnapshot {
         if self.shed_infeasible > 0 {
             s.push_str(&format!("shed (infeasible) : {}\n", self.shed_infeasible));
         }
+        if self.shed_overflow > 0 || self.shed_brownout > 0 {
+            s.push_str(&format!(
+                "shed (brownout)   : {} overflow | {} loose-deadline\n",
+                self.shed_overflow, self.shed_brownout
+            ));
+        }
         if self.slo_missing > 0 {
             s.push_str(&format!(
                 "slo engines rebuilt (missing from registry entry) : {}\n",
@@ -250,8 +303,21 @@ impl MetricsSnapshot {
                 self.energy_delta_vs_frozen_j * 1e3
             ));
         }
-        if self.degraded_mode_entered > 0 {
-            s.push_str("degraded mode     : client-only (cloud pool down)\n");
+        if self.degraded_mode_entered > 0 || self.breaker_reopened > 0 {
+            s.push_str(&format!(
+                "breaker           : {} trips into client-only degraded mode | {} probes | {} reopened\n",
+                self.degraded_mode_entered, self.breaker_probes, self.breaker_reopened
+            ));
+        }
+        if self.drift_detect_requests > 0 || self.drift_quarantined_requests > 0 {
+            s.push_str(&format!(
+                "model drift       : {} detections | {} calibrations | {} quarantines | {} recoveries | factor {:.3}\n",
+                self.drift_detect_requests,
+                self.drift_calibrations,
+                self.drift_quarantines,
+                self.drift_recoveries,
+                self.calibration_factor
+            ));
         }
         if self.failed_requests > 0 {
             s.push_str(&format!("failed requests   : {}\n", self.failed_requests));
@@ -272,7 +338,7 @@ impl Metrics {
     }
 
     pub fn record(&self, resp: &InferenceResponse) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.lock();
         m.requests += 1;
         *m.split_counts.entry(resp.split).or_insert(0) += 1;
         if let Some(seg) = resp.gamma_segment {
@@ -292,30 +358,36 @@ impl Metrics {
 
     /// Record one admission batch drained from lane `bucket`.
     pub fn record_batch(&self, bucket: usize, size: usize) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.lock();
         m.batches += 1;
         m.batch_requests += size as u64;
         *m.lane_batches.entry(bucket).or_insert(0) += 1;
     }
 
-    /// Record one request shed at admission for a provably infeasible
-    /// deadline.
-    pub fn record_shed(&self) {
-        self.inner.lock().unwrap().shed_infeasible += 1;
+    /// Record one request shed at admission, routed to its reason's
+    /// counter (infeasible deadline, brownout overflow-lane, brownout
+    /// loose-deadline).
+    pub fn record_shed(&self, reason: ShedReason) {
+        let mut m = self.lock();
+        match reason {
+            ShedReason::Infeasible => m.shed_infeasible += 1,
+            ShedReason::Overflow => m.shed_overflow += 1,
+            ShedReason::Brownout => m.shed_brownout += 1,
+        }
     }
 
     /// Record one SLO-engine rebuild forced by a registry entry with no
     /// latency data (v1 import) — the loud form of what used to be a
     /// silent degradation.
     pub fn record_slo_missing(&self) {
-        self.inner.lock().unwrap().slo_missing += 1;
+        self.lock().slo_missing += 1;
     }
 
     /// Record one worker thread's profile warm-up: how many schedules were
     /// seeded at thread start and how many mapper derivations happened
     /// afterwards anyway (the zero-post-warmup-miss proof).
     pub fn record_schedule_warm(&self, seeded: usize, misses_post_warm: u64) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.lock();
         m.schedule_seeded += seeded as u64;
         m.schedule_misses_post_warm += misses_post_warm;
     }
@@ -351,9 +423,55 @@ impl Metrics {
         self.lock().fallback_fisc += 1;
     }
 
-    /// Record the coordinator entering client-only degraded mode.
+    /// Record the breaker tripping `Open` — one entry into client-only
+    /// degraded serving (recoverable; see `degraded_mode_entered`).
     pub fn record_degraded_mode(&self) {
         self.lock().degraded_mode_entered += 1;
+    }
+
+    /// Record one half-open probe request granted the remote path.
+    pub fn record_breaker_probe(&self) {
+        self.lock().breaker_probes += 1;
+    }
+
+    /// Record the breaker closing again from half-open (remote path
+    /// healed).
+    pub fn record_breaker_reopen(&self) {
+        self.lock().breaker_reopened += 1;
+    }
+
+    /// Record one completed request whose observed/predicted residual
+    /// fell outside the watchdog's nominal band.
+    pub fn record_drift_detect(&self) {
+        self.lock().drift_detect_requests += 1;
+    }
+
+    /// Record the watchdog entering the Calibrated state.
+    pub fn record_drift_calibration(&self) {
+        self.lock().drift_calibrations += 1;
+    }
+
+    /// Record the watchdog entering the Quarantined state.
+    pub fn record_drift_quarantine(&self) {
+        self.lock().drift_quarantines += 1;
+    }
+
+    /// Record the watchdog recovering back to Nominal.
+    pub fn record_drift_recovery(&self) {
+        self.lock().drift_recoveries += 1;
+    }
+
+    /// Record one request served under quarantine's conservative routing.
+    pub fn record_drift_quarantined_request(&self) {
+        self.lock().drift_quarantined_requests += 1;
+    }
+
+    /// Record the calibration factor currently applied to this shard's
+    /// decisions (degenerate factors are dropped).
+    pub fn record_calibration_factor(&self, factor: f64) {
+        if factor.is_finite() && factor > 0.0 {
+            self.lock().calibration_factor = factor;
+        }
     }
 
     /// Record one retry loop abandoned on a deadline budget.
@@ -461,11 +579,19 @@ mod tests {
     #[test]
     fn shed_accounting() {
         let m = Metrics::new();
-        m.record_shed();
-        m.record_shed();
+        m.record_shed(ShedReason::Infeasible);
+        m.record_shed(ShedReason::Infeasible);
+        m.record_shed(ShedReason::Overflow);
+        m.record_shed(ShedReason::Brownout);
+        m.record_shed(ShedReason::Brownout);
+        m.record_shed(ShedReason::Brownout);
         let s = m.snapshot();
         assert_eq!(s.shed_infeasible, 2);
-        assert!(s.report().contains("shed (infeasible) : 2"));
+        assert_eq!(s.shed_overflow, 1);
+        assert_eq!(s.shed_brownout, 3);
+        let report = s.report();
+        assert!(report.contains("shed (infeasible) : 2"));
+        assert!(report.contains("shed (brownout)   : 1 overflow | 3 loose-deadline"));
         // Shed requests are not served requests.
         assert_eq!(s.requests, 0);
     }
@@ -560,7 +686,7 @@ mod tests {
         a.record(&resp(2, 1e-3));
         a.record(&resp(0, 2e-3));
         a.record_batch(0, 2);
-        a.record_shed();
+        a.record_shed(ShedReason::Infeasible);
         a.record_retry();
         a.record_transfer_drop(1e-3);
         a.record_degraded_mode();
@@ -621,6 +747,53 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.schedule_seeded, 8);
         assert_eq!(s.schedule_misses_post_warm, 2);
+    }
+
+    #[test]
+    fn health_plane_accounting() {
+        let m = Metrics::new();
+        let clean = m.snapshot();
+        assert_eq!(clean.breaker_reopened, 0);
+        assert_eq!(clean.calibration_factor, 0.0);
+        assert!(!clean.report().contains("model drift"));
+        m.record_degraded_mode();
+        m.record_breaker_probe();
+        m.record_breaker_probe();
+        m.record_breaker_reopen();
+        m.record_drift_detect();
+        m.record_drift_calibration();
+        m.record_drift_quarantine();
+        m.record_drift_recovery();
+        m.record_drift_quarantined_request();
+        m.record_calibration_factor(2.0);
+        m.record_calibration_factor(f64::NAN); // dropped
+        m.record_calibration_factor(0.0); // dropped
+        let s = m.snapshot();
+        assert_eq!(s.degraded_mode_entered, 1);
+        assert_eq!(s.breaker_probes, 2);
+        assert_eq!(s.breaker_reopened, 1);
+        assert_eq!(s.drift_detect_requests, 1);
+        assert_eq!(s.drift_calibrations, 1);
+        assert_eq!(s.drift_quarantines, 1);
+        assert_eq!(s.drift_recoveries, 1);
+        assert_eq!(s.drift_quarantined_requests, 1);
+        assert_eq!(s.calibration_factor, 2.0);
+        let report = s.report();
+        assert!(report.contains("breaker           : 1 trips"));
+        assert!(report.contains("2 probes | 1 reopened"));
+        assert!(report.contains("model drift"));
+
+        // The fleet gauge keeps the most-drifted shard's factor; a shard
+        // that never recorded (0.0) never wins.
+        let near_nominal = Metrics::new();
+        near_nominal.record_calibration_factor(1.1);
+        let mut fleet = near_nominal.snapshot();
+        fleet.merge(&s);
+        assert_eq!(fleet.calibration_factor, 2.0);
+        assert_eq!(fleet.breaker_reopened, 1);
+        let mut fleet2 = s.clone();
+        fleet2.merge(&MetricsSnapshot::default());
+        assert_eq!(fleet2.calibration_factor, 2.0);
     }
 
     #[test]

@@ -12,8 +12,8 @@
 //!           device-class) key;    segment     prefers lane  │    decision
 //!           own queue, executors, of γ =      i mod lanes)  ├─ client executor
 //!           channel, retry path,  P_Tx/B_e)                 ├─ quantize + RLC
-//!           degraded latch)                                 ├─ channel simulator
-//!                                                           └─ cloud executor pool
+//!           circuit breaker,                                ├─ channel simulator
+//!           drift watchdog)                                 └─ cloud executor pool
 //! ```
 //!
 //! * **route** — [`ServingTier::route`] maps a request's (network,
@@ -24,8 +24,9 @@
 //!   [`InferenceRequest::network`].
 //! * **shard** — a [`CoordinatorShard`] owns every piece of serving
 //!   state for its key: registry-shared decision engines, its own
-//!   γ-lane [`Batcher`], executor pool, channel, retry path and
-//!   degraded-mode latch. [`Coordinator`] is the single-shard wrapper
+//!   γ-lane [`Batcher`], executor pool, channel, retry path, remote-leg
+//!   circuit breaker and model-drift watchdog. [`Coordinator`] is the
+//!   single-shard wrapper
 //!   keeping the original surface; a [`ServingTier`] composes N shards
 //!   with fleet-merged metrics ([`ServingTier::fleet_snapshot`],
 //!   [`MetricsSnapshot::merge`], `ChannelStats::merge`).
@@ -156,12 +157,21 @@
 //!    `Degraded` outcome that accounts the energy *actually* spent: the
 //!    abandoned prefix, the full in-situ rerun, and the joules wasted on
 //!    failed transfers ([`InferenceResponse::wasted_energy_j`]).
-//! 4. **Degraded mode.** A cloud pool found dead
-//!    ([`ExecutorHandle::alive_threads`] == 0) latches *that shard*
-//!    into client-only mode: later requests route straight to FISC
-//!    without burning retries ([`CoordinatorShard::is_degraded`],
-//!    [`MetricsSnapshot::degraded_mode_entered`]). Sibling shards keep
-//!    serving — fault state never crosses shard boundaries.
+//! 4. **Circuit breaker (recoverable degraded mode).** Each shard guards
+//!    its uplink + cloud-suffix leg with a windowed [`CircuitBreaker`]
+//!    (Closed → Open → HalfOpen): a remote error rate over the trip
+//!    threshold — or a cloud pool found dead
+//!    ([`ExecutorHandle::alive_threads`] == 0), which force-opens the
+//!    breaker — routes later requests straight to FISC without burning
+//!    retries ([`CoordinatorShard::is_degraded`],
+//!    [`MetricsSnapshot::degraded_mode_entered`]). Unlike the old
+//!    one-way latch, the Open state is *recoverable*: after a cooldown
+//!    the breaker admits a bounded number of single-attempt probes, and
+//!    probe successes re-close it ([`MetricsSnapshot::breaker_reopened`])
+//!    — a shard whose pool is replaced
+//!    ([`CoordinatorShard::replace_cloud_pool`]) or whose Markov outage
+//!    ends returns to partitioned serving without a restart. Sibling
+//!    shards keep serving — fault state never crosses shard boundaries.
 //! 5. **Isolation.** Executor jobs run under panic containment (a
 //!    poisoned request fails alone; the thread and its siblings survive),
 //!    and executor-death errors carry the real recorded cause instead of
@@ -178,10 +188,43 @@
 //! [`MetricsSnapshot::failed_requests`],
 //! [`MetricsSnapshot::wasted_retry_energy_j`]. The chaos e2e suite
 //! (`rust/tests/chaos_e2e.rs`) drives every fault class through the
-//! artifact-free [`ExecutorBackend::Sim`] backend.
+//! artifact-free [`ExecutorBackend::Sim`] backend; the health-plane
+//! suite (`rust/tests/health_e2e.rs`) drives recovery, brownout and
+//! drift.
+//!
+//! ## The health plane (overload brownout + model-drift watchdog)
+//!
+//! Beyond hard faults, the [`health`] module gives each shard two soft
+//! self-protection mechanisms, both configured via
+//! [`CoordinatorConfig::health`]:
+//!
+//! * **Overload brownout** ([`BrownoutConfig`], opt-in): admission
+//!   consults queue depth and deadline headroom past configurable
+//!   watermarks and sheds in priority order — already-infeasible
+//!   requests first, then the overflow γ lane at the soft watermark,
+//!   then the loosest deadlines at the hard watermark; tight deadlines
+//!   are never browned out. Shed reasons are counted separately
+//!   ([`MetricsSnapshot::shed_infeasible`] /
+//!   [`MetricsSnapshot::shed_overflow`] /
+//!   [`MetricsSnapshot::shed_brownout`]).
+//! * **Model-drift watchdog** ([`WatchdogConfig`]): every completed
+//!   request compares its observed client-prefix latency/energy against
+//!   the [`crate::cnnergy::NetworkProfile`] prediction; per-shard EWMA
+//!   residuals outside a band apply a scalar calibration factor to the
+//!   partition policy's transmit envelope (an affine γ rescale — the
+//!   envelope geometry is untouched, and factor 1.0 is bit-identical to
+//!   the uncalibrated path). Residuals past the quarantine threshold
+//!   route the shard to its conservative arm (FISC or full-cloud,
+//!   whichever the measured costs favor) until the EWMA recovers.
+//!   Counters: [`MetricsSnapshot::drift_detect_requests`],
+//!   [`MetricsSnapshot::drift_calibrations`],
+//!   [`MetricsSnapshot::drift_quarantines`],
+//!   [`MetricsSnapshot::drift_recoveries`],
+//!   [`MetricsSnapshot::calibration_factor`].
 
 pub mod batcher;
 pub mod executor;
+pub mod health;
 pub mod loadgen;
 pub mod metrics;
 pub mod request;
@@ -191,6 +234,10 @@ pub mod tier;
 
 pub use batcher::{Batcher, BatcherStats, BucketStats, Submit};
 pub use executor::{DeviceExecutor, ExecutorBackend, ExecutorHandle};
+pub use health::{
+    BreakerConfig, BreakerState, BrownoutConfig, CircuitBreaker, DriftState, DriftWatchdog,
+    HealthConfig, RemoteGate, ShedReason, WatchdogConfig,
+};
 pub use loadgen::{ArrivalModel, LoadGenConfig, LoadReport};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use request::{InferenceFailure, InferenceOutcome, InferenceRequest, InferenceResponse};

@@ -87,6 +87,17 @@ impl RetryPolicy {
         }
     }
 
+    /// A single-attempt variant of this policy for the circuit breaker's
+    /// half-open probes: a probe is a yes/no question about the remote
+    /// path's health, so it must answer fast rather than burn the full
+    /// retry budget of a regular request.
+    pub fn probe(&self) -> Self {
+        RetryPolicy {
+            max_attempts: 1,
+            ..*self
+        }
+    }
+
     /// Clamp degenerate knobs (zero attempts → 1; NaN/negative times and
     /// jitter → 0; jitter capped at 1).
     pub fn sanitized(mut self) -> Self {
@@ -261,6 +272,19 @@ mod tests {
         let first = RetryPolicy::backoff_rng(42, 0, 7).next_u64();
         assert_ne!(c.next_u64(), first);
         assert_ne!(d.next_u64(), first);
+    }
+
+    #[test]
+    fn probe_variant_is_single_attempt() {
+        let p = RetryPolicy {
+            max_attempts: 10,
+            ..RetryPolicy::default()
+        }
+        .probe();
+        assert_eq!(p.max_attempts, 1);
+        assert_eq!(p.verdict(1, 0.0, None, 0.0), RetryVerdict::ExhaustedAttempts);
+        // Everything else is inherited.
+        assert_eq!(p.base_backoff_s, RetryPolicy::default().base_backoff_s);
     }
 
     #[test]

@@ -6,8 +6,9 @@
 //! (network, device-class) key — the same key [`PolicyRegistry`] shares
 //! decision engines under. Each shard owns its registry-shared engines,
 //! its own [`Batcher`] of γ lanes, its own executor pool, channel, retry
-//! path and degraded-mode latch, so admission never crosses shard
-//! boundaries. Shards are composed two ways:
+//! path and health plane (remote-path circuit breaker, overload
+//! brownout, drift watchdog — [`super::health`]), so admission never
+//! crosses shard boundaries. Shards are composed two ways:
 //!
 //! * [`Coordinator`] — the single-shard compatibility wrapper: one shard
 //!   plus its worker threads, exposing the original serve/process
@@ -52,17 +53,20 @@
 //! With a [`FaultConfig`] installed ([`CoordinatorConfig::faults`]) the
 //! uplink drops, stalls and blacks out; executors can die or panic. The
 //! shard survives all of it per request (see [`crate::coordinator`]
-//! module docs): retries with [`CoordinatorConfig::retry`], falls back to
-//! fully in-situ execution when the remote path is exhausted, flips to
-//! client-only degraded mode when *its* cloud pool is down entirely
-//! (sibling shards keep serving), and resolves every admitted request to
-//! an [`InferenceOutcome`].
+//! module docs): retries with [`CoordinatorConfig::retry`], falls back
+//! to fully in-situ execution when the remote path is exhausted, and
+//! resolves every admitted request to an [`InferenceOutcome`]. Sustained
+//! remote failure trips the shard's circuit breaker into client-only
+//! serving; half-open probes return it to partitioned serving once the
+//! remote path heals (a replaced cloud pool via
+//! [`CoordinatorShard::replace_cloud_pool`], an ended outage) — sibling
+//! shards are unaffected throughout.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -80,12 +84,16 @@ use crate::compress::jpeg::compress_rgb;
 use crate::compress::rlc;
 use crate::config::Config;
 use crate::partition::{
-    device_class, Decision, DecisionContext, DelayModel, EnergyPolicy, PartitionPolicy,
-    Partitioner, PolicyRegistry, SloPartitioner, FISC_OUTPUT_BITS,
+    device_class, CalibrationCell, Decision, DecisionContext, DelayModel, EnergyPolicy,
+    PartitionPolicy, Partitioner, PolicyRegistry, SloPartitioner, FISC_OUTPUT_BITS,
 };
 use crate::util::rng::Rng;
 
 use super::executor::{DeviceExecutor, ExecutorBackend, ExecutorHandle};
+use super::health::{
+    BreakerState, BreakerTransition, CircuitBreaker, DriftState, DriftWatchdog, HealthConfig,
+    RemoteGate, ShedReason,
+};
 use super::metrics::Metrics;
 use super::request::{
     ExecutionSite, InferenceFailure, InferenceOutcome, InferenceRequest, InferenceResponse,
@@ -139,6 +147,9 @@ pub struct CoordinatorConfig {
     /// Retry/backoff policy wrapped around the uplink send and the cloud
     /// suffix call.
     pub retry: RetryPolicy,
+    /// Health-plane knobs: remote-path circuit breaker, overload
+    /// brownout, and model-drift watchdog (see [`super::health`]).
+    pub health: HealthConfig,
     pub seed: u64,
 }
 
@@ -184,6 +195,7 @@ impl CoordinatorConfig {
             scenario: None,
             redecide: None,
             retry: RetryPolicy::default(),
+            health: HealthConfig::default(),
             seed: cfg.seed,
         }
     }
@@ -194,9 +206,10 @@ impl CoordinatorConfig {
 pub enum Admit {
     /// Queued into a γ lane; the outcome will arrive on the reply sender.
     Queued,
-    /// Shed at admission (provably infeasible deadline, counted in
-    /// `MetricsSnapshot::shed_infeasible`); no outcome will arrive.
-    Shed,
+    /// Shed at admission for the carried reason (infeasible deadline, or
+    /// a brownout verdict; each counted in its own
+    /// `MetricsSnapshot::shed_*` counter); no outcome will arrive.
+    Shed(ShedReason),
     /// The shard is shutting down; no outcome will arrive.
     Closed,
 }
@@ -234,12 +247,27 @@ pub struct CoordinatorShard {
     profile: Arc<NetworkProfile>,
     net: Network,
     client: DeviceExecutor,
-    cloud: DeviceExecutor,
+    /// The cloud pool, swappable at runtime
+    /// ([`Self::replace_cloud_pool`]) so a shard whose pool died can be
+    /// healed without a restart. Workers re-fetch a handle per batch.
+    cloud: RwLock<DeviceExecutor>,
     channel: Arc<Channel>,
-    /// Latched when this shard's cloud pool is found dead: every
-    /// subsequent request routes client-only (FISC) without burning
-    /// retries first. Per-shard — siblings are unaffected.
-    degraded: AtomicBool,
+    /// Circuit breaker over the remote path (uplink send + cloud
+    /// suffix): trips on windowed request-level failures or a dead pool,
+    /// recovers through half-open probes. Per-shard — siblings are
+    /// unaffected.
+    breaker: CircuitBreaker,
+    /// Per-(network, device-class) model-drift watchdog; a shard *is*
+    /// one (network, device-class), so one watchdog per shard.
+    watchdog: DriftWatchdog,
+    /// The calibration factor the watchdog feeds into the decision
+    /// policy (shared with `policy` via `with_calibration`).
+    calibration: Arc<CalibrationCell>,
+    /// Chaos hooks ([`Self::set_model_skew`]): f64 bit patterns
+    /// multiplying the sim-observed client latency/energy (1.0 =
+    /// faithful device).
+    latency_skew_bits: AtomicU64,
+    energy_skew_bits: AtomicU64,
     /// The shard's persistent admission queue (one γ lane per envelope
     /// segment plus overflow). Workers drain it until `shutdown`.
     batcher: Batcher<Admitted>,
@@ -265,7 +293,11 @@ impl CoordinatorShard {
             .get_or_build(&config.network, &config.env)
             .context("building policy registry entry")?;
         let partitioner = entry.partitioner().clone();
-        let policy = entry.policy();
+        // The watchdog's calibration factor rides into every decision
+        // through the policy; at the identity factor (1.0) the decide
+        // paths are bit-identical to an uncalibrated policy.
+        let calibration = Arc::new(CalibrationCell::new());
+        let policy = entry.policy().with_calibration(calibration.clone());
         let metrics = Arc::new(Metrics::new());
         let class = device_class(config.env.p_tx_w);
         // The shared compiled profile: seeds executor/worker thread-local
@@ -328,6 +360,8 @@ impl CoordinatorShard {
         // single client device (backpressure on the producer side).
         let batcher = Batcher::with_buckets((4 * config.workers).max(16), buckets);
         let admission_rng = Mutex::new(Rng::new(config.seed ^ 0xADB5_17E2_D188_FE01));
+        let breaker = CircuitBreaker::new(config.health.breaker);
+        let watchdog = DriftWatchdog::new(config.health.watchdog);
         Ok(CoordinatorShard {
             config,
             salt,
@@ -338,9 +372,13 @@ impl CoordinatorShard {
             profile,
             net,
             client,
-            cloud,
+            cloud: RwLock::new(cloud),
             channel,
-            degraded: AtomicBool::new(false),
+            breaker,
+            watchdog,
+            calibration,
+            latency_skew_bits: AtomicU64::new(1.0f64.to_bits()),
+            energy_skew_bits: AtomicU64::new(1.0f64.to_bits()),
             batcher,
             admission_rng,
             metrics,
@@ -385,22 +423,82 @@ impl CoordinatorShard {
         self.client.handle()
     }
 
-    /// Handle to the cloud executor pool.
+    /// Handle to the cloud executor pool (the pool currently installed —
+    /// see [`Self::replace_cloud_pool`]).
     pub fn cloud_handle(&self) -> ExecutorHandle {
-        self.cloud.handle()
+        self.cloud
+            .read()
+            .unwrap_or_else(|p| p.into_inner())
+            .handle()
     }
 
     /// Chaos hook: kill this shard's cloud pool (threads exit, handles
-    /// start failing). The next request that notices routes the shard
-    /// into client-only degraded mode; sibling shards are unaffected.
+    /// start failing). The next request that notices trips the breaker
+    /// into client-only serving; sibling shards are unaffected.
     pub fn kill_cloud_pool(&self) {
-        self.cloud.kill();
+        self.cloud.read().unwrap_or_else(|p| p.into_inner()).kill();
     }
 
-    /// Whether this shard has latched into client-only degraded mode
-    /// (its cloud pool found dead).
+    /// Chaos/ops hook: spawn a fresh cloud executor pool and swap it in
+    /// for the (possibly dead) current one. In-flight batches keep the
+    /// handle they already fetched; the next drained batch picks up the
+    /// new pool. Together with the breaker's half-open probes this is
+    /// how a shard returns to partitioned serving without a restart.
+    pub fn replace_cloud_pool(&self) -> Result<()> {
+        let fresh = DeviceExecutor::spawn(
+            format!("cloud@{}", self.class),
+            self.config.artifacts_dir.clone(),
+            self.config.network.clone(),
+            self.config.cloud_pool.max(1),
+            self.config.warm_splits.clone(),
+            Some(self.profile.clone()),
+            self.config.backend,
+        )
+        .context("spawning replacement cloud executor pool")?;
+        let mut old = {
+            let mut slot = self.cloud.write().unwrap_or_else(|p| p.into_inner());
+            std::mem::replace(&mut *slot, fresh)
+        };
+        // Joins the old pool's threads (dead ones join immediately).
+        old.shutdown();
+        Ok(())
+    }
+
+    /// Whether this shard is currently refusing the remote path (breaker
+    /// not `Closed`). Unlike the pre-breaker degraded latch this is
+    /// transient: probes re-close the breaker once the remote path
+    /// heals.
     pub fn is_degraded(&self) -> bool {
-        self.degraded.load(Ordering::SeqCst)
+        self.breaker.state() != BreakerState::Closed
+    }
+
+    /// Current position of the remote-path circuit breaker.
+    pub fn breaker_state(&self) -> BreakerState {
+        self.breaker.state()
+    }
+
+    /// Current drift-watchdog routing state.
+    pub fn drift_state(&self) -> DriftState {
+        self.watchdog.state()
+    }
+
+    /// Chaos hook: from now on the sim-observed client-prefix latency
+    /// and energy are the model prediction times these factors (1.0 =
+    /// faithful device). The drift watchdog sees the observed/predicted
+    /// residuals move accordingly; degenerate factors reset to 1.0.
+    pub fn set_model_skew(&self, latency: f64, energy: f64) {
+        let clean = |x: f64| if x.is_finite() && x > 0.0 { x } else { 1.0 };
+        self.latency_skew_bits
+            .store(clean(latency).to_bits(), Ordering::SeqCst);
+        self.energy_skew_bits
+            .store(clean(energy).to_bits(), Ordering::SeqCst);
+    }
+
+    fn model_skew(&self) -> (f64, f64) {
+        (
+            f64::from_bits(self.latency_skew_bits.load(Ordering::SeqCst)),
+            f64::from_bits(self.energy_skew_bits.load(Ordering::SeqCst)),
+        )
     }
 
     /// Number of admission lanes: one per envelope segment plus an
@@ -487,12 +585,32 @@ impl CoordinatorShard {
         if self.config.shed_infeasible {
             if let Some(deadline) = req.deadline_s {
                 if self.slo.min_delay_lower_bound_s(&env) > deadline {
-                    self.metrics.record_shed();
-                    return Admit::Shed;
+                    self.metrics.record_shed(ShedReason::Infeasible);
+                    return Admit::Shed(ShedReason::Infeasible);
                 }
             }
         }
         let bucket = self.bucket_for(&env);
+        // Overload brownout (off by default): past the watermarks, shed
+        // in priority order — overflow-lane (degenerate-γ) requests
+        // first, then loose deadlines — so a burst degrades throughput
+        // gracefully instead of blowing queue latency for tight-deadline
+        // traffic. The headroom is calibrated by the watchdog's latency
+        // factor, so a slow-running device class sheds honestly.
+        let brownout = self.config.health.brownout.sanitized();
+        if brownout.enabled {
+            let depth_frac =
+                self.batcher.depth() as f64 / self.batcher.capacity().max(1) as f64;
+            let overflow_lane =
+                self.config.gamma_coherent && bucket == self.admission_buckets() - 1;
+            let headroom_s = req.deadline_s.map(|d| {
+                d - self.slo.min_delay_lower_bound_s(&env) * self.watchdog.latency_factor()
+            });
+            if let Some(reason) = brownout.assess(depth_frac, overflow_lane, headroom_s) {
+                self.metrics.record_shed(reason);
+                return Admit::Shed(reason);
+            }
+        }
         let admitted = Admitted {
             req,
             env,
@@ -525,10 +643,12 @@ impl CoordinatorShard {
         self.metrics.record_schedule_warm(seeded, 0);
         let mut misses_before = with_global_schedule_cache(|c| c.misses());
         let client = self.client.handle();
-        let cloud = self.cloud.handle();
         let batch_max = self.config.batch_max.max(1);
         let preferred = worker_idx % self.admission_buckets();
         while let Some((bucket, batch)) = self.batcher.take_batch_pinned(preferred, batch_max) {
+            // Re-fetched per batch so a replaced cloud pool takes effect
+            // without restarting the worker.
+            let cloud = self.cloud_handle();
             let mut items = Vec::with_capacity(batch.len());
             let mut routes = Vec::with_capacity(batch.len());
             for (admitted, queued_for) in batch {
@@ -557,7 +677,7 @@ impl CoordinatorShard {
     /// Precompile the hot split points so serving latency is steady-state.
     pub fn warm_up(&self, splits: &[usize]) -> Result<()> {
         self.client.handle().warm_up(splits.to_vec())?;
-        self.cloud.handle().warm_up(splits.to_vec())?;
+        self.cloud_handle().warm_up(splits.to_vec())?;
         Ok(())
     }
 
@@ -731,11 +851,36 @@ impl CoordinatorShard {
         cloud: &ExecutorHandle,
     ) -> InferenceOutcome {
         let n_layers = self.partitioner.num_layers();
-        let decided_split = self.config.force_split.unwrap_or(decision.l_opt);
+        let mut decided_split = self.config.force_split.unwrap_or(decision.l_opt);
         let gamma_at_admission = gamma_of(env);
-        // Client-only degraded mode: don't burn retries on a cloud pool we
-        // already know is dead — route straight to FISC.
-        let degraded_route = decided_split < n_layers && self.is_degraded();
+        // Quarantined drift: this class's model numbers are not trusted
+        // even after calibration, so route to the conservative plan —
+        // FISC or full-cloud, whichever the (calibrated) measured
+        // endpoints favor — unless the caller pinned a split explicitly.
+        if self.config.health.watchdog.enabled
+            && self.config.force_split.is_none()
+            && self.watchdog.state() == DriftState::Quarantined
+        {
+            decided_split = if decision.fisc_cost_j <= decision.fcc_cost_j {
+                n_layers
+            } else {
+                0
+            };
+            self.metrics.record_drift_quarantined_request();
+        }
+        // The breaker gates the remote path (uplink + cloud suffix).
+        // FISC plans never need it; a Deny routes the request client-only
+        // without touching the radio (the Markov chain advances only on
+        // sends, so only probes can observe an outage ending).
+        let gate = if decided_split < n_layers {
+            self.breaker.admit_remote()
+        } else {
+            RemoteGate::Allow
+        };
+        if gate == RemoteGate::Probe {
+            self.metrics.record_breaker_probe();
+        }
+        let degraded_route = decided_split < n_layers && gate == RemoteGate::Deny;
         let mut split = if degraded_route { n_layers } else { decided_split };
 
         // Mid-flight re-decision over the scenario clock: the client
@@ -814,7 +959,14 @@ impl CoordinatorShard {
             }
             self.channel.advance_clock(prefix_model_s);
         }
-        let retry = self.config.retry.sanitized();
+        // A half-open probe is a yes/no question about the remote path's
+        // health: single attempt, so a still-dead remote answers fast
+        // instead of burning a full retry budget per probe.
+        let retry = if gate == RemoteGate::Probe {
+            self.config.retry.sanitized().probe()
+        } else {
+            self.config.retry.sanitized()
+        };
         // Per-request backoff jitter stream: a pure function of (seed,
         // shard salt, request id), so fault schedules replay bit-for-bit
         // regardless of worker interleaving.
@@ -829,7 +981,10 @@ impl CoordinatorShard {
                 Ok(a) => a,
                 Err(e) => {
                     // The client device is the one thing there is no
-                    // fallback for.
+                    // fallback for. The probe slot (if any) is released
+                    // un-judged: this request never reached the remote
+                    // path, so it says nothing about its health.
+                    self.breaker.abandon(gate);
                     self.metrics.record_failed();
                     return InferenceOutcome::Failed(InferenceFailure {
                         id: req.id,
@@ -843,6 +998,9 @@ impl CoordinatorShard {
             Vec::new()
         };
         let t_client = t_client_start.elapsed();
+        if split > 0 && self.config.health.watchdog.enabled {
+            self.observe_drift(split);
+        }
 
         // 4. Ship data over the (simulated) uplink, retrying per policy.
         let t_chan_start = Instant::now();
@@ -872,7 +1030,11 @@ impl CoordinatorShard {
         let mut attempts = 0u32;
         let mut sent: Option<f64> = None;
         let mut last_send_err: Option<ChannelError> = None;
-        loop {
+        // A Deny route never touches the radio, not even for the FISC
+        // class-index report: the whole point of Open is zero remote
+        // traffic while cooling down. `sent` stays None and the request
+        // resolves through the local-answer branch below.
+        while !degraded_route {
             attempts += 1;
             match self.channel.send(payload_bits) {
                 Ok((energy_j, _airtime_s)) => {
@@ -913,9 +1075,14 @@ impl CoordinatorShard {
         let transmit_energy_j = match sent {
             Some(e) => e,
             None if split == n_layers => {
-                // FISC plan whose class-index report could not be shipped:
-                // the answer is already local, so finish degraded rather
-                // than throwing the computed logits away.
+                // FISC plan whose class-index report could not be shipped
+                // — or a Deny route that never tried: the answer is
+                // already local, so finish degraded rather than throwing
+                // the computed logits away. A request the breaker let
+                // through (re-decided to FISC mid-flight) still reports
+                // its failed uplink as remote evidence; a Deny carries no
+                // verdict.
+                self.record_remote_outcome(gate, false, decided_split);
                 self.metrics.record_fallback_fisc();
                 return InferenceOutcome::Degraded(InferenceResponse {
                     id: req.id,
@@ -943,7 +1110,9 @@ impl CoordinatorShard {
             }
             None => {
                 // Remote path exhausted before the payload ever arrived:
-                // fall back to fully in-situ execution.
+                // one request-level failure for the breaker, then fall
+                // back to fully in-situ execution.
+                self.record_remote_outcome(gate, false, decided_split);
                 let cause = match last_send_err {
                     Some(e) => format!("uplink exhausted after {attempts} attempts: {e}"),
                     None => format!("uplink exhausted after {attempts} attempts"),
@@ -977,10 +1146,31 @@ impl CoordinatorShard {
             let suffix_input: Vec<f32> = if split == 0 {
                 req.tensor.clone()
             } else {
-                let (enc, scale) = quantized.expect("partitioned split carries encoding");
-                // The cloud decodes the RLC stream and dequantizes.
-                let q = rlc::decode(&enc, 8);
-                q.iter().map(|&v| v as f32 * scale).collect()
+                match quantized {
+                    Some((enc, scale)) => {
+                        // The cloud decodes the RLC stream and dequantizes.
+                        let q = rlc::decode(&enc, 8);
+                        q.iter().map(|&v| v as f32 * scale).collect()
+                    }
+                    None => {
+                        // A partitioned split reaching the cloud leg
+                        // without its activation encoding is a serving
+                        // bug — but it must resolve as a counted failure,
+                        // not a worker panic that takes the whole lane
+                        // (and every queued request on it) down.
+                        self.breaker.abandon(gate);
+                        self.metrics.record_failed();
+                        return InferenceOutcome::Failed(InferenceFailure {
+                            id: req.id,
+                            error: format!(
+                                "partitioned split {split} reached the cloud leg \
+                                 without an activation encoding"
+                            ),
+                            wasted_energy_j,
+                            attempts,
+                        });
+                    }
+                }
             };
             let mut cloud_attempts = 0u32;
             let outcome = loop {
@@ -990,9 +1180,10 @@ impl CoordinatorShard {
                     Err(e) => {
                         if cloud.alive_threads() == 0 {
                             // The whole pool is gone, not one bad call:
-                            // latch degraded mode so later requests skip
-                            // the remote path entirely.
-                            if !self.degraded.swap(true, Ordering::SeqCst) {
+                            // trip the breaker immediately so later
+                            // requests skip the remote path until a probe
+                            // finds a live pool again.
+                            if self.breaker.force_open() {
                                 self.metrics.record_degraded_mode();
                             }
                             break Err(e);
@@ -1019,6 +1210,7 @@ impl CoordinatorShard {
             match outcome {
                 Ok(l) => l,
                 Err(e) => {
+                    self.record_remote_outcome(gate, false, decided_split);
                     return self.fisc_fallback(FallbackCtx {
                         req,
                         cause: format!(
@@ -1041,6 +1233,10 @@ impl CoordinatorShard {
             }
         };
         let t_cloud = t_cloud_start.elapsed();
+        // The whole remote path (uplink + cloud suffix) completed: one
+        // request-level success for the breaker — a probe landing here
+        // is what re-closes it.
+        self.record_remote_outcome(gate, true, decided_split);
 
         let site = if split == 0 {
             ExecutionSite::Cloud
@@ -1079,6 +1275,64 @@ impl CoordinatorShard {
             InferenceOutcome::Degraded(resp)
         } else {
             InferenceOutcome::Ok(resp)
+        }
+    }
+
+    /// Feed one request-level remote verdict into the breaker and route
+    /// the resulting transition into metrics. Plans that never needed the
+    /// remote path (decided FISC) carry no verdict; Deny gates are inert
+    /// inside the breaker itself.
+    fn record_remote_outcome(&self, gate: RemoteGate, ok: bool, decided_split: usize) {
+        if decided_split >= self.partitioner.num_layers() {
+            return;
+        }
+        match self.breaker.record(gate, ok) {
+            BreakerTransition::Tripped => self.metrics.record_degraded_mode(),
+            BreakerTransition::Reopened => self.metrics.record_breaker_reopen(),
+            BreakerTransition::None => {}
+        }
+    }
+
+    /// Compare the observed client prefix against the compiled model's
+    /// prediction for the executed split and fold the residuals into the
+    /// drift watchdog; state changes apply/remove the calibration factor
+    /// and are counted in metrics. With the deterministic sim backend
+    /// the "observation" is the model prediction times the chaos skew
+    /// ([`Self::set_model_skew`]), so a faithful device yields ratios of
+    /// exactly 1.0 and the decision path stays bit-identical.
+    fn observe_drift(&self, split: usize) {
+        let (latency_skew, energy_skew) = self.model_skew();
+        let predicted_s: f64 = self
+            .slo
+            .delay_model()
+            .client_latencies_s()
+            .iter()
+            .take(split)
+            .sum();
+        let predicted_j = self.partitioner.client_energy_j(split);
+        // observed = predicted × skew, so the residual ratio is the skew
+        // itself whenever the model predicts a nonzero prefix cost.
+        let (latency_ratio, energy_ratio) = if predicted_s > 0.0 && predicted_j > 0.0 {
+            (latency_skew, energy_skew)
+        } else {
+            (1.0, 1.0)
+        };
+        let update = self.watchdog.observe(latency_ratio, energy_ratio);
+        if update.detected {
+            self.metrics.record_drift_detect();
+        }
+        if update.entered_calibration {
+            self.metrics.record_drift_calibration();
+        }
+        if update.entered_quarantine {
+            self.metrics.record_drift_quarantine();
+        }
+        if update.recovered {
+            self.metrics.record_drift_recovery();
+        }
+        if update.energy_factor != self.calibration.factor() {
+            self.calibration.set_factor(update.energy_factor);
+            self.metrics.record_calibration_factor(update.energy_factor);
         }
     }
 
@@ -1153,7 +1407,7 @@ impl CoordinatorShard {
             let id = req.id;
             match self.admit(req, &tx) {
                 Admit::Queued => order.push(id),
-                Admit::Shed => {}
+                Admit::Shed(_) => {}
                 Admit::Closed => return Err(anyhow!("admission queue closed early")),
             }
         }
@@ -1287,16 +1541,38 @@ impl Coordinator {
     }
 
     /// Chaos hook: kill the cloud pool (threads exit, handles start
-    /// failing). The next request that notices routes the coordinator
-    /// into client-only degraded mode.
+    /// failing). The next request that notices trips the breaker into
+    /// client-only serving.
     pub fn kill_cloud_pool(&self) {
         self.shard.kill_cloud_pool();
     }
 
-    /// Whether the coordinator has latched into client-only degraded mode
-    /// (cloud pool found dead).
+    /// Chaos/ops hook: spawn a fresh cloud pool and swap it in (see
+    /// [`CoordinatorShard::replace_cloud_pool`]).
+    pub fn replace_cloud_pool(&self) -> Result<()> {
+        self.shard.replace_cloud_pool()
+    }
+
+    /// Whether the coordinator is currently refusing the remote path
+    /// (breaker not `Closed`); transient, unlike the pre-breaker latch.
     pub fn is_degraded(&self) -> bool {
         self.shard.is_degraded()
+    }
+
+    /// Current position of the remote-path circuit breaker.
+    pub fn breaker_state(&self) -> BreakerState {
+        self.shard.breaker_state()
+    }
+
+    /// Current drift-watchdog routing state.
+    pub fn drift_state(&self) -> DriftState {
+        self.shard.drift_state()
+    }
+
+    /// Chaos hook: skew the sim-observed client latency/energy (see
+    /// [`CoordinatorShard::set_model_skew`]).
+    pub fn set_model_skew(&self, latency: f64, energy: f64) {
+        self.shard.set_model_skew(latency, energy);
     }
 
     /// Number of admission lanes (see

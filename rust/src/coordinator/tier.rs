@@ -16,8 +16,10 @@
 //! class — lands on the network's first shard; an unknown network lands
 //! on shard 0, which always exists.
 //!
-//! Fault state is per shard: one shard latching client-only degraded
-//! mode (its cloud pool dead) leaves its siblings serving normally.
+//! Fault state is per shard: one shard's circuit breaker opening into
+//! client-only degraded mode (its cloud pool dead or erroring) leaves
+//! its siblings serving normally — and the breaker re-closes via probes
+//! once that shard's remote path heals.
 //! [`ServingTier::fleet_snapshot`] / [`ServingTier::fleet_channel_stats`]
 //! merge the per-shard accounting into one fleet view.
 
@@ -179,7 +181,7 @@ impl ServingTier {
             let id = req.id;
             match self.admit(req, &tx) {
                 Admit::Queued => order.push(id),
-                Admit::Shed => {}
+                Admit::Shed(_) => {}
                 Admit::Closed => return Err(anyhow!("admission queue closed early")),
             }
         }
@@ -229,7 +231,7 @@ mod tests {
 
     use std::path::PathBuf;
 
-    use crate::coordinator::{ExecutorBackend, RetryPolicy};
+    use crate::coordinator::{ExecutorBackend, HealthConfig, RetryPolicy};
     use crate::corpus::Corpus;
 
     fn base_config() -> CoordinatorConfig {
@@ -252,6 +254,7 @@ mod tests {
             scenario: None,
             redecide: None,
             retry: RetryPolicy::default(),
+            health: HealthConfig::default(),
             seed: 42,
         }
     }

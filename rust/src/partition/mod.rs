@@ -68,7 +68,8 @@ pub use constrained::{decide_with_slo_scan, SloPartitioner};
 pub use delay::DelayModel;
 pub use envelope::{CostLine, Envelope};
 pub use policy::{
-    Decision, DecisionContext, EnergyPolicy, PartitionPolicy, SloPolicy, SparsityEnvelopePolicy,
+    CalibrationCell, Decision, DecisionContext, EnergyPolicy, PartitionPolicy, SloPolicy,
+    SparsityEnvelopePolicy,
 };
 pub use registry::{
     device_class, DelayTables, EnvelopeTable, ImportReport, PolicyRegistry, RegistryEntry,

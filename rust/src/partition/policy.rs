@@ -41,6 +41,7 @@
 //! identical to the O(|L|) scan — property-tested, ties and degenerate
 //! channels included.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::channel::TransmitEnv;
@@ -231,15 +232,86 @@ pub trait PartitionPolicy {
     }
 }
 
+/// Scalar energy-model calibration shared between a shard's drift
+/// watchdog (the writer) and its decision policy (the reader).
+///
+/// The factor `c` rescales the *client-side* energy model: the watchdog
+/// observed client energy ≈ `c ×` the compiled-profile prediction.
+/// Minimizing the calibrated cost `c·E_c(l) + γ·D(l)` is the same as
+/// evaluating the original envelope at `γ/c` and scaling the resulting
+/// costs back by `c` — an affine rescale that leaves envelope geometry
+/// untouched, so no table is ever rebuilt. Transmit energy stays the
+/// physical `γ·D(l)` (the radio did not drift; the device did).
+#[derive(Debug)]
+pub struct CalibrationCell {
+    /// `f64::to_bits` of the factor — a lock-free read on the hot path.
+    bits: AtomicU64,
+}
+
+impl Default for CalibrationCell {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CalibrationCell {
+    /// A cell at the identity factor 1.0 (decisions bit-identical to the
+    /// uncalibrated path).
+    pub fn new() -> Self {
+        CalibrationCell {
+            bits: AtomicU64::new(1.0f64.to_bits()),
+        }
+    }
+
+    pub fn factor(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+
+    /// Install a new factor, clamped to a sane positive range;
+    /// non-finite or non-positive writes reset to the identity.
+    pub fn set_factor(&self, c: f64) {
+        let c = if c.is_finite() && c > 0.0 {
+            c.clamp(0.05, 20.0)
+        } else {
+            1.0
+        };
+        self.bits.store(c.to_bits(), Ordering::Relaxed);
+    }
+}
+
+/// The calibrated-channel view: evaluating the original envelope at
+/// `γ/c` is the same as raising the effective rate by `c`.
+fn calibrated_env(env: &TransmitEnv, c: f64) -> TransmitEnv {
+    TransmitEnv::with_effective_rate(env.effective_bit_rate() * c, env.p_tx_w)
+}
+
+/// Scale a decision's energy fields back by the calibration factor (the
+/// envelope was evaluated at `γ/c`, so every cost came out divided by
+/// `c`). Splits, bits and delay fields are untouched.
+fn scale_decision_energy(d: &mut Decision, c: f64) {
+    d.cost_j *= c;
+    d.fcc_cost_j *= c;
+    d.fisc_cost_j *= c;
+    d.client_energy_j *= c;
+    d.transmit_energy_j *= c;
+    for cost in &mut d.costs_j {
+        *cost *= c;
+    }
+}
+
 /// The paper's unconstrained energy objective over the precomputed
 /// γ-envelope — the serving default.
 ///
 /// Ignores `ctx.slo_s` (use [`SloPolicy`] for deadlines); honors
 /// `ctx.segment` to skip the breakpoint search on the γ-coherent
-/// admission path.
+/// admission path. With a [`CalibrationCell`] attached
+/// ([`EnergyPolicy::with_calibration`]) and off the identity factor,
+/// decisions route through the calibrated-γ rescale instead (and ignore
+/// `ctx.segment`, which was bucketed on the raw γ).
 #[derive(Clone, Debug)]
 pub struct EnergyPolicy {
     partitioner: Arc<Partitioner>,
+    calibration: Option<Arc<CalibrationCell>>,
 }
 
 impl EnergyPolicy {
@@ -250,11 +322,28 @@ impl EnergyPolicy {
     /// Share one engine across policies/connections (the
     /// [`crate::partition::registry::PolicyRegistry`] path).
     pub fn from_shared(partitioner: Arc<Partitioner>) -> Self {
-        EnergyPolicy { partitioner }
+        EnergyPolicy {
+            partitioner,
+            calibration: None,
+        }
+    }
+
+    /// Attach a drift-watchdog calibration cell: while the cell holds
+    /// the identity factor the policy is bit-identical to the plain one.
+    pub fn with_calibration(mut self, cell: Arc<CalibrationCell>) -> Self {
+        self.calibration = Some(cell);
+        self
     }
 
     pub fn partitioner(&self) -> &Partitioner {
         &self.partitioner
+    }
+
+    fn factor(&self) -> f64 {
+        self.calibration
+            .as_ref()
+            .map(|cell| cell.factor())
+            .unwrap_or(1.0)
     }
 }
 
@@ -268,6 +357,13 @@ impl PartitionPolicy for EnergyPolicy {
     }
 
     fn decide(&self, ctx: &DecisionContext) -> Decision {
+        let c = self.factor();
+        if c != 1.0 {
+            let env = calibrated_env(&ctx.env, c);
+            let mut d = self.partitioner.choose_split(ctx.input_bits, &env);
+            scale_decision_energy(&mut d, c);
+            return d;
+        }
         match ctx.segment {
             Some(seg) => self
                 .partitioner
@@ -277,15 +373,33 @@ impl PartitionPolicy for EnergyPolicy {
     }
 
     fn decide_detailed(&self, ctx: &DecisionContext) -> Decision {
+        let c = self.factor();
+        let env = if c != 1.0 {
+            calibrated_env(&ctx.env, c)
+        } else {
+            ctx.env
+        };
         let mut costs_j = Vec::with_capacity(self.num_layers() + 1);
         let mut d = self
             .partitioner
-            .choose_into(ctx.input_bits, &ctx.env, &mut costs_j);
+            .choose_into(ctx.input_bits, &env, &mut costs_j);
         d.costs_j = costs_j;
+        if c != 1.0 {
+            scale_decision_energy(&mut d, c);
+        }
         d
     }
 
     fn decide_batch(&self, input_bits: &[f64], ctx: &DecisionContext, out: &mut Vec<Decision>) {
+        let c = self.factor();
+        if c != 1.0 {
+            let env = calibrated_env(&ctx.env, c);
+            self.partitioner.choose_batch(input_bits, &env, out);
+            for d in out.iter_mut() {
+                scale_decision_energy(d, c);
+            }
+            return;
+        }
         self.partitioner.choose_batch(input_bits, &ctx.env, out);
     }
 }
@@ -587,6 +701,74 @@ mod tests {
         assert!(s_star > 0.0 && s_star < 1.0, "s* = {s_star}");
         assert_eq!(policy.decide_sparsity((s_star + 1e-6).min(1.0)).l_opt, FCC);
         assert_ne!(policy.decide_sparsity((s_star - 1e-6).max(0.0)).l_opt, FCC);
+    }
+
+    #[test]
+    fn calibration_identity_factor_is_bit_identical() {
+        let p = paper_partitioner(&alexnet());
+        let plain = EnergyPolicy::new(p.clone());
+        let cell = Arc::new(CalibrationCell::new());
+        let calibrated = EnergyPolicy::new(p.clone()).with_calibration(cell.clone());
+        let e = env(80.0, 0.78);
+        for i in 0..=20 {
+            let ctx = DecisionContext::from_sparsity(&p, i as f64 / 20.0, e);
+            assert_eq!(calibrated.decide(&ctx), plain.decide(&ctx));
+            let gamma = e.p_tx_w / e.effective_bit_rate();
+            let seg = p.envelope().segment_index(gamma);
+            let pinned = ctx.with_segment(seg);
+            assert_eq!(calibrated.decide(&pinned), plain.decide(&pinned));
+        }
+        // Resetting a drifted cell restores bit-identity.
+        cell.set_factor(2.0);
+        cell.set_factor(1.0);
+        let ctx = DecisionContext::from_sparsity(&p, 0.608, e);
+        assert_eq!(calibrated.decide(&ctx), plain.decide(&ctx));
+    }
+
+    #[test]
+    fn calibrated_decide_matches_manual_gamma_rescale() {
+        let p = paper_partitioner(&alexnet());
+        let cell = Arc::new(CalibrationCell::new());
+        let policy = EnergyPolicy::new(p.clone()).with_calibration(cell.clone());
+        let e = env(80.0, 0.78);
+        for c in [0.5, 1.3, 2.0, 4.0] {
+            cell.set_factor(c);
+            let ctx = DecisionContext::from_sparsity(&p, 0.608, e);
+            let d = policy.decide(&ctx);
+            // Reference: the original envelope at γ/c, costs scaled by c.
+            let rescaled = TransmitEnv::with_effective_rate(e.effective_bit_rate() * c, e.p_tx_w);
+            let reference = p.choose_split(ctx.input_bits, &rescaled);
+            assert_eq!(d.l_opt, reference.l_opt, "c={c}");
+            assert_eq!(d.cost_j, reference.cost_j * c, "c={c}");
+            assert_eq!(d.client_energy_j, reference.client_energy_j * c);
+            assert_eq!(d.transmit_energy_j, reference.transmit_energy_j * c);
+            // The decomposition survives the rescale exactly.
+            assert_eq!(d.client_energy_j + d.transmit_energy_j, d.cost_j);
+            // A segment pinned on the raw γ is ignored, not mismatched.
+            let seg = p.envelope().segment_index(e.p_tx_w / e.effective_bit_rate());
+            assert_eq!(policy.decide(&ctx.with_segment(seg)), d);
+            // Batch and detailed forms agree with the single decision.
+            let mut out = Vec::new();
+            policy.decide_batch(&[ctx.input_bits], &ctx, &mut out);
+            assert_eq!(out[0], d);
+            let full = policy.decide_detailed(&ctx);
+            assert_eq!(full.l_opt, d.l_opt);
+            assert_eq!(full.cost_j, d.cost_j);
+        }
+    }
+
+    #[test]
+    fn calibration_cell_clamps_degenerate_factors() {
+        let cell = CalibrationCell::new();
+        assert_eq!(cell.factor(), 1.0);
+        cell.set_factor(f64::NAN);
+        assert_eq!(cell.factor(), 1.0);
+        cell.set_factor(-3.0);
+        assert_eq!(cell.factor(), 1.0);
+        cell.set_factor(1e9);
+        assert_eq!(cell.factor(), 20.0);
+        cell.set_factor(1e-9);
+        assert_eq!(cell.factor(), 0.05);
     }
 
     #[test]

@@ -16,8 +16,8 @@ use std::sync::mpsc::channel;
 
 use neupart::channel::{FaultConfig, MarkovOutage, TransmitEnv};
 use neupart::coordinator::{
-    Admit, Coordinator, CoordinatorConfig, ExecutorBackend, InferenceOutcome, InferenceRequest,
-    RetryPolicy, ServingTier, ServingTierConfig,
+    Admit, BreakerConfig, Coordinator, CoordinatorConfig, ExecutorBackend, HealthConfig,
+    InferenceOutcome, InferenceRequest, RetryPolicy, ServingTier, ServingTierConfig,
 };
 use neupart::corpus::Corpus;
 use neupart::runtime::SIM_POISON;
@@ -51,7 +51,33 @@ fn config() -> CoordinatorConfig {
         scenario: None,
         redecide: None,
         retry: RetryPolicy::default(),
+        health: HealthConfig::default(),
         seed: 42,
+    }
+}
+
+/// A health config whose breaker never trips on error rate: the
+/// exact-count tests below drive sustained 100% remote failure on
+/// purpose, and the counts they assert (retries, outage rejections,
+/// deadline abandonments per request) only hold while every request
+/// still walks the full remote path.
+fn no_breaker() -> HealthConfig {
+    HealthConfig {
+        breaker: BreakerConfig::disabled(),
+        ..HealthConfig::default()
+    }
+}
+
+/// A health config whose breaker force-opens on a dead pool but never
+/// cools down into probing: the degraded-mode tests pin the Open state
+/// so trip counts are exact.
+fn sticky_breaker() -> HealthConfig {
+    HealthConfig {
+        breaker: BreakerConfig {
+            cooldown_s: 3600.0,
+            ..BreakerConfig::default()
+        },
+        ..HealthConfig::default()
     }
 }
 
@@ -147,6 +173,7 @@ fn exhausted_uplink_falls_back_to_fisc_with_energy_accounting() {
     let n = scale(6);
     let mut cfg = config();
     cfg.workers = 1;
+    cfg.health = no_breaker();
     cfg.faults = Some(FaultConfig {
         drop_prob: 1.0, // every transfer dies mid-flight
         stall_prob: 0.0,
@@ -197,6 +224,7 @@ fn exhausted_uplink_falls_back_to_fisc_with_energy_accounting() {
 fn pinned_outage_degrades_without_spending_radio_energy() {
     let n = scale(5);
     let mut cfg = config();
+    cfg.health = no_breaker();
     cfg.faults = Some(FaultConfig {
         drop_prob: 0.0,
         stall_prob: 0.0,
@@ -231,10 +259,11 @@ fn pinned_outage_degrades_without_spending_radio_energy() {
 }
 
 #[test]
-fn killed_cloud_pool_latches_client_only_degraded_mode() {
+fn killed_cloud_pool_opens_breaker_into_client_only_mode() {
     let n = scale(6);
     let mut cfg = config();
     cfg.force_split = Some(3); // partitioned: every request needs the cloud
+    cfg.health = sticky_breaker(); // no cooldown: the Open state is pinned
     let coord = Coordinator::new(cfg).unwrap();
     let n_layers = coord.partitioner().num_layers();
 
@@ -259,14 +288,18 @@ fn killed_cloud_pool_latches_client_only_degraded_mode() {
     }
     assert!(coord.is_degraded());
     let m = coord.metrics.snapshot();
-    assert_eq!(m.degraded_mode_entered, 1, "latch must fire exactly once");
+    assert_eq!(m.degraded_mode_entered, 1, "force-open must trip exactly once");
     assert_eq!(m.fallback_fisc, n as u64);
     assert_eq!(m.failed_requests, 0);
 
-    // Degraded mode is sticky and keeps serving.
+    // With the cooldown pinned, the Open breaker keeps serving
+    // client-only without re-tripping or probing.
     let more = coord.serve(requests(3)).unwrap();
     assert!(more.iter().all(InferenceOutcome::is_degraded));
-    assert_eq!(coord.metrics.snapshot().degraded_mode_entered, 1);
+    let m = coord.metrics.snapshot();
+    assert_eq!(m.degraded_mode_entered, 1);
+    assert_eq!(m.breaker_probes, 0, "pinned cooldown must never probe");
+    assert_eq!(m.breaker_reopened, 0);
 }
 
 #[test]
@@ -310,6 +343,7 @@ fn hopeless_deadline_abandons_retries_but_still_degrades() {
     let n = scale(4);
     let mut cfg = config();
     cfg.shed_infeasible = false; // let the hopeless deadline through
+    cfg.health = no_breaker();
     cfg.faults = Some(FaultConfig {
         drop_prob: 1.0,
         stall_prob: 0.0,
@@ -442,11 +476,12 @@ fn process_batch_honors_per_request_channel_states() {
 
 #[test]
 fn killed_cloud_pool_degrades_only_its_own_shard() {
-    // Shard isolation: a dead cloud pool latches client-only degraded
-    // mode in its own shard; sibling shards of the tier keep serving Ok.
+    // Shard isolation: a dead cloud pool opens the breaker into
+    // client-only mode in its own shard; sibling shards keep serving Ok.
     let n = scale(6);
     let mut base = config();
     base.force_split = Some(3); // partitioned: every request needs the cloud
+    base.health = sticky_breaker(); // no cooldown: trip counts are exact
     let tier = two_class_tier(base);
     let victim = &tier.shards()[0];
     victim.kill_cloud_pool();
@@ -475,9 +510,9 @@ fn killed_cloud_pool_degrades_only_its_own_shard() {
         }
     }
     assert!(tier.shards()[0].is_degraded());
-    assert!(!tier.shards()[1].is_degraded(), "degraded latch leaked across shards");
+    assert!(!tier.shards()[1].is_degraded(), "breaker state leaked across shards");
     let fleet = tier.fleet_snapshot();
-    assert_eq!(fleet.degraded_mode_entered, 1, "latch must fire once, in one shard");
+    assert_eq!(fleet.degraded_mode_entered, 1, "breaker must trip once, in one shard");
     assert_eq!(fleet.fallback_fisc, (n / 2) as u64);
     assert_eq!(fleet.failed_requests, 0);
 }

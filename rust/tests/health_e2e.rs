@@ -1,0 +1,326 @@
+//! Health-plane e2e: the recoverable serving path.
+//!
+//! Runs on the artifact-free deterministic sim backend
+//! (`ExecutorBackend::Sim`), so like `chaos_e2e` this suite never skips.
+//! Where the chaos suite asserts the *bounded-outcome* contract under
+//! injected faults, this suite asserts the *recovery* contract on top of
+//! it: a shard whose cloud pool is replaced mid-run or whose Markov
+//! outage ends returns to partitioned serving without a restart (circuit
+//! breaker), a traffic burst sheds its loose-deadline overload instead
+//! of queueing it while clean load sheds nothing (brownout), and an
+//! injected model skew is detected, calibrated and quarantined while
+//! unaffected device classes stay bit-identical (drift watchdog).
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use neupart::channel::{FaultConfig, MarkovOutage, TransmitEnv};
+use neupart::coordinator::{
+    loadgen, ArrivalModel, BrownoutConfig, Coordinator, CoordinatorConfig, DriftState,
+    ExecutorBackend, HealthConfig, InferenceOutcome, InferenceRequest, LoadGenConfig, RetryPolicy,
+    ServingTier, ServingTierConfig,
+};
+use neupart::corpus::Corpus;
+
+fn config() -> CoordinatorConfig {
+    CoordinatorConfig {
+        // Never read by the sim backend.
+        artifacts_dir: PathBuf::from("artifacts"),
+        network: "tiny_alexnet".to_string(),
+        env: TransmitEnv::with_effective_rate(130.0e6, 0.78),
+        jpeg_quality: 90,
+        cloud_pool: 2,
+        workers: 2,
+        jitter: 0.0,
+        time_scale: 0.0,
+        force_split: None,
+        warm_splits: Vec::new(),
+        batch_max: 3,
+        gamma_coherent: true,
+        shed_infeasible: true,
+        backend: ExecutorBackend::Sim,
+        faults: None,
+        scenario: None,
+        redecide: None,
+        retry: RetryPolicy::default(),
+        health: HealthConfig::default(),
+        seed: 42,
+    }
+}
+
+fn requests(n: usize) -> Vec<InferenceRequest> {
+    Corpus::new(32, 32, 17)
+        .iter(n)
+        .enumerate()
+        .map(|(i, img)| {
+            InferenceRequest::new(i as u64, img.to_f32_nhwc(), img.pixels, img.w, img.h)
+        })
+        .collect()
+}
+
+/// Serve small batches until `done` reports true, sleeping between
+/// rounds so wall-clock machinery (the breaker cooldown) can elapse.
+fn serve_until(coord: &Coordinator, rounds: usize, done: impl Fn(&Coordinator) -> bool) -> bool {
+    for _ in 0..rounds {
+        coord.serve(requests(2)).expect("serve");
+        if done(coord) {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    false
+}
+
+#[test]
+fn replaced_cloud_pool_reopens_breaker_and_restores_partitioned_serving() {
+    let mut cfg = config();
+    cfg.force_split = Some(3); // partitioned: every request needs the cloud
+    let coord = Coordinator::new(cfg).unwrap();
+
+    // Healthy baseline: partitioned serving through the original pool.
+    let healthy = coord.serve(requests(4)).unwrap();
+    assert!(healthy.iter().all(InferenceOutcome::is_ok));
+
+    coord.kill_cloud_pool();
+    let cloud = coord.cloud_handle();
+    for _ in 0..500 {
+        if cloud.alive_threads() == 0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert_eq!(cloud.alive_threads(), 0, "killed pool still alive");
+    drop(cloud);
+
+    // The dead pool force-opens the breaker; requests complete
+    // client-only instead of failing.
+    let tripped = coord.serve(requests(4)).unwrap();
+    assert!(tripped.iter().all(InferenceOutcome::is_degraded));
+    assert!(coord.is_degraded());
+    assert!(coord.metrics.snapshot().degraded_mode_entered >= 1);
+
+    // Chaos hook: swap in a fresh pool mid-run — no restart, no rebuild.
+    coord.replace_cloud_pool().unwrap();
+
+    // The cooldown elapses, a half-open probe lands on the new pool and
+    // the breaker closes again.
+    let reopened = serve_until(&coord, 1000, |c| c.metrics.snapshot().breaker_reopened >= 1);
+    assert!(reopened, "breaker never reopened after the pool was replaced");
+    assert!(!coord.is_degraded());
+
+    // Partitioned serving is back: remote path, forced split honored.
+    let recovered = coord.serve(requests(6)).unwrap();
+    for o in &recovered {
+        assert!(o.is_ok(), "post-recovery request not Ok: {o:?}");
+        let r = o.response().unwrap();
+        assert_eq!(r.split, 3, "post-recovery serving must be partitioned");
+        assert!(r.transmit_bits > 0, "recovered path must use the radio");
+    }
+    let m = coord.metrics.snapshot();
+    assert!(m.breaker_probes >= 1, "recovery must go through a probe");
+    assert_eq!(m.failed_requests, 0);
+}
+
+#[test]
+fn markov_outage_end_is_discovered_by_probes_and_reopens() {
+    let mut cfg = config();
+    cfg.force_split = Some(3); // partitioned: every request needs the uplink
+    cfg.faults = Some(FaultConfig {
+        drop_prob: 0.0,
+        stall_prob: 0.0,
+        stall_max_factor: 0.0,
+        // Mostly-down link: every up step decays immediately, downs
+        // recover per send with p = 0.4 — a ~70% remote failure rate
+        // trips the breaker, while the seeded draw sequence guarantees
+        // probes eventually land inside an up window.
+        outage: Some(MarkovOutage {
+            p_up_to_down: 1.0,
+            p_down_to_up: 0.4,
+        }),
+        seed: 29,
+    });
+    cfg.retry = RetryPolicy {
+        max_attempts: 1,
+        ..RetryPolicy::default()
+    };
+    let coord = Coordinator::new(cfg).unwrap();
+
+    // Serve until the windowed error rate trips the breaker. Nothing
+    // may fail outright: rejected sends degrade through the FISC
+    // fallback.
+    let mut tripped = false;
+    for _ in 0..50 {
+        let out = coord.serve(requests(8)).unwrap();
+        assert!(out.iter().all(|o| !o.is_failed()));
+        if coord.metrics.snapshot().degraded_mode_entered >= 1 {
+            tripped = true;
+            break;
+        }
+    }
+    assert!(tripped, "a ~70%-failing link never tripped the breaker");
+
+    // Deny routes never touch the radio, so only half-open probes can
+    // advance the Markov chain and observe the outage ending.
+    let reopened = serve_until(&coord, 1000, |c| c.metrics.snapshot().breaker_reopened >= 1);
+    assert!(reopened, "probes never observed the outage ending");
+    let m = coord.metrics.snapshot();
+    assert!(m.breaker_probes >= 1);
+    assert!(m.outage_rejections >= 1);
+    assert_eq!(m.failed_requests, 0);
+}
+
+#[test]
+fn brownout_sheds_burst_overload_but_never_clean_load() {
+    let mut shard = config();
+    // Watermarks pulled low so the verdict does not ride on
+    // producer/worker timing margins: the per-shard queue capacity is
+    // 16, so clean closed-loop load (≤ 2 queued) sits far below the
+    // soft watermark while an open flood saturates it.
+    shard.health.brownout = BrownoutConfig {
+        enabled: true,
+        soft_watermark: 0.25,
+        hard_watermark: 0.5,
+        loose_headroom_s: 1.0,
+    };
+    let mut lg = LoadGenConfig::table_iv_wlan(2_000, 21);
+    lg.infeasible_frac = 0.0;
+    let tier = |lg: &LoadGenConfig| {
+        ServingTier::new(ServingTierConfig::per_class(shard.clone(), &lg.class_envs())).unwrap()
+    };
+
+    // Clean closed-loop load: the queue never nears the watermarks.
+    lg.arrival = ArrivalModel::Closed { concurrency: 2 };
+    let clean = loadgen::run(&tier(&lg), &lg).unwrap();
+    assert_eq!(clean.shed, 0, "clean load must not shed at all");
+    assert_eq!(clean.completed, clean.clients);
+
+    // Open burst over the same fleet: the flood sheds via the brownout
+    // reason instead of queueing unboundedly.
+    lg.arrival = ArrivalModel::Burst {
+        concurrency: 2,
+        producers: 8,
+        clean_fraction: 0.25,
+    };
+    let burst = loadgen::run(&tier(&lg), &lg).unwrap();
+    assert_eq!(burst.completed + burst.shed, burst.clients);
+    assert!(burst.shed_brownout > 0, "open flood never hit the hard watermark");
+    assert_eq!(burst.shed_infeasible, 0);
+    assert_eq!(
+        burst.shed,
+        burst.shed_infeasible + burst.shed_overflow + burst.shed_brownout,
+        "every shed must carry a reason"
+    );
+}
+
+#[test]
+fn mild_model_skew_detects_and_calibrates_without_quarantine() {
+    let mut cfg = config();
+    cfg.force_split = Some(4); // a real client prefix feeds the watchdog
+    let coord = Coordinator::new(cfg).unwrap();
+    coord.set_model_skew(1.4, 1.4);
+
+    let n = 32;
+    let out = coord.serve(requests(n)).unwrap();
+    assert!(out.iter().all(InferenceOutcome::is_ok));
+    let m = coord.metrics.snapshot();
+    assert_eq!(
+        m.drift_detect_requests, n as u64,
+        "every 1.4x residual is outside the 25% band"
+    );
+    assert!(m.drift_calibrations >= 1, "EWMA must cross the band edge");
+    assert_eq!(m.drift_quarantines, 0, "1.4x is below the 1.75x quarantine ratio");
+    assert_eq!(coord.drift_state(), DriftState::Calibrated);
+    assert!(
+        m.calibration_factor > 1.25 && m.calibration_factor < 1.45,
+        "calibration factor {} must track the injected 1.4x skew",
+        m.calibration_factor
+    );
+}
+
+#[test]
+fn heavy_model_skew_quarantines_to_conservative_policy() {
+    let mut cfg = config();
+    // Well below the FCC/FISC crossover (~130 Mbps): the policy decides
+    // FISC, so every request runs a client prefix and feeds the
+    // watchdog, and the quarantine override (policy decisions only) is
+    // reachable.
+    cfg.env = TransmitEnv::with_effective_rate(40.0e6, 0.78);
+    let coord = Coordinator::new(cfg).unwrap();
+    let n_layers = coord.partitioner().num_layers();
+    coord.set_model_skew(2.0, 2.0);
+
+    let out = coord.serve(requests(24)).unwrap();
+    assert!(out.iter().all(|o| !o.is_failed()));
+    let m = coord.metrics.snapshot();
+    assert!(m.drift_detect_requests >= 8);
+    assert!(m.drift_quarantines >= 1, "2x skew must quarantine");
+    assert_eq!(coord.drift_state(), DriftState::Quarantined);
+    assert!(m.drift_quarantined_requests >= 1, "quarantine must reroute requests");
+
+    // Quarantined routing is the conservative policy: one of the two
+    // envelope endpoints, uniformly, until residuals recover.
+    let follow = coord.serve(requests(8)).unwrap();
+    let splits: Vec<usize> = follow
+        .iter()
+        .map(|o| o.response().expect("quarantined request must serve").decided_split)
+        .collect();
+    assert!(
+        splits.iter().all(|s| *s == splits[0]),
+        "conservative routing must be uniform, got {splits:?}"
+    );
+    assert!(
+        splits[0] == 0 || splits[0] == n_layers,
+        "conservative split must be an envelope endpoint, got {}",
+        splits[0]
+    );
+}
+
+#[test]
+fn model_skew_quarantine_is_isolated_to_its_own_shard() {
+    // Even ids report the victim's class (0.78 W), odd ids the
+    // sibling's — both well on the FISC side so every request feeds its
+    // shard's watchdog.
+    let mk_reqs = || {
+        let mut reqs = requests(16);
+        for (i, r) in reqs.iter_mut().enumerate() {
+            let p_tx = if i % 2 == 0 { 0.78 } else { 1.28 };
+            r.env = Some(TransmitEnv::with_effective_rate(40.0e6, p_tx));
+        }
+        reqs
+    };
+    let envs = [
+        TransmitEnv::with_effective_rate(40.0e6, 0.78),
+        TransmitEnv::with_effective_rate(40.0e6, 1.28),
+    ];
+    let build = || ServingTier::new(ServingTierConfig::per_class(config(), &envs)).unwrap();
+
+    let skewed = build();
+    skewed.shards()[0].set_model_skew(2.0, 2.0);
+    let reference = build();
+
+    let out_a = skewed.serve(mk_reqs()).unwrap();
+    let out_b = reference.serve(mk_reqs()).unwrap();
+
+    // The victim class detected drift; the sibling class stayed nominal.
+    assert!(skewed.shards()[0].metrics.snapshot().drift_detect_requests >= 1);
+    assert_eq!(
+        skewed.shards()[1].metrics.snapshot().drift_detect_requests,
+        0,
+        "drift detection leaked across shards"
+    );
+    assert_eq!(skewed.shards()[1].drift_state(), DriftState::Nominal);
+
+    // The unaffected class is bit-identical to the no-skew reference.
+    for (i, (x, y)) in out_a.iter().zip(&out_b).enumerate() {
+        if i % 2 == 0 {
+            continue;
+        }
+        let rx = x.response().expect("sibling request must serve");
+        let ry = y.response().expect("reference request must serve");
+        assert_eq!(rx.split, ry.split, "sibling split perturbed by foreign skew");
+        assert_eq!(rx.decided_split, ry.decided_split);
+        assert_eq!(rx.logits, ry.logits, "sibling logits perturbed by foreign skew");
+        assert_eq!(rx.client_energy_j.to_bits(), ry.client_energy_j.to_bits());
+        assert_eq!(rx.transmit_energy_j.to_bits(), ry.transmit_energy_j.to_bits());
+    }
+}

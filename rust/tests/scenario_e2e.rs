@@ -20,7 +20,8 @@ use std::path::{Path, PathBuf};
 use neupart::channel::{ScenarioConfig, ScenarioModel, TracePoint, TraceScenario, TransmitEnv};
 use neupart::compress::jpeg::compress_rgb;
 use neupart::coordinator::{
-    Coordinator, CoordinatorConfig, ExecutorBackend, InferenceRequest, RedecideConfig, RetryPolicy,
+    Coordinator, CoordinatorConfig, ExecutorBackend, HealthConfig, InferenceRequest,
+    RedecideConfig, RetryPolicy,
 };
 use neupart::corpus::Corpus;
 use neupart::partition::{DelayModel, Partitioner};
@@ -52,6 +53,7 @@ fn config() -> CoordinatorConfig {
         scenario: None,
         redecide: None,
         retry: RetryPolicy::default(),
+        health: HealthConfig::default(),
         seed: 42,
     }
 }

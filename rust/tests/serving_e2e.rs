@@ -6,7 +6,7 @@ use std::path::{Path, PathBuf};
 
 use neupart::channel::TransmitEnv;
 use neupart::coordinator::{
-    Coordinator, CoordinatorConfig, ExecutorBackend, InferenceRequest, RetryPolicy,
+    Coordinator, CoordinatorConfig, ExecutorBackend, HealthConfig, InferenceRequest, RetryPolicy,
 };
 use neupart::corpus::Corpus;
 
@@ -34,6 +34,7 @@ fn config(network: &str, force: Option<usize>) -> CoordinatorConfig {
         scenario: None,
         redecide: None,
         retry: RetryPolicy::default(),
+        health: HealthConfig::default(),
         seed: 5,
     }
 }
