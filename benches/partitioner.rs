@@ -16,21 +16,67 @@
 //! fleet's shared engines (`slo_from_import_ns`): if a v2 import ever
 //! stops reconstructing its SLO engine, this bench aborts and CI fails.
 //!
+//! The lane-kernel section compares the per-item `decide` loop against
+//! one `decide_lane_batch` call over reused struct-of-arrays lanes
+//! (`decisions_per_sec_scalar` vs `decisions_per_sec_simd`), asserts the
+//! kernel wins, and — through a counting global allocator — asserts the
+//! steady-state batch loop performs ZERO allocations. The fleet section
+//! prices the v3 boot artifact: a 10⁴-entry fleet booted from the binary
+//! blob (`fleet_boot_ns`, `v3_blob_bytes`) against a full v2 JSON import
+//! (`fleet_import_v2_ns`), asserting the ≥20× boot speedup.
+//!
 //! Set `NEUPART_BENCH_SMOKE=1` for the CI smoke run (shorter budgets).
 
+use std::alloc::{GlobalAlloc, Layout, System};
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
 
 use neupart::bench::Bencher;
 use neupart::channel::TransmitEnv;
 use neupart::cnn::Network;
 use neupart::cnnergy::CnnErgy;
 use neupart::partition::{
-    decide_with_slo_scan, device_class, DecisionContext, DelayModel, EnergyPolicy, EnvelopeTable,
-    PartitionPolicy, Partitioner, PolicyRegistry, SloPartitioner, SloPolicy, FCC,
+    decide_with_slo_scan, device_class, BatchLanes, DecisionContext, DelayModel, EnergyPolicy,
+    EnvelopeTable, LazyFleet, PartitionPolicy, Partitioner, PolicyRegistry, SloPartitioner,
+    SloPolicy, FCC,
 };
 use neupart::util::json::Value;
 
 const BATCH: usize = 1024;
+
+/// Synthetic fleet size for the v3-boot vs v2-import comparison (the
+/// acceptance floor is 10⁴ device classes).
+const FLEET_ENTRIES: usize = 10_000;
+
+/// System allocator wrapped in a call counter: the steady-state batch
+/// decision loop asserts a ZERO allocation delta, turning any per-call
+/// re-allocation regression in the lane kernel into a hard bench
+/// failure. Only `alloc`/`realloc` count — frees are irrelevant to the
+/// "does the hot loop touch the allocator" question.
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
 
 /// SLO cycle for the constrained benches: loose (unconstrained optimum
 /// feasible — the O(log L) hot path), binding (frontier walk), and
@@ -245,22 +291,177 @@ fn main() {
          {table_v2_bytes} bytes, imported-fleet slo decision {slo_from_import_ns:.0} ns"
     );
 
+    // ---- Lane kernel: per-item decide loop vs decide_lane_batch ----
+    // Per-request envs vary both rate and transmit power (a drained
+    // γ-lane batch from heterogeneous clients), so neither path gets a
+    // branch-predictable γ. Scalar is the per-item trait path the
+    // serving coordinator used before the kernel; the batch path is one
+    // `decide_lane_batch` call over reused struct-of-arrays lanes
+    // (breakpoint counting autovectorizes — `Envelope::segment_index_batch`).
+    let lane_envs: Vec<TransmitEnv> = (0..BATCH)
+        .map(|i| {
+            let f = i as f64 / BATCH as f64;
+            TransmitEnv::with_effective_rate(2.0e6 + 148.0e6 * f, 0.5 + f)
+        })
+        .collect();
+    let lane_bits: Vec<f64> = (0..BATCH)
+        .map(|i| p.transmit_bits(FCC, 0.40 + 0.55 * i as f64 / BATCH as f64))
+        .collect();
+    let mut out = Vec::with_capacity(BATCH);
+    let scalar_ns = b
+        .bench_elems(&format!("lane_scalar{BATCH}/alexnet"), BATCH as u64, || {
+            out.clear();
+            for (&bits, env) in lane_bits.iter().zip(&lane_envs) {
+                out.push(savings_policy.decide(&DecisionContext::from_input_bits(bits, *env)));
+            }
+            out.len()
+        })
+        .mean_ns
+        / BATCH as f64;
+    let mut lanes = BatchLanes::new();
+    let lane_ctx = DecisionContext::from_input_bits(0.0, env);
+    let simd_ns = b
+        .bench_elems(&format!("lane_batch{BATCH}/alexnet"), BATCH as u64, || {
+            lanes.clear();
+            for (&bits, env) in lane_bits.iter().zip(&lane_envs) {
+                lanes.push(bits, *env);
+            }
+            savings_policy.decide_lane_batch(&mut lanes, &lane_ctx, &mut out);
+            out.len()
+        })
+        .mean_ns
+        / BATCH as f64;
+    let decisions_per_sec_scalar = 1e9 / scalar_ns;
+    let decisions_per_sec_simd = 1e9 / simd_ns;
+    assert!(
+        decisions_per_sec_simd > decisions_per_sec_scalar,
+        "lane-batch kernel must beat the per-item decide loop \
+         ({decisions_per_sec_simd:.0}/s vs {decisions_per_sec_scalar:.0}/s)"
+    );
+
+    // Steady state must be allocation-free: the lanes and the output
+    // vector hold their warmed capacity, and on the envelope path every
+    // `Decision` carries empty per-candidate vectors — so the loop below
+    // must never touch the allocator. One stray per-call allocation is a
+    // regression this bench turns into a hard failure.
+    let mut acc = 0.0;
+    let allocs_before = ALLOC_CALLS.load(Ordering::Relaxed);
+    for _ in 0..64 {
+        lanes.clear();
+        for (&bits, env) in lane_bits.iter().zip(&lane_envs) {
+            lanes.push(bits, *env);
+        }
+        savings_policy.decide_lane_batch(&mut lanes, &lane_ctx, &mut out);
+        acc += out[0].cost_j;
+    }
+    let steady_allocs = ALLOC_CALLS.load(Ordering::Relaxed) - allocs_before;
+    std::hint::black_box(acc);
+    assert_eq!(
+        steady_allocs, 0,
+        "batch decision path allocated {steady_allocs} times across 64 steady-state batches"
+    );
+    println!(
+        "  lane kernel: scalar {scalar_ns:.1} ns/dec -> batch {simd_ns:.1} ns/dec \
+         ({:.2}x), 0 steady-state allocations",
+        scalar_ns / simd_ns
+    );
+
+    // ---- Fleet artifact: 10^4-entry v3 blob boot vs v2 JSON import ----
+    // The boot path is the zero-copy claim made literal: open + header
+    // and checksum validation is O(blob bytes) streaming work with no
+    // per-entry JSON parse and no engine build — entries materialize
+    // lazily on first lookup — while the v2 import pays both for every
+    // entry up front.
+    let author = PolicyRegistry::new();
+    for i in 0..FLEET_ENTRIES {
+        let mut t = entry.table().clone();
+        t.device = format!("synth-{i:05}");
+        t.p_tx_w = 0.5 + i as f64 * 1e-4;
+        author.insert_table(t);
+    }
+    assert_eq!(author.len(), FLEET_ENTRIES, "synthetic fleet authoring");
+    let v2_json = author.export_json();
+    let v3_blob = author.export_v3();
+    let v3_blob_bytes = v3_blob.len();
+
+    // v2 import: parse + validate + rebuild engines for every entry.
+    // One-shot timing — it sits orders of magnitude above bench noise.
+    let t0 = Instant::now();
+    let v2_client = PolicyRegistry::new();
+    let import_report = v2_client.import_json(&v2_json).expect("v2 fleet import");
+    let fleet_import_v2_ns = t0.elapsed().as_nanos() as f64;
+    assert_eq!(import_report.imported, FLEET_ENTRIES);
+
+    // v3 boot: validate the blob, leave every entry lazy.
+    let blob_arc: Arc<[u8]> = v3_blob.into();
+    let fleet_boot_ns = b
+        .bench(&format!("fleet_boot_v3/synth{FLEET_ENTRIES}"), || {
+            LazyFleet::boot(blob_arc.clone()).expect("fleet boot")
+        })
+        .mean_ns;
+    let fleet = LazyFleet::boot(blob_arc).expect("fleet boot");
+    assert_eq!(fleet.blob().len(), FLEET_ENTRIES);
+    let booted = fleet
+        .get_or_load("alexnet", "synth-00000")
+        .expect("lazy load")
+        .expect("fleet entry present");
+    let eager = v2_client.get("alexnet", "synth-00000").expect("imported entry");
+    assert_eq!(
+        booted.table(),
+        eager.table(),
+        "lazy v3 boot and eager v2 import must materialize identical tables"
+    );
+    let fleet_boot_speedup = fleet_import_v2_ns / fleet_boot_ns;
+    assert!(
+        fleet_boot_speedup >= 20.0,
+        "v3 boot must be >= 20x faster than the v2 JSON import \
+         (boot {fleet_boot_ns:.0} ns vs import {fleet_import_v2_ns:.0} ns)"
+    );
+    println!(
+        "  fleet({FLEET_ENTRIES}): v3 blob {v3_blob_bytes} bytes boots in {:.2} ms \
+         vs v2 import {:.0} ms -> {fleet_boot_speedup:.0}x",
+        fleet_boot_ns / 1e6,
+        fleet_import_v2_ns / 1e6
+    );
+
     b.write_csv(std::path::Path::new("results/bench_partitioner.csv"))
         .expect("csv");
-    b.write_json(
-        std::path::Path::new("results/BENCH_partition.json"),
-        vec![
-            ("partition".to_string(), Value::Obj(summary)),
-            ("batch_size".to_string(), Value::Num(BATCH as f64)),
-            ("registry_lookup_ns".to_string(), Value::Num(registry_lookup_ns)),
-            ("table_bytes".to_string(), Value::Num(table_bytes as f64)),
-            ("table_v2_bytes".to_string(), Value::Num(table_v2_bytes as f64)),
-            (
-                "slo_from_import_ns".to_string(),
-                Value::Num(slo_from_import_ns),
-            ),
-        ],
-    )
-    .expect("json");
-    println!("wrote results/bench_partitioner.csv and results/BENCH_partition.json");
+    let extras = vec![
+        ("partition".to_string(), Value::Obj(summary)),
+        ("batch_size".to_string(), Value::Num(BATCH as f64)),
+        ("registry_lookup_ns".to_string(), Value::Num(registry_lookup_ns)),
+        ("table_bytes".to_string(), Value::Num(table_bytes as f64)),
+        ("table_v2_bytes".to_string(), Value::Num(table_v2_bytes as f64)),
+        (
+            "slo_from_import_ns".to_string(),
+            Value::Num(slo_from_import_ns),
+        ),
+        (
+            "decisions_per_sec_scalar".to_string(),
+            Value::Num(decisions_per_sec_scalar),
+        ),
+        (
+            "decisions_per_sec_simd".to_string(),
+            Value::Num(decisions_per_sec_simd),
+        ),
+        ("fleet_entries".to_string(), Value::Num(FLEET_ENTRIES as f64)),
+        ("fleet_boot_ns".to_string(), Value::Num(fleet_boot_ns)),
+        ("fleet_import_v2_ns".to_string(), Value::Num(fleet_import_v2_ns)),
+        (
+            "fleet_boot_speedup_vs_v2".to_string(),
+            Value::Num(fleet_boot_speedup),
+        ),
+        ("v3_blob_bytes".to_string(), Value::Num(v3_blob_bytes as f64)),
+    ];
+    // Written twice: under results/ (the CI artifact convention) and at
+    // the repo root, where the committed copy records the perf
+    // trajectory PR over PR.
+    b.write_json(std::path::Path::new("results/BENCH_partition.json"), extras.clone())
+        .expect("json");
+    b.write_json(std::path::Path::new("BENCH_partition.json"), extras)
+        .expect("json");
+    println!(
+        "wrote results/bench_partitioner.csv, results/BENCH_partition.json \
+         and BENCH_partition.json"
+    );
 }

@@ -26,6 +26,11 @@
 //! closed-loop run (which must shed nothing), and the drift watchdog's
 //! detection/calibration under an injected 2× model skew.
 //!
+//! Also boots a cold tier from the v3 binary fleet blob and serves the
+//! determinism workload through it, pricing exactly the blob-open step
+//! a restarting coordinator pays before admitting traffic
+//! (`cold_restart_boot_ns`, `cold_restart_blob_bytes`).
+//!
 //! Emits machine-readable `results/BENCH_serving.json`
 //! (`clean_serve_ns`, `fallback_fisc_ns`, `retry_overhead_ns`,
 //! `loadgen_p50_ns`/`p99_ns`/`p999_ns`, `throughput_rps`, `shed_rate`,
@@ -34,7 +39,9 @@
 //! `redecisions_suppressed`, `energy_delta_vs_frozen_j`,
 //! `scenario_step_ns`, `breaker_trip_to_reopen_s`,
 //! `brownout_shed_rate`, `drift_detect_requests`,
-//! `calibration_factor`).
+//! `calibration_factor`, `cold_restart_boot_ns`,
+//! `cold_restart_blob_bytes`) and mirrors it to the repo-root
+//! `BENCH_serving.json` committed with each PR.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -51,7 +58,7 @@ use neupart::coordinator::{
     ServingTierConfig,
 };
 use neupart::corpus::Corpus;
-use neupart::partition::DelayModel;
+use neupart::partition::{DelayModel, PolicyRegistry};
 use neupart::util::json::Value;
 
 fn requests(n: usize) -> Vec<InferenceRequest> {
@@ -476,6 +483,37 @@ fn main() {
         det_clients, det_b.shed, det_b.fallback_fisc
     );
 
+    // ---- Cold restart: boot a fresh tier from the v3 fleet blob ----
+    // The zero-copy fleet artifact end-to-end: a cold ServingTier
+    // restart opens the blob with one header+checksum validation (no
+    // per-entry JSON parse, no engine builds beyond the shard keys) and
+    // then serves the same load — `boot_ns` prices exactly the
+    // blob-open step a restarting coordinator pays before admitting
+    // traffic.
+    let author = PolicyRegistry::new();
+    for env in det_cfg.class_envs() {
+        author
+            .get_or_build("tiny_alexnet", &env)
+            .expect("author fleet entry");
+    }
+    let fleet_blob = author.export_v3();
+    let cold = loadgen::run_cold_restart(
+        ServingTierConfig::per_class(shard_config(2, None), &det_cfg.class_envs()),
+        &fleet_blob,
+        &det_cfg,
+    )
+    .expect("cold restart run");
+    assert_eq!(cold.report.completed + cold.report.shed, cold.report.clients);
+    assert_eq!(cold.fleet_entries, det_cfg.mix.len());
+    let cold_restart_boot_ns = cold.boot_ns as f64;
+    println!(
+        "cold restart: {} fleet entries ({} bytes) booted in {:.1} us, then {:.0} req/s",
+        cold.fleet_entries,
+        cold.blob_bytes,
+        cold_restart_boot_ns / 1e3,
+        cold.report.throughput_rps
+    );
+
     // Single-shard vs multi-shard admission throughput, same per-shard
     // resources (1 worker, 1-thread executors) and a forced-FISC workload
     // so each shard serializes on its own client executor: the shard
@@ -523,73 +561,84 @@ fn main() {
         samples: 1,
         elems: None,
     });
-    b.write_json(
-        std::path::Path::new("results/BENCH_serving.json"),
-        vec![
-            (
-                "backend".to_string(),
-                Value::Str(format!("{backend:?}").to_lowercase()),
-            ),
-            ("requests".to_string(), Value::Num(n as f64)),
-            ("clean_serve_ns".to_string(), Value::Num(clean_serve_ns)),
-            ("fallback_fisc_ns".to_string(), Value::Num(fallback_fisc_ns)),
-            ("retry_overhead_ns".to_string(), Value::Num(retry_overhead_ns)),
-            (
-                "loadgen_clients".to_string(),
-                Value::Num(report.clients as f64),
-            ),
-            ("loadgen_p50_ns".to_string(), Value::Num(report.p50_ns)),
-            ("loadgen_p99_ns".to_string(), Value::Num(report.p99_ns)),
-            ("loadgen_p999_ns".to_string(), Value::Num(report.p999_ns)),
-            (
-                "throughput_rps".to_string(),
-                Value::Num(report.throughput_rps),
-            ),
-            ("shed_rate".to_string(), Value::Num(report.shed_rate)),
-            ("shard_count".to_string(), Value::Num(shard_count as f64)),
-            ("lane_occupancy".to_string(), Value::Obj(lanes)),
-            (
-                "loadgen_deterministic".to_string(),
-                Value::Bool(deterministic),
-            ),
-            (
-                "shard_speedup_admission".to_string(),
-                Value::Num(shard_speedup),
-            ),
-            (
-                "redecisions_fired".to_string(),
-                Value::Num(m_fade.redecisions_fired as f64),
-            ),
-            (
-                "redecisions_suppressed".to_string(),
-                Value::Num(m_graze.redecisions_suppressed as f64),
-            ),
-            (
-                "energy_delta_vs_frozen_j".to_string(),
-                Value::Num(m_fade.energy_delta_vs_frozen_j),
-            ),
-            (
-                "scenario_step_ns".to_string(),
-                Value::Num(scenario_step_ns),
-            ),
-            (
-                "breaker_trip_to_reopen_s".to_string(),
-                Value::Num(breaker_trip_to_reopen_s),
-            ),
-            (
-                "brownout_shed_rate".to_string(),
-                Value::Num(brownout_shed_rate),
-            ),
-            (
-                "drift_detect_requests".to_string(),
-                Value::Num(m_drift.drift_detect_requests as f64),
-            ),
-            (
-                "calibration_factor".to_string(),
-                Value::Num(m_drift.calibration_factor),
-            ),
-        ],
-    )
-    .expect("json");
-    println!("wrote results/BENCH_serving.json");
+    let extras = vec![
+        (
+            "backend".to_string(),
+            Value::Str(format!("{backend:?}").to_lowercase()),
+        ),
+        ("requests".to_string(), Value::Num(n as f64)),
+        ("clean_serve_ns".to_string(), Value::Num(clean_serve_ns)),
+        ("fallback_fisc_ns".to_string(), Value::Num(fallback_fisc_ns)),
+        ("retry_overhead_ns".to_string(), Value::Num(retry_overhead_ns)),
+        (
+            "loadgen_clients".to_string(),
+            Value::Num(report.clients as f64),
+        ),
+        ("loadgen_p50_ns".to_string(), Value::Num(report.p50_ns)),
+        ("loadgen_p99_ns".to_string(), Value::Num(report.p99_ns)),
+        ("loadgen_p999_ns".to_string(), Value::Num(report.p999_ns)),
+        (
+            "throughput_rps".to_string(),
+            Value::Num(report.throughput_rps),
+        ),
+        ("shed_rate".to_string(), Value::Num(report.shed_rate)),
+        ("shard_count".to_string(), Value::Num(shard_count as f64)),
+        ("lane_occupancy".to_string(), Value::Obj(lanes)),
+        (
+            "loadgen_deterministic".to_string(),
+            Value::Bool(deterministic),
+        ),
+        (
+            "shard_speedup_admission".to_string(),
+            Value::Num(shard_speedup),
+        ),
+        (
+            "redecisions_fired".to_string(),
+            Value::Num(m_fade.redecisions_fired as f64),
+        ),
+        (
+            "redecisions_suppressed".to_string(),
+            Value::Num(m_graze.redecisions_suppressed as f64),
+        ),
+        (
+            "energy_delta_vs_frozen_j".to_string(),
+            Value::Num(m_fade.energy_delta_vs_frozen_j),
+        ),
+        (
+            "scenario_step_ns".to_string(),
+            Value::Num(scenario_step_ns),
+        ),
+        (
+            "breaker_trip_to_reopen_s".to_string(),
+            Value::Num(breaker_trip_to_reopen_s),
+        ),
+        (
+            "brownout_shed_rate".to_string(),
+            Value::Num(brownout_shed_rate),
+        ),
+        (
+            "drift_detect_requests".to_string(),
+            Value::Num(m_drift.drift_detect_requests as f64),
+        ),
+        (
+            "calibration_factor".to_string(),
+            Value::Num(m_drift.calibration_factor),
+        ),
+        (
+            "cold_restart_boot_ns".to_string(),
+            Value::Num(cold_restart_boot_ns),
+        ),
+        (
+            "cold_restart_blob_bytes".to_string(),
+            Value::Num(cold.blob_bytes as f64),
+        ),
+    ];
+    // Written twice: under results/ (the CI artifact convention) and at
+    // the repo root, where the committed copy records the perf
+    // trajectory PR over PR.
+    b.write_json(std::path::Path::new("results/BENCH_serving.json"), extras.clone())
+        .expect("json");
+    b.write_json(std::path::Path::new("BENCH_serving.json"), extras)
+        .expect("json");
+    println!("wrote results/BENCH_serving.json and BENCH_serving.json");
 }

@@ -49,13 +49,14 @@ use anyhow::{anyhow, Result};
 
 use crate::channel::{TraceScenario, TransmitEnv};
 use crate::corpus::Corpus;
+use crate::partition::LazyFleet;
 use crate::util::rng::Rng;
 use crate::util::stats::quantile;
 
 use super::health::ShedReason;
 use super::request::{InferenceOutcome, InferenceRequest};
 use super::server::Admit;
-use super::tier::ServingTier;
+use super::tier::{ServingTier, ServingTierConfig};
 
 /// How simulated clients arrive at the front door.
 #[derive(Clone, Debug)]
@@ -358,6 +359,51 @@ pub fn run(tier: &ServingTier, cfg: &LoadGenConfig) -> Result<LoadReport> {
     })
 }
 
+/// What one cold-restart run measured: the artifact-boot cost of a
+/// coordinator coming back under traffic, plus the load run it then
+/// served.
+#[derive(Clone, Debug)]
+pub struct ColdRestartReport {
+    /// [`LazyFleet::boot`] cost — open + header/checksum/offsets
+    /// validation over the whole fleet blob — in nanoseconds. The v3
+    /// artifact's entire contribution to a cold restart; entry decoding
+    /// is lazy and shows up (per shard key only) in tier construction.
+    pub boot_ns: u64,
+    /// Entries the blob carries (the whole fleet)...
+    pub fleet_entries: usize,
+    /// ...vs entries the tier actually decoded (its shard keys).
+    pub materialized_entries: usize,
+    /// Flat artifact size, bytes.
+    pub blob_bytes: usize,
+    /// The load run served immediately after the restart.
+    pub report: LoadReport,
+}
+
+/// Cold-restart harness: "restart" a serving tier from the v3 fleet
+/// blob — boot is timed separately from shard construction — then
+/// immediately drive `cfg` traffic through the freshly booted tier.
+/// This is the scenario the zero-copy artifact exists for: the fleet's
+/// 10⁴+ entries cost a header/checksum validation at boot, and only the
+/// tier's own shard keys are ever decoded.
+pub fn run_cold_restart(
+    tier_config: ServingTierConfig,
+    blob: &[u8],
+    cfg: &LoadGenConfig,
+) -> Result<ColdRestartReport> {
+    let t0 = Instant::now();
+    let fleet = LazyFleet::boot(blob.to_vec())?;
+    let boot_ns = t0.elapsed().as_nanos() as u64;
+    let tier = ServingTier::with_fleet(tier_config, &fleet)?;
+    let report = run(&tier, cfg)?;
+    Ok(ColdRestartReport {
+        boot_ns,
+        fleet_entries: fleet.blob().len(),
+        materialized_entries: fleet.registry().len(),
+        blob_bytes: fleet.blob().blob_bytes(),
+        report,
+    })
+}
+
 /// Closed loop: `concurrency` client threads, each one outstanding
 /// request at a time, over the id range `[range.0, range.1)`. Client ids
 /// are strided across threads, so the set of requests (and therefore the
@@ -618,6 +664,34 @@ mod tests {
         assert_eq!(burst.shed_infeasible, burst.shed);
         assert_eq!(burst.shed_overflow + burst.shed_brownout, 0);
         assert_eq!(closed.ok, burst.ok);
+    }
+
+    #[test]
+    fn cold_restart_from_blob_serves_identically() {
+        let mut cfg = LoadGenConfig::table_iv_wlan(80, 17);
+        cfg.infeasible_frac = 0.1;
+        cfg.arrival = ArrivalModel::Closed { concurrency: 3 };
+        let warm = run(&tier_for(&cfg), &cfg).unwrap();
+        // Author the fleet artifact for every class in the mix.
+        let authoring = crate::partition::PolicyRegistry::new();
+        for env in cfg.class_envs() {
+            authoring.get_or_build("tiny_alexnet", &env).unwrap();
+        }
+        let blob = authoring.export_v3();
+        let cold = run_cold_restart(
+            ServingTierConfig::per_class(base_config(), &cfg.class_envs()),
+            &blob,
+            &cfg,
+        )
+        .unwrap();
+        // The restarted tier draws the identical request set and decides
+        // it off blob-decoded tables: same shed/ok accounting.
+        assert_eq!(cold.report.shed, warm.shed);
+        assert_eq!(cold.report.ok, warm.ok);
+        assert_eq!(cold.report.completed, warm.completed);
+        assert_eq!(cold.fleet_entries, cfg.mix.len());
+        assert_eq!(cold.materialized_entries, cfg.mix.len());
+        assert!(cold.blob_bytes > 0);
     }
 
     #[test]

@@ -238,7 +238,7 @@ pub use health::{
     BreakerConfig, BreakerState, BrownoutConfig, CircuitBreaker, DriftState, DriftWatchdog,
     HealthConfig, RemoteGate, ShedReason, WatchdogConfig,
 };
-pub use loadgen::{ArrivalModel, LoadGenConfig, LoadReport};
+pub use loadgen::{ArrivalModel, ColdRestartReport, LoadGenConfig, LoadReport};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use request::{InferenceFailure, InferenceOutcome, InferenceRequest, InferenceResponse};
 pub use retry::{RetryPolicy, RetryVerdict};

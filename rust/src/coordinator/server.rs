@@ -80,11 +80,11 @@ use crate::channel::{
 };
 use crate::cnn::Network;
 use crate::cnnergy::{with_global_schedule_cache, CnnErgy, NetworkProfile};
-use crate::compress::jpeg::compress_rgb;
+use crate::compress::jpeg::{compress_rgb, JpegStats};
 use crate::compress::rlc;
 use crate::config::Config;
 use crate::partition::{
-    device_class, CalibrationCell, Decision, DecisionContext, DelayModel, EnergyPolicy,
+    device_class, BatchLanes, CalibrationCell, Decision, DecisionContext, DelayModel, EnergyPolicy,
     PartitionPolicy, Partitioner, PolicyRegistry, SloPartitioner, FISC_OUTPUT_BITS,
 };
 use crate::util::rng::Rng;
@@ -221,6 +221,18 @@ struct Admitted {
     req: InferenceRequest,
     env: TransmitEnv,
     reply: Sender<InferenceOutcome>,
+}
+
+/// Worker-owned scratch for the admitted-batch path: the probe results,
+/// the struct-of-arrays request lanes and the decision buffer, all
+/// reused batch to batch so the steady-state decision loop is
+/// allocation-free (each buffer grows to the high-water batch size
+/// once, then stays warm).
+#[derive(Default)]
+struct BatchScratch {
+    probes: Vec<JpegStats>,
+    lanes: BatchLanes,
+    decisions: Vec<Decision>,
 }
 
 /// One serving shard (see module docs): the engines, queue, executors and
@@ -645,6 +657,7 @@ impl CoordinatorShard {
         let client = self.client.handle();
         let batch_max = self.config.batch_max.max(1);
         let preferred = worker_idx % self.admission_buckets();
+        let mut scratch = BatchScratch::default();
         while let Some((bucket, batch)) = self.batcher.take_batch_pinned(preferred, batch_max) {
             // Re-fetched per batch so a replaced cloud pool takes effect
             // without restarting the worker.
@@ -656,7 +669,8 @@ impl CoordinatorShard {
                 routes.push((admitted.reply, queued_for));
             }
             self.metrics.record_batch(bucket, items.len());
-            let outcomes = self.process_admitted_batch(bucket, &items, &client, &cloud);
+            let outcomes =
+                self.process_admitted_batch(bucket, &items, &mut scratch, &client, &cloud);
             for (mut outcome, (reply, queued_for)) in outcomes.into_iter().zip(routes) {
                 if let InferenceOutcome::Ok(r) | InferenceOutcome::Degraded(r) = &mut outcome {
                     r.t_queue = queued_for;
@@ -789,35 +803,56 @@ impl CoordinatorShard {
     }
 
     /// Serve one γ-coherent admission batch: every request carries its own
-    /// channel state, but all states share one envelope segment, so each
-    /// decision skips the breakpoint search while staying bit-for-bit
-    /// equal to the per-request path. Each request resolves independently
-    /// — one failure never aborts its batch.
+    /// channel state, but all states share one envelope segment, so the
+    /// whole drained batch is decided in ONE struct-of-arrays kernel call
+    /// ([`PartitionPolicy::decide_lane_batch`] over contiguous γ lanes)
+    /// while staying bit-for-bit equal to the per-request path. The
+    /// worker-owned `scratch` keeps the probe/lane/decision buffers warm
+    /// across batches, so the steady-state decision loop never allocates.
+    /// Each request still resolves independently — one failure never
+    /// aborts its batch.
     fn process_admitted_batch(
         &self,
         bucket: usize,
         items: &[(InferenceRequest, TransmitEnv)],
+        scratch: &mut BatchScratch,
         client: &ExecutorHandle,
         cloud: &ExecutorHandle,
     ) -> Vec<InferenceOutcome> {
         let t_start = Instant::now();
+        let t_decide_start = Instant::now();
+        // Probe every input (Alg. 2 line 1), then decide the batch in one
+        // kernel call over the struct-of-arrays γ lanes.
+        scratch.probes.clear();
+        scratch.probes.extend(
+            items.iter().map(|(req, _)| {
+                compress_rgb(&req.pixels, req.width, req.height, self.config.jpeg_quality)
+            }),
+        );
+        scratch.lanes.clear();
+        for ((_, env), probe) in items.iter().zip(&scratch.probes) {
+            scratch.lanes.push(probe.bits as f64, *env);
+        }
+        let ctx = DecisionContext::from_input_bits(0.0, self.config.env);
+        self.policy
+            .decide_lane_batch(&mut scratch.lanes, &ctx, &mut scratch.decisions);
+        // The whole batch shares one probe+decision pass; attribute the
+        // per-batch cost evenly so per-request accounting stays meaningful.
+        let t_decide = t_decide_start.elapsed() / items.len().max(1) as u32;
         items
             .iter()
-            .map(|(req, env)| {
-                let t_decide_start = Instant::now();
-                let probe =
-                    compress_rgb(&req.pixels, req.width, req.height, self.config.jpeg_quality);
+            .zip(&scratch.probes)
+            .zip(&scratch.decisions)
+            .map(|(((req, env), probe), decision)| {
                 let segment = self.gamma_segment(env);
-                let mut ctx = DecisionContext::from_input_bits(probe.bits as f64, *env);
-                if let (true, Some(seg)) = (self.config.gamma_coherent, segment) {
-                    debug_assert_eq!(seg, bucket, "request served outside its γ lane");
-                    ctx = ctx.with_segment(seg);
+                if self.config.gamma_coherent {
+                    if let Some(seg) = segment {
+                        debug_assert_eq!(seg, bucket, "request served outside its γ lane");
+                    }
                 }
-                let decision = self.policy.decide(&ctx);
-                let t_decide = t_decide_start.elapsed();
                 self.execute(
                     req,
-                    &decision,
+                    decision,
                     probe.bits,
                     probe.sparsity,
                     segment,

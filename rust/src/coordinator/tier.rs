@@ -31,7 +31,7 @@ use std::thread::JoinHandle;
 use anyhow::{anyhow, Context, Result};
 
 use crate::channel::{ChannelStats, TransmitEnv};
-use crate::partition::{device_class, PolicyRegistry};
+use crate::partition::{device_class, LazyFleet, PolicyRegistry};
 
 use super::metrics::MetricsSnapshot;
 use super::request::{InferenceOutcome, InferenceRequest};
@@ -139,6 +139,35 @@ impl ServingTier {
             default_network,
             workers,
         })
+    }
+
+    /// Build the tier from a v3 fleet blob: boot is a header/checksum
+    /// validation ([`LazyFleet::boot`]), then only the entries the
+    /// configured shards actually key — (network, device-class of the
+    /// spec's `P_Tx`) — are decoded out of the blob; the rest of a
+    /// 10⁴-entry fleet stays untouched bytes. This is the cold-restart
+    /// path: a coordinator coming back under traffic pays ~zero for the
+    /// artifact instead of parse-the-world. A key the blob does not
+    /// carry falls back to the analytical build, exactly like a registry
+    /// miss.
+    pub fn with_fleet_blob(
+        config: ServingTierConfig,
+        bytes: impl Into<Arc<[u8]>>,
+    ) -> Result<Self> {
+        let fleet = LazyFleet::boot(bytes).context("booting serving tier from fleet blob")?;
+        Self::with_fleet(config, &fleet)
+    }
+
+    /// Like [`ServingTier::with_fleet_blob`] over an already-booted
+    /// [`LazyFleet`] (share one blob across tiers, or time boot and
+    /// build separately).
+    pub fn with_fleet(config: ServingTierConfig, fleet: &LazyFleet) -> Result<Self> {
+        for spec in &config.shards {
+            fleet
+                .get_or_load(&spec.network, &device_class(spec.env.p_tx_w))
+                .with_context(|| format!("loading fleet entry for {}", spec.network))?;
+        }
+        Self::with_registry(config, fleet.registry())
     }
 
     pub fn shard_count(&self) -> usize {
@@ -331,6 +360,44 @@ mod tests {
             tier.shards()[0].channel_stats().transfers
                 + tier.shards()[1].channel_stats().transfers
         );
+    }
+
+    #[test]
+    fn tier_boots_from_fleet_blob_and_serves() {
+        let envs = [
+            TransmitEnv::with_effective_rate(130.0e6, 0.78),
+            TransmitEnv::with_effective_rate(130.0e6, 1.28),
+        ];
+        // Author the fleet artifact: the two serving classes plus one
+        // entry the tier never keys (it must stay untouched bytes).
+        let authoring = PolicyRegistry::new();
+        for env in &envs {
+            authoring.get_or_build("tiny_alexnet", env).unwrap();
+        }
+        authoring
+            .get_or_build(
+                "tiny_alexnet",
+                &TransmitEnv::with_effective_rate(130.0e6, 2.3),
+            )
+            .unwrap();
+        let blob = authoring.export_v3();
+        let fleet = LazyFleet::boot(blob).unwrap();
+        let tier =
+            ServingTier::with_fleet(ServingTierConfig::per_class(base_config(), &envs), &fleet)
+                .unwrap();
+        // Only the two shard keys materialized out of the 3-entry blob.
+        assert_eq!(fleet.blob().len(), 3);
+        assert_eq!(fleet.registry().len(), 2);
+        let mut reqs = requests(4);
+        for (i, r) in reqs.iter_mut().enumerate() {
+            let p_tx = if i % 2 == 0 { 0.78 } else { 1.28 };
+            r.env = Some(TransmitEnv::with_effective_rate(130.0e6, p_tx));
+        }
+        let outcomes = tier.serve(reqs).unwrap();
+        assert_eq!(outcomes.len(), 4);
+        assert!(outcomes.iter().all(|o| o.is_ok()));
+        assert_eq!(tier.shards()[0].metrics.snapshot().requests, 2);
+        assert_eq!(tier.shards()[1].metrics.snapshot().requests, 2);
     }
 
     #[test]

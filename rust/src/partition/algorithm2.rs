@@ -696,6 +696,123 @@ impl Partitioner {
             ),
         }
     }
+
+    /// Batched [`Envelope::segment_index`] over a contiguous γ lane —
+    /// thin façade over
+    /// [`Envelope::segment_index_batch`](super::envelope::Envelope::segment_index_batch)
+    /// for callers holding the engine, not the envelope.
+    pub fn envelope_segment_batch(&self, gammas: &[f64], out: &mut Vec<usize>) {
+        self.envelope.segment_index_batch(gammas, out);
+    }
+
+    /// The struct-of-arrays batch decision kernel: decide a whole
+    /// admission batch of **per-request channel states** in one call —
+    /// the γ-lane serving path, where a drained batch shares an envelope
+    /// segment but every request carries its own probed volume and
+    /// channel report (contrast [`Partitioner::choose_batch`], which
+    /// amortizes one *shared* env across the batch).
+    ///
+    /// Phase 1 runs branch-light over contiguous lanes: the `B_e` and γ
+    /// vectors, then the batched breakpoint count
+    /// ([`Envelope::segment_index_batch`]) — all autovectorizable.
+    /// Phase 2 re-evaluates each request with the scan's exact cost
+    /// expression and fold, so every decision is **bit-identical** to
+    /// [`Partitioner::choose_split`] at that request's state
+    /// (property-tested), including the degenerate-channel and γ ≤ 0
+    /// fallbacks.
+    ///
+    /// `lanes` doubles as the kernel's reusable scratch (the derived
+    /// lanes live inside it) and `out` is cleared and refilled — in
+    /// steady state the loop is allocation-free (asserted in the
+    /// partitioner bench).
+    pub fn decide_lanes(&self, lanes: &mut BatchLanes, out: &mut Vec<Decision>) {
+        out.clear();
+        out.reserve(lanes.envs.len());
+        lanes.b_e.clear();
+        lanes.b_e.reserve(lanes.envs.len());
+        lanes
+            .b_e
+            .extend(lanes.envs.iter().map(TransmitEnv::effective_bit_rate));
+        lanes.gammas.clear();
+        lanes.gammas.reserve(lanes.envs.len());
+        lanes.gammas.extend(
+            lanes
+                .envs
+                .iter()
+                .zip(&lanes.b_e)
+                .map(|(env, &b_e)| env.p_tx_w / b_e),
+        );
+        self.envelope
+            .segment_index_batch(&lanes.gammas, &mut lanes.segments);
+        for i in 0..lanes.envs.len() {
+            let env = &lanes.envs[i];
+            let b_e = lanes.b_e[i];
+            let gamma = lanes.gammas[i];
+            let input_bits = lanes.input_bits[i];
+            let d = if !(b_e > 0.0) {
+                self.degenerate_decision()
+            } else if !(gamma > 0.0) || self.envelope.num_segments() == 0 {
+                self.scan_decision(input_bits, env, b_e)
+            } else {
+                let fcc_cost = self.cost_at(FCC, input_bits, env, b_e);
+                let (env_split, env_cost) = self.winner_from(
+                    self.envelope.candidates_for_segment(lanes.segments[i]),
+                    env,
+                    b_e,
+                );
+                self.decision_from_winner(fcc_cost, env_split, env_cost, input_bits, env, b_e)
+            };
+            out.push(d);
+        }
+    }
+}
+
+/// Struct-of-arrays request lanes for [`Partitioner::decide_lanes`]: the
+/// caller pushes each request's probed input volume and channel state,
+/// the kernel derives the contiguous `B_e`/γ/segment lanes in place.
+/// Reuse one instance across batches ([`BatchLanes::clear`] keeps every
+/// lane's capacity) and the steady-state batch loop never allocates.
+#[derive(Clone, Debug, Default)]
+pub struct BatchLanes {
+    envs: Vec<TransmitEnv>,
+    input_bits: Vec<f64>,
+    b_e: Vec<f64>,
+    gammas: Vec<f64>,
+    segments: Vec<usize>,
+}
+
+impl BatchLanes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Clear the request lanes, keeping capacity.
+    pub fn clear(&mut self) {
+        self.envs.clear();
+        self.input_bits.clear();
+    }
+
+    /// Append one request.
+    pub fn push(&mut self, input_bits: f64, env: TransmitEnv) {
+        self.envs.push(env);
+        self.input_bits.push(input_bits);
+    }
+
+    pub fn len(&self) -> usize {
+        self.envs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.envs.is_empty()
+    }
+
+    pub fn envs(&self) -> &[TransmitEnv] {
+        &self.envs
+    }
+
+    pub fn input_bits(&self) -> &[f64] {
+        &self.input_bits
+    }
 }
 
 /// A detected γ envelope-segment crossing (see
@@ -825,6 +942,57 @@ mod tests {
         let p = paper_partitioner(&googlenet());
         let d_high = scan(&p, 0.80, &env(80.0, 1.28));
         assert_eq!(d_high.l_opt, FCC);
+    }
+
+    #[test]
+    fn decide_lanes_matches_choose_split_bit_for_bit() {
+        let p = paper_partitioner(&alexnet());
+        // Mixed batch: per-request envs spanning segments, degenerate
+        // channels (B_e = 0, NaN rate), γ ≤ 0 (free radio), breakpoint
+        // ties, plus varied probed volumes.
+        let mut envs: Vec<TransmitEnv> = vec![
+            env(100.0, 1.14),
+            env(0.1, 2.3),
+            env(5000.0, 0.05),
+            env(0.0, 1.0),                                  // degenerate: B_e = 0
+            TransmitEnv::with_effective_rate(f64::NAN, 1.0), // degenerate: NaN rate
+            env(80.0, 0.0),                                 // γ = 0 → scan fallback
+            env(80.0, -1.0),                                // γ < 0 → scan fallback
+        ];
+        // Exact breakpoint ties: γ == breakpoint must pick the same side
+        // in both paths.
+        for &bp in p.envelope().breakpoints() {
+            envs.push(TransmitEnv::with_effective_rate(1.0, bp));
+        }
+        let mut lanes = BatchLanes::new();
+        let mut out = Vec::new();
+        for round in 0..2 {
+            lanes.clear();
+            for (i, e) in envs.iter().enumerate() {
+                let bits = p.input_bits_from_sparsity(0.4 + 0.03 * i as f64);
+                lanes.push(bits, *e);
+            }
+            p.decide_lanes(&mut lanes, &mut out);
+            assert_eq!(out.len(), envs.len());
+            for (i, d) in out.iter().enumerate() {
+                let bits = lanes.input_bits()[i];
+                let single = p.choose_split(bits, &envs[i]);
+                assert_eq!(d.l_opt, single.l_opt, "round {round} req {i}");
+                assert_eq!(
+                    d.cost_j.to_bits(),
+                    single.cost_j.to_bits(),
+                    "round {round} req {i}"
+                );
+                assert_eq!(d.fcc_cost_j.to_bits(), single.fcc_cost_j.to_bits());
+                assert_eq!(d.fisc_cost_j.to_bits(), single.fisc_cost_j.to_bits());
+                assert_eq!(d.client_energy_j.to_bits(), single.client_energy_j.to_bits());
+                assert_eq!(
+                    d.transmit_energy_j.to_bits(),
+                    single.transmit_energy_j.to_bits()
+                );
+                assert_eq!(d.transmit_bits.to_bits(), single.transmit_bits.to_bits());
+            }
+        }
     }
 
     #[test]

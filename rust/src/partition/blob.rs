@@ -1,0 +1,588 @@
+//! The binary fleet artifact (v3): one flat, alignment-safe, versioned
+//! blob holding every [`EnvelopeTable`] of a fleet.
+//!
+//! The v2 JSON artifact ([`super::registry`]) is the *interchange/debug*
+//! form: human-readable, diffable, one table at a time. At fleet scale
+//! (10⁴–10⁶ (device model × radio × network) entries) a coordinator
+//! cannot afford to parse-the-world at every boot, so the v3 blob trades
+//! readability for an O(1) open: header + checksum validation up front,
+//! per-entry decoding deferred until a (network, device-class) is first
+//! served ([`LazyFleet`]). Conversion between v2 and v3 is lossless both
+//! ways — every `f64` is stored as its little-endian bit pattern, so a
+//! table round-tripped through the blob reproduces decisions bit-for-bit
+//! (property-tested).
+//!
+//! ## On-disk layout
+//!
+//! All integers and floats are little-endian; every section is 8-byte
+//! aligned so an aligned mapping of the blob can slice `f64` lanes
+//! in place.
+//!
+//! ```text
+//! offset  size  field
+//! ------  ----  -----------------------------------------------------
+//!      0     4  magic "NPFB"
+//!      4     4  version (u32, = FLEET_BLOB_VERSION = 3)
+//!      8     8  entry count (u64)
+//!     16     8  total length in bytes (u64, must equal the blob size)
+//!     24     8  payload checksum (u64, FNV-1a over bytes[64..])
+//!     32    32  reserved (zero)
+//!     64   16k  offsets table: k × (entry offset u64, entry length u64)
+//!      …     …  entry records, 8-byte aligned, non-overlapping
+//! ```
+//!
+//! Each entry record:
+//!
+//! ```text
+//! offset  size  field
+//! ------  ----  -----------------------------------------------------
+//!      0     4  network name length (u32, bytes)
+//!      4     4  device-class name length (u32, bytes)
+//!      8     8  p_tx_w (f64 bit pattern)
+//!     16     4  bw (u32)
+//!     20     4  has_delay flag (u32, 0 or 1)
+//!     24     8  input_raw_bits (u64)
+//!     32     8  n_layers (u64)
+//!     40     8  n_breakpoints (u64)
+//!     48     8  n_segments (u64)
+//!     56     …  network bytes ‖ device bytes, zero-padded to 8
+//!      …     …  cumulative_energy_j  [n_layers]  (f64 lane)
+//!      …     …  d_rlc_bits           [n_layers]  (f64 lane)
+//!      …     …  breakpoints          [n_breakpoints] (f64 lane)
+//!      …     …  segment_splits       [n_segments]   (u64 lane)
+//!      …     …  client_latencies_s   [n_layers]  (f64 lane, if has_delay)
+//!      …     …  cloud_latencies_s    [n_layers]  (f64 lane, if has_delay)
+//! ```
+//!
+//! ## Versioning rules
+//!
+//! The blob version is **independent** of the JSON artifact version
+//! ([`super::registry::ENVELOPE_TABLE_VERSION`], currently 2): a v3 blob
+//! *contains* v2-equivalent tables. A reader rejects any magic/version it
+//! does not know — there is no "best effort" parse of a future layout.
+//! Layout changes bump [`FLEET_BLOB_VERSION`]; the reserved header bytes
+//! exist so small additive changes can keep the version stable.
+//!
+//! ## Trust boundary
+//!
+//! [`FleetBlob::open`] is the only door a network-supplied blob enters
+//! through, and it must never panic or partially import:
+//!
+//! * header magic/version/length/checksum are validated before anything
+//!   else is read, and every rejection cites the byte offset at fault;
+//! * the offsets table is bounds-, alignment- and overlap-checked;
+//! * per-entry decoding re-checks the record's self-described size
+//!   against its span before any allocation, so a hostile header cannot
+//!   trigger an over-allocation;
+//! * deep semantic validation (finiteness, monotone breakpoints, the
+//!   stored-envelope-vs-rebuild equality) reuses the same
+//!   [`EnvelopeTable`] checks the JSON path runs, at materialization
+//!   time ([`PolicyRegistry::import_v3`] /
+//!   [`LazyFleet::get_or_load`]).
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::{Arc, OnceLock};
+
+use anyhow::{anyhow, Result};
+
+use super::registry::{DelayTables, EnvelopeTable, PolicyRegistry, RegistryEntry};
+
+/// Magic prefix of a v3 fleet blob ("NeuPart Fleet Blob").
+pub const FLEET_BLOB_MAGIC: [u8; 4] = *b"NPFB";
+/// Current binary fleet-blob layout version. Independent of the JSON
+/// artifact version (module docs: versioning rules).
+pub const FLEET_BLOB_VERSION: u32 = 3;
+
+/// Fixed header size, bytes.
+const HEADER_BYTES: usize = 64;
+/// One offsets-table record: (entry offset u64, entry length u64).
+const OFFSET_RECORD_BYTES: usize = 16;
+/// Fixed per-entry header size, bytes.
+const ENTRY_HEADER_BYTES: usize = 56;
+
+/// Round `n` up to the next multiple of 8.
+fn pad8(n: usize) -> usize {
+    n.div_ceil(8) * 8
+}
+
+/// The blob integrity checksum: word-chunked FNV-1a-64 over the payload
+/// region (every byte from offset [`HEADER_BYTES`] on), mixed with the
+/// payload length. The header itself is *not* covered — its fields are
+/// individually validated first, so a corrupted version or length fails
+/// with its own targeted message instead of a generic checksum error.
+pub fn payload_checksum(blob: &[u8]) -> u64 {
+    let payload = blob.get(HEADER_BYTES..).unwrap_or(&[]);
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let mut chunks = payload.chunks_exact(8);
+    for c in &mut chunks {
+        h ^= u64::from_le_bytes(c.try_into().unwrap());
+        h = h.wrapping_mul(PRIME);
+    }
+    for &b in chunks.remainder() {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h ^ payload.len() as u64
+}
+
+/// An opened (header/checksum-validated) v3 fleet blob with lazy
+/// per-entry decoding — the boot-time artifact behind
+/// [`PolicyRegistry::import_v3`] and [`LazyFleet`].
+pub struct FleetBlob {
+    bytes: Arc<[u8]>,
+    /// Validated (offset, length) span per entry.
+    spans: Vec<(usize, usize)>,
+    /// (network, device) → entry index, built on first lookup. `Err` is
+    /// sticky: a blob whose entry headers don't scan stays unusable.
+    index: OnceLock<std::result::Result<BTreeMap<(String, String), usize>, String>>,
+}
+
+impl fmt::Debug for FleetBlob {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("FleetBlob")
+            .field("bytes", &self.bytes.len())
+            .field("entries", &self.spans.len())
+            .finish()
+    }
+}
+
+impl FleetBlob {
+    /// Serialize a fleet into one v3 blob. Tables are laid out in
+    /// iteration order (the registry export iterates its sorted map, so
+    /// exports are byte-stable). Expects structurally coherent tables —
+    /// the vectors of every [`EnvelopeTable`] that ever passed
+    /// validation agree on the layer count.
+    pub fn encode<'a, I>(tables: I) -> Vec<u8>
+    where
+        I: IntoIterator<Item = &'a EnvelopeTable>,
+    {
+        let tables: Vec<&EnvelopeTable> = tables.into_iter().collect();
+        let sizes: Vec<usize> = tables.iter().map(|t| entry_size(t)).collect();
+        let offsets_end = HEADER_BYTES + tables.len() * OFFSET_RECORD_BYTES;
+        let total = offsets_end + sizes.iter().sum::<usize>();
+        let mut buf = Vec::with_capacity(total);
+        buf.extend_from_slice(&FLEET_BLOB_MAGIC);
+        buf.extend_from_slice(&FLEET_BLOB_VERSION.to_le_bytes());
+        buf.extend_from_slice(&(tables.len() as u64).to_le_bytes());
+        buf.extend_from_slice(&(total as u64).to_le_bytes());
+        buf.extend_from_slice(&0u64.to_le_bytes()); // checksum, patched below
+        buf.resize(HEADER_BYTES, 0);
+        let mut off = offsets_end;
+        for &size in &sizes {
+            buf.extend_from_slice(&(off as u64).to_le_bytes());
+            buf.extend_from_slice(&(size as u64).to_le_bytes());
+            off += size;
+        }
+        for table in &tables {
+            write_entry(&mut buf, table);
+        }
+        debug_assert_eq!(buf.len(), total);
+        let sum = payload_checksum(&buf);
+        buf[24..32].copy_from_slice(&sum.to_le_bytes());
+        buf
+    }
+
+    /// Open a blob: validate the header, the payload checksum and the
+    /// offsets table — **without** decoding any entry (module docs). The
+    /// only per-entry cost paid here is the 16-byte span check; tables
+    /// materialize lazily through [`FleetBlob::entry`].
+    pub fn open(bytes: impl Into<Arc<[u8]>>) -> Result<Self> {
+        let bytes: Arc<[u8]> = bytes.into();
+        let len = bytes.len();
+        if len < HEADER_BYTES {
+            return Err(anyhow!(
+                "fleet blob: truncated — {len} bytes, need the {HEADER_BYTES}-byte header"
+            ));
+        }
+        if bytes[0..4] != FLEET_BLOB_MAGIC {
+            return Err(anyhow!(
+                "fleet blob: bad magic at offset 0 (not a NeuPart fleet blob)"
+            ));
+        }
+        let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        if version != FLEET_BLOB_VERSION {
+            return Err(anyhow!(
+                "fleet blob: unsupported version {version} at offset 4 \
+                 (this reader handles {FLEET_BLOB_VERSION})"
+            ));
+        }
+        let count = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+        let total = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+        if total != len as u64 {
+            return Err(anyhow!(
+                "fleet blob: length mismatch at offset 16 — header says \
+                 {total} bytes, blob is {len} (truncated or trailing garbage)"
+            ));
+        }
+        let stored = u64::from_le_bytes(bytes[24..32].try_into().unwrap());
+        let computed = payload_checksum(&bytes);
+        if stored != computed {
+            return Err(anyhow!(
+                "fleet blob: checksum mismatch at offset 24 — stored \
+                 {stored:#018x}, computed {computed:#018x} (corrupt blob)"
+            ));
+        }
+        let offsets_end = (count as u128)
+            .checked_mul(OFFSET_RECORD_BYTES as u128)
+            .map(|t| t + HEADER_BYTES as u128)
+            .filter(|&end| end <= len as u128)
+            .ok_or_else(|| {
+                anyhow!(
+                    "fleet blob: offsets table for {count} entries overruns \
+                     the {len}-byte blob (entry count at offset 8)"
+                )
+            })? as usize;
+        let mut spans = Vec::with_capacity(count as usize);
+        let mut prev_end = offsets_end;
+        for i in 0..count as usize {
+            let at = HEADER_BYTES + i * OFFSET_RECORD_BYTES;
+            let off = u64::from_le_bytes(bytes[at..at + 8].try_into().unwrap()) as usize;
+            let elen = u64::from_le_bytes(bytes[at + 8..at + 16].try_into().unwrap()) as usize;
+            if off % 8 != 0 {
+                return Err(anyhow!(
+                    "fleet blob: misaligned entry {i} — offset {off} (at byte \
+                     {at}) is not 8-byte aligned"
+                ));
+            }
+            if off < prev_end {
+                return Err(anyhow!(
+                    "fleet blob: entry {i} offset {off} (at byte {at}) \
+                     overlaps the preceding record (ends at {prev_end})"
+                ));
+            }
+            let end = off.checked_add(elen).filter(|&e| e <= len);
+            let Some(end) = end else {
+                return Err(anyhow!(
+                    "fleet blob: entry {i} [{off}..{off}+{elen}) (at byte \
+                     {at}) overruns the {len}-byte blob"
+                ));
+            };
+            if elen < ENTRY_HEADER_BYTES || elen % 8 != 0 {
+                return Err(anyhow!(
+                    "fleet blob: entry {i} length {elen} (at byte {}) is \
+                     invalid (min {ENTRY_HEADER_BYTES}, multiple of 8)",
+                    at + 8
+                ));
+            }
+            prev_end = end;
+            spans.push((off, elen));
+        }
+        Ok(FleetBlob {
+            bytes,
+            spans,
+            index: OnceLock::new(),
+        })
+    }
+
+    /// Number of entries.
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// The raw blob bytes (e.g. to persist after an in-memory encode).
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    /// Blob size in bytes — the "one flat artifact" claim, measured.
+    pub fn blob_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+
+    /// The validated byte span of entry `i`, if it exists.
+    pub fn entry_span(&self, i: usize) -> Option<(usize, usize)> {
+        self.spans.get(i).copied()
+    }
+
+    fn record(&self, i: usize) -> Result<(&[u8], usize)> {
+        let &(off, elen) = self.spans.get(i).ok_or_else(|| {
+            anyhow!("fleet blob: entry {i} out of range ({} entries)", self.spans.len())
+        })?;
+        Ok((&self.bytes[off..off + elen], off))
+    }
+
+    /// Decode only the key of entry `i` (entry header + names — no table
+    /// lane is touched). Used to build the lookup index.
+    pub fn entry_key(&self, i: usize) -> Result<(String, String)> {
+        let (rec, base) = self.record(i)?;
+        let h = EntryHeader::parse(rec, base, i)?;
+        h.names(rec, base, i)
+    }
+
+    /// Decode entry `i` into its [`EnvelopeTable`]. Structural decoding
+    /// only — run [`EnvelopeTable::validate`] (or import through
+    /// [`PolicyRegistry::import_v3`], which does) before trusting the
+    /// tables. Every rejection cites the byte offset at fault.
+    pub fn entry(&self, i: usize) -> Result<EnvelopeTable> {
+        let (rec, base) = self.record(i)?;
+        let h = EntryHeader::parse(rec, base, i)?;
+        let (network, device) = h.names(rec, base, i)?;
+        let mut at = ENTRY_HEADER_BYTES + pad8(h.network_len + h.device_len);
+        let mut f64_lane = |count: usize| -> Vec<f64> {
+            let lane = rec[at..at + 8 * count]
+                .chunks_exact(8)
+                .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            at += 8 * count;
+            lane
+        };
+        let cumulative_energy_j = f64_lane(h.n_layers);
+        let d_rlc_bits = f64_lane(h.n_layers);
+        let breakpoints = f64_lane(h.n_breakpoints);
+        let segment_splits = rec[at..at + 8 * h.n_segments]
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
+            .collect();
+        at += 8 * h.n_segments;
+        let delay = if h.has_delay {
+            let mut f64_lane = |count: usize| -> Vec<f64> {
+                let lane = rec[at..at + 8 * count]
+                    .chunks_exact(8)
+                    .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                at += 8 * count;
+                lane
+            };
+            Some(DelayTables {
+                client_latencies_s: f64_lane(h.n_layers),
+                cloud_latencies_s: f64_lane(h.n_layers),
+            })
+        } else {
+            None
+        };
+        debug_assert_eq!(at, rec.len());
+        Ok(EnvelopeTable {
+            network,
+            device,
+            p_tx_w: h.p_tx_w,
+            bw: h.bw,
+            input_raw_bits: h.input_raw_bits,
+            cumulative_energy_j,
+            d_rlc_bits,
+            breakpoints,
+            segment_splits,
+            delay,
+        })
+    }
+
+    /// Entry index for a `(network, device)` key, building the lookup
+    /// index on first use (one header+names scan over the blob — no
+    /// table lane is decoded).
+    pub fn find(&self, network: &str, device: &str) -> Result<Option<usize>> {
+        let built = self.index.get_or_init(|| {
+            let mut map = BTreeMap::new();
+            for i in 0..self.spans.len() {
+                let key = match self.entry_key(i) {
+                    Ok(key) => key,
+                    Err(e) => return Err(e.to_string()),
+                };
+                // First entry wins, like the registry's existing-key-wins.
+                map.entry(key).or_insert(i);
+            }
+            Ok(map)
+        });
+        match built {
+            Ok(map) => Ok(map
+                .get(&(network.to_string(), device.to_string()))
+                .copied()),
+            Err(e) => Err(anyhow!("{e}")),
+        }
+    }
+}
+
+/// The fixed-size per-entry header, bounds-checked against its record.
+struct EntryHeader {
+    network_len: usize,
+    device_len: usize,
+    p_tx_w: f64,
+    bw: u32,
+    has_delay: bool,
+    input_raw_bits: u64,
+    n_layers: usize,
+    n_breakpoints: usize,
+    n_segments: usize,
+}
+
+impl EntryHeader {
+    /// Parse and size-check: the header's self-described layout must
+    /// account for the record's span **exactly**, checked in wide
+    /// arithmetic *before* any lane is allocated — a hostile header can
+    /// neither over-allocate nor leave trailing garbage unnoticed.
+    fn parse(rec: &[u8], base: usize, i: usize) -> Result<Self> {
+        let u32_at = |at: usize| u32::from_le_bytes(rec[at..at + 4].try_into().unwrap());
+        let u64_at = |at: usize| u64::from_le_bytes(rec[at..at + 8].try_into().unwrap());
+        let has_delay_raw = u32_at(20);
+        if has_delay_raw > 1 {
+            return Err(anyhow!(
+                "fleet blob: entry {i}: has_delay flag {has_delay_raw} at \
+                 byte {} is not 0/1",
+                base + 20
+            ));
+        }
+        let h = EntryHeader {
+            network_len: u32_at(0) as usize,
+            device_len: u32_at(4) as usize,
+            p_tx_w: f64::from_le_bytes(rec[8..16].try_into().unwrap()),
+            bw: u32_at(16),
+            has_delay: has_delay_raw == 1,
+            input_raw_bits: u64_at(24),
+            n_layers: u64_at(32) as usize,
+            n_breakpoints: u64_at(40) as usize,
+            n_segments: u64_at(48) as usize,
+        };
+        let words = 2 * h.n_layers as u128
+            + h.n_breakpoints as u128
+            + h.n_segments as u128
+            + if h.has_delay { 2 * h.n_layers as u128 } else { 0 };
+        let expected = ENTRY_HEADER_BYTES as u128
+            + pad8(h.network_len + h.device_len) as u128
+            + 8 * words;
+        if expected != rec.len() as u128 {
+            return Err(anyhow!(
+                "fleet blob: entry {i} at byte {base}: header describes \
+                 {expected} bytes, record spans {}",
+                rec.len()
+            ));
+        }
+        Ok(h)
+    }
+
+    fn names(&self, rec: &[u8], base: usize, i: usize) -> Result<(String, String)> {
+        let net_at = ENTRY_HEADER_BYTES;
+        let dev_at = net_at + self.network_len;
+        let network = std::str::from_utf8(&rec[net_at..dev_at]).map_err(|_| {
+            anyhow!(
+                "fleet blob: entry {i}: network name at byte {} is not valid UTF-8",
+                base + net_at
+            )
+        })?;
+        let device =
+            std::str::from_utf8(&rec[dev_at..dev_at + self.device_len]).map_err(|_| {
+                anyhow!(
+                    "fleet blob: entry {i}: device name at byte {} is not valid UTF-8",
+                    base + dev_at
+                )
+            })?;
+        Ok((network.to_string(), device.to_string()))
+    }
+}
+
+fn entry_size(t: &EnvelopeTable) -> usize {
+    let n = t.cumulative_energy_j.len();
+    let delay_words = if t.delay.is_some() { 2 * n } else { 0 };
+    ENTRY_HEADER_BYTES
+        + pad8(t.network.len() + t.device.len())
+        + 8 * (2 * n + t.breakpoints.len() + t.segment_splits.len() + delay_words)
+}
+
+fn write_entry(buf: &mut Vec<u8>, t: &EnvelopeTable) {
+    let n = t.cumulative_energy_j.len();
+    assert_eq!(
+        t.d_rlc_bits.len(),
+        n,
+        "envelope table vectors disagree on the layer count (validate before encoding)"
+    );
+    if let Some(d) = &t.delay {
+        assert!(
+            d.client_latencies_s.len() == n && d.cloud_latencies_s.len() == n,
+            "envelope table latency vectors disagree on the layer count \
+             (validate before encoding)"
+        );
+    }
+    let start = buf.len();
+    buf.extend_from_slice(&(t.network.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&(t.device.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&t.p_tx_w.to_le_bytes());
+    buf.extend_from_slice(&t.bw.to_le_bytes());
+    buf.extend_from_slice(&(t.delay.is_some() as u32).to_le_bytes());
+    buf.extend_from_slice(&t.input_raw_bits.to_le_bytes());
+    buf.extend_from_slice(&(n as u64).to_le_bytes());
+    buf.extend_from_slice(&(t.breakpoints.len() as u64).to_le_bytes());
+    buf.extend_from_slice(&(t.segment_splits.len() as u64).to_le_bytes());
+    buf.extend_from_slice(t.network.as_bytes());
+    buf.extend_from_slice(t.device.as_bytes());
+    while (buf.len() - start) % 8 != 0 {
+        buf.push(0);
+    }
+    for lane in [&t.cumulative_energy_j, &t.d_rlc_bits, &t.breakpoints] {
+        for &x in lane.iter() {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    for &s in &t.segment_splits {
+        buf.extend_from_slice(&(s as u64).to_le_bytes());
+    }
+    if let Some(d) = &t.delay {
+        for lane in [&d.client_latencies_s, &d.cloud_latencies_s] {
+            for &x in lane.iter() {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+    debug_assert_eq!(buf.len() - start, entry_size(t));
+}
+
+/// A fleet booted from a v3 blob with **lazy** engine materialization:
+/// [`LazyFleet::boot`] pays only the header/checksum validation, and a
+/// (network, device-class) entry is decoded, deep-validated and built
+/// into the backing [`PolicyRegistry`] the first time it is served —
+/// so a cold coordinator restart under traffic costs ~zero up front and
+/// each shard pays one entry build, not the whole fleet's.
+pub struct LazyFleet {
+    blob: FleetBlob,
+    registry: PolicyRegistry,
+}
+
+impl fmt::Debug for LazyFleet {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("LazyFleet")
+            .field("blob", &self.blob)
+            .field("materialized", &self.registry.len())
+            .finish()
+    }
+}
+
+impl LazyFleet {
+    /// Open-and-validate only (O(header + checksum); no entry decoded).
+    pub fn boot(bytes: impl Into<Arc<[u8]>>) -> Result<Self> {
+        Ok(LazyFleet {
+            blob: FleetBlob::open(bytes)?,
+            registry: PolicyRegistry::new(),
+        })
+    }
+
+    pub fn blob(&self) -> &FleetBlob {
+        &self.blob
+    }
+
+    /// The registry of materialized entries (grows as classes are
+    /// served; share it with [`crate::coordinator::ServingTier`]).
+    pub fn registry(&self) -> &PolicyRegistry {
+        &self.registry
+    }
+
+    /// The entry for `(network, device)`: a registry hit if already
+    /// materialized, else decode + deep-validate + build engines from
+    /// the blob. `Ok(None)` when the blob has no such key.
+    pub fn get_or_load(&self, network: &str, device: &str) -> Result<Option<Arc<RegistryEntry>>> {
+        if let Some(entry) = self.registry.get(network, device) {
+            return Ok(Some(entry));
+        }
+        let Some(i) = self.blob.find(network, device)? else {
+            return Ok(None);
+        };
+        let table = self.blob.entry(i)?;
+        let engine = table.validated_engine().map_err(|e| {
+            let (off, _) = self.blob.entry_span(i).unwrap_or((0, 0));
+            anyhow!("fleet blob: entry {i} at byte {off}: {e}")
+        })?;
+        Ok(Some(self.registry.insert_table_with_engine(table, engine)))
+    }
+}

@@ -161,6 +161,53 @@ impl Envelope {
         self.breakpoints.partition_point(|&b| b <= gamma)
     }
 
+    /// Batched [`Envelope::segment_index`] over a contiguous γ lane —
+    /// the SoA decision kernel's breakpoint search. Real envelopes have
+    /// 2–5 segments, so instead of a branchy per-item binary search the
+    /// segment is the branch-light *count* of breakpoints ≤ γ: with the
+    /// (validated) ascending breakpoints the count equals the
+    /// `partition_point`, the inner loops carry no data-dependent
+    /// branches, and the compiler autovectorizes the compare-accumulate
+    /// (an explicit 4-wide chunked variant sits behind the
+    /// `chunked-lanes` feature). `out` is cleared and refilled; NaN γ
+    /// counts 0 breakpoints, exactly like `partition_point` — callers
+    /// guard non-finite γ before using the segment, as the scalar paths
+    /// do.
+    pub fn segment_index_batch(&self, gammas: &[f64], out: &mut Vec<usize>) {
+        out.clear();
+        out.reserve(gammas.len());
+        let bps = self.breakpoints.as_slice();
+        #[cfg(not(feature = "chunked-lanes"))]
+        out.extend(gammas.iter().map(|&g| {
+            let mut seg = 0usize;
+            for &b in bps {
+                seg += usize::from(b <= g);
+            }
+            seg
+        }));
+        #[cfg(feature = "chunked-lanes")]
+        {
+            let mut chunks = gammas.chunks_exact(4);
+            for c in &mut chunks {
+                let lane: [f64; 4] = c.try_into().unwrap();
+                let mut seg = [0usize; 4];
+                for &b in bps {
+                    for (s, &g) in seg.iter_mut().zip(&lane) {
+                        *s += usize::from(b <= g);
+                    }
+                }
+                out.extend_from_slice(&seg);
+            }
+            out.extend(chunks.remainder().iter().map(|&g| {
+                let mut seg = 0usize;
+                for &b in bps {
+                    seg += usize::from(b <= g);
+                }
+                seg
+            }));
+        }
+    }
+
     /// The envelope-minimal line at `gamma`. Exact in line arithmetic;
     /// decision code should prefer [`Envelope::candidates`] and re-evaluate.
     pub fn winner(&self, gamma: f64) -> CostLine {
@@ -253,6 +300,28 @@ mod tests {
         for gamma in [0.0, 0.1, 0.6, 5.0, 20.0, 1e6] {
             assert_eq!(e.winner(gamma).split, brute(&lines, gamma), "γ={gamma}");
         }
+    }
+
+    #[test]
+    fn segment_index_batch_matches_partition_point() {
+        let lines = [line(1, 100.0, 0.0), line(2, 10.0, 50.0), line(3, 1.0, 200.0)];
+        let e = Envelope::build(&lines);
+        let bp = e.breakpoints().to_vec();
+        // Probe below/above/on every breakpoint (ties included), the
+        // extremes, and non-finite γ — plus an empty envelope.
+        let mut gammas = vec![0.0, 1e-300, 0.3, 5.0, 1e6, 1e300, f64::INFINITY, f64::NAN];
+        for b in bp {
+            gammas.extend([b, b - f64::EPSILON * b, b + f64::EPSILON * b]);
+        }
+        let mut batch = Vec::new();
+        e.segment_index_batch(&gammas, &mut batch);
+        assert_eq!(batch.len(), gammas.len());
+        for (g, seg) in gammas.iter().zip(&batch) {
+            assert_eq!(*seg, e.segment_index(*g), "γ={g}");
+        }
+        let empty = Envelope::build(&[]);
+        empty.segment_index_batch(&gammas, &mut batch);
+        assert!(batch.iter().all(|&s| s == 0));
     }
 
     #[test]

@@ -20,7 +20,18 @@
 //! artifact (v2: energy *and* latency tables, so imported fleets keep
 //! their SLO engines) and shares built engines across connections through
 //! [`PolicyRegistry`] — small enough to ship to clients for fully
-//! client-side decisions.
+//! client-side decisions. [`blob`] packs a whole fleet into one flat v3
+//! binary blob ([`FleetBlob`]) whose boot cost is a header/checksum
+//! validation, with entries materialized lazily ([`LazyFleet`]) — the
+//! coordinator's boot artifact; v2 JSON stays the interchange/debug
+//! form, losslessly convertible both ways.
+//!
+//! Batch scale: [`BatchLanes`] + [`PartitionPolicy::decide_lane_batch`]
+//! decide a drained γ-lane admission batch (per-request channel states)
+//! in one struct-of-arrays kernel call — contiguous γ lanes, a
+//! branch-light batched breakpoint search
+//! ([`Envelope::segment_index_batch`]), then the scan's exact per-item
+//! fold, bit-identical to per-request [`PartitionPolicy::decide`].
 //!
 //! Engine builds slice a compiled [`crate::cnnergy::NetworkProfile`]
 //! ([`Partitioner::from_profile`], [`DelayModel::from_profile`]) instead
@@ -57,13 +68,17 @@
 //! the [`decide_with_slo_scan`] reference) only.
 
 pub mod algorithm2;
+pub mod blob;
 pub mod constrained;
 pub mod delay;
 pub mod envelope;
 pub mod policy;
 pub mod registry;
 
-pub use algorithm2::{FixedWinner, Partitioner, SegmentCrossing, FCC, FISC_OUTPUT_BITS};
+pub use algorithm2::{
+    BatchLanes, FixedWinner, Partitioner, SegmentCrossing, FCC, FISC_OUTPUT_BITS,
+};
+pub use blob::{FleetBlob, LazyFleet, FLEET_BLOB_MAGIC, FLEET_BLOB_VERSION};
 pub use constrained::{decide_with_slo_scan, SloPartitioner};
 pub use delay::DelayModel;
 pub use envelope::{CostLine, Envelope};

@@ -46,7 +46,7 @@ use std::sync::Arc;
 
 use crate::channel::TransmitEnv;
 
-use super::algorithm2::{FixedWinner, Partitioner, FCC};
+use super::algorithm2::{BatchLanes, FixedWinner, Partitioner, FCC};
 use super::constrained::{decide_with_slo_scan, SloPartitioner};
 
 /// Everything one partition decision can depend on.
@@ -230,6 +230,36 @@ pub trait PartitionPolicy {
             out.push(self.decide(&item));
         }
     }
+
+    /// Batched decisions for **per-request channel states**: each lane
+    /// entry carries its own probed volume *and* env (contrast
+    /// [`PartitionPolicy::decide_batch`], which shares one env). `ctx`
+    /// supplies everything else (SLO; any precomputed segment is
+    /// ignored — the kernel recomputes segments over the γ lane). `out`
+    /// is cleared and refilled; `lanes` doubles as reusable scratch.
+    /// Default: one [`PartitionPolicy::decide`] per lane entry;
+    /// envelope-backed policies override with the struct-of-arrays
+    /// kernel ([`Partitioner::decide_lanes`]). Either way each decision
+    /// is bit-identical to the per-request path.
+    fn decide_lane_batch(
+        &self,
+        lanes: &mut BatchLanes,
+        ctx: &DecisionContext,
+        out: &mut Vec<Decision>,
+    ) {
+        out.clear();
+        out.reserve(lanes.len());
+        for i in 0..lanes.len() {
+            let item = DecisionContext {
+                env: lanes.envs()[i],
+                input_bits: lanes.input_bits()[i],
+                sparsity_in: None,
+                segment: None,
+                ..*ctx
+            };
+            out.push(self.decide(&item));
+        }
+    }
 }
 
 /// Scalar energy-model calibration shared between a shard's drift
@@ -401,6 +431,29 @@ impl PartitionPolicy for EnergyPolicy {
             return;
         }
         self.partitioner.choose_batch(input_bits, &ctx.env, out);
+    }
+
+    fn decide_lane_batch(
+        &self,
+        lanes: &mut BatchLanes,
+        _ctx: &DecisionContext,
+        out: &mut Vec<Decision>,
+    ) {
+        let c = self.factor();
+        if c != 1.0 {
+            // Off the identity factor, mirror `decide`: evaluate each
+            // request at the calibrated γ/c and rescale the costs back.
+            out.clear();
+            out.reserve(lanes.len());
+            for i in 0..lanes.len() {
+                let env = calibrated_env(&lanes.envs()[i], c);
+                let mut d = self.partitioner.choose_split(lanes.input_bits()[i], &env);
+                scale_decision_energy(&mut d, c);
+                out.push(d);
+            }
+            return;
+        }
+        self.partitioner.decide_lanes(lanes, out);
     }
 }
 

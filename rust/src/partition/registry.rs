@@ -1,23 +1,23 @@
-//! Per-device envelope artifacts (v2) and the fleet-scale policy registry.
+//! Per-device envelope artifacts (v2 JSON, v3 binary) and the
+//! fleet-scale policy registry.
 //!
 //! A fleet coordinator serving many device models (paper Table IV) makes
 //! the same partition decision per (network, device transmit-power class):
 //! the decision tables — cumulative client energy `E[l]`, fixed transmit
 //! volumes `D_RLC[l]`, the derived γ-breakpoint envelope and (since v2)
 //! the per-layer client/cloud latency vectors — are tiny (a few hundred
-//! bytes of JSON for a real CNN) and channel-independent, so they can be
-//! built once, shared across every connection of that class, and even
-//! shipped to clients for fully client-side decisions.
+//! bytes for a real CNN) and channel-independent, so they can be built
+//! once, shared across every connection of that class, and even shipped
+//! to clients for fully client-side decisions.
 //!
-//! * [`EnvelopeTable`] — the compact, serializable artifact keyed by
-//!   `(network, device)`: exactly the [`Partitioner::from_parts`] inputs
-//!   plus the derived breakpoint table for inspection, and (v2) the
-//!   [`DelayModel::from_parts`] latency inputs so an importer can
-//!   reconstruct the device class's [`SloPartitioner`]. The JSON round
-//!   trip is **bit-exact** (the writer prints shortest-round-trip floats;
-//!   see [`crate::util::json`]), so engines rebuilt from a deserialized
-//!   table reproduce in-memory decisions exactly — energy *and* SLO —
-//!   property-tested across random γ, SLOs, ties and degenerate channels.
+//! * [`EnvelopeTable`] — the per-(network, device) artifact: exactly the
+//!   [`Partitioner::from_parts`] inputs plus the derived breakpoint
+//!   table for inspection, and (v2) the [`DelayModel::from_parts`]
+//!   latency inputs so an importer can reconstruct the device class's
+//!   [`SloPartitioner`]. Round trips through **both** serial forms are
+//!   bit-exact, so rebuilt engines reproduce in-memory decisions exactly
+//!   — energy *and* SLO — property-tested across random γ, SLOs, ties
+//!   and degenerate channels.
 //! * [`PolicyRegistry`] — a thread-safe map of those artifacts with their
 //!   built engines, shared across connections; [`RegistryEntry::policy`]
 //!   hands out [`EnergyPolicy`] views over one shared [`Partitioner`] and
@@ -28,8 +28,35 @@
 //! the Table-IV fleet builder) slice every engine from one shared compiled
 //! [`NetworkProfile`](crate::cnnergy::NetworkProfile) — the partitioner
 //! build is table slicing, and each entry also carries a per-device-class
-//! SLO engine. Entries rebuilt from imported v2 tables reconstruct the
-//! same SLO engine from the artifact's latency vectors.
+//! SLO engine. Entries rebuilt from imported tables reconstruct the same
+//! SLO engine from the artifact's latency vectors.
+//!
+//! ## Serial forms: v2 JSON vs the v3 fleet blob
+//!
+//! The artifact ships in two forms with **independent versioning**:
+//!
+//! * **v2 JSON** ([`EnvelopeTable::to_json`] /
+//!   [`PolicyRegistry::export_json`], version
+//!   [`ENVELOPE_TABLE_VERSION`]) — the interchange/debug form:
+//!   human-readable, diffable, per-table. Use it to inspect an artifact,
+//!   ship a single table to a thin client, or move tables between
+//!   toolchains. Importing parses and validates every table up front.
+//! * **v3 binary fleet blob** ([`PolicyRegistry::export_v3`] /
+//!   [`PolicyRegistry::import_v3`], version
+//!   [`super::blob::FLEET_BLOB_VERSION`]) — the *boot* form: one flat,
+//!   alignment-safe blob for the whole fleet, `header → offsets table →
+//!   per-entry contiguous lanes` (layout diagram in [`super::blob`]).
+//!   Opening validates the header + checksum only; entries decode
+//!   lazily ([`super::blob::LazyFleet`]), so a 10⁴-entry coordinator
+//!   boot is orders of magnitude cheaper than a JSON import and a cold
+//!   [`crate::coordinator::ServingTier`] restart under traffic costs
+//!   ~zero up front. Floats are stored as little-endian bit patterns, so
+//!   v2 ↔ v3 conversion is lossless in both directions.
+//!
+//! The JSON `version` key and the blob header version never mix: a JSON
+//! document claiming version 3 is rejected (the binary blob is not "JSON
+//! v3"), and a blob with an unknown header version is rejected rather
+//! than best-effort parsed.
 //!
 //! ## v1 compatibility
 //!
@@ -41,7 +68,8 @@
 //! loudly instead of silently degrading: [`PolicyRegistry::import_json`]
 //! returns an [`ImportReport`] whose `missing_slo` counts the latency-less
 //! tables, and re-exporting such an entry produces a v2 document without
-//! latency vectors (byte-stable across round trips).
+//! latency vectors (byte-stable across round trips). The v3 blob encodes
+//! the same optionality (`has_delay` flag), with the same report.
 //!
 //! ## Trust boundary
 //!
@@ -52,7 +80,11 @@
 //! and — since the stored envelope is redundant with the vectors it was
 //! derived from — the breakpoints/segment winners must equal a rebuild
 //! from the shipped tables bit-for-bit (a mismatch means a corrupt or
-//! hand-edited artifact).
+//! hand-edited artifact). The v3 import paths run the **same** semantic
+//! checks at entry-materialization time, on top of the blob's structural
+//! header/checksum/offset validation (see [`super::blob`]); a corrupt
+//! entry rejects loudly with its byte offset and never leaves a partial
+//! import behind.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -67,6 +99,7 @@ use crate::util::json::{self, Value};
 use crate::util::par::par_map;
 
 use super::algorithm2::Partitioner;
+use super::blob::FleetBlob;
 use super::constrained::SloPartitioner;
 use super::delay::DelayModel;
 use super::policy::{EnergyPolicy, SloPolicy, SparsityEnvelopePolicy};
@@ -382,8 +415,9 @@ impl EnvelopeTable {
 
     /// Validation core: every check from the module docs, returning the
     /// rebuilt engine the stored-envelope comparison constructs (callers
-    /// on the import path reuse it instead of rebuilding).
-    fn validated_engine(&self) -> Result<Partitioner> {
+    /// on the import paths — JSON and the v3 blob — reuse it instead of
+    /// rebuilding).
+    pub(crate) fn validated_engine(&self) -> Result<Partitioner> {
         if !self.p_tx_w.is_finite() || self.p_tx_w < 0.0 {
             return Err(anyhow!(
                 "envelope table: invalid transmit power {} W",
@@ -623,9 +657,9 @@ impl PolicyRegistry {
     }
 
     /// [`PolicyRegistry::insert_table`] with the energy engine already
-    /// built (the import path reuses the rebuild the table validation
+    /// built (the import paths reuse the rebuild the table validation
     /// performed).
-    fn insert_table_with_engine(
+    pub(crate) fn insert_table_with_engine(
         &self,
         table: EnvelopeTable,
         engine: Partitioner,
@@ -749,6 +783,50 @@ impl PolicyRegistry {
         let mut report = ImportReport::default();
         for t in tables {
             let (table, engine) = EnvelopeTable::from_value_with_engine(t)?;
+            let entry = self.insert_table_with_engine(table, engine);
+            if entry.slo_partitioner().is_none() {
+                report.missing_slo += 1;
+            }
+            report.imported += 1;
+        }
+        Ok(report)
+    }
+
+    /// Serialize every table into one v3 binary fleet blob (the boot
+    /// artifact; see [`super::blob`] for the layout). The sorted-map
+    /// iteration makes exports byte-stable, and the f64 bit patterns make
+    /// the v2↔v3 conversion lossless both ways — engines rebuilt from
+    /// either form decide bit-identically (property-tested).
+    pub fn export_v3(&self) -> Vec<u8> {
+        let entries = self.entries.read().unwrap();
+        FleetBlob::encode(
+            entries
+                .values()
+                .flat_map(BTreeMap::values)
+                .map(|e| &e.table),
+        )
+    }
+
+    /// Eagerly import a whole v3 fleet blob: open + validate the header,
+    /// then decode and **deep-validate every entry before the first
+    /// insert** — a corrupt entry anywhere rejects the whole blob and
+    /// leaves the registry untouched (no partial import). Existing keys
+    /// keep their entries; the [`ImportReport`] mirrors
+    /// [`PolicyRegistry::import_json`]. For lazy O(1) boot, use
+    /// [`super::blob::LazyFleet`] instead.
+    pub fn import_v3(&self, bytes: &[u8]) -> Result<ImportReport> {
+        let blob = FleetBlob::open(bytes.to_vec())?;
+        let mut staged = Vec::with_capacity(blob.len());
+        for i in 0..blob.len() {
+            let table = blob.entry(i)?;
+            let engine = table.validated_engine().map_err(|e| {
+                let (off, _) = blob.entry_span(i).unwrap_or((0, 0));
+                anyhow!("fleet blob: entry {i} at byte {off}: {e}")
+            })?;
+            staged.push((table, engine));
+        }
+        let mut report = ImportReport::default();
+        for (table, engine) in staged {
             let entry = self.insert_table_with_engine(table, engine);
             if entry.slo_partitioner().is_none() {
                 report.missing_slo += 1;
@@ -1010,6 +1088,52 @@ mod tests {
         let remote = client.get("alexnet", "LG Nexus 4 WLAN").unwrap();
         let ctx = DecisionContext::from_sparsity(a.partitioner(), 0.608, env);
         assert_eq!(remote.policy().decide(&ctx), a.policy().decide(&ctx));
+    }
+
+    #[test]
+    fn v3_blob_round_trips_registry_bit_exactly() {
+        let registry = PolicyRegistry::new();
+        let env = TransmitEnv::with_effective_rate(80e6, 0.78);
+        let entry = registry.get_or_build("alexnet", &env).unwrap();
+
+        let blob = registry.export_v3();
+        let client = PolicyRegistry::new();
+        let report = client.import_v3(&blob).unwrap();
+        assert_eq!(report.imported, 1);
+        assert_eq!(report.missing_slo, 0);
+        let imported = client.get("alexnet", "LG Nexus 4 WLAN").unwrap();
+        // The decoded table is identical — v2 JSON re-export included.
+        assert_eq!(imported.table(), entry.table());
+        assert_eq!(imported.table().to_json(), entry.table().to_json());
+        // Energy and SLO decisions are bit-identical through the blob.
+        let ctx = DecisionContext::from_sparsity(entry.partitioner(), 0.608, env);
+        assert_eq!(imported.policy().decide(&ctx), entry.policy().decide(&ctx));
+        let slo_ctx = ctx.with_slo(0.015);
+        assert_eq!(
+            imported.slo_policy().unwrap().decide(&slo_ctx),
+            entry.slo_policy().unwrap().decide(&slo_ctx)
+        );
+        // Exports are byte-stable across the round trip.
+        assert_eq!(client.export_v3(), blob);
+    }
+
+    #[test]
+    fn v3_import_rejects_corrupt_blob_without_partial_import() {
+        // One valid entry followed by a tampered one: the whole blob must
+        // be rejected and the registry left untouched — never a partial
+        // import that serves the valid half of a corrupt artifact.
+        let p = paper_partitioner(&alexnet());
+        let good = EnvelopeTable::from_partitioner("alexnet", "LG Nexus 4 WLAN", 0.78, &p);
+        let mut tampered = good.clone();
+        tampered.device = "tampered-class".to_string();
+        tampered.segment_splits[0] = tampered.segment_splits[0].wrapping_add(1);
+        let blob = FleetBlob::encode([&good, &tampered]);
+
+        let registry = PolicyRegistry::new();
+        let err = registry.import_v3(&blob).unwrap_err().to_string();
+        assert!(err.contains("entry 1"), "{err}");
+        assert!(err.contains("does not match a rebuild"), "{err}");
+        assert!(registry.is_empty(), "partial import leaked entries");
     }
 
     #[test]

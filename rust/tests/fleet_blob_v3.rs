@@ -1,0 +1,204 @@
+//! Trust-boundary tests for the v3 binary fleet blob, over CHECKED-IN
+//! corrupt fixtures (`rust/tests/fixtures/fleet_blob_v3/`): a
+//! network-supplied blob that is truncated, bit-flipped, misaligned or
+//! version-bumped must be rejected loudly — citing the byte offset at
+//! fault — with no panic and no partial import.
+//!
+//! The fixtures are deterministic: `good.bin` is byte-for-byte
+//! `FleetBlob::encode` over [`fixture_table`] (asserted below, so the
+//! checked-in bytes can never drift from the encoder), and every corrupt
+//! fixture is a documented surgical edit of it. Regenerate with
+//! `cargo test --test fleet_blob_v3 regenerate_fixtures -- --ignored`.
+
+use neupart::partition::{
+    DelayTables, EnvelopeTable, FleetBlob, LazyFleet, PolicyRegistry, FLEET_BLOB_MAGIC,
+    FLEET_BLOB_VERSION,
+};
+
+const GOOD: &[u8] = include_bytes!("fixtures/fleet_blob_v3/good.bin");
+const TRUNCATED: &[u8] = include_bytes!("fixtures/fleet_blob_v3/truncated.bin");
+const BITFLIP: &[u8] = include_bytes!("fixtures/fleet_blob_v3/bitflip.bin");
+const MISALIGNED: &[u8] = include_bytes!("fixtures/fleet_blob_v3/misaligned.bin");
+const WRONG_VERSION: &[u8] = include_bytes!("fixtures/fleet_blob_v3/wrong_version.bin");
+
+/// The fixture fleet: one entry with exact-representable values (struct
+/// literal, not an engine build, so the bytes are trivially stable).
+fn fixture_table() -> EnvelopeTable {
+    EnvelopeTable {
+        network: "fixnet".to_string(),
+        device: "ptx-0.750W".to_string(),
+        p_tx_w: 0.75,
+        bw: 8,
+        input_raw_bits: 1_000_000,
+        cumulative_energy_j: vec![0.125, 0.25, 0.5, 1.0],
+        d_rlc_bits: vec![1024.0, 512.0, 64.0, 32.0],
+        breakpoints: vec![0.0009765625, 0.03125],
+        segment_splits: vec![4, 2, 1],
+        delay: Some(DelayTables {
+            client_latencies_s: vec![0.001, 0.002, 0.004, 0.008],
+            cloud_latencies_s: vec![0.0001, 0.0002, 0.0004, 0.0008],
+        }),
+    }
+}
+
+fn open_err(bytes: &[u8]) -> String {
+    match FleetBlob::open(bytes.to_vec()) {
+        Ok(_) => panic!("corrupt blob must be rejected"),
+        Err(e) => e.to_string(),
+    }
+}
+
+#[test]
+fn good_fixture_matches_the_encoder_and_round_trips() {
+    // The checked-in bytes ARE the encoder's output — fixture drift is a
+    // test failure, not a silent skew.
+    assert_eq!(
+        GOOD,
+        FleetBlob::encode([&fixture_table()]).as_slice(),
+        "good.bin no longer matches FleetBlob::encode (regenerate fixtures)"
+    );
+    let blob = FleetBlob::open(GOOD.to_vec()).expect("good fixture must open");
+    assert_eq!(blob.len(), 1);
+    assert_eq!(
+        blob.entry_key(0).unwrap(),
+        ("fixnet".to_string(), "ptx-0.750W".to_string())
+    );
+    assert_eq!(blob.entry(0).unwrap(), fixture_table());
+    assert_eq!(blob.find("fixnet", "ptx-0.750W").unwrap(), Some(0));
+    assert_eq!(blob.find("fixnet", "no-such-class").unwrap(), None);
+    assert_eq!(&GOOD[0..4], &FLEET_BLOB_MAGIC);
+    assert_eq!(
+        u32::from_le_bytes(GOOD[4..8].try_into().unwrap()),
+        FLEET_BLOB_VERSION
+    );
+}
+
+#[test]
+fn truncated_blob_is_rejected_with_cited_size() {
+    // good.bin cut to 40 bytes: not even a full header.
+    let err = open_err(TRUNCATED);
+    assert!(err.contains("truncated"), "unexpected error: {err}");
+    assert!(err.contains("40 bytes"), "unexpected error: {err}");
+
+    // Cut past the header instead: the header's total-length field gives
+    // the truncation away before any entry is touched.
+    let err = open_err(&GOOD[..GOOD.len() - 8]);
+    assert!(err.contains("length mismatch"), "unexpected error: {err}");
+    assert!(err.contains("offset 16"), "unexpected error: {err}");
+}
+
+#[test]
+fn bit_flipped_payload_is_rejected_by_the_checksum() {
+    // good.bin with one bit flipped inside an f64 lane.
+    let err = open_err(BITFLIP);
+    assert!(err.contains("checksum mismatch"), "unexpected error: {err}");
+    assert!(err.contains("offset 24"), "unexpected error: {err}");
+
+    // Any payload byte is covered — flip the last one too.
+    let mut blob = GOOD.to_vec();
+    let last = blob.len() - 1;
+    blob[last] ^= 0x80;
+    let err = open_err(&blob);
+    assert!(err.contains("checksum mismatch"), "unexpected error: {err}");
+}
+
+#[test]
+fn misaligned_entry_offset_is_rejected() {
+    // good.bin with entry 0's offset nudged to 84 (not 8-byte aligned)
+    // and the checksum re-patched, so the alignment check itself fires.
+    let err = open_err(MISALIGNED);
+    assert!(err.contains("misaligned entry 0"), "unexpected error: {err}");
+    assert!(err.contains("offset 84"), "unexpected error: {err}");
+}
+
+#[test]
+fn wrong_version_is_rejected_before_the_checksum() {
+    // good.bin with the version field set to 9: rejected by its own
+    // targeted message (the header is deliberately outside the checksum).
+    let err = open_err(WRONG_VERSION);
+    assert!(err.contains("unsupported version 9"), "unexpected error: {err}");
+    assert!(err.contains("offset 4"), "unexpected error: {err}");
+
+    // Bad magic likewise.
+    let mut blob = GOOD.to_vec();
+    blob[0] = b'X';
+    let err = open_err(&blob);
+    assert!(err.contains("bad magic"), "unexpected error: {err}");
+    assert!(err.contains("offset 0"), "unexpected error: {err}");
+}
+
+#[test]
+fn corrupt_blobs_never_partially_import() {
+    for corrupt in [TRUNCATED, BITFLIP, MISALIGNED, WRONG_VERSION] {
+        let registry = PolicyRegistry::new();
+        assert!(registry.import_v3(corrupt).is_err());
+        assert!(
+            registry.is_empty(),
+            "a rejected blob must import zero entries"
+        );
+        assert!(LazyFleet::boot(corrupt.to_vec()).is_err());
+    }
+}
+
+#[test]
+fn hostile_entry_header_cannot_overallocate() {
+    // Blow up entry 0's n_layers to u64::MAX (and re-patch the checksum
+    // so the structural check is what fires): the size check runs in
+    // wide arithmetic BEFORE any lane allocation, so the open blob
+    // rejects the entry instead of attempting a ~10¹⁹-element Vec.
+    let mut blob = GOOD.to_vec();
+    let entry_at = 80; // header (64) + one offsets record (16)
+    blob[entry_at + 32..entry_at + 40].copy_from_slice(&u64::MAX.to_le_bytes());
+    patch_checksum(&mut blob);
+    let opened = FleetBlob::open(blob).expect("structurally the spans still parse");
+    let err = match opened.entry(0) {
+        Ok(_) => panic!("hostile header must fail"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("entry 0"), "unexpected error: {err}");
+    assert!(err.contains("header describes"), "unexpected error: {err}");
+    // The keyed lookup path hits the same wall, loudly, without panic.
+    assert!(opened.find("fixnet", "ptx-0.750W").is_err());
+}
+
+fn patch_checksum(blob: &mut [u8]) {
+    let sum = neupart::partition::blob::payload_checksum(blob);
+    blob[24..32].copy_from_slice(&sum.to_le_bytes());
+}
+
+/// Regenerate every fixture under `rust/tests/fixtures/fleet_blob_v3/`.
+/// Deterministic: same table literal → same bytes. Run from the repo
+/// root (cargo's default test CWD).
+#[test]
+#[ignore = "writes fixtures; run manually after a layout change"]
+fn regenerate_fixtures() {
+    let dir = std::path::Path::new("rust/tests/fixtures/fleet_blob_v3");
+    std::fs::create_dir_all(dir).unwrap();
+    let good = FleetBlob::encode([&fixture_table()]);
+
+    let mut truncated = good.clone();
+    truncated.truncate(40);
+
+    let mut bitflip = good.clone();
+    // One bit inside the first f64 lane (entry at 80, lanes begin after
+    // the 56-byte entry header + 16 padded name bytes).
+    bitflip[80 + 56 + 16] ^= 0x01;
+
+    let mut misaligned = good.clone();
+    // Entry 0's offset lives at byte 64; 84 breaks 8-byte alignment.
+    misaligned[64..72].copy_from_slice(&84u64.to_le_bytes());
+    patch_checksum(&mut misaligned);
+
+    let mut wrong_version = good.clone();
+    wrong_version[4..8].copy_from_slice(&9u32.to_le_bytes());
+
+    for (name, bytes) in [
+        ("good.bin", &good),
+        ("truncated.bin", &truncated),
+        ("bitflip.bin", &bitflip),
+        ("misaligned.bin", &misaligned),
+        ("wrong_version.bin", &wrong_version),
+    ] {
+        std::fs::write(dir.join(name), bytes).unwrap();
+    }
+}

@@ -8,9 +8,9 @@ use neupart::cnn::{ConvShape, Network};
 use neupart::cnnergy::{schedule, CnnErgy, HwConfig, NetworkProfile};
 use neupart::compress::rlc;
 use neupart::partition::{
-    decide_with_slo_scan, Decision, DecisionContext, DelayModel, EnergyPolicy, EnvelopeTable,
-    PartitionPolicy, Partitioner, PolicyRegistry, SloPartitioner, SloPolicy,
-    SparsityEnvelopePolicy,
+    decide_with_slo_scan, BatchLanes, Decision, DecisionContext, DelayModel, EnergyPolicy,
+    EnvelopeTable, FleetBlob, PartitionPolicy, Partitioner, PolicyRegistry, SloPartitioner,
+    SloPolicy, SparsityEnvelopePolicy,
 };
 use neupart::util::json;
 use neupart::util::rng::Rng;
@@ -732,6 +732,142 @@ fn prop_envelope_table_v2_slo_round_trip_is_bit_exact() {
         // Degenerate channels.
         for be in [0.0, -1.0, f64::NAN] {
             check(TransmitEnv::with_effective_rate(be, 0.78), 0.5, 0.25, "degenerate");
+        }
+    }
+}
+
+#[test]
+fn prop_envelope_table_v3_blob_round_trip_is_bit_exact() {
+    // The v3 tentpole invariant: the flat binary fleet blob reproduces
+    // the EnvelopeTable struct exactly (and agrees with the v2 JSON form
+    // both ways), and decisions off a blob-decoded engine — EnergyPolicy
+    // and SloPolicy alike — are bit-for-bit identical to the analytic
+    // engine across random γ, exact breakpoint ties and degenerate
+    // channels.
+    let mut rng = Rng::new(0xB10B);
+    for case in 0..120 {
+        let p = random_partitioner(&mut rng);
+        let dm = random_delay_model(&mut rng, p.num_layers());
+        let with_slo = case % 2 == 0;
+        let table = if with_slo {
+            EnvelopeTable::from_engines("synthetic", "test-device", 0.78, &p, &dm)
+        } else {
+            EnvelopeTable::from_partitioner("synthetic", "test-device", 0.78, &p)
+        };
+        // struct → v3 → struct is lossless...
+        let blob = FleetBlob::open(FleetBlob::encode([&table])).expect("open own encoding");
+        assert_eq!(blob.len(), 1, "case {case}");
+        let back = blob.entry(0).expect("decode entry");
+        assert_eq!(back, table, "case {case}: v3 struct round trip");
+        // ...and lands on the identical v2 JSON document.
+        let via_json = EnvelopeTable::from_json(&table.to_json()).expect("parse back");
+        assert_eq!(back.to_json(), via_json.to_json(), "case {case}: v3 vs v2 JSON");
+
+        let q = back.to_partitioner();
+        let a = EnergyPolicy::new(p.clone());
+        let b = EnergyPolicy::new(q.clone());
+        let slo_pair = if with_slo {
+            let qdm = back.to_delay_model().expect("v3 carries latency tables");
+            Some((
+                SloPolicy::new(SloPartitioner::new(p.clone(), dm.clone())),
+                SloPolicy::new(SloPartitioner::new(q.clone(), qdm)),
+            ))
+        } else {
+            None
+        };
+        let check = |env: TransmitEnv, sp: f64, label: &str| {
+            let ctx = DecisionContext::from_sparsity(a.partitioner(), sp, env);
+            let da = a.decide(&ctx);
+            let db = b.decide(&ctx);
+            assert_eq!(da, db, "case {case}: {label}");
+            assert_eq!(
+                da.cost_j.to_bits(),
+                db.cost_j.to_bits(),
+                "case {case}: {label}"
+            );
+            if let Some((sa, sb)) = &slo_pair {
+                let slo_ctx = ctx.with_slo(1e-3);
+                assert_eq!(sa.decide(&slo_ctx), sb.decide(&slo_ctx), "case {case}: slo {label}");
+            }
+        };
+        for _ in 0..6 {
+            let be = 10f64.powf(rng.next_f64() * 12.0 - 3.0);
+            let p_tx = rng.next_f64() * 2.5 + 0.05;
+            check(
+                TransmitEnv::with_effective_rate(be, p_tx),
+                rng.next_f64(),
+                "random γ",
+            );
+        }
+        // Exact breakpoints (B_e = 1 reproduces γ bit-for-bit as P_Tx).
+        for &gamma in p.envelope().breakpoints() {
+            check(TransmitEnv::with_effective_rate(1.0, gamma), 0.5, "breakpoint");
+        }
+        // Degenerate channels.
+        for be in [0.0, -1.0, f64::NAN] {
+            check(TransmitEnv::with_effective_rate(be, 0.78), 0.5, "degenerate");
+        }
+    }
+
+    // Registry level: v2 JSON ↔ v3 blob is lossless in both directions
+    // and byte-stable (sorted-map iteration fixes entry order).
+    let registry = PolicyRegistry::new();
+    registry.build_table_iv_fleet("alexnet").unwrap();
+    let v2 = registry.export_json();
+    let blob = registry.export_v3();
+    let from_blob = PolicyRegistry::new();
+    let report = from_blob.import_v3(&blob).unwrap();
+    assert_eq!(report.imported, registry.len());
+    assert_eq!(report.missing_slo, 0);
+    assert_eq!(from_blob.export_json(), v2, "v3 → v2 JSON not lossless");
+    let from_json = PolicyRegistry::new();
+    from_json.import_json(&v2).unwrap();
+    assert_eq!(from_json.export_v3(), blob, "v2 JSON → v3 not byte-stable");
+}
+
+#[test]
+fn prop_lane_batch_kernel_matches_single_decides() {
+    // The struct-of-arrays batch kernel (decide_lane_batch over
+    // per-request channel states) must reproduce per-request decide
+    // bit-for-bit — random γ, exact breakpoint ties, degenerate and
+    // free-radio channels in the same drained batch.
+    let mut rng = Rng::new(0x1A9E5);
+    for case in 0..CASES {
+        let p = random_partitioner(&mut rng);
+        let policy = EnergyPolicy::new(p.clone());
+        let mut lanes = BatchLanes::new();
+        let mut envs = Vec::new();
+        for probe in 0..12 {
+            let env = match probe {
+                0 => TransmitEnv::with_effective_rate(0.0, 0.78),
+                1 => TransmitEnv::with_effective_rate(f64::NAN, 0.78),
+                2 => TransmitEnv::with_effective_rate(1.0, 0.0),
+                _ => TransmitEnv::with_effective_rate(
+                    10f64.powf(rng.next_f64() * 12.0 - 3.0),
+                    rng.next_f64() * 2.5 + 0.05,
+                ),
+            };
+            envs.push(env);
+            lanes.push(p.input_bits_from_sparsity(rng.next_f64()), env);
+        }
+        for &gamma in p.envelope().breakpoints() {
+            let env = TransmitEnv::with_effective_rate(1.0, gamma);
+            envs.push(env);
+            lanes.push(p.input_bits_from_sparsity(0.5), env);
+        }
+        let mut out = Vec::new();
+        let ctx = DecisionContext::from_input_bits(0.0, envs[0]);
+        policy.decide_lane_batch(&mut lanes, &ctx, &mut out);
+        assert_eq!(out.len(), lanes.len(), "case {case}");
+        for i in 0..out.len() {
+            let single =
+                policy.decide(&DecisionContext::from_input_bits(lanes.input_bits()[i], envs[i]));
+            assert_eq!(out[i], single, "case {case} lane {i}");
+            assert_eq!(
+                out[i].cost_j.to_bits(),
+                single.cost_j.to_bits(),
+                "case {case} lane {i}"
+            );
         }
     }
 }
